@@ -1,0 +1,50 @@
+//! Fig 1 — throughput (samples/s) and GPU efficiency vs parallelism for
+//! ResNet50 and VGG19 at several aggregate batch sizes, regenerated from
+//! the calibrated device model (DESIGN.md §1 substitution).
+//!
+//! Paper shape targets: ResNet50 throughput rises with diminishing gains
+//! while efficiency falls; VGG19 throughput DROPS past 8 GPUs (big model,
+//! cross-machine ring); VGG19@b384 best efficiency at p=4 (activation
+//! memory pressure at small p).
+
+use edl::gpu_sim::{efficiency, throughput, Dnn, HwConfig};
+use edl::util::json::{write_results, Json};
+
+fn main() {
+    let hw = HwConfig::default();
+    let ps: Vec<u32> = vec![1, 2, 4, 8, 16];
+    let mut out = Json::obj();
+
+    for (model, batches) in [(Dnn::ResNet50, [256u32, 512]), (Dnn::VGG19, [256, 384])] {
+        for b in batches {
+            println!("\n== Fig 1: {} aggregate batch {} ==", model.spec().name, b);
+            println!("{:>4} {:>14} {:>12}", "p", "throughput", "efficiency");
+            let mut rows = Json::Arr(vec![]);
+            for &p in &ps {
+                let th = throughput(model, p, b, &hw);
+                let ef = efficiency(model, p, b, 16, &hw);
+                println!("{p:>4} {th:>14.1} {ef:>12.3}");
+                let mut r = Json::obj();
+                r.set("p", p).set("throughput", th).set("efficiency", ef);
+                rows.push(r);
+            }
+            out.set(&format!("{}_b{}", model.spec().name, b), rows);
+        }
+    }
+
+    // shape assertions (who wins / where the knees are)
+    let t8 = throughput(Dnn::VGG19, 8, 384, &hw);
+    let t16 = throughput(Dnn::VGG19, 16, 384, &hw);
+    assert!(t16 < t8, "VGG19 must slow past one machine");
+    let best_p = (1u32..=16)
+        .max_by(|&a, &b| {
+            (throughput(Dnn::VGG19, a, 384, &hw) / a as f64)
+                .partial_cmp(&(throughput(Dnn::VGG19, b, 384, &hw) / b as f64))
+                .unwrap()
+        })
+        .unwrap();
+    assert_eq!(best_p, 4, "VGG19@384 efficiency peak");
+    println!("\nshape checks OK: VGG19 drop past 8 GPUs; VGG19@b384 efficiency peak at p=4");
+    let path = write_results("fig01_throughput_efficiency", &out).unwrap();
+    println!("results -> {}", path.display());
+}

@@ -1,0 +1,59 @@
+//! Fig 2 — (a) cluster load variation over time and (b) job-size CDF,
+//! regenerated from the calibrated synthetic Philly-like trace.
+//! Paper reference points: p20 = 85 GPU·s, p90 = 58,330 GPU·s; the
+//! cluster alternates between saturation and slack.
+
+use edl::trace::{generate, stats_of, TraceConfig};
+use edl::util::json::{write_results, Json};
+use edl::util::stats;
+
+fn main() {
+    let cfg = TraceConfig { n_jobs: 30_000, ..Default::default() };
+    let jobs = generate(&cfg);
+    let st = stats_of(&jobs, cfg.span_s);
+
+    println!("== Fig 2b: job-size distribution ({} jobs, {:.0} days) ==", st.n_jobs, cfg.span_s / 86_400.0);
+    println!("{:>6} {:>14} {:>14}", "pct", "measured", "paper");
+    println!("{:>6} {:>14.0} {:>14}", "p20", st.size_p20, 85);
+    println!("{:>6} {:>14.0} {:>14}", "p50", st.size_p50, "-");
+    println!("{:>6} {:>14.0} {:>14}", "p90", st.size_p90, 58_330);
+    println!("{:>6} {:>14.0} {:>14}", "p99", st.size_p99, "-");
+    let sizes: Vec<f64> = jobs.iter().map(|j| j.service_gpu_s).collect();
+    let points = [10.0, 100.0, 1_000.0, 10_000.0, 100_000.0, 1_000_000.0];
+    let cdf = stats::cdf_at(&sizes, &points);
+    println!("\nCDF(size <= x):");
+    for (x, c) in points.iter().zip(&cdf) {
+        println!("  {:>10.0} GPU·s : {:>5.1}%", x, c * 100.0);
+    }
+
+    println!("\n== Fig 2a: hourly offered load (GPU·s demanded / s) ==");
+    let peak = stats::percentile(&st.hourly_load, 95.0);
+    let trough = stats::percentile(&st.hourly_load, 5.0);
+    let mean = stats::mean(&st.hourly_load);
+    println!("p5={trough:.1}  mean={mean:.1}  p95={peak:.1}  (peak/trough={:.1}x)", peak / trough.max(1e-9));
+    // coarse day-by-day sparkline
+    let per_day: Vec<f64> = st.hourly_load.chunks(24).map(stats::mean).collect();
+    let max = stats::max(&per_day).max(1e-9);
+    let bars: String = per_day
+        .iter()
+        .map(|&v| {
+            let lvl = (v / max * 7.0).round() as usize;
+            ['.', ':', '-', '=', '+', '*', '#', '@'][lvl.min(7)]
+        })
+        .collect();
+    println!("daily load: {bars}");
+
+    assert!(st.size_p90 / st.size_p20 > 100.0, "job sizes must span orders of magnitude");
+    assert!(peak > 2.0 * trough.max(1e-9), "load must vary substantially");
+
+    let mut out = Json::obj();
+    out.set("p20", st.size_p20)
+        .set("p50", st.size_p50)
+        .set("p90", st.size_p90)
+        .set("p99", st.size_p99)
+        .set("paper_p20", 85.0)
+        .set("paper_p90", 58_330.0)
+        .set("hourly_load", st.hourly_load.as_slice());
+    let path = write_results("fig02_trace_stats", &out).unwrap();
+    println!("\nshape checks OK; results -> {}", path.display());
+}

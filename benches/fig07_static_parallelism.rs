@@ -1,0 +1,80 @@
+//! Fig 7 — throughput under static parallelism (no scaling), EDL vs a
+//! Horovod-like baseline, for ResNet101 and VGG16 up to 32 GPUs (weak
+//! scaling: aggregate batch grows with p).
+//!
+//! Two layers of evidence:
+//!  1. simulated V100 cluster: EDL's coordination adds only the leader
+//!     round-trip per mini-batch (measured on the real transport) — the
+//!     curves must be within a few % of the Horovod baseline;
+//!  2. real CPU substrate: the in-process engine trains the SimBackend
+//!     with 1..4 workers and we report measured samples/s, demonstrating
+//!     the RPC+pipeline overhead directly.
+
+use edl::coordinator::{ElasticTrainer, TrainerConfig};
+use edl::data::corpus::Corpus;
+use edl::gpu_sim::{step_time, Dnn, HwConfig};
+use edl::util::json::{write_results, Json};
+use edl::worker::SimBackend;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// per-mini-batch leader coordination cost of EDL (sync request + reply),
+/// measured on loopback TCP in perf_rpc_latency: ~tens of µs; use a
+/// conservative 200 µs per batch.
+const EDL_COORD_S: f64 = 200e-6;
+
+fn main() {
+    let hw = HwConfig::default();
+    let mut out = Json::obj();
+    println!("== Fig 7 (simulated): weak scaling, per-GPU batch 64 ==");
+    for model in [Dnn::ResNet101, Dnn::VGG16] {
+        println!("\n{:<10} {:>4} {:>14} {:>14} {:>8}", model.spec().name, "p", "horovod", "edl", "ratio");
+        let mut rows = Json::Arr(vec![]);
+        for p in [1u32, 2, 4, 8, 16, 32] {
+            let b = 64 * p;
+            let t_hvd = step_time(model, p, b, &hw);
+            let t_edl = t_hvd + EDL_COORD_S;
+            let th_hvd = b as f64 / t_hvd;
+            let th_edl = b as f64 / t_edl;
+            let ratio = th_edl / th_hvd;
+            println!("{:<10} {:>4} {:>14.1} {:>14.1} {:>8.4}", "", p, th_hvd, th_edl, ratio);
+            assert!(ratio > 0.98, "EDL static overhead must stay negligible: {ratio}");
+            let mut r = Json::obj();
+            r.set("p", p).set("horovod_sps", th_hvd).set("edl_sps", th_edl).set("ratio", ratio);
+            rows.push(r);
+        }
+        out.set(model.spec().name, rows);
+    }
+
+    println!("\n== Fig 7 (measured, CPU substrate): engine throughput 1..4 workers ==");
+    let mut meas = Json::Arr(vec![]);
+    let mut prev = 0.0;
+    for p in [1usize, 2, 4] {
+        let backend = SimBackend { compute_ms: 30, ..SimBackend::fast(4096) };
+        let corpus = Arc::new(Corpus::markov(256, 16, 1 << 20, 3));
+        let cfg = TrainerConfig { agg_batch: 32, n_partitions: 4096, ..Default::default() };
+        let t = ElasticTrainer::start(cfg, Arc::new(backend), corpus, p);
+        assert!(t.wait_step(5, Duration::from_secs(60)));
+        let s0 = t.status().step;
+        let t0 = std::time::Instant::now();
+        std::thread::sleep(Duration::from_secs(3));
+        let steps = t.status().step - s0;
+        let sps = steps as f64 * 32.0 / t0.elapsed().as_secs_f64();
+        println!("  p={p}: {sps:>8.1} samples/s ({steps} steps in 3s)");
+        t.stop();
+        // compute dominates (30 ms/step vs µs coordination): near-flat
+        // aggregate-batch-fixed scaling means per-step time ~b_local -> p
+        // workers split the same batch, so samples/s should RISE with p
+        if p > 1 {
+            assert!(sps > prev * 1.2, "engine should scale: p={p} {sps} vs {prev}");
+        }
+        prev = sps;
+        let mut r = Json::obj();
+        r.set("p", p).set("samples_per_s", sps);
+        meas.push(r);
+    }
+    out.set("measured_engine", meas);
+
+    let path = write_results("fig07_static_parallelism", &out).unwrap();
+    println!("\nshape checks OK; results -> {}", path.display());
+}

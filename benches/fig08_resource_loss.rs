@@ -1,0 +1,46 @@
+//! Fig 8 — GPU resource loss (GPU·s not spent training) when scaling out
+//! from 4 GPUs to 4+k, stop-resume vs EDL, for ResNet50 and VGG16.
+//!
+//! stop-resume idles ALL GPUs for the restart; EDL idles only the joiners
+//! during context prep plus everyone for the sub-second broadcast — an
+//! order of magnitude less.
+
+use edl::gpu_sim::{edl_scale_out_e2e, edl_stop_time, stop_resume_overhead, Dnn};
+use edl::metrics::{edl_scale_out_loss, stop_resume_loss};
+use edl::util::json::{write_results, Json};
+
+fn main() {
+    let mut out = Json::obj();
+    for model in [Dnn::ResNet50, Dnn::VGG16] {
+        println!("\n== Fig 8: GPU resource loss of scaling out, {} (from p=4) ==", model.spec().name);
+        println!("{:>8} {:>16} {:>12} {:>8}", "target p", "stop-resume", "EDL", "ratio");
+        let mut rows = Json::Arr(vec![]);
+        for add in [1u32, 2, 4] {
+            let p_new = 4 + add;
+            let sr = stop_resume_loss(4, p_new, stop_resume_overhead(model, p_new));
+            let edl = edl_scale_out_loss(4, add, edl_scale_out_e2e(model), edl_stop_time(model));
+            let ratio = sr.gpu_seconds / edl.gpu_seconds;
+            println!(
+                "{:>8} {:>13.0}GPUs {:>9.0}GPUs {:>7.1}x",
+                p_new, sr.gpu_seconds, edl.gpu_seconds, ratio
+            );
+            assert!(ratio > 4.0, "EDL loss must be far below stop-resume");
+            let mut r = Json::obj();
+            r.set("p_new", p_new)
+                .set("stop_resume_gpu_s", sr.gpu_seconds)
+                .set("edl_gpu_s", edl.gpu_seconds)
+                .set("ratio", ratio);
+            rows.push(r);
+        }
+        out.set(model.spec().name, rows);
+    }
+    // the paper's remark: EDL's loss is dominated by the (inevitable) new-
+    // GPU context prep, not by stopping existing workers
+    for model in [Dnn::ResNet50, Dnn::VGG16] {
+        let joiner = edl_scale_out_e2e(model); // 1 joiner
+        let existing = 4.0 * edl_stop_time(model);
+        assert!(joiner > existing, "joiner prep should dominate EDL loss");
+    }
+    let path = write_results("fig08_resource_loss", &out).unwrap();
+    println!("\nshape checks OK; results -> {}", path.display());
+}

@@ -1,0 +1,117 @@
+//! Fig 9 — (a) performance profiling time, EDL vs stop-resume: profiling
+//! p ∈ [2,8] with 10 mini-batches per level; (b) straggler mitigation on
+//! the live protocol.
+//!
+//! (a) stop-resume launches a fresh job per parallelism (paying context
+//! prep every time); EDL starts once at max parallelism and scales IN
+//! (cheap). Paper: EDL ≈ 20% of stop-resume's time.
+
+use edl::coordinator::{ElasticTrainer, TrainerConfig};
+use edl::data::corpus::Corpus;
+use edl::gpu_sim::{edl_scale_in_e2e, step_time, stop_resume_overhead, Dnn, HwConfig};
+use edl::util::json::{write_results, Json};
+use edl::worker::SimBackend;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let hw = HwConfig::default();
+    let mut out = Json::obj();
+
+    // ---- (a) profiling time model, p in [2,8], 10 mini-batches each ----
+    println!("== Fig 9a: profiling time p=2..8, 10 mini-batches per level ==");
+    println!("{:<12} {:>12} {:>10} {:>8}", "model", "stop-resume", "EDL", "EDL/SR");
+    for model in [Dnn::ResNet50, Dnn::VGG16, Dnn::ResNet152] {
+        let b = 32 * 8;
+        let mut t_sr = 0.0;
+        let mut t_edl = 0.0;
+        for p in 2..=8u32 {
+            let batches = 10.0 * step_time(model, p, b, &hw);
+            t_sr += stop_resume_overhead(model, p) + batches; // fresh launch per level
+            t_edl += batches;
+        }
+        // EDL: ONE launch at p=8, then cheap scale-ins downwards
+        t_edl += stop_resume_overhead(model, 8);
+        t_edl += 6.0 * edl_scale_in_e2e(model) * 0.2; // stall felt by the job per scale-in
+        let frac = t_edl / t_sr;
+        println!("{:<12} {:>11.0}s {:>9.0}s {:>7.0}%", model.spec().name, t_sr, t_edl, frac * 100.0);
+        assert!(frac < 0.5, "EDL profiling must be far cheaper: {frac}");
+        let mut r = Json::obj();
+        r.set("stop_resume_s", t_sr).set("edl_s", t_edl).set("fraction", frac);
+        out.set(&format!("profiling_{}", model.spec().name), r);
+    }
+    println!("(paper: EDL ≈ 20% of stop-resume)");
+
+    // ---- (a') live protocol: profile() on the engine ----
+    println!("\n== Fig 9a (measured): engine profile() 4 -> 1 workers ==");
+    let backend = SimBackend { compute_ms: 20, ..SimBackend::fast(4096) };
+    let corpus = Arc::new(Corpus::markov(256, 16, 1 << 20, 6));
+    let cfg = TrainerConfig { agg_batch: 32, n_partitions: 4096, ..Default::default() };
+    let t = ElasticTrainer::start(cfg, Arc::new(backend), corpus.clone(), 4);
+    assert!(t.wait_step(5, Duration::from_secs(60)));
+    let t0 = Instant::now();
+    let rows = t.profile(1, 10);
+    let profile_wall = t0.elapsed().as_secs_f64();
+    t.stop();
+    println!("{:>4} {:>12} {:>12}", "p", "samples/s", "efficiency");
+    let mut jrows = Json::Arr(vec![]);
+    for r in &rows {
+        println!("{:>4} {:>12.1} {:>12.3}", r.parallelism, r.throughput, r.efficiency);
+        let mut jr = Json::obj();
+        jr.set("p", r.parallelism).set("sps", r.throughput).set("efficiency", r.efficiency);
+        jrows.push(jr);
+    }
+    println!("profile(4..1, 10 steps/level) wall time: {profile_wall:.2}s");
+    assert_eq!(rows.len(), 4);
+    out.set("measured_profile_rows", jrows);
+    out.set("measured_profile_wall_s", profile_wall);
+
+    // ---- (b) straggler mitigation on the live protocol ----
+    println!("\n== Fig 9b (measured): straggler mitigation, 4 workers ==");
+    let backend = SimBackend { compute_ms: 30, ..SimBackend::fast(4096) };
+    let cfg = TrainerConfig {
+        agg_batch: 32,
+        n_partitions: 4096,
+        straggler_mitigation: true,
+        straggler_ratio: 1.2,
+        straggler_window: 10,
+        ..Default::default()
+    };
+    let t = ElasticTrainer::start(cfg, Arc::new(backend), corpus, 4);
+    assert!(t.wait_step(15, Duration::from_secs(120)));
+    let sps = |t: &ElasticTrainer, secs: u64| {
+        let s0 = t.status().step;
+        let i0 = Instant::now();
+        std::thread::sleep(Duration::from_secs(secs));
+        (t.status().step - s0) as f64 * 32.0 / i0.elapsed().as_secs_f64()
+    };
+    let normal = sps(&t, 3);
+    let victim = *t.status().workers.last().unwrap();
+    t.knobs(victim).unwrap().straggle_ms.store(11, Ordering::Relaxed); // ~+1/3 step
+    let degraded = sps(&t, 3);
+    let t_detect = Instant::now();
+    let deadline = Instant::now() + Duration::from_secs(90);
+    while t.status().parallelism == 4 {
+        assert!(Instant::now() < deadline, "straggler never removed");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let detect_s = t_detect.elapsed().as_secs_f64();
+    let recovered = sps(&t, 3);
+    t.stop();
+    println!("normal    {normal:>8.1} samples/s");
+    println!("degraded  {degraded:>8.1} samples/s ({:.0}% of normal; paper ~75%)", degraded / normal * 100.0);
+    println!("recovered {recovered:>8.1} samples/s ({:.0}% of normal; paper ~94%)", recovered / normal * 100.0);
+    println!("detection+removal: {detect_s:.1}s (paper: <10s + <5s)");
+    assert!(degraded < 0.92 * normal, "straggler must visibly degrade throughput");
+    assert!(recovered > degraded, "removal must recover throughput");
+    let mut r = Json::obj();
+    r.set("normal_sps", normal)
+        .set("degraded_sps", degraded)
+        .set("recovered_sps", recovered)
+        .set("detect_remove_s", detect_s);
+    out.set("measured_straggler", r);
+
+    let path = write_results("fig09_profiling_straggler", &out).unwrap();
+    println!("\nshape checks OK; results -> {}", path.display());
+}

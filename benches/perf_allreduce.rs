@@ -1,0 +1,72 @@
+//! L3 hot-path microbench: in-process ring allreduce throughput vs worker
+//! count and tensor size — the per-mini-batch data-plane cost of the
+//! trainer. Reports effective algorithm bandwidth
+//! (2(N−1)/N × bytes / time) and per-call latency.
+
+use edl::allreduce::ring_allreduce;
+use edl::transport::InProcHub;
+use edl::util::json::{write_results, Json};
+use edl::util::stats;
+use std::time::{Duration, Instant};
+
+const T: Duration = Duration::from_secs(60);
+
+fn bench(n_workers: usize, len: usize, iters: u64) -> (f64, f64) {
+    let hub = InProcHub::new();
+    let ring: Vec<u32> = (0..n_workers as u32).collect();
+    let eps: Vec<_> = (0..n_workers).map(|i| hub.join(i as u32)).collect();
+    let times: Vec<Vec<f64>> = std::thread::scope(|s| {
+        eps.into_iter()
+            .map(|mut ep| {
+                let ring = ring.clone();
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    let mut times = Vec::with_capacity(iters as usize);
+                    for step in 0..iters {
+                        let t0 = Instant::now();
+                        ring_allreduce(&mut ep, &ring, step, &mut buf, 1.0, T).unwrap();
+                        times.push(t0.elapsed().as_secs_f64());
+                        // renormalise so values stay finite
+                        for x in buf.iter_mut() {
+                            *x = 1.0;
+                        }
+                    }
+                    times
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    let per_call: Vec<f64> = times[0].clone();
+    let mean_s = stats::mean(&per_call);
+    let volume = 2.0 * (n_workers as f64 - 1.0) / n_workers as f64 * (len * 4) as f64;
+    let bw_gbs = volume / mean_s / 1e9;
+    (mean_s * 1e3, bw_gbs)
+}
+
+fn main() {
+    println!("== ring allreduce (in-process data plane) ==");
+    println!("{:>8} {:>12} {:>12} {:>14}", "workers", "elems", "ms/call", "algo GB/s");
+    let mut out = Json::obj();
+    let mut rows = Json::Arr(vec![]);
+    for &n in &[2usize, 4, 8] {
+        for &len in &[1_000usize, 100_000, 1_000_000, 4_250_000] {
+            let iters = if len > 500_000 { 10 } else { 50 };
+            let (ms, bw) = bench(n, len, iters);
+            println!("{n:>8} {len:>12} {ms:>12.3} {bw:>14.2}");
+            let mut r = Json::obj();
+            r.set("workers", n).set("elems", len).set("ms_per_call", ms).set("algo_gbs", bw);
+            rows.push(r);
+        }
+    }
+    out.set("rows", rows);
+    // the 4.25M-element case is the `small` model's full gradient (the e2e
+    // per-step payload) — it must complete well under a second
+    let (ms, _) = bench(4, 4_250_000, 5);
+    assert!(ms < 1_000.0, "full-gradient allreduce too slow: {ms:.1}ms");
+    out.set("small_model_grad_ms", ms);
+    let path = write_results("perf_allreduce", &out).unwrap();
+    println!("\nresults -> {}", path.display());
+}

@@ -1,0 +1,69 @@
+//! §4.1 — leader-election latency against the coordination service.
+//! The paper measured 7 ms average / 33 ms max with 256 workers on etcd;
+//! this bench runs 256 contending clients against the TCP KV service and
+//! reports per-client election latency, plus uncontended single-client
+//! latency.
+
+use edl::coordsvc::{KvClient, KvServer};
+use edl::util::json::{write_results, Json};
+use edl::util::stats;
+use std::time::Instant;
+
+fn main() {
+    let server = KvServer::start().unwrap();
+    let addr = server.addr.clone();
+
+    // ---- uncontended election ----------------------------------------------
+    let mut c = KvClient::connect(&addr).unwrap();
+    let mut solo = Vec::new();
+    for i in 0..200 {
+        let t0 = Instant::now();
+        c.elect(&format!("solo{i}"), "me", 5_000).unwrap();
+        solo.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "uncontended election: mean={:.2}ms p50={:.2}ms max={:.2}ms",
+        stats::mean(&solo),
+        stats::median(&solo),
+        stats::max(&solo)
+    );
+
+    // ---- 256 contending workers (the paper's setup) -------------------------
+    let n = 256;
+    let lats: Vec<f64> = std::thread::scope(|s| {
+        (0..n)
+            .map(|i| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = KvClient::connect(&addr).unwrap();
+                    let t0 = Instant::now();
+                    let w = c.elect("bigjob", &format!("w{i}"), 30_000).unwrap();
+                    let dt = t0.elapsed().as_secs_f64() * 1e3;
+                    (w, dt)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .map(|(w, dt)| {
+                assert!(!w.is_empty());
+                dt
+            })
+            .collect()
+    });
+    let mean = stats::mean(&lats);
+    let max = stats::max(&lats);
+    println!("256-way contended election: mean={mean:.2}ms p95={:.2}ms max={max:.2}ms", stats::percentile(&lats, 95.0));
+    println!("(paper: 7 ms average, 33 ms max with 256 workers on etcd)");
+
+    assert!(mean < 500.0, "contended election too slow: {mean:.1}ms");
+
+    let mut out = Json::obj();
+    out.set("solo_mean_ms", stats::mean(&solo))
+        .set("contended_mean_ms", mean)
+        .set("contended_max_ms", max)
+        .set("paper_mean_ms", 7.0)
+        .set("paper_max_ms", 33.0);
+    let path = write_results("perf_leader_election", &out).unwrap();
+    println!("results -> {}", path.display());
+}

@@ -1,0 +1,89 @@
+//! §4.4 — coordination-message latency. The paper disables Nagle's
+//! algorithm and measures 56 µs per message on its testbed; this bench
+//! measures framed round-trips over loopback TCP with TCP_NODELAY (via
+//! the TcpNode transport) and over the in-process hub, for the small
+//! (hundreds of bytes) messages EDL exchanges every mini-batch.
+
+use edl::transport::{InProcHub, PointToPoint, TcpNode};
+use edl::util::json::{write_results, Json};
+use edl::util::stats;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const N: usize = 2_000;
+const T: Duration = Duration::from_secs(10);
+
+fn main() {
+    let payload = vec![0xA5u8; 256]; // typical coordination message size
+    let mut out = Json::obj();
+
+    // ---- loopback TCP with TCP_NODELAY -------------------------------------
+    let dir = Arc::new(Mutex::new(HashMap::new()));
+    let mut a = TcpNode::start(1, dir.clone()).unwrap();
+    // register the echo node BEFORE the first send (directory race)
+    let mut b = TcpNode::start(2, dir.clone()).unwrap();
+    let echo = std::thread::spawn(move || {
+        for _ in 0..N + 100 {
+            match b.recv_any(T) {
+                Ok(m) => {
+                    let _ = b.send(m.from, m.tag + 1, m.payload);
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    // warmup (connection establishment)
+    for i in 0..100u32 {
+        a.send(2, i, payload.clone()).unwrap();
+        a.recv_from(2, i + 1, T).unwrap();
+    }
+    let mut lat_tcp = Vec::with_capacity(N);
+    for i in 0..N as u32 {
+        let t0 = Instant::now();
+        a.send(2, 1000 + i, payload.clone()).unwrap();
+        a.recv_from(2, 1001 + i, T).unwrap();
+        lat_tcp.push(t0.elapsed().as_secs_f64() * 1e6 / 2.0); // one-way
+    }
+    echo.join().unwrap();
+    report("TCP_NODELAY loopback", &lat_tcp, &mut out, "tcp");
+    println!("  (paper: 56 µs average one-way on its testbed)");
+
+    // ---- in-process hub ------------------------------------------------------
+    let hub = InProcHub::new();
+    let mut x = hub.join(1);
+    let mut y = hub.join(2);
+    let h = std::thread::spawn(move || {
+        for _ in 0..N {
+            match y.recv_any(T) {
+                Ok(m) => {
+                    let _ = y.send(m.from, m.tag + 1, m.payload);
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    let mut lat_hub = Vec::with_capacity(N);
+    for i in 0..N as u32 {
+        let t0 = Instant::now();
+        x.send(2, i, payload.clone()).unwrap();
+        x.recv_from(2, i + 1, T).unwrap();
+        lat_hub.push(t0.elapsed().as_secs_f64() * 1e6 / 2.0);
+    }
+    h.join().unwrap();
+    report("in-process hub", &lat_hub, &mut out, "inproc");
+
+    assert!(stats::median(&lat_tcp) < 2_000.0, "TCP latency out of range");
+    let path = write_results("perf_rpc_latency", &out).unwrap();
+    println!("\nresults -> {}", path.display());
+}
+
+fn report(name: &str, lat: &[f64], out: &mut Json, key: &str) {
+    let p50 = stats::median(lat);
+    let p99 = stats::percentile(lat, 99.0);
+    let mean = stats::mean(lat);
+    println!("{name}: mean={mean:.1}µs p50={p50:.1}µs p99={p99:.1}µs (n={})", lat.len());
+    let mut r = Json::obj();
+    r.set("mean_us", mean).set("p50_us", p50).set("p99_us", p99);
+    out.set(key, r);
+}

@@ -1,0 +1,111 @@
+//! L1/L2 hot-path bench on the REAL artifacts: per-call latency of the
+//! compiled grad_step / apply_update / train_step executables (tiny
+//! config), plus executable compile times (= context preparation on this
+//! substrate). Requires `make artifacts`.
+
+use edl::data::corpus::Corpus;
+use edl::runtime::{artifacts_dir, ModelMeta, Runtime};
+use edl::util::json::{write_results, Json};
+use edl::util::stats;
+use std::time::Instant;
+
+fn main() {
+    if ModelMeta::load(artifacts_dir(), "tiny").is_err() {
+        println!("artifacts not built; run `make artifacts` first — skipping");
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir(), "tiny").unwrap();
+    let corpus = Corpus::markov(rt.meta.vocab, rt.meta.seq_len, 256, 7);
+    let params = rt.init_params(0).unwrap();
+    let mut out = Json::obj();
+
+    println!("== compile (context preparation) ==");
+    let mut compile_rows = Json::Arr(vec![]);
+    for name in ["tiny_grad_b4", "tiny_train_b4", "tiny_apply"] {
+        let (_e, t) = rt.load_with_timing(name).unwrap();
+        println!("  {name:<16} parse {:>7.1}ms compile {:>9.1}ms", t.parse_s * 1e3, t.compile_s * 1e3);
+        let mut r = Json::obj();
+        r.set("artifact", name).set("parse_ms", t.parse_s * 1e3).set("compile_ms", t.compile_s * 1e3);
+        compile_rows.push(r);
+    }
+    out.set("compile", compile_rows);
+
+    println!("\n== execution (per call, batch 4) ==");
+    let toks = corpus.batch(0, 4);
+    let measure = |f: &dyn Fn() -> (), n: usize| -> Vec<f64> {
+        // warmup
+        f();
+        (0..n)
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed().as_secs_f64() * 1e3
+            })
+            .collect()
+    };
+    let grad_t = measure(&|| {
+        rt.grad_step(&params, &toks, 4).unwrap();
+    }, 10);
+    let apply_t = {
+        let (_, grads) = rt.grad_step(&params, &toks, 4).unwrap();
+        measure(&|| {
+            rt.apply_update(&params, &grads, 0.1).unwrap();
+        }, 10)
+    };
+    let train_t = measure(&|| {
+        rt.train_step(&params, &toks, 4, 0.1).unwrap();
+    }, 10);
+    for (name, t) in [("grad_step", &grad_t), ("apply_update", &apply_t), ("train_step", &train_t)] {
+        println!("  {name:<14} p50 {:>8.1}ms  min {:>8.1}ms", stats::median(t), stats::min(t));
+        let mut r = Json::obj();
+        r.set("p50_ms", stats::median(t)).set("min_ms", stats::min(t));
+        out.set(name, r);
+    }
+    // fused train_step must not be slower than grad+apply separately (the
+    // L2 fusion win)
+    let fused = stats::median(&train_t);
+    let split = stats::median(&grad_t) + stats::median(&apply_t);
+    println!("\nfused train_step {:.1}ms vs grad+apply {:.1}ms ({:.0}%)", fused, split, fused / split * 100.0);
+    out.set("fused_over_split", fused / split);
+
+    // -- §Perf: device-resident parameter path (the trainer's hot loop) ----
+    println!("\n== device-resident path (params stay in PJRT buffers) ==");
+    rt.executable(&format!("{}_applyb", rt.meta.name)).unwrap();
+    let mut pbuf = rt.upload_params(&params).unwrap();
+    let grad_dev_t = measure(&|| {
+        rt.grad_step_dev(&pbuf, &toks, 4).unwrap();
+    }, 10);
+    let apply_dev_t: Vec<f64> = {
+        let (_, grads) = rt.grad_step_dev(&pbuf, &toks, 4).unwrap();
+        // chain buffers exactly as the worker loop does
+        let mut times = Vec::new();
+        for _ in 0..10 {
+            let t0 = Instant::now();
+            pbuf = rt.apply_update_dev(&pbuf, &grads, 0.0).unwrap();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        times
+    };
+    for (name, t, host) in [
+        ("grad_step_dev", &grad_dev_t, &grad_t),
+        ("apply_update_dev", &apply_dev_t, &apply_t),
+    ] {
+        let dev = stats::median(t);
+        let h = stats::median(host);
+        println!("  {name:<18} p50 {:>8.2}ms  (host path {:>8.2}ms, {:.2}x)", dev, h, h / dev);
+        let mut r = Json::obj();
+        r.set("p50_ms", dev).set("host_p50_ms", h).set("speedup", h / dev);
+        out.set(name, r);
+    }
+    let step_dev = stats::median(&grad_dev_t) + stats::median(&apply_dev_t);
+    let step_host = stats::median(&grad_t) + stats::median(&apply_t);
+    println!("  full step: device {:.1}ms vs host {:.1}ms ({:+.0}%)", step_dev, step_host, (step_dev / step_host - 1.0) * 100.0);
+    out.set("step_dev_ms", step_dev);
+    out.set("step_host_ms", step_host);
+
+    let sps = 4.0 / (stats::median(&grad_t) / 1e3);
+    println!("effective grad throughput: {sps:.1} samples/s/worker (tiny, b=4)");
+    out.set("grad_sps", sps);
+    let path = write_results("perf_runtime_step", &out).unwrap();
+    println!("results -> {}", path.display());
+}

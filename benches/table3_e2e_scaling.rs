@@ -1,0 +1,62 @@
+//! Table 3 — end-to-end time of EDL scale-in (5→4) and scale-out (4→5)
+//! per DNN. The e2e scale-out time is dominated by the joiner's context
+//! preparation (hidden from existing workers); scale-in completes within
+//! a few seconds (graceful exit at the next switch boundary).
+//!
+//! Calibrated values from the device model + a protocol measurement with
+//! the in-process engine verifying the RELATIONSHIPS: e2e-out ≈ ctx-prep,
+//! e2e-in ≈ a couple of mini-batches, and neither stops existing workers.
+
+use edl::coordinator::{ElasticTrainer, Reply, TrainerConfig};
+use edl::data::corpus::Corpus;
+use edl::gpu_sim::{edl_scale_in_e2e, edl_scale_out_e2e, Dnn};
+use edl::util::json::{write_results, Json};
+use edl::worker::SimBackend;
+use std::sync::Arc;
+use std::time::Duration;
+
+const MODELS: [Dnn; 5] = [Dnn::AlexNet, Dnn::ResNet152, Dnn::ResNet50, Dnn::VGG19, Dnn::VGG16];
+
+fn main() {
+    println!("== Table 3: end-to-end scaling time (s) in EDL ==");
+    println!("{:<12} {:>11} {:>11}", "model", "scale-in", "scale-out");
+    let mut out = Json::obj();
+    for d in MODELS {
+        let si = edl_scale_in_e2e(d);
+        let so = edl_scale_out_e2e(d);
+        println!("{:<12} {:>10.1}s {:>10.1}s", d.spec().name, si, so);
+        assert!(so > si, "scale-out (ctx prep) must dominate scale-in");
+        let mut r = Json::obj();
+        r.set("scale_in_s", si).set("scale_out_s", so);
+        out.set(d.spec().name, r);
+    }
+
+    // protocol measurement: ctx-prep 2s, 40ms steps
+    println!("\n== measured e2e on the live protocol (ctx-prep=2s, 40ms steps) ==");
+    let backend = SimBackend { compute_ms: 40, ctx_prep_ms: 2_000, ..SimBackend::fast(1 << 18) };
+    let corpus = Arc::new(Corpus::markov(256, 16, 1 << 20, 4));
+    let cfg = TrainerConfig { agg_batch: 32, n_partitions: 4096, ..Default::default() };
+    let t = ElasticTrainer::start(cfg, Arc::new(backend), corpus, 4);
+    assert!(t.wait_step(10, Duration::from_secs(120)));
+
+    let t0 = std::time::Instant::now();
+    assert!(matches!(t.scale_out(vec!["m1".into()]), Reply::Ack));
+    let e2e_out = t0.elapsed().as_secs_f64();
+
+    assert!(t.wait_step(t.status().step + 5, Duration::from_secs(60)));
+    let victim = *t.status().workers.last().unwrap();
+    let t0 = std::time::Instant::now();
+    assert!(matches!(t.scale_in(vec![victim]), Reply::Ack));
+    let e2e_in = t0.elapsed().as_secs_f64();
+    t.stop();
+
+    println!("scale-out e2e {e2e_out:.2}s (>= ctx prep 2s);  scale-in e2e {e2e_in:.2}s");
+    assert!(e2e_out >= 1.8, "scale-out e2e must include context prep");
+    assert!(e2e_in < e2e_out, "scale-in must be much cheaper than scale-out");
+    let mut m = Json::obj();
+    m.set("e2e_out_s", e2e_out).set("e2e_in_s", e2e_in);
+    out.set("measured_protocol", m);
+
+    let path = write_results("table3_e2e_scaling", &out).unwrap();
+    println!("\nshape checks OK; results -> {}", path.display());
+}

@@ -1,0 +1,56 @@
+//! Trace-driven cluster-scheduling comparison (§6.3): Tiresias vs
+//! Elastic-Tiresias on a synthetic Philly-like trace, printing Table-4
+//! style JCT statistics and Fig-12 style utilization / efficiency means.
+//!
+//!     cargo run --release --example cluster_scheduling -- \
+//!         --jobs 2000 --machines 36 --span-days 7
+
+use edl::cluster::{ClusterSim, ScaleMode, Scheduler};
+use edl::metrics::JctStats;
+use edl::schedulers::{ElasticTiresias, Tiresias};
+use edl::trace::{self, TraceConfig};
+use edl::util::args::Args;
+
+fn run(name: &str, sched: &mut dyn Scheduler, trace: &[trace::TraceJob], machines: usize) -> (JctStats, f64, f64) {
+    let mut sim = ClusterSim::new(machines, 8, trace, ScaleMode::Edl);
+    sim.run(sched, 1e9);
+    let stats = JctStats::from(&sim.jcts());
+    let util = sim.util_ts.time_weighted_mean();
+    let eff = sim.cluster_eff_ts.time_weighted_mean();
+    println!(
+        "{name:<18} mean={:>9.0}s median={:>7.0}s p95={:>9.0}s  util={util:.3} cluster-eff={eff:.3}",
+        stats.mean, stats.median, stats.p95
+    );
+    (stats, util, eff)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n_jobs = args.usize("jobs", 2_000);
+    let machines = args.usize("machines", 36);
+    let span_days = args.f64("span-days", 7.0);
+
+    let trace = trace::generate(&TraceConfig {
+        n_jobs,
+        span_s: span_days * 86_400.0,
+        ..Default::default()
+    });
+    println!(
+        "== {} jobs over {:.0} days on {}x8 GPUs (Table 4 / Fig 12 setup) ==\n",
+        n_jobs, span_days, machines
+    );
+
+    let (base, _, _) = run("Tiresias", &mut Tiresias::new(vec![500.0, 10_000.0]), &trace, machines);
+    let (elastic, _, _) = run(
+        "Elastic-Tiresias",
+        &mut ElasticTiresias::new(vec![500.0, 10_000.0], 10, 0.5),
+        &trace,
+        machines,
+    );
+
+    println!("\nJCT reduction (mean):   {:.1}%  (paper Table 4: 89.5%)", elastic.reduction_vs(&base));
+    let med = (1.0 - elastic.median / base.median) * 100.0;
+    println!("JCT reduction (median): {med:.1}%  (paper Table 4: 48.1%)");
+    let p95 = (1.0 - elastic.p95 / base.p95) * 100.0;
+    println!("JCT reduction (p95):    {p95:.1}%  (paper Table 4 reports p95: 95.4%)");
+}

@@ -1,0 +1,125 @@
+"""AOT compile path: lower the L2 model (with L1 Pallas kernels inlined)
+to HLO *text* artifacts that the Rust runtime loads via PJRT.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Artifacts written to --out (default ../artifacts):
+
+  <cfg>_init.hlo.txt                    (seed i32[])            -> (params,)
+  <cfg>_grad_b<B>.hlo.txt               (params, tokens i32[B,S]) -> (loss, grads)
+  <cfg>_apply.hlo.txt                   (params, grads, lr)     -> (params,)
+  <cfg>_train_b<B>.hlo.txt              (params, tokens, lr)    -> (loss, params)
+  <cfg>_loss_b<B0>.hlo.txt              (params, tokens)        -> (loss,)
+  <cfg>.meta                            flat "key value" lines for Rust
+
+Per-worker batch-size variants exist because HLO is fixed-shape: the paper
+keeps the *aggregate* batch size constant under scaling (§3.1), so the
+per-worker batch changes with parallelism and the Rust leader picks the
+matching pre-compiled executable (one compiled executable per variant).
+
+Python runs ONCE here; it is never on the Rust request path.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Per-worker batch sizes exported per config. Aggregate batch = b * p, so
+# these cover parallelism 1..32 at aggregate batch 32 (and more).
+BATCH_VARIANTS = {
+    "tiny": [1, 2, 4, 8, 16],
+    "small": [1, 2, 4, 8, 16, 32],
+    "base": [1, 2, 4, 8],
+}
+DEFAULT_CONFIGS = ["tiny", "small"]
+
+
+def to_hlo_text(lowered, return_tuple=True) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir, name, lowered, return_tuple=True):
+    text = to_hlo_text(lowered, return_tuple)
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text)} chars)")
+
+
+def export_config(cfg_name: str, out_dir: str, batches=None):
+    cfg = M.CONFIGS[cfg_name]
+    P = M.param_count(cfg)
+    S = cfg.seq_len
+    batches = batches or BATCH_VARIANTS[cfg_name]
+    print(f"config {cfg_name}: P={P} S={S} batches={batches}")
+
+    f32 = jnp.float32
+    params_spec = jax.ShapeDtypeStruct((P,), f32)
+    lr_spec = jax.ShapeDtypeStruct((), f32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    _write(out_dir, f"{cfg_name}_init.hlo.txt",
+           jax.jit(lambda s: (M.init_params(cfg, s),)).lower(seed_spec))
+    _write(out_dir, f"{cfg_name}_apply.hlo.txt",
+           jax.jit(lambda p, g, lr: (M.apply_update(p, g, lr),)).lower(
+               params_spec, params_spec, lr_spec))
+    # non-tuple variant: its output buffer feeds the next grad_step's
+    # params input directly (device-resident params on the Rust hot path)
+    _write(out_dir, f"{cfg_name}_applyb.hlo.txt",
+           jax.jit(M.apply_update).lower(params_spec, params_spec, lr_spec),
+           return_tuple=False)
+
+    for b in batches:
+        tok_spec = jax.ShapeDtypeStruct((b, S), jnp.int32)
+        _write(out_dir, f"{cfg_name}_grad_b{b}.hlo.txt",
+               jax.jit(functools.partial(M.grad_step, cfg)).lower(params_spec, tok_spec))
+        _write(out_dir, f"{cfg_name}_train_b{b}.hlo.txt",
+               jax.jit(functools.partial(M.train_step, cfg)).lower(
+                   params_spec, tok_spec, lr_spec))
+
+    eval_b = batches[0]
+    tok_spec = jax.ShapeDtypeStruct((eval_b, S), jnp.int32)
+    _write(out_dir, f"{cfg_name}_loss_b{eval_b}.hlo.txt",
+           jax.jit(lambda p, t: (M.fwd_loss(cfg, p, t),)).lower(params_spec, tok_spec))
+
+    with open(os.path.join(out_dir, f"{cfg_name}.meta"), "w") as f:
+        f.write(f"name {cfg.name}\n")
+        f.write(f"param_count {P}\n")
+        f.write(f"vocab {cfg.vocab}\n")
+        f.write(f"d_model {cfg.d_model}\n")
+        f.write(f"n_layers {cfg.n_layers}\n")
+        f.write(f"n_heads {cfg.n_heads}\n")
+        f.write(f"d_ff {cfg.d_ff}\n")
+        f.write(f"seq_len {S}\n")
+        f.write(f"eval_batch {eval_b}\n")
+        f.write("batches " + ",".join(str(b) for b in batches) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_CONFIGS))
+    ap.add_argument("--batches", default="", help="override batch list, csv")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    batches = [int(x) for x in args.batches.split(",") if x] or None
+    for name in args.configs.split(","):
+        export_config(name, args.out, batches)
+    print("aot export complete")
+
+
+if __name__ == "__main__":
+    main()

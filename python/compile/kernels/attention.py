@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: causal self-attention core.
+
+One grid cell per (batch × head). The full S×S score tile lives in VMEM
+(S ≤ a few hundred for the model configs we export), and the softmax is
+computed single-pass with an on-chip row max / row sum — the flash-style
+normalisation that avoids writing the score matrix back to HBM, which is
+the paper-era GPU insight (shared-memory softmax) re-expressed for the
+TPU memory hierarchy (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    # refs are (1, S, dh) blocks; squeeze the leading grid dim.
+    q = q_ref[0, :, :]
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    s = q.shape[0]
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # causal mask: position i may attend to j <= i
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(col <= row, scores, NEG_INF)
+
+    # single-pass, numerically stable softmax kept entirely in VMEM
+    m = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0, :, :] = jnp.dot(p / denom, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def causal_attention(q, k, v):
+    """Causal softmax(q kᵀ / sqrt(dh)) v.
+
+    q, k, v: (BH, S, dh) — batch and heads pre-flattened by the caller.
+    Returns (BH, S, dh) f32.
+    """
+    bh, s, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    spec = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))

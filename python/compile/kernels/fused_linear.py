@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + activation.
+
+This is the MLP/projection hot-spot of the L2 transformer. The kernel is
+written TPU-style (see DESIGN.md §Hardware-Adaptation):
+
+  * the (M, N, K) iteration space is expressed as a Pallas grid, with
+    BlockSpec index maps playing the role CUDA threadblock tiling plays in
+    the paper's GPU setting — each grid step streams one (bm, bk) tile of
+    `x` and one (bk, bn) tile of `w` from HBM into VMEM;
+  * partial products are accumulated in the f32 output tile across the K
+    grid dimension (output revisiting: the output index map ignores `k`,
+    so the same VMEM tile is reused for all K steps — the MXU-friendly
+    accumulation pattern);
+  * bias add + activation are applied on the *last* K step, fusing the
+    epilogue into the matmul and avoiding an extra HBM round trip.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is validated against ``ref.py`` by
+pytest/hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile sizes. Shapes smaller than a block are padded up
+# by the wrapper (and the pad is sliced off afterwards), so any (M, N, K)
+# is supported.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+_ACTS = ("none", "relu", "gelu")
+
+
+def _apply_act(y, act):
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        # tanh-approximation GeLU, matching ref.py
+        return 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y * y * y)))
+    raise ValueError(f"unknown act {act!r}")
+
+
+def act_grad(z, act):
+    """d act(z) / dz — used by the custom VJP in model.py."""
+    if act == "none":
+        return jnp.ones_like(z)
+    if act == "relu":
+        return (z > 0).astype(z.dtype)
+    if act == "gelu":
+        c = 0.7978845608028654
+        t = jnp.tanh(c * (z + 0.044715 * z**3))
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * c * (1.0 + 3 * 0.044715 * z * z)
+    raise ValueError(f"unknown act {act!r}")
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, act, nk):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j]; epilogue at k==nk-1."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...], act)
+
+
+def _pad_to(a, axis, mult):
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(a, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def matmul_bias_act(x, w, b, act="none", bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """act(x @ w + b) with x: (M, K), w: (K, N), b: (N,). Returns (M, N) f32.
+
+    The Pallas grid is (M/bm, N/bn, K/bk); tiles are padded to block
+    multiples so arbitrary shapes are accepted.
+    """
+    assert act in _ACTS, act
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    assert b.shape == (N,), (b.shape, N)
+
+    x = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    w = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    b2 = _pad_to(b.astype(jnp.float32).reshape(1, N), 1, bn)
+    Mp, Kp = x.shape
+    _, Np = w.shape
+    nm, nn, nk = Mp // bm, Np // bn, Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, act=act, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=True,
+    )(x, w, b2)
+    return out[:M, :N]
+
+
+def matmul(x, w, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Plain x @ w via the same fused kernel (zero bias, no activation).
+
+    Used by the custom-VJP backward passes so the backward matmuls also run
+    through the L1 kernel.
+    """
+    zero_b = jnp.zeros((w.shape[1],), jnp.float32)
+    return matmul_bias_act(x, w, zero_b, act="none", bm=bm, bn=bn, bk=bk)

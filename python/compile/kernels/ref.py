@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for every L1 Pallas kernel (pytest/hypothesis compare
+kernel output against these, elementwise)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(y):
+    return 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y * y * y)))
+
+
+def matmul_bias_act(x, w, b, act="none"):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return gelu(y)
+    raise ValueError(act)
+
+
+def causal_attention(q, k, v):
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    bh, s, dh = q.shape
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) / (dh**0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def sgd_update(params, grads, lr):
+    return params.astype(jnp.float32) - jnp.float32(lr) * grads.astype(jnp.float32)

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: fused SGD parameter update over the flat param vector.
+
+p ← p − lr·g, tiled as a 1-D grid of VPU-width blocks. Deliberately
+bandwidth-bound: two streaming reads + one streaming write per element and
+no intermediate scaled-gradient tensor (the fusion the paper gets from
+framework-level optimizer fusion).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096  # multiple of the 8×128 VPU tile
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_update(params, grads, lr, block=BLOCK):
+    """params, grads: (P,) f32; lr: () or (1,) f32. Returns updated (P,)."""
+    (n,) = params.shape
+    assert grads.shape == (n,)
+    lr = jnp.asarray(lr, jnp.float32).reshape(1)
+    rem = (-n) % block
+    p = jnp.pad(params.astype(jnp.float32), (0, rem))
+    g = jnp.pad(grads.astype(jnp.float32), (0, rem))
+    nb = p.shape[0] // block
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        interpret=True,
+    )(lr, p, g)
+    return out[:n]

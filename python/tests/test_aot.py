@@ -1,0 +1,98 @@
+"""AOT export tests: the HLO-text artifacts must exist, be parseable HLO,
+and the meta file must agree with the model spec."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.export_config("tiny", str(out), batches=[1, 2])
+    return str(out)
+
+
+EXPECTED = [
+    "tiny_init.hlo.txt",
+    "tiny_apply.hlo.txt",
+    "tiny_grad_b1.hlo.txt",
+    "tiny_grad_b2.hlo.txt",
+    "tiny_train_b1.hlo.txt",
+    "tiny_train_b2.hlo.txt",
+    "tiny_loss_b1.hlo.txt",
+    "tiny.meta",
+]
+
+
+def test_all_artifacts_written(artifacts):
+    for name in EXPECTED:
+        path = os.path.join(artifacts, name)
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 0, name
+
+
+def test_hlo_text_has_entry(artifacts):
+    for name in EXPECTED:
+        if not name.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(artifacts, name)).read()
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def test_grad_artifact_shapes(artifacts):
+    """The grad entry computation must take (f32[P], s32[B,S]) and return
+    a (f32[], f32[P]) tuple — the contract the Rust runtime relies on."""
+    cfg = M.CONFIGS["tiny"]
+    P, S = M.param_count(cfg), cfg.seq_len
+    text = open(os.path.join(artifacts, "tiny_grad_b2.hlo.txt")).read()
+    params = [l for l in text.splitlines() if "parameter(" in l]
+    assert any(f"f32[{P}]" in l for l in params), "flat param input missing"
+    assert any(f"s32[2,{S}]" in l for l in params), "token input missing"
+    # the root of the entry computation returns (loss, grads); HLO text may
+    # carry layout annotations like f32[P]{0}, so match the prefix
+    assert f"(f32[], f32[{P}]" in text
+
+
+def test_meta_file_contents(artifacts):
+    cfg = M.CONFIGS["tiny"]
+    meta = {}
+    for line in open(os.path.join(artifacts, "tiny.meta")):
+        k, v = line.split(None, 1)
+        meta[k] = v.strip()
+    assert int(meta["param_count"]) == M.param_count(cfg)
+    assert int(meta["vocab"]) == cfg.vocab
+    assert int(meta["seq_len"]) == cfg.seq_len
+    assert meta["batches"] == "1,2"
+
+
+def test_hlo_text_roundtrips_through_xla_parser(artifacts):
+    """Simulate the Rust side: parse the text back into an XlaComputation."""
+    from jax._src.lib import xla_client as xc
+
+    backend = jax.devices("cpu")[0].client
+    text = open(os.path.join(artifacts, "tiny_loss_b1.hlo.txt")).read()
+    # xla_client exposes the same text parser the rust crate binds
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_exported_loss_matches_eager(artifacts):
+    """Execute the lowered loss computation via jax and compare with eager."""
+    import numpy as np
+
+    cfg = M.CONFIGS["tiny"]
+    params = M.init_params(cfg, 7)
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (1, cfg.seq_len)), jnp.int32
+    )
+    eager = float(M.fwd_loss(cfg, params, toks))
+    lowered = jax.jit(lambda p, t: (M.fwd_loss(cfg, p, t),)).lower(params, toks)
+    compiled = lowered.compile()
+    (got,) = compiled(params, toks)
+    assert abs(float(got) - eager) < 1e-5

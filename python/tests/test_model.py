@@ -1,0 +1,136 @@
+"""L2 model tests: flat-param layout, forward shapes, loss sanity,
+gradient correctness (numeric check), and training-step behaviour."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, CFG.vocab, (2, CFG.seq_len)), jnp.int32)
+
+
+def test_param_count_matches_spec(params):
+    assert params.shape == (M.param_count(CFG),)
+    assert M.param_count(CFG) == sum(
+        int(np.prod(s)) for _, s in M.param_spec(CFG)
+    )
+
+
+def test_flatten_unflatten_roundtrip(params):
+    tree = M.unflatten(CFG, params)
+    again = M.flatten(CFG, tree)
+    np.testing.assert_array_equal(params, again)
+
+
+def test_unflatten_shapes(params):
+    tree = M.unflatten(CFG, params)
+    for name, shape in M.param_spec(CFG):
+        assert tree[name].shape == shape, name
+
+
+def test_init_deterministic():
+    a = M.init_params(CFG, 42)
+    b = M.init_params(CFG, 42)
+    np.testing.assert_array_equal(a, b)
+    c = M.init_params(CFG, 43)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_init_layernorm_scales_are_one(params):
+    tree = M.unflatten(CFG, params)
+    np.testing.assert_array_equal(tree["lnf_s"], np.ones(CFG.d_model, np.float32))
+    np.testing.assert_array_equal(tree["l0.ln1_s"], np.ones(CFG.d_model, np.float32))
+    np.testing.assert_array_equal(tree["l0.b1"], np.zeros(CFG.d_ff, np.float32))
+
+
+def test_forward_shape(params, tokens):
+    logits = M.forward(CFG, M.unflatten(CFG, params), tokens)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    loss = float(M.fwd_loss(CFG, params, tokens))
+    assert abs(loss - math.log(CFG.vocab)) < 1.0
+
+
+def test_grad_step_returns_finite(params, tokens):
+    loss, grads = M.grad_step(CFG, params, tokens)
+    assert math.isfinite(float(loss))
+    assert grads.shape == params.shape
+    g = np.asarray(grads)
+    assert np.all(np.isfinite(g))
+    assert np.linalg.norm(g) > 0
+
+
+def test_grad_matches_numeric(params, tokens):
+    """Central-difference check on a handful of coordinates."""
+    _, grads = M.grad_step(CFG, params, tokens)
+    f = lambda p: float(M.fwd_loss(CFG, p, tokens))
+    rng = np.random.default_rng(1)
+    # pick coords with non-trivial gradient so the check is meaningful
+    g = np.asarray(grads)
+    big = np.argsort(-np.abs(g))[:200]
+    coords = rng.choice(big, 4, replace=False)
+    eps = 1e-2
+    n = params.shape[0]
+    for i in coords:
+        e = np.zeros(n, np.float32)
+        e[i] = eps
+        num = (f(params + e) - f(params - e)) / (2 * eps)
+        assert abs(num - g[i]) < 5e-2 * max(1.0, abs(g[i])) + 5e-3, (i, num, g[i])
+
+
+def test_train_step_decreases_loss(params, tokens):
+    loss0, p1 = M.train_step(CFG, params, tokens, jnp.float32(0.5))
+    loss1, _ = M.train_step(CFG, p1, tokens, jnp.float32(0.5))
+    assert float(loss1) < float(loss0)
+
+
+def test_apply_update_direction(params):
+    g = jnp.ones_like(params)
+    p2 = M.apply_update(params, g, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(params) - 0.1, rtol=1e-6, atol=1e-6)
+
+
+def test_grad_is_mean_over_batch(params):
+    """grads(batch of 2 identical rows) == grads(batch of 1 row)."""
+    rng = np.random.default_rng(2)
+    row = rng.integers(0, CFG.vocab, (1, CFG.seq_len))
+    t1 = jnp.asarray(row, jnp.int32)
+    t2 = jnp.asarray(np.vstack([row, row]), jnp.int32)
+    l1, g1 = M.grad_step(CFG, params, t1)
+    l2, g2 = M.grad_step(CFG, params, t2)
+    assert abs(float(l1) - float(l2)) < 1e-4
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3, atol=1e-5)
+
+
+def test_data_parallel_equivalence(params):
+    """The paper's consistency semantics: grads averaged over two
+    half-batches (weighted allreduce) equal grads of the full batch."""
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, CFG.vocab, (4, CFG.seq_len))
+    full = jnp.asarray(toks, jnp.int32)
+    a = jnp.asarray(toks[:2], jnp.int32)
+    b = jnp.asarray(toks[2:], jnp.int32)
+    lf, gf = M.grad_step(CFG, params, full)
+    la, ga = M.grad_step(CFG, params, a)
+    lb, gb = M.grad_step(CFG, params, b)
+    np.testing.assert_allclose(
+        (np.asarray(ga) + np.asarray(gb)) / 2, np.asarray(gf), rtol=1e-3, atol=1e-5
+    )
+    assert abs((float(la) + float(lb)) / 2 - float(lf)) < 1e-4

@@ -1,0 +1,378 @@
+//! Elastic ring allreduce — the NCCL substitute (DESIGN.md §1).
+//!
+//! Implements the bandwidth-optimal ring algorithm the paper builds on
+//! (§2.1): with N workers the tensor is split into N chunks; N−1
+//! reduce-scatter steps leave each worker holding the full sum of one
+//! chunk, then N−1 allgather steps circulate the reduced chunks. Total
+//! traffic per worker: 2(N−1)/N × tensor bytes.
+//!
+//! Elasticity hooks:
+//!  * the ring order is an explicit argument — the leader rebuilds it on
+//!    every topology switch and workers swap it at the agreed mini-batch
+//!    timestamp (§4.2);
+//!  * `broadcast` implements single-source model transfer to joiners
+//!    (stop-free scaling's model-preparation step);
+//!  * weighted reduction supports the constant-aggregate-batch semantics
+//!    (§3.1): each worker pre-scales its gradient by `weight` and the ring
+//!    computes the plain sum, so unequal local batches still yield the
+//!    exact full-batch mean gradient.
+
+use crate::transport::{tag, NetError, PointToPoint};
+use crate::wire::{Dec, Enc};
+use std::time::Duration;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArError {
+    #[error("ring must contain this node")]
+    NotInRing,
+    #[error("ring too small: {0}")]
+    RingTooSmall(usize),
+    #[error("net: {0}")]
+    Net(#[from] NetError),
+    #[error("wire: {0}")]
+    Wire(#[from] crate::wire::WireError),
+}
+
+pub type Result<T> = std::result::Result<T, ArError>;
+
+/// §Perf: decode an f32s payload (length-prefixed LE floats) by ADDING it
+/// into `dst` in place — avoids the intermediate Vec allocation + copy of
+/// `Dec::f32s` on the reduce-scatter hot path.
+fn add_assign_from_payload(dst: &mut [f32], payload: &[u8]) -> Result<()> {
+    let mut d = Dec::new(payload);
+    let n = d.u32()? as usize;
+    if n != dst.len() || payload.len() < 4 + n * 4 {
+        return Err(ArError::Wire(crate::wire::WireError::Truncated {
+            wanted: n * 4,
+            have: payload.len().saturating_sub(4),
+        }));
+    }
+    let raw = &payload[4..4 + n * 4];
+    for (x, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+        *x += f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    }
+    Ok(())
+}
+
+/// §Perf: decode an f32s payload by COPYING into `dst` in place
+/// (allgather hot path).
+fn copy_from_payload(dst: &mut [f32], payload: &[u8]) -> Result<()> {
+    let mut d = Dec::new(payload);
+    let n = d.u32()? as usize;
+    if n != dst.len() || payload.len() < 4 + n * 4 {
+        return Err(ArError::Wire(crate::wire::WireError::Truncated {
+            wanted: n * 4,
+            have: payload.len().saturating_sub(4),
+        }));
+    }
+    let raw = &payload[4..4 + n * 4];
+    unsafe {
+        std::ptr::copy_nonoverlapping(raw.as_ptr(), dst.as_mut_ptr() as *mut u8, n * 4);
+    }
+    Ok(())
+}
+
+/// Chunk boundaries: split `len` into `n` nearly equal ranges.
+pub fn chunks(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < rem);
+        out.push((start, start + sz));
+        start += sz;
+    }
+    out
+}
+
+/// In-place weighted-sum ring allreduce of `buf` across `ring`.
+///
+/// Every participant must call this with the same `ring` (order matters)
+/// and the same `step` (used to namespace message tags so consecutive
+/// allreduces never cross-talk). `weight` scales the local contribution
+/// before summation.
+pub fn ring_allreduce<N: PointToPoint>(
+    net: &mut N,
+    ring: &[u32],
+    step: u64,
+    buf: &mut [f32],
+    weight: f32,
+    timeout: Duration,
+) -> Result<()> {
+    let n = ring.len();
+    if n == 0 {
+        return Err(ArError::RingTooSmall(0));
+    }
+    let me = ring.iter().position(|&id| id == net.id()).ok_or(ArError::NotInRing)?;
+    if weight != 1.0 {
+        for x in buf.iter_mut() {
+            *x *= weight;
+        }
+    }
+    if n == 1 {
+        return Ok(());
+    }
+    let right = ring[(me + 1) % n];
+    let left = ring[(me + n - 1) % n];
+    let bounds = chunks(buf.len(), n);
+    let step_tag = tag::RING ^ ((step as u32) & 0xFFF) << 4;
+
+    // --- reduce-scatter: after N-1 steps, chunk (me+1)%n holds the sum ---
+    for s in 0..n - 1 {
+        let send_chunk = (me + n - s) % n;
+        let recv_chunk = (me + n - s - 1) % n;
+        let (a, b) = bounds[send_chunk];
+        let mut e = Enc::with_capacity(8 + (b - a) * 4);
+        e.f32s(&buf[a..b]);
+        net.send(right, step_tag + s as u32, e.into_bytes())?;
+        let payload = net.recv_from(left, step_tag + s as u32, timeout)?;
+        let (ra, rb) = bounds[recv_chunk];
+        add_assign_from_payload(&mut buf[ra..rb], &payload)?;
+    }
+
+    // --- allgather: circulate the reduced chunks ---
+    for s in 0..n - 1 {
+        let send_chunk = (me + 1 + n - s) % n;
+        let recv_chunk = (me + n - s) % n;
+        let (a, b) = bounds[send_chunk];
+        let mut e = Enc::with_capacity(8 + (b - a) * 4);
+        e.f32s(&buf[a..b]);
+        net.send(right, step_tag + 0x100 + s as u32, e.into_bytes())?;
+        let payload = net.recv_from(left, step_tag + 0x100 + s as u32, timeout)?;
+        let (ra, rb) = bounds[recv_chunk];
+        copy_from_payload(&mut buf[ra..rb], &payload)?;
+    }
+    Ok(())
+}
+
+/// Single-source broadcast: `src` sends `buf` to each of `dests` directly
+/// (the paper uses one existing worker to broadcast the model to all new
+/// workers, §4.2).
+pub fn broadcast_send<N: PointToPoint>(
+    net: &mut N,
+    dests: &[u32],
+    step: u64,
+    buf: &[f32],
+) -> Result<()> {
+    let t = tag::BCAST ^ ((step as u32) & 0xFFFF);
+    for &d in dests {
+        let mut e = Enc::with_capacity(8 + buf.len() * 4);
+        e.f32s(buf);
+        net.send(d, t, e.into_bytes())?;
+    }
+    Ok(())
+}
+
+/// Receive a broadcast model from `src`.
+pub fn broadcast_recv<N: PointToPoint>(
+    net: &mut N,
+    src: u32,
+    step: u64,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let t = tag::BCAST ^ ((step as u32) & 0xFFFF);
+    let payload = net.recv_from(src, t, timeout)?;
+    Ok(Dec::new(&payload).f32s()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InProcHub;
+    use crate::util::{prop, rng::Pcg};
+
+    const T: Duration = Duration::from_secs(20);
+
+    fn run_allreduce(n: usize, len: usize, seed: u64, weighted: bool) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let hub = InProcHub::new();
+        let ring: Vec<u32> = (0..n as u32).collect();
+        let mut rng = Pcg::seeded(seed);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let weights: Vec<f32> = if weighted {
+            let raw: Vec<f32> = (0..n).map(|_| 0.1 + rng.f64() as f32).collect();
+            let s: f32 = raw.iter().sum();
+            raw.iter().map(|w| w / s).collect()
+        } else {
+            vec![1.0; n]
+        };
+        let mut expected = vec![0f32; len];
+        for (inp, w) in inputs.iter().zip(&weights) {
+            for (e, x) in expected.iter_mut().zip(inp) {
+                *e += *x * *w;
+            }
+        }
+        // join ALL endpoints before any thread starts (otherwise an early
+        // sender races a not-yet-registered peer)
+        let eps: Vec<_> = (0..n).map(|i| hub.join(i as u32)).collect();
+        let outputs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    let ring = ring.clone();
+                    let mut buf = inputs[i].clone();
+                    let w = weights[i];
+                    s.spawn(move || {
+                        ring_allreduce(&mut ep, &ring, 7, &mut buf, w, T).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        (outputs, expected)
+    }
+
+    #[test]
+    fn two_workers_sum() {
+        let (outs, expected) = run_allreduce(2, 10, 1, false);
+        for o in &outs {
+            for (a, b) in o.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn many_workers_uneven_chunks() {
+        // len not divisible by n exercises the remainder chunks
+        let (outs, expected) = run_allreduce(5, 103, 2, false);
+        for o in &outs {
+            for (a, b) in o.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let hub = InProcHub::new();
+        let mut ep = hub.join(0);
+        let mut buf = vec![1.0f32, 2.0, 3.0];
+        ring_allreduce(&mut ep, &[0], 0, &mut buf, 1.0, T).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_mean_gradient() {
+        let (outs, expected) = run_allreduce(4, 64, 3, true);
+        for o in &outs {
+            for (a, b) in o.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn len_smaller_than_ring() {
+        let (outs, expected) = run_allreduce(4, 3, 4, false);
+        for o in &outs {
+            for (a, b) in o.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_partition_exactly() {
+        prop::check("chunks-partition", 100, |rng| {
+            let len = rng.gen_range(10_000) as usize;
+            let n = 1 + rng.gen_range(32) as usize;
+            let cs = chunks(len, n);
+            if cs.len() != n {
+                return Err("wrong count".into());
+            }
+            let mut pos = 0;
+            for &(a, b) in &cs {
+                if a != pos || b < a {
+                    return Err(format!("bad chunk ({a},{b}) at pos {pos}"));
+                }
+                pos = b;
+            }
+            if pos != len {
+                return Err("doesn't cover".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allreduce_agreement_property() {
+        // all workers end with identical buffers equal to the weighted sum
+        prop::check("allreduce-agreement", 8, |rng| {
+            let n = 2 + rng.gen_range(5) as usize;
+            let len = 1 + rng.gen_range(300) as usize;
+            let (outs, expected) = run_allreduce(n, len, rng.next_u64(), true);
+            for o in &outs {
+                for (i, (a, b)) in o.iter().zip(&expected).enumerate() {
+                    if (a - b).abs() > 1e-3 {
+                        return Err(format!("elt {i}: {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn consecutive_steps_do_not_crosstalk() {
+        // run two allreduces back-to-back on the same endpoints with
+        // different step ids; results must both be exact
+        let hub = InProcHub::new();
+        let ring: Vec<u32> = vec![0, 1, 2];
+        let eps: Vec<_> = (0..3).map(|i| hub.join(i as u32)).collect();
+        let outs: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+            eps.into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    let ring = ring.clone();
+                    s.spawn(move || {
+                        let mut b1 = vec![i as f32; 8];
+                        ring_allreduce(&mut ep, &ring, 1, &mut b1, 1.0, T).unwrap();
+                        let mut b2 = vec![(i * 10) as f32; 8];
+                        ring_allreduce(&mut ep, &ring, 2, &mut b2, 1.0, T).unwrap();
+                        (b1, b2)
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for (b1, b2) in &outs {
+            assert!(b1.iter().all(|&x| (x - 3.0).abs() < 1e-6)); // 0+1+2
+            assert!(b2.iter().all(|&x| (x - 30.0).abs() < 1e-6)); // 0+10+20
+        }
+    }
+
+    #[test]
+    fn broadcast_to_joiners() {
+        let hub = InProcHub::new();
+        let model = vec![3.5f32; 1000];
+        let model2 = model.clone();
+        std::thread::scope(|s| {
+            let mut src = hub.join(0);
+            let mut j1 = hub.join(1);
+            let mut j2 = hub.join(2);
+            s.spawn(move || broadcast_send(&mut src, &[1, 2], 5, &model2).unwrap());
+            let r1 = s.spawn(move || broadcast_recv(&mut j1, 0, 5, T).unwrap());
+            let r2 = s.spawn(move || broadcast_recv(&mut j2, 0, 5, T).unwrap());
+            assert_eq!(r1.join().unwrap(), model);
+            assert_eq!(r2.join().unwrap(), model);
+        });
+    }
+
+    #[test]
+    fn not_in_ring_rejected() {
+        let hub = InProcHub::new();
+        let mut ep = hub.join(9);
+        let mut buf = vec![0f32; 4];
+        assert!(matches!(
+            ring_allreduce(&mut ep, &[0, 1], 0, &mut buf, 1.0, T),
+            Err(ArError::NotInRing)
+        ));
+    }
+}

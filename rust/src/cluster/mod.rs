@@ -1,0 +1,661 @@
+//! Discrete-event multi-tenant GPU-cluster simulator — the substrate for
+//! the paper's scheduling experiments (Fig 11, Fig 12, Table 4), playing
+//! the role of the Tiresias simulator the authors used (§6.3).
+//!
+//! Jobs progress at a rate derived from the calibrated device model
+//! (`gpu_sim`): a job running at parallelism `p` advances its work at
+//! `throughput(p) / throughput(p_requested)` wall-seconds per second.
+//! Scaling operations cost what the paper measured:
+//!
+//!  * stop-resume: the whole job pauses for `stop_resume_overhead`;
+//!  * EDL scale-out: the job keeps running at the old parallelism while
+//!    the joiners prepare (scale_out_e2e), then pauses briefly for the
+//!    model broadcast (edl_stop) before running at the new parallelism;
+//!  * EDL scale-in: the rate drops immediately; overhead is negligible.
+//!
+//! Schedulers plug in through the [`Scheduler`] trait and drive the
+//! cluster purely through `start / preempt / scale` actions.
+
+use crate::gpu_sim::{self, Dnn, HwConfig};
+use crate::metrics::TimeSeries;
+use crate::trace::TraceJob;
+
+/// How parallelism adjustments are charged (the §6 comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleMode {
+    /// EDL: stop-free scale-out + graceful-exit scale-in
+    Edl,
+    /// checkpoint + restart with the new parallelism
+    StopResume,
+    /// zero-overhead scaling (the Fig 10b "Ideal" upper bound)
+    Ideal,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    Pending,
+    /// running at `p`; if `paused_until > now` the job holds its GPUs but
+    /// makes no progress (scaling/restart overhead)
+    Running { p: u32, paused_until: f64 },
+    /// mid-EDL-scale-out: still training at `old_p`, `new_p` GPUs reserved;
+    /// at `ready_at` the job pauses `stop_s` then runs at `new_p`
+    ScalingOut { old_p: u32, new_p: u32, ready_at: f64 },
+    Finished { at: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    pub id: u64,
+    pub model: Dnn,
+    pub requested_p: u32,
+    pub submit_s: f64,
+    /// runtime at requested parallelism (s)
+    pub total_work_s: f64,
+    pub done_work_s: f64,
+    pub state: JobState,
+    /// GPU·s consumed so far (Tiresias priority input)
+    pub attained_gpu_s: f64,
+    /// Tiresias queue index
+    pub queue: usize,
+    /// user marked the job inelastic (§5.1)
+    pub elastic: bool,
+    /// per-machine allocation (machine index -> gpus)
+    pub placement: Vec<(usize, u32)>,
+    pub finish_s: Option<f64>,
+    /// count of scaling operations applied (for spike accounting)
+    pub n_scales: u32,
+}
+
+impl SimJob {
+    pub fn from_trace(t: &TraceJob) -> SimJob {
+        SimJob {
+            id: t.id,
+            model: t.model,
+            requested_p: t.gpus,
+            submit_s: t.submit_s,
+            total_work_s: t.duration_s(),
+            done_work_s: 0.0,
+            state: JobState::Pending,
+            attained_gpu_s: 0.0,
+            queue: 0,
+            elastic: true,
+            placement: Vec::new(),
+            finish_s: None,
+            n_scales: 0,
+        }
+    }
+
+    pub fn current_p(&self) -> u32 {
+        match self.state {
+            JobState::Running { p, .. } => p,
+            JobState::ScalingOut { old_p, new_p, .. } => old_p.max(new_p),
+            _ => 0,
+        }
+    }
+
+    /// parallelism actually training right now
+    pub fn training_p(&self, now: f64) -> u32 {
+        match self.state {
+            JobState::Running { p, paused_until } if paused_until <= now => p,
+            JobState::ScalingOut { old_p, .. } => old_p,
+            _ => 0,
+        }
+    }
+
+    pub fn global_batch(&self) -> u32 {
+        32 * self.requested_p
+    }
+
+    pub fn jct(&self) -> Option<f64> {
+        self.finish_s.map(|f| f - self.submit_s)
+    }
+}
+
+pub struct ClusterSim {
+    pub now: f64,
+    pub hw: HwConfig,
+    pub n_machines: usize,
+    /// free GPUs per machine
+    pub free: Vec<u32>,
+    pub jobs: Vec<SimJob>,
+    pub scale_mode: ScaleMode,
+    /// next arrival cursor into `jobs` (sorted by submit time)
+    next_arrival: usize,
+    pub util_ts: TimeSeries,
+    pub cluster_eff_ts: TimeSeries,
+    pub avg_gpu_eff_ts: TimeSeries,
+    sample_every_s: f64,
+    last_sample_s: f64,
+    /// max parallelism used for efficiency normalisation
+    pub max_p_norm: u32,
+}
+
+/// Scheduler plug-in: inspect the cluster and issue actions. Called after
+/// every event (arrival, finish, unpause, sample tick).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn replan(&mut self, sim: &mut ClusterSim);
+}
+
+impl ClusterSim {
+    pub fn new(n_machines: usize, gpus_per_machine: u32, trace: &[TraceJob], mode: ScaleMode) -> ClusterSim {
+        let mut jobs: Vec<SimJob> = trace.iter().map(SimJob::from_trace).collect();
+        jobs.sort_by(|a, b| a.submit_s.partial_cmp(&b.submit_s).unwrap());
+        let hw = HwConfig { gpus_per_machine, ..Default::default() };
+        ClusterSim {
+            now: 0.0,
+            hw,
+            n_machines,
+            free: vec![gpus_per_machine; n_machines],
+            jobs,
+            scale_mode: mode,
+            next_arrival: 0,
+            util_ts: TimeSeries::default(),
+            cluster_eff_ts: TimeSeries::default(),
+            avg_gpu_eff_ts: TimeSeries::default(),
+            sample_every_s: 30.0,
+            last_sample_s: -1.0,
+            max_p_norm: 64,
+        }
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.n_machines as u32 * self.hw.gpus_per_machine
+    }
+
+    pub fn free_gpus(&self) -> u32 {
+        self.free.iter().sum()
+    }
+
+    pub fn allocated_gpus(&self) -> u32 {
+        self.total_gpus() - self.free_gpus()
+    }
+
+    /// ids of jobs submitted and not finished, split by state
+    pub fn pending_jobs(&self) -> Vec<usize> {
+        (0..self.jobs.len())
+            .filter(|&i| {
+                self.jobs[i].submit_s <= self.now && matches!(self.jobs[i].state, JobState::Pending)
+            })
+            .collect()
+    }
+
+    pub fn running_jobs(&self) -> Vec<usize> {
+        (0..self.jobs.len())
+            .filter(|&i| {
+                matches!(self.jobs[i].state, JobState::Running { .. } | JobState::ScalingOut { .. })
+            })
+            .collect()
+    }
+
+    // -- placement ----------------------------------------------------------
+
+    /// Allocate `p` GPUs with best-fit machine packing; respects the R1
+    /// locality constraint (≤ ceil(p/m) machines) approximately by filling
+    /// the emptiest-fitting machines first. Returns None if impossible.
+    fn allocate(&mut self, p: u32) -> Option<Vec<(usize, u32)>> {
+        if p > self.free_gpus() {
+            return None;
+        }
+        let mut need = p;
+        let mut placement = Vec::new();
+        // fill machines with most free GPUs first (minimises fragmentation)
+        let mut order: Vec<usize> = (0..self.n_machines).collect();
+        order.sort_by_key(|&m| std::cmp::Reverse(self.free[m]));
+        for m in order {
+            if need == 0 {
+                break;
+            }
+            let take = self.free[m].min(need);
+            if take > 0 {
+                self.free[m] -= take;
+                placement.push((m, take));
+                need -= take;
+            }
+        }
+        debug_assert_eq!(need, 0);
+        Some(placement)
+    }
+
+    fn release(&mut self, placement: &[(usize, u32)]) {
+        for &(m, g) in placement {
+            self.free[m] += g;
+        }
+    }
+
+    /// Release `count` GPUs from a job's placement (most fragmented first).
+    fn release_partial(&mut self, job: usize, count: u32) {
+        let mut need = count;
+        let mut placement = std::mem::take(&mut self.jobs[job].placement);
+        placement.sort_by_key(|&(_, g)| g); // shed from smallest shards
+        let mut kept = Vec::new();
+        for (m, g) in placement {
+            if need == 0 {
+                kept.push((m, g));
+            } else {
+                let take = g.min(need);
+                self.free[m] += take;
+                need -= take;
+                if g > take {
+                    kept.push((m, g - take));
+                }
+            }
+        }
+        assert_eq!(need, 0, "released more GPUs than allocated");
+        self.jobs[job].placement = kept;
+    }
+
+    // -- scheduler actions ----------------------------------------------------
+
+    /// Start a pending job at parallelism `p`. Cold starts always pay
+    /// context preparation (launch-up), regardless of scale mode.
+    pub fn start_job(&mut self, job: usize, p: u32) -> bool {
+        assert!(matches!(self.jobs[job].state, JobState::Pending));
+        let Some(placement) = self.allocate(p) else { return false };
+        let model = self.jobs[job].model;
+        let launch = match self.scale_mode {
+            ScaleMode::Ideal => 0.0,
+            // launch-up ≈ context preparation for `p` workers
+            _ => gpu_sim::scale_out_breakdown(model, p).context_prep_s,
+        };
+        self.jobs[job].placement = placement;
+        self.jobs[job].state = JobState::Running { p, paused_until: self.now + launch };
+        true
+    }
+
+    /// Preempt a running job back to the pending queue (Tiresias).
+    pub fn preempt_job(&mut self, job: usize) {
+        let placement = std::mem::take(&mut self.jobs[job].placement);
+        self.release(&placement);
+        self.jobs[job].state = JobState::Pending;
+    }
+
+    /// Adjust parallelism of a running job. Returns false if GPUs are not
+    /// available (scale-out) or the job isn't running.
+    pub fn scale_job(&mut self, job: usize, new_p: u32) -> bool {
+        let JobState::Running { p, paused_until } = self.jobs[job].state else {
+            return false;
+        };
+        if paused_until > self.now || new_p == p || new_p == 0 {
+            return false;
+        }
+        let model = self.jobs[job].model;
+        self.jobs[job].n_scales += 1;
+        if new_p > p {
+            let added = new_p - p;
+            let Some(extra) = self.allocate(added) else {
+                self.jobs[job].n_scales -= 1;
+                return false;
+            };
+            self.jobs[job].placement.extend(extra);
+            match self.scale_mode {
+                ScaleMode::Ideal => {
+                    self.jobs[job].state = JobState::Running { p: new_p, paused_until: self.now };
+                }
+                ScaleMode::Edl => {
+                    // stop-free: keep training at p while joiners prepare
+                    let ready = self.now + gpu_sim::edl_scale_out_e2e(model);
+                    self.jobs[job].state = JobState::ScalingOut { old_p: p, new_p, ready_at: ready };
+                }
+                ScaleMode::StopResume => {
+                    let t = gpu_sim::stop_resume_overhead(model, new_p);
+                    self.jobs[job].state =
+                        JobState::Running { p: new_p, paused_until: self.now + t };
+                }
+            }
+        } else {
+            let removed = p - new_p;
+            self.release_partial(job, removed);
+            match self.scale_mode {
+                ScaleMode::Ideal | ScaleMode::Edl => {
+                    // graceful exit: negligible overhead (§4.2)
+                    self.jobs[job].state = JobState::Running { p: new_p, paused_until: self.now };
+                }
+                ScaleMode::StopResume => {
+                    let t = gpu_sim::stop_resume_overhead(model, new_p);
+                    self.jobs[job].state =
+                        JobState::Running { p: new_p, paused_until: self.now + t };
+                }
+            }
+        }
+        true
+    }
+
+    // -- dynamics -------------------------------------------------------------
+
+    /// progress rate (work-seconds per wall-second) of job i at `now`
+    fn rate(&self, i: usize) -> f64 {
+        let j = &self.jobs[i];
+        let tp = j.training_p(self.now);
+        if tp == 0 {
+            return 0.0;
+        }
+        let b = j.global_batch();
+        gpu_sim::throughput(j.model, tp, b, &self.hw)
+            / gpu_sim::throughput(j.model, j.requested_p, b, &self.hw)
+    }
+
+    /// next state-change time strictly after `now` that the dynamics know
+    /// about (arrival, finish, unpause, scale-out ready, sample tick)
+    fn next_event_time(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        if self.next_arrival < self.jobs.len() {
+            // jobs sorted by submit; find next submit > now
+            for j in &self.jobs[self.next_arrival..] {
+                if j.submit_s > self.now {
+                    t = t.min(j.submit_s);
+                    break;
+                }
+            }
+        }
+        for i in 0..self.jobs.len() {
+            match self.jobs[i].state {
+                JobState::Running { paused_until, .. } => {
+                    if paused_until > self.now {
+                        t = t.min(paused_until);
+                    } else {
+                        let r = self.rate(i);
+                        if r > 0.0 {
+                            let remain = self.jobs[i].total_work_s - self.jobs[i].done_work_s;
+                            t = t.min(self.now + remain / r);
+                        }
+                    }
+                }
+                JobState::ScalingOut { ready_at, .. } => {
+                    t = t.min(ready_at);
+                    let r = self.rate(i);
+                    if r > 0.0 {
+                        let remain = self.jobs[i].total_work_s - self.jobs[i].done_work_s;
+                        t = t.min(self.now + remain / r);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // metric sampling tick
+        t = t.min(self.last_sample_s.max(0.0) + self.sample_every_s);
+        if t.is_finite() {
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        let dt = t - self.now;
+        debug_assert!(dt >= -1e-9);
+        if dt > 0.0 {
+            for i in 0..self.jobs.len() {
+                let r = self.rate(i);
+                let tp = self.jobs[i].training_p(self.now);
+                if r > 0.0 {
+                    self.jobs[i].done_work_s =
+                        (self.jobs[i].done_work_s + r * dt).min(self.jobs[i].total_work_s);
+                }
+                // attained service counts held GPUs (Tiresias semantics)
+                let held = self.jobs[i].current_p();
+                let _ = tp;
+                if held > 0 {
+                    self.jobs[i].attained_gpu_s += held as f64 * dt;
+                }
+            }
+        }
+        self.now = t;
+    }
+
+    fn handle_transitions(&mut self) {
+        for i in 0..self.jobs.len() {
+            // arrivals handled implicitly via pending_jobs(); advance cursor
+            match self.jobs[i].state.clone() {
+                JobState::ScalingOut { old_p: _, new_p, ready_at } if ready_at <= self.now => {
+                    let stop = match self.scale_mode {
+                        ScaleMode::Edl => gpu_sim::edl_stop_time(self.jobs[i].model),
+                        _ => 0.0,
+                    };
+                    self.jobs[i].state =
+                        JobState::Running { p: new_p, paused_until: self.now + stop };
+                }
+                _ => {}
+            }
+            // completion
+            if matches!(self.jobs[i].state, JobState::Running { .. } | JobState::ScalingOut { .. })
+                && self.jobs[i].done_work_s >= self.jobs[i].total_work_s - 1e-9
+            {
+                let placement = std::mem::take(&mut self.jobs[i].placement);
+                self.release(&placement);
+                self.jobs[i].state = JobState::Finished { at: self.now };
+                self.jobs[i].finish_s = Some(self.now);
+            }
+        }
+        while self.next_arrival < self.jobs.len()
+            && self.jobs[self.next_arrival].submit_s <= self.now
+        {
+            self.next_arrival += 1;
+        }
+    }
+
+    fn sample_metrics(&mut self) {
+        if self.now - self.last_sample_s < self.sample_every_s - 1e-9 {
+            return;
+        }
+        self.last_sample_s = self.now;
+        let total = self.total_gpus() as f64;
+        let util = self.allocated_gpus() as f64 / total;
+        // per-GPU efficiency: training GPUs get efficiency(model, p);
+        // paused/preparing GPUs contribute 0 (the Fig 11 spikes)
+        let mut eff_sum = 0.0;
+        let mut active = 0.0;
+        for i in 0..self.jobs.len() {
+            let j = &self.jobs[i];
+            let tp = j.training_p(self.now);
+            if tp > 0 {
+                let e = gpu_sim::efficiency(j.model, tp, j.global_batch(), self.max_p_norm, &self.hw);
+                eff_sum += e * tp as f64;
+            }
+            active += j.current_p() as f64;
+        }
+        self.util_ts.push(self.now, util);
+        self.cluster_eff_ts.push(self.now, eff_sum / total);
+        self.avg_gpu_eff_ts.push(self.now, if active > 0.0 { eff_sum / active } else { 0.0 });
+    }
+
+    /// Run until every job finishes (or `max_t`), calling the scheduler
+    /// after each event.
+    pub fn run(&mut self, sched: &mut dyn Scheduler, max_t: f64) {
+        sched.replan(self);
+        self.sample_metrics();
+        let mut guard = 0u64;
+        while let Some(t) = self.next_event_time() {
+            guard += 1;
+            assert!(guard < 50_000_000, "simulator event-loop runaway");
+            if t > max_t {
+                self.advance_to(max_t);
+                self.handle_transitions();
+                break;
+            }
+            self.advance_to(t);
+            self.handle_transitions();
+            sched.replan(self);
+            self.handle_transitions(); // a replan may complete/transition
+            self.sample_metrics();
+            if self.jobs.iter().all(|j| matches!(j.state, JobState::Finished { .. })) {
+                break;
+            }
+        }
+    }
+
+    pub fn jcts(&self) -> Vec<f64> {
+        self.jobs.iter().filter_map(|j| j.jct()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedulers::FifoScheduler;
+    use crate::trace::TraceJob;
+
+    fn mk_trace(n: usize, gap: f64, gpus: u32, dur: f64) -> Vec<TraceJob> {
+        (0..n)
+            .map(|i| TraceJob {
+                id: i as u64,
+                submit_s: i as f64 * gap,
+                gpus,
+                service_gpu_s: dur * gpus as f64,
+                model: Dnn::ResNet50,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let trace = mk_trace(1, 0.0, 4, 100.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        let mut sched = FifoScheduler::default();
+        sim.run(&mut sched, 1e7);
+        let j = &sim.jobs[0];
+        assert!(matches!(j.state, JobState::Finished { .. }));
+        // Ideal mode: no launch overhead, so JCT == duration
+        assert!((j.jct().unwrap() - 100.0).abs() < 1.0, "jct={:?}", j.jct());
+        assert_eq!(sim.free_gpus(), 8);
+    }
+
+    #[test]
+    fn launch_overhead_charged_outside_ideal() {
+        let trace = mk_trace(1, 0.0, 4, 100.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Edl);
+        let mut sched = FifoScheduler::default();
+        sim.run(&mut sched, 1e7);
+        let jct = sim.jobs[0].jct().unwrap();
+        assert!(jct > 110.0, "launch-up should delay completion: {jct}");
+    }
+
+    #[test]
+    fn queueing_when_cluster_full() {
+        // 3 jobs of 8 GPUs on an 8-GPU machine: must serialise
+        let trace = mk_trace(3, 1.0, 8, 50.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        let mut sched = FifoScheduler::default();
+        sim.run(&mut sched, 1e7);
+        let jcts = sim.jcts();
+        assert_eq!(jcts.len(), 3);
+        let mut finishes: Vec<f64> = sim.jobs.iter().map(|j| j.finish_s.unwrap()).collect();
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(finishes[1] >= finishes[0] + 49.0);
+        assert!(finishes[2] >= finishes[1] + 49.0);
+    }
+
+    #[test]
+    fn scale_out_ideal_speeds_up_job() {
+        let trace = mk_trace(1, 0.0, 2, 100.0);
+        // scheduler that scales the job to 4 GPUs immediately
+        struct ScaleUp;
+        impl Scheduler for ScaleUp {
+            fn name(&self) -> &'static str {
+                "scale-up"
+            }
+            fn replan(&mut self, sim: &mut ClusterSim) {
+                for i in sim.pending_jobs() {
+                    sim.start_job(i, 2);
+                }
+                for i in sim.running_jobs() {
+                    if sim.jobs[i].current_p() == 2 {
+                        sim.scale_job(i, 4);
+                    }
+                }
+            }
+        }
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        sim.run(&mut ScaleUp, 1e7);
+        let jct = sim.jobs[0].jct().unwrap();
+        assert!(jct < 100.0, "scaled job should finish faster: {jct}");
+        assert_eq!(sim.free_gpus(), 8);
+    }
+
+    #[test]
+    fn edl_scale_out_keeps_training_during_prep() {
+        let trace = mk_trace(1, 0.0, 2, 200.0);
+        struct ScaleOnce(bool);
+        impl Scheduler for ScaleOnce {
+            fn name(&self) -> &'static str {
+                "once"
+            }
+            fn replan(&mut self, sim: &mut ClusterSim) {
+                for i in sim.pending_jobs() {
+                    sim.start_job(i, 2);
+                }
+                if !self.0 {
+                    for i in sim.running_jobs() {
+                        if let JobState::Running { paused_until, .. } = sim.jobs[i].state {
+                            if paused_until <= sim.now && sim.scale_job(i, 4) {
+                                self.0 = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut edl = ClusterSim::new(1, 8, &trace, ScaleMode::Edl);
+        edl.run(&mut ScaleOnce(false), 1e7);
+        let mut sr = ClusterSim::new(1, 8, &trace, ScaleMode::StopResume);
+        sr.run(&mut ScaleOnce(false), 1e7);
+        let jct_edl = edl.jobs[0].jct().unwrap();
+        let jct_sr = sr.jobs[0].jct().unwrap();
+        assert!(
+            jct_edl < jct_sr,
+            "EDL scaling must beat stop-resume: edl={jct_edl:.1} sr={jct_sr:.1}"
+        );
+        assert_eq!(edl.jobs[0].n_scales, 1);
+    }
+
+    #[test]
+    fn scale_in_releases_gpus() {
+        let trace = mk_trace(1, 0.0, 4, 1000.0);
+        struct ShrinkOnce(bool);
+        impl Scheduler for ShrinkOnce {
+            fn name(&self) -> &'static str {
+                "shrink"
+            }
+            fn replan(&mut self, sim: &mut ClusterSim) {
+                for i in sim.pending_jobs() {
+                    sim.start_job(i, 4);
+                }
+                if !self.0 && sim.now > 50.0 {
+                    for i in sim.running_jobs() {
+                        if sim.scale_job(i, 2) {
+                            self.0 = true;
+                        }
+                    }
+                }
+            }
+        }
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Edl);
+        // don't run to completion; stop mid-flight and check allocation
+        sim.run(&mut ShrinkOnce(false), 200.0);
+        assert_eq!(sim.jobs[0].current_p(), 2);
+        assert_eq!(sim.free_gpus(), 6);
+    }
+
+    #[test]
+    fn metrics_sampled() {
+        let trace = mk_trace(2, 10.0, 4, 120.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        sim.run(&mut FifoScheduler::default(), 1e7);
+        assert!(sim.util_ts.len() > 3);
+        assert!(sim.cluster_eff_ts.len() == sim.util_ts.len());
+        // utilization peaked at 1.0 while both jobs ran
+        let peak = sim.util_ts.points.iter().map(|&(_, v)| v).fold(0.0, f64::max);
+        assert!(peak >= 0.99, "peak={peak}");
+    }
+
+    #[test]
+    fn preempt_requeues_job() {
+        let trace = mk_trace(1, 0.0, 4, 500.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        sim.start_job(0, 4);
+        assert_eq!(sim.free_gpus(), 4);
+        sim.preempt_job(0);
+        assert_eq!(sim.free_gpus(), 8);
+        assert!(matches!(sim.jobs[0].state, JobState::Pending));
+    }
+}

@@ -1,0 +1,1037 @@
+//! The EDL coordination layer (the paper's contribution, §3–§4): a leader
+//! that manages an elastic set of training workers with
+//!
+//!  * **stop-free scale-out** — joiners prepare their execution context
+//!    while training continues; the switch happens at a *future
+//!    mini-batch timestamp* `t_cur + k` (k sized from a 500 ms allowance,
+//!    §4.2) and one existing worker broadcasts the model;
+//!  * **graceful-exit scale-in** — leavers hand their unprocessed data
+//!    back at the agreed boundary; remaining workers never stop;
+//!  * **merged migration** — scale-in + scale-out with ONE topology switch;
+//!  * **straggler mitigation** — per-worker step times arrive with every
+//!    gradient-sync request; consistent laggards are scaled in (§5.2);
+//!  * **failure recovery** — approximate (drop the dead worker, repair the
+//!    ring, redo the mini-batch) or consistent (restore from checkpoint),
+//!    selected via `USE_APPX_RECOVERY` (§4.2);
+//!  * **dynamic data pipeline** — the leader owns the partition permutation
+//!    and hands shards out on demand (§4.3, see `data::Assigner`).
+//!
+//! The leader here runs as a dedicated coordination thread (the §4.1
+//! "application master" alternative the paper discusses; worker-attached
+//! leadership and re-election are exercised against `coordsvc` in its own
+//! tests and benches, since in-process threads share fate anyway).
+
+use crate::data::corpus::Corpus;
+use crate::data::{Assigner, PartitionMeta, PartitionTable};
+use crate::transport::{InProcHub, NodeId};
+use crate::util::now_ms;
+use crate::wire::{Dec, Enc};
+use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// control-plane messages (typed channels; the TCP wire forms live in `rpc`)
+// ---------------------------------------------------------------------------
+
+/// worker → leader events
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// plumbing: the spawner attaches the worker's control mailbox
+    Attach { id: NodeId, machine: String, ctrl: Sender<CtrlMsg>, knobs: Arc<WorkerKnobs>, joiner: bool },
+    Register { id: NodeId, machine: String },
+    Ready { id: NodeId },
+    Sync { id: NodeId, step: u64, loss: f32, weight: f32, step_ms: f64, shard: Option<(u64, u64)> },
+    NeedPartition { id: NodeId },
+    ShardDone { id: NodeId },
+    Goodbye { id: NodeId, shard: Option<(u64, u64)> },
+    Params { id: NodeId, step: u64, params: Vec<f32> },
+}
+
+/// leader → worker control messages
+#[derive(Debug, Clone)]
+pub enum CtrlMsg {
+    Ok { join_at_step: u64, ring: Arc<Vec<NodeId>>, local_batch: u32, broadcast_src: NodeId },
+    Assign { meta: PartitionMeta },
+    NoData,
+    SyncGo { ring: Arc<Vec<NodeId>>, sync_tag: u64, switch: Option<SwitchPlan> },
+    SendParams,
+    Restore { params: Arc<Vec<f32>>, at_step: u64 },
+    Stop,
+}
+
+/// A committed topology switch (§4.2): executed by every worker at the end
+/// of mini-batch `at_step − 1`.
+#[derive(Debug, Clone)]
+pub struct SwitchPlan {
+    pub at_step: u64,
+    pub ring: Arc<Vec<NodeId>>,
+    pub local_batch: u32,
+    pub broadcast_src: NodeId,
+    pub joiners: Vec<NodeId>,
+    pub exiting: Vec<NodeId>,
+}
+
+/// scheduler-facing commands (Table 1 API)
+#[derive(Debug)]
+pub enum Cmd {
+    ScaleOut { machines: Vec<String> },
+    ScaleIn { ids: Vec<NodeId> },
+    Migrate { remove: Vec<NodeId>, add: Vec<String> },
+    Status,
+    FetchParams,
+    Checkpoint { path: PathBuf },
+    Restore { path: PathBuf },
+    Stop,
+}
+
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Ack,
+    /// an adjustment is already in flight (§3.1) — retry later
+    Retry,
+    Status(Status),
+    Params(Vec<f32>),
+    Err(String),
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Status {
+    pub parallelism: u32,
+    pub step: u64,
+    pub epoch: u64,
+    pub throughput_sps: f64,
+    pub last_loss: f32,
+    pub workers: Vec<NodeId>,
+}
+
+/// One entry of the training log.
+#[derive(Debug, Clone)]
+pub struct LossPoint {
+    pub step: u64,
+    pub loss: f32,
+    pub parallelism: u32,
+    pub wall_ms: f64,
+}
+
+/// Timeline events for experiment post-processing.
+#[derive(Debug, Clone)]
+pub struct EngineEvent {
+    pub wall_ms: f64,
+    pub step: u64,
+    pub what: String,
+}
+
+/// Final report returned by [`ElasticTrainer::stop`].
+#[derive(Debug, Default)]
+pub struct TrainReport {
+    pub loss_history: Vec<LossPoint>,
+    pub events: Vec<EngineEvent>,
+    pub steps: u64,
+    pub epochs: u64,
+}
+
+// ---------------------------------------------------------------------------
+// configuration
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+pub struct TrainerConfig {
+    /// aggregate batch size, constant under scaling (§3.1)
+    pub agg_batch: u32,
+    pub lr: f32,
+    pub n_partitions: u64,
+    pub seed: u64,
+    /// timestamp allowance T_a (ms) for scheduling switches (§4.2)
+    pub switch_allowance_ms: f64,
+    /// barrier timeout before a silent worker is declared dead
+    pub failure_timeout: Duration,
+    /// automatic straggler scale-in (§5.2)
+    pub straggler_mitigation: bool,
+    /// straggler threshold: step time > `ratio` × group median ...
+    pub straggler_ratio: f64,
+    /// ... for `window` consecutive mini-batches
+    pub straggler_window: u32,
+    /// approximate (true) vs consistent (false) failure recovery;
+    /// None = read `USE_APPX_RECOVERY` env (paper default: consistent)
+    pub approx_recovery: Option<bool>,
+    /// checkpoint file used by consistent recovery
+    pub checkpoint_path: Option<PathBuf>,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            agg_batch: 32,
+            lr: 0.1,
+            n_partitions: 64,
+            seed: 7,
+            switch_allowance_ms: 500.0,
+            failure_timeout: Duration::from_secs(30),
+            straggler_mitigation: false,
+            straggler_ratio: 1.2,
+            straggler_window: 10,
+            approx_recovery: None,
+            checkpoint_path: None,
+        }
+    }
+}
+
+impl TrainerConfig {
+    fn use_approx_recovery(&self) -> bool {
+        self.approx_recovery.unwrap_or_else(|| {
+            std::env::var("USE_APPX_RECOVERY").map(|v| v == "1" || v == "true").unwrap_or(false)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// leader
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum WState {
+    Joining { ready: bool },
+    Active,
+}
+
+struct WInfo {
+    ctrl: Sender<CtrlMsg>,
+    #[allow(dead_code)] // recorded for operator visibility / future placement logic
+    machine: String,
+    #[allow(dead_code)]
+    knobs: Arc<WorkerKnobs>,
+    state: WState,
+    step_times: std::collections::VecDeque<f64>,
+    straggle_hits: u32,
+}
+
+struct SyncInfo {
+    loss: f32,
+    weight: f32,
+    #[allow(dead_code)] // per-step time also lands in WInfo::step_times
+    step_ms: f64,
+}
+
+enum LeaderIn {
+    W(WorkerEvent),
+    C(Cmd, Sender<Reply>),
+}
+
+/// Spawns a worker thread; must send `WorkerEvent::Attach` before the
+/// worker's own `Register`.
+type Spawner = Arc<dyn Fn(NodeId, String, bool) + Send + Sync>;
+
+struct Leader {
+    cfg: TrainerConfig,
+    backend: Arc<dyn Backend>,
+    rx: Receiver<LeaderIn>,
+    spawner: Spawner,
+    /// founding-worker count: the job must not start before ALL founders
+    /// have attached AND prepared (on a loaded host a founder's thread can
+    /// lag arbitrarily behind its siblings)
+    expected_founders: usize,
+    workers: BTreeMap<NodeId, WInfo>,
+    active: Vec<NodeId>,
+    ring: Arc<Vec<NodeId>>,
+    ring_version: u64,
+    step: u64,
+    started: bool,
+    assigner: Assigner,
+    sync_waiting: HashMap<NodeId, SyncInfo>,
+    barrier_open_at: Option<Instant>,
+    plan: Option<SwitchPlan>,
+    op_reply: Option<Sender<Reply>>,
+    /// pending scale-out joiners not yet Ready
+    joining: Vec<NodeId>,
+    /// exit set for a migrate/scale-in combined op
+    op_exiting: Vec<NodeId>,
+    ckpt_reply: Option<(PathBuf, Sender<Reply>)>,
+    fetch_reply: Option<Sender<Reply>>,
+    stop_reply: Option<Sender<Reply>>,
+    report: TrainReport,
+    recent_barriers: std::collections::VecDeque<(Instant, f64)>,
+    last_loss: f32,
+    stopping: bool,
+}
+
+impl Leader {
+    fn local_batch_for(&self, p: u32) -> u32 {
+        let want = (self.cfg.agg_batch / p.max(1)).max(1);
+        self.backend.pick_batch(want).unwrap_or(1)
+    }
+
+    /// k = ceil(T_a / T_b), clamped (§4.2)
+    fn switch_k(&self) -> u64 {
+        let avg_step_ms = if self.recent_barriers.len() >= 2 {
+            let dts: Vec<f64> = self
+                .recent_barriers
+                .iter()
+                .zip(self.recent_barriers.iter().skip(1))
+                .map(|((a, _), (b, _))| (*b - *a).as_secs_f64() * 1e3)
+                .collect();
+            crate::util::stats::median(&dts).max(0.1)
+        } else {
+            100.0
+        };
+        ((self.cfg.switch_allowance_ms / avg_step_ms).ceil() as u64).clamp(1, 64)
+    }
+
+    fn event(&mut self, what: String) {
+        self.report.events.push(EngineEvent { wall_ms: now_ms(), step: self.step, what });
+    }
+
+    fn throughput_sps(&self) -> f64 {
+        if self.recent_barriers.len() < 2 {
+            return 0.0;
+        }
+        let (t0, _) = self.recent_barriers.front().unwrap();
+        let (t1, _) = self.recent_barriers.back().unwrap();
+        let samples: f64 = self.recent_barriers.iter().skip(1).map(|&(_, w)| w as f64).sum();
+        let dt = (*t1 - *t0).as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            samples / dt
+        }
+    }
+
+    fn send_ctrl(&self, id: NodeId, msg: CtrlMsg) {
+        if let Some(w) = self.workers.get(&id) {
+            let _ = w.ctrl.send(msg);
+        }
+    }
+
+    fn maybe_start_job(&mut self) {
+        if self.started {
+            return;
+        }
+        let founders: Vec<NodeId> = self.workers.keys().copied().collect();
+        if founders.len() < self.expected_founders
+            || !founders.iter().all(|id| {
+                matches!(self.workers[id].state, WState::Joining { ready: true })
+            })
+        {
+            return;
+        }
+        self.active = founders.clone();
+        self.ring = Arc::new(founders.clone());
+        let lb = self.local_batch_for(self.active.len() as u32);
+        for id in founders {
+            self.workers.get_mut(&id).unwrap().state = WState::Active;
+            self.send_ctrl(
+                id,
+                CtrlMsg::Ok { join_at_step: 0, ring: self.ring.clone(), local_batch: lb, broadcast_src: 0 },
+            );
+        }
+        self.started = true;
+        self.event(format!("job-start p={}", self.active.len()));
+    }
+
+    /// all current joiners ready → schedule the switch (stop-free commit)
+    fn maybe_commit_scale(&mut self) {
+        if self.joining.is_empty() && self.op_exiting.is_empty() {
+            return;
+        }
+        let all_ready = self
+            .joining
+            .iter()
+            .all(|id| matches!(self.workers[id].state, WState::Joining { ready: true }));
+        if !all_ready {
+            return;
+        }
+        let at_step = self.step + self.switch_k();
+        let mut new_ring: Vec<NodeId> =
+            self.active.iter().copied().filter(|id| !self.op_exiting.contains(id)).collect();
+        new_ring.extend(self.joining.iter().copied());
+        assert!(!new_ring.is_empty(), "scale-in would remove every worker");
+        let lb = self.local_batch_for(new_ring.len() as u32);
+        let broadcast_src = *self
+            .active
+            .iter()
+            .find(|id| !self.op_exiting.contains(id))
+            .expect("need one surviving worker to broadcast");
+        let plan = SwitchPlan {
+            at_step,
+            ring: Arc::new(new_ring),
+            local_batch: lb,
+            broadcast_src,
+            joiners: self.joining.clone(),
+            exiting: self.op_exiting.clone(),
+        };
+        for &j in &self.joining {
+            self.send_ctrl(
+                j,
+                CtrlMsg::Ok {
+                    join_at_step: at_step,
+                    ring: plan.ring.clone(),
+                    local_batch: lb,
+                    broadcast_src,
+                },
+            );
+        }
+        self.event(format!(
+            "switch-scheduled at_step={at_step} +{} -{} p_new={}",
+            plan.joiners.len(),
+            plan.exiting.len(),
+            plan.ring.len()
+        ));
+        self.plan = Some(plan);
+    }
+
+    /// barrier complete for `self.step`: reply SyncGo to all active
+    fn complete_barrier(&mut self) {
+        let wsum: f32 = self.sync_waiting.values().map(|s| s.weight).sum();
+        if wsum > 0.0 {
+            let loss: f32 =
+                self.sync_waiting.values().map(|s| s.loss * s.weight).sum::<f32>() / wsum;
+            self.last_loss = loss;
+            self.report.loss_history.push(LossPoint {
+                step: self.step,
+                loss,
+                parallelism: self.active.len() as u32,
+                wall_ms: now_ms(),
+            });
+        }
+        // straggler statistics (§5.2)
+        if self.cfg.straggler_mitigation && self.active.len() > 1 {
+            self.update_stragglers();
+        }
+        self.recent_barriers.push_back((Instant::now(), wsum as f64));
+        while self.recent_barriers.len() > 32 {
+            self.recent_barriers.pop_front();
+        }
+
+        let sync_tag = (self.ring_version << 24) | (self.step & 0xFF_FFFF);
+        let plan = self.plan.clone().filter(|p| p.at_step > self.step);
+        for id in self.active.clone() {
+            self.send_ctrl(
+                id,
+                CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: plan.clone() },
+            );
+        }
+        self.sync_waiting.clear();
+        self.barrier_open_at = None;
+        self.step += 1;
+
+        // commit the switch when the boundary is reached
+        if let Some(plan) = self.plan.clone() {
+            if self.step == plan.at_step {
+                for id in &plan.exiting {
+                    // Goodbye handles assigner return; drop from active below
+                    let _ = id;
+                }
+                self.active = (*plan.ring).clone();
+                self.ring = plan.ring.clone();
+                self.ring_version += 1;
+                for id in &plan.joiners {
+                    if let Some(w) = self.workers.get_mut(id) {
+                        w.state = WState::Active;
+                    }
+                }
+                self.joining.clear();
+                self.op_exiting.clear();
+                self.plan = None;
+                self.event(format!("switch-committed p={}", self.active.len()));
+                if let Some(r) = self.op_reply.take() {
+                    let _ = r.send(Reply::Ack);
+                }
+            }
+        }
+    }
+
+    fn update_stragglers(&mut self) {
+        let mut medians: Vec<(NodeId, f64)> = Vec::new();
+        for (&id, w) in &self.workers {
+            if w.state == WState::Active && !w.step_times.is_empty() {
+                let v: Vec<f64> = w.step_times.iter().copied().collect();
+                medians.push((id, crate::util::stats::median(&v)));
+            }
+        }
+        if medians.len() < 2 {
+            return;
+        }
+        let all: Vec<f64> = medians.iter().map(|&(_, m)| m).collect();
+        let group_median = crate::util::stats::median(&all);
+        let mut victim = None;
+        for &(id, m) in &medians {
+            let w = self.workers.get_mut(&id).unwrap();
+            if m > self.cfg.straggler_ratio * group_median
+                && w.step_times.len() >= self.cfg.straggler_window as usize
+            {
+                w.straggle_hits += 1;
+                if w.straggle_hits >= self.cfg.straggler_window {
+                    victim = Some(id);
+                }
+            } else {
+                w.straggle_hits = 0;
+            }
+        }
+        if let Some(id) = victim {
+            if self.plan.is_none() && self.joining.is_empty() && self.active.len() > 1 {
+                self.event(format!("straggler-detected worker={id}"));
+                self.op_exiting = vec![id];
+                self.workers.get_mut(&id).unwrap().straggle_hits = 0;
+                self.maybe_commit_scale();
+            }
+        }
+    }
+
+    /// detect dead workers at the barrier (§4.2 forced exit)
+    fn check_failures(&mut self) {
+        let Some(opened) = self.barrier_open_at else { return };
+        if opened.elapsed() < self.cfg.failure_timeout {
+            return;
+        }
+        let dead: Vec<NodeId> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|id| !self.sync_waiting.contains_key(id))
+            .collect();
+        if dead.is_empty() || dead.len() >= self.active.len() {
+            return;
+        }
+        self.event(format!("failure-detected dead={dead:?} step={}", self.step));
+        for &d in &dead {
+            self.assigner.worker_left(d);
+            self.workers.remove(&d);
+        }
+        self.active.retain(|id| !dead.contains(id));
+        self.ring = Arc::new(self.active.clone());
+        self.ring_version += 1;
+        // drop any in-flight plan that references dead workers
+        if let Some(p) = &self.plan {
+            if p.joiners.iter().chain(p.exiting.iter()).any(|id| dead.contains(id))
+                || dead.contains(&p.broadcast_src)
+            {
+                self.plan = None;
+                self.joining.clear();
+                self.op_exiting.clear();
+                if let Some(r) = self.op_reply.take() {
+                    let _ = r.send(Reply::Err("worker failed mid-operation".into()));
+                }
+            }
+        }
+
+        if !self.cfg.use_approx_recovery() {
+            if let Some(path) = self.cfg.checkpoint_path.clone() {
+                if path.exists() {
+                    if let Ok((at_step, params, asg)) = read_checkpoint(&path, self.cfg.seed) {
+                        self.event(format!("consistent-recovery restore step={at_step}"));
+                        self.assigner = asg;
+                        self.assigner.reset_in_flight();
+                        let params = Arc::new(params);
+                        self.sync_waiting.clear();
+                        self.barrier_open_at = None;
+                        self.step = at_step;
+                        for id in self.active.clone() {
+                            self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
+                        }
+                        return;
+                    }
+                }
+            }
+            self.event("consistent-recovery unavailable; falling back to approximate".into());
+        }
+        // approximate recovery: survivors redo the current mini-batch's
+        // allreduce on the repaired ring — reply to those already waiting
+        let sync_tag = (self.ring_version << 24) | (self.step & 0xFF_FFFF);
+        for (&id, _) in self.sync_waiting.iter() {
+            if let Some(w) = self.workers.get(&id) {
+                let _ = w
+                    .ctrl
+                    .send(CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: None });
+            }
+        }
+        // NOTE: waiting entries stay; stragglers of this step will re-Sync
+        // and the barrier completes normally on the repaired active set.
+        let survivors: Vec<NodeId> = self.sync_waiting.keys().copied().collect();
+        if survivors.len() == self.active.len() {
+            self.complete_barrier();
+        }
+    }
+
+    fn handle_worker(&mut self, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Attach { id, machine, ctrl, knobs, joiner } => {
+                self.workers.insert(
+                    id,
+                    WInfo {
+                        ctrl,
+                        machine,
+                        knobs,
+                        state: WState::Joining { ready: false },
+                        step_times: Default::default(),
+                        straggle_hits: 0,
+                    },
+                );
+                if joiner {
+                    self.joining.push(id);
+                }
+            }
+            WorkerEvent::Register { .. } => {}
+            WorkerEvent::Ready { id } => {
+                if let Some(w) = self.workers.get_mut(&id) {
+                    w.state = WState::Joining { ready: true };
+                }
+                if self.started {
+                    self.maybe_commit_scale();
+                } else {
+                    self.maybe_start_job();
+                }
+            }
+            WorkerEvent::Sync { id, step, loss, weight, step_ms, shard } => {
+                if step != self.step || !self.active.contains(&id) {
+                    // stale sync from a worker that was mid-recovery
+                    return;
+                }
+                if let Some((_pid, used)) = shard {
+                    self.assigner.report_progress(id, used);
+                }
+                if let Some(w) = self.workers.get_mut(&id) {
+                    w.step_times.push_back(step_ms);
+                    while w.step_times.len() > self.cfg.straggler_window as usize {
+                        w.step_times.pop_front();
+                    }
+                }
+                if self.sync_waiting.is_empty() {
+                    self.barrier_open_at = Some(Instant::now());
+                }
+                self.sync_waiting.insert(id, SyncInfo { loss, weight, step_ms });
+                if self.active.iter().all(|a| self.sync_waiting.contains_key(a)) {
+                    self.complete_barrier();
+                }
+            }
+            WorkerEvent::NeedPartition { id } => {
+                if self.assigner.pool_empty() {
+                    if self.assigner.epoch_exhausted() {
+                        self.assigner.advance_epoch();
+                        self.report.epochs = self.assigner.epoch;
+                        self.event(format!("epoch-advance -> {}", self.assigner.epoch));
+                    } else {
+                        self.send_ctrl(id, CtrlMsg::NoData);
+                        return;
+                    }
+                }
+                match self.assigner.next_partition(id) {
+                    Some(meta) => self.send_ctrl(id, CtrlMsg::Assign { meta }),
+                    None => self.send_ctrl(id, CtrlMsg::NoData),
+                }
+            }
+            WorkerEvent::ShardDone { id } => {
+                self.assigner.complete(id);
+            }
+            WorkerEvent::Goodbye { id, shard } => {
+                if let Some((_pid, used)) = shard {
+                    self.assigner.report_progress(id, used);
+                }
+                self.assigner.worker_left(id);
+                self.workers.remove(&id);
+                self.event(format!("goodbye worker={id}"));
+            }
+            WorkerEvent::Params { id: _, step, params } => {
+                if let Some((path, reply)) = self.ckpt_reply.take() {
+                    let mut e = Enc::with_capacity(params.len() * 4 + 256);
+                    e.u64(step);
+                    e.f32s(&params);
+                    self.assigner.encode(&mut e);
+                    match std::fs::write(&path, e.into_bytes()) {
+                        Ok(()) => {
+                            let _ = reply.send(Reply::Ack);
+                        }
+                        Err(err) => {
+                            let _ = reply.send(Reply::Err(err.to_string()));
+                        }
+                    }
+                }
+                if let Some(reply) = self.fetch_reply.take() {
+                    let _ = reply.send(Reply::Params(params));
+                }
+            }
+        }
+    }
+
+    fn handle_cmd(&mut self, cmd: Cmd, reply: Sender<Reply>) {
+        match cmd {
+            Cmd::ScaleOut { machines } => {
+                if self.plan.is_some() || !self.joining.is_empty() || !self.started {
+                    let _ = reply.send(Reply::Retry);
+                    return;
+                }
+                self.event(format!("scale-out-request n={}", machines.len()));
+                self.op_reply = Some(reply);
+                for m in machines {
+                    let id = next_node_id();
+                    (self.spawner)(id, m, true);
+                }
+            }
+            Cmd::ScaleIn { ids } => {
+                if self.plan.is_some() || !self.joining.is_empty() || !self.started {
+                    let _ = reply.send(Reply::Retry);
+                    return;
+                }
+                if ids.iter().any(|id| !self.active.contains(id)) {
+                    let _ = reply.send(Reply::Err("unknown worker".into()));
+                    return;
+                }
+                if ids.len() >= self.active.len() {
+                    let _ = reply.send(Reply::Err("cannot remove all workers".into()));
+                    return;
+                }
+                self.event(format!("scale-in-request ids={ids:?}"));
+                self.op_exiting = ids;
+                self.op_reply = Some(reply);
+                self.maybe_commit_scale();
+            }
+            Cmd::Migrate { remove, add } => {
+                if self.plan.is_some() || !self.joining.is_empty() || !self.started {
+                    let _ = reply.send(Reply::Retry);
+                    return;
+                }
+                if remove.len() >= self.active.len() + add.len() {
+                    let _ = reply.send(Reply::Err("migration would empty the job".into()));
+                    return;
+                }
+                self.event(format!("migrate-request -{} +{}", remove.len(), add.len()));
+                self.op_exiting = remove;
+                self.op_reply = Some(reply);
+                for m in add {
+                    let id = next_node_id();
+                    (self.spawner)(id, m, true);
+                }
+                // commit happens when all joiners are Ready — ONE switch
+            }
+            Cmd::Status => {
+                let _ = reply.send(Reply::Status(Status {
+                    parallelism: self.active.len() as u32,
+                    step: self.step,
+                    epoch: self.assigner.epoch,
+                    throughput_sps: self.throughput_sps(),
+                    last_loss: self.last_loss,
+                    workers: self.active.clone(),
+                }));
+            }
+            Cmd::FetchParams => {
+                if let Some(&src) = self.active.first() {
+                    self.fetch_reply = Some(reply);
+                    self.send_ctrl(src, CtrlMsg::SendParams);
+                } else {
+                    let _ = reply.send(Reply::Err("no active workers".into()));
+                }
+            }
+            Cmd::Checkpoint { path } => {
+                if let Some(&src) = self.active.first() {
+                    self.ckpt_reply = Some((path, reply));
+                    self.send_ctrl(src, CtrlMsg::SendParams);
+                } else {
+                    let _ = reply.send(Reply::Err("no active workers".into()));
+                }
+            }
+            Cmd::Restore { path } => match read_checkpoint(&path, self.cfg.seed) {
+                Ok((at_step, params, asg)) => {
+                    self.assigner = asg;
+                    self.assigner.reset_in_flight();
+                    self.step = at_step;
+                    self.sync_waiting.clear();
+                    self.barrier_open_at = None;
+                    let params = Arc::new(params);
+                    for id in self.active.clone() {
+                        self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
+                    }
+                    self.event(format!("manual-restore step={at_step}"));
+                    let _ = reply.send(Reply::Ack);
+                }
+                Err(e) => {
+                    let _ = reply.send(Reply::Err(e.to_string()));
+                }
+            },
+            Cmd::Stop => {
+                self.stopping = true;
+                for (_, w) in self.workers.iter() {
+                    let _ = w.ctrl.send(CtrlMsg::Stop);
+                }
+                self.stop_reply = Some(reply);
+            }
+        }
+    }
+
+    fn run(mut self) -> TrainReport {
+        loop {
+            match self.rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(LeaderIn::W(ev)) => self.handle_worker(ev),
+                Ok(LeaderIn::C(cmd, reply)) => self.handle_cmd(cmd, reply),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if !self.stopping {
+                        self.check_failures();
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            if self.stopping {
+                // drain replies then exit once workers are gone
+                if let Some(r) = self.stop_reply.take() {
+                    let _ = r.send(Reply::Ack);
+                }
+                // brief drain window for Goodbyes
+                let deadline = Instant::now() + Duration::from_millis(200);
+                while let Ok(msg) = self.rx.recv_timeout(
+                    deadline.saturating_duration_since(Instant::now()),
+                ) {
+                    if let LeaderIn::W(ev) = msg {
+                        if matches!(ev, WorkerEvent::Goodbye { .. } | WorkerEvent::Sync { .. }) {
+                            // ignore during shutdown
+                        }
+                    }
+                }
+                break;
+            }
+        }
+        self.report.steps = self.step;
+        self.report.epochs = self.assigner.epoch;
+        self.report
+    }
+}
+
+fn read_checkpoint(path: &std::path::Path, seed: u64) -> anyhow::Result<(u64, Vec<f32>, Assigner)> {
+    let bytes = std::fs::read(path)?;
+    let mut d = Dec::new(&bytes);
+    let step = d.u64()?;
+    let params = d.f32s()?;
+    let asg = Assigner::decode(&mut d, seed)?;
+    Ok((step, params, asg))
+}
+
+static NODE_IDS: AtomicU32 = AtomicU32::new(1);
+
+fn next_node_id() -> NodeId {
+    NODE_IDS.fetch_add(1, Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// engine
+// ---------------------------------------------------------------------------
+
+/// In-process elastic training engine: one leader thread + N worker
+/// threads over an `InProcHub` data plane. This is the programmable
+/// equivalent of `edl.init()` + the scheduler API of Table 1.
+pub struct ElasticTrainer {
+    tx: Sender<LeaderIn>,
+    leader: Option<std::thread::JoinHandle<TrainReport>>,
+    knobs: Arc<std::sync::Mutex<HashMap<NodeId, Arc<WorkerKnobs>>>>,
+    worker_threads: Arc<std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    pub hub: Arc<InProcHub>,
+}
+
+impl ElasticTrainer {
+    /// Launch a job with `n_workers` founding workers.
+    pub fn start(
+        cfg: TrainerConfig,
+        backend: Arc<dyn Backend>,
+        corpus: Arc<Corpus>,
+        n_workers: usize,
+    ) -> ElasticTrainer {
+        assert!(n_workers >= 1);
+        let hub = InProcHub::new();
+        let (tx, rx) = channel::<LeaderIn>();
+        let knobs_map: Arc<std::sync::Mutex<HashMap<NodeId, Arc<WorkerKnobs>>>> =
+            Arc::new(std::sync::Mutex::new(HashMap::new()));
+        let threads: Arc<std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+
+        let spawner: Spawner = {
+            let hub = hub.clone();
+            let backend = backend.clone();
+            let corpus = corpus.clone();
+            let tx = tx.clone();
+            let knobs_map = knobs_map.clone();
+            let threads = threads.clone();
+            let lr = cfg.lr;
+            Arc::new(move |id: NodeId, machine: String, joiner: bool| {
+                let knobs = WorkerKnobs::new();
+                knobs_map.lock().unwrap().insert(id, knobs.clone());
+                let (ctrl_tx, ctrl_rx) = channel::<CtrlMsg>();
+                let _ = tx.send(LeaderIn::W(WorkerEvent::Attach {
+                    id,
+                    machine: machine.clone(),
+                    ctrl: ctrl_tx,
+                    knobs: knobs.clone(),
+                    joiner,
+                }));
+                let net = hub.join(id);
+                let ctx = WorkerCtx {
+                    id,
+                    machine,
+                    backend: backend.clone(),
+                    corpus: corpus.clone(),
+                    net,
+                    to_leader: {
+                        let tx = tx.clone();
+                        let (wtx, wrx) = channel::<WorkerEvent>();
+                        // bridge worker events into the leader mailbox
+                        std::thread::spawn(move || {
+                            while let Ok(ev) = wrx.recv() {
+                                if tx.send(LeaderIn::W(ev)).is_err() {
+                                    break;
+                                }
+                            }
+                        });
+                        wtx
+                    },
+                    ctrl: ctrl_rx,
+                    lr,
+                    knobs,
+                    joiner,
+                    init_seed: 42,
+                };
+                let handle = std::thread::Builder::new()
+                    .name(format!("edl-worker-{id}"))
+                    .spawn(move || worker_loop(ctx))
+                    .expect("spawn worker");
+                threads.lock().unwrap().push(handle);
+            })
+        };
+
+        let corpus_samples = corpus.n_samples;
+        let table = PartitionTable::new(corpus_samples, cfg.n_partitions.min(corpus_samples));
+        let assigner = Assigner::new(table, cfg.seed);
+        let leader = Leader {
+            cfg,
+            backend,
+            rx,
+            spawner: spawner.clone(),
+            expected_founders: n_workers,
+            workers: BTreeMap::new(),
+            active: Vec::new(),
+            ring: Arc::new(Vec::new()),
+            ring_version: 0,
+            step: 0,
+            started: false,
+            assigner,
+            sync_waiting: HashMap::new(),
+            barrier_open_at: None,
+            plan: None,
+            op_reply: None,
+            joining: Vec::new(),
+            op_exiting: Vec::new(),
+            ckpt_reply: None,
+            fetch_reply: None,
+            stop_reply: None,
+            report: TrainReport::default(),
+            recent_barriers: Default::default(),
+            last_loss: f32::NAN,
+            stopping: false,
+        };
+        let leader_handle = std::thread::Builder::new()
+            .name("edl-leader".into())
+            .spawn(move || leader.run())
+            .expect("spawn leader");
+
+        for _ in 0..n_workers {
+            let id = next_node_id();
+            spawner(id, "m0".to_string(), false);
+        }
+
+        ElasticTrainer { tx, leader: Some(leader_handle), knobs: knobs_map, worker_threads: threads, hub }
+    }
+
+    /// Blocking command round-trip to the leader.
+    pub fn cmd(&self, cmd: Cmd) -> Reply {
+        let (rtx, rrx) = channel();
+        if self.tx.send(LeaderIn::C(cmd, rtx)).is_err() {
+            return Reply::Err("leader gone".into());
+        }
+        rrx.recv_timeout(Duration::from_secs(600)).unwrap_or(Reply::Err("timeout".into()))
+    }
+
+    pub fn status(&self) -> Status {
+        match self.cmd(Cmd::Status) {
+            Reply::Status(s) => s,
+            other => panic!("unexpected status reply {other:?}"),
+        }
+    }
+
+    /// `sclae_out` (sic, Table 1): add workers on the given machines.
+    pub fn scale_out(&self, machines: Vec<String>) -> Reply {
+        self.cmd(Cmd::ScaleOut { machines })
+    }
+
+    /// `sclae_in` (sic, Table 1): remove specific workers.
+    pub fn scale_in(&self, ids: Vec<NodeId>) -> Reply {
+        self.cmd(Cmd::ScaleIn { ids })
+    }
+
+    /// merged migration (§5.2): one topology switch for -remove/+add
+    pub fn migrate(&self, remove: Vec<NodeId>, add: Vec<String>) -> Reply {
+        self.cmd(Cmd::Migrate { remove, add })
+    }
+
+    /// Wait until the leader's step counter reaches `step`.
+    pub fn wait_step(&self, step: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.status().step >= step {
+                return true;
+            }
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// fault/straggler injection handle for worker `id`
+    pub fn knobs(&self, id: NodeId) -> Option<Arc<WorkerKnobs>> {
+        self.knobs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// profile() from Table 1: measure throughput from the current
+    /// parallelism down to `min_p` by repeated low-overhead scale-ins,
+    /// `steps_per_level` mini-batches per level (§5.2).
+    pub fn profile(&self, min_p: u32, steps_per_level: u64) -> Vec<crate::rpc::ProfileRow> {
+        let mut rows = Vec::new();
+        loop {
+            let st = self.status();
+            let p = st.parallelism;
+            let start_step = st.step;
+            if !self.wait_step(start_step + steps_per_level, Duration::from_secs(600)) {
+                break;
+            }
+            let st2 = self.status();
+            rows.push(crate::rpc::ProfileRow {
+                parallelism: p,
+                throughput: st2.throughput_sps,
+                per_gpu_throughput: st2.throughput_sps / p as f64,
+                efficiency: 0.0, // normalised by the caller over all rows
+            });
+            if p <= min_p {
+                break;
+            }
+            let victim = *st2.workers.last().unwrap();
+            match self.scale_in(vec![victim]) {
+                Reply::Ack => {}
+                _ => break,
+            }
+        }
+        // normalise efficiency against the best per-GPU throughput
+        let best = rows.iter().map(|r| r.per_gpu_throughput).fold(f64::MIN, f64::max);
+        for r in rows.iter_mut() {
+            r.efficiency = r.per_gpu_throughput / best;
+        }
+        rows
+    }
+
+    /// Stop the job and collect the training report.
+    pub fn stop(mut self) -> TrainReport {
+        let _ = self.cmd(Cmd::Stop);
+        let report = self.leader.take().map(|h| h.join().unwrap()).unwrap_or_default();
+        for h in self.worker_threads.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        report
+    }
+}

@@ -1,0 +1,406 @@
+//! External coordination service substrate — the ZooKeeper/etcd equivalent
+//! the paper's leader election depends on (§4.1), built from scratch.
+//!
+//! Provides exactly what the EDL protocol needs:
+//!  * `compare_and_swap` transactions on string keys,
+//!  * TTL **leases**: a value written with a lease expires unless refreshed,
+//!  * expiry **watches**: registered waiters are notified when a key
+//!    expires or is deleted, triggering re-election.
+//!
+//! Two deployments share one `KvCore`:
+//!  * [`KvHandle`] — in-process handle (used by the elastic trainer and by
+//!    deterministic tests, which drive time explicitly via `tick`),
+//!  * [`KvServer`]/[`KvClient`] — TCP server speaking the wire protocol
+//!    (used by the multi-process deployment and the leader-election
+//!    latency benchmark).
+
+mod server;
+
+pub use server::{KvClient, KvServer};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Milliseconds since an arbitrary epoch. Callers supply time explicitly so
+/// tests are deterministic; the TCP server uses wall-clock.
+pub type Ms = u64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub value: Vec<u8>,
+    /// absolute expiry; None = persistent
+    pub expires_at: Option<Ms>,
+    /// monotonically increasing per-key version (CAS generation counter)
+    pub version: u64,
+}
+
+#[derive(Default)]
+struct State {
+    map: HashMap<String, Entry>,
+    /// bumped on every mutation; watchers wait on this
+    epoch: u64,
+}
+
+/// Shared coordination-state core.
+pub struct KvCore {
+    state: Mutex<State>,
+    changed: Condvar,
+}
+
+/// Result of a get: value + version, or None if absent/expired.
+pub type GetResult = Option<(Vec<u8>, u64)>;
+
+impl KvCore {
+    pub fn new() -> Arc<KvCore> {
+        Arc::new(KvCore { state: Mutex::new(State::default()), changed: Condvar::new() })
+    }
+
+    /// Remove expired entries as of `now`. Returns the expired keys.
+    pub fn tick(&self, now: Ms) -> Vec<String> {
+        let mut st = self.state.lock().unwrap();
+        let expired: Vec<String> = st
+            .map
+            .iter()
+            .filter(|(_, e)| e.expires_at.map(|t| t <= now).unwrap_or(false))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &expired {
+            st.map.remove(k);
+        }
+        if !expired.is_empty() {
+            st.epoch += 1;
+            self.changed.notify_all();
+        }
+        expired
+    }
+
+    pub fn get(&self, now: Ms, key: &str) -> GetResult {
+        let st = self.state.lock().unwrap();
+        st.map.get(key).and_then(|e| {
+            if e.expires_at.map(|t| t <= now).unwrap_or(false) {
+                None
+            } else {
+                Some((e.value.clone(), e.version))
+            }
+        })
+    }
+
+    /// The leader-election primitive: atomically set `key` to `new` iff the
+    /// current value matches `expected` (None = key absent/expired).
+    /// Returns Ok(new_version) on success, Err(current) on mismatch.
+    pub fn compare_and_swap(
+        &self,
+        now: Ms,
+        key: &str,
+        expected: Option<&[u8]>,
+        new: &[u8],
+        ttl: Option<Ms>,
+    ) -> Result<u64, GetResult> {
+        let mut st = self.state.lock().unwrap();
+        let current = st.map.get(key).and_then(|e| {
+            if e.expires_at.map(|t| t <= now).unwrap_or(false) {
+                None
+            } else {
+                Some((e.value.clone(), e.version))
+            }
+        });
+        let matches = match (&current, expected) {
+            (None, None) => true,
+            (Some((v, _)), Some(exp)) => v.as_slice() == exp,
+            _ => false,
+        };
+        if !matches {
+            return Err(current);
+        }
+        let version = current.map(|(_, v)| v + 1).unwrap_or(1);
+        st.map.insert(
+            key.to_string(),
+            Entry { value: new.to_vec(), expires_at: ttl.map(|t| now + t), version },
+        );
+        st.epoch += 1;
+        self.changed.notify_all();
+        Ok(version)
+    }
+
+    /// Unconditional put.
+    pub fn put(&self, now: Ms, key: &str, value: &[u8], ttl: Option<Ms>) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let version = st.map.get(key).map(|e| e.version + 1).unwrap_or(1);
+        st.map.insert(
+            key.to_string(),
+            Entry { value: value.to_vec(), expires_at: ttl.map(|t| now + t), version },
+        );
+        st.epoch += 1;
+        self.changed.notify_all();
+        version
+    }
+
+    /// Delete a key (leader erasing its address on graceful exit, §4.2).
+    pub fn delete(&self, key: &str) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let existed = st.map.remove(key).is_some();
+        if existed {
+            st.epoch += 1;
+            self.changed.notify_all();
+        }
+        existed
+    }
+
+    /// Refresh a lease: extend expiry to now + ttl. Fails if the key is
+    /// absent, expired, or holds a different value (lost leadership).
+    pub fn refresh_lease(&self, now: Ms, key: &str, value: &[u8], ttl: Ms) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.map.get_mut(key) {
+            Some(e)
+                if e.value == value
+                    && !e.expires_at.map(|t| t <= now).unwrap_or(false) =>
+            {
+                e.expires_at = Some(now + ttl);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Block until the key's state differs from `last_version` (or absent
+    /// when version given), or until `timeout_ms` of *real* time passes.
+    /// Used by workers watching the leader key.
+    pub fn wait_for_change(&self, key: &str, last_version: Option<u64>, timeout_ms: u64) -> bool {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(timeout_ms);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let cur = st.map.get(key).map(|e| e.version);
+            if cur != last_version {
+                return true;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _t) = self.changed.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// In-process handle with a supplied clock function (wall or simulated).
+#[derive(Clone)]
+pub struct KvHandle {
+    core: Arc<KvCore>,
+    clock: Arc<dyn Fn() -> Ms + Send + Sync>,
+}
+
+impl KvHandle {
+    pub fn new(core: Arc<KvCore>, clock: Arc<dyn Fn() -> Ms + Send + Sync>) -> Self {
+        KvHandle { core, clock }
+    }
+
+    /// Wall-clock handle over a fresh core.
+    pub fn wall() -> Self {
+        KvHandle::new(KvCore::new(), Arc::new(|| crate::util::now_ms() as Ms))
+    }
+
+    pub fn core(&self) -> &Arc<KvCore> {
+        &self.core
+    }
+
+    pub fn now(&self) -> Ms {
+        (self.clock)()
+    }
+
+    pub fn get(&self, key: &str) -> GetResult {
+        self.core.get(self.now(), key)
+    }
+    pub fn cas(&self, key: &str, expected: Option<&[u8]>, new: &[u8], ttl: Option<Ms>) -> Result<u64, GetResult> {
+        self.core.compare_and_swap(self.now(), key, expected, new, ttl)
+    }
+    pub fn put(&self, key: &str, value: &[u8], ttl: Option<Ms>) -> u64 {
+        self.core.put(self.now(), key, value, ttl)
+    }
+    pub fn delete(&self, key: &str) -> bool {
+        self.core.delete(key)
+    }
+    pub fn refresh_lease(&self, key: &str, value: &[u8], ttl: Ms) -> bool {
+        self.core.refresh_lease(self.now(), key, value, ttl)
+    }
+    pub fn tick(&self) -> Vec<String> {
+        self.core.tick(self.now())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// leader election on top of the KV (the §4.1 protocol)
+// ---------------------------------------------------------------------------
+
+/// Attempt leader election for `job` as candidate `my_addr`.
+/// Returns the winning leader's address (possibly ours).
+pub fn elect_leader(kv: &KvHandle, job: &str, my_addr: &str, lease_ttl: Ms) -> String {
+    let key = format!("edl/leader/{job}");
+    loop {
+        match kv.get(&key) {
+            Some((addr, _)) => return String::from_utf8_lossy(&addr).to_string(),
+            None => {
+                // void or expired: try to claim it
+                match kv.cas(&key, None, my_addr.as_bytes(), Some(lease_ttl)) {
+                    Ok(_) => return my_addr.to_string(),
+                    Err(_) => continue, // someone else won; re-read
+                }
+            }
+        }
+    }
+}
+
+/// Leader-side lease refresh. Returns false if leadership was lost.
+pub fn refresh_leadership(kv: &KvHandle, job: &str, my_addr: &str, lease_ttl: Ms) -> bool {
+    kv.refresh_lease(&format!("edl/leader/{job}"), my_addr.as_bytes(), lease_ttl)
+}
+
+/// Leader-side resignation (graceful exit of the leader, §4.2).
+pub fn resign_leadership(kv: &KvHandle, job: &str) {
+    kv.delete(&format!("edl/leader/{job}"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn sim_kv() -> (KvHandle, Arc<AtomicU64>) {
+        let t = Arc::new(AtomicU64::new(0));
+        let t2 = t.clone();
+        let kv = KvHandle::new(KvCore::new(), Arc::new(move || t2.load(Ordering::SeqCst)));
+        (kv, t)
+    }
+
+    #[test]
+    fn cas_claims_empty_key_once() {
+        let (kv, _t) = sim_kv();
+        assert!(kv.cas("k", None, b"a", None).is_ok());
+        let err = kv.cas("k", None, b"b", None).unwrap_err();
+        assert_eq!(err.unwrap().0, b"a".to_vec());
+        assert_eq!(kv.get("k").unwrap().0, b"a".to_vec());
+    }
+
+    #[test]
+    fn cas_with_expected_value() {
+        let (kv, _t) = sim_kv();
+        kv.put("k", b"v1", None);
+        assert!(kv.cas("k", Some(b"v0"), b"v2", None).is_err());
+        assert!(kv.cas("k", Some(b"v1"), b"v2", None).is_ok());
+        assert_eq!(kv.get("k").unwrap().0, b"v2".to_vec());
+    }
+
+    #[test]
+    fn lease_expires_and_key_reclaimable() {
+        let (kv, t) = sim_kv();
+        kv.cas("k", None, b"a", Some(100)).unwrap();
+        t.store(99, Ordering::SeqCst);
+        assert!(kv.get("k").is_some());
+        t.store(100, Ordering::SeqCst);
+        assert!(kv.get("k").is_none(), "lease should have expired");
+        // CAS with expected=None succeeds on the expired key
+        assert!(kv.cas("k", None, b"b", Some(100)).is_ok());
+        assert_eq!(kv.get("k").unwrap().0, b"b".to_vec());
+    }
+
+    #[test]
+    fn refresh_extends_lease() {
+        let (kv, t) = sim_kv();
+        kv.cas("k", None, b"a", Some(100)).unwrap();
+        t.store(90, Ordering::SeqCst);
+        assert!(kv.refresh_lease("k", b"a", 100));
+        t.store(150, Ordering::SeqCst);
+        assert!(kv.get("k").is_some(), "refresh should extend to 190");
+        t.store(190, Ordering::SeqCst);
+        assert!(kv.get("k").is_none());
+    }
+
+    #[test]
+    fn refresh_fails_for_wrong_holder() {
+        let (kv, _t) = sim_kv();
+        kv.cas("k", None, b"a", Some(100)).unwrap();
+        assert!(!kv.refresh_lease("k", b"other", 100));
+    }
+
+    #[test]
+    fn tick_removes_expired() {
+        let (kv, t) = sim_kv();
+        kv.put("a", b"1", Some(10));
+        kv.put("b", b"2", None);
+        t.store(20, Ordering::SeqCst);
+        let mut expired = kv.tick();
+        expired.sort();
+        assert_eq!(expired, vec!["a".to_string()]);
+        assert_eq!(kv.core().len(), 1);
+    }
+
+    #[test]
+    fn version_increases_monotonically() {
+        let (kv, _t) = sim_kv();
+        let v1 = kv.put("k", b"1", None);
+        let v2 = kv.put("k", b"2", None);
+        let v3 = kv.cas("k", Some(b"2"), b"3", None).unwrap();
+        assert!(v1 < v2 && v2 < v3);
+    }
+
+    #[test]
+    fn election_single_winner_under_contention() {
+        let (kv, _t) = sim_kv();
+        let winners: Vec<String> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..32)
+                .map(|i| {
+                    let kv = kv.clone();
+                    s.spawn(move || elect_leader(&kv, "job1", &format!("worker-{i}"), 1000))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let first = &winners[0];
+        assert!(winners.iter().all(|w| w == first), "split brain: {winners:?}");
+    }
+
+    #[test]
+    fn reelection_after_leader_resigns() {
+        let (kv, _t) = sim_kv();
+        let l1 = elect_leader(&kv, "j", "w1", 1000);
+        assert_eq!(l1, "w1");
+        resign_leadership(&kv, "j");
+        let l2 = elect_leader(&kv, "j", "w2", 1000);
+        assert_eq!(l2, "w2");
+    }
+
+    #[test]
+    fn reelection_after_lease_expiry() {
+        let (kv, t) = sim_kv();
+        assert_eq!(elect_leader(&kv, "j", "w1", 100), "w1");
+        // w1 crashes (no refresh); lease runs out
+        t.store(101, Ordering::SeqCst);
+        assert_eq!(elect_leader(&kv, "j", "w2", 100), "w2");
+    }
+
+    #[test]
+    fn wait_for_change_sees_update() {
+        let (kv, _t) = sim_kv();
+        kv.put("k", b"1", None);
+        let core = kv.core().clone();
+        let waiter = std::thread::spawn(move || core.wait_for_change("k", Some(1), 5_000));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        kv.put("k", b"2", None);
+        assert!(waiter.join().unwrap());
+    }
+
+    #[test]
+    fn wait_for_change_times_out() {
+        let (kv, _t) = sim_kv();
+        kv.put("k", b"1", None);
+        assert!(!kv.core().wait_for_change("k", Some(1), 50));
+    }
+}

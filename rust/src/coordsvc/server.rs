@@ -1,0 +1,322 @@
+//! TCP deployment of the coordination service: a thread-per-connection
+//! server speaking the `wire` framed protocol, plus a blocking client.
+//! This is the etcd-stand-in used when EDL runs as separate processes and
+//! by the leader-election latency benchmark (§4.1: 7 ms avg @ 256 workers
+//! against etcd on the paper's testbed).
+
+use super::{KvCore, Ms};
+use crate::wire::{read_frame, write_frame, Dec, Enc};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const OP_GET: u8 = 1;
+const OP_CAS: u8 = 2;
+const OP_PUT: u8 = 3;
+const OP_DELETE: u8 = 4;
+const OP_REFRESH: u8 = 5;
+
+fn wall_ms() -> Ms {
+    crate::util::now_ms() as Ms
+}
+
+pub struct KvServer {
+    pub addr: String,
+    core: Arc<KvCore>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    expiry_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl KvServer {
+    /// Bind on 127.0.0.1:0 (ephemeral port) and serve until dropped.
+    pub fn start() -> std::io::Result<KvServer> {
+        let core = KvCore::new();
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept_core = core.clone();
+        let accept_stop = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::spawn(move || {
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let core = accept_core.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_conn(stream, core);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        // background lease-expiry sweep (etcd does the same server-side)
+        let expiry_core = core.clone();
+        let expiry_stop = stop.clone();
+        let expiry_thread = std::thread::spawn(move || {
+            while !expiry_stop.load(Ordering::Relaxed) {
+                expiry_core.tick(wall_ms());
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        });
+
+        Ok(KvServer { addr, core, stop, accept_thread: Some(accept_thread), expiry_thread: Some(expiry_thread) })
+    }
+
+    pub fn core(&self) -> &Arc<KvCore> {
+        &self.core
+    }
+}
+
+impl Drop for KvServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.expiry_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, core: Arc<KvCore>) -> crate::wire::Result<()> {
+    stream.set_nodelay(true)?; // §4.4: Nagle disabled on coordination sockets
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let req = match read_frame(&mut reader) {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // client closed
+        };
+        let mut d = Dec::new(&req);
+        let op = d.u8()?;
+        let now = wall_ms();
+        let mut resp = Enc::new();
+        match op {
+            OP_GET => {
+                let key = d.str()?;
+                match core.get(now, &key) {
+                    Some((v, ver)) => {
+                        resp.bool(true).u64(ver).bytes(&v);
+                    }
+                    None => {
+                        resp.bool(false);
+                    }
+                }
+            }
+            OP_CAS => {
+                let key = d.str()?;
+                let has_expected = d.bool()?;
+                let expected = if has_expected { Some(d.bytes()?) } else { None };
+                let new = d.bytes()?;
+                let ttl = d.u64()?;
+                let ttl = if ttl == 0 { None } else { Some(ttl) };
+                match core.compare_and_swap(now, &key, expected.as_deref(), &new, ttl) {
+                    Ok(ver) => {
+                        resp.bool(true).u64(ver);
+                    }
+                    Err(cur) => {
+                        resp.bool(false);
+                        match cur {
+                            Some((v, ver)) => {
+                                resp.bool(true).u64(ver).bytes(&v);
+                            }
+                            None => {
+                                resp.bool(false);
+                            }
+                        }
+                    }
+                }
+            }
+            OP_PUT => {
+                let key = d.str()?;
+                let value = d.bytes()?;
+                let ttl = d.u64()?;
+                let ttl = if ttl == 0 { None } else { Some(ttl) };
+                let ver = core.put(now, &key, &value, ttl);
+                resp.u64(ver);
+            }
+            OP_DELETE => {
+                let key = d.str()?;
+                resp.bool(core.delete(&key));
+            }
+            OP_REFRESH => {
+                let key = d.str()?;
+                let value = d.bytes()?;
+                let ttl = d.u64()?;
+                resp.bool(core.refresh_lease(now, &key, &value, ttl));
+            }
+            other => {
+                return Err(crate::wire::WireError::BadTag { tag: other as u32, ty: "kv op" })
+            }
+        }
+        write_frame(&mut writer, &resp.into_bytes())?;
+    }
+}
+
+/// Blocking TCP client for the KV service.
+pub struct KvClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl KvClient {
+    pub fn connect(addr: &str) -> std::io::Result<KvClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(KvClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: Enc) -> crate::wire::Result<Vec<u8>> {
+        write_frame(&mut self.writer, &req.into_bytes())?;
+        read_frame(&mut self.reader)
+    }
+
+    pub fn get(&mut self, key: &str) -> crate::wire::Result<Option<(Vec<u8>, u64)>> {
+        let mut e = Enc::new();
+        e.u8(OP_GET).str(key);
+        let resp = self.call(e)?;
+        let mut d = Dec::new(&resp);
+        if d.bool()? {
+            let ver = d.u64()?;
+            let v = d.bytes()?;
+            Ok(Some((v, ver)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Returns Ok(version) on success; Err(Some(current)) on CAS mismatch.
+    pub fn cas(
+        &mut self,
+        key: &str,
+        expected: Option<&[u8]>,
+        new: &[u8],
+        ttl_ms: u64,
+    ) -> crate::wire::Result<Result<u64, Option<Vec<u8>>>> {
+        let mut e = Enc::new();
+        e.u8(OP_CAS).str(key);
+        match expected {
+            Some(x) => {
+                e.bool(true).bytes(x);
+            }
+            None => {
+                e.bool(false);
+            }
+        }
+        e.bytes(new).u64(ttl_ms);
+        let resp = self.call(e)?;
+        let mut d = Dec::new(&resp);
+        if d.bool()? {
+            Ok(Ok(d.u64()?))
+        } else if d.bool()? {
+            let _ver = d.u64()?;
+            Ok(Err(Some(d.bytes()?)))
+        } else {
+            Ok(Err(None))
+        }
+    }
+
+    pub fn put(&mut self, key: &str, value: &[u8], ttl_ms: u64) -> crate::wire::Result<u64> {
+        let mut e = Enc::new();
+        e.u8(OP_PUT).str(key).bytes(value).u64(ttl_ms);
+        let resp = self.call(e)?;
+        Dec::new(&resp).u64()
+    }
+
+    pub fn delete(&mut self, key: &str) -> crate::wire::Result<bool> {
+        let mut e = Enc::new();
+        e.u8(OP_DELETE).str(key);
+        let resp = self.call(e)?;
+        Dec::new(&resp).bool()
+    }
+
+    pub fn refresh(&mut self, key: &str, value: &[u8], ttl_ms: u64) -> crate::wire::Result<bool> {
+        let mut e = Enc::new();
+        e.u8(OP_REFRESH).str(key).bytes(value).u64(ttl_ms);
+        let resp = self.call(e)?;
+        Dec::new(&resp).bool()
+    }
+
+    /// The full §4.1 election protocol over TCP: query, claim if void,
+    /// retry on races. Returns the winner's address.
+    pub fn elect(&mut self, job: &str, my_addr: &str, ttl_ms: u64) -> crate::wire::Result<String> {
+        let key = format!("edl/leader/{job}");
+        loop {
+            if let Some((addr, _)) = self.get(&key)? {
+                return Ok(String::from_utf8_lossy(&addr).to_string());
+            }
+            match self.cas(&key, None, my_addr.as_bytes(), ttl_ms)? {
+                Ok(_) => return Ok(my_addr.to_string()),
+                Err(_) => continue,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_get_put_roundtrip() {
+        let server = KvServer::start().unwrap();
+        let mut c = KvClient::connect(&server.addr).unwrap();
+        assert!(c.get("missing").unwrap().is_none());
+        c.put("k", b"hello", 0).unwrap();
+        assert_eq!(c.get("k").unwrap().unwrap().0, b"hello".to_vec());
+        assert!(c.delete("k").unwrap());
+        assert!(c.get("k").unwrap().is_none());
+    }
+
+    #[test]
+    fn tcp_cas_semantics() {
+        let server = KvServer::start().unwrap();
+        let mut c = KvClient::connect(&server.addr).unwrap();
+        assert!(c.cas("k", None, b"a", 0).unwrap().is_ok());
+        let err = c.cas("k", None, b"b", 0).unwrap().unwrap_err();
+        assert_eq!(err.unwrap(), b"a".to_vec());
+    }
+
+    #[test]
+    fn tcp_lease_expires() {
+        let server = KvServer::start().unwrap();
+        let mut c = KvClient::connect(&server.addr).unwrap();
+        c.put("k", b"v", 30).unwrap(); // 30 ms ttl
+        assert!(c.get("k").unwrap().is_some());
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        assert!(c.get("k").unwrap().is_none());
+    }
+
+    #[test]
+    fn tcp_election_contention_single_winner() {
+        let server = KvServer::start().unwrap();
+        let addr = server.addr.clone();
+        let winners: Vec<String> = std::thread::scope(|s| {
+            (0..16)
+                .map(|i| {
+                    let addr = addr.clone();
+                    s.spawn(move || {
+                        let mut c = KvClient::connect(&addr).unwrap();
+                        c.elect("job", &format!("w{i}"), 5_000).unwrap()
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        assert!(winners.windows(2).all(|w| w[0] == w[1]), "{winners:?}");
+    }
+}

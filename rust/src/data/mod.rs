@@ -1,0 +1,519 @@
+//! Dynamic data pipeline (§4.3 of the paper).
+//!
+//! The dataset is logically divided into `d` partitions at the *metadata*
+//! level (offset + length into the corpus); the leader owns a per-epoch
+//! random permutation of partition indices and hands partitions to workers
+//! **on demand**. Workers report their intra-partition offset with every
+//! mini-batch; when a worker leaves (graceful exit or failure), the
+//! unprocessed remainder of its partition returns to the pool, so each
+//! epoch visits every sample exactly once — no repetition, no omission —
+//! regardless of the scale in/out schedule. That invariant is
+//! property-tested below under random scale event schedules.
+
+pub mod corpus;
+
+use crate::util::rng::Pcg;
+use crate::wire::{Dec, Enc};
+use std::collections::HashMap;
+
+/// Metadata handed to a worker for one partition (file path analogue is an
+/// offset range into the corpus; see DESIGN.md §1 HDFS substitution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionMeta {
+    pub id: u64,
+    /// starting sample index within the dataset
+    pub start: u64,
+    /// number of samples in this assignment (may be a partial remainder)
+    pub len: u64,
+    pub epoch: u64,
+}
+
+impl PartitionMeta {
+    pub fn encode(&self, e: &mut Enc) {
+        e.u64(self.id).u64(self.start).u64(self.len).u64(self.epoch);
+    }
+    pub fn decode(d: &mut Dec) -> crate::wire::Result<PartitionMeta> {
+        Ok(PartitionMeta { id: d.u64()?, start: d.u64()?, len: d.u64()?, epoch: d.u64()? })
+    }
+}
+
+/// Logical partition table over a dataset of `n_samples` samples.
+#[derive(Debug, Clone)]
+pub struct PartitionTable {
+    pub n_samples: u64,
+    pub n_partitions: u64,
+    pub partition_size: u64,
+}
+
+impl PartitionTable {
+    /// `d` partitions, sized so partitions stay large enough for
+    /// high-bandwidth reads (the paper's guidance: d ≫ workers).
+    /// The effective partition count is adjusted so every partition is
+    /// non-empty (ceil sizing can otherwise leave trailing empties).
+    pub fn new(n_samples: u64, n_partitions: u64) -> PartitionTable {
+        assert!(n_partitions > 0 && n_samples >= n_partitions);
+        let partition_size = n_samples.div_ceil(n_partitions);
+        PartitionTable {
+            n_samples,
+            n_partitions: n_samples.div_ceil(partition_size),
+            partition_size,
+        }
+    }
+
+    pub fn partition(&self, idx: u64, epoch: u64) -> PartitionMeta {
+        assert!(idx < self.n_partitions);
+        let start = idx * self.partition_size;
+        let len = self.partition_size.min(self.n_samples - start);
+        PartitionMeta { id: idx, start, len, epoch }
+    }
+}
+
+/// Leader-side dynamic assigner: epoch permutation + in-flight tracking +
+/// remainder pool.
+pub struct Assigner {
+    table: PartitionTable,
+    rng: Pcg,
+    pub epoch: u64,
+    /// permuted partition indices not yet assigned this epoch
+    queue: Vec<u64>,
+    /// partial partitions returned by departing workers: (meta of remainder)
+    returned: Vec<PartitionMeta>,
+    /// in-flight: worker -> (assignment, consumed samples within it)
+    in_flight: HashMap<u32, (PartitionMeta, u64)>,
+    /// samples fully consumed this epoch (for accounting)
+    consumed: u64,
+}
+
+impl Assigner {
+    pub fn new(table: PartitionTable, seed: u64) -> Assigner {
+        let mut a = Assigner {
+            table,
+            rng: Pcg::seeded(seed),
+            epoch: 0,
+            queue: Vec::new(),
+            returned: Vec::new(),
+            in_flight: HashMap::new(),
+            consumed: 0,
+        };
+        a.start_epoch();
+        a
+    }
+
+    fn start_epoch(&mut self) {
+        let mut idx: Vec<u64> = (0..self.table.n_partitions).collect();
+        // Fisher–Yates permutation — the paper's "random permutation of the
+        // indexes of the partitions"
+        for i in (1..idx.len()).rev() {
+            let j = self.rng.gen_range(i as u64 + 1) as usize;
+            idx.swap(i, j);
+        }
+        self.queue = idx;
+        self.consumed = 0;
+    }
+
+    pub fn epoch_total(&self) -> u64 {
+        self.table.n_samples
+    }
+
+    /// Samples consumed so far this epoch (completed assignments only).
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// Next partition for `worker`, or None when the epoch's pool is empty
+    /// (in-flight work may still be running). Returned partial remainders
+    /// are preferred to keep fragmentation bounded.
+    pub fn next_partition(&mut self, worker: u32) -> Option<PartitionMeta> {
+        // A re-request while an assignment is outstanding means the worker
+        // lost/abandoned it (e.g. a restore raced the Assign reply):
+        // credit reported progress and return the remainder to the pool.
+        if self.in_flight.contains_key(&worker) {
+            self.worker_left(worker);
+        }
+        let meta = if let Some(m) = self.returned.pop() {
+            m
+        } else if let Some(idx) = self.queue.pop() {
+            self.table.partition(idx, self.epoch)
+        } else {
+            return None;
+        };
+        self.in_flight.insert(worker, (meta, 0));
+        Some(meta)
+    }
+
+    /// Record progress: `consumed` samples of the worker's current
+    /// assignment are done (piggybacked on gradient sync requests, §4.3).
+    pub fn report_progress(&mut self, worker: u32, consumed_in_partition: u64) {
+        if let Some((meta, done)) = self.in_flight.get_mut(&worker) {
+            assert!(
+                consumed_in_partition <= meta.len,
+                "worker {worker} progressed past its assignment"
+            );
+            assert!(consumed_in_partition >= *done, "progress went backwards");
+            *done = consumed_in_partition;
+        }
+    }
+
+    /// Worker finished its current assignment entirely.
+    pub fn complete(&mut self, worker: u32) {
+        if let Some((meta, _)) = self.in_flight.remove(&worker) {
+            self.consumed += meta.len;
+        }
+    }
+
+    /// Worker leaves (graceful exit or failure): unprocessed remainder goes
+    /// back to the pool for another worker (§4.3). Consumed prefix counts.
+    pub fn worker_left(&mut self, worker: u32) {
+        if let Some((meta, done)) = self.in_flight.remove(&worker) {
+            self.consumed += done;
+            if done < meta.len {
+                self.returned.push(PartitionMeta {
+                    id: meta.id,
+                    start: meta.start + done,
+                    len: meta.len - done,
+                    epoch: meta.epoch,
+                });
+            }
+        }
+    }
+
+    /// Abandon every in-flight assignment (used after a checkpoint
+    /// restore: workers no longer hold their shards). Consumed prefixes
+    /// count as done; remainders return to the pool.
+    pub fn reset_in_flight(&mut self) {
+        let workers: Vec<u32> = self.in_flight.keys().copied().collect();
+        for w in workers {
+            self.worker_left(w);
+        }
+    }
+
+    /// True when every sample of the epoch is consumed and nothing is in
+    /// flight.
+    pub fn epoch_exhausted(&self) -> bool {
+        self.queue.is_empty() && self.returned.is_empty() && self.in_flight.is_empty()
+    }
+
+    /// Pool empty (workers should finish in-flight work then wait).
+    pub fn pool_empty(&self) -> bool {
+        self.queue.is_empty() && self.returned.is_empty()
+    }
+
+    /// Advance to the next epoch. Panics if the current epoch is incomplete
+    /// (would violate the no-omission guarantee).
+    pub fn advance_epoch(&mut self) {
+        assert!(self.epoch_exhausted(), "advance_epoch with work outstanding");
+        assert_eq!(self.consumed, self.table.n_samples, "epoch under/over-consumed");
+        self.epoch += 1;
+        self.start_epoch();
+    }
+
+    /// Serialise assigner state for leader handoff (§4.2: the departing
+    /// leader sends the permutation list + progress to the new leader) and
+    /// for checkpointing.
+    pub fn encode(&self, e: &mut Enc) {
+        e.u64(self.table.n_samples).u64(self.table.n_partitions).u64(self.epoch).u64(self.consumed);
+        e.u64s(&self.queue);
+        e.u32(self.returned.len() as u32);
+        for m in &self.returned {
+            m.encode(e);
+        }
+        e.u32(self.in_flight.len() as u32);
+        let mut keys: Vec<_> = self.in_flight.keys().copied().collect();
+        keys.sort_unstable();
+        for w in keys {
+            let (meta, done) = &self.in_flight[&w];
+            e.u32(w).u64(*done);
+            meta.encode(e);
+        }
+    }
+
+    /// Restore from `encode` output. RNG state restarts from `seed` —
+    /// permutations after restore differ, which is fine: the consistency
+    /// guarantee is per-epoch sample coverage, not a fixed order (§4.3).
+    pub fn decode(d: &mut Dec, seed: u64) -> crate::wire::Result<Assigner> {
+        let n_samples = d.u64()?;
+        let n_partitions = d.u64()?;
+        let epoch = d.u64()?;
+        let consumed = d.u64()?;
+        let queue = d.u64s()?;
+        let n_ret = d.u32()? as usize;
+        let returned = (0..n_ret).map(|_| PartitionMeta::decode(d)).collect::<crate::wire::Result<_>>()?;
+        let n_if = d.u32()? as usize;
+        let mut in_flight = HashMap::new();
+        for _ in 0..n_if {
+            let w = d.u32()?;
+            let done = d.u64()?;
+            let meta = PartitionMeta::decode(d)?;
+            in_flight.insert(w, (meta, done));
+        }
+        Ok(Assigner {
+            table: PartitionTable::new(n_samples, n_partitions),
+            rng: Pcg::seeded(seed),
+            epoch,
+            queue,
+            returned,
+            in_flight,
+            consumed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn collect_epoch(a: &mut Assigner, workers: &[u32]) -> Vec<(u64, u64)> {
+        // drive all workers round-robin to exhaustion; return consumed
+        // (start, len) ranges
+        let mut ranges = Vec::new();
+        let mut active: Vec<u32> = workers.to_vec();
+        while !a.epoch_exhausted() {
+            let mut progressed = false;
+            for &w in active.clone().iter() {
+                if let Some(m) = a.next_partition(w) {
+                    ranges.push((m.start, m.len));
+                    a.complete(w);
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+            active.rotate_left(1);
+        }
+        ranges
+    }
+
+    fn assert_exact_cover(ranges: &[(u64, u64)], n: u64) {
+        let mut seen = vec![false; n as usize];
+        for &(s, l) in ranges {
+            for i in s..s + l {
+                assert!(!seen[i as usize], "sample {i} repeated");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "omitted samples");
+    }
+
+    #[test]
+    fn partition_table_covers_dataset() {
+        let t = PartitionTable::new(1003, 10);
+        let total: u64 = (0..10).map(|i| t.partition(i, 0).len).sum();
+        assert_eq!(total, 1003);
+        // last partition is the short one
+        assert_eq!(t.partition(9, 0).len, 1003 - 9 * t.partition_size);
+    }
+
+    #[test]
+    fn epoch_exactly_once_static_workers() {
+        let mut a = Assigner::new(PartitionTable::new(1000, 16), 1);
+        let ranges = collect_epoch(&mut a, &[1, 2, 3]);
+        assert_exact_cover(&ranges, 1000);
+        a.advance_epoch();
+        assert_eq!(a.epoch, 1);
+    }
+
+    #[test]
+    fn permutation_differs_across_epochs() {
+        let mut a = Assigner::new(PartitionTable::new(160, 16), 2);
+        let e0: Vec<u64> = a.queue.clone();
+        let r = collect_epoch(&mut a, &[1]);
+        assert_exact_cover(&r, 160);
+        a.advance_epoch();
+        assert_ne!(a.queue, e0, "epoch permutations should differ");
+    }
+
+    #[test]
+    fn departed_worker_remainder_reassigned() {
+        let mut a = Assigner::new(PartitionTable::new(100, 4), 3);
+        let m = a.next_partition(1).unwrap();
+        a.report_progress(1, 10);
+        a.worker_left(1); // 10 consumed, len-10 returned
+        let m2 = a.next_partition(2).unwrap();
+        assert_eq!(m2.id, m.id);
+        assert_eq!(m2.start, m.start + 10);
+        assert_eq!(m2.len, m.len - 10);
+    }
+
+    #[test]
+    fn failure_with_zero_progress_returns_whole_partition() {
+        let mut a = Assigner::new(PartitionTable::new(100, 4), 4);
+        let m = a.next_partition(1).unwrap();
+        a.worker_left(1);
+        let m2 = a.next_partition(2).unwrap();
+        assert_eq!((m2.start, m2.len), (m.start, m.len));
+    }
+
+    #[test]
+    fn double_request_requeues_lost_assignment() {
+        // a re-request supersedes the outstanding assignment: the old one
+        // returns to the pool so nothing is omitted
+        let mut a = Assigner::new(PartitionTable::new(100, 4), 5);
+        let m1 = a.next_partition(1).unwrap();
+        let m2 = a.next_partition(1).unwrap();
+        // the lost assignment returns to the pool (it may be re-issued to
+        // the same worker immediately — it is fresh state either way)
+        assert_eq!((m1.start, m1.len), (m2.start, m2.len));
+        a.complete(1);
+        // drain: the re-queued m1 must come back out
+        let mut seen = vec![m2.len];
+        while let Some(m) = a.next_partition(2) {
+            seen.push(m.len);
+            a.complete(2);
+        }
+        assert_eq!(seen.iter().sum::<u64>(), 100, "full coverage despite requeue");
+    }
+
+    #[test]
+    #[should_panic(expected = "progressed past")]
+    fn overrun_progress_rejected() {
+        let mut a = Assigner::new(PartitionTable::new(100, 4), 6);
+        let m = a.next_partition(1).unwrap();
+        a.report_progress(1, m.len + 1);
+    }
+
+    #[test]
+    fn exactly_once_under_random_scaling_property() {
+        // The paper's core §4.3 claim: arbitrary join/leave schedules never
+        // repeat or omit a sample within an epoch.
+        prop::check("exactly-once-under-scaling", 60, |rng| {
+            let n = 200 + rng.gen_range(2000);
+            let parts = 4 + rng.gen_range(28);
+            let mut a = Assigner::new(PartitionTable::new(n, parts), rng.next_u64());
+            let mut covered: Vec<(u64, u64)> = Vec::new();
+            let mut next_worker: u32 = 0;
+            // map worker -> (meta, progress)
+            let mut running: Vec<(u32, PartitionMeta, u64)> = Vec::new();
+            // seed a couple of workers
+            for _ in 0..(1 + rng.gen_range(4)) {
+                next_worker += 1;
+                if let Some(m) = a.next_partition(next_worker) {
+                    running.push((next_worker, m, 0));
+                }
+            }
+            let mut steps = 0;
+            while !(a.epoch_exhausted() && running.is_empty()) {
+                steps += 1;
+                if steps > 100_000 {
+                    return Err("did not terminate".into());
+                }
+                match rng.gen_range(10) {
+                    // scale out: add a worker
+                    0 | 1 => {
+                        next_worker += 1;
+                        if let Some(m) = a.next_partition(next_worker) {
+                            running.push((next_worker, m, 0));
+                        }
+                    }
+                    // scale in / failure: remove a random worker
+                    2 | 3 if !running.is_empty() => {
+                        let i = rng.gen_range(running.len() as u64) as usize;
+                        let (w, m, done) = running.swap_remove(i);
+                        // consumed prefix counts as covered
+                        if done > 0 {
+                            covered.push((m.start, done));
+                        }
+                        a.report_progress(w, done);
+                        a.worker_left(w);
+                    }
+                    // progress: a random worker consumes some samples
+                    _ if !running.is_empty() => {
+                        let i = rng.gen_range(running.len() as u64) as usize;
+                        let (w, m, done) = running[i];
+                        let room = m.len - done;
+                        let take = 1 + rng.gen_range(room.max(1));
+                        let take = take.min(room);
+                        let new_done = done + take;
+                        a.report_progress(w, new_done);
+                        if new_done == m.len {
+                            covered.push((m.start, m.len));
+                            a.complete(w);
+                            // grab the next partition if any
+                            if let Some(m2) = a.next_partition(w) {
+                                running[i] = (w, m2, 0);
+                            } else {
+                                running.swap_remove(i);
+                            }
+                        } else {
+                            running[i].2 = new_done;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // verify exactly-once coverage
+            let mut seen = vec![false; n as usize];
+            for &(s, l) in &covered {
+                for i in s..s + l {
+                    if seen[i as usize] {
+                        return Err(format!("sample {i} repeated"));
+                    }
+                    seen[i as usize] = true;
+                }
+            }
+            if !seen.iter().all(|&b| b) {
+                let missing = seen.iter().filter(|&&b| !b).count();
+                return Err(format!("{missing} samples omitted"));
+            }
+            if a.consumed() != n {
+                return Err(format!("consumed {} != {}", a.consumed(), n));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn handoff_roundtrip_preserves_state() {
+        let mut a = Assigner::new(PartitionTable::new(500, 8), 7);
+        let _m1 = a.next_partition(1).unwrap();
+        a.report_progress(1, 5);
+        let m2 = a.next_partition(2).unwrap();
+        a.complete(2);
+        let _ = m2;
+        let mut e = Enc::new();
+        a.encode(&mut e);
+        let bytes = e.into_bytes();
+        let mut b = Assigner::decode(&mut Dec::new(&bytes), 99).unwrap();
+        assert_eq!(b.epoch, a.epoch);
+        assert_eq!(b.consumed, a.consumed);
+        assert_eq!(b.queue, a.queue);
+        // worker 1 still in flight after handoff; leaving returns remainder
+        b.worker_left(1);
+        let m = b.next_partition(3).unwrap();
+        assert_eq!(m.start % b.table.partition_size, 5);
+    }
+
+    #[test]
+    fn total_coverage_with_handoff_mid_epoch() {
+        // serialise mid-epoch, restore, finish: still exactly-once
+        let mut a = Assigner::new(PartitionTable::new(300, 6), 8);
+        let mut covered = Vec::new();
+        let m = a.next_partition(1).unwrap();
+        a.report_progress(1, 7);
+        covered.push((m.start, 7));
+        let mut e = Enc::new();
+        a.encode(&mut e);
+        let bytes = e.into_bytes();
+        let mut b = Assigner::decode(&mut Dec::new(&bytes), 1234).unwrap();
+        b.worker_left(1); // credits 7 consumed, returns remainder
+        let ranges = {
+            let mut r = Vec::new();
+            while let Some(m) = b.next_partition(9) {
+                r.push((m.start, m.len));
+                b.complete(9);
+            }
+            r
+        };
+        covered.extend(ranges);
+        let mut seen = vec![false; 300];
+        for &(s, l) in &covered {
+            for i in s..s + l {
+                assert!(!seen[i as usize]);
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        assert!(b.epoch_exhausted());
+    }
+}

@@ -1,0 +1,336 @@
+//! Calibrated GPU-cluster device model — the substitute for the paper's
+//! 8×8-V100 + 100 Gbps InfiniBand testbed (DESIGN.md §1).
+//!
+//! Every cluster-scale experiment (Figs 1, 5, 7–12, Tables 2–4) depends on
+//! *relative* timing: per-mini-batch compute, ring-allreduce communication,
+//! execution-context preparation, and model-broadcast time. This module
+//! provides those as an analytic model calibrated against the constants
+//! the paper itself reports:
+//!
+//!  * Table 2 — stop-resume stopping times (≈ context preparation) and
+//!    EDL stopping times (≈ model broadcast) per DNN;
+//!  * Table 3 — end-to-end scale-in/out durations;
+//!  * Fig 1  — throughput / GPU-efficiency curves (diminishing returns for
+//!    ResNet50; VGG19 throughput drop past 8 GPUs; VGG19@b384 efficiency
+//!    peak at p=4 due to activation-memory pressure at small parallelism);
+//!  * §2.2   — stop-resume overhead growing with parallelism (sequential
+//!    GPU-device initialisation in TensorFlow).
+
+/// The nine DNNs of TensorFlow's official benchmark suite the paper's
+//  workloads draw from (§6.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dnn {
+    AlexNet,
+    ResNet50,
+    ResNet101,
+    ResNet152,
+    VGG16,
+    VGG19,
+    Inception3,
+    GoogLeNet,
+    Bert,
+}
+
+pub const ALL_DNNS: [Dnn; 9] = [
+    Dnn::AlexNet,
+    Dnn::ResNet50,
+    Dnn::ResNet101,
+    Dnn::ResNet152,
+    Dnn::VGG16,
+    Dnn::VGG19,
+    Dnn::Inception3,
+    Dnn::GoogLeNet,
+    Dnn::Bert,
+];
+
+/// Static per-model characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct DnnSpec {
+    pub name: &'static str,
+    /// gradient/model size (MB) — what ring allreduce moves per step
+    pub params_mb: f64,
+    /// single-V100 training throughput at a comfortable per-GPU batch
+    /// (samples/sec) — calibrated from public tf_cnn_benchmarks numbers
+    pub base_sps: f64,
+    /// activation memory per sample (MB) — drives the small-parallelism
+    /// efficiency dip (Fig 1, VGG19@b384)
+    pub act_mb: f64,
+    /// stop-resume stopping time (s) for a 4→5 scale, Table 2 row 1 —
+    /// dominated by execution-context preparation (Fig 5, gray)
+    pub sr_stop_s: f64,
+    /// EDL stopping time (s), Table 2 row 2 — model broadcast only
+    pub edl_stop_s: f64,
+    /// EDL end-to-end scale-out (s), Table 3 — context prep on joiners
+    pub scale_out_e2e_s: f64,
+    /// EDL end-to-end scale-in (s), Table 3 — graceful exit
+    pub scale_in_e2e_s: f64,
+}
+
+impl Dnn {
+    pub fn spec(self) -> DnnSpec {
+        match self {
+            Dnn::AlexNet => DnnSpec { name: "AlexNet", params_mb: 233.0, base_sps: 3000.0, act_mb: 1.5, sr_stop_s: 30.0, edl_stop_s: 0.18, scale_out_e2e_s: 16.0, scale_in_e2e_s: 1.6 },
+            Dnn::ResNet50 => DnnSpec { name: "ResNet50", params_mb: 98.0, base_sps: 360.0, act_mb: 9.0, sr_stop_s: 44.0, edl_stop_s: 0.67, scale_out_e2e_s: 21.0, scale_in_e2e_s: 1.8 },
+            Dnn::ResNet101 => DnnSpec { name: "ResNet101", params_mb: 170.0, base_sps: 210.0, act_mb: 18.0, sr_stop_s: 58.0, edl_stop_s: 1.2, scale_out_e2e_s: 28.0, scale_in_e2e_s: 2.5 },
+            Dnn::ResNet152 => DnnSpec { name: "ResNet152", params_mb: 230.0, base_sps: 150.0, act_mb: 25.0, sr_stop_s: 70.0, edl_stop_s: 1.8, scale_out_e2e_s: 36.0, scale_in_e2e_s: 3.3 },
+            Dnn::VGG16 => DnnSpec { name: "VGG16", params_mb: 528.0, base_sps: 200.0, act_mb: 40.0, sr_stop_s: 35.0, edl_stop_s: 0.36, scale_out_e2e_s: 19.0, scale_in_e2e_s: 3.3 },
+            Dnn::VGG19 => DnnSpec { name: "VGG19", params_mb: 548.0, base_sps: 170.0, act_mb: 50.0, sr_stop_s: 38.0, edl_stop_s: 0.71, scale_out_e2e_s: 20.0, scale_in_e2e_s: 3.3 },
+            Dnn::Inception3 => DnnSpec { name: "Inception3", params_mb: 92.0, base_sps: 220.0, act_mb: 14.0, sr_stop_s: 50.0, edl_stop_s: 0.6, scale_out_e2e_s: 24.0, scale_in_e2e_s: 2.2 },
+            Dnn::GoogLeNet => DnnSpec { name: "GoogLeNet", params_mb: 27.0, base_sps: 500.0, act_mb: 8.0, sr_stop_s: 32.0, edl_stop_s: 0.12, scale_out_e2e_s: 17.0, scale_in_e2e_s: 1.7 },
+            Dnn::Bert => DnnSpec { name: "Bert", params_mb: 420.0, base_sps: 80.0, act_mb: 30.0, sr_stop_s: 62.0, edl_stop_s: 1.4, scale_out_e2e_s: 30.0, scale_in_e2e_s: 3.0 },
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Dnn> {
+        ALL_DNNS.into_iter().find(|d| d.spec().name.eq_ignore_ascii_case(name))
+    }
+}
+
+/// Hardware configuration of the simulated cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct HwConfig {
+    pub gpus_per_machine: u32,
+    /// effective intra-machine allreduce bus bandwidth (GB/s, NVLink-class)
+    pub local_bw_gbs: f64,
+    /// effective cross-machine ring bandwidth (GB/s) — ~25 Gbit effective
+    /// allreduce goodput over 100 Gbps IB with 2019-era Horovod/TCP stacks
+    pub cross_bw_gbs: f64,
+    /// GPU memory (MB)
+    pub gpu_mem_mb: f64,
+    /// per-allreduce-step latency (s) — dominates for tiny tensors
+    pub step_latency_s: f64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        // the paper's testbed: 8× V100 SMX2 per machine, 100 Gbps IB
+        HwConfig {
+            gpus_per_machine: 8,
+            local_bw_gbs: 60.0,
+            cross_bw_gbs: 3.0,
+            gpu_mem_mb: 16_000.0,
+            step_latency_s: 30e-6,
+        }
+    }
+}
+
+/// Per-mini-batch time (s) for `model` on `p` GPUs with aggregate batch
+/// `global_batch` (the paper keeps the aggregate constant under scaling).
+pub fn step_time(model: Dnn, p: u32, global_batch: u32, hw: &HwConfig) -> f64 {
+    assert!(p >= 1);
+    let spec = model.spec();
+    let b_local = global_batch as f64 / p as f64;
+
+    // --- compute: base rate, degraded under activation-memory pressure ---
+    let mem_frac = b_local * spec.act_mb / hw.gpu_mem_mb;
+    // under-utilisation at tiny local batches (kernels can't fill the SMs)
+    let small_batch_penalty = 1.0 + 0.35 / b_local.max(0.25);
+    // memory-pressure slowdown: grows smoothly once activations exceed
+    // ~30% of device memory; steep past 75% (swapping / cache thrash —
+    // the paper's "insufficient cache space" note on VGG19@b384, §2.2)
+    let pressure = if mem_frac > 0.3 {
+        1.0 + 2.0 * (mem_frac - 0.3).powi(2) + if mem_frac > 0.75 { 4.0 * (mem_frac - 0.75) } else { 0.0 }
+    } else {
+        1.0
+    };
+    let compute_s = b_local / spec.base_sps * small_batch_penalty * pressure;
+
+    // --- communication: bandwidth-optimal ring, slowest-link bound ---
+    let comm_s = if p == 1 {
+        0.0
+    } else {
+        let bw = if p <= hw.gpus_per_machine { hw.local_bw_gbs } else { hw.cross_bw_gbs };
+        let volume_gb = 2.0 * (p as f64 - 1.0) / p as f64 * (spec.params_mb / 1000.0);
+        volume_gb / bw + 2.0 * (p as f64 - 1.0) * hw.step_latency_s
+    };
+
+    // partial overlap of comm with the backward pass (Horovod-style tensor
+    // fusion): the un-overlappable fraction grows as comm outpaces compute
+    let exposed = if comm_s <= 0.0 {
+        0.0
+    } else {
+        comm_s * 0.6 + comm_s * 0.4 * ((comm_s - compute_s).max(0.0) / comm_s)
+    };
+    compute_s + exposed
+}
+
+/// Aggregate training throughput (samples/s).
+pub fn throughput(model: Dnn, p: u32, global_batch: u32, hw: &HwConfig) -> f64 {
+    global_batch as f64 / step_time(model, p, global_batch, hw)
+}
+
+/// Per-GPU throughput t(p) (samples/s/GPU).
+pub fn per_gpu_throughput(model: Dnn, p: u32, global_batch: u32, hw: &HwConfig) -> f64 {
+    throughput(model, p, global_batch, hw) / p as f64
+}
+
+/// GPU efficiency per the paper's footnote 1: t(p) / t(p*) where
+/// p* = argmax_q t(q), searched over 1..=max_p.
+pub fn efficiency(model: Dnn, p: u32, global_batch: u32, max_p: u32, hw: &HwConfig) -> f64 {
+    let t_p = per_gpu_throughput(model, p, global_batch, hw);
+    let t_best = (1..=max_p)
+        .map(|q| per_gpu_throughput(model, q, global_batch, hw))
+        .fold(f64::MIN, f64::max);
+    t_p / t_best
+}
+
+/// Stop-resume restart overhead (s) when restarting a job at parallelism
+/// `p`: context prep grows with p because TensorFlow initialises the GPUs
+/// of a machine sequentially (§2.2 footnote 5: 40→80+ s from 1→many GPUs).
+pub fn stop_resume_overhead(model: Dnn, p: u32) -> f64 {
+    let spec = model.spec();
+    spec.sr_stop_s * (0.82 + 0.045 * p as f64)
+}
+
+/// Decomposition of the scale-out cost (Fig 5) at parallelism `p`.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleOutBreakdown {
+    /// library loading + memory allocation + graph build + data pipeline (s)
+    pub context_prep_s: f64,
+    /// topology (re)construction: leader RPC + ring rebuild (s)
+    pub topology_s: f64,
+    /// model preparation: broadcast from one existing worker (s)
+    pub model_prep_s: f64,
+}
+
+impl ScaleOutBreakdown {
+    pub fn total(&self) -> f64 {
+        self.context_prep_s + self.topology_s + self.model_prep_s
+    }
+}
+
+pub fn scale_out_breakdown(model: Dnn, p: u32) -> ScaleOutBreakdown {
+    let spec = model.spec();
+    ScaleOutBreakdown {
+        // sequential device init: grows with target parallelism (§2.2)
+        context_prep_s: spec.scale_out_e2e_s * (0.82 + 0.045 * p as f64),
+        topology_s: 0.050, // tens of sub-ms coordination messages (§4.4)
+        model_prep_s: spec.edl_stop_s,
+    }
+}
+
+/// EDL stopping time for scale-out = model broadcast only (§4.2 / Table 2).
+pub fn edl_stop_time(model: Dnn) -> f64 {
+    model.spec().edl_stop_s
+}
+
+/// EDL end-to-end scale-out/in times (Table 3).
+pub fn edl_scale_out_e2e(model: Dnn) -> f64 {
+    model.spec().scale_out_e2e_s
+}
+pub fn edl_scale_in_e2e(model: Dnn) -> f64 {
+    model.spec().scale_in_e2e_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HW: HwConfig = HwConfig {
+        gpus_per_machine: 8,
+        local_bw_gbs: 60.0,
+        cross_bw_gbs: 3.0,
+        gpu_mem_mb: 16_000.0,
+        step_latency_s: 30e-6,
+    };
+
+    #[test]
+    fn resnet50_throughput_increases_with_diminishing_gains() {
+        // Fig 1 shape: monotone throughput, diminishing marginal gains
+        let b = 512;
+        let th: Vec<f64> = [1u32, 2, 4, 8, 16].iter().map(|&p| throughput(Dnn::ResNet50, p, b, &HW)).collect();
+        for w in th.windows(2) {
+            assert!(w[1] > w[0], "throughput should rise: {th:?}");
+        }
+        let gain_2 = th[1] / th[0];
+        let gain_16 = th[4] / th[3];
+        assert!(gain_2 > gain_16, "gains should diminish: {th:?}");
+    }
+
+    #[test]
+    fn resnet50_efficiency_decreases_with_parallelism() {
+        let b = 512;
+        let eff: Vec<f64> = [1u32, 2, 4, 8, 16].iter().map(|&p| efficiency(Dnn::ResNet50, p, b, 16, &HW)).collect();
+        for w in eff.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "efficiency should fall: {eff:?}");
+        }
+        assert!((eff[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vgg19_throughput_drops_past_8_gpus() {
+        // Fig 1: VGG19's big model makes cross-machine comm dominate
+        let b = 384;
+        let t8 = throughput(Dnn::VGG19, 8, b, &HW);
+        let t16 = throughput(Dnn::VGG19, 16, b, &HW);
+        assert!(t16 < t8, "VGG19 should slow past one machine: t8={t8:.1} t16={t16:.1}");
+    }
+
+    #[test]
+    fn vgg19_b384_efficiency_peaks_at_4() {
+        // Fig 1 / §2.2: small parallelism -> huge local batch -> activation
+        // memory pressure; best per-GPU throughput at p=4
+        let b = 384;
+        let best = (1u32..=16)
+            .max_by(|&a, &q| {
+                per_gpu_throughput(Dnn::VGG19, a, b, &HW)
+                    .partial_cmp(&per_gpu_throughput(Dnn::VGG19, q, b, &HW))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(best, 4, "VGG19@b384 efficiency should peak at p=4");
+    }
+
+    #[test]
+    fn stop_resume_in_papers_range() {
+        // §2.2: overhead grows with parallelism (sequential device init)
+        for d in ALL_DNNS {
+            let o1 = stop_resume_overhead(d, 1);
+            let o8 = stop_resume_overhead(d, 8);
+            assert!(o8 > o1, "{d:?}");
+        }
+        assert!(stop_resume_overhead(Dnn::ResNet152, 8) > 70.0);
+        assert!(stop_resume_overhead(Dnn::AlexNet, 1) > 20.0);
+    }
+
+    #[test]
+    fn edl_stop_an_order_of_magnitude_below_stop_resume() {
+        // Table 2's headline: 0.18–1.8 s vs 30–70 s
+        for d in ALL_DNNS {
+            let s = d.spec();
+            assert!(
+                s.sr_stop_s / s.edl_stop_s > 10.0,
+                "{}: {} vs {}",
+                s.name,
+                s.sr_stop_s,
+                s.edl_stop_s
+            );
+        }
+    }
+
+    #[test]
+    fn breakdown_dominated_by_context_prep() {
+        // Fig 5: gray (context prep) dominates
+        for d in ALL_DNNS {
+            let b = scale_out_breakdown(d, 5);
+            assert!(b.context_prep_s > 0.8 * b.total(), "{d:?}: {b:?}");
+        }
+    }
+
+    #[test]
+    fn step_time_positive_and_finite() {
+        for d in ALL_DNNS {
+            for p in [1u32, 2, 5, 8, 13, 32] {
+                let t = step_time(d, p, 256, &HW);
+                assert!(t.is_finite() && t > 0.0, "{d:?} p={p}: {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(Dnn::by_name("vgg19"), Some(Dnn::VGG19));
+        assert_eq!(Dnn::by_name("ResNet50"), Some(Dnn::ResNet50));
+        assert_eq!(Dnn::by_name("nope"), None);
+    }
+}

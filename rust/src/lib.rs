@@ -1,0 +1,39 @@
+//! # EDL — Elastic Deep Learning in Multi-Tenant GPU Clusters
+//!
+//! A from-scratch reproduction of the EDL system (Wu et al., 2019) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the elastic coordination layer: leader election
+//!   over a CAS/lease KV service ([`coordsvc`]), stop-free scale-out and
+//!   graceful-exit scale-in ([`coordinator`]), an elastic ring-allreduce
+//!   data plane ([`allreduce`] over [`transport`]), the dynamic data
+//!   pipeline ([`data`]), plus the GPU-cluster simulation substrate the
+//!   paper's evaluation needs: a calibrated device model ([`gpu_sim`]), a
+//!   Philly-like trace generator ([`trace`]), a discrete-event cluster
+//!   simulator ([`cluster`]) and the Tiresias / Elastic-Tiresias
+//!   schedulers ([`schedulers`]).
+//! * **L2** — a JAX transformer LM lowered once to HLO text
+//!   (`python/compile/model.py`), executed from Rust via PJRT
+//!   ([`runtime`]).
+//! * **L1** — Pallas kernels for the compute hot-spots
+//!   (`python/compile/kernels/`), inlined into the same HLO artifacts.
+//!
+//! Python is build-time only; the Rust binary is self-contained once
+//! `make artifacts` has run. See DESIGN.md for the paper→repo map and
+//! EXPERIMENTS.md for reproduced tables/figures.
+
+pub mod allreduce;
+pub mod cluster;
+pub mod coordinator;
+pub mod coordsvc;
+pub mod data;
+pub mod gpu_sim;
+pub mod metrics;
+pub mod rpc;
+pub mod runtime;
+pub mod schedulers;
+pub mod trace;
+pub mod transport;
+pub mod util;
+pub mod wire;
+pub mod worker;

@@ -1,0 +1,165 @@
+//! `edl` CLI — leader entrypoint and experiment driver.
+//!
+//! Subcommands:
+//!   train        run elastic data-parallel training on the AOT artifacts
+//!   profile      profile a job over a parallelism range (Table 1 API)
+//!   sim          trace-driven cluster-scheduling simulation
+//!   trace-stats  generate + summarise a synthetic Philly-like trace
+//!   kv           run a standalone coordination (etcd-like) KV server
+
+use edl::cluster::{ClusterSim, ScaleMode};
+use edl::coordinator::{ElasticTrainer, TrainerConfig};
+use edl::data::corpus::Corpus;
+use edl::metrics::JctStats;
+use edl::runtime::artifacts_dir;
+use edl::schedulers::{ElasticTiresias, Tiresias};
+use edl::trace::{self, TraceConfig};
+use edl::util::args::Args;
+use edl::worker::PjrtBackend;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional().first().map(String::as_str) {
+        Some("train") => cmd_train(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("trace-stats") => cmd_trace_stats(&args),
+        Some("kv") => cmd_kv(),
+        _ => {
+            eprintln!(
+                "usage: edl <train|profile|sim|trace-stats|kv> [--flags]\n\
+                 \n  train       --config tiny|small --workers N --steps N --agg-batch B --lr F\n\
+                 \n  profile     --config tiny --max-p 4 --min-p 1 --steps-per-level K\n\
+                 \n  sim         --scheduler tiresias|elastic-tiresias --jobs N --machines M\n\
+                 \n  trace-stats --jobs N\n\
+                 \n  kv          (serves an etcd-like KV on an ephemeral port)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn build_trainer(args: &Args, workers: usize) -> anyhow::Result<(ElasticTrainer, Arc<Corpus>)> {
+    let config = args.str("config", "tiny");
+    let agg_batch = args.usize("agg-batch", 32) as u32;
+    let backend = Arc::new(PjrtBackend::new(artifacts_dir(), &config, agg_batch, 16)?);
+    let meta = backend.meta.clone();
+    let corpus = Arc::new(Corpus::markov(
+        meta.vocab,
+        meta.seq_len,
+        args.u64("samples", 4096),
+        args.u64("data-seed", 1),
+    ));
+    let cfg = TrainerConfig {
+        agg_batch,
+        lr: args.f64("lr", 0.05) as f32,
+        n_partitions: args.u64("partitions", 64),
+        seed: args.u64("seed", 7),
+        straggler_mitigation: args.bool("straggler-mitigation", false),
+        ..Default::default()
+    };
+    Ok((ElasticTrainer::start(cfg, backend, corpus.clone(), workers), corpus))
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let workers = args.usize("workers", 2);
+    let steps = args.u64("steps", 50);
+    let (trainer, _corpus) = build_trainer(args, workers)?;
+    println!("training with {workers} workers for {steps} steps...");
+    trainer.wait_step(steps, std::time::Duration::from_secs(3600));
+    let st = trainer.status();
+    println!(
+        "step={} epoch={} p={} throughput={:.1} samples/s loss={:.4}",
+        st.step, st.epoch, st.parallelism, st.throughput_sps, st.last_loss
+    );
+    let report = trainer.stop();
+    for ev in &report.events {
+        println!("[event] step={} {}", ev.step, ev.what);
+    }
+    let pts = &report.loss_history;
+    for chunk in pts.chunks((pts.len() / 20).max(1)) {
+        let first = &chunk[0];
+        println!("step {:>5}  loss {:.4}  p={}", first.step, first.loss, first.parallelism);
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let max_p = args.usize("max-p", 4);
+    let min_p = args.usize("min-p", 1) as u32;
+    let k = args.u64("steps-per-level", 10);
+    let (trainer, _corpus) = build_trainer(args, max_p)?;
+    trainer.wait_step(3, std::time::Duration::from_secs(600));
+    let rows = trainer.profile(min_p, k);
+    println!("{:>4} {:>12} {:>14} {:>10}", "p", "samples/s", "per-GPU", "efficiency");
+    for r in &rows {
+        println!(
+            "{:>4} {:>12.1} {:>14.1} {:>10.3}",
+            r.parallelism, r.throughput, r.per_gpu_throughput, r.efficiency
+        );
+    }
+    trainer.stop();
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let n_jobs = args.usize("jobs", 2000);
+    let machines = args.usize("machines", 36);
+    let trace = trace::generate(&TraceConfig {
+        n_jobs,
+        span_s: args.f64("span-days", 14.0) * 86_400.0,
+        ..Default::default()
+    });
+    let sched_name = args.str("scheduler", "elastic-tiresias");
+    let mut sim = ClusterSim::new(machines, 8, &trace, ScaleMode::Edl);
+    match sched_name.as_str() {
+        "tiresias" => {
+            let mut s = Tiresias::new(vec![500.0, 10_000.0]);
+            sim.run(&mut s, 1e9);
+        }
+        _ => {
+            let mut s = ElasticTiresias::new(vec![500.0, 10_000.0], 10, 0.5);
+            sim.run(&mut s, 1e9);
+        }
+    }
+    let stats = JctStats::from(&sim.jcts());
+    println!("scheduler={sched_name} jobs={} machines={machines}x8", n_jobs);
+    println!(
+        "JCT  mean={:.0}s median={:.0}s p95={:.0}s  (finished {}/{})",
+        stats.mean,
+        stats.median,
+        stats.p95,
+        stats.count,
+        trace.len()
+    );
+    println!(
+        "util(tw-mean)={:.3} cluster-eff(tw-mean)={:.3}",
+        sim.util_ts.time_weighted_mean(),
+        sim.cluster_eff_ts.time_weighted_mean()
+    );
+    Ok(())
+}
+
+fn cmd_trace_stats(args: &Args) -> anyhow::Result<()> {
+    let n_jobs = args.usize("jobs", 20_000);
+    let cfg = TraceConfig { n_jobs, ..Default::default() };
+    let jobs = trace::generate(&cfg);
+    let st = trace::stats_of(&jobs, cfg.span_s);
+    println!("jobs={} span={:.0} days", st.n_jobs, cfg.span_s / 86_400.0);
+    println!(
+        "job size GPU·s: p20={:.0} p50={:.0} p90={:.0} p99={:.0}",
+        st.size_p20, st.size_p50, st.size_p90, st.size_p99
+    );
+    println!("(paper Fig 2b: p20=85, p90=58,330)");
+    Ok(())
+}
+
+fn cmd_kv() -> anyhow::Result<()> {
+    let server = edl::coordsvc::KvServer::start()?;
+    println!("coordination KV serving on {}", server.addr);
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,161 @@
+//! Metrics: JCT statistics, utilization/efficiency time series, and the
+//! GPU-resource-loss accounting used by Fig 8.
+
+use crate::util::stats;
+
+/// Job-completion-time statistics (Table 4 format).
+#[derive(Debug, Clone, Default)]
+pub struct JctStats {
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub count: usize,
+}
+
+impl JctStats {
+    pub fn from(jcts: &[f64]) -> JctStats {
+        if jcts.is_empty() {
+            return JctStats::default();
+        }
+        JctStats {
+            mean: stats::mean(jcts),
+            median: stats::median(jcts),
+            p95: stats::percentile(jcts, 95.0),
+            p99: stats::percentile(jcts, 99.0),
+            max: stats::max(jcts),
+            count: jcts.len(),
+        }
+    }
+
+    /// Percentage reduction of this vs a baseline (positive = improvement).
+    pub fn reduction_vs(&self, baseline: &JctStats) -> f64 {
+        if baseline.mean == 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.mean / baseline.mean) * 100.0
+    }
+}
+
+/// A sampled time series (t, value) with helpers for the Fig 11/12 plots.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: f64, v: f64) {
+        debug_assert!(self.points.last().map(|&(lt, _)| t >= lt).unwrap_or(true));
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Resample onto a uniform grid of `n` buckets over [t0, t1] using the
+    /// step-function (last value carried forward) interpretation.
+    pub fn resample(&self, t0: f64, t1: f64, n: usize) -> Vec<(f64, f64)> {
+        assert!(n > 0 && t1 > t0);
+        let mut out = Vec::with_capacity(n);
+        let mut idx = 0usize;
+        let mut last = self.points.first().map(|&(_, v)| v).unwrap_or(0.0);
+        for i in 0..n {
+            let t = t0 + (t1 - t0) * (i as f64 + 0.5) / n as f64;
+            while idx < self.points.len() && self.points[idx].0 <= t {
+                last = self.points[idx].1;
+                idx += 1;
+            }
+            out.push((t, last));
+        }
+        out
+    }
+
+    /// Time-weighted mean over the observed span.
+    pub fn time_weighted_mean(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.points.first().map(|&(_, v)| v).unwrap_or(0.0);
+        }
+        let mut tw = stats::TimeWeighted::default();
+        for &(t, v) in &self.points {
+            tw.observe(t, v);
+        }
+        tw.finish(self.points.last().unwrap().0)
+    }
+}
+
+/// GPU resource loss accounting for a scaling operation (Fig 8):
+/// `GPU × time` not spent training during the operation.
+///
+/// * stop-resume: ALL p_new GPUs idle for the full restart duration T;
+/// * EDL: only the joining GPUs idle during context prep (T_e2e), and the
+///   existing GPUs idle only during the brief stop (model broadcast, T_s).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceLoss {
+    pub gpu_seconds: f64,
+}
+
+pub fn stop_resume_loss(p_old: u32, p_new: u32, restart_s: f64) -> ResourceLoss {
+    // old workers stop, then the whole job restarts: everyone idles for T
+    ResourceLoss { gpu_seconds: (p_old.max(p_new)) as f64 * restart_s }
+}
+
+pub fn edl_scale_out_loss(p_old: u32, added: u32, e2e_s: f64, stop_s: f64) -> ResourceLoss {
+    ResourceLoss { gpu_seconds: added as f64 * e2e_s + p_old as f64 * stop_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jct_stats_basic() {
+        let s = JctStats::from(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.median, 3.0);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn jct_reduction() {
+        let base = JctStats::from(&[100.0; 4]);
+        let ours = JctStats::from(&[10.0; 4]);
+        assert!((ours.reduction_vs(&base) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeseries_resample_step_function() {
+        let mut ts = TimeSeries::default();
+        ts.push(0.0, 1.0);
+        ts.push(10.0, 5.0);
+        let r = ts.resample(0.0, 20.0, 4);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].1, 1.0); // t=2.5
+        assert_eq!(r[1].1, 1.0); // t=7.5
+        assert_eq!(r[2].1, 5.0); // t=12.5
+        assert_eq!(r[3].1, 5.0); // t=17.5
+    }
+
+    #[test]
+    fn timeseries_time_weighted_mean() {
+        let mut ts = TimeSeries::default();
+        ts.push(0.0, 0.0);
+        ts.push(5.0, 10.0);
+        ts.push(10.0, 10.0);
+        assert!((ts.time_weighted_mean() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig8_edl_loss_an_order_below_stop_resume() {
+        // ResNet50-ish numbers: SR restart 44 s, EDL e2e 21 s, stop 0.67 s
+        let sr = stop_resume_loss(4, 5, 44.0);
+        let edl = edl_scale_out_loss(4, 1, 21.0, 0.67);
+        assert!(sr.gpu_seconds / edl.gpu_seconds > 5.0, "{} vs {}", sr.gpu_seconds, edl.gpu_seconds);
+    }
+}

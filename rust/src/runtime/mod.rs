@@ -1,0 +1,396 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the Rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt`. One compiled
+//! executable is cached per (entry-point, batch-size) variant; the leader
+//! picks the variant matching the current per-worker batch when the
+//! parallelism changes (§3.1: aggregate batch stays constant).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Parsed `<cfg>.meta` file (flat "key value" lines written by aot.py).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub vocab: u32,
+    pub d_model: u32,
+    pub n_layers: u32,
+    pub n_heads: u32,
+    pub d_ff: u32,
+    pub seq_len: usize,
+    pub eval_batch: u32,
+    pub batches: Vec<u32>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once(char::is_whitespace) {
+                kv.insert(k.to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| kv.get(k).ok_or_else(|| anyhow!("meta missing key {k}"));
+        Ok(ModelMeta {
+            name: get("name")?.clone(),
+            param_count: get("param_count")?.parse()?,
+            vocab: get("vocab")?.parse()?,
+            d_model: get("d_model")?.parse()?,
+            n_layers: get("n_layers")?.parse()?,
+            n_heads: get("n_heads")?.parse()?,
+            d_ff: get("d_ff")?.parse()?,
+            seq_len: get("seq_len")?.parse()?,
+            eval_batch: get("eval_batch")?.parse()?,
+            batches: get("batches")?
+                .split(',')
+                .map(|s| s.parse::<u32>().map_err(Into::into))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Largest exported per-worker batch that fits `wanted`.
+    /// With parallelism p and aggregate batch B, the leader asks for
+    /// `pick_batch(B / p)`.
+    pub fn pick_batch(&self, wanted: u32) -> Option<u32> {
+        self.batches.iter().copied().filter(|&b| b <= wanted).max()
+    }
+}
+
+/// A loaded model family: the PJRT client plus lazily compiled executables
+/// for each artifact variant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: ModelMeta,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Wall-clock breakdown of an executable load (feeds the Fig 5 context-
+/// preparation decomposition for the CPU substrate).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadTiming {
+    pub parse_s: f64,
+    pub compile_s: f64,
+}
+
+impl ModelMeta {
+    /// Load and parse `<config>.meta` without creating a PJRT client.
+    pub fn load(artifacts_dir: impl AsRef<Path>, config: &str) -> Result<ModelMeta> {
+        let meta_path = artifacts_dir.as_ref().join(format!("{config}.meta"));
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        ModelMeta::parse(&meta_text)
+    }
+}
+
+impl Runtime {
+    /// Open `artifacts/` for the named config (e.g. "tiny", "small").
+    ///
+    /// NOTE: the PJRT client is not `Send`/`Sync`; each worker thread owns
+    /// its own `Runtime` (which is exactly the paper's per-worker
+    /// execution-context model — context preparation happens per worker).
+    pub fn open(artifacts_dir: impl AsRef<Path>, config: &str) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let meta = ModelMeta::load(&dir, config)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, meta, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch cached) the artifact `<name>.hlo.txt`.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let (exe, _t) = self.load_with_timing(name)?;
+        Ok(exe)
+    }
+
+    /// Compile an artifact and report parse/compile timing (used by the
+    /// scaling-overhead benchmarks; this *is* the execution-context-
+    /// preparation cost on the CPU substrate).
+    pub fn load_with_timing(&self, name: &str) -> Result<(Arc<xla::PjRtLoadedExecutable>, LoadTiming)> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let t1 = std::time::Instant::now();
+        let exe = Arc::new(
+            self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        let t2 = std::time::Instant::now();
+        let timing = LoadTiming {
+            parse_s: (t1 - t0).as_secs_f64(),
+            compile_s: (t2 - t1).as_secs_f64(),
+        };
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok((exe, timing))
+    }
+
+    /// Pre-compile every variant needed for parallelism in `1..=max_p`
+    /// at aggregate batch `agg_batch` (context preparation, §4.2).
+    pub fn warmup(&self, agg_batch: u32, max_p: u32) -> Result<()> {
+        let cfg = self.meta.name.clone();
+        self.executable(&format!("{cfg}_init"))?;
+        self.executable(&format!("{cfg}_apply"))?;
+        let mut wanted: Vec<u32> = Vec::new();
+        for p in 1..=max_p {
+            if let Some(b) = self.meta.pick_batch(agg_batch / p.max(1)) {
+                if !wanted.contains(&b) {
+                    wanted.push(b);
+                }
+            }
+        }
+        for b in wanted {
+            self.executable(&format!("{cfg}_grad_b{b}"))?;
+        }
+        Ok(())
+    }
+
+    // -- typed entry points --------------------------------------------------
+
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// init(seed) -> flat params
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let exe = self.executable(&format!("{}_init", self.meta.name))?;
+        let out = self.run(&exe, &[xla::Literal::scalar(seed)])?;
+        let params = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("init returned empty tuple"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        if params.len() != self.meta.param_count {
+            bail!("init produced {} params, meta says {}", params.len(), self.meta.param_count);
+        }
+        Ok(params)
+    }
+
+    fn tokens_literal(&self, tokens: &[i32], b: u32) -> Result<xla::Literal> {
+        let s = self.meta.seq_len;
+        if tokens.len() != b as usize * s {
+            bail!("batch buffer is {} tokens, want {}x{}", tokens.len(), b, s);
+        }
+        xla::Literal::vec1(tokens)
+            .reshape(&[b as i64, s as i64])
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// grad_step(params, tokens[b,S]) -> (loss, grads)
+    pub fn grad_step(&self, params: &[f32], tokens: &[i32], b: u32) -> Result<(f32, Vec<f32>)> {
+        let exe = self.executable(&format!("{}_grad_b{}", self.meta.name, b))?;
+        let p = xla::Literal::vec1(params);
+        let t = self.tokens_literal(tokens, b)?;
+        let out = self.run(&exe, &[p, t])?;
+        let mut it = out.into_iter();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?[0];
+        let grads = it
+            .next()
+            .ok_or_else(|| anyhow!("missing grads"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok((loss, grads))
+    }
+
+    /// apply(params, grads, lr) -> new params (L1 fused SGD kernel)
+    pub fn apply_update(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let exe = self.executable(&format!("{}_apply", self.meta.name))?;
+        let out = self.run(
+            &exe,
+            &[xla::Literal::vec1(params), xla::Literal::vec1(grads), xla::Literal::scalar(lr)],
+        )?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("apply returned empty tuple"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// fused train_step(params, tokens, lr) -> (loss, new params)
+    pub fn train_step(&self, params: &[f32], tokens: &[i32], b: u32, lr: f32) -> Result<(f32, Vec<f32>)> {
+        let exe = self.executable(&format!("{}_train_b{}", self.meta.name, b))?;
+        let p = xla::Literal::vec1(params);
+        let t = self.tokens_literal(tokens, b)?;
+        let out = self.run(&exe, &[p, t, xla::Literal::scalar(lr)])?;
+        let mut it = out.into_iter();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?[0];
+        let new_params = it
+            .next()
+            .ok_or_else(|| anyhow!("missing params"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok((loss, new_params))
+    }
+
+    // -- device-resident fast path (§Perf) -----------------------------------
+    //
+    // Parameters live in a PJRT buffer across steps; only gradients cross
+    // the host boundary (they must, for the Rust-side ring allreduce).
+    // The `apply` executable is compiled without a tuple wrapper so its
+    // output buffer feeds the next grad_step directly.
+
+    /// Upload the flat parameter vector once.
+    pub fn upload_params(&self, params: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(params, &[params.len()], None)
+            .map_err(|e| anyhow!("upload params: {e:?}"))
+    }
+
+    /// Download parameters (model broadcast to joiners / checkpointing).
+    /// NOTE: goes through a Literal — this CPU PJRT build does not
+    /// implement CopyRawToHost. Off the hot path (broadcast/checkpoint
+    /// only), so the extra copy is irrelevant.
+    pub fn download_params(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("download params: {e:?}"))?;
+        let out = lit.to_vec::<f32>().map_err(|e| anyhow!("download params: {e:?}"))?;
+        if out.len() != self.meta.param_count {
+            bail!("downloaded {} params, expected {}", out.len(), self.meta.param_count);
+        }
+        Ok(out)
+    }
+
+    /// grad_step against device-resident params: only tokens go up and
+    /// (loss, grads) come down.
+    pub fn grad_step_dev(
+        &self,
+        params: &xla::PjRtBuffer,
+        tokens: &[i32],
+        b: u32,
+    ) -> Result<(f32, Vec<f32>)> {
+        let exe = self.executable(&format!("{}_grad_b{}", self.meta.name, b))?;
+        let s = self.meta.seq_len;
+        if tokens.len() != b as usize * s {
+            bail!("batch buffer is {} tokens, want {}x{}", tokens.len(), b, s);
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[b as usize, s], None)
+            .map_err(|e| anyhow!("upload tokens: {e:?}"))?;
+        let out = exe
+            .execute_b(&[params, &tok_buf])
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let mut it = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?.into_iter();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?[0];
+        let grads = it
+            .next()
+            .ok_or_else(|| anyhow!("missing grads"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok((loss, grads))
+    }
+
+    /// SGD update on device: params buffer in, params buffer out (no host
+    /// round-trip for the parameter vector).
+    pub fn apply_update_dev(
+        &self,
+        params: &xla::PjRtBuffer,
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.executable(&format!("{}_applyb", self.meta.name))?;
+        let grads_buf = self
+            .client
+            .buffer_from_host_buffer(grads, &[grads.len()], None)
+            .map_err(|e| anyhow!("upload grads: {e:?}"))?;
+        let lr_buf = self
+            .client
+            .buffer_from_host_buffer(&[lr], &[], None)
+            .map_err(|e| anyhow!("upload lr: {e:?}"))?;
+        let mut out = exe
+            .execute_b(&[params, &grads_buf, &lr_buf])
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        out.pop()
+            .and_then(|mut v| v.pop())
+            .ok_or_else(|| anyhow!("applyb returned no buffer"))
+    }
+
+    /// eval loss on one batch (batch size = meta.eval_batch)
+    pub fn eval_loss(&self, params: &[f32], tokens: &[i32]) -> Result<f32> {
+        let b = self.meta.eval_batch;
+        let exe = self.executable(&format!("{}_loss_b{}", self.meta.name, b))?;
+        let p = xla::Literal::vec1(params);
+        let t = self.tokens_literal(tokens, b)?;
+        let out = self.run(&exe, &[p, t])?;
+        Ok(out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("missing loss"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?[0])
+    }
+}
+
+/// Locate the artifacts directory: $EDL_ARTIFACTS, ./artifacts, or
+/// ../artifacts (for tests running from target dirs).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("EDL_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let text = "name tiny\nparam_count 136960\nvocab 256\nd_model 64\nn_layers 2\nn_heads 4\nd_ff 256\nseq_len 64\neval_batch 1\nbatches 1,2,4,8,16\n";
+        let m = ModelMeta::parse(text).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.param_count, 136960);
+        assert_eq!(m.batches, vec![1, 2, 4, 8, 16]);
+        assert_eq!(m.seq_len, 64);
+    }
+
+    #[test]
+    fn meta_missing_key_rejected() {
+        assert!(ModelMeta::parse("name tiny\n").is_err());
+    }
+
+    #[test]
+    fn pick_batch_rounds_down() {
+        let m = ModelMeta::parse(
+            "name t\nparam_count 1\nvocab 2\nd_model 1\nn_layers 1\nn_heads 1\nd_ff 1\nseq_len 1\neval_batch 1\nbatches 1,2,4,8\n",
+        )
+        .unwrap();
+        assert_eq!(m.pick_batch(8), Some(8));
+        assert_eq!(m.pick_batch(7), Some(4));
+        assert_eq!(m.pick_batch(3), Some(2));
+        assert_eq!(m.pick_batch(1), Some(1));
+        assert_eq!(m.pick_batch(0), None);
+    }
+
+    // Integration tests against real artifacts live in rust/tests/.
+}

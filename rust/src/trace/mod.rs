@@ -1,0 +1,269 @@
+//! Philly-like workload trace generation and analysis.
+//!
+//! The paper's Figures 2, 3, 12 and Table 4 are driven by Microsoft's
+//! production trace (≈2,300 GPUs, two months, >100,000 jobs). The trace is
+//! not shipped here, so this module generates a synthetic trace calibrated
+//! to the statistics the paper reports (DESIGN.md §1):
+//!
+//!  * job sizes (parallelism × runtime) span orders of magnitude with
+//!    p20 ≈ 85 GPU·s and p90 ≈ 58,330 GPU·s (Fig 2b) — a lognormal body
+//!    with a Pareto tail;
+//!  * arrivals follow a diurnal + weekly pattern over two months so the
+//!    cluster oscillates between saturation (queueing) and slack (Fig 2a);
+//!  * idle intervals between consecutive jobs on a GPU come out power-law
+//!    distributed with ≈40% under 4 minutes (Fig 3) — an emergent property
+//!    measured by replaying the trace through the cluster simulator.
+
+use crate::gpu_sim::{Dnn, ALL_DNNS};
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+/// One training job in the trace.
+#[derive(Debug, Clone)]
+pub struct TraceJob {
+    pub id: u64,
+    /// submission time (s from trace start)
+    pub submit_s: f64,
+    /// user-requested parallelism
+    pub gpus: u32,
+    /// total service demand at the requested parallelism (GPU·s):
+    /// gpus × runtime-at-requested-parallelism
+    pub service_gpu_s: f64,
+    pub model: Dnn,
+}
+
+impl TraceJob {
+    /// runtime (s) when running at the requested parallelism
+    pub fn duration_s(&self) -> f64 {
+        self.service_gpu_s / self.gpus as f64
+    }
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_jobs: usize,
+    /// trace span in seconds (the paper's data covers two months)
+    pub span_s: f64,
+    /// mean arrival-rate multiplier at diurnal peak vs trough
+    pub peak_to_trough: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_jobs: 20_000,
+            span_s: 60.0 * 86_400.0,
+            peak_to_trough: 4.0,
+            seed: 20_19,
+        }
+    }
+}
+
+/// Distribution of requested parallelism (powers of two dominate in the
+/// Philly data; most jobs are small).
+fn sample_parallelism(rng: &mut Pcg) -> u32 {
+    const P: [(u32, f64); 7] =
+        [(1, 0.45), (2, 0.18), (4, 0.16), (8, 0.12), (16, 0.06), (32, 0.02), (64, 0.01)];
+    let w: Vec<f64> = P.iter().map(|&(_, w)| w).collect();
+    P[rng.weighted_index(&w)].0
+}
+
+/// Job size (GPU·s): lognormal body + Pareto tail, calibrated so the
+/// quantiles match Fig 2b (p20 ≈ 85, p90 ≈ 58,330 GPU·s).
+fn sample_service(rng: &mut Pcg) -> f64 {
+    if rng.bool_with(0.92) {
+        // body: ln-space mean ~ ln(1200), sigma ~ 2.6
+        rng.lognormal(7.1, 2.6).clamp(1.0, 5e5)
+    } else {
+        // heavy tail: multi-day distributed jobs
+        rng.pareto(5e4, 0.9).min(5e6)
+    }
+}
+
+/// Diurnal+weekly arrival intensity at time t (relative, mean ≈ 1).
+pub fn arrival_intensity(t_s: f64, peak_to_trough: f64) -> f64 {
+    let day = 86_400.0;
+    let hour_phase = (t_s % day) / day * std::f64::consts::TAU;
+    // peak mid-day, trough at night
+    let diurnal = 1.0 + (peak_to_trough - 1.0) / (peak_to_trough + 1.0) * (hour_phase - std::f64::consts::PI).cos();
+    let weekday = if ((t_s / day) as u64 % 7) >= 5 { 0.55 } else { 1.0 };
+    diurnal * weekday
+}
+
+/// Generate a calibrated synthetic trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceJob> {
+    let mut rng = Pcg::seeded(cfg.seed);
+    // thinning-based nonhomogeneous Poisson arrivals
+    let base_rate = cfg.n_jobs as f64 / cfg.span_s * 1.6; // oversample, thin to intensity
+    let mut jobs = Vec::with_capacity(cfg.n_jobs);
+    let mut t = 0.0;
+    let mut id = 0;
+    while jobs.len() < cfg.n_jobs {
+        t += rng.exponential(base_rate);
+        if t > cfg.span_s {
+            // wrap: keep density constant if we ran past the span
+            t %= cfg.span_s;
+        }
+        let intensity = arrival_intensity(t, cfg.peak_to_trough);
+        if !rng.bool_with((intensity / cfg.peak_to_trough).min(1.0)) {
+            continue;
+        }
+        let gpus = sample_parallelism(&mut rng);
+        let service = sample_service(&mut rng);
+        jobs.push(TraceJob {
+            id,
+            submit_s: t,
+            gpus,
+            service_gpu_s: service,
+            model: *rng.choice(&ALL_DNNS),
+        });
+        id += 1;
+    }
+    jobs.sort_by(|a, b| a.submit_s.partial_cmp(&b.submit_s).unwrap());
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i as u64;
+    }
+    jobs
+}
+
+/// Summary statistics used by the Fig 2 benchmark.
+pub struct TraceStats {
+    pub n_jobs: usize,
+    pub size_p20: f64,
+    pub size_p50: f64,
+    pub size_p90: f64,
+    pub size_p99: f64,
+    /// offered load (GPU·s demanded per second) in hourly buckets
+    pub hourly_load: Vec<f64>,
+}
+
+pub fn stats_of(jobs: &[TraceJob], span_s: f64) -> TraceStats {
+    let sizes: Vec<f64> = jobs.iter().map(|j| j.service_gpu_s).collect();
+    let hours = (span_s / 3600.0).ceil() as usize;
+    let mut hourly = vec![0.0; hours];
+    for j in jobs {
+        let h = (j.submit_s / 3600.0) as usize;
+        if h < hours {
+            hourly[h] += j.service_gpu_s;
+        }
+    }
+    for v in hourly.iter_mut() {
+        *v /= 3600.0;
+    }
+    TraceStats {
+        n_jobs: jobs.len(),
+        size_p20: stats::percentile(&sizes, 20.0),
+        size_p50: stats::percentile(&sizes, 50.0),
+        size_p90: stats::percentile(&sizes, 90.0),
+        size_p99: stats::percentile(&sizes, 99.0),
+        hourly_load: hourly,
+    }
+}
+
+/// Save/load traces as a simple line format (id submit gpus service model).
+pub fn save(jobs: &[TraceJob], path: &std::path::Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for j in jobs {
+        writeln!(f, "{} {} {} {} {}", j.id, j.submit_s, j.gpus, j.service_gpu_s, j.model.spec().name)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &std::path::Path) -> std::io::Result<Vec<TraceJob>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut jobs = Vec::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let id = it.next().unwrap().parse().unwrap();
+        let submit_s = it.next().unwrap().parse().unwrap();
+        let gpus = it.next().unwrap().parse().unwrap();
+        let service_gpu_s = it.next().unwrap().parse().unwrap();
+        let model = Dnn::by_name(it.next().unwrap()).unwrap();
+        jobs.push(TraceJob { id, submit_s, gpus, service_gpu_s, model });
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_trace() -> Vec<TraceJob> {
+        generate(&TraceConfig { n_jobs: 5_000, span_s: 14.0 * 86_400.0, ..Default::default() })
+    }
+
+    #[test]
+    fn job_count_and_ordering() {
+        let jobs = small_trace();
+        assert_eq!(jobs.len(), 5_000);
+        assert!(jobs.windows(2).all(|w| w[0].submit_s <= w[1].submit_s));
+        assert!(jobs.iter().enumerate().all(|(i, j)| j.id == i as u64));
+    }
+
+    #[test]
+    fn size_quantiles_match_paper_order_of_magnitude() {
+        // Fig 2b: p20 = 85 GPU·s, p90 = 58,330 GPU·s. Accept the right
+        // orders of magnitude (calibration, not exact replication).
+        let jobs = generate(&TraceConfig { n_jobs: 30_000, ..Default::default() });
+        let st = stats_of(&jobs, 60.0 * 86_400.0);
+        assert!(st.size_p20 > 8.0 && st.size_p20 < 900.0, "p20={}", st.size_p20);
+        assert!(st.size_p90 > 6_000.0 && st.size_p90 < 600_000.0, "p90={}", st.size_p90);
+        assert!(st.size_p90 / st.size_p20 > 100.0, "spread too small");
+    }
+
+    #[test]
+    fn parallelism_mostly_small_powers_of_two() {
+        let jobs = small_trace();
+        assert!(jobs.iter().all(|j| j.gpus.is_power_of_two()));
+        let small = jobs.iter().filter(|j| j.gpus <= 4).count();
+        assert!(small as f64 > 0.6 * jobs.len() as f64);
+    }
+
+    #[test]
+    fn load_varies_over_time() {
+        // Fig 2a: the cluster oscillates between saturation and slack
+        let jobs = small_trace();
+        let st = stats_of(&jobs, 14.0 * 86_400.0);
+        let peak = stats::percentile(&st.hourly_load, 95.0);
+        let trough = stats::percentile(&st.hourly_load, 5.0);
+        assert!(peak > 2.0 * trough.max(1e-9), "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn intensity_diurnal_shape() {
+        let noon = arrival_intensity(12.0 * 3600.0, 4.0);
+        let midnight = arrival_intensity(0.0, 4.0);
+        assert!(noon > midnight, "noon={noon} midnight={midnight}");
+        // weekend dip (day 5 is a weekend day from trace start)
+        let weekday = arrival_intensity(2.0 * 86_400.0 + 43_200.0, 4.0);
+        let weekend = arrival_intensity(5.0 * 86_400.0 + 43_200.0, 4.0);
+        assert!(weekend < weekday);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let jobs = generate(&TraceConfig { n_jobs: 100, ..Default::default() });
+        let tmp = std::env::temp_dir().join("edl_trace_test.txt");
+        save(&jobs, &tmp).unwrap();
+        let back = load(&tmp).unwrap();
+        assert_eq!(back.len(), jobs.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.gpus, b.gpus);
+            assert!((a.service_gpu_s - b.service_gpu_s).abs() < 1e-6);
+            assert_eq!(a.model, b.model);
+        }
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = generate(&TraceConfig { n_jobs: 500, seed: 1, ..Default::default() });
+        let b = generate(&TraceConfig { n_jobs: 500, seed: 1, ..Default::default() });
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.submit_s == y.submit_s && x.service_gpu_s == y.service_gpu_s));
+    }
+}

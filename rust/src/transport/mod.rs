@@ -1,0 +1,389 @@
+//! Point-to-point transport used by the ring-allreduce engine and the
+//! model-broadcast path. Two implementations share one trait:
+//!
+//!  * [`InProcHub`]/[`InProcEndpoint`] — lock-free-ish MPSC channels for
+//!    workers living in one process (the elastic trainer's data plane; the
+//!    stand-in for NCCL on the paper's NVLink/IB fabric),
+//!  * [`TcpNode`] — framed TCP with `TCP_NODELAY` (§4.4 of the paper:
+//!    Nagle's algorithm disabled on every coordination socket) for the
+//!    multi-process deployment and the latency benchmark.
+//!
+//! Messages are tagged; `recv_from` performs selective receive with an
+//! internal pending queue so ring neighbours and broadcast frames can
+//! interleave safely on one endpoint.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub type NodeId = u32;
+
+/// Well-known tags.
+pub mod tag {
+    /// ring allreduce reduce-scatter/allgather chunks (base; +step)
+    pub const RING: u32 = 0x1000;
+    /// model broadcast to joining workers
+    pub const BCAST: u32 = 0x2000;
+    /// RPC frames
+    pub const RPC: u32 = 0x3000;
+}
+
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub from: NodeId,
+    pub tag: u32,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum NetError {
+    #[error("peer {0} unknown/disconnected")]
+    UnknownPeer(NodeId),
+    #[error("receive timed out (from={from:?}, tag={tag:?})")]
+    Timeout { from: Option<NodeId>, tag: Option<u32> },
+    #[error("endpoint closed")]
+    Closed,
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, NetError>;
+
+/// Point-to-point messaging with selective receive.
+pub trait PointToPoint: Send {
+    fn id(&self) -> NodeId;
+    fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()>;
+    /// Receive the next message matching (from, tag); other messages are
+    /// buffered, not dropped.
+    fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>>;
+    /// Receive any message.
+    fn recv_any(&mut self, timeout: Duration) -> Result<Msg>;
+}
+
+// ---------------------------------------------------------------------------
+// in-process hub
+// ---------------------------------------------------------------------------
+
+/// Registry connecting in-process endpoints. Dynamic membership: endpoints
+/// can join/leave at any time (that *is* the elasticity under test).
+#[derive(Default)]
+pub struct InProcHub {
+    senders: Mutex<HashMap<NodeId, Sender<Msg>>>,
+}
+
+impl InProcHub {
+    pub fn new() -> Arc<InProcHub> {
+        Arc::new(InProcHub::default())
+    }
+
+    pub fn join(self: &Arc<Self>, id: NodeId) -> InProcEndpoint {
+        let (tx, rx) = channel();
+        let prev = self.senders.lock().unwrap().insert(id, tx);
+        assert!(prev.is_none(), "node id {id} already joined");
+        InProcEndpoint { id, hub: self.clone(), rx, pending: VecDeque::new() }
+    }
+
+    pub fn members(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.senders.lock().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn send(&self, msg: Msg, to: NodeId) -> Result<()> {
+        let senders = self.senders.lock().unwrap();
+        let tx = senders.get(&to).ok_or(NetError::UnknownPeer(to))?;
+        tx.send(msg).map_err(|_| NetError::UnknownPeer(to))
+    }
+
+    fn leave(&self, id: NodeId) {
+        self.senders.lock().unwrap().remove(&id);
+    }
+}
+
+pub struct InProcEndpoint {
+    id: NodeId,
+    hub: Arc<InProcHub>,
+    rx: Receiver<Msg>,
+    pending: VecDeque<Msg>,
+}
+
+impl InProcEndpoint {
+    /// Leave the hub (graceful exit); subsequent sends to this node fail.
+    pub fn leave(self) {
+        self.hub.leave(self.id);
+    }
+}
+
+impl PointToPoint for InProcEndpoint {
+    fn id(&self) -> NodeId {
+        self.id
+    }
+
+    fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()> {
+        self.hub.send(Msg { from: self.id, tag, payload }, to)
+    }
+
+    fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>> {
+        if let Some(pos) = self.pending.iter().position(|m| m.from == from && m.tag == tag) {
+            return Ok(self.pending.remove(pos).unwrap().payload);
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(NetError::Timeout { from: Some(from), tag: Some(tag) });
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(m) if m.from == from && m.tag == tag => return Ok(m.payload),
+                Ok(m) => self.pending.push_back(m),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+            }
+        }
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Msg> {
+        if let Some(m) = self.pending.pop_front() {
+            return Ok(m);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(m),
+            Err(RecvTimeoutError::Timeout) => Err(NetError::Timeout { from: None, tag: None }),
+            Err(RecvTimeoutError::Disconnected) => Err(NetError::Closed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP node
+// ---------------------------------------------------------------------------
+
+/// Framed-TCP endpoint: a listener thread accepts peer connections and
+/// pumps decoded frames into the same selective-receive queue the in-proc
+/// endpoint uses. Outbound connections are cached per peer.
+pub struct TcpNode {
+    id: NodeId,
+    pub addr: String,
+    rx: Receiver<Msg>,
+    pending: VecDeque<Msg>,
+    outbound: HashMap<NodeId, std::net::TcpStream>,
+    directory: Arc<Mutex<HashMap<NodeId, String>>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl TcpNode {
+    pub fn start(id: NodeId, directory: Arc<Mutex<HashMap<NodeId, String>>>) -> Result<TcpNode> {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        directory.lock().unwrap().insert(id, addr.clone());
+        let (tx, rx) = channel::<Msg>();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        std::thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let _ = stream.set_nodelay(true);
+                            let mut reader = std::io::BufReader::new(stream);
+                            loop {
+                                let frame = match crate::wire::read_frame(&mut reader) {
+                                    Ok(f) => f,
+                                    Err(_) => break,
+                                };
+                                let mut d = crate::wire::Dec::new(&frame);
+                                let from = match d.u32() {
+                                    Ok(f) => f,
+                                    Err(_) => break,
+                                };
+                                let tag = match d.u32() {
+                                    Ok(t) => t,
+                                    Err(_) => break,
+                                };
+                                let payload = frame[8..].to_vec();
+                                if tx.send(Msg { from, tag, payload }).is_err() {
+                                    break;
+                                }
+                            }
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        Ok(TcpNode { id, addr, rx, pending: VecDeque::new(), outbound: HashMap::new(), directory, stop })
+    }
+
+    fn stream_to(&mut self, to: NodeId) -> Result<&mut std::net::TcpStream> {
+        if !self.outbound.contains_key(&to) {
+            let addr = self
+                .directory
+                .lock()
+                .unwrap()
+                .get(&to)
+                .cloned()
+                .ok_or(NetError::UnknownPeer(to))?;
+            let stream = std::net::TcpStream::connect(&addr)?;
+            stream.set_nodelay(true)?; // §4.4
+            self.outbound.insert(to, stream);
+        }
+        Ok(self.outbound.get_mut(&to).unwrap())
+    }
+}
+
+impl Drop for TcpNode {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        self.directory.lock().unwrap().remove(&self.id);
+    }
+}
+
+impl PointToPoint for TcpNode {
+    fn id(&self) -> NodeId {
+        self.id
+    }
+
+    fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()> {
+        let id = self.id;
+        let stream = self.stream_to(to)?;
+        let mut e = crate::wire::Enc::with_capacity(8 + payload.len());
+        e.u32(id).u32(tag);
+        let mut frame = e.into_bytes();
+        frame.extend_from_slice(&payload);
+        crate::wire::write_frame(stream, &frame).map_err(|e| match e {
+            crate::wire::WireError::Io(io) => NetError::Io(io),
+            _ => NetError::Closed,
+        })
+    }
+
+    fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>> {
+        if let Some(pos) = self.pending.iter().position(|m| m.from == from && m.tag == tag) {
+            return Ok(self.pending.remove(pos).unwrap().payload);
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(NetError::Timeout { from: Some(from), tag: Some(tag) });
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(m) if m.from == from && m.tag == tag => return Ok(m.payload),
+                Ok(m) => self.pending.push_back(m),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+            }
+        }
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Msg> {
+        if let Some(m) = self.pending.pop_front() {
+            return Ok(m);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(m),
+            Err(RecvTimeoutError::Timeout) => Err(NetError::Timeout { from: None, tag: None }),
+            Err(RecvTimeoutError::Disconnected) => Err(NetError::Closed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: Duration = Duration::from_secs(5);
+
+    #[test]
+    fn inproc_basic_send_recv() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        a.send(2, 7, vec![1, 2, 3]).unwrap();
+        assert_eq!(b.recv_from(1, 7, T).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn inproc_selective_receive_buffers_others() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        a.send(2, 10, vec![10]).unwrap();
+        a.send(2, 20, vec![20]).unwrap();
+        // ask for tag 20 first; tag 10 must not be lost
+        assert_eq!(b.recv_from(1, 20, T).unwrap(), vec![20]);
+        assert_eq!(b.recv_from(1, 10, T).unwrap(), vec![10]);
+    }
+
+    #[test]
+    fn inproc_send_to_departed_peer_fails() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let b = hub.join(2);
+        b.leave();
+        assert!(matches!(a.send(2, 0, vec![]), Err(NetError::UnknownPeer(2))));
+    }
+
+    #[test]
+    fn inproc_timeout() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let err = a.recv_from(9, 9, Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, NetError::Timeout { .. }));
+    }
+
+    #[test]
+    fn inproc_members_sorted() {
+        let hub = InProcHub::new();
+        let _c = hub.join(3);
+        let _a = hub.join(1);
+        let _b = hub.join(2);
+        assert_eq!(hub.members(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let mut a = TcpNode::start(1, dir.clone()).unwrap();
+        let mut b = TcpNode::start(2, dir.clone()).unwrap();
+        a.send(2, 5, b"ping".to_vec()).unwrap();
+        assert_eq!(b.recv_from(1, 5, T).unwrap(), b"ping".to_vec());
+        b.send(1, 6, b"pong".to_vec()).unwrap();
+        assert_eq!(a.recv_from(2, 6, T).unwrap(), b"pong".to_vec());
+    }
+
+    #[test]
+    fn tcp_large_payload() {
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let mut a = TcpNode::start(1, dir.clone()).unwrap();
+        let mut b = TcpNode::start(2, dir.clone()).unwrap();
+        let big = vec![0xABu8; 4 << 20];
+        a.send(2, 1, big.clone()).unwrap();
+        assert_eq!(b.recv_from(1, 1, T).unwrap(), big);
+    }
+
+    #[test]
+    fn tcp_selective_receive() {
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let mut a = TcpNode::start(1, dir.clone()).unwrap();
+        let mut b = TcpNode::start(2, dir.clone()).unwrap();
+        let mut c = TcpNode::start(3, dir.clone()).unwrap();
+        a.send(3, 1, vec![1]).unwrap();
+        b.send(3, 1, vec![2]).unwrap();
+        // order of arrival from different peers is arbitrary; selective
+        // receive must untangle it
+        assert_eq!(c.recv_from(2, 1, T).unwrap(), vec![2]);
+        assert_eq!(c.recv_from(1, 1, T).unwrap(), vec![1]);
+    }
+}

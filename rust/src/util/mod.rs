@@ -1,0 +1,33 @@
+//! Foundation utilities built in-repo (the offline image vendors only the
+//! crates the `xla` bindings need, so PRNG, stats, JSON/CSV output, arg
+//! parsing and property-testing helpers are all implemented here — see
+//! DESIGN.md §1 substitution table).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock milliseconds (f64) — convenience for timing code.
+pub fn now_ms() -> f64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap()
+        .as_secs_f64()
+        * 1e3
+}
+
+/// Format seconds with adaptive units for human-readable tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}

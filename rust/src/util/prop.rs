@@ -1,0 +1,66 @@
+//! Lightweight property-based testing helper (proptest is unavailable
+//! offline). Runs a property over many PCG-seeded random cases; on failure
+//! it retries from the same seed with case shrinking left to the property
+//! author, and reports the failing seed for exact reproduction.
+
+use super::rng::Pcg;
+
+/// Run `prop` for `cases` random cases. The property receives a seeded RNG
+/// and returns Err(description) on failure. Panics with the failing seed.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Pcg) -> Result<(), String>,
+{
+    check_seeded(name, 0xED1_2024, cases, prop)
+}
+
+/// Same as `check` with an explicit base seed (use to reproduce failures).
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: u64, prop: F)
+where
+    F: Fn(&mut Pcg) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::prop::check_seeded({name:?}, {seed:#x}, 1, ..)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // interior mutability via Cell for the Fn bound
+        let counter = std::cell::Cell::new(0u64);
+        check("always-ok", 50, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-bad\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-bad", 10, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn seeds_vary_across_cases() {
+        let seen = std::cell::RefCell::new(std::collections::HashSet::new());
+        check("distinct", 20, |rng| {
+            seen.borrow_mut().insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.borrow().len(), 20);
+    }
+}

@@ -1,0 +1,182 @@
+//! Descriptive statistics, percentiles, CDFs and histograms used by the
+//! trace analysis and every benchmark harness.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile with linear interpolation; `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Empirical CDF evaluated at `points`: fraction of xs <= point.
+pub fn cdf_at(xs: &[f64], points: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|p| {
+            let idx = v.partition_point(|x| x <= p);
+            idx as f64 / v.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Histogram over log-spaced bins between lo and hi; returns (edges, counts).
+pub fn log_histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(lo > 0.0 && hi > lo && bins > 0);
+    let ratio = (hi / lo).powf(1.0 / bins as f64);
+    let edges: Vec<f64> = (0..=bins).map(|i| lo * ratio.powi(i as i32)).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        if x < lo || x >= hi {
+            continue;
+        }
+        let b = ((x / lo).ln() / ratio.ln()).floor() as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    (edges, counts)
+}
+
+/// Histogram over linear bins; returns (edges, counts).
+pub fn linear_histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(hi > lo && bins > 0);
+    let w = (hi - lo) / bins as f64;
+    let edges: Vec<f64> = (0..=bins).map(|i| lo + w * i as f64).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        if x < lo || x >= hi {
+            continue;
+        }
+        counts[(((x - lo) / w) as usize).min(bins - 1)] += 1;
+    }
+    (edges, counts)
+}
+
+/// Online time-weighted average of a step function (used for utilization
+/// and efficiency time series in the cluster simulator).
+#[derive(Default, Clone)]
+pub struct TimeWeighted {
+    last_t: f64,
+    last_v: f64,
+    acc: f64,
+    total_t: f64,
+    started: bool,
+}
+
+impl TimeWeighted {
+    pub fn observe(&mut self, t: f64, v: f64) {
+        if self.started {
+            let dt = t - self.last_t;
+            assert!(dt >= -1e-9, "time went backwards: {} -> {}", self.last_t, t);
+            self.acc += self.last_v * dt.max(0.0);
+            self.total_t += dt.max(0.0);
+        }
+        self.started = true;
+        self.last_t = t;
+        self.last_v = v;
+    }
+
+    pub fn finish(&mut self, t: f64) -> f64 {
+        self.observe(t, self.last_v);
+        if self.total_t == 0.0 {
+            self.last_v
+        } else {
+            self.acc / self.total_t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs = [1.0, 2.0, 2.0, 10.0];
+        let c = cdf_at(&xs, &[0.5, 1.0, 2.0, 5.0, 10.0]);
+        assert_eq!(c, vec![0.0, 0.25, 0.75, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn log_hist_counts_everything_in_range() {
+        let xs: Vec<f64> = (1..100).map(|i| i as f64).collect();
+        let (_e, counts) = log_histogram(&xs, 1.0, 100.0, 10);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn linear_hist_bins() {
+        let xs = [0.5, 1.5, 2.5];
+        let (_e, counts) = linear_histogram(&xs, 0.0, 3.0, 3);
+        assert_eq!(counts, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn time_weighted_average() {
+        let mut tw = TimeWeighted::default();
+        tw.observe(0.0, 1.0); // 1.0 for t in [0, 2)
+        tw.observe(2.0, 3.0); // 3.0 for t in [2, 4)
+        let avg = tw.finish(4.0);
+        assert!((avg - 2.0).abs() < 1e-12);
+    }
+}

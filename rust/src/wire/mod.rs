@@ -1,0 +1,313 @@
+//! Binary wire codec + length-prefixed framing (serde/bincode are not
+//! available offline, so EDL's coordination messages serialise through this
+//! hand-rolled little-endian codec).
+//!
+//! The framing matches the paper's observation (§4.4): coordination
+//! messages are small (hundreds of bytes) and latency-critical, so frames
+//! are a single 4-byte length prefix + payload, written with one syscall,
+//! and the TCP transport layer disables Nagle's algorithm.
+
+use std::io::{Read, Write};
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("truncated message: wanted {wanted} more bytes, have {have}")]
+    Truncated { wanted: usize, have: usize },
+    #[error("invalid enum tag {tag} for {ty}")]
+    BadTag { tag: u32, ty: &'static str },
+    #[error("invalid utf-8 string")]
+    BadUtf8,
+    #[error("frame too large: {0} bytes")]
+    FrameTooLarge(usize),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, WireError>;
+
+/// Hard cap on frame size — coordination messages are small; model
+/// broadcast frames carry full parameter vectors, so allow up to 1 GiB.
+pub const MAX_FRAME: usize = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// encoder
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::with_capacity(64) }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Enc { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn i64(&mut self, v: i64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.u8(v as u8)
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.bytes(v.as_bytes())
+    }
+
+    /// f32 vector with length prefix; bulk memcpy of the raw bytes.
+    pub fn f32s(&mut self, v: &[f32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        let bytes = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        };
+        self.buf.extend_from_slice(bytes);
+        self
+    }
+
+    pub fn u64s(&mut self, v: &[u64]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x);
+        }
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decoder
+// ---------------------------------------------------------------------------
+
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { wanted: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b).map_err(|_| WireError::BadUtf8)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        let mut out = vec![0f32; n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+        }
+        Ok(out)
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.u64()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame (single buffered write — important for
+/// latency with TCP_NODELAY: one frame, one segment).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(payload.len()));
+    }
+    let mut framed = Vec::with_capacity(4 + payload.len());
+    framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    framed.extend_from_slice(payload);
+    w.write_all(&framed)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Pcg};
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7).u32(0xDEAD_BEEF).u64(u64::MAX).i64(-42).f32(1.5).f64(-2.25).bool(true);
+        let b = e.into_bytes();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.i64().unwrap(), -42);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f64().unwrap(), -2.25);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn string_and_bytes_roundtrip() {
+        let mut e = Enc::new();
+        e.str("héllo ✓").bytes(&[0, 1, 2, 255]);
+        let b = e.into_bytes();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.str().unwrap(), "héllo ✓");
+        assert_eq!(d.bytes().unwrap(), vec![0, 1, 2, 255]);
+    }
+
+    #[test]
+    fn truncated_detected() {
+        let mut e = Enc::new();
+        e.u64(1);
+        let b = e.into_bytes();
+        let mut d = Dec::new(&b[..4]);
+        assert!(matches!(d.u64(), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn f32s_bulk_roundtrip_property() {
+        prop::check("f32s-roundtrip", 50, |rng: &mut Pcg| {
+            let n = rng.gen_range(2000) as usize;
+            let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut e = Enc::new();
+            e.f32s(&v);
+            let b = e.into_bytes();
+            let got = Dec::new(&b).f32s().map_err(|e| e.to_string())?;
+            if got != v {
+                return Err(format!("mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frame_roundtrip_over_cursor() {
+        let payload = b"coordination message".to_vec();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap(), payload);
+    }
+
+    #[test]
+    fn multiple_frames_in_sequence() {
+        let mut buf = Vec::new();
+        for i in 0..5u8 {
+            write_frame(&mut buf, &[i; 3]).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for i in 0..5u8 {
+            assert_eq!(read_frame(&mut cursor).unwrap(), vec![i; 3]);
+        }
+    }
+
+    #[test]
+    fn oversize_frame_rejected() {
+        struct Sink;
+        impl std::io::Write for Sink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        // don't allocate a real >1GiB buffer; check the length gate with a
+        // fake slice via the frame length test on read side
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cursor), Err(WireError::FrameTooLarge(_))));
+        let _ = Sink; // silence unused in case of cfg changes
+    }
+}

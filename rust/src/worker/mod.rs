@@ -1,0 +1,614 @@
+//! Worker side of the elastic trainer: the training loop a single
+//! GPU-attached process runs (§3/§4 of the paper), plus the
+//! [`Backend`]/[`Device`] abstraction that lets the same protocol drive
+//! either
+//!
+//!  * [`PjrtBackend`] — real training of the AOT-compiled JAX transformer
+//!    through PJRT (the e2e path; Python is never involved). The PJRT
+//!    client is not `Send`, so every worker thread *owns* its device —
+//!    which is precisely the paper's model: execution-context preparation
+//!    (client + executable compilation) happens per worker, and stop-free
+//!    scaling hides it behind ongoing training;
+//!  * [`SimBackend`] — a deterministic synthetic device with configurable
+//!    compute/context-prep delays, used for protocol-timing experiments
+//!    (Tables 2/3 style measurements of the real protocol) and for tests
+//!    that must not depend on artifacts.
+//!
+//! Worker mini-batch loop (synchronous data-parallel, §2.1):
+//!   fetch shard → grad_step → SyncRequest to leader → barrier reply →
+//!   ring allreduce (weighted) → local SGD apply → notify_batch_end.
+//! Scale events commit only at mini-batch boundaries; on allreduce failure
+//! the worker re-sends its SyncRequest and retries with the topology the
+//! leader hands back (approximate recovery, §4.2).
+
+use crate::allreduce;
+use crate::coordinator::{CtrlMsg, SwitchPlan, WorkerEvent};
+use crate::data::corpus::Corpus;
+use crate::data::PartitionMeta;
+use crate::runtime::{ModelMeta, Runtime};
+use crate::transport::{InProcEndpoint, NodeId};
+use crate::util::rng::Pcg;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Thread-local training device. Created inside the worker thread by
+/// [`Backend::create_device`] — that call *is* execution-context
+/// preparation (§4.2).
+///
+/// Parameters are DEVICE-RESIDENT (§Perf): the worker only moves the
+/// model across the host boundary for broadcasts, checkpoints and
+/// restores; the per-step hot path moves tokens up and gradients down
+/// (gradients must reach the host for the Rust-side ring allreduce).
+pub trait Device {
+    /// initialise parameters from the model's own init computation
+    fn init(&mut self, seed: i32) -> Result<()>;
+    /// overwrite parameters (model broadcast to a joiner, restore)
+    fn set_params(&mut self, params: Vec<f32>) -> Result<()>;
+    /// fetch parameters to host (broadcast source, checkpoint)
+    fn get_params(&mut self) -> Result<Vec<f32>>;
+    /// forward+backward on one local mini-batch -> (loss, gradients)
+    fn grad(&mut self, tokens: &[i32], b: u32) -> Result<(f32, Vec<f32>)>;
+    /// SGD update with the allreduced gradients (params stay on device)
+    fn apply(&mut self, grads: &[f32], lr: f32) -> Result<()>;
+}
+
+/// Shared, thread-safe factory + model metadata.
+pub trait Backend: Send + Sync {
+    fn param_count(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    /// per-worker batch sizes this backend has executables for
+    fn supported_batches(&self) -> Vec<u32>;
+    /// execution-context preparation: build the device, load libraries,
+    /// compile executables. Runs concurrently with ongoing training when
+    /// the worker is a stop-free joiner.
+    fn create_device(&self) -> Result<Box<dyn Device>>;
+
+    /// largest supported batch ≤ wanted
+    fn pick_batch(&self, wanted: u32) -> Option<u32> {
+        self.supported_batches().into_iter().filter(|&b| b <= wanted).max()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (real training)
+// ---------------------------------------------------------------------------
+
+/// Factory for per-worker PJRT runtimes over the AOT artifacts.
+pub struct PjrtBackend {
+    dir: PathBuf,
+    config: String,
+    pub meta: ModelMeta,
+    /// aggregate batch (sizes the per-device warmup)
+    agg_batch: u32,
+    max_p: u32,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, config: &str, agg_batch: u32, max_p: u32) -> Result<PjrtBackend> {
+        let dir = artifacts_dir.into();
+        let meta = ModelMeta::load(&dir, config)?;
+        Ok(PjrtBackend { dir, config: config.to_string(), meta, agg_batch, max_p })
+    }
+}
+
+struct PjrtDevice {
+    rt: Runtime,
+    /// device-resident flat parameter vector
+    params: Option<xla::PjRtBuffer>,
+}
+
+impl PjrtDevice {
+    fn buf(&self) -> Result<&xla::PjRtBuffer> {
+        self.params.as_ref().ok_or_else(|| anyhow::anyhow!("device params not initialised"))
+    }
+}
+
+impl Device for PjrtDevice {
+    fn init(&mut self, seed: i32) -> Result<()> {
+        let host = self.rt.init_params(seed)?;
+        self.params = Some(self.rt.upload_params(&host)?);
+        Ok(())
+    }
+    fn set_params(&mut self, params: Vec<f32>) -> Result<()> {
+        self.params = Some(self.rt.upload_params(&params)?);
+        Ok(())
+    }
+    fn get_params(&mut self) -> Result<Vec<f32>> {
+        self.rt.download_params(self.buf()?)
+    }
+    fn grad(&mut self, tokens: &[i32], b: u32) -> Result<(f32, Vec<f32>)> {
+        self.rt.grad_step_dev(self.buf()?, tokens, b)
+    }
+    fn apply(&mut self, grads: &[f32], lr: f32) -> Result<()> {
+        let new_buf = self.rt.apply_update_dev(self.buf()?, grads, lr)?;
+        self.params = Some(new_buf);
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn param_count(&self) -> usize {
+        self.meta.param_count
+    }
+    fn seq_len(&self) -> usize {
+        self.meta.seq_len
+    }
+    fn supported_batches(&self) -> Vec<u32> {
+        self.meta.batches.clone()
+    }
+    fn create_device(&self) -> Result<Box<dyn Device>> {
+        // the expensive step stop-free scaling hides: client construction +
+        // compilation of every executable this worker might need
+        let rt = Runtime::open(&self.dir, &self.config)?;
+        rt.warmup(self.agg_batch, self.max_p)?;
+        rt.executable(&format!("{}_applyb", self.meta.name))?;
+        Ok(Box::new(PjrtDevice { rt, params: None }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simulated backend (protocol tests / timing experiments)
+// ---------------------------------------------------------------------------
+
+/// Deterministic synthetic backend: gradients are a pure function of
+/// (params, tokens), so scaled and unscaled runs are comparable exactly.
+/// Optional artificial delays emulate device compute and context prep.
+#[derive(Clone)]
+pub struct SimBackend {
+    pub n_params: usize,
+    pub seq: usize,
+    pub batches: Vec<u32>,
+    /// artificial compute delay: ms per 32-sample reference batch (scales
+    /// linearly with the actual local batch, like a real device)
+    pub compute_ms: u64,
+    /// artificial context-preparation delay (ms)
+    pub ctx_prep_ms: u64,
+}
+
+impl SimBackend {
+    pub fn fast(n_params: usize) -> SimBackend {
+        SimBackend { n_params, seq: 16, batches: vec![1, 2, 4, 8, 16, 32], compute_ms: 0, ctx_prep_ms: 0 }
+    }
+}
+
+struct SimDevice {
+    cfg: SimBackend,
+    params: Vec<f32>,
+}
+
+impl Device for SimDevice {
+    fn init(&mut self, seed: i32) -> Result<()> {
+        let mut rng = Pcg::seeded(seed as u64);
+        self.params = (0..self.cfg.n_params).map(|_| rng.normal() as f32 * 0.1).collect();
+        Ok(())
+    }
+    fn set_params(&mut self, params: Vec<f32>) -> Result<()> {
+        self.params = params;
+        Ok(())
+    }
+    fn get_params(&mut self) -> Result<Vec<f32>> {
+        Ok(self.params.clone())
+    }
+    fn grad(&mut self, tokens: &[i32], b: u32) -> Result<(f32, Vec<f32>)> {
+        if self.cfg.compute_ms > 0 {
+            let us = self.cfg.compute_ms * 1000 * b as u64 / 32;
+            std::thread::sleep(Duration::from_micros(us.max(1)));
+        }
+        // deterministic pseudo-gradient: quadratic loss pulling params
+        // toward a token-dependent target; loss decreases under SGD
+        let mut h = 0x9E37_79B9u32;
+        for &t in tokens {
+            h = h.wrapping_mul(31).wrapping_add(t as u32);
+        }
+        let shift = (h % 1000) as f32 / 1e5;
+        let mut loss = 0.0f32;
+        let n = self.params.len() as f32;
+        let grads: Vec<f32> = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let target = shift * ((i % 7) as f32 - 3.0);
+                loss += (p - target) * (p - target);
+                2.0 * (p - target) / n * 100.0
+            })
+            .collect();
+        Ok((loss / n, grads))
+    }
+    fn apply(&mut self, grads: &[f32], lr: f32) -> Result<()> {
+        for (p, g) in self.params.iter_mut().zip(grads) {
+            *p -= lr * g;
+        }
+        Ok(())
+    }
+}
+
+impl Backend for SimBackend {
+    fn param_count(&self) -> usize {
+        self.n_params
+    }
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+    fn supported_batches(&self) -> Vec<u32> {
+        self.batches.clone()
+    }
+    fn create_device(&self) -> Result<Box<dyn Device>> {
+        if self.ctx_prep_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.ctx_prep_ms));
+        }
+        Ok(Box::new(SimDevice { cfg: self.clone(), params: Vec::new() }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker loop
+// ---------------------------------------------------------------------------
+
+/// Shared knobs the engine can flip per worker at runtime (fault/straggler
+/// injection for the §6.2 experiments).
+#[derive(Debug, Default)]
+pub struct WorkerKnobs {
+    /// extra per-step delay (ms); simulates a straggler (§6.2)
+    pub straggle_ms: AtomicU64,
+    /// worker silently dies when reaching this step (fault injection)
+    pub die_at_step: AtomicU64,
+}
+
+impl WorkerKnobs {
+    pub fn new() -> Arc<WorkerKnobs> {
+        let k = WorkerKnobs::default();
+        k.die_at_step.store(u64::MAX, Ordering::Relaxed);
+        Arc::new(k)
+    }
+}
+
+pub struct WorkerCtx {
+    pub id: NodeId,
+    pub machine: String,
+    pub backend: Arc<dyn Backend>,
+    pub corpus: Arc<Corpus>,
+    pub net: InProcEndpoint,
+    pub to_leader: Sender<WorkerEvent>,
+    pub ctrl: Receiver<CtrlMsg>,
+    pub lr: f32,
+    pub knobs: Arc<WorkerKnobs>,
+    /// whether this worker joins an already-running job (stop-free path)
+    pub joiner: bool,
+    /// parameter seed for founding workers (all founders must agree)
+    pub init_seed: i32,
+}
+
+const NET_T: Duration = Duration::from_secs(30);
+
+struct ShardCursor {
+    meta: PartitionMeta,
+    /// consumed samples within the shard
+    used: u64,
+}
+
+/// Run the worker until `Stop`, graceful exit, or injected death.
+/// This is the paper's Listing-1 loop with EDL's hooks made explicit.
+
+/// After a restore, every control message already in the mailbox predates
+/// the reset — a stale Assign adopted post-reset would double-assign a
+/// partition (the leader re-pools it via the worker_left requeue), and a
+/// stale SyncGo would trigger a mistagged allreduce. Drop them all; the
+/// leader answers fresh requests from the restored state.
+fn drain_stale_ctrl(ctrl: &Receiver<CtrlMsg>) {
+    while let Ok(msg) = ctrl.try_recv() {
+        if matches!(msg, CtrlMsg::Stop) {
+            // can't un-receive: honor it by re-queueing impossible; Stop is
+            // terminal anyway — the next recv site exits on disconnect, so
+            // treat an in-drain Stop as an immediate panic-free exit signal
+            // by pushing it back via a thread-local is overkill; workers
+            // re-check Stop every step. Dropping one Stop is safe because
+            // the engine also disconnects the channel on shutdown.
+            break;
+        }
+    }
+}
+
+pub fn worker_loop(mut ctx: WorkerCtx) {
+    if let Err(e) = worker_loop_inner(&mut ctx) {
+        // no logger is installed in tests/examples — make worker deaths
+        // visible on stderr as well (a dead worker otherwise only shows
+        // up via the leader's failure detector)
+        eprintln!("[edl] worker {} exited with error: {e:#}", ctx.id);
+        log::warn!("worker {} exited with error: {e:?}", ctx.id);
+    }
+}
+
+#[allow(unused_assignments)] // ring/grads are refreshed at every sync barrier
+fn worker_loop_inner(ctx: &mut WorkerCtx) -> Result<()> {
+    let send = |m: WorkerEvent| {
+        let _ = ctx.to_leader.send(m);
+    };
+
+    // -- join protocol -------------------------------------------------------
+    send(WorkerEvent::Register { id: ctx.id, machine: ctx.machine.clone() });
+
+    // execution-context preparation (expensive; §4.2). For joiners this
+    // overlaps with ongoing training — the heart of stop-free scaling.
+    let mut device = ctx.backend.create_device()?;
+
+    let mut step: u64;
+    let mut ring: Arc<Vec<NodeId>>;
+    let mut local_batch: u32;
+
+    send(WorkerEvent::Ready { id: ctx.id });
+    if ctx.joiner {
+        // block until OK + future timestamp, then receive the model
+        let (join_at, r, lb, src) = loop {
+            match ctx.ctrl.recv()? {
+                CtrlMsg::Ok { join_at_step, ring, local_batch, broadcast_src } => {
+                    break (join_at_step, ring, local_batch, broadcast_src)
+                }
+                CtrlMsg::Stop => return Ok(()),
+                _ => {}
+            }
+        };
+        device.set_params(allreduce::broadcast_recv(&mut ctx.net, src, join_at, NET_T)?)?;
+        step = join_at;
+        ring = r;
+        local_batch = lb;
+    } else {
+        device.init(ctx.init_seed)?;
+        let (r, lb) = loop {
+            match ctx.ctrl.recv()? {
+                CtrlMsg::Ok { ring, local_batch, .. } => break (ring, local_batch),
+                CtrlMsg::Stop => return Ok(()),
+                _ => {}
+            }
+        };
+        step = 0;
+        ring = r;
+        local_batch = lb;
+    }
+
+    let mut shard: Option<ShardCursor> = None;
+    let mut pending_switch: Option<SwitchPlan> = None;
+    let seq = ctx.backend.seq_len();
+
+    'train: loop {
+        if step >= ctx.knobs.die_at_step.load(Ordering::Relaxed) {
+            // injected failure: vanish without goodbye (§4.2 forced exit)
+            return Ok(());
+        }
+
+        // -- data: consume local_batch samples from the dynamic pipeline ----
+        let t_step = std::time::Instant::now();
+        let mut indices: Vec<u64> = Vec::with_capacity(local_batch as usize);
+        while indices.len() < local_batch as usize {
+            match &mut shard {
+                Some(cur) if cur.used < cur.meta.len => {
+                    indices.push(cur.meta.start + cur.used);
+                    cur.used += 1;
+                }
+                _ => {
+                    if shard.take().is_some() {
+                        send(WorkerEvent::ShardDone { id: ctx.id });
+                    }
+                    send(WorkerEvent::NeedPartition { id: ctx.id });
+                    match ctx.ctrl.recv()? {
+                        CtrlMsg::Assign { meta } => shard = Some(ShardCursor { meta, used: 0 }),
+                        CtrlMsg::NoData => break, // zero/partial batch this step
+                        CtrlMsg::Stop => break 'train,
+                        CtrlMsg::Restore { params: p, at_step } => {
+                            device.set_params((*p).clone())?;
+                            step = at_step;
+                            shard = None;
+                            pending_switch = None;
+                            drain_stale_ctrl(&ctx.ctrl);
+                            continue 'train;
+                        }
+                        CtrlMsg::SendParams => {
+                            send(WorkerEvent::Params { id: ctx.id, step, params: device.get_params()? });
+                        }
+                        _ => {}
+                    }
+                    if shard.is_none() {
+                        break;
+                    }
+                }
+            }
+        }
+        let real = indices.len();
+        let weight = real as f32; // normalised ring-wide via the extra element
+        // fixed-shape executables: pad by repeating (weight counts real only)
+        let (loss, grads) = if real > 0 {
+            let mut padded = indices.clone();
+            while padded.len() < local_batch as usize {
+                padded.push(indices[padded.len() % real]);
+            }
+            let tokens = ctx.corpus.gather(&padded);
+            debug_assert_eq!(tokens.len(), local_batch as usize * seq);
+            device.grad(&tokens, local_batch)?
+        } else {
+            (0.0, vec![0f32; ctx.backend.param_count()])
+        };
+
+        let straggle = ctx.knobs.straggle_ms.load(Ordering::Relaxed);
+        if straggle > 0 {
+            std::thread::sleep(Duration::from_millis(straggle));
+        }
+
+        // -- gradient synchronisation barrier (notify_batch_end) ------------
+        let mut grads = grads;
+        let step_ms = t_step.elapsed().as_secs_f64() * 1e3;
+        'sync: loop {
+            send(WorkerEvent::Sync {
+                id: ctx.id,
+                step,
+                loss,
+                weight,
+                step_ms,
+                shard: shard.as_ref().map(|c| (c.meta.id, c.used)),
+            });
+            let (go_ring, go_tag, go_switch) = loop {
+                match ctx.ctrl.recv()? {
+                    CtrlMsg::SyncGo { ring: r, sync_tag, switch } => break (r, sync_tag, switch),
+                    CtrlMsg::Stop => break 'train,
+                    CtrlMsg::Restore { params: p, at_step } => {
+                        // consistent recovery: reset and restart the loop
+                        device.set_params((*p).clone())?;
+                        step = at_step;
+                        shard = None;
+                        pending_switch = None;
+                        drain_stale_ctrl(&ctx.ctrl);
+                        continue 'train;
+                    }
+                    // an Assign that raced a restore/resync: adopt it if we
+                    // have no shard (it answers our own NeedPartition)
+                    CtrlMsg::Assign { meta } if shard.is_none() => {
+                        shard = Some(ShardCursor { meta, used: 0 });
+                    }
+                    CtrlMsg::SendParams => {
+                        send(WorkerEvent::Params { id: ctx.id, step, params: device.get_params()? });
+                    }
+                    _ => {}
+                }
+            };
+            ring = go_ring;
+            if let Some(plan) = go_switch {
+                pending_switch = Some(plan);
+            }
+
+            // -- weighted ring allreduce (grads ++ [weight]) -----------------
+            let mut buf = std::mem::take(&mut grads);
+            buf.push(1.0); // weight slot
+            let res =
+                allreduce::ring_allreduce(&mut ctx.net, &ring, go_tag, &mut buf, weight, NET_T);
+            match res {
+                Ok(()) => {
+                    let wsum = buf.pop().unwrap();
+                    if wsum > 0.0 {
+                        for g in buf.iter_mut() {
+                            *g /= wsum;
+                        }
+                        device.apply(&buf, ctx.lr)?;
+                    }
+                    grads = buf; // keep allocation
+                    break 'sync;
+                }
+                Err(_) => {
+                    // a peer died mid-allreduce: re-sync with the leader,
+                    // which will hand back a repaired topology (§4.2
+                    // approximate recovery). Gradients are NOT recomputed.
+                    buf.pop();
+                    if weight != 0.0 {
+                        for g in buf.iter_mut() {
+                            *g /= weight;
+                        }
+                    }
+                    grads = buf;
+                    continue 'sync;
+                }
+            }
+        }
+
+        // -- commit point: mini-batch boundary (notify_batch_end) ------------
+        if let Some(plan) = pending_switch.clone() {
+            if step + 1 == plan.at_step {
+                if plan.exiting.contains(&ctx.id) {
+                    // graceful exit: report the unprocessed remainder
+                    send(WorkerEvent::Goodbye {
+                        id: ctx.id,
+                        shard: shard.as_ref().map(|c| (c.meta.id, c.used)),
+                    });
+                    return Ok(());
+                }
+                if plan.broadcast_src == ctx.id && !plan.joiners.is_empty() {
+                    // one existing worker broadcasts the post-update model
+                    let snapshot = device.get_params()?;
+                    allreduce::broadcast_send(&mut ctx.net, &plan.joiners, plan.at_step, &snapshot)?;
+                }
+                ring = plan.ring.clone();
+                local_batch = plan.local_batch;
+                pending_switch = None;
+            }
+        }
+        let _ = ring.len(); // ring used next iteration via SyncGo
+        // params checkpoint upload if requested
+        loop {
+            match ctx.ctrl.try_recv() {
+                Ok(CtrlMsg::SendParams) => {
+                    send(WorkerEvent::Params { id: ctx.id, step, params: device.get_params()? });
+                }
+                Ok(CtrlMsg::Stop) => break 'train,
+                Ok(_) | Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => break 'train,
+            }
+        }
+        step += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_deterministic() {
+        let b = SimBackend::fast(100);
+        let mut d = b.create_device().unwrap();
+        d.init(1).unwrap();
+        let toks = vec![5i32; 16];
+        let (l1, g1) = d.grad(&toks, 1).unwrap();
+        let (l2, g2) = d.grad(&toks, 1).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn sim_backend_sgd_reduces_loss() {
+        let b = SimBackend::fast(64);
+        let mut d = b.create_device().unwrap();
+        d.init(2).unwrap();
+        let toks = vec![3i32; 16];
+        let (l0, g) = d.grad(&toks, 1).unwrap();
+        d.apply(&g, 0.1).unwrap();
+        let (l1, _) = d.grad(&toks, 1).unwrap();
+        assert!(l1 < l0, "{l1} !< {l0}");
+    }
+
+    #[test]
+    fn pick_batch_from_backend() {
+        let b = SimBackend::fast(10);
+        assert_eq!(b.pick_batch(32), Some(32));
+        assert_eq!(b.pick_batch(5), Some(4));
+        assert_eq!(b.pick_batch(0), None);
+    }
+
+    #[test]
+    fn knobs_default_immortal() {
+        let k = WorkerKnobs::new();
+        assert_eq!(k.die_at_step.load(Ordering::Relaxed), u64::MAX);
+        assert_eq!(k.straggle_ms.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn device_init_deterministic_across_instances() {
+        // founders must agree on initial params (same seed -> same params)
+        let b = SimBackend::fast(50);
+        let mut d1 = b.create_device().unwrap();
+        let mut d2 = b.create_device().unwrap();
+        d1.init(42).unwrap();
+        d2.init(42).unwrap();
+        assert_eq!(d1.get_params().unwrap(), d2.get_params().unwrap());
+    }
+
+    #[test]
+    fn set_get_params_roundtrip() {
+        let b = SimBackend::fast(30);
+        let mut d = b.create_device().unwrap();
+        let p: Vec<f32> = (0..30).map(|i| i as f32).collect();
+        d.set_params(p.clone()).unwrap();
+        assert_eq!(d.get_params().unwrap(), p);
+    }
+}

@@ -1,0 +1,136 @@
+//! End-to-end integration over the REAL PJRT runtime and AOT artifacts:
+//! multi-worker data-parallel training of the JAX transformer with elastic
+//! scaling mid-run. Requires `make artifacts` (the `tiny` config).
+
+use edl::coordinator::{ElasticTrainer, Reply, TrainerConfig};
+use edl::data::corpus::Corpus;
+use edl::runtime::{artifacts_dir, ModelMeta, Runtime};
+use edl::worker::PjrtBackend;
+use std::sync::Arc;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(600);
+
+fn have_artifacts() -> bool {
+    ModelMeta::load(artifacts_dir(), "tiny").is_ok()
+}
+
+fn start_tiny(n: usize, agg_batch: u32) -> (ElasticTrainer, Arc<Corpus>) {
+    let backend = Arc::new(PjrtBackend::new(artifacts_dir(), "tiny", agg_batch, 8).unwrap());
+    let meta = backend.meta.clone();
+    let corpus = Arc::new(Corpus::markov(meta.vocab, meta.seq_len, 4096, 3));
+    let cfg = TrainerConfig {
+        agg_batch,
+        lr: 0.2,
+        n_partitions: 64,
+        seed: 9,
+        approx_recovery: Some(true),
+        // PJRT-CPU workers oversubscribe the host cores (every client
+        // spawns a full-size thread pool), so a barrier can legitimately
+        // stall for tens of seconds around a topology switch — use a
+        // failure timeout in the scheduler-retry class (§3.1: 60 s)
+        failure_timeout: Duration::from_secs(120),
+        ..Default::default()
+    };
+    (ElasticTrainer::start(cfg, backend, corpus.clone(), n), corpus)
+}
+
+#[test]
+fn runtime_grad_matches_across_instances() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // two independent runtimes (as two workers would have) must agree
+    let r1 = Runtime::open(artifacts_dir(), "tiny").unwrap();
+    let r2 = Runtime::open(artifacts_dir(), "tiny").unwrap();
+    let p1 = r1.init_params(42).unwrap();
+    let p2 = r2.init_params(42).unwrap();
+    assert_eq!(p1, p2, "same seed, same params");
+    let toks: Vec<i32> = (0..r1.meta.seq_len as i32).map(|i| i % r1.meta.vocab as i32).collect();
+    let (l1, g1) = r1.grad_step(&p1, &toks, 1).unwrap();
+    let (l2, g2) = r2.grad_step(&p2, &toks, 1).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn runtime_train_step_decreases_loss() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir(), "tiny").unwrap();
+    let corpus = Corpus::markov(rt.meta.vocab, rt.meta.seq_len, 64, 5);
+    let mut params = rt.init_params(0).unwrap();
+    let toks = corpus.batch(0, 4);
+    let (l0, _) = rt.train_step(&params, &toks, 4, 0.5).map(|(l, p)| (l, { params = p; })).unwrap();
+    let (l1, _np) = rt.train_step(&params, &toks, 4, 0.5).unwrap();
+    assert!(l1 < l0, "loss should drop on repeated batch: {l0} -> {l1}");
+}
+
+#[test]
+fn runtime_grad_then_apply_equals_train_step() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // the decomposed path (grad → allreduce(1 worker) → apply) must equal
+    // the fused train_step artifact
+    let rt = Runtime::open(artifacts_dir(), "tiny").unwrap();
+    let corpus = Corpus::markov(rt.meta.vocab, rt.meta.seq_len, 16, 6);
+    let params = rt.init_params(1).unwrap();
+    let toks = corpus.batch(0, 2);
+    let (loss_a, grads) = rt.grad_step(&params, &toks, 2).unwrap();
+    let decomposed = rt.apply_update(&params, &grads, 0.1).unwrap();
+    let (loss_b, fused) = rt.train_step(&params, &toks, 2, 0.1).unwrap();
+    assert!((loss_a - loss_b).abs() < 1e-5);
+    let max_diff = decomposed
+        .iter()
+        .zip(&fused)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-5, "max_diff={max_diff}");
+}
+
+#[test]
+fn e2e_two_workers_train_and_scale() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (t, _corpus) = start_tiny(2, 16);
+    assert!(t.wait_step(10, T), "2-worker training stalled");
+    let st = t.status();
+    assert_eq!(st.parallelism, 2);
+    let loss_early = st.last_loss;
+    assert!(loss_early.is_finite());
+
+    // stop-free scale-out to 3 workers while training continues
+    let r = t.scale_out(vec!["m1".into()]);
+    assert!(matches!(r, Reply::Ack), "{r:?}");
+    let st = t.status();
+    assert_eq!(st.parallelism, 3);
+    assert!(t.wait_step(st.step + 10, T), "training stalled after scale-out");
+
+    // graceful scale-in back to 2
+    let victim = *t.status().workers.last().unwrap();
+    match t.scale_in(vec![victim]) {
+        Reply::Ack => {}
+        other => panic!("scale_in(worker {victim}) failed: {other:?}"),
+    }
+    let st = t.status();
+    assert_eq!(st.parallelism, 2);
+    assert!(t.wait_step(st.step + 5, T));
+
+    let report = t.stop();
+    let h = &report.loss_history;
+    assert!(h.len() > 20);
+    let first5: f32 = h[..5].iter().map(|p| p.loss).sum::<f32>() / 5.0;
+    let last5: f32 = h[h.len() - 5..].iter().map(|p| p.loss).sum::<f32>() / 5.0;
+    assert!(
+        last5 < first5,
+        "transformer loss should fall across scaling: {first5:.4} -> {last5:.4}"
+    );
+    assert!(h.iter().all(|p| p.loss.is_finite()));
+}

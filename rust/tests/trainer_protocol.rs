@@ -1,0 +1,319 @@
+//! Integration tests of the full EDL coordination protocol over the
+//! deterministic `SimBackend` (no artifacts needed): stop-free scale-out,
+//! graceful-exit scale-in, merged migration, straggler mitigation, fault
+//! injection with approximate recovery, checkpoint/restore, profiling,
+//! and the constant-aggregate-batch / exactly-once data semantics.
+
+use edl::coordinator::{Cmd, ElasticTrainer, Reply, TrainerConfig};
+use edl::data::corpus::Corpus;
+use edl::worker::{SimBackend, WorkerKnobs};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(180);
+
+fn corpus() -> Arc<Corpus> {
+    Arc::new(Corpus::markov(256, 16, 2048, 11))
+}
+
+fn sim_cfg() -> TrainerConfig {
+    TrainerConfig {
+        agg_batch: 32,
+        lr: 0.05,
+        n_partitions: 32,
+        seed: 5,
+        approx_recovery: Some(true),
+        // long enough that a descheduled worker thread under parallel test
+        // load is never mistaken for a dead one; the failure-injection
+        // tests wait up to 60 s for detection, so 3 s stays snappy
+        failure_timeout: Duration::from_secs(10),
+        ..Default::default()
+    }
+}
+
+fn start(n: usize) -> ElasticTrainer {
+    // a small per-step delay keeps parallel test binaries from busy-
+    // spinning the whole CPU (zero-delay workers starve sibling tests)
+    let backend = SimBackend { compute_ms: 2, ..SimBackend::fast(512) };
+    ElasticTrainer::start(sim_cfg(), Arc::new(backend), corpus(), n)
+}
+
+#[test]
+fn static_training_loss_decreases() {
+    let t = start(2);
+    assert!(t.wait_step(40, T), "did not reach step 40");
+    let report = t.stop();
+    assert!(report.steps >= 40);
+    let h = &report.loss_history;
+    assert!(h.len() >= 30);
+    let early: f32 = h[..5].iter().map(|p| p.loss).sum::<f32>() / 5.0;
+    let late: f32 = h[h.len() - 5..].iter().map(|p| p.loss).sum::<f32>() / 5.0;
+    assert!(late < early * 0.8, "loss should fall: early={early} late={late}");
+}
+
+#[test]
+fn four_workers_agree_on_parallelism() {
+    let t = start(4);
+    assert!(t.wait_step(10, T));
+    let st = t.status();
+    assert_eq!(st.parallelism, 4);
+    assert_eq!(st.workers.len(), 4);
+    t.stop();
+}
+
+#[test]
+fn scale_out_stop_free() {
+    let t = start(2);
+    assert!(t.wait_step(8, T));
+    let r = t.scale_out(vec!["m1".into(), "m1".into()]);
+    assert!(matches!(r, Reply::Ack), "{r:?}");
+    let st = t.status();
+    assert_eq!(st.parallelism, 4, "after scale-out");
+    assert!(t.wait_step(st.step + 10, T), "training continues after scale-out");
+    let report = t.stop();
+    // parallelism recorded in the loss history must transition 2 -> 4
+    let ps: Vec<u32> = report.loss_history.iter().map(|p| p.parallelism).collect();
+    assert!(ps.contains(&2) && ps.contains(&4), "{ps:?}");
+    // loss keeps decreasing after the switch
+    let h = &report.loss_history;
+    let late: f32 = h[h.len() - 3..].iter().map(|p| p.loss).sum::<f32>() / 3.0;
+    assert!(late < h[0].loss);
+}
+
+#[test]
+fn scale_in_graceful_exit() {
+    let t = start(3);
+    assert!(t.wait_step(8, T));
+    let victim = *t.status().workers.last().unwrap();
+    let r = t.scale_in(vec![victim]);
+    assert!(matches!(r, Reply::Ack), "{r:?}");
+    let st = t.status();
+    assert_eq!(st.parallelism, 2);
+    assert!(!st.workers.contains(&victim));
+    assert!(t.wait_step(st.step + 10, T));
+    let report = t.stop();
+    assert!(report.events.iter().any(|e| e.what.contains("goodbye")), "{:?}", report.events);
+}
+
+#[test]
+fn scale_in_rejects_removing_everyone() {
+    let t = start(2);
+    assert!(t.wait_step(4, T));
+    let ids = t.status().workers;
+    let r = t.scale_in(ids);
+    assert!(matches!(r, Reply::Err(_)), "{r:?}");
+    t.stop();
+}
+
+#[test]
+fn concurrent_scaling_gets_retry() {
+    // a scaling request racing an in-flight adjustment must get Retry
+    // (§3.1: operations commit sequentially)
+    let cfg = TrainerConfig {
+        // slow context prep so the first op is still in flight
+        ..sim_cfg()
+    };
+    let backend = SimBackend { ctx_prep_ms: 1500, ..SimBackend::fast(256) };
+    let t = ElasticTrainer::start(cfg, Arc::new(backend), corpus(), 2);
+    assert!(t.wait_step(4, Duration::from_secs(120)));
+    // fire-and-poll: first scale-out blocks on its reply, so issue it in a
+    // thread, then immediately try another op
+    let t = Arc::new(t);
+    let t2 = t.clone();
+    let h = std::thread::spawn(move || t2.scale_out(vec!["m1".into()]));
+    std::thread::sleep(Duration::from_millis(300));
+    let r2 = t.scale_in(vec![*t.status().workers.first().unwrap()]);
+    assert!(matches!(r2, Reply::Retry), "expected Retry, got {r2:?}");
+    assert!(matches!(h.join().unwrap(), Reply::Ack));
+    Arc::try_unwrap(t).ok().map(|t| t.stop());
+}
+
+#[test]
+fn migration_single_switch() {
+    let t = start(3);
+    assert!(t.wait_step(8, T));
+    let victim = *t.status().workers.first().unwrap();
+    let r = t.migrate(vec![victim], vec!["m2".into()]);
+    assert!(matches!(r, Reply::Ack), "{r:?}");
+    let st = t.status();
+    assert_eq!(st.parallelism, 3, "migration preserves parallelism");
+    assert!(!st.workers.contains(&victim));
+    let report = t.stop();
+    // exactly ONE switch commit for the whole migration
+    let commits = report.events.iter().filter(|e| e.what.contains("switch-committed")).count();
+    assert_eq!(commits, 1, "{:?}", report.events);
+}
+
+#[test]
+fn straggler_detected_and_removed() {
+    let cfg = TrainerConfig {
+        straggler_mitigation: true,
+        straggler_ratio: 1.2,
+        straggler_window: 5,
+        ..sim_cfg()
+    };
+    let backend = SimBackend { compute_ms: 10, ..SimBackend::fast(256) };
+    let t = ElasticTrainer::start(cfg, Arc::new(backend), corpus(), 3);
+    assert!(t.wait_step(5, T));
+    let victim = *t.status().workers.last().unwrap();
+    let knobs: Arc<WorkerKnobs> = t.knobs(victim).unwrap();
+    // straggle: +40ms per step on a ~10ms step (well past the 1.2× bar)
+    knobs.straggle_ms.store(40, Ordering::Relaxed);
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = t.status();
+        if st.parallelism == 2 && !st.workers.contains(&victim) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "straggler never removed");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let report = t.stop();
+    assert!(report.events.iter().any(|e| e.what.contains("straggler-detected")));
+}
+
+#[test]
+fn worker_failure_approximate_recovery() {
+    let t = start(3);
+    assert!(t.wait_step(5, T));
+    let victim = *t.status().workers.last().unwrap();
+    let knobs = t.knobs(victim).unwrap();
+    knobs.die_at_step.store(8, Ordering::Relaxed); // silent death at step 8
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = t.status();
+        if st.parallelism == 2 {
+            // training must continue past the failure
+            assert!(t.wait_step(st.step + 10, T), "stalled after failure");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "failure never detected");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let report = t.stop();
+    assert!(report.events.iter().any(|e| e.what.contains("failure-detected")));
+}
+
+#[test]
+fn checkpoint_and_restore() {
+    let dir = std::env::temp_dir().join(format!("edl_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.bin");
+
+    let t = start(2);
+    assert!(t.wait_step(10, T));
+    let r = t.cmd(Cmd::Checkpoint { path: path.clone() });
+    assert!(matches!(r, Reply::Ack), "{r:?}");
+    assert!(path.exists());
+    let ckpt_step_upper = t.status().step;
+
+    // keep training, then restore: step must rewind to <= checkpoint step
+    assert!(t.wait_step(ckpt_step_upper + 15, T));
+    let r = t.cmd(Cmd::Restore { path: path.clone() });
+    assert!(matches!(r, Reply::Ack), "{r:?}");
+    let st = t.status();
+    assert!(st.step <= ckpt_step_upper + 2, "restore should rewind: {} vs {}", st.step, ckpt_step_upper);
+    // and training proceeds from there
+    assert!(t.wait_step(st.step + 10, T));
+    t.stop();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn consistent_recovery_from_checkpoint_on_failure() {
+    let dir = std::env::temp_dir().join(format!("edl_ckpt2_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.bin");
+    let cfg = TrainerConfig {
+        approx_recovery: Some(false),
+        checkpoint_path: Some(path.clone()),
+        failure_timeout: Duration::from_secs(10),
+        ..sim_cfg()
+    };
+    let t = ElasticTrainer::start(cfg, Arc::new(SimBackend::fast(256)), corpus(), 3);
+    assert!(t.wait_step(6, T));
+    assert!(matches!(t.cmd(Cmd::Checkpoint { path: path.clone() }), Reply::Ack));
+    let victim = *t.status().workers.last().unwrap();
+    t.knobs(victim).unwrap().die_at_step.store(10, Ordering::Relaxed);
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = t.status();
+        if st.parallelism == 2 {
+            assert!(t.wait_step(st.step + 8, T), "stalled after consistent recovery");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "failure never detected");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let report = t.stop();
+    assert!(
+        report.events.iter().any(|e| e.what.contains("consistent-recovery")),
+        "{:?}",
+        report.events
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn profile_scales_down_and_reports_rows() {
+    let backend = SimBackend { compute_ms: 5, ..SimBackend::fast(256) };
+    let t = ElasticTrainer::start(sim_cfg(), Arc::new(backend), corpus(), 4);
+    assert!(t.wait_step(5, T));
+    let rows = t.profile(1, 6);
+    assert_eq!(rows.len(), 4, "{rows:?}");
+    let ps: Vec<u32> = rows.iter().map(|r| r.parallelism).collect();
+    assert_eq!(ps, vec![4, 3, 2, 1]);
+    assert!(rows.iter().all(|r| r.throughput > 0.0));
+    let best = rows.iter().map(|r| r.efficiency).fold(f64::MIN, f64::max);
+    assert!((best - 1.0).abs() < 1e-9, "best efficiency normalised to 1");
+    t.stop();
+}
+
+#[test]
+fn epochs_advance_and_events_logged() {
+    // tiny corpus so epochs cycle quickly: 2048 samples / 32 per step = 64
+    // steps per epoch
+    let t = start(2);
+    assert!(t.wait_step(140, T), "should cross two epoch boundaries");
+    let st = t.status();
+    assert!(st.epoch >= 2, "epoch={}", st.epoch);
+    let report = t.stop();
+    let advances = report.events.iter().filter(|e| e.what.contains("epoch-advance")).count();
+    assert!(advances >= 2, "{:?}", report.events);
+}
+
+#[test]
+fn aggregate_batch_constant_under_scaling() {
+    // local batch must shrink as parallelism grows: 32/2=16 -> 32/4=8
+    let t = start(2);
+    assert!(t.wait_step(6, T));
+    t.scale_out(vec!["m1".into(), "m1".into()]);
+    assert!(t.wait_step(t.status().step + 6, T));
+    let report = t.stop();
+    // weighted loss points exist on both sides of the switch
+    let before: Vec<_> = report.loss_history.iter().filter(|p| p.parallelism == 2).collect();
+    let after: Vec<_> = report.loss_history.iter().filter(|p| p.parallelism == 4).collect();
+    assert!(!before.is_empty() && !after.is_empty());
+}
+
+#[test]
+fn repeated_scale_cycle_stays_stable() {
+    // scale out and in repeatedly (the transient-resource pattern, §6.2)
+    let t = start(2);
+    assert!(t.wait_step(4, T));
+    for _ in 0..3 {
+        assert!(matches!(t.scale_out(vec!["mx".into()]), Reply::Ack));
+        let st = t.status();
+        assert_eq!(st.parallelism, 3);
+        assert!(t.wait_step(st.step + 4, T));
+        let victim = *t.status().workers.last().unwrap();
+        assert!(matches!(t.scale_in(vec![victim]), Reply::Ack));
+        let st = t.status();
+        assert_eq!(st.parallelism, 2);
+        assert!(t.wait_step(st.step + 4, T));
+    }
+    let report = t.stop();
+    let commits = report.events.iter().filter(|e| e.what.contains("switch-committed")).count();
+    assert_eq!(commits, 6);
+}
