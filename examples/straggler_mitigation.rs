@@ -26,7 +26,7 @@ fn main() {
         straggler_mitigation: true,
         straggler_ratio: 1.2,
         straggler_window: 10,
-        approx_recovery: Some(true),
+        approx_recovery: true,
         ..Default::default()
     };
     let t = ElasticTrainer::start(cfg, Arc::new(backend), corpus, workers);

@@ -9,7 +9,7 @@
 //!     cargo run --release --example transient_resources -- \
 //!         --interval-s 8 --cycles 3 --compute-ms 40 --ctx-prep-ms 2000
 
-use edl::coordinator::{ElasticTrainer, Reply, TrainerConfig};
+use edl::coordinator::{ElasticTrainer, TrainerConfig};
 use edl::data::corpus::Corpus;
 use edl::util::args::Args;
 use edl::worker::SimBackend;
@@ -39,7 +39,7 @@ fn run_scheme(
     let cfg = TrainerConfig {
         agg_batch: 32,
         n_partitions: 4096,
-        approx_recovery: Some(true),
+        approx_recovery: true,
         ..Default::default()
     };
     let n0 = if scheme == Scheme::Ideal { 5 } else { 4 };
@@ -50,9 +50,8 @@ fn run_scheme(
     for _ in 0..cycles {
         if scheme == Scheme::Edl {
             // a GPU went idle: borrow it (stop-free scale-out)
-            match t.scale_out(vec!["idle-gpu".into()]) {
-                Reply::Ack => {}
-                r => println!("  [{name}] scale-out skipped: {r:?}"),
+            if let Err(e) = t.scale_out(vec!["idle-gpu".into()]) {
+                println!("  [{name}] scale-out skipped: {e}");
             }
             std::thread::sleep(interval);
             // the GPU is revoked: graceful exit

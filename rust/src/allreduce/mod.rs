@@ -21,16 +21,45 @@ use crate::transport::{tag, NetError, PointToPoint};
 use crate::wire::{Dec, Enc};
 use std::time::Duration;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArError {
-    #[error("ring must contain this node")]
     NotInRing,
-    #[error("ring too small: {0}")]
     RingTooSmall(usize),
-    #[error("net: {0}")]
-    Net(#[from] NetError),
-    #[error("wire: {0}")]
-    Wire(#[from] crate::wire::WireError),
+    Net(NetError),
+    Wire(crate::wire::WireError),
+}
+
+impl std::fmt::Display for ArError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArError::NotInRing => write!(f, "ring must contain this node"),
+            ArError::RingTooSmall(n) => write!(f, "ring too small: {n}"),
+            ArError::Net(e) => write!(f, "net: {e}"),
+            ArError::Wire(e) => write!(f, "wire: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ArError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArError::Net(e) => Some(e),
+            ArError::Wire(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<NetError> for ArError {
+    fn from(e: NetError) -> ArError {
+        ArError::Net(e)
+    }
+}
+
+impl From<crate::wire::WireError> for ArError {
+    fn from(e: crate::wire::WireError) -> ArError {
+        ArError::Wire(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, ArError>;

@@ -1,0 +1,863 @@
+//! The paper's Table-1 job-control API as ONE versioned, transport-
+//! agnostic surface (`scale_out`, `scale_in`, `migrate`, `profile`,
+//! `status`, plus `checkpoint`/`restore`/`stop`).
+//!
+//! A scheduler talks to a job exclusively through [`JobControl`]. Three
+//! implementations share the trait, so the same policy code drives all of
+//! them:
+//!
+//!  * [`coordinator::ElasticTrainer`](crate::coordinator::ElasticTrainer)
+//!    — the live in-process engine;
+//!  * [`JobClient`] ⇄ [`JobServer`] — the TCP deployment: requests travel
+//!    as [`wire::Envelope`] frames (version byte + sequence number +
+//!    encoded [`Request`]/[`Response`]) over the same framed codec the
+//!    rest of the system uses;
+//!  * [`cluster::SimJobHandle`](crate::cluster::SimJobHandle) — jobs
+//!    inside the discrete-event cluster simulator, so simulated
+//!    scheduling policies are written against the real control surface.
+//!
+//! Errors are typed ([`ElasticError`]); the §3.1 "an adjustment is in
+//! flight → retry later" contract is [`ElasticError::AdjustmentInFlight`]
+//! plus the [`JobControlExt`] retry-with-backoff helpers, written once
+//! here instead of at every call site.
+
+use crate::transport::NodeId;
+use crate::wire::{self, Dec, Enc, Envelope, WireError};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+/// Typed failure modes of the Table-1 API.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ElasticError {
+    /// a parallelism adjustment is already in flight (§3.1) — retry later
+    AdjustmentInFlight,
+    /// a worker id named in the request is not part of the job
+    UnknownWorker(NodeId),
+    /// the cluster/simulator cannot provide the requested resources
+    InsufficientResources(String),
+    /// the request is malformed or would leave the job in an invalid
+    /// state (e.g. scale-in removing every worker)
+    InvalidRequest(String),
+    /// the operation started but could not complete (worker died mid-
+    /// switch, leader gone, unexpected reply)
+    Aborted(String),
+    /// transport / filesystem failure
+    Io(String),
+}
+
+impl std::fmt::Display for ElasticError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ElasticError::AdjustmentInFlight => {
+                write!(f, "an adjustment is in flight; retry later")
+            }
+            ElasticError::UnknownWorker(id) => write!(f, "unknown worker {id}"),
+            ElasticError::InsufficientResources(m) => write!(f, "insufficient resources: {m}"),
+            ElasticError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            ElasticError::Aborted(m) => write!(f, "operation aborted: {m}"),
+            ElasticError::Io(m) => write!(f, "io: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ElasticError {}
+
+// ---------------------------------------------------------------------------
+// data types
+// ---------------------------------------------------------------------------
+
+/// Reply to `status()` (Table 1 `status`): a point-in-time view of the job.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobStatus {
+    pub parallelism: u32,
+    pub step: u64,
+    pub epoch: u64,
+    pub throughput_sps: f64,
+    pub last_loss: f32,
+    pub workers: Vec<NodeId>,
+}
+
+/// One level of a `profile()` sweep (Table 1 `profile`, §5.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileRow {
+    pub parallelism: u32,
+    pub throughput: f64,
+    pub per_gpu_throughput: f64,
+    /// per-GPU throughput normalised by the best level in the sweep
+    pub efficiency: f64,
+}
+
+/// The Table-1 efficiency definition, in one place: normalise each row's
+/// per-GPU throughput by the best level in the sweep. Every `profile`
+/// implementation (live engine, simulator) funnels through this.
+pub fn normalise_efficiency(rows: &mut [ProfileRow]) {
+    let best = rows.iter().map(|r| r.per_gpu_throughput).fold(f64::MIN, f64::max);
+    if best > 0.0 {
+        for r in rows.iter_mut() {
+            r.efficiency = r.per_gpu_throughput / best;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the trait
+// ---------------------------------------------------------------------------
+
+/// The scheduler-facing job-control surface (the paper's Table 1).
+///
+/// All methods are synchronous: they return once the job has durably
+/// accepted (and for scaling ops, committed) the operation, or with a
+/// typed [`ElasticError`]. Implementations must return
+/// [`ElasticError::AdjustmentInFlight`] — never block indefinitely — when
+/// a previous adjustment has not committed yet (§3.1).
+pub trait JobControl {
+    /// `scale_out` (Table 1): add one worker per entry of `machines`
+    /// (opaque placement strings, "machine:gpu"). Stop-free: existing
+    /// workers keep training while joiners prepare.
+    fn scale_out(&mut self, machines: Vec<String>) -> Result<(), ElasticError>;
+
+    /// `scale_in` (Table 1): gracefully remove the named workers.
+    fn scale_in(&mut self, workers: Vec<NodeId>) -> Result<(), ElasticError>;
+
+    /// `migrate` (§5.2): scale-in `remove` + scale-out `add` committed
+    /// with ONE topology switch.
+    fn migrate(&mut self, remove: Vec<NodeId>, add: Vec<String>) -> Result<(), ElasticError>;
+
+    /// `profile` (Table 1): measure throughput from the current
+    /// parallelism down to `min_p`, `steps_per_level` mini-batches per
+    /// level (§5.2).
+    fn profile(&mut self, min_p: u32, steps_per_level: u64)
+        -> Result<Vec<ProfileRow>, ElasticError>;
+
+    /// `status` (Table 1).
+    fn status(&mut self) -> Result<JobStatus, ElasticError>;
+
+    /// Write a consistent checkpoint to `path`.
+    fn checkpoint(&mut self, path: &str) -> Result<(), ElasticError>;
+
+    /// Restore model + data-pipeline state from `path`.
+    fn restore(&mut self, path: &str) -> Result<(), ElasticError>;
+
+    /// Stop the job.
+    fn stop(&mut self) -> Result<(), ElasticError>;
+}
+
+/// The §3.1 retry contract, written once: callers that want blocking
+/// semantics wrap any [`JobControl`] call in `with_retry`, which backs
+/// off exponentially while the job reports
+/// [`ElasticError::AdjustmentInFlight`].
+pub trait JobControlExt: JobControl {
+    fn with_retry<T, F>(&mut self, timeout: Duration, mut op: F) -> Result<T, ElasticError>
+    where
+        F: FnMut(&mut Self) -> Result<T, ElasticError>,
+    {
+        let deadline = Instant::now() + timeout;
+        let mut backoff = Duration::from_millis(50);
+        loop {
+            match op(self) {
+                Err(ElasticError::AdjustmentInFlight) if Instant::now() < deadline => {
+                    std::thread::sleep(
+                        backoff.min(deadline.saturating_duration_since(Instant::now())),
+                    );
+                    backoff = (backoff * 2).min(Duration::from_secs(2));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    fn scale_out_retry(
+        &mut self,
+        machines: Vec<String>,
+        timeout: Duration,
+    ) -> Result<(), ElasticError> {
+        self.with_retry(timeout, |j| j.scale_out(machines.clone()))
+    }
+
+    fn scale_in_retry(
+        &mut self,
+        workers: Vec<NodeId>,
+        timeout: Duration,
+    ) -> Result<(), ElasticError> {
+        self.with_retry(timeout, |j| j.scale_in(workers.clone()))
+    }
+
+    fn migrate_retry(
+        &mut self,
+        remove: Vec<NodeId>,
+        add: Vec<String>,
+        timeout: Duration,
+    ) -> Result<(), ElasticError> {
+        self.with_retry(timeout, |j| j.migrate(remove.clone(), add.clone()))
+    }
+}
+
+impl<J: JobControl + ?Sized> JobControlExt for J {}
+
+// ---------------------------------------------------------------------------
+// wire forms
+// ---------------------------------------------------------------------------
+
+/// One request per [`JobControl`] method; the body of a request
+/// [`Envelope`]. The in-process trainer moves these through a typed
+/// channel without serialisation; the TCP deployment encodes them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    ScaleOut { machines: Vec<String> },
+    ScaleIn { workers: Vec<NodeId> },
+    Migrate { remove: Vec<NodeId>, add: Vec<String> },
+    Profile { min_p: u32, steps_per_level: u64 },
+    Status,
+    Checkpoint { path: String },
+    Restore { path: String },
+    Stop,
+}
+
+/// The body of a response [`Envelope`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok,
+    Status(JobStatus),
+    Profile(Vec<ProfileRow>),
+    Err(ElasticError),
+}
+
+impl Response {
+    /// Unwrap an ack-style reply.
+    pub fn unit(self) -> Result<(), ElasticError> {
+        match self {
+            Response::Ok => Ok(()),
+            Response::Err(e) => Err(e),
+            other => Err(ElasticError::Aborted(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    pub fn status(self) -> Result<JobStatus, ElasticError> {
+        match self {
+            Response::Status(s) => Ok(s),
+            Response::Err(e) => Err(e),
+            other => Err(ElasticError::Aborted(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    pub fn profile(self) -> Result<Vec<ProfileRow>, ElasticError> {
+        match self {
+            Response::Profile(rows) => Ok(rows),
+            Response::Err(e) => Err(e),
+            other => Err(ElasticError::Aborted(format!("unexpected reply {other:?}"))),
+        }
+    }
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Request::ScaleOut { machines } => {
+                e.u8(1).strs(machines);
+            }
+            Request::ScaleIn { workers } => {
+                e.u8(2).u32s(workers);
+            }
+            Request::Migrate { remove, add } => {
+                e.u8(3).u32s(remove).strs(add);
+            }
+            Request::Profile { min_p, steps_per_level } => {
+                e.u8(4).u32(*min_p).u64(*steps_per_level);
+            }
+            Request::Status => {
+                e.u8(5);
+            }
+            Request::Checkpoint { path } => {
+                e.u8(6).str(path);
+            }
+            Request::Restore { path } => {
+                e.u8(7).str(path);
+            }
+            Request::Stop => {
+                e.u8(8);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> wire::Result<Request> {
+        let mut d = Dec::new(buf);
+        match d.u8()? {
+            1 => Ok(Request::ScaleOut { machines: d.strs()? }),
+            2 => Ok(Request::ScaleIn { workers: d.u32s()? }),
+            3 => Ok(Request::Migrate { remove: d.u32s()?, add: d.strs()? }),
+            4 => Ok(Request::Profile { min_p: d.u32()?, steps_per_level: d.u64()? }),
+            5 => Ok(Request::Status),
+            6 => Ok(Request::Checkpoint { path: d.str()? }),
+            7 => Ok(Request::Restore { path: d.str()? }),
+            8 => Ok(Request::Stop),
+            tag => Err(WireError::BadTag { tag: tag as u32, ty: "api::Request" }),
+        }
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Response::Ok => {
+                e.u8(1);
+            }
+            Response::Status(s) => {
+                e.u8(2);
+                s.encode(&mut e);
+            }
+            Response::Profile(rows) => {
+                e.u8(3).u32(rows.len() as u32);
+                for r in rows {
+                    r.encode(&mut e);
+                }
+            }
+            Response::Err(err) => {
+                e.u8(4);
+                err.encode(&mut e);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> wire::Result<Response> {
+        let mut d = Dec::new(buf);
+        match d.u8()? {
+            1 => Ok(Response::Ok),
+            2 => Ok(Response::Status(JobStatus::decode(&mut d)?)),
+            3 => {
+                let n = d.u32()? as usize;
+                let rows = (0..n).map(|_| ProfileRow::decode(&mut d)).collect::<wire::Result<_>>()?;
+                Ok(Response::Profile(rows))
+            }
+            4 => Ok(Response::Err(ElasticError::decode(&mut d)?)),
+            tag => Err(WireError::BadTag { tag: tag as u32, ty: "api::Response" }),
+        }
+    }
+}
+
+impl JobStatus {
+    pub fn encode(&self, e: &mut Enc) {
+        e.u32(self.parallelism)
+            .u64(self.step)
+            .u64(self.epoch)
+            .f64(self.throughput_sps)
+            .f32(self.last_loss)
+            .u32s(&self.workers);
+    }
+
+    pub fn decode(d: &mut Dec) -> wire::Result<JobStatus> {
+        Ok(JobStatus {
+            parallelism: d.u32()?,
+            step: d.u64()?,
+            epoch: d.u64()?,
+            throughput_sps: d.f64()?,
+            last_loss: d.f32()?,
+            workers: d.u32s()?,
+        })
+    }
+}
+
+impl ProfileRow {
+    pub fn encode(&self, e: &mut Enc) {
+        e.u32(self.parallelism)
+            .f64(self.throughput)
+            .f64(self.per_gpu_throughput)
+            .f64(self.efficiency);
+    }
+
+    pub fn decode(d: &mut Dec) -> wire::Result<ProfileRow> {
+        Ok(ProfileRow {
+            parallelism: d.u32()?,
+            throughput: d.f64()?,
+            per_gpu_throughput: d.f64()?,
+            efficiency: d.f64()?,
+        })
+    }
+}
+
+impl ElasticError {
+    pub fn encode(&self, e: &mut Enc) {
+        match self {
+            ElasticError::AdjustmentInFlight => {
+                e.u8(1);
+            }
+            ElasticError::UnknownWorker(id) => {
+                e.u8(2).u32(*id);
+            }
+            ElasticError::InsufficientResources(m) => {
+                e.u8(3).str(m);
+            }
+            ElasticError::InvalidRequest(m) => {
+                e.u8(4).str(m);
+            }
+            ElasticError::Aborted(m) => {
+                e.u8(5).str(m);
+            }
+            ElasticError::Io(m) => {
+                e.u8(6).str(m);
+            }
+        }
+    }
+
+    pub fn decode(d: &mut Dec) -> wire::Result<ElasticError> {
+        match d.u8()? {
+            1 => Ok(ElasticError::AdjustmentInFlight),
+            2 => Ok(ElasticError::UnknownWorker(d.u32()?)),
+            3 => Ok(ElasticError::InsufficientResources(d.str()?)),
+            4 => Ok(ElasticError::InvalidRequest(d.str()?)),
+            5 => Ok(ElasticError::Aborted(d.str()?)),
+            6 => Ok(ElasticError::Io(d.str()?)),
+            tag => Err(WireError::BadTag { tag: tag as u32, ty: "api::ElasticError" }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP deployment: JobServer / JobClient
+// ---------------------------------------------------------------------------
+
+/// Exposes any [`JobControl`] implementation (in practice the live
+/// `ElasticTrainer`) to remote schedulers over TCP — the paper's
+/// deployment, where the cluster scheduler and the job leader are
+/// separate processes. Thread-per-connection; every connection shares the
+/// one job behind a mutex, so concurrent scheduler requests serialise
+/// exactly like the in-process command channel.
+pub struct JobServer<J: JobControl + Send + 'static> {
+    pub addr: String,
+    job: Arc<Mutex<J>>,
+    stop: Arc<AtomicBool>,
+    /// one cloned handle per accepted connection, so `shutdown` can
+    /// force-close clients that never hang up
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<J: JobControl + Send + 'static> JobServer<J> {
+    /// Bind on 127.0.0.1:0 (ephemeral port) and serve until `shutdown`.
+    pub fn start(job: J) -> std::io::Result<JobServer<J>> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let job = Arc::new(Mutex::new(job));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let job = job.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("edl-jobserver".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if let Ok(clone) = stream.try_clone() {
+                                    conns.lock().unwrap_or_else(|p| p.into_inner()).push(clone);
+                                }
+                                let job = job.clone();
+                                std::thread::spawn(move || {
+                                    let _ = serve_job_conn(stream, job);
+                                });
+                            }
+                            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn job server")
+        };
+        Ok(JobServer { addr, job, stop, conns, accept: Some(accept) })
+    }
+
+    /// Shared handle to the job (e.g. to drive it locally as well).
+    pub fn job(&self) -> Arc<Mutex<J>> {
+        self.job.clone()
+    }
+
+    /// Stop accepting, force-close remaining client connections, and hand
+    /// the job back once the connection threads have drained.
+    pub fn shutdown(mut self) -> J {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for s in self.conns.lock().unwrap_or_else(|p| p.into_inner()).drain(..) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        let mut job = self.job;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match Arc::try_unwrap(job) {
+                Ok(m) => return m.into_inner().unwrap_or_else(|p| p.into_inner()),
+                Err(back) => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "JobServer::shutdown: a connection thread is stuck \
+                         (mid-request?) and still holds the job"
+                    );
+                    job = back;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+}
+
+fn serve_job_conn<J: JobControl>(
+    stream: TcpStream,
+    job: Arc<Mutex<J>>,
+) -> wire::Result<()> {
+    wire::serve_framed(stream, move |raw| {
+        let (seq, resp) = match Envelope::decode(raw) {
+            Ok(env) => {
+                let resp = match Request::decode(&env.body) {
+                    Ok(req) => {
+                        let mut guard = job.lock().unwrap_or_else(|p| p.into_inner());
+                        dispatch(&mut *guard, req)
+                    }
+                    Err(e) => Response::Err(ElasticError::InvalidRequest(format!(
+                        "undecodable request: {e}"
+                    ))),
+                };
+                (env.seq, resp)
+            }
+            // version mismatch / garbage: reply (seq 0) instead of
+            // dropping the connection so old clients get a typed error
+            Err(e) => {
+                (0, Response::Err(ElasticError::InvalidRequest(format!("bad envelope: {e}"))))
+            }
+        };
+        Ok(Envelope::new(seq, resp.encode()).encode())
+    })
+}
+
+/// Map one decoded request onto the [`JobControl`] surface.
+pub fn dispatch<J: JobControl + ?Sized>(job: &mut J, req: Request) -> Response {
+    fn ack(r: Result<(), ElasticError>) -> Response {
+        match r {
+            Ok(()) => Response::Ok,
+            Err(e) => Response::Err(e),
+        }
+    }
+    match req {
+        Request::ScaleOut { machines } => ack(job.scale_out(machines)),
+        Request::ScaleIn { workers } => ack(job.scale_in(workers)),
+        Request::Migrate { remove, add } => ack(job.migrate(remove, add)),
+        Request::Profile { min_p, steps_per_level } => {
+            match job.profile(min_p, steps_per_level) {
+                Ok(rows) => Response::Profile(rows),
+                Err(e) => Response::Err(e),
+            }
+        }
+        Request::Status => match job.status() {
+            Ok(s) => Response::Status(s),
+            Err(e) => Response::Err(e),
+        },
+        Request::Checkpoint { path } => ack(job.checkpoint(&path)),
+        Request::Restore { path } => ack(job.restore(&path)),
+        Request::Stop => ack(job.stop()),
+    }
+}
+
+/// Blocking TCP client implementing [`JobControl`] against a remote
+/// [`JobServer`] — a scheduler process controls a live job through this
+/// exactly as it would an in-process one.
+pub struct JobClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    seq: u64,
+}
+
+impl JobClient {
+    pub fn connect(addr: &str) -> std::io::Result<JobClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?; // §4.4
+        Ok(JobClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            seq: 0,
+        })
+    }
+
+    /// One request/reply round-trip in a versioned envelope.
+    pub fn call(&mut self, req: &Request) -> Result<Response, ElasticError> {
+        let io = |e: WireError| ElasticError::Io(e.to_string());
+        self.seq += 1;
+        let env = Envelope::new(self.seq, req.encode());
+        wire::write_frame(&mut self.writer, &env.encode()).map_err(io)?;
+        let raw = wire::read_frame(&mut self.reader).map_err(io)?;
+        let env = Envelope::decode(&raw).map_err(io)?;
+        if env.seq != self.seq && env.seq != 0 {
+            return Err(ElasticError::Io(format!(
+                "reply out of sequence: got {}, want {}",
+                env.seq, self.seq
+            )));
+        }
+        Response::decode(&env.body).map_err(io)
+    }
+}
+
+impl JobControl for JobClient {
+    fn scale_out(&mut self, machines: Vec<String>) -> Result<(), ElasticError> {
+        self.call(&Request::ScaleOut { machines })?.unit()
+    }
+    fn scale_in(&mut self, workers: Vec<NodeId>) -> Result<(), ElasticError> {
+        self.call(&Request::ScaleIn { workers })?.unit()
+    }
+    fn migrate(&mut self, remove: Vec<NodeId>, add: Vec<String>) -> Result<(), ElasticError> {
+        self.call(&Request::Migrate { remove, add })?.unit()
+    }
+    fn profile(
+        &mut self,
+        min_p: u32,
+        steps_per_level: u64,
+    ) -> Result<Vec<ProfileRow>, ElasticError> {
+        self.call(&Request::Profile { min_p, steps_per_level })?.profile()
+    }
+    fn status(&mut self) -> Result<JobStatus, ElasticError> {
+        self.call(&Request::Status)?.status()
+    }
+    fn checkpoint(&mut self, path: &str) -> Result<(), ElasticError> {
+        self.call(&Request::Checkpoint { path: path.to_string() })?.unit()
+    }
+    fn restore(&mut self, path: &str) -> Result<(), ElasticError> {
+        self.call(&Request::Restore { path: path.to_string() })?.unit()
+    }
+    fn stop(&mut self) -> Result<(), ElasticError> {
+        self.call(&Request::Stop)?.unit()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::API_VERSION;
+
+    fn all_requests() -> Vec<Request> {
+        vec![
+            Request::ScaleOut { machines: vec!["m0:g1".into(), "m1:g7".into()] },
+            Request::ScaleIn { workers: vec![1, 2, 3] },
+            Request::Migrate { remove: vec![5], add: vec!["m2:g0".into()] },
+            Request::Profile { min_p: 1, steps_per_level: 10 },
+            Request::Status,
+            Request::Checkpoint { path: "/tmp/ckpt.bin".into() },
+            Request::Restore { path: "/tmp/ckpt.bin".into() },
+            Request::Stop,
+        ]
+    }
+
+    fn all_responses() -> Vec<Response> {
+        vec![
+            Response::Ok,
+            Response::Status(JobStatus {
+                parallelism: 4,
+                step: 100,
+                epoch: 2,
+                throughput_sps: 512.5,
+                last_loss: 1.25,
+                workers: vec![1, 2, 3, 4],
+            }),
+            Response::Profile(vec![ProfileRow {
+                parallelism: 2,
+                throughput: 100.0,
+                per_gpu_throughput: 50.0,
+                efficiency: 0.9,
+            }]),
+            Response::Err(ElasticError::AdjustmentInFlight),
+            Response::Err(ElasticError::UnknownWorker(9)),
+            Response::Err(ElasticError::InsufficientResources("2 free".into())),
+            Response::Err(ElasticError::InvalidRequest("empty".into())),
+            Response::Err(ElasticError::Aborted("worker died".into())),
+            Response::Err(ElasticError::Io("connection reset".into())),
+        ]
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips_in_versioned_envelope() {
+        for (i, req) in all_requests().into_iter().enumerate() {
+            let env = Envelope::new(i as u64 + 1, req.encode());
+            let bytes = env.encode();
+            assert_eq!(bytes[0], API_VERSION, "{req:?} must lead with the version byte");
+            let back = Envelope::decode(&bytes).unwrap();
+            assert_eq!(back.seq, i as u64 + 1);
+            assert_eq!(Request::decode(&back.body).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips_in_versioned_envelope() {
+        for (i, resp) in all_responses().into_iter().enumerate() {
+            let env = Envelope::new(i as u64 + 1, resp.encode());
+            let bytes = env.encode();
+            assert_eq!(bytes[0], API_VERSION);
+            let back = Envelope::decode(&bytes).unwrap();
+            assert_eq!(Response::decode(&back.body).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn bad_tags_rejected() {
+        assert!(matches!(Request::decode(&[0]), Err(WireError::BadTag { .. })));
+        assert!(matches!(Response::decode(&[99]), Err(WireError::BadTag { .. })));
+    }
+
+    // -- loopback server/client over a mock job ------------------------------
+
+    struct MockJob {
+        p: u32,
+        stopped: bool,
+    }
+
+    impl JobControl for MockJob {
+        fn scale_out(&mut self, machines: Vec<String>) -> Result<(), ElasticError> {
+            self.p += machines.len() as u32;
+            Ok(())
+        }
+        fn scale_in(&mut self, workers: Vec<NodeId>) -> Result<(), ElasticError> {
+            if let Some(&bad) = workers.iter().find(|&&w| w >= self.p) {
+                return Err(ElasticError::UnknownWorker(bad));
+            }
+            self.p -= workers.len() as u32;
+            Ok(())
+        }
+        fn migrate(&mut self, _r: Vec<NodeId>, _a: Vec<String>) -> Result<(), ElasticError> {
+            Err(ElasticError::AdjustmentInFlight)
+        }
+        fn profile(&mut self, min_p: u32, _s: u64) -> Result<Vec<ProfileRow>, ElasticError> {
+            Ok((min_p..=self.p)
+                .rev()
+                .map(|q| ProfileRow {
+                    parallelism: q,
+                    throughput: q as f64,
+                    per_gpu_throughput: 1.0,
+                    efficiency: 1.0,
+                })
+                .collect())
+        }
+        fn status(&mut self) -> Result<JobStatus, ElasticError> {
+            Ok(JobStatus {
+                parallelism: self.p,
+                workers: (0..self.p).collect(),
+                ..Default::default()
+            })
+        }
+        fn checkpoint(&mut self, _p: &str) -> Result<(), ElasticError> {
+            Ok(())
+        }
+        fn restore(&mut self, p: &str) -> Result<(), ElasticError> {
+            Err(ElasticError::Io(format!("no such checkpoint: {p}")))
+        }
+        fn stop(&mut self) -> Result<(), ElasticError> {
+            self.stopped = true;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn job_server_client_roundtrip_over_tcp() {
+        let server = JobServer::start(MockJob { p: 2, stopped: false }).unwrap();
+        let mut c = JobClient::connect(&server.addr).unwrap();
+
+        assert_eq!(c.status().unwrap().parallelism, 2);
+        c.scale_out(vec!["m1".into(), "m1".into()]).unwrap();
+        assert_eq!(c.status().unwrap().parallelism, 4);
+        assert_eq!(c.scale_in(vec![9]), Err(ElasticError::UnknownWorker(9)));
+        c.scale_in(vec![3]).unwrap();
+        assert_eq!(
+            c.migrate(vec![0], vec!["m2".into()]),
+            Err(ElasticError::AdjustmentInFlight)
+        );
+        let rows = c.profile(1, 5).unwrap();
+        assert_eq!(rows.first().unwrap().parallelism, 3);
+        assert!(matches!(c.restore("/nope"), Err(ElasticError::Io(_))));
+        c.stop().unwrap();
+
+        drop(c);
+        let job = server.shutdown();
+        assert!(job.stopped);
+        assert_eq!(job.p, 3);
+    }
+
+    #[test]
+    fn job_server_rejects_wrong_version_with_typed_error() {
+        let server = JobServer::start(MockJob { p: 1, stopped: false }).unwrap();
+        let stream = TcpStream::connect(&server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        // hand-craft an envelope with a future version byte
+        let mut bytes = Envelope::new(1, Request::Status.encode()).encode();
+        bytes[0] = API_VERSION + 1;
+        wire::write_frame(&mut writer, &bytes).unwrap();
+        let raw = wire::read_frame(&mut reader).unwrap();
+        let env = Envelope::decode(&raw).unwrap();
+        assert_eq!(env.seq, 0, "unattributable reply uses seq 0");
+        match Response::decode(&env.body).unwrap() {
+            Response::Err(ElasticError::InvalidRequest(m)) => {
+                assert!(m.contains("version"), "{m}");
+            }
+            other => panic!("expected version error, got {other:?}"),
+        }
+        drop(reader);
+        drop(writer);
+        server.shutdown();
+    }
+
+    #[test]
+    fn retry_helper_waits_out_adjustment_in_flight() {
+        struct Flaky {
+            until: u32,
+            calls: u32,
+        }
+        impl JobControl for Flaky {
+            fn scale_out(&mut self, _m: Vec<String>) -> Result<(), ElasticError> {
+                self.calls += 1;
+                if self.calls <= self.until {
+                    Err(ElasticError::AdjustmentInFlight)
+                } else {
+                    Ok(())
+                }
+            }
+            fn scale_in(&mut self, _w: Vec<NodeId>) -> Result<(), ElasticError> {
+                Err(ElasticError::AdjustmentInFlight)
+            }
+            fn migrate(&mut self, _r: Vec<NodeId>, _a: Vec<String>) -> Result<(), ElasticError> {
+                Ok(())
+            }
+            fn profile(&mut self, _p: u32, _s: u64) -> Result<Vec<ProfileRow>, ElasticError> {
+                Ok(Vec::new())
+            }
+            fn status(&mut self) -> Result<JobStatus, ElasticError> {
+                Ok(JobStatus::default())
+            }
+            fn checkpoint(&mut self, _p: &str) -> Result<(), ElasticError> {
+                Ok(())
+            }
+            fn restore(&mut self, _p: &str) -> Result<(), ElasticError> {
+                Ok(())
+            }
+            fn stop(&mut self) -> Result<(), ElasticError> {
+                Ok(())
+            }
+        }
+
+        let mut j = Flaky { until: 2, calls: 0 };
+        j.scale_out_retry(vec!["m".into()], Duration::from_secs(5)).unwrap();
+        assert_eq!(j.calls, 3, "two in-flight rejections then success");
+
+        // a persistently busy job times out with the typed error
+        let err = j.scale_in_retry(vec![1], Duration::from_millis(120)).unwrap_err();
+        assert_eq!(err, ElasticError::AdjustmentInFlight);
+    }
+}

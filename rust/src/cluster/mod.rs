@@ -13,12 +13,18 @@
 //!    model broadcast (edl_stop) before running at the new parallelism;
 //!  * EDL scale-in: the rate drops immediately; overhead is negligible.
 //!
-//! Schedulers plug in through the [`Scheduler`] trait and drive the
-//! cluster purely through `start / preempt / scale` actions.
+//! Schedulers plug in through the [`Scheduler`] trait: placement actions
+//! (`start_job` / `preempt_job`) are simulator-level, while parallelism
+//! adjustments on a RUNNING job go through the Table-1 surface — each job
+//! exposes a [`SimJobHandle`] implementing
+//! [`api::JobControl`](crate::api::JobControl), so policy code written
+//! against the simulator also drives live `ElasticTrainer` jobs.
 
+use crate::api::{ElasticError, JobControl, JobStatus, ProfileRow};
 use crate::gpu_sim::{self, Dnn, HwConfig};
 use crate::metrics::TimeSeries;
 use crate::trace::TraceJob;
+use crate::transport::NodeId;
 
 /// How parallelism adjustments are charged (the §6 comparison axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -487,6 +493,176 @@ impl ClusterSim {
     pub fn jcts(&self) -> Vec<f64> {
         self.jobs.iter().filter_map(|j| j.jct()).collect()
     }
+
+    /// Table-1 control handle for job `job` — the simulator's
+    /// [`JobControl`] implementation. Workers of a simulated job are the
+    /// virtual ids `0..p` (`status().workers`), so policies pick scale-in
+    /// victims exactly as they do against a live job.
+    pub fn job(&mut self, job: usize) -> SimJobHandle<'_> {
+        SimJobHandle { sim: self, job }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table-1 job control in simulation
+// ---------------------------------------------------------------------------
+
+/// A borrowed [`JobControl`] view of one simulated job. Scaling costs are
+/// charged per [`ScaleMode`] exactly as in [`ClusterSim::scale_job`];
+/// the §3.1 contract maps onto simulator state: a paused or mid-scale-out
+/// job reports [`ElasticError::AdjustmentInFlight`].
+pub struct SimJobHandle<'a> {
+    sim: &'a mut ClusterSim,
+    job: usize,
+}
+
+impl SimJobHandle<'_> {
+    /// index of the underlying job in `sim.jobs`
+    pub fn index(&self) -> usize {
+        self.job
+    }
+
+    /// current parallelism if the job can accept an adjustment NOW
+    fn adjustable_p(&self) -> Result<u32, ElasticError> {
+        match self.sim.jobs[self.job].state {
+            JobState::Running { p, paused_until } => {
+                if paused_until > self.sim.now {
+                    Err(ElasticError::AdjustmentInFlight)
+                } else {
+                    Ok(p)
+                }
+            }
+            JobState::ScalingOut { .. } => Err(ElasticError::AdjustmentInFlight),
+            _ => Err(ElasticError::InvalidRequest("job is not running".into())),
+        }
+    }
+
+    fn scale_to(&mut self, new_p: u32) -> Result<(), ElasticError> {
+        if self.sim.scale_job(self.job, new_p) {
+            Ok(())
+        } else {
+            Err(ElasticError::Aborted("simulator rejected the adjustment".into()))
+        }
+    }
+}
+
+impl JobControl for SimJobHandle<'_> {
+    fn scale_out(&mut self, machines: Vec<String>) -> Result<(), ElasticError> {
+        let p = self.adjustable_p()?;
+        let added = machines.len() as u32;
+        if added == 0 {
+            return Ok(());
+        }
+        if added > self.sim.free_gpus() {
+            return Err(ElasticError::InsufficientResources(format!(
+                "want {added} more GPUs, {} free",
+                self.sim.free_gpus()
+            )));
+        }
+        self.scale_to(p + added)
+    }
+
+    fn scale_in(&mut self, workers: Vec<NodeId>) -> Result<(), ElasticError> {
+        let p = self.adjustable_p()?;
+        if let Some(&bad) = workers.iter().find(|&&w| w >= p) {
+            return Err(ElasticError::UnknownWorker(bad));
+        }
+        let n = workers.len() as u32;
+        if n == 0 {
+            return Ok(());
+        }
+        if n >= p {
+            return Err(ElasticError::InvalidRequest(
+                "scale-in would remove every worker".into(),
+            ));
+        }
+        self.scale_to(p - n)
+    }
+
+    fn migrate(&mut self, remove: Vec<NodeId>, add: Vec<String>) -> Result<(), ElasticError> {
+        let p = self.adjustable_p()?;
+        if let Some(&bad) = remove.iter().find(|&&w| w >= p) {
+            return Err(ElasticError::UnknownWorker(bad));
+        }
+        let (removed, added) = (remove.len() as u32, add.len() as u32);
+        if removed >= p + added {
+            return Err(ElasticError::InvalidRequest("migration would empty the job".into()));
+        }
+        let new_p = p + added - removed;
+        if new_p > p && new_p - p > self.sim.free_gpus() {
+            return Err(ElasticError::InsufficientResources(format!(
+                "want {} more GPUs, {} free",
+                new_p - p,
+                self.sim.free_gpus()
+            )));
+        }
+        if new_p == p {
+            // pure placement move: one merged switch, negligible cost at
+            // this level of abstraction (the paper's merged migration)
+            self.sim.jobs[self.job].n_scales += 1;
+            return Ok(());
+        }
+        self.scale_to(new_p)
+    }
+
+    fn profile(
+        &mut self,
+        min_p: u32,
+        _steps_per_level: u64,
+    ) -> Result<Vec<ProfileRow>, ElasticError> {
+        // the simulator profiles analytically from the calibrated device
+        // model instead of paying simulated steps per level
+        let p = self.adjustable_p()?;
+        let j = &self.sim.jobs[self.job];
+        let b = j.global_batch();
+        let mut rows: Vec<ProfileRow> = (min_p.max(1)..=p)
+            .rev()
+            .map(|q| {
+                let th = gpu_sim::throughput(j.model, q, b, &self.sim.hw);
+                ProfileRow {
+                    parallelism: q,
+                    throughput: th,
+                    per_gpu_throughput: th / q as f64,
+                    efficiency: 0.0,
+                }
+            })
+            .collect();
+        crate::api::normalise_efficiency(&mut rows);
+        Ok(rows)
+    }
+
+    fn status(&mut self) -> Result<JobStatus, ElasticError> {
+        let rate = self.sim.rate(self.job);
+        let j = &self.sim.jobs[self.job];
+        let p = j.current_p();
+        Ok(JobStatus {
+            parallelism: p,
+            // work-seconds completed stands in for the step counter
+            step: j.done_work_s as u64,
+            epoch: 0,
+            throughput_sps: rate * j.global_batch() as f64,
+            last_loss: f32::NAN,
+            workers: (0..p).collect(),
+        })
+    }
+
+    fn checkpoint(&mut self, _path: &str) -> Result<(), ElasticError> {
+        // instantaneous at this level of abstraction (charged inside
+        // stop_resume_overhead when the scheduler preempts)
+        Ok(())
+    }
+
+    fn restore(&mut self, _path: &str) -> Result<(), ElasticError> {
+        Ok(())
+    }
+
+    fn stop(&mut self) -> Result<(), ElasticError> {
+        let placement = std::mem::take(&mut self.sim.jobs[self.job].placement);
+        self.sim.release(&placement);
+        self.sim.jobs[self.job].state = JobState::Finished { at: self.sim.now };
+        self.sim.jobs[self.job].finish_s = Some(self.sim.now);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -646,6 +822,45 @@ mod tests {
         // utilization peaked at 1.0 while both jobs ran
         let peak = sim.util_ts.points.iter().map(|&(_, v)| v).fold(0.0, f64::max);
         assert!(peak >= 0.99, "peak={peak}");
+    }
+
+    #[test]
+    fn job_handle_speaks_table1() {
+        let trace = mk_trace(1, 0.0, 2, 1000.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        sim.start_job(0, 2);
+        sim.job(0).scale_out(vec!["m1".into()]).unwrap();
+        assert_eq!(sim.jobs[0].current_p(), 3);
+        let st = sim.job(0).status().unwrap();
+        assert_eq!(st.workers, vec![0, 1, 2]);
+        assert!(matches!(
+            sim.job(0).scale_in(vec![9]),
+            Err(ElasticError::UnknownWorker(9))
+        ));
+        sim.job(0).scale_in(vec![2]).unwrap();
+        assert_eq!(sim.jobs[0].current_p(), 2);
+        let rows = sim.job(0).profile(1, 0).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().any(|r| (r.efficiency - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn job_handle_reports_adjustment_in_flight() {
+        // EDL mode: a scale-out leaves the job mid-preparation, so the
+        // next adjustment gets the typed §3.1 retry error
+        let trace = mk_trace(1, 0.0, 2, 10_000.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Edl);
+        sim.start_job(0, 2);
+        let JobState::Running { paused_until, .. } = sim.jobs[0].state else {
+            panic!("job should be running")
+        };
+        sim.now = paused_until + 1.0; // skip past the launch pause
+        sim.job(0).scale_out(vec!["m1".into()]).unwrap();
+        assert!(matches!(sim.jobs[0].state, JobState::ScalingOut { .. }));
+        assert_eq!(
+            sim.job(0).scale_out(vec!["m2".into()]),
+            Err(ElasticError::AdjustmentInFlight)
+        );
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!    gradient-sync request; consistent laggards are scaled in (§5.2);
 //!  * **failure recovery** — approximate (drop the dead worker, repair the
 //!    ring, redo the mini-batch) or consistent (restore from checkpoint),
-//!    selected via `USE_APPX_RECOVERY` (§4.2);
+//!    selected via [`TrainerConfig::approx_recovery`] (§4.2; the paper's
+//!    `USE_APPX_RECOVERY` env switch is resolved once at config
+//!    construction, see [`TrainerConfig::approx_recovery_from_env`]);
 //!  * **dynamic data pipeline** — the leader owns the partition permutation
 //!    and hands shards out on demand (§4.3, see `data::Assigner`).
 //!
@@ -20,7 +22,14 @@
 //! "application master" alternative the paper discusses; worker-attached
 //! leadership and re-election are exercised against `coordsvc` in its own
 //! tests and benches, since in-process threads share fate anyway).
+//!
+//! Scheduler-facing control goes exclusively through the Table-1 surface
+//! in [`crate::api`]: [`ElasticTrainer`] implements
+//! [`JobControl`](crate::api::JobControl) natively (the leader consumes
+//! [`api::Request`](crate::api::Request) values straight off its command
+//! channel), and `api::JobServer` exposes the same surface over TCP.
 
+use crate::api::{ElasticError, JobControl, JobStatus, ProfileRow, Request, Response};
 use crate::data::corpus::Corpus;
 use crate::data::{Assigner, PartitionMeta, PartitionTable};
 use crate::transport::{InProcHub, NodeId};
@@ -76,39 +85,6 @@ pub struct SwitchPlan {
     pub exiting: Vec<NodeId>,
 }
 
-/// scheduler-facing commands (Table 1 API)
-#[derive(Debug)]
-pub enum Cmd {
-    ScaleOut { machines: Vec<String> },
-    ScaleIn { ids: Vec<NodeId> },
-    Migrate { remove: Vec<NodeId>, add: Vec<String> },
-    Status,
-    FetchParams,
-    Checkpoint { path: PathBuf },
-    Restore { path: PathBuf },
-    Stop,
-}
-
-#[derive(Debug, Clone)]
-pub enum Reply {
-    Ack,
-    /// an adjustment is already in flight (§3.1) — retry later
-    Retry,
-    Status(Status),
-    Params(Vec<f32>),
-    Err(String),
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct Status {
-    pub parallelism: u32,
-    pub step: u64,
-    pub epoch: u64,
-    pub throughput_sps: f64,
-    pub last_loss: f32,
-    pub workers: Vec<NodeId>,
-}
-
 /// One entry of the training log.
 #[derive(Debug, Clone)]
 pub struct LossPoint {
@@ -156,9 +132,12 @@ pub struct TrainerConfig {
     pub straggler_ratio: f64,
     /// ... for `window` consecutive mini-batches
     pub straggler_window: u32,
-    /// approximate (true) vs consistent (false) failure recovery;
-    /// None = read `USE_APPX_RECOVERY` env (paper default: consistent)
-    pub approx_recovery: Option<bool>,
+    /// approximate (true) vs consistent (false) failure recovery (§4.2;
+    /// paper default: consistent). The trainer only ever reads this
+    /// explicit flag — CLI entrypoints that want the paper's
+    /// `USE_APPX_RECOVERY` env switch resolve it ONCE at config
+    /// construction via [`TrainerConfig::approx_recovery_from_env`].
+    pub approx_recovery: bool,
     /// checkpoint file used by consistent recovery
     pub checkpoint_path: Option<PathBuf>,
 }
@@ -175,17 +154,18 @@ impl Default for TrainerConfig {
             straggler_mitigation: false,
             straggler_ratio: 1.2,
             straggler_window: 10,
-            approx_recovery: None,
+            approx_recovery: false,
             checkpoint_path: None,
         }
     }
 }
 
 impl TrainerConfig {
-    fn use_approx_recovery(&self) -> bool {
-        self.approx_recovery.unwrap_or_else(|| {
-            std::env::var("USE_APPX_RECOVERY").map(|v| v == "1" || v == "true").unwrap_or(false)
-        })
+    /// Resolve the paper's `USE_APPX_RECOVERY` environment switch. Called
+    /// by CLI/config construction only — never by the trainer itself, so
+    /// tests and libraries are independent of process-global state.
+    pub fn approx_recovery_from_env() -> bool {
+        std::env::var("USE_APPX_RECOVERY").map(|v| v == "1" || v == "true").unwrap_or(false)
     }
 }
 
@@ -219,7 +199,9 @@ struct SyncInfo {
 
 enum LeaderIn {
     W(WorkerEvent),
-    C(Cmd, Sender<Reply>),
+    /// a Table-1 request with its reply slot — the same `api::Request`
+    /// values the TCP deployment decodes off the wire
+    C(Request, Sender<Response>),
 }
 
 /// Spawns a worker thread; must send `WorkerEvent::Attach` before the
@@ -245,14 +227,13 @@ struct Leader {
     sync_waiting: HashMap<NodeId, SyncInfo>,
     barrier_open_at: Option<Instant>,
     plan: Option<SwitchPlan>,
-    op_reply: Option<Sender<Reply>>,
+    op_reply: Option<Sender<Response>>,
     /// pending scale-out joiners not yet Ready
     joining: Vec<NodeId>,
     /// exit set for a migrate/scale-in combined op
     op_exiting: Vec<NodeId>,
-    ckpt_reply: Option<(PathBuf, Sender<Reply>)>,
-    fetch_reply: Option<Sender<Reply>>,
-    stop_reply: Option<Sender<Reply>>,
+    ckpt_reply: Option<(PathBuf, Sender<Response>)>,
+    stop_reply: Option<Sender<Response>>,
     report: TrainReport,
     recent_barriers: std::collections::VecDeque<(Instant, f64)>,
     last_loss: f32,
@@ -438,7 +419,7 @@ impl Leader {
                 self.plan = None;
                 self.event(format!("switch-committed p={}", self.active.len()));
                 if let Some(r) = self.op_reply.take() {
-                    let _ = r.send(Reply::Ack);
+                    let _ = r.send(Response::Ok);
                 }
             }
         }
@@ -513,12 +494,14 @@ impl Leader {
                 self.joining.clear();
                 self.op_exiting.clear();
                 if let Some(r) = self.op_reply.take() {
-                    let _ = r.send(Reply::Err("worker failed mid-operation".into()));
+                    let _ = r.send(Response::Err(ElasticError::Aborted(
+                        "worker failed mid-operation".into(),
+                    )));
                 }
             }
         }
 
-        if !self.cfg.use_approx_recovery() {
+        if !self.cfg.approx_recovery {
             if let Some(path) = self.cfg.checkpoint_path.clone() {
                 if path.exists() {
                     if let Ok((at_step, params, asg)) = read_checkpoint(&path, self.cfg.seed) {
@@ -642,25 +625,33 @@ impl Leader {
                     self.assigner.encode(&mut e);
                     match std::fs::write(&path, e.into_bytes()) {
                         Ok(()) => {
-                            let _ = reply.send(Reply::Ack);
+                            let _ = reply.send(Response::Ok);
                         }
                         Err(err) => {
-                            let _ = reply.send(Reply::Err(err.to_string()));
+                            let _ = reply.send(Response::Err(ElasticError::Io(err.to_string())));
                         }
                     }
-                }
-                if let Some(reply) = self.fetch_reply.take() {
-                    let _ = reply.send(Reply::Params(params));
                 }
             }
         }
     }
 
-    fn handle_cmd(&mut self, cmd: Cmd, reply: Sender<Reply>) {
-        match cmd {
-            Cmd::ScaleOut { machines } => {
-                if self.plan.is_some() || !self.joining.is_empty() || !self.started {
-                    let _ = reply.send(Reply::Retry);
+    /// True while a parallelism adjustment is uncommitted (§3.1): new
+    /// scaling requests get [`ElasticError::AdjustmentInFlight`].
+    fn adjustment_in_flight(&self) -> bool {
+        self.plan.is_some() || !self.joining.is_empty() || !self.started
+    }
+
+    fn handle_cmd(&mut self, req: Request, reply: Sender<Response>) {
+        match req {
+            Request::ScaleOut { machines } => {
+                if self.adjustment_in_flight() {
+                    let _ = reply.send(Response::Err(ElasticError::AdjustmentInFlight));
+                    return;
+                }
+                if machines.is_empty() {
+                    // no-op: nothing would ever commit, so ack immediately
+                    let _ = reply.send(Response::Ok);
                     return;
                 }
                 self.event(format!("scale-out-request n={}", machines.len()));
@@ -670,17 +661,23 @@ impl Leader {
                     (self.spawner)(id, m, true);
                 }
             }
-            Cmd::ScaleIn { ids } => {
-                if self.plan.is_some() || !self.joining.is_empty() || !self.started {
-                    let _ = reply.send(Reply::Retry);
+            Request::ScaleIn { workers: ids } => {
+                if self.adjustment_in_flight() {
+                    let _ = reply.send(Response::Err(ElasticError::AdjustmentInFlight));
                     return;
                 }
-                if ids.iter().any(|id| !self.active.contains(id)) {
-                    let _ = reply.send(Reply::Err("unknown worker".into()));
+                if let Some(&bad) = ids.iter().find(|&id| !self.active.contains(id)) {
+                    let _ = reply.send(Response::Err(ElasticError::UnknownWorker(bad)));
                     return;
                 }
                 if ids.len() >= self.active.len() {
-                    let _ = reply.send(Reply::Err("cannot remove all workers".into()));
+                    let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
+                        "scale-in would remove every worker".into(),
+                    )));
+                    return;
+                }
+                if ids.is_empty() {
+                    let _ = reply.send(Response::Ok);
                     return;
                 }
                 self.event(format!("scale-in-request ids={ids:?}"));
@@ -688,26 +685,41 @@ impl Leader {
                 self.op_reply = Some(reply);
                 self.maybe_commit_scale();
             }
-            Cmd::Migrate { remove, add } => {
-                if self.plan.is_some() || !self.joining.is_empty() || !self.started {
-                    let _ = reply.send(Reply::Retry);
+            Request::Migrate { remove, add } => {
+                if self.adjustment_in_flight() {
+                    let _ = reply.send(Response::Err(ElasticError::AdjustmentInFlight));
+                    return;
+                }
+                if let Some(&bad) = remove.iter().find(|&id| !self.active.contains(id)) {
+                    let _ = reply.send(Response::Err(ElasticError::UnknownWorker(bad)));
                     return;
                 }
                 if remove.len() >= self.active.len() + add.len() {
-                    let _ = reply.send(Reply::Err("migration would empty the job".into()));
+                    let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
+                        "migration would empty the job".into(),
+                    )));
+                    return;
+                }
+                if remove.is_empty() && add.is_empty() {
+                    let _ = reply.send(Response::Ok);
                     return;
                 }
                 self.event(format!("migrate-request -{} +{}", remove.len(), add.len()));
+                let pure_removal = add.is_empty();
                 self.op_exiting = remove;
                 self.op_reply = Some(reply);
                 for m in add {
                     let id = next_node_id();
                     (self.spawner)(id, m, true);
                 }
-                // commit happens when all joiners are Ready — ONE switch
+                // commit: when all joiners are Ready — ONE switch; with no
+                // joiners (pure-removal migrate) commit on the spot
+                if pure_removal {
+                    self.maybe_commit_scale();
+                }
             }
-            Cmd::Status => {
-                let _ = reply.send(Reply::Status(Status {
+            Request::Status => {
+                let _ = reply.send(Response::Status(JobStatus {
                     parallelism: self.active.len() as u32,
                     step: self.step,
                     epoch: self.assigner.epoch,
@@ -716,41 +728,45 @@ impl Leader {
                     workers: self.active.clone(),
                 }));
             }
-            Cmd::FetchParams => {
+            Request::Profile { .. } => {
+                // the profile sweep is a multi-step measurement driven by
+                // the engine (ElasticTrainer::profile) — it can never run
+                // inside the leader's event loop without stalling training
+                let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
+                    "profile is driven by the engine, not the leader".into(),
+                )));
+            }
+            Request::Checkpoint { path } => {
                 if let Some(&src) = self.active.first() {
-                    self.fetch_reply = Some(reply);
+                    self.ckpt_reply = Some((PathBuf::from(path), reply));
                     self.send_ctrl(src, CtrlMsg::SendParams);
                 } else {
-                    let _ = reply.send(Reply::Err("no active workers".into()));
+                    let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
+                        "no active workers".into(),
+                    )));
                 }
             }
-            Cmd::Checkpoint { path } => {
-                if let Some(&src) = self.active.first() {
-                    self.ckpt_reply = Some((path, reply));
-                    self.send_ctrl(src, CtrlMsg::SendParams);
-                } else {
-                    let _ = reply.send(Reply::Err("no active workers".into()));
-                }
-            }
-            Cmd::Restore { path } => match read_checkpoint(&path, self.cfg.seed) {
-                Ok((at_step, params, asg)) => {
-                    self.assigner = asg;
-                    self.assigner.reset_in_flight();
-                    self.step = at_step;
-                    self.sync_waiting.clear();
-                    self.barrier_open_at = None;
-                    let params = Arc::new(params);
-                    for id in self.active.clone() {
-                        self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
+            Request::Restore { path } => {
+                match read_checkpoint(std::path::Path::new(&path), self.cfg.seed) {
+                    Ok((at_step, params, asg)) => {
+                        self.assigner = asg;
+                        self.assigner.reset_in_flight();
+                        self.step = at_step;
+                        self.sync_waiting.clear();
+                        self.barrier_open_at = None;
+                        let params = Arc::new(params);
+                        for id in self.active.clone() {
+                            self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
+                        }
+                        self.event(format!("manual-restore step={at_step}"));
+                        let _ = reply.send(Response::Ok);
                     }
-                    self.event(format!("manual-restore step={at_step}"));
-                    let _ = reply.send(Reply::Ack);
+                    Err(e) => {
+                        let _ = reply.send(Response::Err(ElasticError::Io(e.to_string())));
+                    }
                 }
-                Err(e) => {
-                    let _ = reply.send(Reply::Err(e.to_string()));
-                }
-            },
-            Cmd::Stop => {
+            }
+            Request::Stop => {
                 self.stopping = true;
                 for (_, w) in self.workers.iter() {
                     let _ = w.ctrl.send(CtrlMsg::Stop);
@@ -775,7 +791,7 @@ impl Leader {
             if self.stopping {
                 // drain replies then exit once workers are gone
                 if let Some(r) = self.stop_reply.take() {
-                    let _ = r.send(Reply::Ack);
+                    let _ = r.send(Response::Ok);
                 }
                 // brief drain window for Goodbyes
                 let deadline = Instant::now() + Duration::from_millis(200);
@@ -919,7 +935,6 @@ impl ElasticTrainer {
             joining: Vec::new(),
             op_exiting: Vec::new(),
             ckpt_reply: None,
-            fetch_reply: None,
             stop_reply: None,
             report: TrainReport::default(),
             recent_barriers: Default::default(),
@@ -939,43 +954,62 @@ impl ElasticTrainer {
         ElasticTrainer { tx, leader: Some(leader_handle), knobs: knobs_map, worker_threads: threads, hub }
     }
 
-    /// Blocking command round-trip to the leader.
-    pub fn cmd(&self, cmd: Cmd) -> Reply {
+    /// Blocking Table-1 round-trip to the leader — the same
+    /// [`api::Request`](crate::api::Request) values the TCP deployment
+    /// sends, minus the serialisation.
+    pub fn call(&self, req: Request) -> Response {
         let (rtx, rrx) = channel();
-        if self.tx.send(LeaderIn::C(cmd, rtx)).is_err() {
-            return Reply::Err("leader gone".into());
+        if self.tx.send(LeaderIn::C(req, rtx)).is_err() {
+            return Response::Err(ElasticError::Aborted("leader gone".into()));
         }
-        rrx.recv_timeout(Duration::from_secs(600)).unwrap_or(Reply::Err("timeout".into()))
+        rrx.recv_timeout(Duration::from_secs(600))
+            .unwrap_or(Response::Err(ElasticError::Aborted("leader timed out".into())))
     }
 
-    pub fn status(&self) -> Status {
-        match self.cmd(Cmd::Status) {
-            Reply::Status(s) => s,
-            other => panic!("unexpected status reply {other:?}"),
-        }
+    /// `status` (Table 1), panicking on a dead leader (tests/benches).
+    pub fn status(&self) -> JobStatus {
+        self.try_status().expect("status")
+    }
+
+    pub fn try_status(&self) -> Result<JobStatus, ElasticError> {
+        self.call(Request::Status).status()
     }
 
     /// `sclae_out` (sic, Table 1): add workers on the given machines.
-    pub fn scale_out(&self, machines: Vec<String>) -> Reply {
-        self.cmd(Cmd::ScaleOut { machines })
+    pub fn scale_out(&self, machines: Vec<String>) -> Result<(), ElasticError> {
+        self.call(Request::ScaleOut { machines }).unit()
     }
 
     /// `sclae_in` (sic, Table 1): remove specific workers.
-    pub fn scale_in(&self, ids: Vec<NodeId>) -> Reply {
-        self.cmd(Cmd::ScaleIn { ids })
+    pub fn scale_in(&self, ids: Vec<NodeId>) -> Result<(), ElasticError> {
+        self.call(Request::ScaleIn { workers: ids }).unit()
     }
 
     /// merged migration (§5.2): one topology switch for -remove/+add
-    pub fn migrate(&self, remove: Vec<NodeId>, add: Vec<String>) -> Reply {
-        self.cmd(Cmd::Migrate { remove, add })
+    pub fn migrate(&self, remove: Vec<NodeId>, add: Vec<String>) -> Result<(), ElasticError> {
+        self.call(Request::Migrate { remove, add }).unit()
     }
 
-    /// Wait until the leader's step counter reaches `step`.
+    /// Write a consistent checkpoint (model + data-pipeline state).
+    pub fn checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<(), ElasticError> {
+        self.call(Request::Checkpoint { path: path.as_ref().to_string_lossy().into_owned() })
+            .unit()
+    }
+
+    /// Restore model + data-pipeline state from a checkpoint.
+    pub fn restore(&self, path: impl AsRef<std::path::Path>) -> Result<(), ElasticError> {
+        self.call(Request::Restore { path: path.as_ref().to_string_lossy().into_owned() }).unit()
+    }
+
+    /// Wait until the leader's step counter reaches `step` (false on
+    /// timeout or once the leader is gone).
     pub fn wait_step(&self, step: u64, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
         loop {
-            if self.status().step >= step {
-                return true;
+            match self.try_status() {
+                Ok(st) if st.step >= step => return true,
+                Ok(_) => {}
+                Err(_) => return false,
             }
             if Instant::now() > deadline {
                 return false;
@@ -991,47 +1025,126 @@ impl ElasticTrainer {
 
     /// profile() from Table 1: measure throughput from the current
     /// parallelism down to `min_p` by repeated low-overhead scale-ins,
-    /// `steps_per_level` mini-batches per level (§5.2).
-    pub fn profile(&self, min_p: u32, steps_per_level: u64) -> Vec<crate::rpc::ProfileRow> {
+    /// `steps_per_level` mini-batches per level (§5.2). Panics if the
+    /// leader is gone; see [`ElasticTrainer::try_profile`].
+    pub fn profile(&self, min_p: u32, steps_per_level: u64) -> Vec<ProfileRow> {
+        self.try_profile(min_p, steps_per_level).expect("profile")
+    }
+
+    /// Non-panicking [`ElasticTrainer::profile`] (the `JobControl` path —
+    /// a remote scheduler gets a typed error, not a dead connection).
+    pub fn try_profile(
+        &self,
+        min_p: u32,
+        steps_per_level: u64,
+    ) -> Result<Vec<ProfileRow>, ElasticError> {
         let mut rows = Vec::new();
         loop {
-            let st = self.status();
+            let st = self.try_status()?;
             let p = st.parallelism;
             let start_step = st.step;
             if !self.wait_step(start_step + steps_per_level, Duration::from_secs(600)) {
                 break;
             }
-            let st2 = self.status();
-            rows.push(crate::rpc::ProfileRow {
+            let st2 = self.try_status()?;
+            rows.push(ProfileRow {
                 parallelism: p,
                 throughput: st2.throughput_sps,
                 per_gpu_throughput: st2.throughput_sps / p as f64,
-                efficiency: 0.0, // normalised by the caller over all rows
+                efficiency: 0.0, // normalised below over all rows
             });
             if p <= min_p {
                 break;
             }
-            let victim = *st2.workers.last().unwrap();
-            match self.scale_in(vec![victim]) {
-                Reply::Ack => {}
-                _ => break,
+            let Some(&victim) = st2.workers.last() else { break };
+            if self.scale_in(vec![victim]).is_err() {
+                break;
             }
         }
-        // normalise efficiency against the best per-GPU throughput
-        let best = rows.iter().map(|r| r.per_gpu_throughput).fold(f64::MIN, f64::max);
-        for r in rows.iter_mut() {
-            r.efficiency = r.per_gpu_throughput / best;
-        }
-        rows
+        crate::api::normalise_efficiency(&mut rows);
+        Ok(rows)
     }
 
     /// Stop the job and collect the training report.
     pub fn stop(mut self) -> TrainReport {
-        let _ = self.cmd(Cmd::Stop);
+        let _ = self.call(Request::Stop);
         let report = self.leader.take().map(|h| h.join().unwrap()).unwrap_or_default();
         for h in self.worker_threads.lock().unwrap().drain(..) {
             let _ = h.join();
         }
         report
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table-1 trait impls
+// ---------------------------------------------------------------------------
+
+/// The live engine speaks the scheduler API natively. `stop` here only
+/// signals the leader — use the consuming [`ElasticTrainer::stop`] to
+/// also join the threads and collect the [`TrainReport`].
+impl JobControl for ElasticTrainer {
+    fn scale_out(&mut self, machines: Vec<String>) -> Result<(), ElasticError> {
+        ElasticTrainer::scale_out(self, machines)
+    }
+    fn scale_in(&mut self, workers: Vec<NodeId>) -> Result<(), ElasticError> {
+        ElasticTrainer::scale_in(self, workers)
+    }
+    fn migrate(&mut self, remove: Vec<NodeId>, add: Vec<String>) -> Result<(), ElasticError> {
+        ElasticTrainer::migrate(self, remove, add)
+    }
+    fn profile(
+        &mut self,
+        min_p: u32,
+        steps_per_level: u64,
+    ) -> Result<Vec<ProfileRow>, ElasticError> {
+        ElasticTrainer::try_profile(self, min_p, steps_per_level)
+    }
+    fn status(&mut self) -> Result<JobStatus, ElasticError> {
+        self.try_status()
+    }
+    fn checkpoint(&mut self, path: &str) -> Result<(), ElasticError> {
+        ElasticTrainer::checkpoint(self, path)
+    }
+    fn restore(&mut self, path: &str) -> Result<(), ElasticError> {
+        ElasticTrainer::restore(self, path)
+    }
+    fn stop(&mut self) -> Result<(), ElasticError> {
+        self.call(Request::Stop).unit()
+    }
+}
+
+/// Shared-reference flavour: the engine's command channel is already
+/// thread-safe, so `&ElasticTrainer` (e.g. behind an `Arc`) is a full
+/// [`JobControl`] too — handy for driving one live job from several
+/// policy threads.
+impl JobControl for &ElasticTrainer {
+    fn scale_out(&mut self, machines: Vec<String>) -> Result<(), ElasticError> {
+        ElasticTrainer::scale_out(*self, machines)
+    }
+    fn scale_in(&mut self, workers: Vec<NodeId>) -> Result<(), ElasticError> {
+        ElasticTrainer::scale_in(*self, workers)
+    }
+    fn migrate(&mut self, remove: Vec<NodeId>, add: Vec<String>) -> Result<(), ElasticError> {
+        ElasticTrainer::migrate(*self, remove, add)
+    }
+    fn profile(
+        &mut self,
+        min_p: u32,
+        steps_per_level: u64,
+    ) -> Result<Vec<ProfileRow>, ElasticError> {
+        ElasticTrainer::try_profile(*self, min_p, steps_per_level)
+    }
+    fn status(&mut self) -> Result<JobStatus, ElasticError> {
+        ElasticTrainer::try_status(*self)
+    }
+    fn checkpoint(&mut self, path: &str) -> Result<(), ElasticError> {
+        ElasticTrainer::checkpoint(*self, path)
+    }
+    fn restore(&mut self, path: &str) -> Result<(), ElasticError> {
+        ElasticTrainer::restore(*self, path)
+    }
+    fn stop(&mut self) -> Result<(), ElasticError> {
+        ElasticTrainer::call(*self, Request::Stop).unit()
     }
 }

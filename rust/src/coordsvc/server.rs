@@ -88,15 +88,10 @@ impl Drop for KvServer {
 }
 
 fn serve_conn(stream: TcpStream, core: Arc<KvCore>) -> crate::wire::Result<()> {
-    stream.set_nodelay(true)?; // §4.4: Nagle disabled on coordination sockets
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    loop {
-        let req = match read_frame(&mut reader) {
-            Ok(r) => r,
-            Err(_) => return Ok(()), // client closed
-        };
-        let mut d = Dec::new(&req);
+    // framed request/reply loop shared with api::JobServer (§4.4: Nagle
+    // disabled on every coordination socket)
+    crate::wire::serve_framed(stream, move |req| {
+        let mut d = Dec::new(req);
         let op = d.u8()?;
         let now = wall_ms();
         let mut resp = Enc::new();
@@ -158,8 +153,8 @@ fn serve_conn(stream: TcpStream, core: Arc<KvCore>) -> crate::wire::Result<()> {
                 return Err(crate::wire::WireError::BadTag { tag: other as u32, ty: "kv op" })
             }
         }
-        write_frame(&mut writer, &resp.into_bytes())?;
-    }
+        Ok(resp.into_bytes())
+    })
 }
 
 /// Blocking TCP client for the KV service.

@@ -3,15 +3,18 @@
 //! A from-scratch reproduction of the EDL system (Wu et al., 2019) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the elastic coordination layer: leader election
-//!   over a CAS/lease KV service ([`coordsvc`]), stop-free scale-out and
-//!   graceful-exit scale-in ([`coordinator`]), an elastic ring-allreduce
-//!   data plane ([`allreduce`] over [`transport`]), the dynamic data
-//!   pipeline ([`data`]), plus the GPU-cluster simulation substrate the
-//!   paper's evaluation needs: a calibrated device model ([`gpu_sim`]), a
+//! * **L3 (this crate)** — the elastic coordination layer: ONE versioned
+//!   Table-1 job-control surface ([`api`]: the `JobControl` trait served
+//!   in-process, over TCP via `api::JobServer`/`JobClient`, and inside
+//!   the simulator), leader election over a CAS/lease KV service
+//!   ([`coordsvc`]), stop-free scale-out and graceful-exit scale-in
+//!   ([`coordinator`]), an elastic ring-allreduce data plane
+//!   ([`allreduce`] over [`transport`]), the dynamic data pipeline
+//!   ([`data`]), plus the GPU-cluster simulation substrate the paper's
+//!   evaluation needs: a calibrated device model ([`gpu_sim`]), a
 //!   Philly-like trace generator ([`trace`]), a discrete-event cluster
 //!   simulator ([`cluster`]) and the Tiresias / Elastic-Tiresias
-//!   schedulers ([`schedulers`]).
+//!   schedulers ([`schedulers`]) — both driving jobs through [`api`].
 //! * **L2** — a JAX transformer LM lowered once to HLO text
 //!   (`python/compile/model.py`), executed from Rust via PJRT
 //!   ([`runtime`]).
@@ -23,6 +26,7 @@
 //! EXPERIMENTS.md for reproduced tables/figures.
 
 pub mod allreduce;
+pub mod api;
 pub mod cluster;
 pub mod coordinator;
 pub mod coordsvc;

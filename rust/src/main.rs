@@ -2,11 +2,15 @@
 //!
 //! Subcommands:
 //!   train        run elastic data-parallel training on the AOT artifacts
+//!   serve        run a training job AND a TCP JobServer so a remote
+//!                scheduler can drive it through the Table-1 API
+//!   ctl          Table-1 client: control a served job over TCP
 //!   profile      profile a job over a parallelism range (Table 1 API)
 //!   sim          trace-driven cluster-scheduling simulation
 //!   trace-stats  generate + summarise a synthetic Philly-like trace
 //!   kv           run a standalone coordination (etcd-like) KV server
 
+use edl::api::{JobClient, JobControl, JobServer, Request};
 use edl::cluster::{ClusterSim, ScaleMode};
 use edl::coordinator::{ElasticTrainer, TrainerConfig};
 use edl::data::corpus::Corpus;
@@ -22,14 +26,19 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.positional().first().map(String::as_str) {
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("ctl") => cmd_ctl(&args),
         Some("profile") => cmd_profile(&args),
         Some("sim") => cmd_sim(&args),
         Some("trace-stats") => cmd_trace_stats(&args),
         Some("kv") => cmd_kv(),
         _ => {
             eprintln!(
-                "usage: edl <train|profile|sim|trace-stats|kv> [--flags]\n\
+                "usage: edl <train|serve|ctl|profile|sim|trace-stats|kv> [--flags]\n\
                  \n  train       --config tiny|small --workers N --steps N --agg-batch B --lr F\n\
+                 \n  serve       (train flags; prints the job-control address, serves until the job stops)\n\
+                 \n  ctl <addr> <status|scale-out|scale-in|migrate|profile|checkpoint|restore|stop>\n\
+                 \n              --machines m1,m1 --workers 3,4 --path ckpt.bin --min-p 1\n\
                  \n  profile     --config tiny --max-p 4 --min-p 1 --steps-per-level K\n\
                  \n  sim         --scheduler tiresias|elastic-tiresias --jobs N --machines M\n\
                  \n  trace-stats --jobs N\n\
@@ -57,6 +66,9 @@ fn build_trainer(args: &Args, workers: usize) -> anyhow::Result<(ElasticTrainer,
         n_partitions: args.u64("partitions", 64),
         seed: args.u64("seed", 7),
         straggler_mitigation: args.bool("straggler-mitigation", false),
+        // the paper's USE_APPX_RECOVERY switch, resolved ONCE here at
+        // config construction — the trainer never reads the environment
+        approx_recovery: args.bool("approx-recovery", TrainerConfig::approx_recovery_from_env()),
         ..Default::default()
     };
     Ok((ElasticTrainer::start(cfg, backend, corpus.clone(), workers), corpus))
@@ -81,6 +93,99 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     for chunk in pts.chunks((pts.len() / 20).max(1)) {
         let first = &chunk[0];
         println!("step {:>5}  loss {:.4}  p={}", first.step, first.loss, first.parallelism);
+    }
+    Ok(())
+}
+
+/// Paper deployment: the job trains while a TCP `JobServer` exposes the
+/// Table-1 API to remote schedulers (`edl ctl <addr> ...`).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let workers = args.usize("workers", 2);
+    let (trainer, _corpus) = build_trainer(args, workers)?;
+    let server = JobServer::start(trainer)?;
+    println!("job-control API serving on {}", server.addr);
+    println!("drive it with: edl ctl {} status", server.addr);
+    // serve until a scheduler issues `stop`
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(500));
+        let job = server.job();
+        let done = {
+            let mut j = job.lock().unwrap_or_else(|p| p.into_inner());
+            JobControl::status(&mut *j).is_err()
+        };
+        if done {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Table-1 client over TCP: the scheduler side of the paper's deployment.
+fn cmd_ctl(args: &Args) -> anyhow::Result<()> {
+    let pos = args.positional();
+    let addr = pos.get(1).ok_or_else(|| anyhow::anyhow!("ctl: missing <addr>"))?;
+    let verb = pos.get(2).map(String::as_str).unwrap_or("status");
+    let mut client = JobClient::connect(addr)?;
+    let machines = || -> Vec<String> {
+        args.str("machines", "m1").split(',').filter(|s| !s.is_empty()).map(Into::into).collect()
+    };
+    let workers = || -> Vec<u32> {
+        args.str("workers", "")
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().expect("--workers expects comma-separated ids"))
+            .collect()
+    };
+    match verb {
+        "status" => {
+            let st = client.status().map_err(anyhow::Error::msg)?;
+            println!(
+                "step={} epoch={} p={} throughput={:.1} samples/s loss={:.4} workers={:?}",
+                st.step, st.epoch, st.parallelism, st.throughput_sps, st.last_loss, st.workers
+            );
+        }
+        "scale-out" => {
+            client.scale_out(machines()).map_err(anyhow::Error::msg)?;
+            println!("scaled out");
+        }
+        "scale-in" => {
+            client.scale_in(workers()).map_err(anyhow::Error::msg)?;
+            println!("scaled in");
+        }
+        "migrate" => {
+            client.migrate(workers(), machines()).map_err(anyhow::Error::msg)?;
+            println!("migrated");
+        }
+        "profile" => {
+            let rows = client
+                .call(&Request::Profile {
+                    min_p: args.usize("min-p", 1) as u32,
+                    steps_per_level: args.u64("steps-per-level", 10),
+                })
+                .map_err(anyhow::Error::msg)?
+                .profile()
+                .map_err(anyhow::Error::msg)?;
+            println!("{:>4} {:>12} {:>14} {:>10}", "p", "samples/s", "per-GPU", "efficiency");
+            for r in &rows {
+                println!(
+                    "{:>4} {:>12.1} {:>14.1} {:>10.3}",
+                    r.parallelism, r.throughput, r.per_gpu_throughput, r.efficiency
+                );
+            }
+        }
+        "checkpoint" => {
+            client.checkpoint(&args.str("path", "ckpt.bin")).map_err(anyhow::Error::msg)?;
+            println!("checkpoint written");
+        }
+        "restore" => {
+            client.restore(&args.str("path", "ckpt.bin")).map_err(anyhow::Error::msg)?;
+            println!("restored");
+        }
+        "stop" => {
+            JobControl::stop(&mut client).map_err(anyhow::Error::msg)?;
+            println!("job stopped");
+        }
+        other => anyhow::bail!("ctl: unknown verb {other:?}"),
     }
     Ok(())
 }

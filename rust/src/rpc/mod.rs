@@ -1,47 +1,16 @@
-//! Coordination-plane message types: scheduler ⇄ leader and worker ⇄ leader
-//! (Table 1 of the paper + the §4.2 scaling protocol messages). Each type
-//! carries a hand-rolled wire encoding (see `wire`) used by the TCP
-//! deployment; the in-process trainer moves the same types through typed
-//! channels without serialisation.
+//! Worker ⇄ leader wire messages (the §4.2 scaling-protocol messages) for
+//! the multi-process deployment. Each type carries a hand-rolled wire
+//! encoding (see `wire`); the in-process trainer moves the equivalent
+//! typed-channel messages (`coordinator::WorkerEvent`/`CtrlMsg`) without
+//! serialisation.
+//!
+//! The scheduler ⇄ leader half of the control plane (the paper's Table-1
+//! API) lives in [`crate::api`]: a versioned `wire::Envelope` carrying
+//! `api::Request`/`api::Response`, served by `api::JobServer`.
 
 use crate::data::PartitionMeta;
 use crate::transport::NodeId;
 use crate::wire::{Dec, Enc, Result, WireError};
-
-/// Scheduler → leader commands (the paper's Table 1 scheduler API;
-/// `sclae_in`/`sclae_out` spelling follows the paper, aliased here).
-#[derive(Debug, Clone, PartialEq)]
-pub enum SchedCmd {
-    /// remove specific GPUs/workers from the job
-    ScaleIn { workers: Vec<NodeId> },
-    /// add workers (opaque GPU info strings: "machine:gpu")
-    ScaleOut { gpu_info: Vec<String> },
-    /// profile the job over a parallelism range
-    Profile { min_p: u32, max_p: u32 },
-    /// migrate: scale-in `remove` and scale-out `add` with ONE topology switch
-    Migrate { remove: Vec<NodeId>, add: Vec<String> },
-    /// report job status
-    Status,
-}
-
-/// Leader → scheduler replies.
-#[derive(Debug, Clone, PartialEq)]
-pub enum SchedReply {
-    Ack,
-    /// a scaling operation is already in flight — try again later (§3.1)
-    Retry,
-    Status { parallelism: u32, step: u64, throughput: f64 },
-    ProfileResult { rows: Vec<ProfileRow> },
-    Error { msg: String },
-}
-
-#[derive(Debug, Clone, PartialEq)]
-pub struct ProfileRow {
-    pub parallelism: u32,
-    pub throughput: f64,
-    pub per_gpu_throughput: f64,
-    pub efficiency: f64,
-}
 
 /// Worker → leader messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,124 +59,6 @@ pub enum FromLeader {
 // ---------------------------------------------------------------------------
 // wire encodings
 // ---------------------------------------------------------------------------
-
-fn enc_node_vec(e: &mut Enc, v: &[NodeId]) {
-    e.u32(v.len() as u32);
-    for &n in v {
-        e.u32(n);
-    }
-}
-
-fn dec_node_vec(d: &mut Dec) -> Result<Vec<NodeId>> {
-    let n = d.u32()? as usize;
-    (0..n).map(|_| d.u32()).collect()
-}
-
-impl SchedCmd {
-    pub fn encode(&self) -> Vec<u8> {
-        let mut e = Enc::new();
-        match self {
-            SchedCmd::ScaleIn { workers } => {
-                e.u8(1);
-                enc_node_vec(&mut e, workers);
-            }
-            SchedCmd::ScaleOut { gpu_info } => {
-                e.u8(2).u32(gpu_info.len() as u32);
-                for g in gpu_info {
-                    e.str(g);
-                }
-            }
-            SchedCmd::Profile { min_p, max_p } => {
-                e.u8(3).u32(*min_p).u32(*max_p);
-            }
-            SchedCmd::Migrate { remove, add } => {
-                e.u8(4);
-                enc_node_vec(&mut e, remove);
-                e.u32(add.len() as u32);
-                for g in add {
-                    e.str(g);
-                }
-            }
-            SchedCmd::Status => {
-                e.u8(5);
-            }
-        }
-        e.into_bytes()
-    }
-
-    pub fn decode(buf: &[u8]) -> Result<SchedCmd> {
-        let mut d = Dec::new(buf);
-        match d.u8()? {
-            1 => Ok(SchedCmd::ScaleIn { workers: dec_node_vec(&mut d)? }),
-            2 => {
-                let n = d.u32()? as usize;
-                let gpu_info = (0..n).map(|_| d.str()).collect::<Result<_>>()?;
-                Ok(SchedCmd::ScaleOut { gpu_info })
-            }
-            3 => Ok(SchedCmd::Profile { min_p: d.u32()?, max_p: d.u32()? }),
-            4 => {
-                let remove = dec_node_vec(&mut d)?;
-                let n = d.u32()? as usize;
-                let add = (0..n).map(|_| d.str()).collect::<Result<_>>()?;
-                Ok(SchedCmd::Migrate { remove, add })
-            }
-            5 => Ok(SchedCmd::Status),
-            tag => Err(WireError::BadTag { tag: tag as u32, ty: "SchedCmd" }),
-        }
-    }
-}
-
-impl SchedReply {
-    pub fn encode(&self) -> Vec<u8> {
-        let mut e = Enc::new();
-        match self {
-            SchedReply::Ack => {
-                e.u8(1);
-            }
-            SchedReply::Retry => {
-                e.u8(2);
-            }
-            SchedReply::Status { parallelism, step, throughput } => {
-                e.u8(3).u32(*parallelism).u64(*step).f64(*throughput);
-            }
-            SchedReply::ProfileResult { rows } => {
-                e.u8(4).u32(rows.len() as u32);
-                for r in rows {
-                    e.u32(r.parallelism).f64(r.throughput).f64(r.per_gpu_throughput).f64(r.efficiency);
-                }
-            }
-            SchedReply::Error { msg } => {
-                e.u8(5).str(msg);
-            }
-        }
-        e.into_bytes()
-    }
-
-    pub fn decode(buf: &[u8]) -> Result<SchedReply> {
-        let mut d = Dec::new(buf);
-        match d.u8()? {
-            1 => Ok(SchedReply::Ack),
-            2 => Ok(SchedReply::Retry),
-            3 => Ok(SchedReply::Status { parallelism: d.u32()?, step: d.u64()?, throughput: d.f64()? }),
-            4 => {
-                let n = d.u32()? as usize;
-                let rows = (0..n)
-                    .map(|_| {
-                        Ok(ProfileRow {
-                            parallelism: d.u32()?,
-                            throughput: d.f64()?,
-                            per_gpu_throughput: d.f64()?,
-                            efficiency: d.f64()?,
-                        })
-                    })
-                    .collect::<Result<_>>()?;
-                Ok(SchedReply::ProfileResult { rows })
-            }
-            5 => Ok(SchedReply::Error { msg: d.str()? }),
-            tag => Err(WireError::BadTag { tag: tag as u32, ty: "SchedReply" }),
-        }
-    }
-}
 
 impl ToLeader {
     pub fn encode(&self) -> Vec<u8> {
@@ -267,9 +118,9 @@ impl FromLeader {
             }
             FromLeader::Switch { at_step, version, ring, local_batch, broadcast_src, joiners, exit } => {
                 e.u8(4).u64(*at_step).u64(*version);
-                enc_node_vec(&mut e, ring);
+                e.u32s(ring);
                 e.u32(*local_batch).u32(*broadcast_src);
-                enc_node_vec(&mut e, joiners);
+                e.u32s(joiners);
                 e.bool(*exit);
             }
             FromLeader::Stop => {
@@ -291,10 +142,10 @@ impl FromLeader {
             4 => Ok(FromLeader::Switch {
                 at_step: d.u64()?,
                 version: d.u64()?,
-                ring: dec_node_vec(&mut d)?,
+                ring: d.u32s()?,
                 local_batch: d.u32()?,
                 broadcast_src: d.u32()?,
-                joiners: dec_node_vec(&mut d)?,
+                joiners: d.u32s()?,
                 exit: d.bool()?,
             }),
             5 => Ok(FromLeader::Stop),
@@ -307,34 +158,6 @@ impl FromLeader {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn roundtrip_cmd(c: SchedCmd) {
-        assert_eq!(SchedCmd::decode(&c.encode()).unwrap(), c);
-    }
-
-    #[test]
-    fn sched_cmd_roundtrips() {
-        roundtrip_cmd(SchedCmd::ScaleIn { workers: vec![1, 2, 3] });
-        roundtrip_cmd(SchedCmd::ScaleOut { gpu_info: vec!["m0:g1".into(), "m1:g7".into()] });
-        roundtrip_cmd(SchedCmd::Profile { min_p: 2, max_p: 8 });
-        roundtrip_cmd(SchedCmd::Migrate { remove: vec![5], add: vec!["m2:g0".into()] });
-        roundtrip_cmd(SchedCmd::Status);
-    }
-
-    #[test]
-    fn sched_reply_roundtrips() {
-        for r in [
-            SchedReply::Ack,
-            SchedReply::Retry,
-            SchedReply::Status { parallelism: 4, step: 100, throughput: 512.5 },
-            SchedReply::ProfileResult {
-                rows: vec![ProfileRow { parallelism: 2, throughput: 100.0, per_gpu_throughput: 50.0, efficiency: 0.9 }],
-            },
-            SchedReply::Error { msg: "bad".into() },
-        ] {
-            assert_eq!(SchedReply::decode(&r.encode()).unwrap(), r);
-        }
-    }
 
     #[test]
     fn to_leader_roundtrips() {
@@ -372,7 +195,7 @@ mod tests {
 
     #[test]
     fn bad_tag_rejected() {
-        assert!(matches!(SchedCmd::decode(&[99]), Err(WireError::BadTag { .. })));
+        assert!(matches!(FromLeader::decode(&[99]), Err(WireError::BadTag { .. })));
         assert!(matches!(ToLeader::decode(&[0]), Err(WireError::BadTag { .. })));
     }
 }

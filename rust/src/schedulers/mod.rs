@@ -1,9 +1,50 @@
 //! Cluster schedulers: FIFO, Static, ElasticSimple (the Fig 11 pair),
 //! Tiresias (discretized 2D-LAS, Gu et al. NSDI'19) and Elastic-Tiresias
 //! (Tiresias + the paper's R1 compaction / R2 expansion rules, §5.1).
+//!
+//! Parallelism adjustments go through the Table-1 surface
+//! ([`crate::api::JobControl`]) via each job's `sim.job(i)` handle — the
+//! policy primitives [`ElasticTiresias::expand_job`] /
+//! [`ElasticTiresias::shrink_job`] are written against the trait, so the
+//! SAME code also drives a live `ElasticTrainer` (in-process or through
+//! `api::JobClient` over TCP).
 
+use crate::api::{ElasticError, JobControl, JobControlExt};
 use crate::cluster::{ClusterSim, JobState, Scheduler};
 use crate::gpu_sim;
+use std::time::Duration;
+
+/// How long the retry helpers wait out an in-flight adjustment (§3.1)
+/// before giving up. Simulated handles never sleep here: scheduler rules
+/// only touch jobs that are currently adjustable.
+const RETRY_T: Duration = Duration::from_secs(30);
+
+/// A simulated job that can accept an adjustment NOW. Guarding here (not
+/// just at each rule's filter) keeps the wall-clock retry backoff in
+/// [`JobControlExt`] from ever spinning against frozen simulator time.
+fn adjustable(sim: &ClusterSim, i: usize) -> bool {
+    matches!(sim.jobs[i].state, JobState::Running { paused_until, .. } if paused_until <= sim.now)
+}
+
+/// Grow job `i` to `target` GPUs through its Table-1 handle; false if the
+/// adjustment was rejected (in flight / no resources).
+fn grow_to(sim: &mut ClusterSim, i: usize, target: u32) -> bool {
+    let p = sim.jobs[i].current_p();
+    if target <= p || !adjustable(sim, i) {
+        return false;
+    }
+    let machines = vec![String::from("sim-gpu"); (target - p) as usize];
+    ElasticTiresias::expand_job(&mut sim.job(i), machines).is_ok()
+}
+
+/// Shrink job `i` to `target` GPUs through its Table-1 handle.
+fn shrink_to(sim: &mut ClusterSim, i: usize, target: u32) -> bool {
+    let p = sim.jobs[i].current_p();
+    if target >= p || target == 0 || !adjustable(sim, i) {
+        return false;
+    }
+    ElasticTiresias::shrink_job(&mut sim.job(i), p - target).is_ok()
+}
 
 /// Plain FIFO at requested parallelism (baseline / test harness).
 #[derive(Default)]
@@ -110,7 +151,7 @@ impl Scheduler for ElasticSimple {
         // 1. shrink over-target jobs first (graceful exits are cheap)
         for &(i, target, is_new) in &targets {
             if !is_new && Self::steerable(sim, i) && sim.jobs[i].current_p() > target {
-                sim.scale_job(i, target);
+                shrink_to(sim, i, target);
             }
         }
         // 2. admit newcomers at their share
@@ -138,7 +179,7 @@ impl Scheduler for ElasticSimple {
             let s_now = gpu_sim::throughput(j.model, p, b, &sim.hw);
             let s_want = gpu_sim::throughput(j.model, want, b, &sim.hw);
             if s_want >= s_now {
-                sim.scale_job(i, want);
+                grow_to(sim, i, want);
             }
         }
     }
@@ -274,6 +315,39 @@ impl ElasticTiresias {
         ((self.r * requested as f64).ceil() as u32).max(1)
     }
 
+    /// R2 expansion primitive: one Table-1 `scale_out` adding one worker
+    /// per `machines` entry. Written against [`JobControl`], so the SAME
+    /// policy code drives a [`SimJobHandle`](crate::cluster::SimJobHandle)
+    /// in simulation and a live `ElasticTrainer` — in-process or behind
+    /// `api::JobClient` over TCP. §3.1 in-flight rejections are retried
+    /// with backoff by [`JobControlExt`].
+    pub fn expand_job(
+        job: &mut (impl JobControl + ?Sized),
+        machines: Vec<String>,
+    ) -> Result<(), ElasticError> {
+        job.scale_out_retry(machines, RETRY_T)
+    }
+
+    /// R0/R1 shrink primitive: remove the `n` most recently added workers
+    /// (`status` → victim ids → Table-1 `scale_in`), same-code-everywhere
+    /// like [`ElasticTiresias::expand_job`].
+    pub fn shrink_job(
+        job: &mut (impl JobControl + ?Sized),
+        n: u32,
+    ) -> Result<(), ElasticError> {
+        if n == 0 {
+            return Ok(());
+        }
+        let st = job.status()?;
+        if st.workers.len() as u32 <= n {
+            return Err(ElasticError::InvalidRequest(
+                "shrink would remove every worker".into(),
+            ));
+        }
+        let victims = st.workers[st.workers.len() - n as usize..].to_vec();
+        job.scale_in_retry(victims, RETRY_T)
+    }
+
     /// efficiency gain of shrinking job i by one GPU
     fn shrink_gain(sim: &ClusterSim, i: usize, max_p: u32) -> f64 {
         let j = &sim.jobs[i];
@@ -349,7 +423,7 @@ impl Scheduler for ElasticTiresias {
                     let surplus = sim.jobs[i].current_p() - sim.jobs[i].requested_p;
                     let give = surplus.min(deficit);
                     let p = sim.jobs[i].current_p();
-                    sim.scale_job(i, p - give);
+                    shrink_to(sim, i, p - give);
                 }
                 if sim.free_gpus() >= want {
                     sim.start_job(w, want);
@@ -394,7 +468,7 @@ impl Scheduler for ElasticTiresias {
                     match best {
                         Some((i, _)) => {
                             let p = sim.jobs[i].current_p();
-                            if !sim.scale_job(i, p - 1) {
+                            if !shrink_to(sim, i, p - 1) {
                                 break;
                             }
                         }
@@ -459,7 +533,7 @@ impl Scheduler for ElasticTiresias {
             for &i in &candidates {
                 let target = virt[&i];
                 if target > sim.jobs[i].current_p() {
-                    sim.scale_job(i, target);
+                    grow_to(sim, i, target);
                 }
             }
         }

@@ -36,16 +36,40 @@ pub struct Msg {
     pub payload: Vec<u8>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum NetError {
-    #[error("peer {0} unknown/disconnected")]
     UnknownPeer(NodeId),
-    #[error("receive timed out (from={from:?}, tag={tag:?})")]
     Timeout { from: Option<NodeId>, tag: Option<u32> },
-    #[error("endpoint closed")]
     Closed,
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::UnknownPeer(id) => write!(f, "peer {id} unknown/disconnected"),
+            NetError::Timeout { from, tag } => {
+                write!(f, "receive timed out (from={from:?}, tag={tag:?})")
+            }
+            NetError::Closed => write!(f, "endpoint closed"),
+            NetError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NetError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> NetError {
+        NetError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, NetError>;

@@ -9,18 +9,47 @@
 
 use std::io::{Read, Write};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("truncated message: wanted {wanted} more bytes, have {have}")]
     Truncated { wanted: usize, have: usize },
-    #[error("invalid enum tag {tag} for {ty}")]
     BadTag { tag: u32, ty: &'static str },
-    #[error("invalid utf-8 string")]
     BadUtf8,
-    #[error("frame too large: {0} bytes")]
     FrameTooLarge(usize),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// envelope version byte does not match this build's [`API_VERSION`]
+    Version { got: u8, want: u8 },
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { wanted, have } => {
+                write!(f, "truncated message: wanted {wanted} more bytes, have {have}")
+            }
+            WireError::BadTag { tag, ty } => write!(f, "invalid enum tag {tag} for {ty}"),
+            WireError::BadUtf8 => write!(f, "invalid utf-8 string"),
+            WireError::FrameTooLarge(n) => write!(f, "frame too large: {n} bytes"),
+            WireError::Version { got, want } => {
+                write!(f, "api version mismatch: got v{got}, want v{want}")
+            }
+            WireError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, WireError>;
@@ -106,6 +135,24 @@ impl Enc {
         }
         self
     }
+
+    /// u32 vector with length prefix (worker-id lists in control messages)
+    pub fn u32s(&mut self, v: &[u32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+        self
+    }
+
+    /// string vector with length prefix (machine lists in control messages)
+    pub fn strs(&mut self, v: &[String]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for s in v {
+            self.str(s);
+        }
+        self
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -181,6 +228,56 @@ impl<'a> Dec<'a> {
         let n = self.u32()? as usize;
         (0..n).map(|_| self.u64()).collect()
     }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn strs(&mut self) -> Result<Vec<String>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.str()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// versioned request/response envelope
+// ---------------------------------------------------------------------------
+
+/// Version byte carried by every [`Envelope`]. Bump on any incompatible
+/// change to the `api` request/response encodings; decoders reject
+/// mismatched versions instead of mis-parsing.
+pub const API_VERSION: u8 = 1;
+
+/// The versioned envelope every job-control frame travels in:
+/// `[version u8][seq u64][body bytes]`. `seq` lets a client match replies
+/// to requests over a plain byte stream; `body` is an encoded
+/// `api::Request` or `api::Response`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Envelope {
+    pub seq: u64,
+    pub body: Vec<u8>,
+}
+
+impl Envelope {
+    pub fn new(seq: u64, body: Vec<u8>) -> Envelope {
+        Envelope { seq, body }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(13 + self.body.len());
+        e.u8(API_VERSION).u64(self.seq).bytes(&self.body);
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Envelope> {
+        let mut d = Dec::new(buf);
+        let got = d.u8()?;
+        if got != API_VERSION {
+            return Err(WireError::Version { got, want: API_VERSION });
+        }
+        Ok(Envelope { seq: d.u64()?, body: d.bytes()? })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -212,6 +309,27 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     Ok(payload)
+}
+
+/// Request/reply loop shared by the framed TCP servers
+/// (`coordsvc::KvServer`, `api::JobServer`): Nagle off (§4.4), one frame
+/// in → one handler call → one frame out, returning cleanly when the peer
+/// closes the connection. Run it on a thread per connection.
+pub fn serve_framed(
+    stream: std::net::TcpStream,
+    mut handler: impl FnMut(&[u8]) -> Result<Vec<u8>>,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    loop {
+        let req = match read_frame(&mut reader) {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // peer closed
+        };
+        let resp = handler(&req)?;
+        write_frame(&mut writer, &resp)?;
+    }
 }
 
 #[cfg(test)]
@@ -268,6 +386,34 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn envelope_roundtrip_carries_version_byte() {
+        let env = Envelope::new(42, vec![1, 2, 3]);
+        let bytes = env.encode();
+        assert_eq!(bytes[0], API_VERSION, "first byte on the wire is the version");
+        assert_eq!(Envelope::decode(&bytes).unwrap(), env);
+    }
+
+    #[test]
+    fn envelope_rejects_wrong_version() {
+        let mut bytes = Envelope::new(1, vec![9]).encode();
+        bytes[0] = API_VERSION + 1;
+        assert!(matches!(
+            Envelope::decode(&bytes),
+            Err(WireError::Version { got, want }) if got == API_VERSION + 1 && want == API_VERSION
+        ));
+    }
+
+    #[test]
+    fn u32s_and_strs_roundtrip() {
+        let mut e = Enc::new();
+        e.u32s(&[7, 8, 9]).strs(&["m0:g1".to_string(), "m1:g0".to_string()]);
+        let b = e.into_bytes();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.u32s().unwrap(), vec![7, 8, 9]);
+        assert_eq!(d.strs().unwrap(), vec!["m0:g1".to_string(), "m1:g0".to_string()]);
     }
 
     #[test]

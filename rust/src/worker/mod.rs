@@ -25,7 +25,7 @@ use crate::allreduce;
 use crate::coordinator::{CtrlMsg, SwitchPlan, WorkerEvent};
 use crate::data::corpus::Corpus;
 use crate::data::PartitionMeta;
-use crate::runtime::{ModelMeta, Runtime};
+use crate::runtime::{xla, ModelMeta, Runtime};
 use crate::transport::{InProcEndpoint, NodeId};
 use crate::util::rng::Pcg;
 use anyhow::Result;
@@ -315,11 +315,9 @@ fn drain_stale_ctrl(ctrl: &Receiver<CtrlMsg>) {
 
 pub fn worker_loop(mut ctx: WorkerCtx) {
     if let Err(e) = worker_loop_inner(&mut ctx) {
-        // no logger is installed in tests/examples — make worker deaths
-        // visible on stderr as well (a dead worker otherwise only shows
-        // up via the leader's failure detector)
+        // make worker deaths visible on stderr (a dead worker otherwise
+        // only shows up via the leader's failure detector)
         eprintln!("[edl] worker {} exited with error: {e:#}", ctx.id);
-        log::warn!("worker {} exited with error: {e:?}", ctx.id);
     }
 }
 

@@ -4,9 +4,11 @@
 //! the rpc wire messages end-to-end across sockets.
 
 use edl::allreduce::{broadcast_recv, broadcast_send, ring_allreduce};
-use edl::rpc::{FromLeader, SchedCmd, ToLeader};
+use edl::api::Request;
+use edl::rpc::{FromLeader, ToLeader};
 use edl::transport::{PointToPoint, TcpNode};
 use edl::util::rng::Pcg;
+use edl::wire::Envelope;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -110,10 +112,13 @@ fn rpc_messages_over_tcp_frames() {
     let mut sched = TcpNode::start(10, dir.clone()).unwrap();
     let mut leader = TcpNode::start(11, dir.clone()).unwrap();
 
-    let cmd = SchedCmd::ScaleOut { gpu_info: vec!["m3:g1".into(), "m3:g2".into()] };
-    sched.send(11, edl::transport::tag::RPC, cmd.encode()).unwrap();
+    let cmd = Request::ScaleOut { machines: vec!["m3:g1".into(), "m3:g2".into()] };
+    let env = Envelope::new(1, cmd.encode());
+    sched.send(11, edl::transport::tag::RPC, env.encode()).unwrap();
     let raw = leader.recv_from(10, edl::transport::tag::RPC, T).unwrap();
-    assert_eq!(SchedCmd::decode(&raw).unwrap(), cmd);
+    let got = Envelope::decode(&raw).unwrap();
+    assert_eq!(got.seq, 1);
+    assert_eq!(Request::decode(&got.body).unwrap(), cmd);
 
     let msg = ToLeader::SyncRequest { worker: 7, step: 123, step_ms: 45.6, partition: 9, offset: 100 };
     sched.send(11, edl::transport::tag::RPC + 1, msg.encode()).unwrap();

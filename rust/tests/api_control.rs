@@ -1,0 +1,145 @@
+//! Integration tests of the unified Table-1 job-control API (`edl::api`):
+//! the §3.1 adjustment-in-flight contract with typed errors and retry,
+//! the TCP JobServer/JobClient deployment against a LIVE trainer, and the
+//! acceptance property of the redesign — the SAME ElasticTiresias policy
+//! code driving both a `ClusterSim` job and a live 2-worker
+//! `ElasticTrainer` through `JobControl`.
+
+use edl::api::{ElasticError, JobClient, JobControl, JobControlExt, JobServer};
+use edl::cluster::{ClusterSim, ScaleMode};
+use edl::coordinator::{ElasticTrainer, TrainerConfig};
+use edl::data::corpus::Corpus;
+use edl::gpu_sim::Dnn;
+use edl::schedulers::ElasticTiresias;
+use edl::trace::TraceJob;
+use edl::worker::SimBackend;
+use std::sync::Arc;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(180);
+
+fn corpus() -> Arc<Corpus> {
+    Arc::new(Corpus::markov(256, 16, 2048, 11))
+}
+
+fn sim_cfg() -> TrainerConfig {
+    TrainerConfig {
+        agg_batch: 32,
+        lr: 0.05,
+        n_partitions: 32,
+        seed: 5,
+        approx_recovery: true,
+        failure_timeout: Duration::from_secs(10),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn adjustment_in_flight_is_typed_then_retry_succeeds() {
+    // slow context preparation keeps the migrate mid-switch long enough
+    // for a racing scale-out to observe the §3.1 contract
+    let backend = SimBackend { compute_ms: 2, ctx_prep_ms: 1_500, ..SimBackend::fast(256) };
+    let t = Arc::new(ElasticTrainer::start(sim_cfg(), Arc::new(backend), corpus(), 2));
+    assert!(t.wait_step(4, T));
+
+    let victim = *t.status().workers.first().unwrap();
+    let t2 = t.clone();
+    let h = std::thread::spawn(move || t2.migrate(vec![victim], vec!["m9".into()]));
+    std::thread::sleep(Duration::from_millis(300));
+
+    // while the migrate is mid-switch, a scale-out gets the typed error...
+    let r = t.scale_out(vec!["m1".into()]);
+    assert!(
+        matches!(r, Err(ElasticError::AdjustmentInFlight)),
+        "expected AdjustmentInFlight, got {r:?}"
+    );
+
+    // ...and succeeds on retry (the JobControlExt backoff helper)
+    let mut handle: &ElasticTrainer = &t;
+    handle.scale_out_retry(vec!["m1".into()], Duration::from_secs(60)).unwrap();
+
+    assert!(h.join().unwrap().is_ok(), "migrate must have committed");
+    let st = t.status();
+    assert_eq!(st.parallelism, 3, "2 -> migrate (p=2) -> scale-out -> 3");
+    assert!(!st.workers.contains(&victim));
+    Arc::try_unwrap(t).ok().map(|t| t.stop());
+}
+
+#[test]
+fn same_elastic_tiresias_policy_drives_sim_and_live_job() {
+    // ---- simulator side: policy acts on a SimJobHandle -------------------
+    let trace = vec![TraceJob {
+        id: 0,
+        submit_s: 0.0,
+        gpus: 2,
+        service_gpu_s: 2_000.0,
+        model: Dnn::ResNet50,
+    }];
+    let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+    assert!(sim.start_job(0, 2));
+
+    ElasticTiresias::expand_job(&mut sim.job(0), vec!["m1".into()]).unwrap();
+    assert_eq!(sim.jobs[0].current_p(), 3, "sim scale-out through JobControl");
+
+    ElasticTiresias::shrink_job(&mut sim.job(0), 1).unwrap();
+    assert_eq!(sim.jobs[0].current_p(), 2, "sim scale-in through JobControl");
+
+    // ---- live side: the SAME policy code over the TCP JobClient ----------
+    let backend = SimBackend { compute_ms: 2, ..SimBackend::fast(256) };
+    let trainer = ElasticTrainer::start(sim_cfg(), Arc::new(backend), corpus(), 2);
+    assert!(trainer.wait_step(4, T));
+
+    let server = JobServer::start(trainer).unwrap();
+    let mut client = JobClient::connect(&server.addr).unwrap();
+    assert_eq!(client.status().unwrap().parallelism, 2);
+
+    ElasticTiresias::expand_job(&mut client, vec!["m1".into()]).unwrap();
+    assert_eq!(client.status().unwrap().parallelism, 3, "live scale-out over TCP");
+
+    ElasticTiresias::shrink_job(&mut client, 1).unwrap();
+    assert_eq!(client.status().unwrap().parallelism, 2, "live scale-in over TCP");
+
+    JobControl::stop(&mut client).unwrap();
+    drop(client);
+    let trainer = server.shutdown();
+    let report = trainer.stop();
+    let commits = report.events.iter().filter(|e| e.what.contains("switch-committed")).count();
+    assert_eq!(commits, 2, "one scale-out + one scale-in: {:?}", report.events);
+}
+
+#[test]
+fn tcp_client_checkpoint_restore_and_errors() {
+    let dir = std::env::temp_dir().join(format!("edl_api_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.bin");
+
+    let backend = SimBackend { compute_ms: 2, ..SimBackend::fast(256) };
+    let trainer = ElasticTrainer::start(sim_cfg(), Arc::new(backend), corpus(), 2);
+    assert!(trainer.wait_step(6, T));
+
+    let server = JobServer::start(trainer).unwrap();
+    let mut client = JobClient::connect(&server.addr).unwrap();
+
+    client.checkpoint(path.to_str().unwrap()).unwrap();
+    assert!(path.exists());
+    let ckpt_step_upper = client.status().unwrap().step;
+    client.restore(path.to_str().unwrap()).unwrap();
+    let st = client.status().unwrap();
+    assert!(st.step <= ckpt_step_upper + 2, "restore should rewind: {}", st.step);
+
+    // typed errors cross the wire intact
+    let missing = dir.join("missing.bin");
+    assert!(matches!(
+        client.restore(missing.to_str().unwrap()),
+        Err(ElasticError::Io(_))
+    ));
+    assert!(matches!(
+        client.scale_in(vec![0xDEAD]),
+        Err(ElasticError::UnknownWorker(0xDEAD))
+    ));
+
+    JobControl::stop(&mut client).unwrap();
+    drop(client);
+    server.shutdown().stop();
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -2,7 +2,7 @@
 //! multi-worker data-parallel training of the JAX transformer with elastic
 //! scaling mid-run. Requires `make artifacts` (the `tiny` config).
 
-use edl::coordinator::{ElasticTrainer, Reply, TrainerConfig};
+use edl::coordinator::{ElasticTrainer, TrainerConfig};
 use edl::data::corpus::Corpus;
 use edl::runtime::{artifacts_dir, ModelMeta, Runtime};
 use edl::worker::PjrtBackend;
@@ -12,7 +12,8 @@ use std::time::Duration;
 const T: Duration = Duration::from_secs(600);
 
 fn have_artifacts() -> bool {
-    ModelMeta::load(artifacts_dir(), "tiny").is_ok()
+    // artifacts are only usable when the real PJRT bindings are linked
+    cfg!(feature = "pjrt") && ModelMeta::load(artifacts_dir(), "tiny").is_ok()
 }
 
 fn start_tiny(n: usize, agg_batch: u32) -> (ElasticTrainer, Arc<Corpus>) {
@@ -24,7 +25,7 @@ fn start_tiny(n: usize, agg_batch: u32) -> (ElasticTrainer, Arc<Corpus>) {
         lr: 0.2,
         n_partitions: 64,
         seed: 9,
-        approx_recovery: Some(true),
+        approx_recovery: true,
         // PJRT-CPU workers oversubscribe the host cores (every client
         // spawns a full-size thread pool), so a barrier can legitimately
         // stall for tens of seconds around a topology switch — use a
@@ -108,16 +109,15 @@ fn e2e_two_workers_train_and_scale() {
 
     // stop-free scale-out to 3 workers while training continues
     let r = t.scale_out(vec!["m1".into()]);
-    assert!(matches!(r, Reply::Ack), "{r:?}");
+    assert!(r.is_ok(), "{r:?}");
     let st = t.status();
     assert_eq!(st.parallelism, 3);
     assert!(t.wait_step(st.step + 10, T), "training stalled after scale-out");
 
     // graceful scale-in back to 2
     let victim = *t.status().workers.last().unwrap();
-    match t.scale_in(vec![victim]) {
-        Reply::Ack => {}
-        other => panic!("scale_in(worker {victim}) failed: {other:?}"),
+    if let Err(e) = t.scale_in(vec![victim]) {
+        panic!("scale_in(worker {victim}) failed: {e:?}");
     }
     let st = t.status();
     assert_eq!(st.parallelism, 2);

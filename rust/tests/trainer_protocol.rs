@@ -4,7 +4,8 @@
 //! injection with approximate recovery, checkpoint/restore, profiling,
 //! and the constant-aggregate-batch / exactly-once data semantics.
 
-use edl::coordinator::{Cmd, ElasticTrainer, Reply, TrainerConfig};
+use edl::api::ElasticError;
+use edl::coordinator::{ElasticTrainer, TrainerConfig};
 use edl::data::corpus::Corpus;
 use edl::worker::{SimBackend, WorkerKnobs};
 use std::sync::atomic::Ordering;
@@ -23,7 +24,7 @@ fn sim_cfg() -> TrainerConfig {
         lr: 0.05,
         n_partitions: 32,
         seed: 5,
-        approx_recovery: Some(true),
+        approx_recovery: true,
         // long enough that a descheduled worker thread under parallel test
         // load is never mistaken for a dead one; the failure-injection
         // tests wait up to 60 s for detection, so 3 s stays snappy
@@ -67,7 +68,7 @@ fn scale_out_stop_free() {
     let t = start(2);
     assert!(t.wait_step(8, T));
     let r = t.scale_out(vec!["m1".into(), "m1".into()]);
-    assert!(matches!(r, Reply::Ack), "{r:?}");
+    assert!(r.is_ok(), "{r:?}");
     let st = t.status();
     assert_eq!(st.parallelism, 4, "after scale-out");
     assert!(t.wait_step(st.step + 10, T), "training continues after scale-out");
@@ -87,7 +88,7 @@ fn scale_in_graceful_exit() {
     assert!(t.wait_step(8, T));
     let victim = *t.status().workers.last().unwrap();
     let r = t.scale_in(vec![victim]);
-    assert!(matches!(r, Reply::Ack), "{r:?}");
+    assert!(r.is_ok(), "{r:?}");
     let st = t.status();
     assert_eq!(st.parallelism, 2);
     assert!(!st.workers.contains(&victim));
@@ -102,7 +103,7 @@ fn scale_in_rejects_removing_everyone() {
     assert!(t.wait_step(4, T));
     let ids = t.status().workers;
     let r = t.scale_in(ids);
-    assert!(matches!(r, Reply::Err(_)), "{r:?}");
+    assert!(matches!(r, Err(ElasticError::InvalidRequest(_))), "{r:?}");
     t.stop();
 }
 
@@ -124,8 +125,11 @@ fn concurrent_scaling_gets_retry() {
     let h = std::thread::spawn(move || t2.scale_out(vec!["m1".into()]));
     std::thread::sleep(Duration::from_millis(300));
     let r2 = t.scale_in(vec![*t.status().workers.first().unwrap()]);
-    assert!(matches!(r2, Reply::Retry), "expected Retry, got {r2:?}");
-    assert!(matches!(h.join().unwrap(), Reply::Ack));
+    assert!(
+        matches!(r2, Err(ElasticError::AdjustmentInFlight)),
+        "expected AdjustmentInFlight, got {r2:?}"
+    );
+    assert!(h.join().unwrap().is_ok());
     Arc::try_unwrap(t).ok().map(|t| t.stop());
 }
 
@@ -135,7 +139,7 @@ fn migration_single_switch() {
     assert!(t.wait_step(8, T));
     let victim = *t.status().workers.first().unwrap();
     let r = t.migrate(vec![victim], vec!["m2".into()]);
-    assert!(matches!(r, Reply::Ack), "{r:?}");
+    assert!(r.is_ok(), "{r:?}");
     let st = t.status();
     assert_eq!(st.parallelism, 3, "migration preserves parallelism");
     assert!(!st.workers.contains(&victim));
@@ -203,15 +207,15 @@ fn checkpoint_and_restore() {
 
     let t = start(2);
     assert!(t.wait_step(10, T));
-    let r = t.cmd(Cmd::Checkpoint { path: path.clone() });
-    assert!(matches!(r, Reply::Ack), "{r:?}");
+    let r = t.checkpoint(&path);
+    assert!(r.is_ok(), "{r:?}");
     assert!(path.exists());
     let ckpt_step_upper = t.status().step;
 
     // keep training, then restore: step must rewind to <= checkpoint step
     assert!(t.wait_step(ckpt_step_upper + 15, T));
-    let r = t.cmd(Cmd::Restore { path: path.clone() });
-    assert!(matches!(r, Reply::Ack), "{r:?}");
+    let r = t.restore(&path);
+    assert!(r.is_ok(), "{r:?}");
     let st = t.status();
     assert!(st.step <= ckpt_step_upper + 2, "restore should rewind: {} vs {}", st.step, ckpt_step_upper);
     // and training proceeds from there
@@ -226,14 +230,14 @@ fn consistent_recovery_from_checkpoint_on_failure() {
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("ckpt.bin");
     let cfg = TrainerConfig {
-        approx_recovery: Some(false),
+        approx_recovery: false,
         checkpoint_path: Some(path.clone()),
         failure_timeout: Duration::from_secs(10),
         ..sim_cfg()
     };
     let t = ElasticTrainer::start(cfg, Arc::new(SimBackend::fast(256)), corpus(), 3);
     assert!(t.wait_step(6, T));
-    assert!(matches!(t.cmd(Cmd::Checkpoint { path: path.clone() }), Reply::Ack));
+    assert!(t.checkpoint(&path).is_ok());
     let victim = *t.status().workers.last().unwrap();
     t.knobs(victim).unwrap().die_at_step.store(10, Ordering::Relaxed);
     let deadline = std::time::Instant::now() + Duration::from_secs(60);
@@ -303,12 +307,12 @@ fn repeated_scale_cycle_stays_stable() {
     let t = start(2);
     assert!(t.wait_step(4, T));
     for _ in 0..3 {
-        assert!(matches!(t.scale_out(vec!["mx".into()]), Reply::Ack));
+        assert!(t.scale_out(vec!["mx".into()]).is_ok());
         let st = t.status();
         assert_eq!(st.parallelism, 3);
         assert!(t.wait_step(st.step + 4, T));
         let victim = *t.status().workers.last().unwrap();
-        assert!(matches!(t.scale_in(vec![victim]), Reply::Ack));
+        assert!(t.scale_in(vec![victim]).is_ok());
         let st = t.status();
         assert_eq!(st.parallelism, 2);
         assert!(t.wait_step(st.step + 4, T));
