@@ -1,21 +1,104 @@
-//! L3 hot-path microbench: in-process ring allreduce throughput vs worker
-//! count and tensor size — the per-mini-batch data-plane cost of the
-//! trainer. Reports effective algorithm bandwidth
-//! (2(N−1)/N × bytes / time) and per-call latency.
+//! L3 hot-path microbench: ring allreduce throughput vs worker count and
+//! tensor size — the per-mini-batch data-plane cost of the trainer.
+//! Reports effective algorithm bandwidth (2(N−1)/N × bytes / time) and
+//! per-call latency, for BOTH the pre-PR baseline (one whole chunk per
+//! ring step, a fresh encode buffer per send, a fresh `Vec` per receive)
+//! and the segment-pipelined, pooled data plane — and for a real TCP
+//! ring, not just the in-process hub.
+//!
+//! Env knobs:
+//!  * `EDL_BENCH_SMOKE=1`   — tiny sizes/iters for CI (no perf asserts)
+//!  * `EDL_BENCH_BASELINE=1` — also write `BENCH_perf_allreduce.json`
+//!    into the current directory (the committed trajectory baseline)
 
-use edl::allreduce::ring_allreduce;
-use edl::transport::InProcHub;
+use edl::allreduce::{chunks, ring_allreduce};
+use edl::transport::{InProcHub, PointToPoint, TcpNode};
 use edl::util::json::{write_results, Json};
 use edl::util::stats;
+use edl::wire::{Dec, Enc};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 const T: Duration = Duration::from_secs(60);
 
-fn bench(n_workers: usize, len: usize, iters: u64) -> (f64, f64) {
+// ---------------------------------------------------------------------------
+// pre-PR baseline, reproduced verbatim so old-vs-new runs on one machine
+// ---------------------------------------------------------------------------
+
+fn add_assign_from_payload(dst: &mut [f32], payload: &[u8]) {
+    let mut d = Dec::new(payload);
+    let n = d.u32().unwrap() as usize;
+    assert_eq!(n, dst.len(), "baseline payload length mismatch");
+    let raw = &payload[4..4 + n * 4];
+    for (x, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+        *x += f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    }
+}
+
+fn copy_from_payload(dst: &mut [f32], payload: &[u8]) {
+    let mut d = Dec::new(payload);
+    let n = d.u32().unwrap() as usize;
+    assert_eq!(n, dst.len(), "baseline payload length mismatch");
+    let raw = &payload[4..4 + n * 4];
+    for (x, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+        *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    }
+}
+
+/// The seed's ring allreduce: one unsegmented chunk per ring step, an
+/// `Enc` allocation per send and a payload `Vec` per receive.
+fn naive_ring_allreduce<N: PointToPoint>(
+    net: &mut N,
+    ring: &[u32],
+    step: u64,
+    buf: &mut [f32],
+    timeout: Duration,
+) {
+    let n = ring.len();
+    let me = ring.iter().position(|&id| id == net.id()).unwrap();
+    if n == 1 {
+        return;
+    }
+    let right = ring[(me + 1) % n];
+    let left = ring[(me + n - 1) % n];
+    let bounds = chunks(buf.len(), n);
+    let step_tag = 0x1000u32 ^ (((step as u32) & 0xFFF) << 4);
+
+    for s in 0..n - 1 {
+        let send_chunk = (me + n - s) % n;
+        let recv_chunk = (me + n - s - 1) % n;
+        let (a, b) = bounds[send_chunk];
+        let mut e = Enc::with_capacity(8 + (b - a) * 4);
+        e.f32s(&buf[a..b]);
+        net.send(right, step_tag + s as u32, e.into_bytes()).unwrap();
+        let payload = net.recv_from(left, step_tag + s as u32, timeout).unwrap();
+        let (ra, rb) = bounds[recv_chunk];
+        add_assign_from_payload(&mut buf[ra..rb], &payload);
+    }
+    for s in 0..n - 1 {
+        let send_chunk = (me + 1 + n - s) % n;
+        let recv_chunk = (me + n - s) % n;
+        let (a, b) = bounds[send_chunk];
+        let mut e = Enc::with_capacity(8 + (b - a) * 4);
+        e.f32s(&buf[a..b]);
+        net.send(right, step_tag + 0x100 + s as u32, e.into_bytes()).unwrap();
+        let payload = net.recv_from(left, step_tag + 0x100 + s as u32, timeout).unwrap();
+        let (ra, rb) = bounds[recv_chunk];
+        copy_from_payload(&mut buf[ra..rb], &payload);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// harness
+// ---------------------------------------------------------------------------
+
+/// (ms/call, algo GB/s, summed pool (hits, misses)) over the in-proc hub.
+fn bench_inproc(n_workers: usize, len: usize, iters: u64, naive: bool) -> (f64, f64, (u64, u64)) {
     let hub = InProcHub::new();
     let ring: Vec<u32> = (0..n_workers as u32).collect();
     let eps: Vec<_> = (0..n_workers).map(|i| hub.join(i as u32)).collect();
-    let times: Vec<Vec<f64>> = std::thread::scope(|s| {
+    let results: Vec<(Vec<f64>, (u64, u64))> = std::thread::scope(|s| {
         eps.into_iter()
             .map(|mut ep| {
                 let ring = ring.clone();
@@ -24,9 +107,52 @@ fn bench(n_workers: usize, len: usize, iters: u64) -> (f64, f64) {
                     let mut times = Vec::with_capacity(iters as usize);
                     for step in 0..iters {
                         let t0 = Instant::now();
-                        ring_allreduce(&mut ep, &ring, step, &mut buf, 1.0, T).unwrap();
+                        if naive {
+                            naive_ring_allreduce(&mut ep, &ring, step, &mut buf, T);
+                        } else {
+                            ring_allreduce(&mut ep, &ring, step, &mut buf, 1.0, T).unwrap();
+                        }
                         times.push(t0.elapsed().as_secs_f64());
                         // renormalise so values stay finite
+                        for x in buf.iter_mut() {
+                            *x = 1.0;
+                        }
+                    }
+                    (times, ep.pool_stats())
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    let per_call = &results[0].0;
+    let mean_s = stats::mean(per_call);
+    let volume = 2.0 * (n_workers as f64 - 1.0) / n_workers as f64 * (len * 4) as f64;
+    let (hits, misses) = results
+        .iter()
+        .fold((0u64, 0u64), |(h, m), (_, (wh, wm))| (h + wh, m + wm));
+    (mean_s * 1e3, volume / mean_s / 1e9, (hits, misses))
+}
+
+/// (ms/call, algo GB/s) over a loopback-TCP ring.
+fn bench_tcp(n_workers: usize, len: usize, iters: u64) -> (f64, f64) {
+    let dir = Arc::new(Mutex::new(HashMap::new()));
+    let ring: Vec<u32> = (0..n_workers as u32).collect();
+    let nodes: Vec<TcpNode> =
+        (0..n_workers as u32).map(|i| TcpNode::start(i, dir.clone()).unwrap()).collect();
+    let times: Vec<Vec<f64>> = std::thread::scope(|s| {
+        nodes
+            .into_iter()
+            .map(|mut node| {
+                let ring = ring.clone();
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    let mut times = Vec::with_capacity(iters as usize);
+                    for step in 0..iters {
+                        let t0 = Instant::now();
+                        ring_allreduce(&mut node, &ring, step, &mut buf, 1.0, T).unwrap();
+                        times.push(t0.elapsed().as_secs_f64());
                         for x in buf.iter_mut() {
                             *x = 1.0;
                         }
@@ -39,34 +165,100 @@ fn bench(n_workers: usize, len: usize, iters: u64) -> (f64, f64) {
             .map(|h| h.join().unwrap())
             .collect()
     });
-    let per_call: Vec<f64> = times[0].clone();
-    let mean_s = stats::mean(&per_call);
+    let mean_s = stats::mean(&times[0]);
     let volume = 2.0 * (n_workers as f64 - 1.0) / n_workers as f64 * (len * 4) as f64;
-    let bw_gbs = volume / mean_s / 1e9;
-    (mean_s * 1e3, bw_gbs)
+    (mean_s * 1e3, volume / mean_s / 1e9)
 }
 
 fn main() {
-    println!("== ring allreduce (in-process data plane) ==");
-    println!("{:>8} {:>12} {:>12} {:>14}", "workers", "elems", "ms/call", "algo GB/s");
+    let smoke = std::env::var("EDL_BENCH_SMOKE").is_ok();
     let mut out = Json::obj();
+    out.set("smoke", smoke);
+
+    println!("== ring allreduce: pre-PR baseline vs segment-pipelined (in-process) ==");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>9} {:>14}",
+        "workers", "elems", "naive ms", "new ms", "speedup", "new algo GB/s"
+    );
+    let lens: &[usize] = if smoke {
+        &[1_000, 100_000]
+    } else {
+        &[1_000, 100_000, 1_000_000, 4_250_000]
+    };
     let mut rows = Json::Arr(vec![]);
     for &n in &[2usize, 4, 8] {
-        for &len in &[1_000usize, 100_000, 1_000_000, 4_250_000] {
-            let iters = if len > 500_000 { 10 } else { 50 };
-            let (ms, bw) = bench(n, len, iters);
-            println!("{n:>8} {len:>12} {ms:>12.3} {bw:>14.2}");
+        for &len in lens {
+            let iters = match (smoke, len > 500_000) {
+                (true, _) => 5,
+                (false, true) => 10,
+                (false, false) => 50,
+            };
+            let (naive_ms, _, _) = bench_inproc(n, len, iters, true);
+            let (new_ms, bw, pool) = bench_inproc(n, len, iters, false);
+            let speedup = naive_ms / new_ms;
+            println!("{n:>8} {len:>12} {naive_ms:>12.3} {new_ms:>12.3} {speedup:>8.2}x {bw:>14.2}");
             let mut r = Json::obj();
-            r.set("workers", n).set("elems", len).set("ms_per_call", ms).set("algo_gbs", bw);
+            r.set("workers", n)
+                .set("elems", len)
+                .set("naive_ms_per_call", naive_ms)
+                .set("ms_per_call", new_ms)
+                .set("speedup", speedup)
+                .set("algo_gbs", bw)
+                .set("pool_hits", pool.0)
+                .set("pool_misses", pool.1);
             rows.push(r);
         }
     }
     out.set("rows", rows);
+
     // the 4.25M-element case is the `small` model's full gradient (the e2e
-    // per-step payload) — it must complete well under a second
-    let (ms, _) = bench(4, 4_250_000, 5);
-    assert!(ms < 1_000.0, "full-gradient allreduce too slow: {ms:.1}ms");
-    out.set("small_model_grad_ms", ms);
+    // per-step payload) — it must complete well under a second, the pooled
+    // hot path must stay O(1)-allocation, and the acceptance target is a
+    // >=2x speedup over the pre-PR data plane on the same machine
+    if !smoke {
+        let (naive_ms, _, _) = bench_inproc(4, 4_250_000, 10, true);
+        let (new_ms, _, (hits, misses)) = bench_inproc(4, 4_250_000, 10, false);
+        let speedup = naive_ms / new_ms;
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        println!(
+            "\nheadline 4x4.25M: naive {naive_ms:.1}ms vs new {new_ms:.1}ms \
+             ({speedup:.2}x), pool hit-rate {:.1}%",
+            hit_rate * 100.0
+        );
+        assert!(new_ms < 1_000.0, "full-gradient allreduce too slow: {new_ms:.1}ms");
+        assert!(
+            hit_rate > 0.8,
+            "hot path should be O(1)-allocation (pool hit-rate {hit_rate:.2})"
+        );
+        // the PR acceptance gate: >= 2x over the pre-PR data plane on the
+        // same machine (full mode is the acceptance run; smoke skips it)
+        assert!(
+            speedup >= 2.0,
+            "acceptance: segment-pipelined data plane must be >= 2x the \
+             seed baseline, measured {speedup:.2}x"
+        );
+        out.set("small_model_grad_ms", new_ms);
+        out.set("small_model_grad_naive_ms", naive_ms);
+        out.set("headline_speedup", speedup);
+        out.set("pool_hit_rate", hit_rate);
+    }
+
+    // TCP ring: the multi-process data plane (the seed benched in-proc only)
+    println!("\n== ring allreduce (loopback TCP ring) ==");
+    let (tcp_n, tcp_len, tcp_iters) = if smoke { (2, 100_000, 3) } else { (4, 4_250_000, 5) };
+    let (tcp_ms, tcp_bw) = bench_tcp(tcp_n, tcp_len, tcp_iters);
+    println!("{tcp_n:>8} {tcp_len:>12} {tcp_ms:>12.3} {tcp_bw:>14.2} GB/s");
+    let mut tcp = Json::obj();
+    tcp.set("workers", tcp_n)
+        .set("elems", tcp_len)
+        .set("ms_per_call", tcp_ms)
+        .set("algo_gbs", tcp_bw);
+    out.set("tcp", tcp);
+
     let path = write_results("perf_allreduce", &out).unwrap();
     println!("\nresults -> {}", path.display());
+    if std::env::var("EDL_BENCH_BASELINE").is_ok() {
+        std::fs::write("BENCH_perf_allreduce.json", out.to_string_pretty()).unwrap();
+        println!("baseline -> BENCH_perf_allreduce.json");
+    }
 }

@@ -10,9 +10,11 @@
 //!     the PROTOCOL (not the constants) produces a stop ≈ broadcast time,
 //!     independent of the (hidden) context preparation.
 
+use edl::allreduce::{broadcast_recv, broadcast_send};
 use edl::coordinator::{ElasticTrainer, TrainerConfig};
 use edl::data::corpus::Corpus;
 use edl::gpu_sim::{edl_stop_time, stop_resume_overhead, Dnn};
+use edl::transport::InProcHub;
 use edl::util::json::{write_results, Json};
 use edl::util::stats;
 use edl::worker::SimBackend;
@@ -20,6 +22,40 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const MODELS: [Dnn; 5] = [Dnn::AlexNet, Dnn::ResNet152, Dnn::ResNet50, Dnn::VGG19, Dnn::VGG16];
+
+/// Wall time (s) to broadcast a `elems`-element model to `k` joiners over
+/// the binomial relay tree (min of `tries` runs: the stopping-time cost of
+/// the model-preparation step, which must scale O(log K), not O(K)).
+fn broadcast_time(k: usize, elems: usize, tries: usize) -> f64 {
+    let model = vec![1.25f32; elems];
+    let mut best = f64::INFINITY;
+    for _ in 0..tries {
+        let hub = InProcHub::new();
+        let dests: Vec<u32> = (1..=k as u32).collect();
+        let mut src = hub.join(0);
+        let joiners: Vec<_> = dests.iter().map(|&d| hub.join(d)).collect();
+        let t = std::thread::scope(|s| {
+            let handles: Vec<_> = joiners
+                .into_iter()
+                .map(|mut ep| {
+                    let dests = dests.clone();
+                    s.spawn(move || {
+                        broadcast_recv(&mut ep, 0, &dests, 1, Duration::from_secs(30)).unwrap()
+                    })
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            broadcast_send(&mut src, &dests, 1, &model).unwrap();
+            for h in handles {
+                let got = h.join().unwrap();
+                assert_eq!(got.len(), elems);
+            }
+            t0.elapsed().as_secs_f64()
+        });
+        best = best.min(t);
+    }
+    best
+}
 
 fn main() {
     println!("== Table 2: stopping time (s) of scaling out 4->5 ==");
@@ -34,6 +70,36 @@ fn main() {
         r.set("stop_resume_s", sr).set("edl_s", edl).set("ratio", sr / edl);
         out.set(d.spec().name, r);
     }
+
+    // broadcast scaling: the model-preparation transfer for K joiners
+    // must cost O(log K) serial hops of pipelined refcounted segments —
+    // acceptance: K=8 completes within 3x the single-joiner time
+    println!("\n== model broadcast to K joiners (4.25M-element model) ==");
+    let elems = 4_250_000;
+    let t1 = broadcast_time(1, elems, 3);
+    let t4 = broadcast_time(4, elems, 3);
+    let t8 = broadcast_time(8, elems, 3);
+    println!(
+        "K=1 {:.1}ms   K=4 {:.1}ms ({:.2}x)   K=8 {:.1}ms ({:.2}x)",
+        t1 * 1e3,
+        t4 * 1e3,
+        t4 / t1,
+        t8 * 1e3,
+        t8 / t1
+    );
+    assert!(
+        t8 <= 3.0 * t1.max(1e-3),
+        "tree broadcast must scale sub-linearly: K=8 {:.1}ms vs K=1 {:.1}ms",
+        t8 * 1e3,
+        t1 * 1e3
+    );
+    let mut b = Json::obj();
+    b.set("elems", elems)
+        .set("k1_s", t1)
+        .set("k4_s", t4)
+        .set("k8_s", t8)
+        .set("k8_over_k1", t8 / t1.max(1e-9));
+    out.set("broadcast_scaling", b);
 
     // protocol-level measurement: 4 workers, 50 ms/step, joiner ctx-prep
     // 3 s. The stall existing workers see must track the broadcast (ms),

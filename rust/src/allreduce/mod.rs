@@ -1,4 +1,5 @@
-//! Elastic ring allreduce — the NCCL substitute (DESIGN.md §1).
+//! Elastic ring allreduce — the NCCL substitute (DESIGN.md §1 and
+//! "Data-plane performance").
 //!
 //! Implements the bandwidth-optimal ring algorithm the paper builds on
 //! (§2.1): with N workers the tensor is split into N chunks; N−1
@@ -6,19 +7,45 @@
 //! chunk, then N−1 allgather steps circulate the reduced chunks. Total
 //! traffic per worker: 2(N−1)/N × tensor bytes.
 //!
+//! §Perf: the data plane is segment-pipelined and allocation-free in
+//! steady state —
+//!
+//!  * every ring transfer is split into ~256 KiB segments
+//!    ([`SEG_ELEMS`]); each segment's send is issued before the previous
+//!    segment's receive+reduce, so on a full-duplex link the outbound
+//!    segment overlaps the inbound reduce instead of serialising one
+//!    whole chunk per ring step;
+//!  * segment buffers come from the endpoint's pool
+//!    (`PointToPoint::take_buf`/`recycle`): in a ring each node receives
+//!    exactly as many segments as it sends, so after warm-up the hot path
+//!    performs no allocations (asserted by the pool hit-rate tests);
+//!  * segments travel as raw native-order f32 bytes — no length prefix,
+//!    no decode `Vec`; the receiver reduces straight out of the payload;
+//!  * message tags give step (mixed generation), phase (reduce-scatter vs
+//!    allgather) and ring-step sequence *disjoint bit fields*
+//!    ([`ring_tag`]), so frames from consecutive allreduces or repaired
+//!    rings can never alias on a laggy link (the seed's XOR scheme let
+//!    step k's allgather collide with step k+16's reduce-scatter);
+//!  * model broadcast to K joiners runs over a binomial tree with
+//!    chunk-pipelined, refcounted segments ([`broadcast_send`]): the
+//!    model is serialised once (not once per joiner), interior joiners
+//!    relay each segment with `send_shared` as it arrives, and the
+//!    stopping time of stop-free scale-out grows O(log K), not O(K).
+//!
 //! Elasticity hooks:
 //!  * the ring order is an explicit argument — the leader rebuilds it on
 //!    every topology switch and workers swap it at the agreed mini-batch
 //!    timestamp (§4.2);
-//!  * `broadcast` implements single-source model transfer to joiners
-//!    (stop-free scaling's model-preparation step);
+//!  * `broadcast_send`/`broadcast_recv` implement single-source model
+//!    transfer to joiners (stop-free scaling's model-preparation step);
 //!  * weighted reduction supports the constant-aggregate-batch semantics
 //!    (§3.1): each worker pre-scales its gradient by `weight` and the ring
 //!    computes the plain sum, so unequal local batches still yield the
 //!    exact full-batch mean gradient.
 
-use crate::transport::{tag, NetError, PointToPoint};
+use crate::transport::{NetError, PointToPoint, Shared};
 use crate::wire::{Dec, Enc};
+use std::sync::Arc;
 use std::time::Duration;
 
 #[derive(Debug)]
@@ -27,6 +54,8 @@ pub enum ArError {
     RingTooSmall(usize),
     Net(NetError),
     Wire(crate::wire::WireError),
+    /// malformed data-plane traffic (wrong segment size, bad header, …)
+    Protocol(String),
 }
 
 impl std::fmt::Display for ArError {
@@ -36,6 +65,7 @@ impl std::fmt::Display for ArError {
             ArError::RingTooSmall(n) => write!(f, "ring too small: {n}"),
             ArError::Net(e) => write!(f, "net: {e}"),
             ArError::Wire(e) => write!(f, "wire: {e}"),
+            ArError::Protocol(s) => write!(f, "protocol: {s}"),
         }
     }
 }
@@ -64,41 +94,75 @@ impl From<crate::wire::WireError> for ArError {
 
 pub type Result<T> = std::result::Result<T, ArError>;
 
-/// §Perf: decode an f32s payload (length-prefixed LE floats) by ADDING it
-/// into `dst` in place — avoids the intermediate Vec allocation + copy of
-/// `Dec::f32s` on the reduce-scatter hot path.
-fn add_assign_from_payload(dst: &mut [f32], payload: &[u8]) -> Result<()> {
-    let mut d = Dec::new(payload);
-    let n = d.u32()? as usize;
-    if n != dst.len() || payload.len() < 4 + n * 4 {
-        return Err(ArError::Wire(crate::wire::WireError::Truncated {
-            wanted: n * 4,
-            have: payload.len().saturating_sub(4),
-        }));
-    }
-    let raw = &payload[4..4 + n * 4];
-    for (x, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
-        *x += f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
-    }
-    Ok(())
+// ---------------------------------------------------------------------------
+// tag layout
+// ---------------------------------------------------------------------------
+
+/// Default pipeline segment: 64 Ki f32 = 256 KiB — small enough to
+/// overlap send/reduce, large enough that per-frame overhead is noise.
+pub const SEG_ELEMS: usize = 64 * 1024;
+
+/// Most segments a single broadcast may use (bounded by the 14-bit seq
+/// field, minus the header slot).
+const MAX_BCAST_SEGS: usize = 16_000;
+
+const FAMILY_RING: u32 = 0x4000_0000;
+const FAMILY_BCAST: u32 = 0x8000_0000;
+
+/// Map an arbitrary 64-bit step/generation id into the 15-bit tag field:
+/// reduction mod 32767 (not a power of two, so every input bit
+/// participates). EXACT guarantee: any two ids whose difference is not a
+/// multiple of 32767 — in particular adjacent steps, ring-version bumps
+/// in the high bits (2^24 ≡ 512), and any window of 32766 consecutive
+/// generations — land on different values. Only the two neighbouring
+/// in-flight allreduces need protection; an xor-fold here would collide
+/// adjacent steps at carry boundaries (e.g. 2^29−1 → 2^29).
+fn gen_field(step: u64) -> u32 {
+    (step % 0x7FFF) as u32
 }
 
-/// §Perf: decode an f32s payload by COPYING into `dst` in place
-/// (allgather hot path).
-fn copy_from_payload(dst: &mut [f32], payload: &[u8]) -> Result<()> {
-    let mut d = Dec::new(payload);
-    let n = d.u32()? as usize;
-    if n != dst.len() || payload.len() < 4 + n * 4 {
-        return Err(ArError::Wire(crate::wire::WireError::Truncated {
-            wanted: n * 4,
-            have: payload.len().saturating_sub(4),
-        }));
+/// Ring data-plane tag: `[31:30]=family  [29]=phase  [28:14]=generation
+/// [13:0]=ring-step seq` — step, phase and seq occupy disjoint bit
+/// fields, so no (generation, phase, seq) pair can alias another within
+/// the tag windows that can coexist on a link.
+pub fn ring_tag(step: u64, phase: u32, seq: u32) -> u32 {
+    debug_assert!(phase < 2);
+    debug_assert!(seq < (1 << 14));
+    FAMILY_RING | (phase << 29) | (gen_field(step) << 14) | (seq & 0x3FFF)
+}
+
+/// Broadcast tag: same layout, `seq` 0 is the header frame and `1 + i`
+/// is segment `i`.
+pub fn bcast_tag(step: u64, seq: u32) -> u32 {
+    debug_assert!(seq < (1 << 14));
+    FAMILY_BCAST | (gen_field(step) << 14) | (seq & 0x3FFF)
+}
+
+// ---------------------------------------------------------------------------
+// raw f32 segment helpers
+// ---------------------------------------------------------------------------
+
+/// Segments travel in NATIVE byte order on both sides (serialise below,
+/// deserialise in `add_raw`/`copy_raw`) — the same symmetric-native
+/// convention as `wire::Enc::f32s`/`Dec::f32s`; the data plane assumes a
+/// single-architecture deployment, like NCCL.
+fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// §Perf: reduce a raw f32 segment into `dst` in place — no intermediate
+/// decode `Vec` on the reduce-scatter hot path.
+fn add_raw(dst: &mut [f32], raw: &[u8]) {
+    for (x, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+        *x += f32::from_ne_bytes([b[0], b[1], b[2], b[3]]);
     }
-    let raw = &payload[4..4 + n * 4];
-    unsafe {
-        std::ptr::copy_nonoverlapping(raw.as_ptr(), dst.as_mut_ptr() as *mut u8, n * 4);
+}
+
+/// §Perf: copy a raw segment into `dst` in place (allgather hot path).
+fn copy_raw(dst: &mut [f32], raw: &[u8]) {
+    for (x, b) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+        *x = f32::from_ne_bytes([b[0], b[1], b[2], b[3]]);
     }
-    Ok(())
 }
 
 /// Chunk boundaries: split `len` into `n` nearly equal ranges.
@@ -115,7 +179,80 @@ pub fn chunks(len: usize, n: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// In-place weighted-sum ring allreduce of `buf` across `ring`.
+/// Split `[a, b)` into segments of at most `seg` elements.
+fn seg_ranges(a: usize, b: usize, seg: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity((b - a).div_ceil(seg.max(1)).max(1));
+    let mut s = a;
+    while s < b {
+        let e = (s + seg).min(b);
+        out.push((s, e));
+        s = e;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// segment-pipelined ring allreduce
+// ---------------------------------------------------------------------------
+
+/// One ring transfer: stream the `send` range to `right` while reducing
+/// (or copying) the `recv` range arriving from `left`.
+struct PassSpec {
+    right: u32,
+    left: u32,
+    tag: u32,
+    send: (usize, usize),
+    recv: (usize, usize),
+    seg: usize,
+    /// allgather copies; reduce-scatter accumulates
+    copy: bool,
+}
+
+/// Segment-pipelined transfer: segment `i`'s send is issued before
+/// segment `i−1`'s receive+reduce, so outbound bytes overlap the inbound
+/// reduce on a full-duplex link. Buffers come from (and return to) the
+/// endpoint's pool — zero allocations in steady state.
+fn pipelined_pass<N: PointToPoint>(
+    net: &mut N,
+    buf: &mut [f32],
+    spec: &PassSpec,
+    timeout: Duration,
+) -> Result<()> {
+    let sends = seg_ranges(spec.send.0, spec.send.1, spec.seg);
+    let recvs = seg_ranges(spec.recv.0, spec.recv.1, spec.seg);
+    let rounds = sends.len().max(recvs.len());
+    for i in 0..=rounds {
+        if let Some(&(a, b)) = sends.get(i) {
+            let raw = f32s_as_bytes(&buf[a..b]);
+            let mut out = net.take_buf(raw.len());
+            out.extend_from_slice(raw);
+            net.send(spec.right, spec.tag, out)?;
+        }
+        if i == 0 {
+            continue;
+        }
+        if let Some(&(ra, rb)) = recvs.get(i - 1) {
+            let payload = net.recv_from(spec.left, spec.tag, timeout)?;
+            let want = (rb - ra) * 4;
+            if payload.len() != want {
+                return Err(ArError::Protocol(format!(
+                    "segment size mismatch: want {want} bytes, got {}",
+                    payload.len()
+                )));
+            }
+            if spec.copy {
+                copy_raw(&mut buf[ra..rb], &payload);
+            } else {
+                add_raw(&mut buf[ra..rb], &payload);
+            }
+            net.recycle(payload);
+        }
+    }
+    Ok(())
+}
+
+/// In-place weighted-sum ring allreduce of `buf` across `ring`, with the
+/// default segment size.
 ///
 /// Every participant must call this with the same `ring` (order matters)
 /// and the same `step` (used to namespace message tags so consecutive
@@ -129,9 +266,27 @@ pub fn ring_allreduce<N: PointToPoint>(
     weight: f32,
     timeout: Duration,
 ) -> Result<()> {
+    ring_allreduce_seg(net, ring, step, buf, weight, timeout, SEG_ELEMS)
+}
+
+/// [`ring_allreduce`] with an explicit pipeline segment size (elements).
+/// Results are bitwise independent of `seg_elems` — segmentation changes
+/// scheduling, never the floating-point reduction order.
+pub fn ring_allreduce_seg<N: PointToPoint>(
+    net: &mut N,
+    ring: &[u32],
+    step: u64,
+    buf: &mut [f32],
+    weight: f32,
+    timeout: Duration,
+    seg_elems: usize,
+) -> Result<()> {
     let n = ring.len();
     if n == 0 {
         return Err(ArError::RingTooSmall(0));
+    }
+    if n - 1 >= (1 << 14) {
+        return Err(ArError::Protocol(format!("ring too large for tag space: {n}")));
     }
     let me = ring.iter().position(|&id| id == net.id()).ok_or(ArError::NotInRing)?;
     if weight != 1.0 {
@@ -145,64 +300,165 @@ pub fn ring_allreduce<N: PointToPoint>(
     let right = ring[(me + 1) % n];
     let left = ring[(me + n - 1) % n];
     let bounds = chunks(buf.len(), n);
-    let step_tag = tag::RING ^ ((step as u32) & 0xFFF) << 4;
+    let seg = seg_elems.max(1);
 
     // --- reduce-scatter: after N-1 steps, chunk (me+1)%n holds the sum ---
     for s in 0..n - 1 {
         let send_chunk = (me + n - s) % n;
         let recv_chunk = (me + n - s - 1) % n;
-        let (a, b) = bounds[send_chunk];
-        let mut e = Enc::with_capacity(8 + (b - a) * 4);
-        e.f32s(&buf[a..b]);
-        net.send(right, step_tag + s as u32, e.into_bytes())?;
-        let payload = net.recv_from(left, step_tag + s as u32, timeout)?;
-        let (ra, rb) = bounds[recv_chunk];
-        add_assign_from_payload(&mut buf[ra..rb], &payload)?;
+        let spec = PassSpec {
+            right,
+            left,
+            tag: ring_tag(step, 0, s as u32),
+            send: bounds[send_chunk],
+            recv: bounds[recv_chunk],
+            seg,
+            copy: false,
+        };
+        pipelined_pass(net, buf, &spec, timeout)?;
     }
 
     // --- allgather: circulate the reduced chunks ---
     for s in 0..n - 1 {
         let send_chunk = (me + 1 + n - s) % n;
         let recv_chunk = (me + n - s) % n;
-        let (a, b) = bounds[send_chunk];
-        let mut e = Enc::with_capacity(8 + (b - a) * 4);
-        e.f32s(&buf[a..b]);
-        net.send(right, step_tag + 0x100 + s as u32, e.into_bytes())?;
-        let payload = net.recv_from(left, step_tag + 0x100 + s as u32, timeout)?;
-        let (ra, rb) = bounds[recv_chunk];
-        copy_from_payload(&mut buf[ra..rb], &payload)?;
+        let spec = PassSpec {
+            right,
+            left,
+            tag: ring_tag(step, 1, s as u32),
+            send: bounds[send_chunk],
+            recv: bounds[recv_chunk],
+            seg,
+            copy: true,
+        };
+        pipelined_pass(net, buf, &spec, timeout)?;
     }
     Ok(())
 }
 
-/// Single-source broadcast: `src` sends `buf` to each of `dests` directly
-/// (the paper uses one existing worker to broadcast the model to all new
-/// workers, §4.2).
+// ---------------------------------------------------------------------------
+// binomial-tree, chunk-pipelined model broadcast
+// ---------------------------------------------------------------------------
+
+/// Binomial-tree links over ranks `0..m` rooted at 0: rank `p` receives
+/// from `p − msb(p)` and feeds `p + 2^k` for every `2^k > p` still in
+/// range (the recursive-doubling schedule).
+fn tree_links(m: usize, p: usize) -> (Option<usize>, Vec<usize>) {
+    debug_assert!(p < m);
+    let parent = if p == 0 {
+        None
+    } else {
+        Some(p - (1usize << (usize::BITS - 1 - p.leading_zeros())))
+    };
+    let mut children = Vec::new();
+    let mut span = 1usize;
+    while span < m {
+        if span > p && p + span < m {
+            children.push(p + span);
+        }
+        span <<= 1;
+    }
+    (parent, children)
+}
+
+/// Broadcast segment size for a model of `total` elements (bounded by
+/// the tag seq field).
+fn bcast_seg(total: usize) -> usize {
+    SEG_ELEMS.max(total.div_ceil(MAX_BCAST_SEGS)).max(1)
+}
+
+/// Single-source model broadcast to `dests` over a binomial tree of
+/// chunk-pipelined, refcounted segments (§4.2: the model-preparation step
+/// of stop-free scaling; this is what Table 2's stopping time measures).
+///
+/// The model is serialised ONCE; each segment is a [`Shared`] buffer the
+/// in-proc hub fans out by refcount and interior joiners relay with
+/// `send_shared` as soon as it arrives, so K joiners cost O(log K) serial
+/// transfers of pipelined segments instead of K sequential full copies.
+///
+/// Every receiver must call [`broadcast_recv`] with the same `dests`
+/// slice (order defines tree ranks: `src` is rank 0, `dests[i]` is rank
+/// `i + 1`).
 pub fn broadcast_send<N: PointToPoint>(
     net: &mut N,
     dests: &[u32],
     step: u64,
     buf: &[f32],
 ) -> Result<()> {
-    let t = tag::BCAST ^ ((step as u32) & 0xFFFF);
-    for &d in dests {
-        let mut e = Enc::with_capacity(8 + buf.len() * 4);
-        e.f32s(buf);
-        net.send(d, t, e.into_bytes())?;
+    if dests.is_empty() {
+        return Ok(());
+    }
+    let m = dests.len() + 1;
+    let total = buf.len();
+    let seg = bcast_seg(total);
+    let segs = seg_ranges(0, total, seg);
+    let (_, children) = tree_links(m, 0);
+
+    let mut e = Enc::with_capacity(12);
+    e.u32(total as u32).u32(segs.len() as u32).u32(seg as u32);
+    let header: Shared = Arc::new(e.into_bytes());
+    for &c in &children {
+        net.send_shared(dests[c - 1], bcast_tag(step, 0), &header)?;
+    }
+    for (i, &(a, b)) in segs.iter().enumerate() {
+        let shared: Shared = Arc::new(f32s_as_bytes(&buf[a..b]).to_vec());
+        let t = bcast_tag(step, 1 + i as u32);
+        for &c in &children {
+            net.send_shared(dests[c - 1], t, &shared)?;
+        }
     }
     Ok(())
 }
 
-/// Receive a broadcast model from `src`.
+/// Receive a broadcast model from `src`, relaying each segment to this
+/// node's binomial-tree children among `dests` (see [`broadcast_send`]).
 pub fn broadcast_recv<N: PointToPoint>(
     net: &mut N,
     src: u32,
+    dests: &[u32],
     step: u64,
     timeout: Duration,
 ) -> Result<Vec<f32>> {
-    let t = tag::BCAST ^ ((step as u32) & 0xFFFF);
-    let payload = net.recv_from(src, t, timeout)?;
-    Ok(Dec::new(&payload).f32s()?)
+    let me = net.id();
+    let p = 1 + dests.iter().position(|&d| d == me).ok_or(ArError::NotInRing)?;
+    let m = dests.len() + 1;
+    let (parent, children) = tree_links(m, p);
+    let parent = parent.expect("non-root rank always has a parent");
+    let pid = if parent == 0 { src } else { dests[parent - 1] };
+
+    let header = net.recv_shared(pid, bcast_tag(step, 0), timeout)?;
+    for &c in &children {
+        net.send_shared(dests[c - 1], bcast_tag(step, 0), &header)?;
+    }
+    let mut d = Dec::new(&header);
+    let total = d.u32()? as usize;
+    let nsegs = d.u32()? as usize;
+    let seg = (d.u32()? as usize).max(1);
+    let segs = seg_ranges(0, total, seg);
+    if segs.len() != nsegs {
+        return Err(ArError::Protocol(format!(
+            "broadcast header mismatch: {nsegs} segments announced, {} derived",
+            segs.len()
+        )));
+    }
+
+    let mut out = vec![0f32; total];
+    for (i, &(a, b)) in segs.iter().enumerate() {
+        let t = bcast_tag(step, 1 + i as u32);
+        let payload = net.recv_shared(pid, t, timeout)?;
+        for &c in &children {
+            net.send_shared(dests[c - 1], t, &payload)?;
+        }
+        if payload.len() != (b - a) * 4 {
+            return Err(ArError::Protocol(format!(
+                "broadcast segment {i}: want {} bytes, got {}",
+                (b - a) * 4,
+                payload.len()
+            )));
+        }
+        copy_raw(&mut out[a..b], &payload);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -214,6 +470,16 @@ mod tests {
     const T: Duration = Duration::from_secs(20);
 
     fn run_allreduce(n: usize, len: usize, seed: u64, weighted: bool) -> (Vec<Vec<f32>>, Vec<f32>) {
+        run_allreduce_seg(n, len, seed, weighted, SEG_ELEMS)
+    }
+
+    fn run_allreduce_seg(
+        n: usize,
+        len: usize,
+        seed: u64,
+        weighted: bool,
+        seg: usize,
+    ) -> (Vec<Vec<f32>>, Vec<f32>) {
         let hub = InProcHub::new();
         let ring: Vec<u32> = (0..n as u32).collect();
         let mut rng = Pcg::seeded(seed);
@@ -245,7 +511,7 @@ mod tests {
                     let mut buf = inputs[i].clone();
                     let w = weights[i];
                     s.spawn(move || {
-                        ring_allreduce(&mut ep, &ring, 7, &mut buf, w, T).unwrap();
+                        ring_allreduce_seg(&mut ep, &ring, 7, &mut buf, w, T, seg).unwrap();
                         buf
                     })
                 })
@@ -272,6 +538,19 @@ mod tests {
         for o in &outs {
             for (a, b) in o.iter().zip(&expected) {
                 assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_segments_agree_with_default() {
+        // seg=3 forces many pipeline rounds per chunk; results must be
+        // bit-identical to the default segmentation
+        let (outs_a, _) = run_allreduce_seg(4, 257, 9, true, 3);
+        let (outs_b, _) = run_allreduce_seg(4, 257, 9, true, SEG_ELEMS);
+        for (a, b) in outs_a.iter().zip(&outs_b) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
             }
         }
     }
@@ -329,6 +608,27 @@ mod tests {
     }
 
     #[test]
+    fn seg_ranges_partition_exactly() {
+        prop::check("seg-ranges-partition", 100, |rng| {
+            let a = rng.gen_range(1000) as usize;
+            let b = a + rng.gen_range(5000) as usize;
+            let seg = 1 + rng.gen_range(700) as usize;
+            let rs = seg_ranges(a, b, seg);
+            let mut pos = a;
+            for &(s, e) in &rs {
+                if s != pos || e <= s || e - s > seg {
+                    return Err(format!("bad segment ({s},{e}) at pos {pos}"));
+                }
+                pos = e;
+            }
+            if pos != b {
+                return Err(format!("covers to {pos}, want {b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn allreduce_agreement_property() {
         // all workers end with identical buffers equal to the weighted sum
         prop::check("allreduce-agreement", 8, |rng| {
@@ -378,6 +678,84 @@ mod tests {
     }
 
     #[test]
+    fn ring_tags_give_step_phase_seq_disjoint_fields() {
+        // regression for the seed's XOR scheme, where step k's allgather
+        // (+0x100 offset) collided with step k+16's reduce-scatter: with
+        // disjoint bit fields the phases can never alias, for ANY steps
+        for k in 0..64u64 {
+            for s in 0..8u32 {
+                for s2 in 0..8u32 {
+                    assert_ne!(
+                        ring_tag(k, 1, s),
+                        ring_tag(k + 16, 0, s2),
+                        "allgather(step {k}) aliases reduce-scatter(step {})",
+                        k + 16
+                    );
+                }
+            }
+        }
+        // within a window of generations, (step, phase, seq) -> tag is
+        // injective
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..512u64 {
+            for phase in 0..2u32 {
+                for seq in 0..4u32 {
+                    assert!(
+                        seen.insert(ring_tag(step, phase, seq)),
+                        "tag collision at step={step} phase={phase} seq={seq}"
+                    );
+                }
+            }
+        }
+        // ring-version bumps (high bits of the sync tag) change the
+        // generation field even when the step bits are unchanged
+        for v in 0..255u64 {
+            let a = (v << 24) | 42;
+            let b = ((v + 1) << 24) | 42;
+            assert_ne!(ring_tag(a, 0, 0), ring_tag(b, 0, 0), "version {v} aliases {}", v + 1);
+        }
+        // adjacent steps at carry boundaries (where an xor-fold scheme
+        // collides, e.g. 2^29−1 → 2^29) stay distinct
+        for shift in 1..63u64 {
+            let x = (1u64 << shift) - 1;
+            assert_ne!(
+                ring_tag(x, 0, 0),
+                ring_tag(x + 1, 0, 0),
+                "adjacent steps {x} and {} alias",
+                x + 1
+            );
+        }
+        // families are disjoint from each other and from legacy RPC tags
+        assert_ne!(ring_tag(7, 0, 0) & 0xC000_0000, bcast_tag(7, 0) & 0xC000_0000);
+        assert_eq!(crate::transport::tag::RPC & 0xC000_0000, 0);
+    }
+
+    #[test]
+    fn binomial_tree_links_consistent() {
+        for m in 1..40usize {
+            let mut indegree = vec![0usize; m];
+            for p in 0..m {
+                let (parent, children) = tree_links(m, p);
+                if p == 0 {
+                    assert!(parent.is_none());
+                } else {
+                    let par = parent.unwrap();
+                    assert!(par < p);
+                    // the parent lists p among its children
+                    let (_, pc) = tree_links(m, par);
+                    assert!(pc.contains(&p), "m={m}: {par} !-> {p}");
+                }
+                for &c in &children {
+                    assert!(c < m && c > p);
+                    indegree[c] += 1;
+                }
+            }
+            // every non-root rank is fed exactly once
+            assert!(indegree.iter().skip(1).all(|&d| d == 1), "m={m}: {indegree:?}");
+        }
+    }
+
+    #[test]
     fn broadcast_to_joiners() {
         let hub = InProcHub::new();
         let model = vec![3.5f32; 1000];
@@ -387,10 +765,50 @@ mod tests {
             let mut j1 = hub.join(1);
             let mut j2 = hub.join(2);
             s.spawn(move || broadcast_send(&mut src, &[1, 2], 5, &model2).unwrap());
-            let r1 = s.spawn(move || broadcast_recv(&mut j1, 0, 5, T).unwrap());
-            let r2 = s.spawn(move || broadcast_recv(&mut j2, 0, 5, T).unwrap());
+            let r1 = s.spawn(move || broadcast_recv(&mut j1, 0, &[1, 2], 5, T).unwrap());
+            let r2 = s.spawn(move || broadcast_recv(&mut j2, 0, &[1, 2], 5, T).unwrap());
             assert_eq!(r1.join().unwrap(), model);
             assert_eq!(r2.join().unwrap(), model);
+        });
+    }
+
+    #[test]
+    fn broadcast_tree_depth_two_relays() {
+        // K=8 joiners: ranks 3,5,6,7 sit below other joiners, so interior
+        // relaying is exercised; a multi-segment model exercises the
+        // chunk pipeline
+        let hub = InProcHub::new();
+        let k = 8u32;
+        let dests: Vec<u32> = (1..=k).collect();
+        let model: Vec<f32> = (0..200_000).map(|i| (i % 997) as f32 * 0.25).collect();
+        let model2 = model.clone();
+        std::thread::scope(|s| {
+            let mut src = hub.join(0);
+            let joiners: Vec<_> = dests.iter().map(|&d| hub.join(d)).collect();
+            let dests2 = dests.clone();
+            s.spawn(move || broadcast_send(&mut src, &dests2, 11, &model2).unwrap());
+            let handles: Vec<_> = joiners
+                .into_iter()
+                .map(|mut ep| {
+                    let dests = dests.clone();
+                    s.spawn(move || broadcast_recv(&mut ep, 0, &dests, 11, T).unwrap())
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), model);
+            }
+        });
+    }
+
+    #[test]
+    fn broadcast_empty_model() {
+        let hub = InProcHub::new();
+        std::thread::scope(|s| {
+            let mut src = hub.join(0);
+            let mut j = hub.join(1);
+            s.spawn(move || broadcast_send(&mut src, &[1], 3, &[]).unwrap());
+            let got = s.spawn(move || broadcast_recv(&mut j, 0, &[1], 3, T).unwrap());
+            assert_eq!(got.join().unwrap(), Vec::<f32>::new());
         });
     }
 
@@ -403,5 +821,38 @@ mod tests {
             ring_allreduce(&mut ep, &[0, 1], 0, &mut buf, 1.0, T),
             Err(ArError::NotInRing)
         ));
+    }
+
+    #[test]
+    fn pool_reuse_makes_hot_path_allocation_free() {
+        // O(1) amortised allocations: after warm-up every segment send
+        // draws a pooled buffer fed by the previous receives
+        let hub = InProcHub::new();
+        let eps: Vec<_> = (0..2).map(|i| hub.join(i as u32)).collect();
+        let stats: Vec<(u64, u64)> = std::thread::scope(|s| {
+            eps.into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    s.spawn(move || {
+                        let mut buf = vec![i as f32; 40_000];
+                        for step in 0..50u64 {
+                            ring_allreduce_seg(&mut ep, &[0, 1], step, &mut buf, 0.5, T, 4096)
+                                .unwrap();
+                        }
+                        ep.pool_stats()
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for &(hits, misses) in &stats {
+            // 50 calls x 2 passes x 5 segments = 500 sends; only the first
+            // call's pipeline may miss
+            assert!(hits + misses >= 500, "unexpected send count: {hits}+{misses}");
+            assert!(misses <= 16, "hot path still allocating: {misses} misses");
+            assert!(hits >= 480, "pool barely used: {hits} hits");
+        }
     }
 }

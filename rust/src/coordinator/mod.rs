@@ -64,7 +64,16 @@ pub enum WorkerEvent {
 /// leader → worker control messages
 #[derive(Debug, Clone)]
 pub enum CtrlMsg {
-    Ok { join_at_step: u64, ring: Arc<Vec<NodeId>>, local_batch: u32, broadcast_src: NodeId },
+    /// `joiners` is the broadcast-tree rank order (empty for founders):
+    /// every joiner must receive the model with the same peer list so the
+    /// binomial relay tree agrees on shape (see `allreduce::broadcast_recv`)
+    Ok {
+        join_at_step: u64,
+        ring: Arc<Vec<NodeId>>,
+        local_batch: u32,
+        broadcast_src: NodeId,
+        joiners: Arc<Vec<NodeId>>,
+    },
     Assign { meta: PartitionMeta },
     NoData,
     SyncGo { ring: Arc<Vec<NodeId>>, sync_tag: u64, switch: Option<SwitchPlan> },
@@ -306,7 +315,13 @@ impl Leader {
             self.workers.get_mut(&id).unwrap().state = WState::Active;
             self.send_ctrl(
                 id,
-                CtrlMsg::Ok { join_at_step: 0, ring: self.ring.clone(), local_batch: lb, broadcast_src: 0 },
+                CtrlMsg::Ok {
+                    join_at_step: 0,
+                    ring: self.ring.clone(),
+                    local_batch: lb,
+                    broadcast_src: 0,
+                    joiners: Arc::new(Vec::new()),
+                },
             );
         }
         self.started = true;
@@ -344,6 +359,7 @@ impl Leader {
             joiners: self.joining.clone(),
             exiting: self.op_exiting.clone(),
         };
+        let joiners = Arc::new(plan.joiners.clone());
         for &j in &self.joining {
             self.send_ctrl(
                 j,
@@ -352,6 +368,7 @@ impl Leader {
                     ring: plan.ring.clone(),
                     local_batch: lb,
                     broadcast_src,
+                    joiners: joiners.clone(),
                 },
             );
         }

@@ -11,20 +11,41 @@
 //! Messages are tagged; `recv_from` performs selective receive with an
 //! internal pending queue so ring neighbours and broadcast frames can
 //! interleave safely on one endpoint.
+//!
+//! §Perf (DESIGN.md "Data-plane performance"): the hot path is zero-copy
+//! and allocation-free in steady state —
+//!
+//!  * payloads travel as a [`Body`]: either an owned `Vec<u8>` (moved, not
+//!    copied, through the in-proc channel) or a refcounted [`Shared`]
+//!    buffer ([`PointToPoint::send_shared`]), so a model broadcast to K
+//!    in-proc joiners costs K refcount bumps, not K serialisations;
+//!  * every endpoint owns a [`BufPool`]; [`PointToPoint::take_buf`] /
+//!    [`PointToPoint::recycle`] let the allreduce engine reuse segment
+//!    buffers across all 2(N−1) ring steps instead of allocating per send;
+//!  * `TcpNode` writes `[len][from][tag]` + payload with vectored I/O
+//!    (one syscall, no framed intermediate `Vec`), and its reader threads
+//!    draw payload buffers from the node's pool;
+//!  * selective receive is indexed by `(from, tag)` — O(1) per frame even
+//!    when many tags interleave on a laggy link;
+//!  * the TCP accept loop blocks (no busy-poll); shutdown wakes it with a
+//!    self-connect.
 
 use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, Read};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub type NodeId = u32;
 
-/// Well-known tags.
+/// Refcounted payload: one buffer, many receivers (model broadcast).
+pub type Shared = Arc<Vec<u8>>;
+
+/// Well-known tags. The allreduce/broadcast data plane derives its tags
+/// in `allreduce::ring_tag`/`allreduce::bcast_tag` (disjoint
+/// step/phase/seq bit fields under the 0x4000_0000/0x8000_0000 families);
+/// only coordination traffic uses a static base.
 pub mod tag {
-    /// ring allreduce reduce-scatter/allgather chunks (base; +step)
-    pub const RING: u32 = 0x1000;
-    /// model broadcast to joining workers
-    pub const BCAST: u32 = 0x2000;
     /// RPC frames
     pub const RPC: u32 = 0x3000;
 }
@@ -34,6 +55,57 @@ pub struct Msg {
     pub from: NodeId,
     pub tag: u32,
     pub payload: Vec<u8>,
+}
+
+/// A payload in flight: owned (moved through the channel) or shared
+/// (refcounted — one buffer fanned out to many receivers).
+#[derive(Debug, Clone)]
+enum Body {
+    Owned(Vec<u8>),
+    Shared(Shared),
+}
+
+impl Body {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            Body::Owned(v) => v,
+            Body::Shared(s) => s,
+        }
+    }
+
+    fn into_vec(self) -> Vec<u8> {
+        match self {
+            Body::Owned(v) => v,
+            Body::Shared(s) => Arc::try_unwrap(s).unwrap_or_else(|s| (*s).clone()),
+        }
+    }
+
+    fn into_shared(self) -> Shared {
+        match self {
+            Body::Owned(v) => Arc::new(v),
+            Body::Shared(s) => s,
+        }
+    }
+}
+
+/// Copy `body` into `dst` (cleared first; capacity reused) and surface
+/// the transported buffer, if owned, for pooling — the shared core of
+/// both transports' `recv_into`.
+fn body_into(body: Body, dst: &mut Vec<u8>) -> Option<Vec<u8>> {
+    dst.clear();
+    dst.extend_from_slice(body.as_slice());
+    match body {
+        Body::Owned(v) => Some(v),
+        Body::Shared(_) => None,
+    }
+}
+
+/// One frame in flight between endpoints.
+#[derive(Debug)]
+struct Frame {
+    from: NodeId,
+    tag: u32,
+    body: Body,
 }
 
 #[derive(Debug)]
@@ -74,15 +146,263 @@ impl From<std::io::Error> for NetError {
 
 pub type Result<T> = std::result::Result<T, NetError>;
 
+// ---------------------------------------------------------------------------
+// buffer pool
+// ---------------------------------------------------------------------------
+
+/// Small free-list of byte buffers so the per-segment send path allocates
+/// O(1) amortised: in a ring every endpoint receives as many segments as
+/// it sends per step, so recycled receive buffers feed the next sends.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    free: Vec<Vec<u8>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Bound on pooled buffers — enough for the deepest send pipeline plus
+/// slack; beyond this, recycled buffers are dropped.
+const POOL_KEEP: usize = 32;
+
+/// Largest buffer the pool retains (data-plane segments are ~256 KiB;
+/// pooling one-off giant frames would pin up to `POOL_KEEP` copies of
+/// them for the endpoint's lifetime).
+const POOL_MAX_BUF: usize = 2 << 20;
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        BufPool::default()
+    }
+
+    /// An empty buffer with capacity ≥ `cap` (pooled if available). Only
+    /// buffers within 4× of the ask (with a 4 KiB floor) qualify, so a
+    /// tiny control-frame ask cannot walk off with a pooled data-plane
+    /// segment buffer and starve the hot path.
+    pub fn take(&mut self, cap: usize) -> Vec<u8> {
+        let ceil = cap.max(4096).saturating_mul(4);
+        if let Some(pos) =
+            self.free.iter().rposition(|b| b.capacity() >= cap && b.capacity() <= ceil)
+        {
+            let mut b = self.free.swap_remove(pos);
+            b.clear();
+            self.hits += 1;
+            return b;
+        }
+        self.misses += 1;
+        Vec::with_capacity(cap)
+    }
+
+    /// Return a spent buffer to the pool.
+    pub fn put(&mut self, buf: Vec<u8>) {
+        let cap = buf.capacity();
+        if cap > 0 && cap <= POOL_MAX_BUF && self.free.len() < POOL_KEEP {
+            self.free.push(buf);
+        }
+    }
+
+    /// (hits, misses) over the pool's lifetime — the hot-path O(1)
+    /// allocation claim is asserted against this.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+/// Thread-safe pool handle shared between a `TcpNode` and its reader
+/// threads.
+#[derive(Clone, Default)]
+struct SharedBufPool(Arc<Mutex<BufPool>>);
+
+impl SharedBufPool {
+    fn take(&self, cap: usize) -> Vec<u8> {
+        self.0.lock().unwrap().take(cap)
+    }
+    fn put(&self, buf: Vec<u8>) {
+        self.0.lock().unwrap().put(buf);
+    }
+    fn stats(&self) -> (u64, u64) {
+        self.0.lock().unwrap().stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// selective-receive mailbox (shared by both transports)
+// ---------------------------------------------------------------------------
+
+/// Out-of-order frames indexed by `(from, tag)` for O(1) selective
+/// receive. Every buffered frame gets a monotonic sequence number;
+/// `order` records `(key, seq)` in arrival order so `recv_any` returns
+/// EXACT arrival order even when selective receives have taken frames
+/// out from under it (a stale order entry never aliases to a later frame
+/// of the same key — the seq check rejects it). Stale entries are
+/// skipped lazily and compacted once they outnumber the live ones, so an
+/// endpoint that only ever uses `recv_from` cannot leak order entries.
+#[derive(Default)]
+struct PendingQueue {
+    by_key: HashMap<(NodeId, u32), VecDeque<(u64, Body)>>,
+    order: VecDeque<((NodeId, u32), u64)>,
+    next_seq: u64,
+    stale: usize,
+}
+
+impl PendingQueue {
+    fn push(&mut self, f: Frame) {
+        let key = (f.from, f.tag);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.by_key.entry(key).or_default().push_back((seq, f.body));
+        self.order.push_back((key, seq));
+    }
+
+    fn pop_match(&mut self, from: NodeId, tag: u32) -> Option<Body> {
+        let key = (from, tag);
+        let (body, now_empty) = {
+            let q = self.by_key.get_mut(&key)?;
+            (q.pop_front().map(|(_, b)| b), q.is_empty())
+        };
+        if now_empty {
+            self.by_key.remove(&key);
+        }
+        if body.is_some() {
+            self.stale += 1;
+            if self.stale > 64 && self.stale * 2 > self.order.len() {
+                self.compact();
+            }
+        }
+        body
+    }
+
+    /// Drop `order` entries whose frame a selective receive already took
+    /// (amortised O(1): runs only when stale entries dominate).
+    fn compact(&mut self) {
+        let live: std::collections::HashSet<u64> =
+            self.by_key.values().flat_map(|q| q.iter().map(|&(s, _)| s)).collect();
+        self.order.retain(|&(_, s)| live.contains(&s));
+        self.stale = 0;
+    }
+
+    fn pop_any(&mut self) -> Option<Frame> {
+        // skip stale order entries; the seq check guarantees an entry only
+        // ever yields the exact frame it was recorded for
+        while let Some((key, seq)) = self.order.pop_front() {
+            let (body, now_empty) = match self.by_key.get_mut(&key) {
+                Some(q) if q.front().map(|&(s, _)| s) == Some(seq) => {
+                    (q.pop_front().map(|(_, b)| b), q.is_empty())
+                }
+                _ => (None, false),
+            };
+            if now_empty {
+                self.by_key.remove(&key);
+            }
+            match body {
+                Some(body) => return Some(Frame { from: key.0, tag: key.1, body }),
+                None => self.stale = self.stale.saturating_sub(1),
+            }
+        }
+        None
+    }
+}
+
+/// Receiver half shared by [`InProcEndpoint`] and [`TcpNode`]: an MPSC
+/// drain plus the indexed pending queue.
+struct Mailbox {
+    rx: Receiver<Frame>,
+    pending: PendingQueue,
+}
+
+impl Mailbox {
+    fn new(rx: Receiver<Frame>) -> Mailbox {
+        Mailbox { rx, pending: PendingQueue::default() }
+    }
+
+    fn recv_match(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Body> {
+        if let Some(b) = self.pending.pop_match(from, tag) {
+            return Ok(b);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(NetError::Timeout { from: Some(from), tag: Some(tag) });
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(f) if f.from == from && f.tag == tag => return Ok(f.body),
+                Ok(f) => self.pending.push(f),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+            }
+        }
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Frame> {
+        if let Some(f) = self.pending.pop_any() {
+            return Ok(f);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => Ok(f),
+            Err(RecvTimeoutError::Timeout) => Err(NetError::Timeout { from: None, tag: None }),
+            Err(RecvTimeoutError::Disconnected) => Err(NetError::Closed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trait
+// ---------------------------------------------------------------------------
+
 /// Point-to-point messaging with selective receive.
+///
+/// The zero-copy extensions (`send_shared`, `recv_shared`, `recv_into`,
+/// `take_buf`/`recycle`) have copying defaults so the trait stays easy to
+/// implement; both built-in transports override them.
 pub trait PointToPoint: Send {
     fn id(&self) -> NodeId;
+
     fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()>;
+
+    /// Send one refcounted buffer without copying it (in-proc: a refcount
+    /// bump; TCP: vectored write straight from the shared buffer).
+    fn send_shared(&mut self, to: NodeId, tag: u32, payload: &Shared) -> Result<()> {
+        self.send(to, tag, payload.as_ref().clone())
+    }
+
     /// Receive the next message matching (from, tag); other messages are
     /// buffered, not dropped.
     fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>>;
+
+    /// Receive a matching message as a refcounted buffer suitable for
+    /// relaying with [`PointToPoint::send_shared`] (zero-copy fan-out).
+    fn recv_shared(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Shared> {
+        Ok(Arc::new(self.recv_from(from, tag, timeout)?))
+    }
+
+    /// Receive a matching message into `dst` (cleared first; capacity is
+    /// reused). Returns the payload length.
+    fn recv_into(
+        &mut self,
+        from: NodeId,
+        tag: u32,
+        dst: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<usize> {
+        let payload = self.recv_from(from, tag, timeout)?;
+        dst.clear();
+        dst.extend_from_slice(&payload);
+        self.recycle(payload);
+        Ok(dst.len())
+    }
+
     /// Receive any message.
     fn recv_any(&mut self, timeout: Duration) -> Result<Msg>;
+
+    /// An empty send buffer with capacity ≥ `cap`, pooled when possible.
+    fn take_buf(&mut self, cap: usize) -> Vec<u8> {
+        Vec::with_capacity(cap)
+    }
+
+    /// Return a spent buffer to the endpoint's pool.
+    fn recycle(&mut self, _spent: Vec<u8>) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -93,7 +413,7 @@ pub trait PointToPoint: Send {
 /// can join/leave at any time (that *is* the elasticity under test).
 #[derive(Default)]
 pub struct InProcHub {
-    senders: Mutex<HashMap<NodeId, Sender<Msg>>>,
+    senders: Mutex<HashMap<NodeId, Sender<Frame>>>,
 }
 
 impl InProcHub {
@@ -105,7 +425,7 @@ impl InProcHub {
         let (tx, rx) = channel();
         let prev = self.senders.lock().unwrap().insert(id, tx);
         assert!(prev.is_none(), "node id {id} already joined");
-        InProcEndpoint { id, hub: self.clone(), rx, pending: VecDeque::new() }
+        InProcEndpoint { id, hub: self.clone(), mbox: Mailbox::new(rx), pool: BufPool::new() }
     }
 
     pub fn members(&self) -> Vec<NodeId> {
@@ -114,10 +434,10 @@ impl InProcHub {
         v
     }
 
-    fn send(&self, msg: Msg, to: NodeId) -> Result<()> {
+    fn send(&self, frame: Frame, to: NodeId) -> Result<()> {
         let senders = self.senders.lock().unwrap();
         let tx = senders.get(&to).ok_or(NetError::UnknownPeer(to))?;
-        tx.send(msg).map_err(|_| NetError::UnknownPeer(to))
+        tx.send(frame).map_err(|_| NetError::UnknownPeer(to))
     }
 
     fn leave(&self, id: NodeId) {
@@ -128,14 +448,19 @@ impl InProcHub {
 pub struct InProcEndpoint {
     id: NodeId,
     hub: Arc<InProcHub>,
-    rx: Receiver<Msg>,
-    pending: VecDeque<Msg>,
+    mbox: Mailbox,
+    pool: BufPool,
 }
 
 impl InProcEndpoint {
     /// Leave the hub (graceful exit); subsequent sends to this node fail.
     pub fn leave(self) {
         self.hub.leave(self.id);
+    }
+
+    /// (hits, misses) of the endpoint's buffer pool.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        self.pool.stats()
     }
 }
 
@@ -145,39 +470,46 @@ impl PointToPoint for InProcEndpoint {
     }
 
     fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()> {
-        self.hub.send(Msg { from: self.id, tag, payload }, to)
+        self.hub.send(Frame { from: self.id, tag, body: Body::Owned(payload) }, to)
+    }
+
+    fn send_shared(&mut self, to: NodeId, tag: u32, payload: &Shared) -> Result<()> {
+        self.hub.send(Frame { from: self.id, tag, body: Body::Shared(payload.clone()) }, to)
     }
 
     fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>> {
-        if let Some(pos) = self.pending.iter().position(|m| m.from == from && m.tag == tag) {
-            return Ok(self.pending.remove(pos).unwrap().payload);
+        Ok(self.mbox.recv_match(from, tag, timeout)?.into_vec())
+    }
+
+    fn recv_shared(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Shared> {
+        Ok(self.mbox.recv_match(from, tag, timeout)?.into_shared())
+    }
+
+    fn recv_into(
+        &mut self,
+        from: NodeId,
+        tag: u32,
+        dst: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<usize> {
+        let body = self.mbox.recv_match(from, tag, timeout)?;
+        if let Some(v) = body_into(body, dst) {
+            self.pool.put(v);
         }
-        let deadline = std::time::Instant::now() + timeout;
-        loop {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                return Err(NetError::Timeout { from: Some(from), tag: Some(tag) });
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(m) if m.from == from && m.tag == tag => return Ok(m.payload),
-                Ok(m) => self.pending.push_back(m),
-                Err(RecvTimeoutError::Timeout) => {
-                    return Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
-                }
-                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
-            }
-        }
+        Ok(dst.len())
     }
 
     fn recv_any(&mut self, timeout: Duration) -> Result<Msg> {
-        if let Some(m) = self.pending.pop_front() {
-            return Ok(m);
-        }
-        match self.rx.recv_timeout(timeout) {
-            Ok(m) => Ok(m),
-            Err(RecvTimeoutError::Timeout) => Err(NetError::Timeout { from: None, tag: None }),
-            Err(RecvTimeoutError::Disconnected) => Err(NetError::Closed),
-        }
+        let f = self.mbox.recv_any(timeout)?;
+        Ok(Msg { from: f.from, tag: f.tag, payload: f.body.into_vec() })
+    }
+
+    fn take_buf(&mut self, cap: usize) -> Vec<u8> {
+        self.pool.take(cap)
+    }
+
+    fn recycle(&mut self, spent: Vec<u8>) {
+        self.pool.put(spent);
     }
 }
 
@@ -188,14 +520,18 @@ impl PointToPoint for InProcEndpoint {
 /// Framed-TCP endpoint: a listener thread accepts peer connections and
 /// pumps decoded frames into the same selective-receive queue the in-proc
 /// endpoint uses. Outbound connections are cached per peer.
+///
+/// Wire format per frame: `[len u32][from u32][tag u32][payload]` with
+/// `len = 8 + payload.len()`; header and payload leave in one vectored
+/// write (no intermediate framed buffer).
 pub struct TcpNode {
     id: NodeId,
     pub addr: String,
-    rx: Receiver<Msg>,
-    pending: VecDeque<Msg>,
+    mbox: Mailbox,
     outbound: HashMap<NodeId, std::net::TcpStream>,
     directory: Arc<Mutex<HashMap<NodeId, String>>>,
     stop: Arc<std::sync::atomic::AtomicBool>,
+    pool: SharedBufPool,
 }
 
 impl TcpNode {
@@ -203,49 +539,37 @@ impl TcpNode {
         let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?.to_string();
         directory.lock().unwrap().insert(id, addr.clone());
-        let (tx, rx) = channel::<Msg>();
+        let (tx, rx) = channel::<Frame>();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let pool = SharedBufPool::default();
 
+        // Blocking accept loop; `drop` wakes it with a self-connect so an
+        // idle node burns no CPU (the seed busy-polled at 1 ms).
         let stop2 = stop.clone();
-        listener.set_nonblocking(true)?;
-        std::thread::spawn(move || {
-            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let tx = tx.clone();
-                        std::thread::spawn(move || {
-                            let _ = stream.set_nodelay(true);
-                            let mut reader = std::io::BufReader::new(stream);
-                            loop {
-                                let frame = match crate::wire::read_frame(&mut reader) {
-                                    Ok(f) => f,
-                                    Err(_) => break,
-                                };
-                                let mut d = crate::wire::Dec::new(&frame);
-                                let from = match d.u32() {
-                                    Ok(f) => f,
-                                    Err(_) => break,
-                                };
-                                let tag = match d.u32() {
-                                    Ok(t) => t,
-                                    Err(_) => break,
-                                };
-                                let payload = frame[8..].to_vec();
-                                if tx.send(Msg { from, tag, payload }).is_err() {
-                                    break;
-                                }
-                            }
-                        });
+        let pool2 = pool.clone();
+        std::thread::spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(1));
-                    }
-                    Err(_) => break,
+                    let tx = tx.clone();
+                    let pool = pool2.clone();
+                    std::thread::spawn(move || reader_loop(stream, tx, pool));
                 }
+                Err(_) => break,
             }
         });
 
-        Ok(TcpNode { id, addr, rx, pending: VecDeque::new(), outbound: HashMap::new(), directory, stop })
+        Ok(TcpNode {
+            id,
+            addr,
+            mbox: Mailbox::new(rx),
+            outbound: HashMap::new(),
+            directory,
+            stop,
+            pool,
+        })
     }
 
     fn stream_to(&mut self, to: NodeId) -> Result<&mut std::net::TcpStream> {
@@ -263,12 +587,66 @@ impl TcpNode {
         }
         Ok(self.outbound.get_mut(&to).unwrap())
     }
+
+    fn send_slice(&mut self, to: NodeId, tag: u32, payload: &[u8]) -> Result<()> {
+        if 8 + payload.len() > crate::wire::MAX_FRAME {
+            return Err(NetError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame too large: {} bytes", payload.len()),
+            )));
+        }
+        let id = self.id;
+        let stream = self.stream_to(to)?;
+        let mut head = [0u8; 12];
+        head[..4].copy_from_slice(&((8 + payload.len()) as u32).to_le_bytes());
+        head[4..8].copy_from_slice(&id.to_le_bytes());
+        head[8..12].copy_from_slice(&tag.to_le_bytes());
+        crate::wire::write_all_vectored(stream, &head, payload)?;
+        Ok(())
+    }
+
+    /// (hits, misses) of the node's buffer pool (shared with its readers).
+    pub fn pool_stats(&self) -> (u64, u64) {
+        self.pool.stats()
+    }
+}
+
+/// Per-connection reader: parses `[len][from][tag][payload]` frames,
+/// drawing payload buffers from the node's pool.
+fn reader_loop(stream: std::net::TcpStream, tx: Sender<Frame>, pool: SharedBufPool) {
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut head = [0u8; 12];
+        if reader.read_exact(&mut head).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+        if !(8..=crate::wire::MAX_FRAME).contains(&len) {
+            break;
+        }
+        let from = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        let tag = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let plen = len - 8;
+        // read_to_end appends into the pooled buffer without the memset a
+        // resize + read_exact would pay on every frame
+        let mut payload = pool.take(plen);
+        match reader.by_ref().take(plen as u64).read_to_end(&mut payload) {
+            Ok(n) if n == plen => {}
+            _ => break,
+        }
+        if tx.send(Frame { from, tag, body: Body::Owned(payload) }).is_err() {
+            break;
+        }
+    }
 }
 
 impl Drop for TcpNode {
     fn drop(&mut self) {
         self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
         self.directory.lock().unwrap().remove(&self.id);
+        // wake the blocking accept so the listener thread can exit
+        let _ = std::net::TcpStream::connect(&self.addr);
     }
 }
 
@@ -278,48 +656,48 @@ impl PointToPoint for TcpNode {
     }
 
     fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()> {
-        let id = self.id;
-        let stream = self.stream_to(to)?;
-        let mut e = crate::wire::Enc::with_capacity(8 + payload.len());
-        e.u32(id).u32(tag);
-        let mut frame = e.into_bytes();
-        frame.extend_from_slice(&payload);
-        crate::wire::write_frame(stream, &frame).map_err(|e| match e {
-            crate::wire::WireError::Io(io) => NetError::Io(io),
-            _ => NetError::Closed,
-        })
+        self.send_slice(to, tag, &payload)?;
+        self.pool.put(payload);
+        Ok(())
+    }
+
+    fn send_shared(&mut self, to: NodeId, tag: u32, payload: &Shared) -> Result<()> {
+        self.send_slice(to, tag, payload)
     }
 
     fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>> {
-        if let Some(pos) = self.pending.iter().position(|m| m.from == from && m.tag == tag) {
-            return Ok(self.pending.remove(pos).unwrap().payload);
+        Ok(self.mbox.recv_match(from, tag, timeout)?.into_vec())
+    }
+
+    fn recv_shared(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Shared> {
+        Ok(self.mbox.recv_match(from, tag, timeout)?.into_shared())
+    }
+
+    fn recv_into(
+        &mut self,
+        from: NodeId,
+        tag: u32,
+        dst: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<usize> {
+        let body = self.mbox.recv_match(from, tag, timeout)?;
+        if let Some(v) = body_into(body, dst) {
+            self.pool.put(v);
         }
-        let deadline = std::time::Instant::now() + timeout;
-        loop {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                return Err(NetError::Timeout { from: Some(from), tag: Some(tag) });
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(m) if m.from == from && m.tag == tag => return Ok(m.payload),
-                Ok(m) => self.pending.push_back(m),
-                Err(RecvTimeoutError::Timeout) => {
-                    return Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
-                }
-                Err(RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
-            }
-        }
+        Ok(dst.len())
     }
 
     fn recv_any(&mut self, timeout: Duration) -> Result<Msg> {
-        if let Some(m) = self.pending.pop_front() {
-            return Ok(m);
-        }
-        match self.rx.recv_timeout(timeout) {
-            Ok(m) => Ok(m),
-            Err(RecvTimeoutError::Timeout) => Err(NetError::Timeout { from: None, tag: None }),
-            Err(RecvTimeoutError::Disconnected) => Err(NetError::Closed),
-        }
+        let f = self.mbox.recv_any(timeout)?;
+        Ok(Msg { from: f.from, tag: f.tag, payload: f.body.into_vec() })
+    }
+
+    fn take_buf(&mut self, cap: usize) -> Vec<u8> {
+        self.pool.take(cap)
+    }
+
+    fn recycle(&mut self, spent: Vec<u8>) {
+        self.pool.put(spent);
     }
 }
 
@@ -377,6 +755,125 @@ mod tests {
     }
 
     #[test]
+    fn inproc_shared_send_is_zero_copy() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        let mut c = hub.join(3);
+        let payload: Shared = Arc::new(vec![0xEE; 4096]);
+        a.send_shared(2, 9, &payload).unwrap();
+        a.send_shared(3, 9, &payload).unwrap();
+        let rb = b.recv_shared(1, 9, T).unwrap();
+        let rc = c.recv_shared(1, 9, T).unwrap();
+        // same allocation fanned out to both receivers
+        assert!(Arc::ptr_eq(&payload, &rb));
+        assert!(Arc::ptr_eq(&payload, &rc));
+    }
+
+    #[test]
+    fn inproc_recv_into_reuses_capacity_and_pools() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        let mut dst = Vec::with_capacity(64);
+        for i in 0..10u8 {
+            a.send(2, 1, vec![i; 16]).unwrap();
+            let n = b.recv_into(1, 1, &mut dst, T).unwrap();
+            assert_eq!(n, 16);
+            assert_eq!(dst, vec![i; 16]);
+        }
+        let (hits, misses) = b.pool_stats();
+        assert_eq!(hits + misses, 0, "recv_into only fills the pool");
+        // transported buffers were pooled: the next take_buf hits
+        let buf = b.take_buf(16);
+        assert!(buf.capacity() >= 16);
+        assert_eq!(b.pool_stats().0, 1, "pooled receive buffer reused");
+    }
+
+    #[test]
+    fn pool_take_put_amortises_allocations() {
+        let mut pool = BufPool::new();
+        let a = pool.take(100);
+        pool.put(a);
+        let b = pool.take(50);
+        assert!(b.capacity() >= 100);
+        assert_eq!(pool.stats(), (1, 1));
+        // too-small pooled buffer is not returned for a bigger ask
+        pool.put(b);
+        let c = pool.take(1000);
+        assert!(c.capacity() >= 1000);
+        assert_eq!(pool.stats(), (1, 2));
+    }
+
+    #[test]
+    fn pending_queue_interleaved_many_tags() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        for i in 0..100u32 {
+            a.send(2, i % 10, vec![i as u8]).unwrap();
+        }
+        // selectively drain tags in reverse order; per-key FIFO must hold
+        for tag in (0..10u32).rev() {
+            for k in 0..10u32 {
+                let got = b.recv_from(1, tag, T).unwrap();
+                assert_eq!(got, vec![(k * 10 + tag) as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn pending_order_compacts_under_selective_receive_only() {
+        // an endpoint that only ever uses recv_from must not leak order
+        // entries (recv_any is what normally drains them)
+        let mut pq = PendingQueue::default();
+        for round in 0..1_000u32 {
+            pq.push(Frame { from: 1, tag: round % 7, body: Body::Owned(vec![1]) });
+            assert!(pq.pop_match(1, round % 7).is_some());
+        }
+        assert!(pq.by_key.is_empty());
+        assert!(pq.order.len() <= 130, "stale order entries leaked: {}", pq.order.len());
+    }
+
+    #[test]
+    fn recv_any_sees_buffered_then_fresh() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        a.send(2, 1, vec![1]).unwrap();
+        a.send(2, 2, vec![2]).unwrap();
+        a.send(2, 3, vec![3]).unwrap();
+        // selective receive for tag 2 buffers tags 1 and 3
+        assert_eq!(b.recv_from(1, 2, T).unwrap(), vec![2]);
+        let m1 = b.recv_any(T).unwrap();
+        let m2 = b.recv_any(T).unwrap();
+        assert_eq!((m1.tag, m2.tag), (1, 3));
+    }
+
+    #[test]
+    fn recv_any_arrival_order_survives_stale_entries() {
+        // a stale order entry (left by a selective receive) must never
+        // alias to a LATER frame of the same tag: recv_any keeps exact
+        // arrival order
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        a.send(2, 1, vec![1]).unwrap();
+        a.send(2, 2, vec![2]).unwrap();
+        assert_eq!(b.recv_from(1, 2, T).unwrap(), vec![2]); // buffers tag 1
+        assert_eq!(b.recv_from(1, 1, T).unwrap(), vec![1]); // stale entry for tag 1
+        a.send(2, 3, vec![3]).unwrap();
+        a.send(2, 1, vec![4]).unwrap();
+        a.send(2, 9, vec![9]).unwrap();
+        assert_eq!(b.recv_from(1, 9, T).unwrap(), vec![9]); // buffers tags 3 and 1
+        // arrival order: tag 3 (x3) BEFORE the second tag-1 frame (x4)
+        let m1 = b.recv_any(T).unwrap();
+        let m2 = b.recv_any(T).unwrap();
+        assert_eq!((m1.tag, m1.payload), (3, vec![3]));
+        assert_eq!((m2.tag, m2.payload), (1, vec![4]));
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         let dir = Arc::new(Mutex::new(HashMap::new()));
         let mut a = TcpNode::start(1, dir.clone()).unwrap();
@@ -398,6 +895,16 @@ mod tests {
     }
 
     #[test]
+    fn tcp_shared_payload() {
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let mut a = TcpNode::start(1, dir.clone()).unwrap();
+        let mut b = TcpNode::start(2, dir.clone()).unwrap();
+        let payload: Shared = Arc::new(vec![7u8; 100_000]);
+        a.send_shared(2, 3, &payload).unwrap();
+        assert_eq!(b.recv_from(1, 3, T).unwrap(), *payload);
+    }
+
+    #[test]
     fn tcp_selective_receive() {
         let dir = Arc::new(Mutex::new(HashMap::new()));
         let mut a = TcpNode::start(1, dir.clone()).unwrap();
@@ -409,5 +916,18 @@ mod tests {
         // receive must untangle it
         assert_eq!(c.recv_from(2, 1, T).unwrap(), vec![2]);
         assert_eq!(c.recv_from(1, 1, T).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn tcp_drop_shuts_down_promptly() {
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            let node = TcpNode::start(100 + i, dir.clone()).unwrap();
+            drop(node);
+        }
+        // the blocking accept must be woken, not waited out
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(dir.lock().unwrap().is_empty());
     }
 }

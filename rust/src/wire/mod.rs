@@ -284,16 +284,38 @@ impl Envelope {
 // framing
 // ---------------------------------------------------------------------------
 
-/// Write one length-prefixed frame (single buffered write — important for
-/// latency with TCP_NODELAY: one frame, one segment).
+/// Write `head` then `tail` as one logical message using vectored I/O:
+/// a single syscall in the common case (important for latency with
+/// TCP_NODELAY: one frame, one segment) with NO intermediate framed
+/// buffer — the payload is transmitted straight from the caller's slice.
+pub fn write_all_vectored<W: Write>(w: &mut W, head: &[u8], tail: &[u8]) -> std::io::Result<()> {
+    let total = head.len() + tail.len();
+    let mut done = 0usize;
+    while done < total {
+        let n = if done < head.len() {
+            w.write_vectored(&[std::io::IoSlice::new(&head[done..]), std::io::IoSlice::new(tail)])?
+        } else {
+            w.write(&tail[done - head.len()..])?
+        };
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "write returned zero bytes",
+            ));
+        }
+        done += n;
+    }
+    Ok(())
+}
+
+/// Write one length-prefixed frame (vectored: length prefix + payload in
+/// one write, zero-copy with respect to the payload).
 pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     if payload.len() > MAX_FRAME {
         return Err(WireError::FrameTooLarge(payload.len()));
     }
-    let mut framed = Vec::with_capacity(4 + payload.len());
-    framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    framed.extend_from_slice(payload);
-    w.write_all(&framed)?;
+    let head = (payload.len() as u32).to_le_bytes();
+    write_all_vectored(w, &head, payload)?;
     w.flush()?;
     Ok(())
 }
@@ -435,6 +457,31 @@ mod tests {
         for i in 0..5u8 {
             assert_eq!(read_frame(&mut cursor).unwrap(), vec![i; 3]);
         }
+    }
+
+    #[test]
+    fn vectored_write_survives_partial_writers() {
+        // a writer that accepts one byte per call exercises every resume
+        // offset in write_all_vectored
+        struct OneByte(Vec<u8>);
+        impl std::io::Write for OneByte {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                if b.is_empty() {
+                    return Ok(0);
+                }
+                self.0.push(b[0]);
+                Ok(1)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = OneByte(Vec::new());
+        write_all_vectored(&mut w, &[1, 2, 3], &[4, 5]).unwrap();
+        assert_eq!(w.0, vec![1, 2, 3, 4, 5]);
+        let mut w = OneByte(Vec::new());
+        write_all_vectored(&mut w, &[9], &[]).unwrap();
+        assert_eq!(w.0, vec![9]);
     }
 
     #[test]

@@ -340,17 +340,24 @@ fn worker_loop_inner(ctx: &mut WorkerCtx) -> Result<()> {
 
     send(WorkerEvent::Ready { id: ctx.id });
     if ctx.joiner {
-        // block until OK + future timestamp, then receive the model
-        let (join_at, r, lb, src) = loop {
+        // block until OK + future timestamp, then receive the model over
+        // the binomial relay tree (peers = the full joiner cohort)
+        let (join_at, r, lb, src, peers) = loop {
             match ctx.ctrl.recv()? {
-                CtrlMsg::Ok { join_at_step, ring, local_batch, broadcast_src } => {
-                    break (join_at_step, ring, local_batch, broadcast_src)
+                CtrlMsg::Ok { join_at_step, ring, local_batch, broadcast_src, joiners } => {
+                    break (join_at_step, ring, local_batch, broadcast_src, joiners)
                 }
                 CtrlMsg::Stop => return Ok(()),
                 _ => {}
             }
         };
-        device.set_params(allreduce::broadcast_recv(&mut ctx.net, src, join_at, NET_T)?)?;
+        device.set_params(allreduce::broadcast_recv(
+            &mut ctx.net,
+            src,
+            peers.as_slice(),
+            join_at,
+            NET_T,
+        )?)?;
         step = join_at;
         ring = r;
         local_batch = lb;

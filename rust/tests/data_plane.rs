@@ -1,0 +1,197 @@
+//! Data-plane correctness under the microscope: the segment-pipelined
+//! ring allreduce must be BIT-IDENTICAL to a straight-line weighted-sum
+//! reference for every (N, len, segment size, weights) — segmentation and
+//! buffer pooling change scheduling, never floating-point results — and
+//! the pooled hot path must stay O(1)-allocation over TCP as well.
+
+use edl::allreduce::{broadcast_recv, broadcast_send, chunks, ring_allreduce_seg, SEG_ELEMS};
+use edl::transport::{InProcHub, PointToPoint, TcpNode};
+use edl::util::{prop, rng::Pcg};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(30);
+
+/// Straight-line reference of the ring's exact reduction order: chunk
+/// `c`'s accumulation starts at rank `c` and folds ranks `c+1, c+2, …`
+/// as `local + acc` — the same association the pipelined implementation
+/// performs, written without any networking.
+fn reference_allreduce(inputs: &[Vec<f32>], weights: &[f32]) -> Vec<f32> {
+    let n = inputs.len();
+    let len = inputs[0].len();
+    // mirror the implementation exactly: weight 1.0 skips the multiply
+    let scaled: Vec<Vec<f32>> = inputs
+        .iter()
+        .zip(weights)
+        .map(|(v, &w)| {
+            if w == 1.0 {
+                v.clone()
+            } else {
+                v.iter().map(|x| x * w).collect()
+            }
+        })
+        .collect();
+    let mut out = vec![0f32; len];
+    for (c, &(a, b)) in chunks(len, n).iter().enumerate() {
+        for i in a..b {
+            let mut acc = scaled[c][i];
+            for j in 1..n {
+                acc = scaled[(c + j) % n][i] + acc;
+            }
+            out[i] = acc;
+        }
+    }
+    out
+}
+
+fn run_ring(inputs: &[Vec<f32>], weights: &[f32], step: u64, seg: usize) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let hub = InProcHub::new();
+    let ring: Vec<u32> = (0..n as u32).collect();
+    let eps: Vec<_> = (0..n).map(|i| hub.join(i as u32)).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = eps
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut ep)| {
+                let ring = ring.clone();
+                let mut buf = inputs[i].clone();
+                let w = weights[i];
+                s.spawn(move || {
+                    ring_allreduce_seg(&mut ep, &ring, step, &mut buf, w, T, seg).unwrap();
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn segmented_allreduce_bit_identical_to_reference() {
+    prop::check("segmented-allreduce-bit-identical", 12, |rng: &mut Pcg| {
+        let n = 2 + rng.gen_range(5) as usize;
+        let len = 1 + rng.gen_range(30_000) as usize;
+        let seg = 1 + rng.gen_range(4_000) as usize;
+        let step = rng.next_u64();
+        let mut data_rng = Pcg::seeded(rng.next_u64());
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| data_rng.normal() as f32).collect())
+            .collect();
+        let weights: Vec<f32> = (0..n).map(|_| 0.05 + data_rng.f64() as f32).collect();
+        let expected = reference_allreduce(&inputs, &weights);
+        let outs = run_ring(&inputs, &weights, step, seg);
+        for (w, o) in outs.iter().enumerate() {
+            for (i, (a, b)) in o.iter().zip(&expected).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "worker {w} elt {i}: {a} ({:#x}) != reference {b} ({:#x}) \
+                         [n={n} len={len} seg={seg}]",
+                        a.to_bits(),
+                        b.to_bits()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn segment_size_never_changes_bits() {
+    // same inputs across wildly different segmentations -> identical bits
+    let mut rng = Pcg::seeded(42);
+    let n = 4;
+    let len = 10_007;
+    let inputs: Vec<Vec<f32>> =
+        (0..n).map(|_| (0..len).map(|_| rng.normal() as f32).collect()).collect();
+    let weights = vec![0.25f32, 1.0, 0.5, 0.125];
+    let baseline = run_ring(&inputs, &weights, 5, SEG_ELEMS);
+    for seg in [1usize, 7, 100, 2048, len] {
+        let outs = run_ring(&inputs, &weights, 5, seg);
+        for (a, b) in outs.iter().zip(&baseline) {
+            assert!(
+                a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "segment size {seg} changed results"
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_pooled_hot_path_is_allocation_free_in_steady_state() {
+    let dir = Arc::new(Mutex::new(HashMap::new()));
+    let nodes: Vec<TcpNode> = (0..2).map(|i| TcpNode::start(i, dir.clone()).unwrap()).collect();
+    let stats: Vec<(u64, u64)> = std::thread::scope(|s| {
+        nodes
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut node)| {
+                s.spawn(move || {
+                    let mut buf = vec![i as f32 + 0.5; 200_000];
+                    for step in 0..10u64 {
+                        ring_allreduce_seg(&mut node, &[0, 1], step, &mut buf, 0.5, T, 8_192)
+                            .unwrap();
+                    }
+                    node.pool_stats()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for &(hits, misses) in &stats {
+        // 10 calls x 2 passes x 13 segments = 260 sends + 260 receives
+        // drawing from one pool; only warm-up may allocate
+        assert!(hits + misses >= 500, "unexpected buffer traffic: {hits}+{misses}");
+        assert!(misses <= 64, "TCP hot path still allocating: {misses} misses");
+        assert!(hits >= misses * 5, "pool barely used: {hits} hits / {misses} misses");
+    }
+}
+
+#[test]
+fn broadcast_matches_over_mixed_topology_sizes() {
+    // K = 1..9 joiners in-proc: every tree shape delivers identical bits
+    for k in 1..=9u32 {
+        let hub = InProcHub::new();
+        let dests: Vec<u32> = (1..=k).collect();
+        let model: Vec<f32> = (0..65_537).map(|i| (i as f32) * 0.125 - 9.0).collect();
+        let model2 = model.clone();
+        std::thread::scope(|s| {
+            let mut src = hub.join(0);
+            let joiners: Vec<_> = dests.iter().map(|&d| hub.join(d)).collect();
+            let dests2 = dests.clone();
+            s.spawn(move || broadcast_send(&mut src, &dests2, u64::from(k), &model2).unwrap());
+            let handles: Vec<_> = joiners
+                .into_iter()
+                .map(|mut ep| {
+                    let dests = dests.clone();
+                    s.spawn(move || broadcast_recv(&mut ep, 0, &dests, u64::from(k), T).unwrap())
+                })
+                .collect();
+            for h in handles {
+                let got = h.join().unwrap();
+                assert!(got.iter().zip(&model).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+        });
+    }
+}
+
+#[test]
+fn selective_receive_timeout_with_busy_pending_queue() {
+    // a full pending queue must not satisfy a non-matching receive
+    let hub = InProcHub::new();
+    let mut a = hub.join(1);
+    let mut b = hub.join(2);
+    for i in 0..50u32 {
+        a.send(2, 7, vec![i as u8]).unwrap();
+    }
+    let err = b.recv_from(1, 8, Duration::from_millis(30)).unwrap_err();
+    assert!(matches!(err, edl::transport::NetError::Timeout { .. }));
+    // and the buffered frames are all still there, in order
+    for i in 0..50u32 {
+        assert_eq!(b.recv_from(1, 7, T).unwrap(), vec![i as u8]);
+    }
+}
