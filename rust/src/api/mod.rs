@@ -445,7 +445,13 @@ pub struct JobServer<J: JobControl + Send + 'static> {
 impl<J: JobControl + Send + 'static> JobServer<J> {
     /// Bind on 127.0.0.1:0 (ephemeral port) and serve until `shutdown`.
     pub fn start(job: J) -> std::io::Result<JobServer<J>> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
+        JobServer::start_on("127.0.0.1:0", job)
+    }
+
+    /// Bind on an explicit address (the deployment path: `edl serve
+    /// --ctl host:port` gives schedulers a well-known endpoint).
+    pub fn start_on(bind_addr: &str, job: J) -> std::io::Result<JobServer<J>> {
+        let listener = TcpListener::bind(bind_addr)?;
         let addr = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let job = Arc::new(Mutex::new(job));

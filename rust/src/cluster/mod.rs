@@ -20,11 +20,62 @@
 //! [`api::JobControl`](crate::api::JobControl), so policy code written
 //! against the simulator also drives live `ElasticTrainer` jobs.
 
-use crate::api::{ElasticError, JobControl, JobStatus, ProfileRow};
+use crate::api::{ElasticError, JobControl, JobStatus, ProfileRow, Request};
+use crate::coordinator::replay::{scheduled_join_step, ScriptedLeader};
+use crate::coordinator::{Action, TrainerConfig};
 use crate::gpu_sim::{self, Dnn, HwConfig};
 use crate::metrics::TimeSeries;
 use crate::trace::TraceJob;
 use crate::transport::NodeId;
+use crate::worker::SimBackend;
+use std::sync::Arc;
+
+/// The §4.2 stop-free switch lag, measured by replaying a scripted
+/// scale-out through the REAL [`LeaderCore`](crate::coordinator::LeaderCore)
+/// under a virtual clock instead of a parallel hand-derived formula: two
+/// founders train at `step_s` seconds per mini-batch, one joiner becomes
+/// ready, and the core schedules the switch `k = ceil(T_a / T_b)` steps
+/// ahead. Returns the wall time between joiner readiness and the topology
+/// switch — the tail of the scale-out transient the cluster simulator
+/// charges after context preparation.
+pub fn edl_switch_lag_s(step_s: f64, allowance_ms: f64) -> f64 {
+    let step_ms = (step_s * 1e3).max(0.1);
+    let cfg = TrainerConfig { switch_allowance_ms: allowance_ms, ..TrainerConfig::default() };
+    let mut leader = ScriptedLeader::new(cfg, Arc::new(SimBackend::fast(8)), 2);
+    leader.join_worker(1, "m0", false);
+    leader.join_worker(2, "m0", false);
+    // seed the core's barrier history so switch_k sees the real step time
+    leader.run_barriers(8, step_ms);
+    let (_token, acts) = leader.request(Request::ScaleOut { machines: vec!["sim".into()] });
+    let joiner = acts
+        .iter()
+        .find_map(|a| match a {
+            Action::Spawn { id, .. } => Some(*id),
+            _ => None,
+        })
+        .expect("scale-out emits a Spawn");
+    let acts = leader.join_worker(joiner, "m1", true);
+    let at_step = scheduled_join_step(&acts).expect("joiner readiness schedules the switch");
+    at_step.saturating_sub(leader.core.step()) as f64 * step_s
+}
+
+/// [`edl_switch_lag_s`] at the trainer's default allowance, memoized per
+/// step time — the simulator replays the scripted scale-out once per
+/// distinct job speed instead of once per scale event.
+fn edl_switch_lag_cached_s(step_s: f64) -> f64 {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    static CACHE: Mutex<Option<HashMap<u64, f64>>> = Mutex::new(None);
+    let key = step_s.to_bits();
+    let mut guard = CACHE.lock().unwrap_or_else(|p| p.into_inner());
+    let map = guard.get_or_insert_with(HashMap::new);
+    if let Some(&lag) = map.get(&key) {
+        return lag;
+    }
+    let lag = edl_switch_lag_s(step_s, TrainerConfig::default().switch_allowance_ms);
+    map.insert(key, lag);
+    lag
+}
 
 /// How parallelism adjustments are charged (the §6 comparison axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -299,8 +350,14 @@ impl ClusterSim {
                     self.jobs[job].state = JobState::Running { p: new_p, paused_until: self.now };
                 }
                 ScaleMode::Edl => {
-                    // stop-free: keep training at p while joiners prepare
-                    let ready = self.now + gpu_sim::edl_scale_out_e2e(model);
+                    // stop-free: keep training at p while joiners prepare.
+                    // transient = context preparation (device model) + the
+                    // switch lag the REAL leader core schedules (§4.2)
+                    let b = self.jobs[job].global_batch();
+                    let tput = gpu_sim::throughput(model, p, b, &self.hw);
+                    let step_s = if tput > 0.0 { b as f64 / tput } else { 0.1 };
+                    let prep = gpu_sim::scale_out_breakdown(model, new_p).context_prep_s;
+                    let ready = self.now + prep + edl_switch_lag_cached_s(step_s);
                     self.jobs[job].state = JobState::ScalingOut { old_p: p, new_p, ready_at: ready };
                 }
                 ScaleMode::StopResume => {
@@ -861,6 +918,20 @@ mod tests {
             sim.job(0).scale_out(vec!["m2".into()]),
             Err(ElasticError::AdjustmentInFlight)
         );
+    }
+
+    #[test]
+    fn switch_lag_comes_from_real_leader_core() {
+        // k = ceil(T_a / T_b): the lag covers the allowance and is
+        // quantised to whole mini-batches by the real state machine
+        let lag = edl_switch_lag_s(0.1, 500.0);
+        assert!((0.45..=0.75).contains(&lag), "lag={lag}");
+        // coarse steps: one step already exceeds the allowance
+        let lag2 = edl_switch_lag_s(2.0, 500.0);
+        assert!((2.0..=4.0).contains(&lag2), "lag2={lag2}");
+        // a larger allowance pushes the switch further out
+        let lag3 = edl_switch_lag_s(0.1, 2000.0);
+        assert!(lag3 > lag, "lag3={lag3} lag={lag}");
     }
 
     #[test]

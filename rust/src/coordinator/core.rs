@@ -1,0 +1,904 @@
+//! The pure EDL leader state machine.
+//!
+//! [`LeaderCore`] implements the paper's §4.1–§4.2 protocol — stop-free
+//! scale-out, graceful-exit scale-in, merged migration, straggler
+//! mitigation, failure recovery, the §4.3 dynamic data pipeline — as a
+//! deterministic function of its inputs:
+//!
+//! ```text
+//!   (now_ms, Event)  ──►  LeaderCore::handle  ──►  Vec<Action>
+//! ```
+//!
+//! * **Zero I/O.** Checkpoint reads/writes become [`Action::LoadCheckpoint`]
+//!   / [`Action::WriteCheckpoint`]; the shell performs the filesystem work.
+//! * **Zero threads, zero channels.** Worker control messages become
+//!   [`Action::Send`]; Table-1 replies become [`Action::Reply`] keyed by an
+//!   opaque [`ReqToken`] the shell chose; provisioning a new worker becomes
+//!   [`Action::Spawn`] (the in-process shell spawns a thread, the TCP
+//!   deployment matches a connecting `edl worker` process).
+//! * **Zero direct time reads.** Every `handle` call carries the clock; the
+//!   core stores only the timestamps it was given, so a virtual clock
+//!   replays recorded traces deterministically (see
+//!   [`replay`](crate::coordinator::replay) and `rust/tests/leader_core.rs`).
+//!
+//! Determinism contract: feeding the same `(now_ms, Event)` trace to two
+//! fresh cores yields byte-identical `Debug` action logs. Internal
+//! containers are ordered (`BTreeMap`) wherever iteration order can leak
+//! into actions or loss arithmetic.
+//!
+//! Shell obligations (all three shells — in-proc trainer, TCP deployment,
+//! replay harness — follow them):
+//!  * answer [`Action::LoadCheckpoint`] with [`Event::CheckpointData`]
+//!    *before* delivering any other event;
+//!  * deliver [`Event::Tick`] periodically while idle (failure detection);
+//!  * after [`Action::Spawn`], eventually deliver the worker's
+//!    `Attach`/`Register`/`Ready` events with the spawned id.
+
+use crate::api::{ElasticError, JobStatus, Request, Response};
+use crate::data::Assigner;
+use crate::transport::NodeId;
+use crate::wire::{Dec, Enc};
+use crate::worker::Backend;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::{CtrlMsg, EngineEvent, LossPoint, SwitchPlan, TrainReport, TrainerConfig, WorkerEvent};
+
+/// Opaque request correlation id: the shell picks one per Table-1 request
+/// and receives it back in [`Action::Reply`].
+pub type ReqToken = u64;
+
+/// Everything the leader reacts to.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// a worker protocol event (over channels in-proc, `rpc::ToLeader`
+    /// frames in the TCP deployment)
+    Worker(WorkerEvent),
+    /// a Table-1 request with the shell's correlation token
+    Request { token: ReqToken, req: Request },
+    /// periodic timer tick (drives the §4.2 failure detector)
+    Tick,
+    /// the shell's answer to [`Action::LoadCheckpoint`] (`None` = the file
+    /// is missing/unreadable)
+    CheckpointData { data: Option<Vec<u8>> },
+    /// the shell gave up provisioning a spawned worker (e.g. no `edl
+    /// worker` process ever claimed the slot): releases the §3.1 in-flight
+    /// guard and aborts the pending operation if nothing else remains
+    SpawnFailed { id: NodeId },
+}
+
+/// Everything the leader asks its shell to do.
+#[derive(Debug)]
+pub enum Action {
+    /// deliver a control message to worker `to`
+    Send { to: NodeId, msg: CtrlMsg },
+    /// answer the Table-1 request the shell registered under `token`
+    Reply { token: ReqToken, resp: Response },
+    /// provision a worker: thread (in-proc) or process slot (TCP)
+    Spawn { id: NodeId, machine: String, joiner: bool },
+    /// write `bytes` to `path`, then reply Ok / Err(Io) under `token`
+    WriteCheckpoint { token: ReqToken, path: PathBuf, bytes: Vec<u8> },
+    /// read `path` and feed the result back as [`Event::CheckpointData`]
+    /// before any other event
+    LoadCheckpoint { path: PathBuf },
+    /// the job is stopped; the shell's event loop should wind down
+    Shutdown,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum WState {
+    Joining { ready: bool },
+    Active,
+}
+
+struct WInfo {
+    #[allow(dead_code)] // recorded for operator visibility / future placement logic
+    machine: String,
+    state: WState,
+    step_times: std::collections::VecDeque<f64>,
+    straggle_hits: u32,
+}
+
+struct SyncInfo {
+    loss: f32,
+    weight: f32,
+}
+
+/// Why a checkpoint load is outstanding.
+enum LoadCtx {
+    /// a manual Table-1 `restore` (reply under the token)
+    Manual(ReqToken),
+    /// §4.2 consistent failure recovery (fall back to approximate on error)
+    Recovery,
+}
+
+/// The pure leader state machine. See the module docs for the contract.
+pub struct LeaderCore {
+    cfg: TrainerConfig,
+    backend: Arc<dyn Backend>,
+    expected_founders: usize,
+    workers: BTreeMap<NodeId, WInfo>,
+    active: Vec<NodeId>,
+    ring: Arc<Vec<NodeId>>,
+    ring_version: u64,
+    step: u64,
+    started: bool,
+    assigner: Assigner,
+    /// barrier arrivals for the current step (ordered: the weighted-loss
+    /// sum must not depend on hash order)
+    sync_waiting: BTreeMap<NodeId, SyncInfo>,
+    barrier_open_ms: Option<f64>,
+    plan: Option<SwitchPlan>,
+    op_reply: Option<ReqToken>,
+    joining: Vec<NodeId>,
+    op_exiting: Vec<NodeId>,
+    ckpt_pending: Option<(PathBuf, ReqToken)>,
+    pending_load: Option<LoadCtx>,
+    /// Spawn actions emitted whose worker has not attached yet. In the
+    /// TCP deployment a spawned worker process takes real time to connect
+    /// and register; until it does, the §3.1 in-flight guard must hold
+    /// (the in-proc shell attaches synchronously, so the window is zero).
+    pending_spawn: usize,
+    report: TrainReport,
+    /// (barrier time ms, weight) of recent completed barriers
+    recent_barriers: std::collections::VecDeque<(f64, f64)>,
+    last_loss: f32,
+    stopping: bool,
+    next_id: NodeId,
+    /// the clock value of the `handle` call being processed
+    now_ms: f64,
+    out: Vec<Action>,
+}
+
+impl LeaderCore {
+    pub fn new(
+        cfg: TrainerConfig,
+        backend: Arc<dyn Backend>,
+        assigner: Assigner,
+        expected_founders: usize,
+    ) -> LeaderCore {
+        LeaderCore {
+            cfg,
+            backend,
+            expected_founders,
+            workers: BTreeMap::new(),
+            active: Vec::new(),
+            ring: Arc::new(Vec::new()),
+            ring_version: 0,
+            step: 0,
+            started: false,
+            assigner,
+            sync_waiting: BTreeMap::new(),
+            barrier_open_ms: None,
+            plan: None,
+            op_reply: None,
+            joining: Vec::new(),
+            op_exiting: Vec::new(),
+            ckpt_pending: None,
+            pending_load: None,
+            pending_spawn: 0,
+            report: TrainReport::default(),
+            recent_barriers: Default::default(),
+            last_loss: f32::NAN,
+            stopping: false,
+            next_id: 1,
+            now_ms: 0.0,
+            out: Vec::new(),
+        }
+    }
+
+    /// Allocate the next worker id. Ids are deterministic: founders get
+    /// 1..=n in spawn order, joiners continue the sequence. Attaching a
+    /// worker advances the counter past its id, so shells that assign ids
+    /// themselves (e.g. replayed traces) never collide with core-spawned
+    /// joiners.
+    pub fn next_worker_id(&mut self) -> NodeId {
+        loop {
+            let id = self.next_id;
+            self.next_id += 1;
+            if !self.workers.contains_key(&id) {
+                return id;
+            }
+        }
+    }
+
+    /// Current mini-batch step counter.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Ids of the currently active (training) workers, ring order.
+    pub fn active_workers(&self) -> Vec<NodeId> {
+        self.active.clone()
+    }
+
+    /// True once a `stop` request was processed.
+    pub fn stopping(&self) -> bool {
+        self.stopping
+    }
+
+    /// Consume the core and hand back the training report.
+    pub fn into_report(mut self) -> TrainReport {
+        self.report.steps = self.step;
+        self.report.epochs = self.assigner.epoch;
+        self.report
+    }
+
+    /// Feed one event at clock time `now_ms`; returns the actions the
+    /// shell must perform, in order.
+    pub fn handle(&mut self, now_ms: f64, ev: Event) -> Vec<Action> {
+        self.now_ms = now_ms;
+        match ev {
+            Event::Worker(wev) => self.handle_worker(wev),
+            Event::Request { token, req } => self.handle_request(token, req),
+            Event::Tick => {
+                if !self.stopping {
+                    self.check_failures();
+                }
+            }
+            Event::CheckpointData { data } => self.handle_checkpoint_data(data),
+            Event::SpawnFailed { id } => self.handle_spawn_failed(id),
+        }
+        std::mem::take(&mut self.out)
+    }
+
+    fn handle_spawn_failed(&mut self, id: NodeId) {
+        self.pending_spawn = self.pending_spawn.saturating_sub(1);
+        self.event(format!("spawn-failed worker={id}"));
+        if self.pending_spawn == 0
+            && self.plan.is_none()
+            && self.joining.is_empty()
+            && self.op_exiting.is_empty()
+        {
+            if let Some(token) = self.op_reply.take() {
+                self.reply(
+                    token,
+                    Response::Err(ElasticError::Aborted(
+                        "no worker arrived for the requested scale-out".into(),
+                    )),
+                );
+            }
+        } else {
+            // the joiners that DID arrive may all be ready already
+            self.maybe_commit_scale();
+        }
+    }
+
+    // -- helpers -------------------------------------------------------------
+
+    fn local_batch_for(&self, p: u32) -> u32 {
+        let want = (self.cfg.agg_batch / p.max(1)).max(1);
+        self.backend.pick_batch(want).unwrap_or(1)
+    }
+
+    /// k = ceil(T_a / T_b), clamped (§4.2)
+    fn switch_k(&self) -> u64 {
+        let avg_step_ms = if self.recent_barriers.len() >= 2 {
+            let dts: Vec<f64> = self
+                .recent_barriers
+                .iter()
+                .zip(self.recent_barriers.iter().skip(1))
+                .map(|((a, _), (b, _))| b - a)
+                .collect();
+            crate::util::stats::median(&dts).max(0.1)
+        } else {
+            100.0
+        };
+        ((self.cfg.switch_allowance_ms / avg_step_ms).ceil() as u64).clamp(1, 64)
+    }
+
+    fn event(&mut self, what: String) {
+        self.report.events.push(EngineEvent { wall_ms: self.now_ms, step: self.step, what });
+    }
+
+    fn throughput_sps(&self) -> f64 {
+        if self.recent_barriers.len() < 2 {
+            return 0.0;
+        }
+        let (t0, _) = self.recent_barriers.front().unwrap();
+        let (t1, _) = self.recent_barriers.back().unwrap();
+        let samples: f64 = self.recent_barriers.iter().skip(1).map(|&(_, w)| w).sum();
+        let dt = (t1 - t0) / 1e3;
+        if dt <= 0.0 {
+            0.0
+        } else {
+            samples / dt
+        }
+    }
+
+    fn send_ctrl(&mut self, to: NodeId, msg: CtrlMsg) {
+        if self.workers.contains_key(&to) {
+            self.out.push(Action::Send { to, msg });
+        }
+    }
+
+    fn reply(&mut self, token: ReqToken, resp: Response) {
+        self.out.push(Action::Reply { token, resp });
+    }
+
+    fn maybe_start_job(&mut self) {
+        if self.started {
+            return;
+        }
+        let founders: Vec<NodeId> = self.workers.keys().copied().collect();
+        if founders.len() < self.expected_founders
+            || !founders.iter().all(|id| {
+                matches!(
+                    self.workers.get(id).map(|w| &w.state),
+                    Some(WState::Joining { ready: true })
+                )
+            })
+        {
+            return;
+        }
+        self.active = founders.clone();
+        self.ring = Arc::new(founders.clone());
+        let lb = self.local_batch_for(self.active.len() as u32);
+        for id in founders {
+            if let Some(w) = self.workers.get_mut(&id) {
+                w.state = WState::Active;
+            }
+            self.send_ctrl(
+                id,
+                CtrlMsg::Ok {
+                    join_at_step: 0,
+                    ring: self.ring.clone(),
+                    local_batch: lb,
+                    broadcast_src: 0,
+                    joiners: Arc::new(Vec::new()),
+                },
+            );
+        }
+        self.started = true;
+        self.event(format!("job-start p={}", self.active.len()));
+    }
+
+    /// all current joiners ready → schedule the switch (stop-free commit)
+    fn maybe_commit_scale(&mut self) {
+        // stale ids must never panic the leader: a joiner or exit victim
+        // that died / said goodbye before the commit is pruned here
+        let before = self.joining.len() + self.op_exiting.len();
+        self.joining.retain(|id| self.workers.contains_key(id));
+        self.op_exiting.retain(|id| self.workers.contains_key(id));
+        let pruned = before != self.joining.len() + self.op_exiting.len();
+        if self.joining.is_empty() && self.op_exiting.is_empty() {
+            if pruned && self.plan.is_none() {
+                if let Some(token) = self.op_reply.take() {
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::Aborted(
+                            "all affected workers departed before the switch".into(),
+                        )),
+                    );
+                }
+            }
+            return;
+        }
+        if self.plan.is_some() {
+            // one committed switch at a time; complete_barrier re-calls us
+            // after the in-flight plan lands
+            return;
+        }
+        if self.pending_spawn > 0 {
+            // spawned workers are still on their way (TCP deployment:
+            // the processes have not connected yet) — §4.2 demands ONE
+            // switch for the whole operation, so wait for all of them
+            return;
+        }
+        let all_ready = self.joining.iter().all(|id| {
+            matches!(self.workers.get(id).map(|w| &w.state), Some(WState::Joining { ready: true }))
+        });
+        if !all_ready {
+            return;
+        }
+        let at_step = self.step + self.switch_k();
+        let mut new_ring: Vec<NodeId> =
+            self.active.iter().copied().filter(|id| !self.op_exiting.contains(id)).collect();
+        new_ring.extend(self.joining.iter().copied());
+        assert!(!new_ring.is_empty(), "scale-in would remove every worker");
+        let lb = self.local_batch_for(new_ring.len() as u32);
+        let broadcast_src = *self
+            .active
+            .iter()
+            .find(|id| !self.op_exiting.contains(id))
+            .expect("need one surviving worker to broadcast");
+        let plan = SwitchPlan {
+            at_step,
+            ring: Arc::new(new_ring),
+            local_batch: lb,
+            broadcast_src,
+            joiners: self.joining.clone(),
+            exiting: self.op_exiting.clone(),
+        };
+        let joiners = Arc::new(plan.joiners.clone());
+        for j in self.joining.clone() {
+            self.send_ctrl(
+                j,
+                CtrlMsg::Ok {
+                    join_at_step: at_step,
+                    ring: plan.ring.clone(),
+                    local_batch: lb,
+                    broadcast_src,
+                    joiners: joiners.clone(),
+                },
+            );
+        }
+        self.event(format!(
+            "switch-scheduled at_step={at_step} +{} -{} p_new={}",
+            plan.joiners.len(),
+            plan.exiting.len(),
+            plan.ring.len()
+        ));
+        self.plan = Some(plan);
+    }
+
+    /// barrier complete for `self.step`: reply SyncGo to all active
+    fn complete_barrier(&mut self) {
+        let wsum: f32 = self.sync_waiting.values().map(|s| s.weight).sum();
+        if wsum > 0.0 {
+            let loss: f32 =
+                self.sync_waiting.values().map(|s| s.loss * s.weight).sum::<f32>() / wsum;
+            self.last_loss = loss;
+            self.report.loss_history.push(LossPoint {
+                step: self.step,
+                loss,
+                parallelism: self.active.len() as u32,
+                wall_ms: self.now_ms,
+            });
+        }
+        // straggler statistics (§5.2)
+        if self.cfg.straggler_mitigation && self.active.len() > 1 {
+            self.update_stragglers();
+        }
+        self.recent_barriers.push_back((self.now_ms, wsum as f64));
+        while self.recent_barriers.len() > 32 {
+            self.recent_barriers.pop_front();
+        }
+
+        let sync_tag = (self.ring_version << 24) | (self.step & 0xFF_FFFF);
+        let plan = self.plan.clone().filter(|p| p.at_step > self.step);
+        for id in self.active.clone() {
+            self.send_ctrl(
+                id,
+                CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: plan.clone() },
+            );
+        }
+        self.sync_waiting.clear();
+        self.barrier_open_ms = None;
+        self.step += 1;
+
+        // commit the switch when the boundary is reached
+        if let Some(plan) = self.plan.clone() {
+            if self.step == plan.at_step {
+                self.active = (*plan.ring).clone();
+                self.ring = plan.ring.clone();
+                self.ring_version += 1;
+                for id in &plan.joiners {
+                    if let Some(w) = self.workers.get_mut(id) {
+                        w.state = WState::Active;
+                    }
+                }
+                self.joining.clear();
+                self.op_exiting.clear();
+                self.plan = None;
+                self.event(format!("switch-committed p={}", self.active.len()));
+                if let Some(token) = self.op_reply.take() {
+                    self.reply(token, Response::Ok);
+                }
+                // a follow-up op (e.g. a straggler exit queued behind this
+                // switch) can now schedule its own plan
+                self.maybe_commit_scale();
+            }
+        }
+    }
+
+    fn update_stragglers(&mut self) {
+        let mut medians: Vec<(NodeId, f64)> = Vec::new();
+        for (&id, w) in &self.workers {
+            if w.state == WState::Active && !w.step_times.is_empty() {
+                let v: Vec<f64> = w.step_times.iter().copied().collect();
+                medians.push((id, crate::util::stats::median(&v)));
+            }
+        }
+        if medians.len() < 2 {
+            return;
+        }
+        let all: Vec<f64> = medians.iter().map(|&(_, m)| m).collect();
+        let group_median = crate::util::stats::median(&all);
+        let mut victim = None;
+        for &(id, m) in &medians {
+            let Some(w) = self.workers.get_mut(&id) else { continue };
+            if m > self.cfg.straggler_ratio * group_median
+                && w.step_times.len() >= self.cfg.straggler_window as usize
+            {
+                w.straggle_hits += 1;
+                if w.straggle_hits >= self.cfg.straggler_window {
+                    victim = Some(id);
+                }
+            } else {
+                w.straggle_hits = 0;
+            }
+        }
+        if let Some(id) = victim {
+            if self.plan.is_none() && self.joining.is_empty() && self.active.len() > 1 {
+                self.event(format!("straggler-detected worker={id}"));
+                self.op_exiting = vec![id];
+                if let Some(w) = self.workers.get_mut(&id) {
+                    w.straggle_hits = 0;
+                }
+                self.maybe_commit_scale();
+            }
+        }
+    }
+
+    /// detect dead workers at the barrier (§4.2 forced exit)
+    fn check_failures(&mut self) {
+        let Some(opened) = self.barrier_open_ms else { return };
+        if self.now_ms - opened < self.cfg.failure_timeout.as_secs_f64() * 1e3 {
+            return;
+        }
+        let dead: Vec<NodeId> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|id| !self.sync_waiting.contains_key(id))
+            .collect();
+        if dead.is_empty() || dead.len() >= self.active.len() {
+            return;
+        }
+        self.event(format!("failure-detected dead={dead:?} step={}", self.step));
+        for &d in &dead {
+            self.assigner.worker_left(d);
+            self.workers.remove(&d);
+        }
+        self.active.retain(|id| !dead.contains(id));
+        self.ring = Arc::new(self.active.clone());
+        self.ring_version += 1;
+        // drop any in-flight plan that references dead workers
+        if let Some(p) = &self.plan {
+            if p.joiners.iter().chain(p.exiting.iter()).any(|id| dead.contains(id))
+                || dead.contains(&p.broadcast_src)
+            {
+                self.plan = None;
+                self.joining.clear();
+                self.op_exiting.clear();
+                if let Some(token) = self.op_reply.take() {
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::Aborted("worker failed mid-operation".into())),
+                    );
+                }
+            }
+        }
+
+        if !self.cfg.approx_recovery {
+            if let Some(path) = self.cfg.checkpoint_path.clone() {
+                // the shell answers with CheckpointData before any other
+                // event; approximate recovery is the fallback there
+                self.pending_load = Some(LoadCtx::Recovery);
+                self.out.push(Action::LoadCheckpoint { path });
+                return;
+            }
+            self.event("consistent-recovery unavailable; falling back to approximate".into());
+        }
+        self.approximate_recover();
+    }
+
+    /// approximate recovery (§4.2): survivors redo the current mini-batch's
+    /// allreduce on the repaired ring — reply to those already waiting
+    fn approximate_recover(&mut self) {
+        let sync_tag = (self.ring_version << 24) | (self.step & 0xFF_FFFF);
+        let waiting: Vec<NodeId> = self.sync_waiting.keys().copied().collect();
+        for id in waiting {
+            self.send_ctrl(id, CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: None });
+        }
+        // NOTE: waiting entries stay; stragglers of this step will re-Sync
+        // and the barrier completes normally on the repaired active set.
+        if self.sync_waiting.len() == self.active.len() {
+            self.complete_barrier();
+        }
+    }
+
+    /// restore model + data-pipeline state (manual restore AND consistent
+    /// failure recovery funnel through this)
+    fn apply_restore(&mut self, at_step: u64, params: Vec<f32>, asg: Assigner) {
+        self.assigner = asg;
+        self.assigner.reset_in_flight();
+        self.step = at_step;
+        self.sync_waiting.clear();
+        self.barrier_open_ms = None;
+        let params = Arc::new(params);
+        for id in self.active.clone() {
+            self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
+        }
+    }
+
+    fn handle_checkpoint_data(&mut self, data: Option<Vec<u8>>) {
+        let Some(ctx) = self.pending_load.take() else { return };
+        let decoded = data.and_then(|bytes| decode_checkpoint(&bytes, self.cfg.seed).ok());
+        match (ctx, decoded) {
+            (LoadCtx::Manual(token), Some((at_step, params, asg))) => {
+                self.apply_restore(at_step, params, asg);
+                self.event(format!("manual-restore step={at_step}"));
+                self.reply(token, Response::Ok);
+            }
+            (LoadCtx::Manual(token), None) => {
+                self.reply(
+                    token,
+                    Response::Err(ElasticError::Io("checkpoint missing or undecodable".into())),
+                );
+            }
+            (LoadCtx::Recovery, Some((at_step, params, asg))) => {
+                self.event(format!("consistent-recovery restore step={at_step}"));
+                self.apply_restore(at_step, params, asg);
+            }
+            (LoadCtx::Recovery, None) => {
+                self.event("consistent-recovery unavailable; falling back to approximate".into());
+                self.approximate_recover();
+            }
+        }
+    }
+
+    // -- worker events -------------------------------------------------------
+
+    fn handle_worker(&mut self, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Attach { id, machine, joiner } => {
+                self.next_id = self.next_id.max(id + 1);
+                self.workers.insert(
+                    id,
+                    WInfo {
+                        machine,
+                        state: WState::Joining { ready: false },
+                        step_times: Default::default(),
+                        straggle_hits: 0,
+                    },
+                );
+                if joiner {
+                    self.joining.push(id);
+                    self.pending_spawn = self.pending_spawn.saturating_sub(1);
+                }
+            }
+            WorkerEvent::Register { .. } => {}
+            WorkerEvent::Ready { id } => {
+                if let Some(w) = self.workers.get_mut(&id) {
+                    w.state = WState::Joining { ready: true };
+                } else {
+                    // a Ready from a worker that already departed: drop
+                    self.event(format!("stale-ready worker={id}"));
+                    return;
+                }
+                if self.started {
+                    self.maybe_commit_scale();
+                } else {
+                    self.maybe_start_job();
+                }
+            }
+            WorkerEvent::Sync { id, step, loss, weight, step_ms, shard } => {
+                if step != self.step || !self.active.contains(&id) {
+                    // stale sync from a worker that was mid-recovery or has
+                    // already been removed: log and drop, never crash
+                    self.event(format!("stale-sync worker={id} step={step}"));
+                    return;
+                }
+                if let Some((_pid, used)) = shard {
+                    self.assigner.report_progress(id, used);
+                }
+                if let Some(w) = self.workers.get_mut(&id) {
+                    w.step_times.push_back(step_ms);
+                    while w.step_times.len() > self.cfg.straggler_window as usize {
+                        w.step_times.pop_front();
+                    }
+                }
+                if self.sync_waiting.is_empty() {
+                    self.barrier_open_ms = Some(self.now_ms);
+                }
+                self.sync_waiting.insert(id, SyncInfo { loss, weight });
+                if self.active.iter().all(|a| self.sync_waiting.contains_key(a)) {
+                    self.complete_barrier();
+                }
+            }
+            WorkerEvent::NeedPartition { id } => {
+                if self.assigner.pool_empty() {
+                    if self.assigner.epoch_exhausted() {
+                        self.assigner.advance_epoch();
+                        self.report.epochs = self.assigner.epoch;
+                        self.event(format!("epoch-advance -> {}", self.assigner.epoch));
+                    } else {
+                        self.send_ctrl(id, CtrlMsg::NoData);
+                        return;
+                    }
+                }
+                match self.assigner.next_partition(id) {
+                    Some(meta) => self.send_ctrl(id, CtrlMsg::Assign { meta }),
+                    None => self.send_ctrl(id, CtrlMsg::NoData),
+                }
+            }
+            WorkerEvent::ShardDone { id } => {
+                self.assigner.complete(id);
+            }
+            WorkerEvent::Goodbye { id, shard } => {
+                if let Some((_pid, used)) = shard {
+                    self.assigner.report_progress(id, used);
+                }
+                self.assigner.worker_left(id);
+                self.workers.remove(&id);
+                self.event(format!("goodbye worker={id}"));
+                // a joiner (or exit victim) departing before the switch
+                // commits must not wedge the pending operation: re-check,
+                // which prunes the stale id and aborts if nothing is left
+                if self.joining.contains(&id) || self.op_exiting.contains(&id) {
+                    self.maybe_commit_scale();
+                }
+            }
+            WorkerEvent::Params { id: _, step, params } => {
+                if let Some((path, token)) = self.ckpt_pending.take() {
+                    let mut e = Enc::with_capacity(params.len() * 4 + 256);
+                    e.u64(step);
+                    e.f32s(&params);
+                    self.assigner.encode(&mut e);
+                    self.out.push(Action::WriteCheckpoint {
+                        token,
+                        path,
+                        bytes: e.into_bytes(),
+                    });
+                }
+            }
+        }
+    }
+
+    // -- Table-1 requests ----------------------------------------------------
+
+    /// True while a parallelism adjustment is uncommitted (§3.1): new
+    /// scaling requests get [`ElasticError::AdjustmentInFlight`].
+    fn adjustment_in_flight(&self) -> bool {
+        self.plan.is_some()
+            || !self.joining.is_empty()
+            || self.pending_spawn > 0
+            || !self.started
+    }
+
+    fn handle_request(&mut self, token: ReqToken, req: Request) {
+        match req {
+            Request::ScaleOut { machines } => {
+                if self.adjustment_in_flight() {
+                    self.reply(token, Response::Err(ElasticError::AdjustmentInFlight));
+                    return;
+                }
+                if machines.is_empty() {
+                    // no-op: nothing would ever commit, so ack immediately
+                    self.reply(token, Response::Ok);
+                    return;
+                }
+                self.event(format!("scale-out-request n={}", machines.len()));
+                self.op_reply = Some(token);
+                for m in machines {
+                    let id = self.next_worker_id();
+                    self.pending_spawn += 1;
+                    self.out.push(Action::Spawn { id, machine: m, joiner: true });
+                }
+            }
+            Request::ScaleIn { workers: ids } => {
+                if self.adjustment_in_flight() {
+                    self.reply(token, Response::Err(ElasticError::AdjustmentInFlight));
+                    return;
+                }
+                if let Some(&bad) = ids.iter().find(|&id| !self.active.contains(id)) {
+                    self.reply(token, Response::Err(ElasticError::UnknownWorker(bad)));
+                    return;
+                }
+                if ids.len() >= self.active.len() {
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::InvalidRequest(
+                            "scale-in would remove every worker".into(),
+                        )),
+                    );
+                    return;
+                }
+                if ids.is_empty() {
+                    self.reply(token, Response::Ok);
+                    return;
+                }
+                self.event(format!("scale-in-request ids={ids:?}"));
+                self.op_exiting = ids;
+                self.op_reply = Some(token);
+                self.maybe_commit_scale();
+            }
+            Request::Migrate { remove, add } => {
+                if self.adjustment_in_flight() {
+                    self.reply(token, Response::Err(ElasticError::AdjustmentInFlight));
+                    return;
+                }
+                if let Some(&bad) = remove.iter().find(|&id| !self.active.contains(id)) {
+                    self.reply(token, Response::Err(ElasticError::UnknownWorker(bad)));
+                    return;
+                }
+                if remove.len() >= self.active.len() + add.len() {
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::InvalidRequest(
+                            "migration would empty the job".into(),
+                        )),
+                    );
+                    return;
+                }
+                if remove.is_empty() && add.is_empty() {
+                    self.reply(token, Response::Ok);
+                    return;
+                }
+                self.event(format!("migrate-request -{} +{}", remove.len(), add.len()));
+                let pure_removal = add.is_empty();
+                self.op_exiting = remove;
+                self.op_reply = Some(token);
+                for m in add {
+                    let id = self.next_worker_id();
+                    self.pending_spawn += 1;
+                    self.out.push(Action::Spawn { id, machine: m, joiner: true });
+                }
+                // commit: when all joiners are Ready — ONE switch; with no
+                // joiners (pure-removal migrate) commit on the spot
+                if pure_removal {
+                    self.maybe_commit_scale();
+                }
+            }
+            Request::Status => {
+                let resp = Response::Status(JobStatus {
+                    parallelism: self.active.len() as u32,
+                    step: self.step,
+                    epoch: self.assigner.epoch,
+                    throughput_sps: self.throughput_sps(),
+                    last_loss: self.last_loss,
+                    workers: self.active.clone(),
+                });
+                self.reply(token, resp);
+            }
+            Request::Profile { .. } => {
+                // the profile sweep is a multi-step measurement driven by
+                // the engine (ElasticTrainer::profile) — it can never run
+                // inside the leader's event loop without stalling training
+                self.reply(
+                    token,
+                    Response::Err(ElasticError::InvalidRequest(
+                        "profile is driven by the engine, not the leader".into(),
+                    )),
+                );
+            }
+            Request::Checkpoint { path } => {
+                if let Some(&src) = self.active.first() {
+                    self.ckpt_pending = Some((PathBuf::from(path), token));
+                    self.send_ctrl(src, CtrlMsg::SendParams);
+                } else {
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::InvalidRequest("no active workers".into())),
+                    );
+                }
+            }
+            Request::Restore { path } => {
+                self.pending_load = Some(LoadCtx::Manual(token));
+                self.out.push(Action::LoadCheckpoint { path: PathBuf::from(path) });
+            }
+            Request::Stop => {
+                self.stopping = true;
+                let ids: Vec<NodeId> = self.workers.keys().copied().collect();
+                for id in ids {
+                    self.send_ctrl(id, CtrlMsg::Stop);
+                }
+                self.reply(token, Response::Ok);
+                self.out.push(Action::Shutdown);
+            }
+        }
+    }
+}
+
+/// Decode a checkpoint blob: `(step, params, assigner)`. Pure — the shell
+/// did the reading.
+pub fn decode_checkpoint(bytes: &[u8], seed: u64) -> anyhow::Result<(u64, Vec<f32>, Assigner)> {
+    let mut d = Dec::new(bytes);
+    let step = d.u64()?;
+    let params = d.f32s()?;
+    let asg = Assigner::decode(&mut d, seed)?;
+    Ok((step, params, asg))
+}

@@ -1,27 +1,18 @@
-//! The EDL coordination layer (the paper's contribution, §3–§4): a leader
-//! that manages an elastic set of training workers with
+//! The EDL coordination layer (the paper's contribution, §3–§4).
 //!
-//!  * **stop-free scale-out** — joiners prepare their execution context
-//!    while training continues; the switch happens at a *future
-//!    mini-batch timestamp* `t_cur + k` (k sized from a 500 ms allowance,
-//!    §4.2) and one existing worker broadcasts the model;
-//!  * **graceful-exit scale-in** — leavers hand their unprocessed data
-//!    back at the agreed boundary; remaining workers never stop;
-//!  * **merged migration** — scale-in + scale-out with ONE topology switch;
-//!  * **straggler mitigation** — per-worker step times arrive with every
-//!    gradient-sync request; consistent laggards are scaled in (§5.2);
-//!  * **failure recovery** — approximate (drop the dead worker, repair the
-//!    ring, redo the mini-batch) or consistent (restore from checkpoint),
-//!    selected via [`TrainerConfig::approx_recovery`] (§4.2; the paper's
-//!    `USE_APPX_RECOVERY` env switch is resolved once at config
-//!    construction, see [`TrainerConfig::approx_recovery_from_env`]);
-//!  * **dynamic data pipeline** — the leader owns the partition permutation
-//!    and hands shards out on demand (§4.3, see `data::Assigner`).
+//! The protocol itself — stop-free scale-out, graceful-exit scale-in,
+//! merged migration, straggler mitigation, failure recovery, the dynamic
+//! data pipeline — lives in ONE place: the pure, clock-injected
+//! [`LeaderCore`] state machine ([`core`]). Three shells drive it:
 //!
-//! The leader here runs as a dedicated coordination thread (the §4.1
-//! "application master" alternative the paper discusses; worker-attached
-//! leadership and re-election are exercised against `coordsvc` in its own
-//! tests and benches, since in-process threads share fate anyway).
+//!  * [`ElasticTrainer`] (this module) — the in-process engine: one
+//!    leader thread + N worker threads over an [`InProcHub`] data plane;
+//!  * [`deploy`](crate::deploy) — the multi-process TCP deployment:
+//!    `edl worker` processes speak [`rpc`](crate::rpc) frames to a leader
+//!    endpoint inside `edl serve`, with a `TcpNode` data plane;
+//!  * [`replay`] — a virtual-clock harness that feeds recorded event
+//!    traces through the core for deterministic protocol tests and for
+//!    the cluster simulator's EDL cost model.
 //!
 //! Scheduler-facing control goes exclusively through the Table-1 surface
 //! in [`crate::api`]: [`ElasticTrainer`] implements
@@ -34,24 +25,31 @@ use crate::data::corpus::Corpus;
 use crate::data::{Assigner, PartitionMeta, PartitionTable};
 use crate::transport::{InProcHub, NodeId};
 use crate::util::now_ms;
-use crate::wire::{Dec, Enc};
 use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+pub mod core;
+pub mod replay;
+
+pub use self::core::{decode_checkpoint, Action, Event, LeaderCore, ReqToken};
+
 // ---------------------------------------------------------------------------
-// control-plane messages (typed channels; the TCP wire forms live in `rpc`)
+// control-plane messages (typed; the TCP wire forms live in `rpc`)
 // ---------------------------------------------------------------------------
 
-/// worker → leader events
-#[derive(Debug)]
+/// worker → leader events. Pure data: the shell owns the plumbing (control
+/// mailboxes, fault-injection knobs), so the same values cross a channel
+/// in-process and the `rpc::ToLeader` codec in the TCP deployment.
+#[derive(Debug, Clone)]
 pub enum WorkerEvent {
-    /// plumbing: the spawner attaches the worker's control mailbox
-    Attach { id: NodeId, machine: String, ctrl: Sender<CtrlMsg>, knobs: Arc<WorkerKnobs>, joiner: bool },
+    /// a worker slot is provisioned and its control route exists (sent by
+    /// the SHELL — thread spawner in-proc, connection handler over TCP —
+    /// never by the worker itself)
+    Attach { id: NodeId, machine: String, joiner: bool },
     Register { id: NodeId, machine: String },
     Ready { id: NodeId },
     Sync { id: NodeId, step: u64, loss: f32, weight: f32, step_ms: f64, shard: Option<(u64, u64)> },
@@ -176,35 +174,17 @@ impl TrainerConfig {
     pub fn approx_recovery_from_env() -> bool {
         std::env::var("USE_APPX_RECOVERY").map(|v| v == "1" || v == "true").unwrap_or(false)
     }
+
+    /// Build the data-pipeline assigner for `corpus_samples` samples.
+    pub fn assigner_for(&self, corpus_samples: u64) -> Assigner {
+        let table = PartitionTable::new(corpus_samples, self.n_partitions.min(corpus_samples));
+        Assigner::new(table, self.seed)
+    }
 }
 
 // ---------------------------------------------------------------------------
-// leader
+// in-process shell
 // ---------------------------------------------------------------------------
-
-#[derive(Debug, Clone, PartialEq)]
-enum WState {
-    Joining { ready: bool },
-    Active,
-}
-
-struct WInfo {
-    ctrl: Sender<CtrlMsg>,
-    #[allow(dead_code)] // recorded for operator visibility / future placement logic
-    machine: String,
-    #[allow(dead_code)]
-    knobs: Arc<WorkerKnobs>,
-    state: WState,
-    step_times: std::collections::VecDeque<f64>,
-    straggle_hits: u32,
-}
-
-struct SyncInfo {
-    loss: f32,
-    weight: f32,
-    #[allow(dead_code)] // per-step time also lands in WInfo::step_times
-    step_ms: f64,
-}
 
 enum LeaderIn {
     W(WorkerEvent),
@@ -213,636 +193,225 @@ enum LeaderIn {
     C(Request, Sender<Response>),
 }
 
-/// Spawns a worker thread; must send `WorkerEvent::Attach` before the
-/// worker's own `Register`.
-type Spawner = Arc<dyn Fn(NodeId, String, bool) + Send + Sync>;
+/// Spawns a worker thread for `(id, machine, joiner)` and returns the
+/// control-message sender the shell routes [`Action::Send`] through.
+type Spawner = Arc<dyn Fn(NodeId, String, bool) -> Sender<CtrlMsg> + Send + Sync>;
 
-struct Leader {
-    cfg: TrainerConfig,
-    backend: Arc<dyn Backend>,
-    rx: Receiver<LeaderIn>,
-    spawner: Spawner,
-    /// founding-worker count: the job must not start before ALL founders
-    /// have attached AND prepared (on a loaded host a founder's thread can
-    /// lag arbitrarily behind its siblings)
-    expected_founders: usize,
-    workers: BTreeMap<NodeId, WInfo>,
-    active: Vec<NodeId>,
-    ring: Arc<Vec<NodeId>>,
-    ring_version: u64,
-    step: u64,
-    started: bool,
-    assigner: Assigner,
-    sync_waiting: HashMap<NodeId, SyncInfo>,
-    barrier_open_at: Option<Instant>,
-    plan: Option<SwitchPlan>,
-    op_reply: Option<Sender<Response>>,
-    /// pending scale-out joiners not yet Ready
-    joining: Vec<NodeId>,
-    /// exit set for a migrate/scale-in combined op
-    op_exiting: Vec<NodeId>,
-    ckpt_reply: Option<(PathBuf, Sender<Response>)>,
-    stop_reply: Option<Sender<Response>>,
-    report: TrainReport,
-    recent_barriers: std::collections::VecDeque<(Instant, f64)>,
-    last_loss: f32,
-    stopping: bool,
+/// Leader-step publication for `wait_step`: waiters block on the condvar
+/// instead of busy-polling `status` round-trips. Shared by the in-proc
+/// shell ([`ElasticTrainer::wait_step`]) and the TCP deployment's
+/// `LeaderHandle`. `(step, leader_gone)`.
+pub(crate) struct StepCell {
+    state: Mutex<(u64, bool)>,
+    cv: Condvar,
 }
 
-impl Leader {
-    fn local_batch_for(&self, p: u32) -> u32 {
-        let want = (self.cfg.agg_batch / p.max(1)).max(1);
-        self.backend.pick_batch(want).unwrap_or(1)
+impl StepCell {
+    pub(crate) fn new() -> Arc<StepCell> {
+        Arc::new(StepCell { state: Mutex::new((0, false)), cv: Condvar::new() })
     }
 
-    /// k = ceil(T_a / T_b), clamped (§4.2)
-    fn switch_k(&self) -> u64 {
-        let avg_step_ms = if self.recent_barriers.len() >= 2 {
-            let dts: Vec<f64> = self
-                .recent_barriers
-                .iter()
-                .zip(self.recent_barriers.iter().skip(1))
-                .map(|((a, _), (b, _))| (*b - *a).as_secs_f64() * 1e3)
-                .collect();
-            crate::util::stats::median(&dts).max(0.1)
-        } else {
-            100.0
-        };
-        ((self.cfg.switch_allowance_ms / avg_step_ms).ceil() as u64).clamp(1, 64)
-    }
-
-    fn event(&mut self, what: String) {
-        self.report.events.push(EngineEvent { wall_ms: now_ms(), step: self.step, what });
-    }
-
-    fn throughput_sps(&self) -> f64 {
-        if self.recent_barriers.len() < 2 {
-            return 0.0;
-        }
-        let (t0, _) = self.recent_barriers.front().unwrap();
-        let (t1, _) = self.recent_barriers.back().unwrap();
-        let samples: f64 = self.recent_barriers.iter().skip(1).map(|&(_, w)| w as f64).sum();
-        let dt = (*t1 - *t0).as_secs_f64();
-        if dt <= 0.0 {
-            0.0
-        } else {
-            samples / dt
+    pub(crate) fn publish(&self, step: u64) {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if g.0 != step {
+            g.0 = step;
+            self.cv.notify_all();
         }
     }
 
-    fn send_ctrl(&self, id: NodeId, msg: CtrlMsg) {
-        if let Some(w) = self.workers.get(&id) {
-            let _ = w.ctrl.send(msg);
-        }
+    pub(crate) fn leader_gone(&self) {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        g.1 = true;
+        self.cv.notify_all();
     }
 
-    fn maybe_start_job(&mut self) {
-        if self.started {
-            return;
-        }
-        let founders: Vec<NodeId> = self.workers.keys().copied().collect();
-        if founders.len() < self.expected_founders
-            || !founders.iter().all(|id| {
-                matches!(self.workers[id].state, WState::Joining { ready: true })
-            })
-        {
-            return;
-        }
-        self.active = founders.clone();
-        self.ring = Arc::new(founders.clone());
-        let lb = self.local_batch_for(self.active.len() as u32);
-        for id in founders {
-            self.workers.get_mut(&id).unwrap().state = WState::Active;
-            self.send_ctrl(
-                id,
-                CtrlMsg::Ok {
-                    join_at_step: 0,
-                    ring: self.ring.clone(),
-                    local_batch: lb,
-                    broadcast_src: 0,
-                    joiners: Arc::new(Vec::new()),
-                },
-            );
-        }
-        self.started = true;
-        self.event(format!("job-start p={}", self.active.len()));
-    }
-
-    /// all current joiners ready → schedule the switch (stop-free commit)
-    fn maybe_commit_scale(&mut self) {
-        if self.joining.is_empty() && self.op_exiting.is_empty() {
-            return;
-        }
-        let all_ready = self
-            .joining
-            .iter()
-            .all(|id| matches!(self.workers[id].state, WState::Joining { ready: true }));
-        if !all_ready {
-            return;
-        }
-        let at_step = self.step + self.switch_k();
-        let mut new_ring: Vec<NodeId> =
-            self.active.iter().copied().filter(|id| !self.op_exiting.contains(id)).collect();
-        new_ring.extend(self.joining.iter().copied());
-        assert!(!new_ring.is_empty(), "scale-in would remove every worker");
-        let lb = self.local_batch_for(new_ring.len() as u32);
-        let broadcast_src = *self
-            .active
-            .iter()
-            .find(|id| !self.op_exiting.contains(id))
-            .expect("need one surviving worker to broadcast");
-        let plan = SwitchPlan {
-            at_step,
-            ring: Arc::new(new_ring),
-            local_batch: lb,
-            broadcast_src,
-            joiners: self.joining.clone(),
-            exiting: self.op_exiting.clone(),
-        };
-        let joiners = Arc::new(plan.joiners.clone());
-        for &j in &self.joining {
-            self.send_ctrl(
-                j,
-                CtrlMsg::Ok {
-                    join_at_step: at_step,
-                    ring: plan.ring.clone(),
-                    local_batch: lb,
-                    broadcast_src,
-                    joiners: joiners.clone(),
-                },
-            );
-        }
-        self.event(format!(
-            "switch-scheduled at_step={at_step} +{} -{} p_new={}",
-            plan.joiners.len(),
-            plan.exiting.len(),
-            plan.ring.len()
-        ));
-        self.plan = Some(plan);
-    }
-
-    /// barrier complete for `self.step`: reply SyncGo to all active
-    fn complete_barrier(&mut self) {
-        let wsum: f32 = self.sync_waiting.values().map(|s| s.weight).sum();
-        if wsum > 0.0 {
-            let loss: f32 =
-                self.sync_waiting.values().map(|s| s.loss * s.weight).sum::<f32>() / wsum;
-            self.last_loss = loss;
-            self.report.loss_history.push(LossPoint {
-                step: self.step,
-                loss,
-                parallelism: self.active.len() as u32,
-                wall_ms: now_ms(),
-            });
-        }
-        // straggler statistics (§5.2)
-        if self.cfg.straggler_mitigation && self.active.len() > 1 {
-            self.update_stragglers();
-        }
-        self.recent_barriers.push_back((Instant::now(), wsum as f64));
-        while self.recent_barriers.len() > 32 {
-            self.recent_barriers.pop_front();
-        }
-
-        let sync_tag = (self.ring_version << 24) | (self.step & 0xFF_FFFF);
-        let plan = self.plan.clone().filter(|p| p.at_step > self.step);
-        for id in self.active.clone() {
-            self.send_ctrl(
-                id,
-                CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: plan.clone() },
-            );
-        }
-        self.sync_waiting.clear();
-        self.barrier_open_at = None;
-        self.step += 1;
-
-        // commit the switch when the boundary is reached
-        if let Some(plan) = self.plan.clone() {
-            if self.step == plan.at_step {
-                for id in &plan.exiting {
-                    // Goodbye handles assigner return; drop from active below
-                    let _ = id;
-                }
-                self.active = (*plan.ring).clone();
-                self.ring = plan.ring.clone();
-                self.ring_version += 1;
-                for id in &plan.joiners {
-                    if let Some(w) = self.workers.get_mut(id) {
-                        w.state = WState::Active;
-                    }
-                }
-                self.joining.clear();
-                self.op_exiting.clear();
-                self.plan = None;
-                self.event(format!("switch-committed p={}", self.active.len()));
-                if let Some(r) = self.op_reply.take() {
-                    let _ = r.send(Response::Ok);
-                }
-            }
-        }
-    }
-
-    fn update_stragglers(&mut self) {
-        let mut medians: Vec<(NodeId, f64)> = Vec::new();
-        for (&id, w) in &self.workers {
-            if w.state == WState::Active && !w.step_times.is_empty() {
-                let v: Vec<f64> = w.step_times.iter().copied().collect();
-                medians.push((id, crate::util::stats::median(&v)));
-            }
-        }
-        if medians.len() < 2 {
-            return;
-        }
-        let all: Vec<f64> = medians.iter().map(|&(_, m)| m).collect();
-        let group_median = crate::util::stats::median(&all);
-        let mut victim = None;
-        for &(id, m) in &medians {
-            let w = self.workers.get_mut(&id).unwrap();
-            if m > self.cfg.straggler_ratio * group_median
-                && w.step_times.len() >= self.cfg.straggler_window as usize
-            {
-                w.straggle_hits += 1;
-                if w.straggle_hits >= self.cfg.straggler_window {
-                    victim = Some(id);
-                }
-            } else {
-                w.straggle_hits = 0;
-            }
-        }
-        if let Some(id) = victim {
-            if self.plan.is_none() && self.joining.is_empty() && self.active.len() > 1 {
-                self.event(format!("straggler-detected worker={id}"));
-                self.op_exiting = vec![id];
-                self.workers.get_mut(&id).unwrap().straggle_hits = 0;
-                self.maybe_commit_scale();
-            }
-        }
-    }
-
-    /// detect dead workers at the barrier (§4.2 forced exit)
-    fn check_failures(&mut self) {
-        let Some(opened) = self.barrier_open_at else { return };
-        if opened.elapsed() < self.cfg.failure_timeout {
-            return;
-        }
-        let dead: Vec<NodeId> = self
-            .active
-            .iter()
-            .copied()
-            .filter(|id| !self.sync_waiting.contains_key(id))
-            .collect();
-        if dead.is_empty() || dead.len() >= self.active.len() {
-            return;
-        }
-        self.event(format!("failure-detected dead={dead:?} step={}", self.step));
-        for &d in &dead {
-            self.assigner.worker_left(d);
-            self.workers.remove(&d);
-        }
-        self.active.retain(|id| !dead.contains(id));
-        self.ring = Arc::new(self.active.clone());
-        self.ring_version += 1;
-        // drop any in-flight plan that references dead workers
-        if let Some(p) = &self.plan {
-            if p.joiners.iter().chain(p.exiting.iter()).any(|id| dead.contains(id))
-                || dead.contains(&p.broadcast_src)
-            {
-                self.plan = None;
-                self.joining.clear();
-                self.op_exiting.clear();
-                if let Some(r) = self.op_reply.take() {
-                    let _ = r.send(Response::Err(ElasticError::Aborted(
-                        "worker failed mid-operation".into(),
-                    )));
-                }
-            }
-        }
-
-        if !self.cfg.approx_recovery {
-            if let Some(path) = self.cfg.checkpoint_path.clone() {
-                if path.exists() {
-                    if let Ok((at_step, params, asg)) = read_checkpoint(&path, self.cfg.seed) {
-                        self.event(format!("consistent-recovery restore step={at_step}"));
-                        self.assigner = asg;
-                        self.assigner.reset_in_flight();
-                        let params = Arc::new(params);
-                        self.sync_waiting.clear();
-                        self.barrier_open_at = None;
-                        self.step = at_step;
-                        for id in self.active.clone() {
-                            self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
-                        }
-                        return;
-                    }
-                }
-            }
-            self.event("consistent-recovery unavailable; falling back to approximate".into());
-        }
-        // approximate recovery: survivors redo the current mini-batch's
-        // allreduce on the repaired ring — reply to those already waiting
-        let sync_tag = (self.ring_version << 24) | (self.step & 0xFF_FFFF);
-        for (&id, _) in self.sync_waiting.iter() {
-            if let Some(w) = self.workers.get(&id) {
-                let _ = w
-                    .ctrl
-                    .send(CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: None });
-            }
-        }
-        // NOTE: waiting entries stay; stragglers of this step will re-Sync
-        // and the barrier completes normally on the repaired active set.
-        let survivors: Vec<NodeId> = self.sync_waiting.keys().copied().collect();
-        if survivors.len() == self.active.len() {
-            self.complete_barrier();
-        }
-    }
-
-    fn handle_worker(&mut self, ev: WorkerEvent) {
-        match ev {
-            WorkerEvent::Attach { id, machine, ctrl, knobs, joiner } => {
-                self.workers.insert(
-                    id,
-                    WInfo {
-                        ctrl,
-                        machine,
-                        knobs,
-                        state: WState::Joining { ready: false },
-                        step_times: Default::default(),
-                        straggle_hits: 0,
-                    },
-                );
-                if joiner {
-                    self.joining.push(id);
-                }
-            }
-            WorkerEvent::Register { .. } => {}
-            WorkerEvent::Ready { id } => {
-                if let Some(w) = self.workers.get_mut(&id) {
-                    w.state = WState::Joining { ready: true };
-                }
-                if self.started {
-                    self.maybe_commit_scale();
-                } else {
-                    self.maybe_start_job();
-                }
-            }
-            WorkerEvent::Sync { id, step, loss, weight, step_ms, shard } => {
-                if step != self.step || !self.active.contains(&id) {
-                    // stale sync from a worker that was mid-recovery
-                    return;
-                }
-                if let Some((_pid, used)) = shard {
-                    self.assigner.report_progress(id, used);
-                }
-                if let Some(w) = self.workers.get_mut(&id) {
-                    w.step_times.push_back(step_ms);
-                    while w.step_times.len() > self.cfg.straggler_window as usize {
-                        w.step_times.pop_front();
-                    }
-                }
-                if self.sync_waiting.is_empty() {
-                    self.barrier_open_at = Some(Instant::now());
-                }
-                self.sync_waiting.insert(id, SyncInfo { loss, weight, step_ms });
-                if self.active.iter().all(|a| self.sync_waiting.contains_key(a)) {
-                    self.complete_barrier();
-                }
-            }
-            WorkerEvent::NeedPartition { id } => {
-                if self.assigner.pool_empty() {
-                    if self.assigner.epoch_exhausted() {
-                        self.assigner.advance_epoch();
-                        self.report.epochs = self.assigner.epoch;
-                        self.event(format!("epoch-advance -> {}", self.assigner.epoch));
-                    } else {
-                        self.send_ctrl(id, CtrlMsg::NoData);
-                        return;
-                    }
-                }
-                match self.assigner.next_partition(id) {
-                    Some(meta) => self.send_ctrl(id, CtrlMsg::Assign { meta }),
-                    None => self.send_ctrl(id, CtrlMsg::NoData),
-                }
-            }
-            WorkerEvent::ShardDone { id } => {
-                self.assigner.complete(id);
-            }
-            WorkerEvent::Goodbye { id, shard } => {
-                if let Some((_pid, used)) = shard {
-                    self.assigner.report_progress(id, used);
-                }
-                self.assigner.worker_left(id);
-                self.workers.remove(&id);
-                self.event(format!("goodbye worker={id}"));
-            }
-            WorkerEvent::Params { id: _, step, params } => {
-                if let Some((path, reply)) = self.ckpt_reply.take() {
-                    let mut e = Enc::with_capacity(params.len() * 4 + 256);
-                    e.u64(step);
-                    e.f32s(&params);
-                    self.assigner.encode(&mut e);
-                    match std::fs::write(&path, e.into_bytes()) {
-                        Ok(()) => {
-                            let _ = reply.send(Response::Ok);
-                        }
-                        Err(err) => {
-                            let _ = reply.send(Response::Err(ElasticError::Io(err.to_string())));
-                        }
-                    }
-                }
-            }
-        }
-    }
-
-    /// True while a parallelism adjustment is uncommitted (§3.1): new
-    /// scaling requests get [`ElasticError::AdjustmentInFlight`].
-    fn adjustment_in_flight(&self) -> bool {
-        self.plan.is_some() || !self.joining.is_empty() || !self.started
-    }
-
-    fn handle_cmd(&mut self, req: Request, reply: Sender<Response>) {
-        match req {
-            Request::ScaleOut { machines } => {
-                if self.adjustment_in_flight() {
-                    let _ = reply.send(Response::Err(ElasticError::AdjustmentInFlight));
-                    return;
-                }
-                if machines.is_empty() {
-                    // no-op: nothing would ever commit, so ack immediately
-                    let _ = reply.send(Response::Ok);
-                    return;
-                }
-                self.event(format!("scale-out-request n={}", machines.len()));
-                self.op_reply = Some(reply);
-                for m in machines {
-                    let id = next_node_id();
-                    (self.spawner)(id, m, true);
-                }
-            }
-            Request::ScaleIn { workers: ids } => {
-                if self.adjustment_in_flight() {
-                    let _ = reply.send(Response::Err(ElasticError::AdjustmentInFlight));
-                    return;
-                }
-                if let Some(&bad) = ids.iter().find(|&id| !self.active.contains(id)) {
-                    let _ = reply.send(Response::Err(ElasticError::UnknownWorker(bad)));
-                    return;
-                }
-                if ids.len() >= self.active.len() {
-                    let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
-                        "scale-in would remove every worker".into(),
-                    )));
-                    return;
-                }
-                if ids.is_empty() {
-                    let _ = reply.send(Response::Ok);
-                    return;
-                }
-                self.event(format!("scale-in-request ids={ids:?}"));
-                self.op_exiting = ids;
-                self.op_reply = Some(reply);
-                self.maybe_commit_scale();
-            }
-            Request::Migrate { remove, add } => {
-                if self.adjustment_in_flight() {
-                    let _ = reply.send(Response::Err(ElasticError::AdjustmentInFlight));
-                    return;
-                }
-                if let Some(&bad) = remove.iter().find(|&id| !self.active.contains(id)) {
-                    let _ = reply.send(Response::Err(ElasticError::UnknownWorker(bad)));
-                    return;
-                }
-                if remove.len() >= self.active.len() + add.len() {
-                    let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
-                        "migration would empty the job".into(),
-                    )));
-                    return;
-                }
-                if remove.is_empty() && add.is_empty() {
-                    let _ = reply.send(Response::Ok);
-                    return;
-                }
-                self.event(format!("migrate-request -{} +{}", remove.len(), add.len()));
-                let pure_removal = add.is_empty();
-                self.op_exiting = remove;
-                self.op_reply = Some(reply);
-                for m in add {
-                    let id = next_node_id();
-                    (self.spawner)(id, m, true);
-                }
-                // commit: when all joiners are Ready — ONE switch; with no
-                // joiners (pure-removal migrate) commit on the spot
-                if pure_removal {
-                    self.maybe_commit_scale();
-                }
-            }
-            Request::Status => {
-                let _ = reply.send(Response::Status(JobStatus {
-                    parallelism: self.active.len() as u32,
-                    step: self.step,
-                    epoch: self.assigner.epoch,
-                    throughput_sps: self.throughput_sps(),
-                    last_loss: self.last_loss,
-                    workers: self.active.clone(),
-                }));
-            }
-            Request::Profile { .. } => {
-                // the profile sweep is a multi-step measurement driven by
-                // the engine (ElasticTrainer::profile) — it can never run
-                // inside the leader's event loop without stalling training
-                let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
-                    "profile is driven by the engine, not the leader".into(),
-                )));
-            }
-            Request::Checkpoint { path } => {
-                if let Some(&src) = self.active.first() {
-                    self.ckpt_reply = Some((PathBuf::from(path), reply));
-                    self.send_ctrl(src, CtrlMsg::SendParams);
-                } else {
-                    let _ = reply.send(Response::Err(ElasticError::InvalidRequest(
-                        "no active workers".into(),
-                    )));
-                }
-            }
-            Request::Restore { path } => {
-                match read_checkpoint(std::path::Path::new(&path), self.cfg.seed) {
-                    Ok((at_step, params, asg)) => {
-                        self.assigner = asg;
-                        self.assigner.reset_in_flight();
-                        self.step = at_step;
-                        self.sync_waiting.clear();
-                        self.barrier_open_at = None;
-                        let params = Arc::new(params);
-                        for id in self.active.clone() {
-                            self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
-                        }
-                        self.event(format!("manual-restore step={at_step}"));
-                        let _ = reply.send(Response::Ok);
-                    }
-                    Err(e) => {
-                        let _ = reply.send(Response::Err(ElasticError::Io(e.to_string())));
-                    }
-                }
-            }
-            Request::Stop => {
-                self.stopping = true;
-                for (_, w) in self.workers.iter() {
-                    let _ = w.ctrl.send(CtrlMsg::Stop);
-                }
-                self.stop_reply = Some(reply);
-            }
-        }
-    }
-
-    fn run(mut self) -> TrainReport {
+    /// Wait until `step` is reached (true) or the deadline passes / the
+    /// leader exits (false). No busy-polling: purely condvar wakeups.
+    pub(crate) fn wait(&self, step: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
         loop {
-            match self.rx.recv_timeout(Duration::from_millis(25)) {
-                Ok(LeaderIn::W(ev)) => self.handle_worker(ev),
-                Ok(LeaderIn::C(cmd, reply)) => self.handle_cmd(cmd, reply),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    if !self.stopping {
-                        self.check_failures();
+            if g.0 >= step {
+                return true;
+            }
+            if g.1 {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g2, _) = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            g = g2;
+        }
+    }
+}
+
+/// Reply routing shared by the leader shells (in-proc and TCP deployment).
+pub(crate) type ReplyMap = HashMap<ReqToken, Sender<Response>>;
+
+/// Deliver a Table-1 reply to whichever client registered `token`.
+pub(crate) fn deliver_reply(replies: &mut ReplyMap, token: ReqToken, resp: Response) {
+    if let Some(r) = replies.remove(&token) {
+        let _ = r.send(resp);
+    }
+}
+
+/// Shell half of [`Action::WriteCheckpoint`]: write the blob, ack the
+/// registered client (Ok / typed Io error). One implementation for every
+/// shell so checkpoint error handling cannot diverge.
+pub(crate) fn perform_write_checkpoint(
+    replies: &mut ReplyMap,
+    token: ReqToken,
+    path: &std::path::Path,
+    bytes: &[u8],
+) {
+    let resp = match std::fs::write(path, bytes) {
+        Ok(()) => Response::Ok,
+        Err(e) => Response::Err(ElasticError::Io(e.to_string())),
+    };
+    deliver_reply(replies, token, resp);
+}
+
+/// Shell half of [`Action::LoadCheckpoint`]: read the file and build the
+/// event the core must see before anything else.
+pub(crate) fn perform_load_checkpoint(path: &std::path::Path) -> Event {
+    Event::CheckpointData { data: std::fs::read(path).ok() }
+}
+
+/// The Table-1 `profile` sweep (§5.2), written once for every deployment
+/// that exposes a blocking `call` and a `wait_step`: measure throughput at
+/// the current parallelism for `steps_per_level` mini-batches, record a
+/// row, scale in the newest worker, repeat down to `min_p`.
+pub(crate) fn profile_sweep(
+    call: &dyn Fn(Request) -> Response,
+    wait_step: &dyn Fn(u64, Duration) -> bool,
+    min_p: u32,
+    steps_per_level: u64,
+) -> Result<Vec<ProfileRow>, ElasticError> {
+    let mut rows = Vec::new();
+    loop {
+        let st = call(Request::Status).status()?;
+        let p = st.parallelism;
+        let start_step = st.step;
+        if !wait_step(start_step + steps_per_level, Duration::from_secs(600)) {
+            break;
+        }
+        let st2 = call(Request::Status).status()?;
+        rows.push(ProfileRow {
+            parallelism: p,
+            throughput: st2.throughput_sps,
+            per_gpu_throughput: st2.throughput_sps / p as f64,
+            efficiency: 0.0, // normalised below over all rows
+        });
+        if p <= min_p {
+            break;
+        }
+        let Some(&victim) = st2.workers.last() else { break };
+        if call(Request::ScaleIn { workers: vec![victim] }).unit().is_err() {
+            break;
+        }
+    }
+    crate::api::normalise_efficiency(&mut rows);
+    Ok(rows)
+}
+
+/// The in-process leader shell: drives [`LeaderCore`] from a channel and
+/// performs its actions (ctrl sends, replies, thread spawns, checkpoint
+/// file I/O).
+struct Shell {
+    core: LeaderCore,
+    rx: Receiver<LeaderIn>,
+    spawner: Spawner,
+    ctrl: HashMap<NodeId, Sender<CtrlMsg>>,
+    replies: ReplyMap,
+    next_token: ReqToken,
+    step_cell: Arc<StepCell>,
+}
+
+impl Shell {
+    fn run(mut self, founders: Vec<(NodeId, String)>) -> TrainReport {
+        for (id, machine) in founders {
+            let actions = self.provision(id, machine, false);
+            self.apply(actions);
+        }
+        loop {
+            let actions = match self.rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(LeaderIn::W(ev)) => {
+                    if let WorkerEvent::Goodbye { id, .. } = &ev {
+                        self.ctrl.remove(id);
                     }
+                    self.core.handle(now_ms(), Event::Worker(ev))
+                }
+                Ok(LeaderIn::C(req, reply)) => {
+                    self.next_token += 1;
+                    let token = self.next_token;
+                    self.replies.insert(token, reply);
+                    self.core.handle(now_ms(), Event::Request { token, req })
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    self.core.handle(now_ms(), Event::Tick)
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-            if self.stopping {
-                // drain replies then exit once workers are gone
-                if let Some(r) = self.stop_reply.take() {
-                    let _ = r.send(Response::Ok);
-                }
-                // brief drain window for Goodbyes
+            };
+            let shutdown = self.apply(actions);
+            self.step_cell.publish(self.core.step());
+            if shutdown {
+                // brief drain window so worker Goodbyes don't hit a closed
+                // channel while threads wind down
                 let deadline = Instant::now() + Duration::from_millis(200);
-                while let Ok(msg) = self.rx.recv_timeout(
-                    deadline.saturating_duration_since(Instant::now()),
-                ) {
-                    if let LeaderIn::W(ev) = msg {
-                        if matches!(ev, WorkerEvent::Goodbye { .. } | WorkerEvent::Sync { .. }) {
-                            // ignore during shutdown
-                        }
-                    }
-                }
+                while self
+                    .rx
+                    .recv_timeout(deadline.saturating_duration_since(Instant::now()))
+                    .is_ok()
+                {}
                 break;
             }
         }
-        self.report.steps = self.step;
-        self.report.epochs = self.assigner.epoch;
-        self.report
+        self.step_cell.leader_gone();
+        self.core.into_report()
     }
-}
 
-fn read_checkpoint(path: &std::path::Path, seed: u64) -> anyhow::Result<(u64, Vec<f32>, Assigner)> {
-    let bytes = std::fs::read(path)?;
-    let mut d = Dec::new(&bytes);
-    let step = d.u64()?;
-    let params = d.f32s()?;
-    let asg = Assigner::decode(&mut d, seed)?;
-    Ok((step, params, asg))
-}
+    /// Spawn a worker and attach it to the core; returns follow-up actions.
+    fn provision(&mut self, id: NodeId, machine: String, joiner: bool) -> Vec<Action> {
+        let ctrl_tx = (self.spawner)(id, machine.clone(), joiner);
+        self.ctrl.insert(id, ctrl_tx);
+        self.core.handle(now_ms(), Event::Worker(WorkerEvent::Attach { id, machine, joiner }))
+    }
 
-static NODE_IDS: AtomicU32 = AtomicU32::new(1);
-
-fn next_node_id() -> NodeId {
-    NODE_IDS.fetch_add(1, Ordering::Relaxed)
+    /// Perform a batch of actions; true if the shell should shut down.
+    fn apply(&mut self, actions: Vec<Action>) -> bool {
+        let mut shutdown = false;
+        for a in actions {
+            match a {
+                Action::Send { to, msg } => {
+                    if let Some(c) = self.ctrl.get(&to) {
+                        let _ = c.send(msg);
+                    }
+                }
+                Action::Reply { token, resp } => {
+                    deliver_reply(&mut self.replies, token, resp);
+                }
+                Action::Spawn { id, machine, joiner } => {
+                    let more = self.provision(id, machine, joiner);
+                    shutdown |= self.apply(more);
+                }
+                Action::WriteCheckpoint { token, path, bytes } => {
+                    perform_write_checkpoint(&mut self.replies, token, &path, &bytes);
+                }
+                Action::LoadCheckpoint { path } => {
+                    let ev = perform_load_checkpoint(&path);
+                    let more = self.core.handle(now_ms(), ev);
+                    shutdown |= self.apply(more);
+                }
+                Action::Shutdown => shutdown = true,
+            }
+        }
+        shutdown
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -855,8 +424,9 @@ fn next_node_id() -> NodeId {
 pub struct ElasticTrainer {
     tx: Sender<LeaderIn>,
     leader: Option<std::thread::JoinHandle<TrainReport>>,
-    knobs: Arc<std::sync::Mutex<HashMap<NodeId, Arc<WorkerKnobs>>>>,
-    worker_threads: Arc<std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    knobs: Arc<Mutex<HashMap<NodeId, Arc<WorkerKnobs>>>>,
+    worker_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    step_cell: Arc<StepCell>,
     pub hub: Arc<InProcHub>,
 }
 
@@ -871,10 +441,10 @@ impl ElasticTrainer {
         assert!(n_workers >= 1);
         let hub = InProcHub::new();
         let (tx, rx) = channel::<LeaderIn>();
-        let knobs_map: Arc<std::sync::Mutex<HashMap<NodeId, Arc<WorkerKnobs>>>> =
-            Arc::new(std::sync::Mutex::new(HashMap::new()));
-        let threads: Arc<std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>> =
-            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let knobs_map: Arc<Mutex<HashMap<NodeId, Arc<WorkerKnobs>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
 
         let spawner: Spawner = {
             let hub = hub.clone();
@@ -888,13 +458,6 @@ impl ElasticTrainer {
                 let knobs = WorkerKnobs::new();
                 knobs_map.lock().unwrap().insert(id, knobs.clone());
                 let (ctrl_tx, ctrl_rx) = channel::<CtrlMsg>();
-                let _ = tx.send(LeaderIn::W(WorkerEvent::Attach {
-                    id,
-                    machine: machine.clone(),
-                    ctrl: ctrl_tx,
-                    knobs: knobs.clone(),
-                    joiner,
-                }));
                 let net = hub.join(id);
                 let ctx = WorkerCtx {
                     id,
@@ -926,49 +489,37 @@ impl ElasticTrainer {
                     .spawn(move || worker_loop(ctx))
                     .expect("spawn worker");
                 threads.lock().unwrap().push(handle);
+                ctrl_tx
             })
         };
 
-        let corpus_samples = corpus.n_samples;
-        let table = PartitionTable::new(corpus_samples, cfg.n_partitions.min(corpus_samples));
-        let assigner = Assigner::new(table, cfg.seed);
-        let leader = Leader {
-            cfg,
-            backend,
+        let assigner = cfg.assigner_for(corpus.n_samples);
+        let mut core = LeaderCore::new(cfg, backend, assigner, n_workers);
+        let founders: Vec<(NodeId, String)> =
+            (0..n_workers).map(|_| (core.next_worker_id(), "m0".to_string())).collect();
+        let step_cell = StepCell::new();
+        let shell = Shell {
+            core,
             rx,
-            spawner: spawner.clone(),
-            expected_founders: n_workers,
-            workers: BTreeMap::new(),
-            active: Vec::new(),
-            ring: Arc::new(Vec::new()),
-            ring_version: 0,
-            step: 0,
-            started: false,
-            assigner,
-            sync_waiting: HashMap::new(),
-            barrier_open_at: None,
-            plan: None,
-            op_reply: None,
-            joining: Vec::new(),
-            op_exiting: Vec::new(),
-            ckpt_reply: None,
-            stop_reply: None,
-            report: TrainReport::default(),
-            recent_barriers: Default::default(),
-            last_loss: f32::NAN,
-            stopping: false,
+            spawner,
+            ctrl: HashMap::new(),
+            replies: HashMap::new(),
+            next_token: 0,
+            step_cell: step_cell.clone(),
         };
         let leader_handle = std::thread::Builder::new()
             .name("edl-leader".into())
-            .spawn(move || leader.run())
+            .spawn(move || shell.run(founders))
             .expect("spawn leader");
 
-        for _ in 0..n_workers {
-            let id = next_node_id();
-            spawner(id, "m0".to_string(), false);
+        ElasticTrainer {
+            tx,
+            leader: Some(leader_handle),
+            knobs: knobs_map,
+            worker_threads: threads,
+            step_cell,
+            hub,
         }
-
-        ElasticTrainer { tx, leader: Some(leader_handle), knobs: knobs_map, worker_threads: threads, hub }
     }
 
     /// Blocking Table-1 round-trip to the leader — the same
@@ -992,12 +543,12 @@ impl ElasticTrainer {
         self.call(Request::Status).status()
     }
 
-    /// `sclae_out` (sic, Table 1): add workers on the given machines.
+    /// `scale_out` (Table 1): add workers on the given machines.
     pub fn scale_out(&self, machines: Vec<String>) -> Result<(), ElasticError> {
         self.call(Request::ScaleOut { machines }).unit()
     }
 
-    /// `sclae_in` (sic, Table 1): remove specific workers.
+    /// `scale_in` (Table 1): remove specific workers.
     pub fn scale_in(&self, ids: Vec<NodeId>) -> Result<(), ElasticError> {
         self.call(Request::ScaleIn { workers: ids }).unit()
     }
@@ -1019,20 +570,11 @@ impl ElasticTrainer {
     }
 
     /// Wait until the leader's step counter reaches `step` (false on
-    /// timeout or once the leader is gone).
+    /// timeout or once the leader is gone). Blocks on the leader's step
+    /// condvar — an idle control client burns no CPU and issues no
+    /// status round-trips (the seed busy-polled at 10 ms).
     pub fn wait_step(&self, step: u64, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
-        loop {
-            match self.try_status() {
-                Ok(st) if st.step >= step => return true,
-                Ok(_) => {}
-                Err(_) => return false,
-            }
-            if Instant::now() > deadline {
-                return false;
-            }
-            std::thread::sleep(Duration::from_millis(10));
-        }
+        self.step_cell.wait(step, timeout)
     }
 
     /// fault/straggler injection handle for worker `id`
@@ -1055,31 +597,12 @@ impl ElasticTrainer {
         min_p: u32,
         steps_per_level: u64,
     ) -> Result<Vec<ProfileRow>, ElasticError> {
-        let mut rows = Vec::new();
-        loop {
-            let st = self.try_status()?;
-            let p = st.parallelism;
-            let start_step = st.step;
-            if !self.wait_step(start_step + steps_per_level, Duration::from_secs(600)) {
-                break;
-            }
-            let st2 = self.try_status()?;
-            rows.push(ProfileRow {
-                parallelism: p,
-                throughput: st2.throughput_sps,
-                per_gpu_throughput: st2.throughput_sps / p as f64,
-                efficiency: 0.0, // normalised below over all rows
-            });
-            if p <= min_p {
-                break;
-            }
-            let Some(&victim) = st2.workers.last() else { break };
-            if self.scale_in(vec![victim]).is_err() {
-                break;
-            }
-        }
-        crate::api::normalise_efficiency(&mut rows);
-        Ok(rows)
+        profile_sweep(
+            &|req| self.call(req),
+            &|step, timeout| self.wait_step(step, timeout),
+            min_p,
+            steps_per_level,
+        )
     }
 
     /// Stop the job and collect the training report.

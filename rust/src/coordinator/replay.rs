@@ -1,0 +1,156 @@
+//! Virtual-clock shell for [`LeaderCore`]: replay recorded event traces
+//! through the real §4.1–§4.2 state machine with no threads, no I/O and
+//! no wall clock.
+//!
+//! Two consumers:
+//!
+//!  * **deterministic protocol tests** (`rust/tests/leader_core.rs`):
+//!    the same `(now_ms, Event)` trace fed twice yields byte-identical
+//!    action logs — regressions in ordering, hashing or hidden time
+//!    reads show up as a log diff;
+//!  * **the cluster simulator's EDL cost model**
+//!    ([`cluster::edl_switch_lag_s`](crate::cluster::edl_switch_lag_s)):
+//!    instead of a hand-derived switch-timing formula, the simulator
+//!    replays a scripted scale-out through the real core and reads the
+//!    committed `at_step` off the resulting [`SwitchPlan`].
+
+use super::core::{Action, Event, LeaderCore, ReqToken};
+use super::{CtrlMsg, TrainerConfig, WorkerEvent};
+use crate::api::Request;
+use crate::transport::NodeId;
+use crate::worker::Backend;
+use std::sync::Arc;
+
+/// A monotonically advancing virtual clock (milliseconds).
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new(start_ms: f64) -> VirtualClock {
+        VirtualClock { now: start_ms }
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `ms` and return the new time.
+    pub fn advance(&mut self, ms: f64) -> f64 {
+        self.now += ms;
+        self.now
+    }
+}
+
+/// One recorded trace entry: the clock value and the event delivered at it.
+pub type TraceEntry = (f64, Event);
+
+/// Feed a recorded trace through `core`, returning one log line per
+/// emitted action (`"<now_ms> <action debug>"`). Byte-identical across
+/// replays of the same trace into a fresh core.
+pub fn replay(core: &mut LeaderCore, trace: &[TraceEntry]) -> Vec<String> {
+    let mut log = Vec::new();
+    for (now, ev) in trace {
+        for a in core.handle(*now, ev.clone()) {
+            log.push(format!("{now:.3} {a:?}"));
+        }
+    }
+    log
+}
+
+/// Convenience shell for scripting protocol scenarios against the core
+/// under a virtual clock. Every event is recorded, so the accumulated
+/// [`ScriptedLeader::trace`] can be replayed verbatim into a fresh core.
+pub struct ScriptedLeader {
+    pub core: LeaderCore,
+    pub clock: VirtualClock,
+    pub trace: Vec<TraceEntry>,
+    pub log: Vec<String>,
+    next_token: ReqToken,
+}
+
+impl ScriptedLeader {
+    pub fn new(cfg: TrainerConfig, backend: Arc<dyn Backend>, n_founders: usize) -> ScriptedLeader {
+        let assigner = cfg.assigner_for(4096);
+        let core = LeaderCore::new(cfg, backend, assigner, n_founders);
+        ScriptedLeader {
+            core,
+            clock: VirtualClock::new(0.0),
+            trace: Vec::new(),
+            log: Vec::new(),
+            next_token: 0,
+        }
+    }
+
+    /// Deliver `ev` after advancing the clock by `dt_ms`.
+    pub fn feed(&mut self, dt_ms: f64, ev: Event) -> Vec<Action> {
+        let now = self.clock.advance(dt_ms);
+        self.trace.push((now, ev.clone()));
+        let actions = self.core.handle(now, ev);
+        for a in &actions {
+            self.log.push(format!("{now:.3} {a:?}"));
+        }
+        actions
+    }
+
+    /// Attach + Ready a worker (the shell-side join sequence).
+    pub fn join_worker(&mut self, id: NodeId, machine: &str, joiner: bool) -> Vec<Action> {
+        let mut acts = self.feed(
+            0.0,
+            Event::Worker(WorkerEvent::Attach { id, machine: machine.to_string(), joiner }),
+        );
+        acts.extend(self.feed(0.0, Event::Worker(WorkerEvent::Ready { id })));
+        acts
+    }
+
+    /// Issue a Table-1 request; returns the token the reply will carry.
+    pub fn request(&mut self, req: Request) -> (ReqToken, Vec<Action>) {
+        self.next_token += 1;
+        let token = self.next_token;
+        let acts = self.feed(0.0, Event::Request { token, req });
+        (token, acts)
+    }
+
+    /// Complete one full gradient-sync barrier: every active worker
+    /// reports `Sync` for the current step, `step_ms` apart in virtual
+    /// time. Returns the actions of the final (barrier-completing) sync.
+    pub fn run_barrier(&mut self, step_ms: f64) -> Vec<Action> {
+        let step = self.core.step();
+        let ids = self.core.active_workers();
+        let mut last = Vec::new();
+        for (i, id) in ids.iter().enumerate() {
+            // the first arrival pays the whole step time; stragglers of
+            // the same barrier trail by a negligible virtual epsilon
+            let dt = if i == 0 { step_ms } else { 0.01 };
+            last = self.feed(
+                dt,
+                Event::Worker(WorkerEvent::Sync {
+                    id: *id,
+                    step,
+                    loss: 1.0 / (step + 1) as f32,
+                    weight: 8.0,
+                    step_ms,
+                    shard: None,
+                }),
+            );
+        }
+        last
+    }
+
+    /// Drive `n` consecutive barriers at a fixed virtual step time.
+    pub fn run_barriers(&mut self, n: usize, step_ms: f64) {
+        for _ in 0..n {
+            self.run_barrier(step_ms);
+        }
+    }
+}
+
+/// Scan a batch of actions for the `join_at_step` the leader scheduled
+/// (the `CtrlMsg::Ok` sent to joiners when a switch is committed).
+pub fn scheduled_join_step(actions: &[Action]) -> Option<u64> {
+    actions.iter().find_map(|a| match a {
+        Action::Send { msg: CtrlMsg::Ok { join_at_step, .. }, .. } => Some(*join_at_step),
+        _ => None,
+    })
+}

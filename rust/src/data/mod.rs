@@ -181,7 +181,11 @@ impl Assigner {
     /// restore: workers no longer hold their shards). Consumed prefixes
     /// count as done; remainders return to the pool.
     pub fn reset_in_flight(&mut self) {
-        let workers: Vec<u32> = self.in_flight.keys().copied().collect();
+        let mut workers: Vec<u32> = self.in_flight.keys().copied().collect();
+        // sorted so the returned-remainder pool order (and therefore every
+        // subsequent Assign) is independent of hash order — the leader
+        // core's deterministic-replay guarantee depends on it
+        workers.sort_unstable();
         for w in workers {
             self.worker_left(w);
         }

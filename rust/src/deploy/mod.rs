@@ -1,0 +1,661 @@
+//! The multi-process TCP deployment: the paper's actual topology, where
+//! the leader and every worker are separate OS processes.
+//!
+//! ```text
+//!   edl ctl ──wire::Envelope──► api::JobServer
+//!                                    │ (LeaderHandle)
+//!   edl serve ──────────────► DeployShell ⟳ LeaderCore   (pure §4 protocol)
+//!                                 ▲    │
+//!                 rpc::ToLeader frames │ rpc::FromLeader frames
+//!                                 │    ▼
+//!   edl worker ───────────► control socket ⇄ worker_loop
+//!                                │
+//!                            TcpNode data plane (ring allreduce +
+//!                            model broadcast between worker processes)
+//! ```
+//!
+//! The SAME [`LeaderCore`] drives this deployment and the in-process
+//! [`ElasticTrainer`](crate::coordinator::ElasticTrainer); this module is
+//! only transport: it frames control messages through [`crate::rpc`],
+//! matches connecting worker processes to the core's `Spawn` actions, and
+//! pushes the data-plane peer directory ([`rpc::FromLeader::Peers`]) so
+//! `TcpNode`s can dial each other.
+//!
+//! Worker arrival model (PyTorch-Elastic-style rendezvous): `edl worker`
+//! processes connect unsolicited. The first `n_workers` connections become
+//! founders; later connections wait in a lobby until a Table-1 `scale_out`
+//! / `migrate` produces `Spawn` slots (or arrive after the request and are
+//! matched immediately). Training never stops while they prepare — the
+//! §4.2 stop-free path, now across real process boundaries.
+
+use crate::api::{ElasticError, JobControl, JobStatus, ProfileRow, Request, Response};
+use crate::coordinator::{
+    deliver_reply, perform_load_checkpoint, perform_write_checkpoint, profile_sweep, Action,
+    CtrlMsg, Event, LeaderCore, ReplyMap, ReqToken, StepCell, TrainReport, TrainerConfig,
+    WorkerEvent,
+};
+use crate::data::corpus::Corpus;
+use crate::rpc::{FromLeader, ToLeader};
+use crate::transport::{NodeId, TcpNode};
+use crate::util::now_ms;
+use crate::wire;
+use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// leader endpoint
+// ---------------------------------------------------------------------------
+
+/// Digest of the configuration a leader and its worker processes MUST
+/// agree on (corpus shape/seed, model size, learning rate). Carried by
+/// [`rpc::ToLeader::Hello`]; the leader refuses mismatched workers with a
+/// typed [`rpc::FromLeader::Reject`] instead of letting them silently
+/// train on different data (FNV-1a over the packed fields).
+pub fn config_digest(
+    corpus_samples: u64,
+    data_seed: u64,
+    param_count: usize,
+    seq_len: usize,
+    lr: f32,
+) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for word in
+        [corpus_samples, data_seed, param_count as u64, seq_len as u64, lr.to_bits() as u64]
+    {
+        for b in word.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// A worker connection that completed the `Hello` handshake but has no
+/// worker id yet. (The machine label arrives again with `Register`, which
+/// is what the leader core records.)
+struct ConnHandle {
+    writer: TcpStream,
+    config_digest: u64,
+}
+
+enum In {
+    /// a worker process said Hello
+    Conn(ConnHandle),
+    /// a decoded frame from a registered worker's connection
+    Wire(ToLeader),
+    /// a Table-1 request from a [`LeaderHandle`]
+    Ctl(Request, Sender<Response>),
+}
+
+/// The leader side of the multi-process deployment: accepts `edl worker`
+/// connections and drives the pure [`LeaderCore`] over them.
+pub struct LeaderEndpoint {
+    /// the worker-endpoint address (`edl worker --leader <this>`)
+    pub addr: String,
+    tx: Sender<In>,
+    shell: Option<std::thread::JoinHandle<TrainReport>>,
+    accept_stop: Arc<AtomicBool>,
+    step_cell: Arc<StepCell>,
+}
+
+impl LeaderEndpoint {
+    /// Bind the worker endpoint on `listen_addr` (use `127.0.0.1:0` for
+    /// an ephemeral port) and wait for `n_workers` founding worker
+    /// processes. Returns immediately; the job starts once they connect.
+    pub fn start(
+        cfg: TrainerConfig,
+        backend: Arc<dyn Backend>,
+        corpus_samples: u64,
+        n_workers: usize,
+        listen_addr: &str,
+        expected_digest: u64,
+    ) -> std::io::Result<LeaderEndpoint> {
+        assert!(n_workers >= 1);
+        let listener = TcpListener::bind(listen_addr)?;
+        let addr = listener.local_addr()?.to_string();
+        let (tx, rx) = channel::<In>();
+        let accept_stop = Arc::new(AtomicBool::new(false));
+
+        // accept loop: handshake each connection, then pump its frames
+        {
+            let tx = tx.clone();
+            let stop = accept_stop.clone();
+            std::thread::Builder::new()
+                .name("edl-deploy-accept".into())
+                .spawn(move || {
+                    while let Ok((stream, _)) = listener.accept() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let _ = conn_loop(stream, tx);
+                        });
+                    }
+                })
+                .expect("spawn deploy accept loop");
+        }
+
+        let assigner = cfg.assigner_for(corpus_samples);
+        let reclaim_timeout = cfg.failure_timeout;
+        let core = LeaderCore::new(cfg, backend, assigner, n_workers);
+        let step_cell = StepCell::new();
+        let shell = DeployShell {
+            core,
+            rx,
+            writers: HashMap::new(),
+            joiner_flag: HashMap::new(),
+            attached: std::collections::HashSet::new(),
+            welcomed_at: HashMap::new(),
+            lobby: VecDeque::new(),
+            pending_spawns: VecDeque::new(),
+            expected_founders: n_workers,
+            founders_assigned: 0,
+            expected_digest,
+            reclaim_timeout,
+            directory: BTreeMap::new(),
+            replies: HashMap::new(),
+            next_token: 0,
+            step_cell: step_cell.clone(),
+        };
+        let shell_handle = std::thread::Builder::new()
+            .name("edl-deploy-leader".into())
+            .spawn(move || shell.run())
+            .expect("spawn deploy leader");
+
+        Ok(LeaderEndpoint { addr, tx, shell: Some(shell_handle), accept_stop, step_cell })
+    }
+
+    /// A cloneable Table-1 control handle (wrap it in `api::JobServer` to
+    /// expose the job to remote schedulers).
+    pub fn handle(&self) -> LeaderHandle {
+        LeaderHandle { tx: self.tx.clone(), step_cell: self.step_cell.clone() }
+    }
+
+    /// Block until the job stops (a scheduler issued `stop`), then tear
+    /// down the accept loop and return the training report.
+    pub fn join(mut self) -> TrainReport {
+        let report = self
+            .shell
+            .take()
+            .and_then(|h| h.join().ok())
+            .unwrap_or_default();
+        self.accept_stop.store(true, Ordering::Relaxed);
+        // wake the blocking accept so the listener thread can exit
+        let _ = TcpStream::connect(&self.addr);
+        report
+    }
+}
+
+impl Drop for LeaderEndpoint {
+    fn drop(&mut self) {
+        self.accept_stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&self.addr);
+    }
+}
+
+/// Per-connection reader: handshake (`Hello`), then decode frames into
+/// the shell's mailbox until the peer closes.
+fn conn_loop(stream: TcpStream, tx: Sender<In>) -> wire::Result<()> {
+    stream.set_nodelay(true)?; // §4.4
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let first = wire::read_frame(&mut reader)?;
+    match ToLeader::decode(&first) {
+        Ok(ToLeader::Hello { machine: _, config_digest }) => {
+            if tx.send(In::Conn(ConnHandle { writer: stream, config_digest })).is_err() {
+                return Ok(());
+            }
+        }
+        _ => return Ok(()), // not a worker handshake: drop the connection
+    }
+    loop {
+        let raw = match wire::read_frame(&mut reader) {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // peer closed; the §4.2 failure
+                                     // detector handles silent deaths
+        };
+        match ToLeader::decode(&raw) {
+            Ok(msg) => {
+                if tx.send(In::Wire(msg)).is_err() {
+                    return Ok(());
+                }
+            }
+            Err(_) => return Ok(()), // malformed frame: drop the peer
+        }
+    }
+}
+
+struct DeployShell {
+    core: LeaderCore,
+    rx: Receiver<In>,
+    /// control-message writers, one socket per registered worker
+    writers: HashMap<NodeId, TcpStream>,
+    joiner_flag: HashMap<NodeId, bool>,
+    attached: std::collections::HashSet<NodeId>,
+    /// Welcome sent, Register not yet seen — reclaimed after
+    /// `reclaim_timeout` so a process that dies mid-handshake cannot
+    /// wedge a founder slot or a Spawn slot forever
+    welcomed_at: HashMap<NodeId, Instant>,
+    /// connections waiting for a Spawn slot
+    lobby: VecDeque<ConnHandle>,
+    /// Spawn slots waiting for a connection (with the slot's birth time,
+    /// so a slot no process ever claims can be expired)
+    pending_spawns: VecDeque<(NodeId, String, bool, Instant)>,
+    expected_founders: usize,
+    founders_assigned: usize,
+    expected_digest: u64,
+    reclaim_timeout: Duration,
+    /// data-plane peer directory (worker id → TcpNode listen addr)
+    directory: BTreeMap<NodeId, String>,
+    replies: ReplyMap,
+    next_token: ReqToken,
+    step_cell: Arc<StepCell>,
+}
+
+impl DeployShell {
+    fn run(mut self) -> TrainReport {
+        loop {
+            let actions = match self.rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(In::Conn(conn)) => {
+                    self.place_conn(conn);
+                    Vec::new()
+                }
+                Ok(In::Wire(msg)) => self.handle_wire(msg),
+                Ok(In::Ctl(req, reply)) => {
+                    self.next_token += 1;
+                    let token = self.next_token;
+                    self.replies.insert(token, reply);
+                    self.core.handle(now_ms(), Event::Request { token, req })
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    let mut acts = self.reclaim_stale_welcomes();
+                    acts.extend(self.core.handle(now_ms(), Event::Tick));
+                    acts
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            };
+            let shutdown = self.apply(actions);
+            self.step_cell.publish(self.core.step());
+            if shutdown {
+                // drain window: let worker Goodbyes land before teardown
+                let deadline = Instant::now() + Duration::from_millis(200);
+                while let Ok(msg) =
+                    self.rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
+                {
+                    if let In::Wire(m) = msg {
+                        if let Some(ev) = m.into_event() {
+                            let _ = self.core.handle(now_ms(), Event::Worker(ev));
+                        }
+                    }
+                }
+                break;
+            }
+        }
+        // release any never-welcomed workers so their processes exit
+        for conn in self.lobby.drain(..) {
+            let mut w = conn.writer;
+            let _ = wire::write_frame(&mut w, &FromLeader::Stop.encode());
+        }
+        self.step_cell.leader_gone();
+        self.core.into_report()
+    }
+
+    /// Assign a freshly connected worker process: founder slot first,
+    /// then pending Spawn slots, else the lobby. A config-digest mismatch
+    /// is refused outright — a worker building a different corpus/model
+    /// would silently train on wrong data.
+    fn place_conn(&mut self, conn: ConnHandle) {
+        if conn.config_digest != self.expected_digest {
+            let mut w = conn.writer;
+            let _ = wire::write_frame(
+                &mut w,
+                &FromLeader::Reject {
+                    reason: format!(
+                        "config digest mismatch: worker {:#x}, leader {:#x} \
+                         (check --samples/--data-seed/--params/--lr/--backend)",
+                        conn.config_digest, self.expected_digest
+                    ),
+                }
+                .encode(),
+            );
+            return;
+        }
+        if self.founders_assigned < self.expected_founders {
+            self.founders_assigned += 1;
+            let id = self.core.next_worker_id();
+            self.welcome(conn, id, false);
+        } else if let Some((id, _machine, joiner, _born)) = self.pending_spawns.pop_front() {
+            self.welcome(conn, id, joiner);
+        } else {
+            self.lobby.push_back(conn);
+        }
+    }
+
+    fn welcome(&mut self, conn: ConnHandle, id: NodeId, joiner: bool) {
+        // a stalled worker socket must never freeze the single-threaded
+        // shell: writes that block past the failure timeout error out and
+        // the worker is treated as dead
+        let _ = conn.writer.set_write_timeout(Some(self.reclaim_timeout));
+        self.writers.insert(id, conn.writer);
+        self.joiner_flag.insert(id, joiner);
+        self.welcomed_at.insert(id, Instant::now());
+        self.send_frame(id, &FromLeader::Welcome { worker: id, joiner });
+    }
+
+    /// Timeout-driven slot hygiene so a process that dies mid-handshake
+    /// (or a scale-out no `edl worker` ever claims) cannot wedge the job:
+    ///  * welcomed-but-never-registered workers: SEVER the socket (a late
+    ///    `Register` must not resurrect the reclaimed id), reopen founder
+    ///    slots, requeue joiner spawn slots;
+    ///  * spawn slots no connection claimed within the timeout: tell the
+    ///    core via [`Event::SpawnFailed`] so the §3.1 in-flight guard
+    ///    releases and the pending operation aborts with a typed error.
+    fn reclaim_stale_welcomes(&mut self) -> Vec<Action> {
+        let expired: Vec<NodeId> = self
+            .welcomed_at
+            .iter()
+            .filter(|(_, t)| t.elapsed() > self.reclaim_timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            self.welcomed_at.remove(&id);
+            if let Some(w) = self.writers.remove(&id) {
+                let _ = w.shutdown(std::net::Shutdown::Both);
+            }
+            let joiner = self.joiner_flag.remove(&id).unwrap_or(false);
+            if joiner {
+                self.pending_spawns.push_back((id, String::new(), true, Instant::now()));
+            } else {
+                self.founders_assigned = self.founders_assigned.saturating_sub(1);
+            }
+        }
+        let mut actions = Vec::new();
+        while let Some(&(id, _, _, born)) = self.pending_spawns.front() {
+            if born.elapsed() <= self.reclaim_timeout {
+                break;
+            }
+            self.pending_spawns.pop_front();
+            actions.extend(self.core.handle(now_ms(), Event::SpawnFailed { id }));
+        }
+        actions
+    }
+
+    fn send_frame(&mut self, to: NodeId, msg: &FromLeader) {
+        let dead = match self.writers.get_mut(&to) {
+            Some(w) => wire::write_frame(w, &msg.encode()).is_err(),
+            None => false,
+        };
+        if dead {
+            // worker process gone: drop the route; the barrier-timeout
+            // failure detector removes it from the job
+            self.writers.remove(&to);
+        }
+    }
+
+    /// Push the full data-plane directory to every connected worker (sent
+    /// whenever membership grows, BEFORE any Ok/SyncGo that could name the
+    /// new peer — per-socket ordering then guarantees workers can dial
+    /// every ring member they are told about).
+    fn broadcast_peers(&mut self) {
+        let peers: Vec<(NodeId, String)> =
+            self.directory.iter().map(|(&id, a)| (id, a.clone())).collect();
+        let msg = FromLeader::Peers { peers };
+        let ids: Vec<NodeId> = self.writers.keys().copied().collect();
+        for id in ids {
+            self.send_frame(id, &msg);
+        }
+    }
+
+    fn handle_wire(&mut self, msg: ToLeader) -> Vec<Action> {
+        let mut actions = Vec::new();
+        if let ToLeader::Register { worker, machine, data_addr } = &msg {
+            self.welcomed_at.remove(worker);
+            self.directory.insert(*worker, data_addr.clone());
+            self.broadcast_peers();
+            if self.attached.insert(*worker) {
+                let joiner = self.joiner_flag.get(worker).copied().unwrap_or(false);
+                actions.extend(self.core.handle(
+                    now_ms(),
+                    Event::Worker(WorkerEvent::Attach {
+                        id: *worker,
+                        machine: machine.clone(),
+                        joiner,
+                    }),
+                ));
+            }
+        }
+        if let ToLeader::Goodbye { worker, .. } = &msg {
+            let worker = *worker;
+            self.writers.remove(&worker);
+            self.directory.remove(&worker);
+            self.attached.remove(&worker);
+        }
+        if let Some(ev) = msg.into_event() {
+            actions.extend(self.core.handle(now_ms(), Event::Worker(ev)));
+        }
+        actions
+    }
+
+    /// Perform a batch of core actions; true once the job stopped.
+    fn apply(&mut self, actions: Vec<Action>) -> bool {
+        let mut shutdown = false;
+        for a in actions {
+            match a {
+                Action::Send { to, msg } => {
+                    let frame = FromLeader::from_ctrl(&msg);
+                    self.send_frame(to, &frame);
+                }
+                Action::Reply { token, resp } => {
+                    deliver_reply(&mut self.replies, token, resp);
+                }
+                Action::Spawn { id, machine, joiner } => {
+                    if let Some(conn) = self.lobby.pop_front() {
+                        self.welcome(conn, id, joiner);
+                    } else {
+                        self.pending_spawns.push_back((id, machine, joiner, Instant::now()));
+                    }
+                }
+                Action::WriteCheckpoint { token, path, bytes } => {
+                    perform_write_checkpoint(&mut self.replies, token, &path, &bytes);
+                }
+                Action::LoadCheckpoint { path } => {
+                    let ev = perform_load_checkpoint(&path);
+                    let more = self.core.handle(now_ms(), ev);
+                    shutdown |= self.apply(more);
+                }
+                Action::Shutdown => shutdown = true,
+            }
+        }
+        shutdown
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table-1 handle
+// ---------------------------------------------------------------------------
+
+/// Cloneable [`JobControl`] handle to a [`LeaderEndpoint`] — what
+/// `api::JobServer` serves to `edl ctl` processes.
+#[derive(Clone)]
+pub struct LeaderHandle {
+    tx: Sender<In>,
+    step_cell: Arc<StepCell>,
+}
+
+impl LeaderHandle {
+    /// Blocking Table-1 round-trip into the deploy shell.
+    pub fn call(&self, req: Request) -> Response {
+        let (rtx, rrx) = channel();
+        if self.tx.send(In::Ctl(req, rtx)).is_err() {
+            return Response::Err(ElasticError::Aborted("leader gone".into()));
+        }
+        rrx.recv_timeout(Duration::from_secs(600))
+            .unwrap_or(Response::Err(ElasticError::Aborted("leader timed out".into())))
+    }
+
+    /// Wait on the shell's step condvar (no status busy-poll, same
+    /// mechanism as `ElasticTrainer::wait_step`).
+    pub fn wait_step(&self, step: u64, timeout: Duration) -> bool {
+        self.step_cell.wait(step, timeout)
+    }
+}
+
+impl JobControl for LeaderHandle {
+    fn scale_out(&mut self, machines: Vec<String>) -> Result<(), ElasticError> {
+        self.call(Request::ScaleOut { machines }).unit()
+    }
+    fn scale_in(&mut self, workers: Vec<NodeId>) -> Result<(), ElasticError> {
+        self.call(Request::ScaleIn { workers }).unit()
+    }
+    fn migrate(&mut self, remove: Vec<NodeId>, add: Vec<String>) -> Result<(), ElasticError> {
+        self.call(Request::Migrate { remove, add }).unit()
+    }
+    fn profile(
+        &mut self,
+        min_p: u32,
+        steps_per_level: u64,
+    ) -> Result<Vec<ProfileRow>, ElasticError> {
+        // the one shared sweep, driven over the handle (runs on the
+        // JobServer connection thread, so it never stalls the leader shell)
+        profile_sweep(
+            &|req| self.call(req),
+            &|step, timeout| self.wait_step(step, timeout),
+            min_p,
+            steps_per_level,
+        )
+    }
+    fn status(&mut self) -> Result<JobStatus, ElasticError> {
+        self.call(Request::Status).status()
+    }
+    fn checkpoint(&mut self, path: &str) -> Result<(), ElasticError> {
+        self.call(Request::Checkpoint { path: path.to_string() }).unit()
+    }
+    fn restore(&mut self, path: &str) -> Result<(), ElasticError> {
+        self.call(Request::Restore { path: path.to_string() }).unit()
+    }
+    fn stop(&mut self) -> Result<(), ElasticError> {
+        self.call(Request::Stop).unit()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker process
+// ---------------------------------------------------------------------------
+
+/// Everything `edl worker` needs to join a served job.
+pub struct WorkerParams {
+    pub leader_addr: String,
+    pub machine: String,
+    pub backend: Arc<dyn Backend>,
+    pub corpus: Arc<Corpus>,
+    pub lr: f32,
+    /// must match the leader's [`config_digest`] or the handshake is
+    /// refused (prevents silently training on mismatched data)
+    pub config_digest: u64,
+}
+
+/// Run one worker process: handshake with the leader endpoint, stand up a
+/// `TcpNode` data plane, bridge the control socket onto the channel pair
+/// [`worker_loop`] expects, and train until `Stop` / graceful exit. This
+/// is the same training loop the in-process engine runs — only the
+/// transport differs.
+pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
+    let stream = TcpStream::connect(&p.leader_addr)?;
+    stream.set_nodelay(true)?; // §4.4
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+
+    // -- handshake: Hello -> Welcome{id, joiner} ----------------------------
+    wire::write_frame(
+        &mut writer,
+        &ToLeader::Hello { machine: p.machine.clone(), config_digest: p.config_digest }.encode(),
+    )?;
+    let (id, joiner) = loop {
+        let raw = wire::read_frame(&mut reader)?;
+        match FromLeader::decode(&raw)? {
+            FromLeader::Welcome { worker, joiner } => break (worker, joiner),
+            FromLeader::Reject { reason } => {
+                anyhow::bail!("leader refused this worker: {reason}");
+            }
+            // a lobby release during shutdown: exit cleanly
+            FromLeader::Stop => return Ok(()),
+            _ => {}
+        }
+    };
+
+    // -- data plane ---------------------------------------------------------
+    let directory: Arc<Mutex<HashMap<NodeId, String>>> = Arc::new(Mutex::new(HashMap::new()));
+    let net = TcpNode::start(id, directory.clone())
+        .map_err(|e| anyhow::anyhow!("data-plane bind failed: {e}"))?;
+    let data_addr = net.addr.clone();
+
+    // -- control bridges ----------------------------------------------------
+    let (ev_tx, ev_rx) = channel::<WorkerEvent>();
+    let (ctrl_tx, ctrl_rx) = channel::<CtrlMsg>();
+
+    // worker events -> rpc frames (Register is stamped with data_addr)
+    let writer_bridge = std::thread::Builder::new()
+        .name(format!("edl-worker-{id}-tx"))
+        .spawn(move || {
+            while let Ok(ev) = ev_rx.recv() {
+                let Some(msg) = ToLeader::from_event(&ev, &data_addr) else { continue };
+                if wire::write_frame(&mut writer, &msg.encode()).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn worker tx bridge");
+
+    // rpc frames -> ctrl messages; Peers frames maintain the directory
+    {
+        let directory = directory.clone();
+        std::thread::Builder::new()
+            .name(format!("edl-worker-{id}-rx"))
+            .spawn(move || loop {
+                let Ok(raw) = wire::read_frame(&mut reader) else { break };
+                let Ok(msg) = FromLeader::decode(&raw) else { break };
+                match msg {
+                    FromLeader::Peers { peers } => {
+                        let mut d = directory.lock().unwrap_or_else(|e| e.into_inner());
+                        for (pid, addr) in peers {
+                            d.insert(pid, addr);
+                        }
+                    }
+                    other => {
+                        if let Some(ctrl) = other.into_ctrl() {
+                            if ctrl_tx.send(ctrl).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker rx bridge");
+    }
+
+    // -- the one true training loop ----------------------------------------
+    let ctx = WorkerCtx {
+        id,
+        machine: p.machine,
+        backend: p.backend,
+        corpus: p.corpus,
+        net,
+        to_leader: ev_tx,
+        ctrl: ctrl_rx,
+        lr: p.lr,
+        knobs: WorkerKnobs::new(),
+        joiner,
+        init_seed: 42,
+    };
+    worker_loop(ctx);
+    // ctx (and its event sender) is gone; the tx bridge drains the last
+    // frames (Goodbye) and exits — join it so they reach the leader
+    let _ = writer_bridge.join();
+    Ok(())
+}

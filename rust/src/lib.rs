@@ -7,8 +7,11 @@
 //!   Table-1 job-control surface ([`api`]: the `JobControl` trait served
 //!   in-process, over TCP via `api::JobServer`/`JobClient`, and inside
 //!   the simulator), leader election over a CAS/lease KV service
-//!   ([`coordsvc`]), stop-free scale-out and graceful-exit scale-in
-//!   ([`coordinator`]), an elastic ring-allreduce data plane
+//!   ([`coordsvc`]), stop-free scale-out and graceful-exit scale-in as a
+//!   pure, clock-injected state machine ([`coordinator`]'s `LeaderCore`)
+//!   driven in-process, by the multi-process TCP deployment ([`deploy`]
+//!   over [`rpc`] frames), and by a virtual-clock replay harness, an
+//!   elastic ring-allreduce data plane
 //!   ([`allreduce`] over [`transport`]), the dynamic data pipeline
 //!   ([`data`]), plus the GPU-cluster simulation substrate the paper's
 //!   evaluation needs: a calibrated device model ([`gpu_sim`]), a
@@ -31,6 +34,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod coordsvc;
 pub mod data;
+pub mod deploy;
 pub mod gpu_sim;
 pub mod metrics;
 pub mod rpc;

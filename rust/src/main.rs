@@ -3,7 +3,11 @@
 //! Subcommands:
 //!   train        run elastic data-parallel training on the AOT artifacts
 //!   serve        run a training job AND a TCP JobServer so a remote
-//!                scheduler can drive it through the Table-1 API
+//!                scheduler can drive it through the Table-1 API; with
+//!                --remote the workers are separate `edl worker` processes
+//!   worker       one worker process of a --remote job (the true multi-
+//!                process deployment: control over rpc frames, TcpNode
+//!                data plane)
 //!   ctl          Table-1 client: control a served job over TCP
 //!   profile      profile a job over a parallelism range (Table 1 API)
 //!   sim          trace-driven cluster-scheduling simulation
@@ -14,12 +18,13 @@ use edl::api::{JobClient, JobControl, JobServer, Request};
 use edl::cluster::{ClusterSim, ScaleMode};
 use edl::coordinator::{ElasticTrainer, TrainerConfig};
 use edl::data::corpus::Corpus;
+use edl::deploy::{LeaderEndpoint, WorkerParams};
 use edl::metrics::JctStats;
 use edl::runtime::artifacts_dir;
 use edl::schedulers::{ElasticTiresias, Tiresias};
 use edl::trace::{self, TraceConfig};
 use edl::util::args::Args;
-use edl::worker::PjrtBackend;
+use edl::worker::{Backend, PjrtBackend, SimBackend};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -27,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     match args.positional().first().map(String::as_str) {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some("ctl") => cmd_ctl(&args),
         Some("profile") => cmd_profile(&args),
         Some("sim") => cmd_sim(&args),
@@ -34,43 +40,83 @@ fn main() -> anyhow::Result<()> {
         Some("kv") => cmd_kv(),
         _ => {
             eprintln!(
-                "usage: edl <train|serve|ctl|profile|sim|trace-stats|kv> [--flags]\n\
+                "usage: edl <train|serve|worker|ctl|profile|sim|trace-stats|kv> [--flags]\n\
                  \n  train       --config tiny|small --workers N --steps N --agg-batch B --lr F\n\
                  \n  serve       (train flags; prints the job-control address, serves until the job stops)\n\
+                 \n              --remote: workers are separate `edl worker` processes;\n\
+                 \n              --listen h:p (worker endpoint) --ctl h:p (job-control endpoint)\n\
+                 \n  worker      --leader <addr> --machine m1 [--backend sim]\n\
                  \n  ctl <addr> <status|scale-out|scale-in|migrate|profile|checkpoint|restore|stop>\n\
-                 \n              --machines m1,m1 --workers 3,4 --path ckpt.bin --min-p 1\n\
+                 \n              --machines m1,m1 --workers 3,4|last --path ckpt.bin --min-p 1\n\
                  \n  profile     --config tiny --max-p 4 --min-p 1 --steps-per-level K\n\
                  \n  sim         --scheduler tiresias|elastic-tiresias --jobs N --machines M\n\
                  \n  trace-stats --jobs N\n\
-                 \n  kv          (serves an etcd-like KV on an ephemeral port)"
+                 \n  kv          (serves an etcd-like KV on an ephemeral port)\n\
+                 \n  common      --backend pjrt|sim (sim: artifact-free synthetic device)"
             );
             Ok(())
         }
     }
 }
 
-fn build_trainer(args: &Args, workers: usize) -> anyhow::Result<(ElasticTrainer, Arc<Corpus>)> {
-    let config = args.str("config", "tiny");
-    let agg_batch = args.usize("agg-batch", 32) as u32;
-    let backend = Arc::new(PjrtBackend::new(artifacts_dir(), &config, agg_batch, 16)?);
-    let meta = backend.meta.clone();
-    let corpus = Arc::new(Corpus::markov(
-        meta.vocab,
-        meta.seq_len,
+/// Model backend + matching corpus. `--backend sim` runs the deterministic
+/// synthetic device (no AOT artifacts needed — what CI's multi-process
+/// smoke job uses); the default is the real PJRT path.
+fn build_parts(args: &Args) -> anyhow::Result<(Arc<dyn Backend>, Arc<Corpus>)> {
+    let samples = args.u64("samples", 4096);
+    let data_seed = args.u64("data-seed", 1);
+    match args.str("backend", "pjrt").as_str() {
+        "sim" => {
+            let backend = SimBackend {
+                compute_ms: args.u64("compute-ms", 5),
+                ..SimBackend::fast(args.usize("params", 512))
+            };
+            let corpus = Arc::new(Corpus::markov(256, backend.seq, samples, data_seed));
+            Ok((Arc::new(backend), corpus))
+        }
+        _ => {
+            let config = args.str("config", "tiny");
+            let agg_batch = args.usize("agg-batch", 32) as u32;
+            let backend = Arc::new(PjrtBackend::new(artifacts_dir(), &config, agg_batch, 16)?);
+            let meta = backend.meta.clone();
+            let corpus =
+                Arc::new(Corpus::markov(meta.vocab, meta.seq_len, samples, data_seed));
+            Ok((backend, corpus))
+        }
+    }
+}
+
+/// The leader/worker agreement digest for the multi-process deployment:
+/// both sides derive it from the same flags, so a mismatched worker is
+/// refused at the handshake instead of training on different data.
+fn deploy_digest(args: &Args, backend: &Arc<dyn Backend>) -> u64 {
+    edl::deploy::config_digest(
         args.u64("samples", 4096),
         args.u64("data-seed", 1),
-    ));
-    let cfg = TrainerConfig {
-        agg_batch,
+        backend.param_count(),
+        backend.seq_len(),
+        args.f64("lr", 0.05) as f32,
+    )
+}
+
+fn build_cfg(args: &Args) -> TrainerConfig {
+    TrainerConfig {
+        agg_batch: args.usize("agg-batch", 32) as u32,
         lr: args.f64("lr", 0.05) as f32,
         n_partitions: args.u64("partitions", 64),
         seed: args.u64("seed", 7),
+        switch_allowance_ms: args.f64("switch-allowance-ms", 500.0),
         straggler_mitigation: args.bool("straggler-mitigation", false),
         // the paper's USE_APPX_RECOVERY switch, resolved ONCE here at
         // config construction — the trainer never reads the environment
         approx_recovery: args.bool("approx-recovery", TrainerConfig::approx_recovery_from_env()),
         ..Default::default()
-    };
+    }
+}
+
+fn build_trainer(args: &Args, workers: usize) -> anyhow::Result<(ElasticTrainer, Arc<Corpus>)> {
+    let (backend, corpus) = build_parts(args)?;
+    let cfg = build_cfg(args);
     Ok((ElasticTrainer::start(cfg, backend, corpus.clone(), workers), corpus))
 }
 
@@ -98,8 +144,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Paper deployment: the job trains while a TCP `JobServer` exposes the
-/// Table-1 API to remote schedulers (`edl ctl <addr> ...`).
+/// Table-1 API to remote schedulers (`edl ctl <addr> ...`). With
+/// `--remote`, workers are separate `edl worker` OS processes speaking
+/// `rpc` frames to a leader endpoint in THIS process — the true
+/// multi-process topology.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.bool("remote", false) {
+        return cmd_serve_remote(args);
+    }
     let workers = args.usize("workers", 2);
     let (trainer, _corpus) = build_trainer(args, workers)?;
     let server = JobServer::start(trainer)?;
@@ -118,6 +170,54 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Leader process of the multi-process deployment: a worker endpoint for
+/// `edl worker` processes plus a `JobServer` for `edl ctl`. Serves until
+/// a scheduler issues `stop`.
+fn cmd_serve_remote(args: &Args) -> anyhow::Result<()> {
+    let workers = args.usize("workers", 2);
+    let (backend, corpus) = build_parts(args)?;
+    let digest = deploy_digest(args, &backend);
+    let cfg = build_cfg(args);
+    let endpoint = LeaderEndpoint::start(
+        cfg,
+        backend,
+        corpus.n_samples,
+        workers,
+        &args.str("listen", "127.0.0.1:0"),
+        digest,
+    )?;
+    println!("worker-endpoint {}", endpoint.addr);
+    let server = JobServer::start_on(&args.str("ctl", "127.0.0.1:0"), endpoint.handle())?;
+    println!("job-control {}", server.addr);
+    println!("waiting for {workers} `edl worker --leader {}` processes...", endpoint.addr);
+    let report = endpoint.join();
+    for ev in &report.events {
+        println!("[event] step={} {}", ev.step, ev.what);
+    }
+    println!("steps={} epochs={}", report.steps, report.epochs);
+    let _ = server.shutdown();
+    Ok(())
+}
+
+/// One worker process of a `serve --remote` job. Connects, prepares its
+/// execution context (stop-free if joining a running job), and trains
+/// until `stop` or graceful exit.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let leader = args
+        .opt_str("leader")
+        .ok_or_else(|| anyhow::anyhow!("worker: missing --leader <addr>"))?;
+    let (backend, corpus) = build_parts(args)?;
+    let digest = deploy_digest(args, &backend);
+    edl::deploy::run_worker(WorkerParams {
+        leader_addr: leader,
+        machine: args.str("machine", "m0"),
+        backend,
+        corpus,
+        lr: args.f64("lr", 0.05) as f32,
+        config_digest: digest,
+    })
 }
 
 /// Table-1 client over TCP: the scheduler side of the paper's deployment.
@@ -149,7 +249,18 @@ fn cmd_ctl(args: &Args) -> anyhow::Result<()> {
             println!("scaled out");
         }
         "scale-in" => {
-            client.scale_in(workers()).map_err(anyhow::Error::msg)?;
+            // `--workers last` picks the newest worker from `status` (CI
+            // scripts need not parse worker ids)
+            let ids = if args.str("workers", "") == "last" {
+                let st = client.status().map_err(anyhow::Error::msg)?;
+                vec![*st
+                    .workers
+                    .last()
+                    .ok_or_else(|| anyhow::anyhow!("scale-in: job has no workers"))?]
+            } else {
+                workers()
+            };
+            client.scale_in(ids).map_err(anyhow::Error::msg)?;
             println!("scaled in");
         }
         "migrate" => {

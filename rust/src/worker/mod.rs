@@ -26,7 +26,7 @@ use crate::coordinator::{CtrlMsg, SwitchPlan, WorkerEvent};
 use crate::data::corpus::Corpus;
 use crate::data::PartitionMeta;
 use crate::runtime::{xla, ModelMeta, Runtime};
-use crate::transport::{InProcEndpoint, NodeId};
+use crate::transport::{InProcEndpoint, NodeId, PointToPoint};
 use crate::util::rng::Pcg;
 use anyhow::Result;
 use std::path::PathBuf;
@@ -267,12 +267,15 @@ impl WorkerKnobs {
     }
 }
 
-pub struct WorkerCtx {
+/// Everything one worker needs, generic over the data-plane transport:
+/// [`InProcEndpoint`] in the in-process engine, `TcpNode` in the
+/// multi-process deployment — the training loop is the same code.
+pub struct WorkerCtx<N: PointToPoint = InProcEndpoint> {
     pub id: NodeId,
     pub machine: String,
     pub backend: Arc<dyn Backend>,
     pub corpus: Arc<Corpus>,
-    pub net: InProcEndpoint,
+    pub net: N,
     pub to_leader: Sender<WorkerEvent>,
     pub ctrl: Receiver<CtrlMsg>,
     pub lr: f32,
@@ -313,7 +316,7 @@ fn drain_stale_ctrl(ctrl: &Receiver<CtrlMsg>) {
     }
 }
 
-pub fn worker_loop(mut ctx: WorkerCtx) {
+pub fn worker_loop<N: PointToPoint>(mut ctx: WorkerCtx<N>) {
     if let Err(e) = worker_loop_inner(&mut ctx) {
         // make worker deaths visible on stderr (a dead worker otherwise
         // only shows up via the leader's failure detector)
@@ -322,7 +325,7 @@ pub fn worker_loop(mut ctx: WorkerCtx) {
 }
 
 #[allow(unused_assignments)] // ring/grads are refreshed at every sync barrier
-fn worker_loop_inner(ctx: &mut WorkerCtx) -> Result<()> {
+fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
     let send = |m: WorkerEvent| {
         let _ = ctx.to_leader.send(m);
     };

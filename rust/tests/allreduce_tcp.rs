@@ -5,7 +5,7 @@
 
 use edl::allreduce::{broadcast_recv, broadcast_send, ring_allreduce};
 use edl::api::Request;
-use edl::rpc::{FromLeader, ToLeader};
+use edl::rpc::{FromLeader, ToLeader, WireSwitch};
 use edl::transport::{PointToPoint, TcpNode};
 use edl::util::rng::Pcg;
 use edl::wire::Envelope;
@@ -185,19 +185,29 @@ fn rpc_messages_over_tcp_frames() {
     assert_eq!(got.seq, 1);
     assert_eq!(Request::decode(&got.body).unwrap(), cmd);
 
-    let msg = ToLeader::SyncRequest { worker: 7, step: 123, step_ms: 45.6, partition: 9, offset: 100 };
+    let msg = ToLeader::Sync {
+        worker: 7,
+        step: 123,
+        loss: 0.5,
+        weight: 8.0,
+        step_ms: 45.6,
+        shard: Some((9, 100)),
+    };
     sched.send(11, edl::transport::tag::RPC + 1, msg.encode()).unwrap();
     let raw = leader.recv_from(10, edl::transport::tag::RPC + 1, T).unwrap();
     assert_eq!(ToLeader::decode(&raw).unwrap(), msg);
 
-    let reply = FromLeader::Switch {
-        at_step: 130,
-        version: 3,
-        ring: vec![1, 2, 7],
-        local_batch: 8,
-        broadcast_src: 1,
-        joiners: vec![7],
-        exit: false,
+    let reply = FromLeader::SyncGo {
+        ring: vec![1, 2],
+        sync_tag: (3u64 << 24) | 129,
+        switch: Some(WireSwitch {
+            at_step: 130,
+            ring: vec![1, 2, 7],
+            local_batch: 8,
+            broadcast_src: 1,
+            joiners: vec![7],
+            exiting: vec![],
+        }),
     };
     leader.send(10, edl::transport::tag::RPC + 2, reply.encode()).unwrap();
     let raw = sched.recv_from(11, edl::transport::tag::RPC + 2, T).unwrap();

@@ -1,0 +1,265 @@
+//! Deterministic protocol tests of the pure [`LeaderCore`] under a
+//! virtual clock: the same recorded `(now_ms, Event)` trace must produce
+//! byte-identical action logs on every replay, stale events from departed
+//! workers must be dropped (never crash the leader), and the §4.2
+//! stop-free switch must be scheduled at least the allowance ahead while
+//! barriers keep flowing.
+
+use edl::api::{ElasticError, Request, Response};
+use edl::coordinator::replay::{replay, scheduled_join_step, ScriptedLeader};
+use edl::coordinator::{
+    Action, CtrlMsg, Event, LeaderCore, TrainerConfig, WorkerEvent,
+};
+use edl::worker::SimBackend;
+use std::sync::Arc;
+
+fn cfg() -> TrainerConfig {
+    TrainerConfig { switch_allowance_ms: 500.0, ..TrainerConfig::default() }
+}
+
+fn scripted(n_founders: usize) -> ScriptedLeader {
+    ScriptedLeader::new(cfg(), Arc::new(SimBackend::fast(16)), n_founders)
+}
+
+/// Drive a full protocol scenario and return the recorded trace: join 2
+/// founders, train, scale out 2→3, train past the commit, scale in 3→2,
+/// train, checkpoint-param flow, stop.
+fn scenario_trace() -> Vec<(f64, Event)> {
+    let mut l = scripted(2);
+    l.join_worker(1, "m0", false);
+    l.join_worker(2, "m0", false);
+    l.run_barriers(6, 100.0);
+
+    let (_t, acts) = l.request(Request::ScaleOut { machines: vec!["m1".into()] });
+    let joiner = acts
+        .iter()
+        .find_map(|a| match a {
+            Action::Spawn { id, .. } => Some(*id),
+            _ => None,
+        })
+        .expect("spawn for the joiner");
+    let acts = l.join_worker(joiner, "m1", true);
+    let at = scheduled_join_step(&acts).expect("switch scheduled");
+    while l.core.step() < at {
+        l.run_barrier(100.0);
+    }
+    l.run_barriers(3, 80.0);
+
+    let victim = *l.core.active_workers().last().unwrap();
+    let (_t, _a) = l.request(Request::ScaleIn { workers: vec![victim] });
+    let before = l.core.step();
+    while l.core.step() < before + 10 && l.core.active_workers().contains(&victim) {
+        l.run_barrier(80.0);
+    }
+    // the victim exits gracefully at the boundary
+    l.feed(0.5, Event::Worker(WorkerEvent::Goodbye { id: victim, shard: None }));
+    l.run_barriers(2, 80.0);
+
+    // periodic ticks are part of real traces
+    l.feed(25.0, Event::Tick);
+    l.feed(25.0, Event::Tick);
+    let (_t, _a) = l.request(Request::Status);
+    let (_t, _a) = l.request(Request::Stop);
+    l.trace
+}
+
+#[test]
+fn same_trace_twice_yields_byte_identical_action_logs() {
+    let trace = scenario_trace();
+    assert!(trace.len() > 40, "scenario should be non-trivial: {}", trace.len());
+
+    let mut core_a = LeaderCore::new(cfg(), Arc::new(SimBackend::fast(16)), cfg().assigner_for(4096), 2);
+    let mut core_b = LeaderCore::new(cfg(), Arc::new(SimBackend::fast(16)), cfg().assigner_for(4096), 2);
+    let log_a = replay(&mut core_a, &trace);
+    let log_b = replay(&mut core_b, &trace);
+    assert!(!log_a.is_empty());
+    assert_eq!(log_a, log_b, "replaying the same trace must be deterministic");
+
+    // and byte-identical as one blob (the acceptance criterion verbatim)
+    assert_eq!(log_a.join("\n").into_bytes(), log_b.join("\n").into_bytes());
+
+    // the reports agree too (loss history is ordered arithmetic)
+    let ra = core_a.into_report();
+    let rb = core_b.into_report();
+    assert_eq!(ra.steps, rb.steps);
+    assert_eq!(format!("{:?}", ra.loss_history), format!("{:?}", rb.loss_history));
+    assert!(ra.events.iter().any(|e| e.what.contains("switch-committed")));
+}
+
+#[test]
+fn late_sync_from_removed_worker_is_dropped_not_a_crash() {
+    let mut l = scripted(3);
+    l.join_worker(1, "m0", false);
+    l.join_worker(2, "m0", false);
+    l.join_worker(3, "m0", false);
+    l.run_barriers(6, 50.0);
+
+    // graceful scale-in of worker 3
+    let (_t, _a) = l.request(Request::ScaleIn { workers: vec![3] });
+    let before = l.core.step();
+    while l.core.active_workers().contains(&3) && l.core.step() < before + 20 {
+        l.run_barrier(50.0);
+    }
+    assert!(!l.core.active_workers().contains(&3), "victim should have exited the ring");
+    l.feed(0.1, Event::Worker(WorkerEvent::Goodbye { id: 3, shard: None }));
+
+    // the regression: a LATE Sync from the removed worker (it was slow to
+    // die). The seed leader indexed `workers[&id]` on such paths and could
+    // panic; the core must log-and-drop.
+    let step = l.core.step();
+    let acts = l.feed(
+        1.0,
+        Event::Worker(WorkerEvent::Sync {
+            id: 3,
+            step,
+            loss: 0.5,
+            weight: 8.0,
+            step_ms: 50.0,
+            shard: None,
+        }),
+    );
+    assert!(acts.is_empty(), "stale sync must produce no actions: {acts:?}");
+    // late Ready from the removed worker is equally harmless
+    let acts = l.feed(1.0, Event::Worker(WorkerEvent::Ready { id: 3 }));
+    assert!(acts.is_empty(), "stale ready must produce no actions: {acts:?}");
+
+    // and the survivors keep training normally
+    let acts = l.run_barrier(50.0);
+    assert!(
+        acts.iter().any(|a| matches!(a, Action::Send { msg: CtrlMsg::SyncGo { .. }, .. })),
+        "barrier must still complete: {acts:?}"
+    );
+    let report = l.core.into_report();
+    assert!(report.events.iter().any(|e| e.what.contains("stale-sync")));
+}
+
+#[test]
+fn joiner_goodbye_before_commit_aborts_instead_of_wedging() {
+    let mut l = scripted(2);
+    l.join_worker(1, "m0", false);
+    l.join_worker(2, "m0", false);
+    l.run_barriers(4, 50.0);
+
+    let (token, acts) = l.request(Request::ScaleOut { machines: vec!["m9".into()] });
+    let joiner = acts
+        .iter()
+        .find_map(|a| match a {
+            Action::Spawn { id, .. } => Some(*id),
+            _ => None,
+        })
+        .unwrap();
+    // the joiner attaches, then dies (goodbye) BEFORE ever becoming ready
+    l.feed(1.0, Event::Worker(WorkerEvent::Attach { id: joiner, machine: "m9".into(), joiner: true }));
+    let acts = l.feed(1.0, Event::Worker(WorkerEvent::Goodbye { id: joiner, shard: None }));
+    let aborted = acts.iter().any(|a| {
+        matches!(a, Action::Reply { token: t, resp: Response::Err(ElasticError::Aborted(_)) } if *t == token)
+    });
+    assert!(aborted, "pending scale-out must abort, got {acts:?}");
+
+    // the job is adjustable again (not wedged on a ghost joiner)
+    let (_t2, acts) = l.request(Request::ScaleIn { workers: vec![2] });
+    assert!(
+        !acts.iter().any(|a| matches!(
+            a,
+            Action::Reply { resp: Response::Err(ElasticError::AdjustmentInFlight), .. }
+        )),
+        "follow-up adjustment must be accepted: {acts:?}"
+    );
+}
+
+#[test]
+fn switch_scheduled_past_allowance_while_barriers_keep_flowing() {
+    let step_ms = 50.0;
+    let mut l = scripted(2);
+    l.join_worker(1, "m0", false);
+    l.join_worker(2, "m0", false);
+    l.run_barriers(8, step_ms);
+
+    let (_t, acts) = l.request(Request::ScaleOut { machines: vec!["m1".into()] });
+    let joiner = acts
+        .iter()
+        .find_map(|a| match a {
+            Action::Spawn { id, .. } => Some(*id),
+            _ => None,
+        })
+        .unwrap();
+    let acts = l.join_worker(joiner, "m1", true);
+    let at = scheduled_join_step(&acts).expect("switch scheduled");
+    let scheduled_from = l.core.step();
+
+    // k = ceil(T_a / T_b): the joiner gets at least the allowance to
+    // prepare, quantised to whole mini-batches
+    let lag_ms = (at - scheduled_from) as f64 * step_ms;
+    assert!(lag_ms >= 500.0, "lag {lag_ms}ms < allowance");
+    assert!(lag_ms <= 500.0 + 2.0 * step_ms, "lag {lag_ms}ms overshoots");
+
+    // stop-free: every barrier between scheduling and commit releases the
+    // OLD ring — training never pauses for the joiner
+    while l.core.step() < at {
+        let step_before = l.core.step();
+        let acts = l.run_barrier(step_ms);
+        let syncgo = acts
+            .iter()
+            .filter(|a| matches!(a, Action::Send { msg: CtrlMsg::SyncGo { .. }, .. }))
+            .count();
+        assert_eq!(syncgo, 2, "barrier at step {step_before} must release both founders");
+    }
+    assert_eq!(l.core.active_workers().len(), 3, "switch committed at the boundary");
+}
+
+#[test]
+fn checkpoint_and_restore_flow_through_shell_actions() {
+    let mut l = scripted(2);
+    l.join_worker(1, "m0", false);
+    l.join_worker(2, "m0", false);
+    l.run_barriers(5, 40.0);
+    let ckpt_step = l.core.step();
+
+    // checkpoint: core asks a worker for params...
+    let (ctoken, acts) = l.request(Request::Checkpoint { path: "/virtual/ckpt.bin".into() });
+    assert!(acts.iter().any(|a| matches!(a, Action::Send { msg: CtrlMsg::SendParams, .. })));
+    // ...and turns the uploaded params into a WriteCheckpoint action
+    let acts = l.feed(
+        1.0,
+        Event::Worker(WorkerEvent::Params {
+            id: 1,
+            step: ckpt_step,
+            params: vec![0.25; 16],
+        }),
+    );
+    let bytes = acts
+        .iter()
+        .find_map(|a| match a {
+            Action::WriteCheckpoint { token, bytes, .. } if *token == ctoken => {
+                Some(bytes.clone())
+            }
+            _ => None,
+        })
+        .expect("checkpoint bytes emitted for the shell to write");
+
+    l.run_barriers(4, 40.0);
+    assert!(l.core.step() > ckpt_step);
+
+    // restore: LoadCheckpoint action out, CheckpointData event back in
+    let (rtoken, acts) = l.request(Request::Restore { path: "/virtual/ckpt.bin".into() });
+    assert!(acts.iter().any(|a| matches!(a, Action::LoadCheckpoint { .. })));
+    let acts = l.feed(0.0, Event::CheckpointData { data: Some(bytes) });
+    assert!(
+        acts.iter()
+            .any(|a| matches!(a, Action::Reply { token, resp: Response::Ok } if *token == rtoken)),
+        "restore must ack: {acts:?}"
+    );
+    let restores = acts
+        .iter()
+        .filter(|a| matches!(a, Action::Send { msg: CtrlMsg::Restore { .. }, .. }))
+        .count();
+    assert_eq!(restores, 2, "both workers get the restored model");
+    assert_eq!(l.core.step(), ckpt_step, "step rewinds to the checkpoint");
+
+    // a missing checkpoint is a typed error, not a crash
+    let (etoken, _a) = l.request(Request::Restore { path: "/virtual/nope.bin".into() });
+    let acts = l.feed(0.0, Event::CheckpointData { data: None });
+    assert!(acts.iter().any(|a| {
+        matches!(a, Action::Reply { token, resp: Response::Err(ElasticError::Io(_)) } if *token == etoken)
+    }));
+}

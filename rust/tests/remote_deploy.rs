@@ -1,0 +1,193 @@
+//! The TRUE multi-process TCP deployment, end to end: this test spawns
+//! the real `edl` binary — one `edl serve --remote` leader process and
+//! worker processes (`edl worker`) that speak `rpc::ToLeader`/`FromLeader`
+//! over the framed wire codec, with a `TcpNode` data plane between the
+//! worker processes — then drives the job through the Table-1 TCP client:
+//! scale-out 2→4, graceful scale-in 4→3, stop. Training must never stop
+//! during the scale-out: the step counter may never stall longer than the
+//! configured switch allowance while the joiners prepare and switch in.
+
+use edl::api::{JobClient, JobControl};
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ALLOWANCE_MS: u64 = 2_000;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_edl")
+}
+
+/// Child processes killed on drop so a failing assert can't leak them.
+struct Procs(Vec<Child>);
+
+impl Drop for Procs {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn spawn_worker(leader: &str, machine: &str) -> Child {
+    Command::new(bin())
+        .args([
+            "worker",
+            "--leader",
+            leader,
+            "--machine",
+            machine,
+            "--backend",
+            "sim",
+            "--compute-ms",
+            "5",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn edl worker")
+}
+
+fn connect(ctl: &str) -> JobClient {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match JobClient::connect(ctl) {
+            Ok(c) => return c,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "cannot reach job-control {ctl}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn wait_step(job: &mut JobClient, step: u64, timeout: Duration) -> u64 {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let st = job.status().expect("status");
+        if st.step >= step {
+            return st.step;
+        }
+        assert!(Instant::now() < deadline, "step stalled at {} (want {step})", st.step);
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn three_process_tcp_job_scales_out_and_in_without_stopping() {
+    // -- leader process -----------------------------------------------------
+    let mut serve = Command::new(bin())
+        .args([
+            "serve",
+            "--remote",
+            "--workers",
+            "2",
+            "--backend",
+            "sim",
+            "--compute-ms",
+            "5",
+            "--switch-allowance-ms",
+            &ALLOWANCE_MS.to_string(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn edl serve --remote");
+    let mut lines = BufReader::new(serve.stdout.take().unwrap()).lines();
+    let (mut worker_addr, mut ctl_addr) = (None, None);
+    while worker_addr.is_none() || ctl_addr.is_none() {
+        let line = lines
+            .next()
+            .expect("serve exited before printing its endpoints")
+            .expect("read serve stdout");
+        if let Some(a) = line.strip_prefix("worker-endpoint ") {
+            worker_addr = Some(a.trim().to_string());
+        } else if let Some(a) = line.strip_prefix("job-control ") {
+            ctl_addr = Some(a.trim().to_string());
+        }
+    }
+    let worker_addr = worker_addr.unwrap();
+    let ctl_addr = ctl_addr.unwrap();
+    // keep draining serve's stdout so its pipe can never fill up
+    std::thread::spawn(move || for _line in lines {});
+
+    let mut procs = Procs(vec![serve]);
+
+    // -- two founding worker processes: training starts ---------------------
+    procs.0.push(spawn_worker(&worker_addr, "m1"));
+    procs.0.push(spawn_worker(&worker_addr, "m2"));
+    let mut job = connect(&ctl_addr);
+    wait_step(&mut job, 5, Duration::from_secs(60));
+    let st = job.status().unwrap();
+    assert_eq!(st.parallelism, 2, "{st:?}");
+
+    // -- stop-free scale-out 2→4 across process boundaries ------------------
+    // monitor thread: sample the step counter and record the longest stall
+    let stop_monitor = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let stop = stop_monitor.clone();
+        let ctl = ctl_addr.clone();
+        std::thread::spawn(move || {
+            let mut probe = connect(&ctl);
+            let mut last_step = probe.status().expect("status").step;
+            let mut last_change = Instant::now();
+            let mut max_stall = Duration::ZERO;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(20));
+                let st = probe.status().expect("status");
+                if st.step != last_step {
+                    last_step = st.step;
+                    last_change = Instant::now();
+                } else {
+                    max_stall = max_stall.max(last_change.elapsed());
+                }
+            }
+            max_stall
+        })
+    };
+
+    // extra worker processes first (they wait in the leader's lobby)...
+    procs.0.push(spawn_worker(&worker_addr, "m3"));
+    procs.0.push(spawn_worker(&worker_addr, "m4"));
+    let before = job.status().unwrap().step;
+    // ...then the Table-1 request; it returns once the ONE switch commits
+    job.scale_out(vec!["m3".into(), "m4".into()]).expect("scale-out");
+    let st = job.status().unwrap();
+    assert_eq!(st.parallelism, 4, "{st:?}");
+    assert!(st.step >= before, "step went backwards: {} -> {}", before, st.step);
+    assert_eq!(st.workers.len(), 4);
+
+    // training continues after the switch, across all four processes
+    wait_step(&mut job, st.step + 10, Duration::from_secs(60));
+
+    stop_monitor.store(true, Ordering::Relaxed);
+    let max_stall = monitor.join().expect("monitor thread");
+    assert!(
+        max_stall < Duration::from_millis(ALLOWANCE_MS),
+        "mini-batch gap {max_stall:?} exceeded the {ALLOWANCE_MS}ms switch allowance"
+    );
+
+    // -- graceful scale-in 4→3 ----------------------------------------------
+    let victim = *job.status().unwrap().workers.last().unwrap();
+    job.scale_in(vec![victim]).expect("scale-in");
+    let st = job.status().unwrap();
+    assert_eq!(st.parallelism, 3, "{st:?}");
+    assert!(!st.workers.contains(&victim), "{st:?}");
+    wait_step(&mut job, st.step + 5, Duration::from_secs(60));
+
+    // -- stop: every process exits cleanly ----------------------------------
+    JobControl::stop(&mut job).expect("stop");
+    drop(job);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Some(status) = procs.0[0].try_wait().expect("try_wait serve") {
+            assert!(status.success(), "serve exited with {status}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "serve did not exit after stop");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
