@@ -6,6 +6,11 @@
 //! Absolute numbers depend on the substituted trace; the assertions check
 //! the SHAPE: large mean-JCT reduction, all three quantiles improved,
 //! higher utilization and efficiency.
+//!
+//! `EDL_BENCH_BASELINE=1` additionally writes `BENCH_cluster_sched.json`
+//! (schema + acceptance thresholds checked in at the repo root), so the
+//! perf trajectory covers cluster-level scheduling metrics, not just the
+//! data plane.
 
 use edl::cluster::{ClusterSim, ScaleMode};
 use edl::metrics::JctStats;
@@ -54,7 +59,11 @@ fn main() {
 
     let mut out = Json::obj();
     out.set("tiresias_mean", base.mean)
+        .set("tiresias_median", base.median)
+        .set("tiresias_p95", base.p95)
         .set("elastic_mean", el.mean)
+        .set("elastic_median", el.median)
+        .set("elastic_p95", el.p95)
         .set("mean_reduction_pct", mean_red)
         .set("median_reduction_pct", med_red)
         .set("p95_reduction_pct", p95_red)
@@ -62,7 +71,39 @@ fn main() {
         .set("util_tiresias", util_b)
         .set("util_elastic", util_e)
         .set("cluster_eff_tiresias", eff_b)
-        .set("cluster_eff_elastic", eff_e);
+        .set("cluster_eff_elastic", eff_e)
+        // scheduling-decision volume (the policy/engine split records
+        // every applied decision with its simulation time)
+        .set("decisions_tiresias", base_sim.decision_log.len())
+        .set("decisions_elastic", el_sim.decision_log.len())
+        .set("jobs", trace.len())
+        .set("machines", machines)
+        .set("gpus_per_machine", 8u64);
     let path = write_results("table4_fig12_tiresias", &out).unwrap();
     println!("\nshape checks OK; results -> {}", path.display());
+
+    if std::env::var("EDL_BENCH_BASELINE").is_ok() {
+        let mut acceptance = Json::obj();
+        acceptance
+            .set("all_jobs_finish", true)
+            .set("mean_reduction_pct_min", 30.0)
+            .set("median_reduction_pct_min", 0.0)
+            .set("p95_reduction_pct_min", 30.0)
+            .set("util_elastic_must_exceed_tiresias", true)
+            .set("cluster_eff_elastic_must_exceed_tiresias", true);
+        let mut baseline = Json::obj();
+        baseline
+            .set(
+                "_comment",
+                "Cluster-scheduling trajectory baseline for benches/table4_fig12_tiresias.rs. \
+                 Regenerate with: EDL_BENCH_BASELINE=1 cargo bench --bench table4_fig12_tiresias \
+                 (the bench overwrites this file in the current directory). The acceptance \
+                 thresholds mirror the bench's own shape assertions.",
+            )
+            .set("generated", true)
+            .set("acceptance", acceptance)
+            .set("results", out.clone());
+        std::fs::write("BENCH_cluster_sched.json", baseline.to_string_pretty()).unwrap();
+        println!("baseline -> BENCH_cluster_sched.json");
+    }
 }

@@ -82,6 +82,9 @@ pub struct JobStatus {
     pub throughput_sps: f64,
     pub last_loss: f32,
     pub workers: Vec<NodeId>,
+    /// machine label of each worker, aligned with `workers` — what a
+    /// cluster master needs to return shrunk GPUs to the right machine
+    pub worker_machines: Vec<String>,
 }
 
 /// One level of a `profile()` sweep (Table 1 `profile`, §5.2).
@@ -352,7 +355,8 @@ impl JobStatus {
             .u64(self.epoch)
             .f64(self.throughput_sps)
             .f32(self.last_loss)
-            .u32s(&self.workers);
+            .u32s(&self.workers)
+            .strs(&self.worker_machines);
     }
 
     pub fn decode(d: &mut Dec) -> wire::Result<JobStatus> {
@@ -363,6 +367,7 @@ impl JobStatus {
             throughput_sps: d.f64()?,
             last_loss: d.f32()?,
             workers: d.u32s()?,
+            worker_machines: d.strs()?,
         })
     }
 }
@@ -674,6 +679,7 @@ mod tests {
                 throughput_sps: 512.5,
                 last_loss: 1.25,
                 workers: vec![1, 2, 3, 4],
+                worker_machines: vec!["m0".into(), "m0".into(), "m1".into(), "m1".into()],
             }),
             Response::Profile(vec![ProfileRow {
                 parallelism: 2,

@@ -13,14 +13,20 @@
 //!    model broadcast (edl_stop) before running at the new parallelism;
 //!  * EDL scale-in: the rate drops immediately; overhead is negligible.
 //!
-//! Schedulers plug in through the [`Scheduler`] trait: placement actions
-//! (`start_job` / `preempt_job`) are simulator-level, while parallelism
-//! adjustments on a RUNNING job go through the Table-1 surface — each job
-//! exposes a [`SimJobHandle`] implementing
-//! [`api::JobControl`](crate::api::JobControl), so policy code written
-//! against the simulator also drives live `ElasticTrainer` jobs.
+//! Schedulers plug in through the policy/engine split ([`crate::sched`]):
+//! the simulator implements [`ClusterView`] + [`ClusterCtl`] and applies
+//! each typed [`Decision`] a policy submits — placement decisions
+//! (`Start` / `Preempt`) via the simulator-level `start_job` /
+//! `preempt_job`, parallelism adjustments on a RUNNING job through the
+//! Table-1 surface ([`SimJobHandle`] implements
+//! [`api::JobControl`](crate::api::JobControl)), so policy code written
+//! against the simulator also drives live jobs. Every applied decision is
+//! recorded in [`ClusterSim::decision_log`] with its simulation time:
+//! replaying the log through a fresh simulator reproduces the run's
+//! metrics byte for byte (see `rust/tests/sched_policies.rs`).
 
 use crate::api::{ElasticError, JobControl, JobStatus, ProfileRow, Request};
+use crate::sched::{ClusterCtl, ClusterView, Decision, JobView};
 use crate::coordinator::replay::{scheduled_join_step, ScriptedLeader};
 use crate::coordinator::{Action, TrainerConfig};
 use crate::gpu_sim::{self, Dnn, HwConfig};
@@ -112,8 +118,6 @@ pub struct SimJob {
     pub state: JobState,
     /// GPU·s consumed so far (Tiresias priority input)
     pub attained_gpu_s: f64,
-    /// Tiresias queue index
-    pub queue: usize,
     /// user marked the job inelastic (§5.1)
     pub elastic: bool,
     /// per-machine allocation (machine index -> gpus)
@@ -134,7 +138,6 @@ impl SimJob {
             done_work_s: 0.0,
             state: JobState::Pending,
             attained_gpu_s: 0.0,
-            queue: 0,
             elastic: true,
             placement: Vec::new(),
             finish_s: None,
@@ -185,14 +188,15 @@ pub struct ClusterSim {
     last_sample_s: f64,
     /// max parallelism used for efficiency normalisation
     pub max_p_norm: u32,
+    /// every decision this engine applied, stamped with its simulation
+    /// time — the replayable record of a scheduled run
+    pub decision_log: Vec<(f64, Decision)>,
 }
 
-/// Scheduler plug-in: inspect the cluster and issue actions. Called after
-/// every event (arrival, finish, unpause, sample tick).
-pub trait Scheduler {
-    fn name(&self) -> &'static str;
-    fn replan(&mut self, sim: &mut ClusterSim);
-}
+/// Re-exported policy surface (see [`crate::sched`]): policies read a
+/// [`ClusterView`] and submit [`Decision`]s; this simulator is one engine
+/// implementing it, the live [`master`](crate::master) is the other.
+pub use crate::sched::Scheduler;
 
 impl ClusterSim {
     pub fn new(n_machines: usize, gpus_per_machine: u32, trace: &[TraceJob], mode: ScaleMode) -> ClusterSim {
@@ -213,6 +217,7 @@ impl ClusterSim {
             sample_every_s: 30.0,
             last_sample_s: -1.0,
             max_p_norm: 64,
+            decision_log: Vec::new(),
         }
     }
 
@@ -384,6 +389,62 @@ impl ClusterSim {
         true
     }
 
+    // -- decision application -------------------------------------------------
+
+    /// Apply one typed scheduling decision (the engine half of the
+    /// policy/engine split). Placement decisions use the simulator-level
+    /// actions; parallelism adjustments route through the job's Table-1
+    /// handle, exactly as a live engine would. Applied decisions are
+    /// appended to [`ClusterSim::decision_log`] with the current
+    /// simulation time; rejected ones return false and leave no trace.
+    pub fn apply(&mut self, d: &Decision) -> bool {
+        let ok = match *d {
+            Decision::Start { job, p } => {
+                self.jobs[job].submit_s <= self.now
+                    && matches!(self.jobs[job].state, JobState::Pending)
+                    && self.start_job(job, p)
+            }
+            Decision::Preempt { job } => {
+                if matches!(
+                    self.jobs[job].state,
+                    JobState::Running { .. } | JobState::ScalingOut { .. }
+                ) {
+                    self.preempt_job(job);
+                    true
+                } else {
+                    false
+                }
+            }
+            Decision::Grow { job, to } => {
+                let p = self.jobs[job].current_p();
+                if to <= p {
+                    false
+                } else {
+                    let machines = vec![String::from("sim-gpu"); (to - p) as usize];
+                    self.job(job).scale_out(machines).is_ok()
+                }
+            }
+            Decision::Shrink { job, to } => {
+                let p = self.jobs[job].current_p();
+                if to == 0 || to >= p {
+                    false
+                } else {
+                    // victims are the most recently added workers, the
+                    // same choice ElasticTiresias::shrink_job makes live
+                    let victims: Vec<crate::transport::NodeId> = (to..p).collect();
+                    self.job(job).scale_in(victims).is_ok()
+                }
+            }
+            Decision::Migrate { job, ref remove, ref add } => {
+                self.job(job).migrate(remove.clone(), add.clone()).is_ok()
+            }
+        };
+        if ok {
+            self.decision_log.push((self.now, d.clone()));
+        }
+        ok
+    }
+
     // -- dynamics -------------------------------------------------------------
 
     /// progress rate (work-seconds per wall-second) of job i at `now`
@@ -525,7 +586,13 @@ impl ClusterSim {
     /// Run until every job finishes (or `max_t`), calling the scheduler
     /// after each event.
     pub fn run(&mut self, sched: &mut dyn Scheduler, max_t: f64) {
-        sched.replan(self);
+        self.run_with(|sim| sched.replan(sim), max_t)
+    }
+
+    /// The event loop with an arbitrary replan callback — what `run` uses
+    /// and what decision-log replay / oracle tests drive directly.
+    pub fn run_with<F: FnMut(&mut ClusterSim)>(&mut self, mut replan: F, max_t: f64) {
+        replan(self);
         self.sample_metrics();
         let mut guard = 0u64;
         while let Some(t) = self.next_event_time() {
@@ -538,13 +605,36 @@ impl ClusterSim {
             }
             self.advance_to(t);
             self.handle_transitions();
-            sched.replan(self);
+            replan(self);
             self.handle_transitions(); // a replan may complete/transition
             self.sample_metrics();
             if self.jobs.iter().all(|j| matches!(j.state, JobState::Finished { .. })) {
                 break;
             }
         }
+    }
+
+    /// Replay a recorded decision log (timestamps + decisions, as
+    /// captured in [`ClusterSim::decision_log`]) with no policy in the
+    /// loop. Every decision must apply cleanly at its recorded time;
+    /// returns the number of decisions applied.
+    pub fn replay(&mut self, log: &[(f64, Decision)], max_t: f64) -> usize {
+        let mut next = 0usize;
+        self.run_with(
+            |sim| {
+                while next < log.len() && log[next].0 <= sim.now {
+                    let (t, ref d) = log[next];
+                    assert!(
+                        sim.apply(d),
+                        "replay: decision {d:?} recorded at t={t} rejected at t={}",
+                        sim.now
+                    );
+                    next += 1;
+                }
+            },
+            max_t,
+        );
+        next
     }
 
     pub fn jcts(&self) -> Vec<f64> {
@@ -557,6 +647,75 @@ impl ClusterSim {
     /// victims exactly as they do against a live job.
     pub fn job(&mut self, job: usize) -> SimJobHandle<'_> {
         SimJobHandle { sim: self, job }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the simulator as a scheduling engine
+// ---------------------------------------------------------------------------
+
+impl ClusterView for ClusterSim {
+    fn now_s(&self) -> f64 {
+        self.now
+    }
+    fn n_machines(&self) -> usize {
+        self.n_machines
+    }
+    fn gpus_per_machine(&self) -> u32 {
+        self.hw.gpus_per_machine
+    }
+    fn total_gpus(&self) -> u32 {
+        ClusterSim::total_gpus(self)
+    }
+    fn free_gpus(&self) -> u32 {
+        ClusterSim::free_gpus(self)
+    }
+    fn max_p_norm(&self) -> u32 {
+        self.max_p_norm
+    }
+    fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+    fn job_view(&self, job: usize) -> JobView {
+        let j = &self.jobs[job];
+        let submitted = j.submit_s <= self.now;
+        let (pending, running, finished, adjustable) = match j.state {
+            JobState::Pending => (submitted, false, false, false),
+            JobState::Running { paused_until, .. } => {
+                (false, true, false, paused_until <= self.now)
+            }
+            JobState::ScalingOut { .. } => (false, true, false, false),
+            JobState::Finished { .. } => (false, false, true, false),
+        };
+        JobView {
+            id: j.id,
+            model: j.model,
+            requested_p: j.requested_p,
+            current_p: j.current_p(),
+            global_batch: j.global_batch(),
+            submitted,
+            pending,
+            running,
+            finished,
+            adjustable,
+            elastic: j.elastic,
+            submit_s: j.submit_s,
+            attained_gpu_s: j.attained_gpu_s,
+        }
+    }
+    fn predicted_throughput(&self, job: usize, p: u32) -> f64 {
+        let j = &self.jobs[job];
+        gpu_sim::throughput(j.model, p, j.global_batch(), &self.hw)
+    }
+    fn predicted_efficiency(&self, job: usize, p: u32, max_p: u32) -> f64 {
+        let j = &self.jobs[job];
+        gpu_sim::efficiency(j.model, p, j.global_batch(), max_p, &self.hw)
+    }
+}
+
+impl ClusterCtl for ClusterSim {
+    fn submit(&mut self, d: Decision) -> bool {
+        self.apply(&d)
     }
 }
 
@@ -692,6 +851,14 @@ impl JobControl for SimJobHandle<'_> {
         let rate = self.sim.rate(self.job);
         let j = &self.sim.jobs[self.job];
         let p = j.current_p();
+        // one machine label per virtual worker, in placement order —
+        // mirrors the live leader's per-worker machine report
+        let mut worker_machines = Vec::with_capacity(p as usize);
+        for &(m, g) in &j.placement {
+            for _ in 0..g {
+                worker_machines.push(format!("m{m}"));
+            }
+        }
         Ok(JobStatus {
             parallelism: p,
             // work-seconds completed stands in for the step counter
@@ -700,6 +867,7 @@ impl JobControl for SimJobHandle<'_> {
             throughput_sps: rate * j.global_batch() as f64,
             last_loss: f32::NAN,
             workers: (0..p).collect(),
+            worker_machines,
         })
     }
 
@@ -781,13 +949,10 @@ mod tests {
     #[test]
     fn scale_out_ideal_speeds_up_job() {
         let trace = mk_trace(1, 0.0, 2, 100.0);
-        // scheduler that scales the job to 4 GPUs immediately
-        struct ScaleUp;
-        impl Scheduler for ScaleUp {
-            fn name(&self) -> &'static str {
-                "scale-up"
-            }
-            fn replan(&mut self, sim: &mut ClusterSim) {
+        // replan that scales the job to 4 GPUs immediately
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        sim.run_with(
+            |sim| {
                 for i in sim.pending_jobs() {
                     sim.start_job(i, 2);
                 }
@@ -796,10 +961,9 @@ mod tests {
                         sim.scale_job(i, 4);
                     }
                 }
-            }
-        }
-        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
-        sim.run(&mut ScaleUp, 1e7);
+            },
+            1e7,
+        );
         let jct = sim.jobs[0].jct().unwrap();
         assert!(jct < 100.0, "scaled job should finish faster: {jct}");
         assert_eq!(sim.free_gpus(), 8);
@@ -808,30 +972,26 @@ mod tests {
     #[test]
     fn edl_scale_out_keeps_training_during_prep() {
         let trace = mk_trace(1, 0.0, 2, 200.0);
-        struct ScaleOnce(bool);
-        impl Scheduler for ScaleOnce {
-            fn name(&self) -> &'static str {
-                "once"
+        fn scale_once(sim: &mut ClusterSim, done: &mut bool) {
+            for i in sim.pending_jobs() {
+                sim.start_job(i, 2);
             }
-            fn replan(&mut self, sim: &mut ClusterSim) {
-                for i in sim.pending_jobs() {
-                    sim.start_job(i, 2);
-                }
-                if !self.0 {
-                    for i in sim.running_jobs() {
-                        if let JobState::Running { paused_until, .. } = sim.jobs[i].state {
-                            if paused_until <= sim.now && sim.scale_job(i, 4) {
-                                self.0 = true;
-                            }
+            if !*done {
+                for i in sim.running_jobs() {
+                    if let JobState::Running { paused_until, .. } = sim.jobs[i].state {
+                        if paused_until <= sim.now && sim.scale_job(i, 4) {
+                            *done = true;
                         }
                     }
                 }
             }
         }
         let mut edl = ClusterSim::new(1, 8, &trace, ScaleMode::Edl);
-        edl.run(&mut ScaleOnce(false), 1e7);
+        let mut done = false;
+        edl.run_with(|sim| scale_once(sim, &mut done), 1e7);
         let mut sr = ClusterSim::new(1, 8, &trace, ScaleMode::StopResume);
-        sr.run(&mut ScaleOnce(false), 1e7);
+        let mut done = false;
+        sr.run_with(|sim| scale_once(sim, &mut done), 1e7);
         let jct_edl = edl.jobs[0].jct().unwrap();
         let jct_sr = sr.jobs[0].jct().unwrap();
         assert!(
@@ -844,27 +1004,24 @@ mod tests {
     #[test]
     fn scale_in_releases_gpus() {
         let trace = mk_trace(1, 0.0, 4, 1000.0);
-        struct ShrinkOnce(bool);
-        impl Scheduler for ShrinkOnce {
-            fn name(&self) -> &'static str {
-                "shrink"
-            }
-            fn replan(&mut self, sim: &mut ClusterSim) {
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Edl);
+        let mut shrunk = false;
+        // don't run to completion; stop mid-flight and check allocation
+        sim.run_with(
+            |sim| {
                 for i in sim.pending_jobs() {
                     sim.start_job(i, 4);
                 }
-                if !self.0 && sim.now > 50.0 {
+                if !shrunk && sim.now > 50.0 {
                     for i in sim.running_jobs() {
                         if sim.scale_job(i, 2) {
-                            self.0 = true;
+                            shrunk = true;
                         }
                     }
                 }
-            }
-        }
-        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Edl);
-        // don't run to completion; stop mid-flight and check allocation
-        sim.run(&mut ShrinkOnce(false), 200.0);
+            },
+            200.0,
+        );
         assert_eq!(sim.jobs[0].current_p(), 2);
         assert_eq!(sim.free_gpus(), 6);
     }
@@ -932,6 +1089,35 @@ mod tests {
         // a larger allowance pushes the switch further out
         let lag3 = edl_switch_lag_s(0.1, 2000.0);
         assert!(lag3 > lag, "lag3={lag3} lag={lag}");
+    }
+
+    #[test]
+    fn decisions_apply_log_and_replay() {
+        let trace = mk_trace(2, 0.0, 2, 400.0);
+        let mut sim = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        assert!(sim.apply(&Decision::Start { job: 0, p: 2 }));
+        assert!(sim.apply(&Decision::Grow { job: 0, to: 4 }));
+        assert_eq!(sim.jobs[0].current_p(), 4);
+        assert!(sim.apply(&Decision::Shrink { job: 0, to: 3 }));
+        assert_eq!(sim.jobs[0].current_p(), 3);
+        // rejected decisions leave no trace
+        assert!(!sim.apply(&Decision::Grow { job: 0, to: 2 }), "grow must raise p");
+        assert!(!sim.apply(&Decision::Shrink { job: 0, to: 0 }), "shrink to 0 is invalid");
+        assert!(!sim.apply(&Decision::Start { job: 0, p: 1 }), "job 0 is not pending");
+        assert!(sim.apply(&Decision::Start { job: 1, p: 2 }));
+        assert!(sim.apply(&Decision::Preempt { job: 1 }));
+        assert!(matches!(sim.jobs[1].state, JobState::Pending));
+        assert_eq!(sim.decision_log.len(), 5);
+
+        // a fresh sim replaying the log lands in the identical state
+        let log = sim.decision_log.clone();
+        let mut sim2 = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
+        for (_, d) in &log {
+            assert!(sim2.apply(d));
+        }
+        assert_eq!(sim2.jobs[0].current_p(), 3);
+        assert!(matches!(sim2.jobs[1].state, JobState::Pending));
+        assert_eq!(sim2.decision_log, log);
     }
 
     #[test]

@@ -93,7 +93,7 @@ enum WState {
 }
 
 struct WInfo {
-    #[allow(dead_code)] // recorded for operator visibility / future placement logic
+    /// reported back in `status` so cluster masters can track placement
     machine: String,
     state: WState,
     step_times: std::collections::VecDeque<f64>,
@@ -851,6 +851,13 @@ impl LeaderCore {
                     throughput_sps: self.throughput_sps(),
                     last_loss: self.last_loss,
                     workers: self.active.clone(),
+                    worker_machines: self
+                        .active
+                        .iter()
+                        .map(|id| {
+                            self.workers.get(id).map(|w| w.machine.clone()).unwrap_or_default()
+                        })
+                        .collect(),
                 });
                 self.reply(token, resp);
             }

@@ -32,8 +32,14 @@ pub struct KvServer {
 impl KvServer {
     /// Bind on 127.0.0.1:0 (ephemeral port) and serve until dropped.
     pub fn start() -> std::io::Result<KvServer> {
+        KvServer::start_on("127.0.0.1:0")
+    }
+
+    /// Bind on an explicit address (deployments that need a well-known
+    /// coordination endpoint, e.g. `edl master --kv-listen host:port`).
+    pub fn start_on(bind_addr: &str) -> std::io::Result<KvServer> {
         let core = KvCore::new();
-        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let listener = TcpListener::bind(bind_addr)?;
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
 

@@ -491,11 +491,18 @@ pub struct LeaderHandle {
 impl LeaderHandle {
     /// Blocking Table-1 round-trip into the deploy shell.
     pub fn call(&self, req: Request) -> Response {
+        self.call_with_timeout(req, Duration::from_secs(600))
+    }
+
+    /// [`LeaderHandle::call`] with an explicit reply deadline — pollers
+    /// that watch MANY jobs (the cluster master's per-tick status sweep)
+    /// must never let one wedged leader stall the whole control plane.
+    pub fn call_with_timeout(&self, req: Request, timeout: Duration) -> Response {
         let (rtx, rrx) = channel();
         if self.tx.send(In::Ctl(req, rtx)).is_err() {
             return Response::Err(ElasticError::Aborted("leader gone".into()));
         }
-        rrx.recv_timeout(Duration::from_secs(600))
+        rrx.recv_timeout(timeout)
             .unwrap_or(Response::Err(ElasticError::Aborted("leader timed out".into())))
     }
 

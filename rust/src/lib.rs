@@ -15,9 +15,13 @@
 //!   ([`allreduce`] over [`transport`]), the dynamic data pipeline
 //!   ([`data`]), plus the GPU-cluster simulation substrate the paper's
 //!   evaluation needs: a calibrated device model ([`gpu_sim`]), a
-//!   Philly-like trace generator ([`trace`]), a discrete-event cluster
-//!   simulator ([`cluster`]) and the Tiresias / Elastic-Tiresias
-//!   schedulers ([`schedulers`]) — both driving jobs through [`api`].
+//!   Philly-like trace generator ([`trace`]), and cluster scheduling as
+//!   a policy/engine split ([`sched`]): the Tiresias / Elastic-Tiresias
+//!   policies ([`schedulers`]) emit typed `Decision`s against an abstract
+//!   `ClusterView`, applied by TWO engines — the discrete-event simulator
+//!   ([`cluster`]) and the live multi-job cluster daemon ([`master`]),
+//!   which runs one leader + worker OS processes per job and maps every
+//!   decision onto the Table-1 surface ([`api`]).
 //! * **L2** — a JAX transformer LM lowered once to HLO text
 //!   (`python/compile/model.py`), executed from Rust via PJRT
 //!   ([`runtime`]).
@@ -36,9 +40,11 @@ pub mod coordsvc;
 pub mod data;
 pub mod deploy;
 pub mod gpu_sim;
+pub mod master;
 pub mod metrics;
 pub mod rpc;
 pub mod runtime;
+pub mod sched;
 pub mod schedulers;
 pub mod trace;
 pub mod transport;

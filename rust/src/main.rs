@@ -8,7 +8,13 @@
 //!   worker       one worker process of a --remote job (the true multi-
 //!                process deployment: control over rpc frames, TcpNode
 //!                data plane)
-//!   ctl          Table-1 client: control a served job over TCP
+//!   ctl          Table-1 client: control a served job over TCP (by addr
+//!                or by name via `--job <name> --kv <addr>`)
+//!   master       multi-job cluster daemon: machine inventory, `edl
+//!                submit` queue, one leader + worker processes per job,
+//!                scheduler policies ticking live (also: `master jobs`,
+//!                `master shutdown` client verbs)
+//!   submit       submit a job to a running master
 //!   profile      profile a job over a parallelism range (Table 1 API)
 //!   sim          trace-driven cluster-scheduling simulation
 //!   trace-stats  generate + summarise a synthetic Philly-like trace
@@ -17,13 +23,18 @@
 use edl::api::{JobClient, JobControl, JobServer, Request};
 use edl::cluster::{ClusterSim, ScaleMode};
 use edl::coordinator::{ElasticTrainer, TrainerConfig};
+use edl::coordsvc::KvClient;
 use edl::data::corpus::Corpus;
 use edl::deploy::{LeaderEndpoint, WorkerParams};
+use edl::master::proto::{MasterClient, SubmitSpec};
+use edl::master::{MachineSpec, Master, MasterConfig};
 use edl::metrics::JctStats;
 use edl::runtime::artifacts_dir;
-use edl::schedulers::{ElasticTiresias, Tiresias};
+use edl::sched::Scheduler;
+use edl::schedulers::{ElasticTiresias, FifoScheduler, Tiresias};
 use edl::trace::{self, TraceConfig};
 use edl::util::args::Args;
+use edl::util::json::Json;
 use edl::worker::{Backend, PjrtBackend, SimBackend};
 use std::sync::Arc;
 
@@ -34,20 +45,28 @@ fn main() -> anyhow::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("worker") => cmd_worker(&args),
         Some("ctl") => cmd_ctl(&args),
+        Some("master") => cmd_master(&args),
+        Some("submit") => cmd_submit(&args),
         Some("profile") => cmd_profile(&args),
         Some("sim") => cmd_sim(&args),
         Some("trace-stats") => cmd_trace_stats(&args),
         Some("kv") => cmd_kv(),
         _ => {
             eprintln!(
-                "usage: edl <train|serve|worker|ctl|profile|sim|trace-stats|kv> [--flags]\n\
+                "usage: edl <train|serve|worker|ctl|master|submit|profile|sim|trace-stats|kv> [--flags]\n\
                  \n  train       --config tiny|small --workers N --steps N --agg-batch B --lr F\n\
                  \n  serve       (train flags; prints the job-control address, serves until the job stops)\n\
                  \n              --remote: workers are separate `edl worker` processes;\n\
                  \n              --listen h:p (worker endpoint) --ctl h:p (job-control endpoint)\n\
                  \n  worker      --leader <addr> --machine m1 [--backend sim]\n\
-                 \n  ctl <addr> <status|scale-out|scale-in|migrate|profile|checkpoint|restore|stop>\n\
-                 \n              --machines m1,m1 --workers 3,4|last --path ckpt.bin --min-p 1\n\
+                 \n  ctl <addr>|--job <name> --kv <addr> <status|scale-out|scale-in|migrate|profile|checkpoint|restore|stop>\n\
+                 \n              --machines m1,m1 --workers 3,4|last --path ckpt.bin --min-p 1 [--json]\n\
+                 \n  master      --machines N --gpus G --scheduler elastic-tiresias|tiresias|fifo\n\
+                 \n              --listen h:p --kv-listen h:p --tick-ms 250 (daemon; sim-backend jobs)\n\
+                 \n  master jobs     --master <addr> [--json]   (list jobs on a running master)\n\
+                 \n  master shutdown --master <addr>\n\
+                 \n  submit      --master <addr> --name j1 --gpus N --steps N [--model ResNet50]\n\
+                 \n              [--inelastic] [--params 512] [--compute-ms 5]\n\
                  \n  profile     --config tiny --max-p 4 --min-p 1 --steps-per-level K\n\
                  \n  sim         --scheduler tiresias|elastic-tiresias --jobs N --machines M\n\
                  \n  trace-stats --jobs N\n\
@@ -221,11 +240,35 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Table-1 client over TCP: the scheduler side of the paper's deployment.
+/// The target is an explicit `<addr>` positional, or `--job <name>`
+/// resolved through the coordination KV (`--kv <addr>`) where a master
+/// registers every live job's ctl address under a TTL lease.
 fn cmd_ctl(args: &Args) -> anyhow::Result<()> {
     let pos = args.positional();
-    let addr = pos.get(1).ok_or_else(|| anyhow::anyhow!("ctl: missing <addr>"))?;
-    let verb = pos.get(2).map(String::as_str).unwrap_or("status");
-    let mut client = JobClient::connect(addr)?;
+    let (addr, verb) = match args.opt_str("job") {
+        Some(job) => {
+            let kv_addr = args.str("kv", "127.0.0.1:7501");
+            let mut kv = KvClient::connect(&kv_addr)?;
+            let key = format!("edl/jobs/{job}/ctl");
+            let entry = kv
+                .get(&key)
+                .map_err(|e| anyhow::anyhow!("kv lookup of {key} failed: {e}"))?;
+            let Some((raw, _version)) = entry else {
+                anyhow::bail!("no live job named {job:?} registered in the KV at {kv_addr}");
+            };
+            let addr = String::from_utf8_lossy(&raw).to_string();
+            (addr, pos.get(1).cloned().unwrap_or_else(|| "status".into()))
+        }
+        None => {
+            let addr = pos
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("ctl: missing <addr> (or --job/--kv)"))?
+                .clone();
+            (addr, pos.get(2).cloned().unwrap_or_else(|| "status".into()))
+        }
+    };
+    let verb = verb.as_str();
+    let mut client = JobClient::connect(&addr)?;
     let machines = || -> Vec<String> {
         args.str("machines", "m1").split(',').filter(|s| !s.is_empty()).map(Into::into).collect()
     };
@@ -239,10 +282,35 @@ fn cmd_ctl(args: &Args) -> anyhow::Result<()> {
     match verb {
         "status" => {
             let st = client.status().map_err(anyhow::Error::msg)?;
-            println!(
-                "step={} epoch={} p={} throughput={:.1} samples/s loss={:.4} workers={:?}",
-                st.step, st.epoch, st.parallelism, st.throughput_sps, st.last_loss, st.workers
-            );
+            if args.bool("json", false) {
+                let mut o = Json::obj();
+                o.set("step", st.step)
+                    .set("epoch", st.epoch)
+                    .set("parallelism", st.parallelism)
+                    .set("throughput_sps", st.throughput_sps)
+                    .set(
+                        "loss",
+                        if st.last_loss.is_nan() {
+                            Json::Null
+                        } else {
+                            Json::Num(st.last_loss as f64)
+                        },
+                    )
+                    .set("workers", st.workers.clone())
+                    .set("worker_machines", st.worker_machines.clone());
+                println!("{}", o.to_string_pretty());
+            } else {
+                println!(
+                    "step={} epoch={} p={} throughput={:.1} samples/s loss={:.4} workers={:?} machines={:?}",
+                    st.step,
+                    st.epoch,
+                    st.parallelism,
+                    st.throughput_sps,
+                    st.last_loss,
+                    st.workers,
+                    st.worker_machines
+                );
+            }
         }
         "scale-out" => {
             client.scale_out(machines()).map_err(anyhow::Error::msg)?;
@@ -298,6 +366,113 @@ fn cmd_ctl(args: &Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("ctl: unknown verb {other:?}"),
     }
+    Ok(())
+}
+
+/// The multi-tenant control plane: `edl master` (daemon) plus the
+/// `master jobs` / `master shutdown` client verbs.
+fn cmd_master(args: &Args) -> anyhow::Result<()> {
+    match args.positional().get(1).map(String::as_str) {
+        Some("jobs") => {
+            let addr = args.str("master", "127.0.0.1:7500");
+            let jobs = MasterClient::connect(&addr)?.jobs()?;
+            if args.bool("json", false) {
+                let mut arr = Json::Arr(Vec::new());
+                for j in &jobs {
+                    let mut o = Json::obj();
+                    o.set("name", j.name.clone())
+                        .set("phase", j.phase.clone())
+                        .set("requested_p", j.requested_p)
+                        .set("parallelism", j.parallelism)
+                        .set("step", j.step)
+                        .set("peak_p", j.peak_p)
+                        .set("grow_ops", j.grow_ops)
+                        .set("shrink_ops", j.shrink_ops)
+                        .set("ctl_addr", j.ctl_addr.clone())
+                        .set("machines", j.machines.clone());
+                    arr.push(o);
+                }
+                println!("{}", arr.to_string_pretty());
+            } else {
+                println!(
+                    "{:<12} {:<9} {:>4} {:>4} {:>8} {:>5} {:>5} {:>7}  {}",
+                    "name", "phase", "req", "p", "step", "peak", "grow", "shrink", "ctl"
+                );
+                for j in &jobs {
+                    println!(
+                        "{:<12} {:<9} {:>4} {:>4} {:>8} {:>5} {:>5} {:>7}  {}",
+                        j.name,
+                        j.phase,
+                        j.requested_p,
+                        j.parallelism,
+                        j.step,
+                        j.peak_p,
+                        j.grow_ops,
+                        j.shrink_ops,
+                        j.ctl_addr
+                    );
+                }
+            }
+            Ok(())
+        }
+        Some("shutdown") => {
+            let addr = args.str("master", "127.0.0.1:7500");
+            MasterClient::connect(&addr)?.shutdown()?;
+            println!("master stopped");
+            Ok(())
+        }
+        _ => {
+            let n = args.usize("machines", 2);
+            let gpus = args.usize("gpus", 2) as u32;
+            let sched: Box<dyn Scheduler + Send> =
+                match args.str("scheduler", "elastic-tiresias").as_str() {
+                    "fifo" => Box::new(FifoScheduler),
+                    "tiresias" => Box::new(Tiresias::new(vec![500.0, 10_000.0])),
+                    _ => Box::new(ElasticTiresias::new(
+                        vec![500.0, 10_000.0],
+                        args.usize("waiting-threshold", 10),
+                        args.f64("r", 0.5),
+                    )),
+                };
+            let cfg = MasterConfig {
+                machines: (1..=n)
+                    .map(|i| MachineSpec { name: format!("m{i}"), gpus })
+                    .collect(),
+                tick_ms: args.u64("tick-ms", 250),
+                lease_ttl_ms: args.u64("lease-ttl-ms", 5_000),
+                listen: args.str("listen", "127.0.0.1:0"),
+                kv_listen: args.str("kv-listen", "127.0.0.1:0"),
+                worker_bin: None,
+            };
+            let master = Master::start(cfg, sched)?;
+            println!("master-control {}", master.addr);
+            println!("kv {}", master.kv_addr);
+            println!(
+                "submit jobs with: edl submit --master {} --name job1 --gpus 1 --steps 200",
+                master.addr
+            );
+            master.join();
+            Ok(())
+        }
+    }
+}
+
+/// Submit one job to a running master.
+fn cmd_submit(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str("master", "127.0.0.1:7500");
+    let spec = SubmitSpec {
+        name: args
+            .opt_str("name")
+            .ok_or_else(|| anyhow::anyhow!("submit: missing --name <job>"))?,
+        model: args.str("model", "ResNet50"),
+        gpus: args.usize("gpus", 1) as u32,
+        steps: args.u64("steps", 200),
+        elastic: !args.bool("inelastic", false),
+        params: args.u64("params", 512),
+        compute_ms: args.u64("compute-ms", 5),
+    };
+    let id = MasterClient::connect(&addr)?.submit(&spec)?;
+    println!("submitted job {:?} (id {id})", spec.name);
     Ok(())
 }
 

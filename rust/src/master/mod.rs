@@ -1,0 +1,1002 @@
+//! `edl master` — the live multi-job cluster engine (§2, §6): the second
+//! implementation of the policy/engine split ([`crate::sched`]), next to
+//! the discrete-event simulator.
+//!
+//! ```text
+//!   edl submit ──MasterRequest──►┐
+//!   edl master jobs ────────────►│ control endpoint
+//!                                ▼
+//!                         Master shell thread
+//!             inventory ─ job table ─ policy tick (Scheduler)
+//!                │                │
+//!                │ Decision       │ per job
+//!                ▼                ▼
+//!         api::JobControl   deploy::LeaderEndpoint + JobServer
+//!         (Grow/Shrink via  (one leader per job; `edl worker`
+//!          Table-1 calls)    OS processes on machine slots)
+//! ```
+//!
+//! The master owns the machine inventory (named machines × GPU slots),
+//! accepts `edl submit` jobs, and for each started job spawns a per-job
+//! leader ([`LeaderEndpoint`]) plus one `edl worker` OS process per
+//! granted GPU slot — the PR 3 lobby/Spawn rendezvous does the matching,
+//! so scale-out is stop-free across real process boundaries. A
+//! [`Scheduler`] policy (the SAME objects the simulator runs) ticks on a
+//! clock over the [`ClusterView`] and its [`Decision`]s are applied
+//! through each job's Table-1 handle ([`crate::api::JobControl`]):
+//!
+//!  * `Start` — allocate slots, spawn leader + founder workers;
+//!  * `Grow`  — reserve idle slots, spawn joiner workers, `scale_out`;
+//!  * `Shrink`— `status` → newest workers → `scale_in`, slots returned
+//!    to the machines the workers ran on (graceful, no restart);
+//!  * `Preempt`/`Migrate` — refused: the master NEVER restarts a job
+//!    (the paper's checkpoint/restart baseline is simulator-only).
+//!
+//! Every started job's Table-1 address is registered in the embedded
+//! coordination KV under `edl/jobs/<name>/ctl` with a TTL lease the
+//! master refreshes each tick, so `edl ctl --job <name> --kv <addr>`
+//! resolves live jobs by name.
+
+pub mod proto;
+
+use crate::api::{JobControl, JobControlExt, JobServer, Request, Response};
+use crate::coordinator::TrainerConfig;
+use crate::coordsvc::KvServer;
+use crate::deploy::{config_digest, LeaderEndpoint, LeaderHandle};
+use crate::gpu_sim::{self, Dnn, HwConfig};
+use crate::sched::{ClusterCtl, ClusterView, Decision, JobView, NoopScheduler, Scheduler};
+use crate::schedulers::ElasticTiresias;
+use crate::wire;
+use crate::worker::{Backend, SimBackend};
+use proto::{JobInfo, MasterRequest, MasterResponse, SubmitSpec};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Fixed sim-job data-pipeline shape, shared with `edl worker` defaults so
+/// the [`config_digest`] handshake matches (see `deploy_digest` in
+/// main.rs: samples / data-seed / params / seq / lr).
+const SIM_SAMPLES: u64 = 4096;
+const SIM_DATA_SEED: u64 = 1;
+const SIM_LR: f32 = 0.05;
+/// Aggregate batch of every master-run job (constant under scaling,
+/// §3.1). Used for BOTH the leader's `TrainerConfig` and the policy's
+/// what-if queries, so the analytic model describes the job that runs.
+const SIM_AGG_BATCH: u32 = 32;
+
+/// One named machine with a number of GPU slots.
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub name: String,
+    pub gpus: u32,
+}
+
+pub struct MasterConfig {
+    pub machines: Vec<MachineSpec>,
+    /// scheduler tick period (ms)
+    pub tick_ms: u64,
+    /// TTL of the per-job ctl-address lease in the KV (ms)
+    pub lease_ttl_ms: u64,
+    /// master control endpoint bind address
+    pub listen: String,
+    /// embedded coordination-KV bind address
+    pub kv_listen: String,
+    /// binary to spawn worker processes from (default: this executable)
+    pub worker_bin: Option<PathBuf>,
+}
+
+impl Default for MasterConfig {
+    fn default() -> MasterConfig {
+        MasterConfig {
+            machines: vec![
+                MachineSpec { name: "m1".into(), gpus: 2 },
+                MachineSpec { name: "m2".into(), gpus: 2 },
+            ],
+            tick_ms: 250,
+            lease_ttl_ms: 5_000,
+            listen: "127.0.0.1:0".into(),
+            kv_listen: "127.0.0.1:0".into(),
+            worker_bin: None,
+        }
+    }
+}
+
+/// The running daemon: control endpoint + embedded KV + shell thread.
+pub struct Master {
+    /// control endpoint (`edl submit --master <addr>`)
+    pub addr: String,
+    /// embedded coordination KV (`edl ctl --job <name> --kv <addr>`)
+    pub kv_addr: String,
+    shell: Option<std::thread::JoinHandle<()>>,
+    accept_stop: Arc<AtomicBool>,
+    /// set by Drop so an abandoned Master tears its jobs down instead of
+    /// leaking the shell thread and worker processes
+    halt: Arc<AtomicBool>,
+}
+
+impl Master {
+    pub fn start(
+        cfg: MasterConfig,
+        sched: Box<dyn Scheduler + Send>,
+    ) -> anyhow::Result<Master> {
+        anyhow::ensure!(!cfg.machines.is_empty(), "master needs at least one machine");
+        anyhow::ensure!(
+            cfg.machines.iter().all(|m| m.gpus >= 1),
+            "every machine needs at least one GPU slot"
+        );
+        let kv = KvServer::start_on(&cfg.kv_listen)?;
+        let kv_addr = kv.addr.clone();
+        let listener = TcpListener::bind(&cfg.listen)?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = channel::<MIn>();
+        let accept_stop = Arc::new(AtomicBool::new(false));
+
+        // accept loop: thread per connection, framed request/reply into
+        // the shell's mailbox (the JobServer pattern)
+        {
+            let tx = tx.clone();
+            let stop = accept_stop.clone();
+            std::thread::Builder::new()
+                .name("edl-master-accept".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let tx = tx.clone();
+                                std::thread::spawn(move || {
+                                    let _ = serve_master_conn(stream, tx);
+                                });
+                            }
+                            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn master accept loop");
+        }
+
+        let worker_bin = match cfg.worker_bin.clone() {
+            Some(p) => p,
+            None => std::env::current_exe()?,
+        };
+        let hw = HwConfig {
+            gpus_per_machine: cfg.machines.iter().map(|m| m.gpus).max().unwrap_or(1),
+            ..HwConfig::default()
+        };
+        let free: Vec<u32> = cfg.machines.iter().map(|m| m.gpus).collect();
+        let halt = Arc::new(AtomicBool::new(false));
+        let shell = Shell {
+            machines: cfg.machines,
+            free,
+            hw,
+            jobs: Vec::new(),
+            sched,
+            rx,
+            tx,
+            kv,
+            start: Instant::now(),
+            last_now: 0.0,
+            last_tick: Instant::now(),
+            tick_ms: cfg.tick_ms.max(50),
+            lease_ttl_ms: cfg.lease_ttl_ms.max(500),
+            worker_bin,
+            accept_stop: accept_stop.clone(),
+            halt: halt.clone(),
+        };
+        let shell = std::thread::Builder::new()
+            .name("edl-master".into())
+            .spawn(move || shell.run())
+            .expect("spawn master shell");
+        Ok(Master { addr, kv_addr, shell: Some(shell), accept_stop, halt })
+    }
+
+    /// Block until the master shuts down (a client sent `Shutdown`).
+    pub fn join(mut self) {
+        if let Some(h) = self.shell.take() {
+            let _ = h.join();
+        }
+        self.accept_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Master {
+    fn drop(&mut self) {
+        // an abandoned Master (drop without `join`) must not leak jobs:
+        // the shell polls this flag every ≤100 ms, tears every job down
+        // (stopping leaders, reaping worker processes) and exits
+        self.halt.store(true, Ordering::Relaxed);
+        self.accept_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn serve_master_conn(stream: TcpStream, tx: Sender<MIn>) -> wire::Result<()> {
+    wire::serve_framed(stream, move |raw| {
+        let resp = match MasterRequest::decode(raw) {
+            Ok(req) => {
+                let (rtx, rrx) = channel();
+                if tx.send(MIn::Ctl(req, rtx)).is_ok() {
+                    rrx.recv_timeout(Duration::from_secs(60))
+                        .unwrap_or_else(|_| MasterResponse::Err("master unresponsive".into()))
+                } else {
+                    MasterResponse::Err("master stopped".into())
+                }
+            }
+            Err(e) => MasterResponse::Err(format!("undecodable request: {e}")),
+        };
+        Ok(resp.encode())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// shell
+// ---------------------------------------------------------------------------
+
+/// Which asynchronous Table-1 operation an executor thread ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Grow,
+    Shrink,
+    Stop,
+}
+
+/// Outcome of an asynchronous Table-1 op, reported by its executor thread.
+struct OpDone {
+    job: usize,
+    op: Op,
+    ok: bool,
+    /// Shrink: machine label per returned GPU slot
+    freed: Vec<String>,
+    /// Shrink: how many workers the committed scale-in removed (the
+    /// inventory reconciles against this even if labels are missing)
+    removed: usize,
+    /// Grow: slots to un-reserve on failure
+    undo: Vec<(usize, u32)>,
+    /// Grow: first index of the joiner processes spawned for this op
+    child_from: usize,
+    err: String,
+}
+
+enum MIn {
+    Ctl(MasterRequest, Sender<MasterResponse>),
+    Done(OpDone),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Pending,
+    Running,
+    Stopping,
+    Finished,
+}
+
+struct LiveJob {
+    spec: SubmitSpec,
+    model: Dnn,
+    submit_s: f64,
+    phase: Phase,
+    endpoint: Option<LeaderEndpoint>,
+    ctl: Option<JobServer<LeaderHandle>>,
+    handle: Option<LeaderHandle>,
+    ctl_addr: String,
+    children: Vec<Child>,
+    /// GPUs held per machine index
+    held: Vec<u32>,
+    /// a Table-1 op is in flight on an executor thread (§3.1 guard
+    /// surfaced to the policy as `adjustable = false`)
+    busy: bool,
+    /// last `status` round-trip succeeded
+    status_ok: bool,
+    last_step: u64,
+    peak_p: u32,
+    grow_ops: u32,
+    shrink_ops: u32,
+    attained_gpu_s: f64,
+}
+
+impl LiveJob {
+    fn held_p(&self) -> u32 {
+        self.held.iter().sum()
+    }
+}
+
+struct Shell {
+    machines: Vec<MachineSpec>,
+    free: Vec<u32>,
+    hw: HwConfig,
+    jobs: Vec<LiveJob>,
+    sched: Box<dyn Scheduler + Send>,
+    rx: Receiver<MIn>,
+    tx: Sender<MIn>,
+    kv: KvServer,
+    start: Instant,
+    last_now: f64,
+    last_tick: Instant,
+    tick_ms: u64,
+    lease_ttl_ms: u64,
+    worker_bin: PathBuf,
+    accept_stop: Arc<AtomicBool>,
+    halt: Arc<AtomicBool>,
+}
+
+impl Shell {
+    fn run(mut self) {
+        let poll = Duration::from_millis(self.tick_ms.min(100));
+        let mut quit = false;
+        while !quit && !self.halt.load(Ordering::Relaxed) {
+            match self.rx.recv_timeout(poll) {
+                Ok(MIn::Ctl(req, reply)) => {
+                    let (resp, q) = self.handle_ctl(req);
+                    let _ = reply.send(resp);
+                    quit = q;
+                }
+                Ok(MIn::Done(done)) => self.finish_op(done),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            if !quit && self.last_tick.elapsed() >= Duration::from_millis(self.tick_ms) {
+                self.last_tick = Instant::now();
+                self.tick();
+            }
+        }
+        self.teardown();
+        self.accept_stop.store(true, Ordering::Relaxed);
+    }
+
+    fn now_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn machine_ix(&self, name: &str) -> Option<usize> {
+        self.machines.iter().position(|m| m.name == name)
+    }
+
+    // -- inventory ----------------------------------------------------------
+
+    /// Reserve `p` GPU slots, most-free machines first (the simulator's
+    /// packing). Returns None (and reserves nothing) if impossible.
+    fn allocate(&mut self, p: u32) -> Option<Vec<(usize, u32)>> {
+        if p == 0 || p > self.free.iter().sum::<u32>() {
+            return None;
+        }
+        let mut need = p;
+        let mut order: Vec<usize> = (0..self.machines.len()).collect();
+        order.sort_by_key(|&m| std::cmp::Reverse(self.free[m]));
+        let mut slots = Vec::new();
+        for m in order {
+            if need == 0 {
+                break;
+            }
+            let take = self.free[m].min(need);
+            if take > 0 {
+                self.free[m] -= take;
+                slots.push((m, take));
+                need -= take;
+            }
+        }
+        debug_assert_eq!(need, 0);
+        Some(slots)
+    }
+
+    fn release(&mut self, slots: &[(usize, u32)]) {
+        for &(m, g) in slots {
+            self.free[m] += g;
+        }
+    }
+
+    // -- control requests ---------------------------------------------------
+
+    fn handle_ctl(&mut self, req: MasterRequest) -> (MasterResponse, bool) {
+        match req {
+            MasterRequest::Submit(spec) => {
+                if spec.name.is_empty() {
+                    return (MasterResponse::Err("job name must not be empty".into()), false);
+                }
+                if self.jobs.iter().any(|j| j.spec.name == spec.name) {
+                    return (
+                        MasterResponse::Err(format!("job {:?} already exists", spec.name)),
+                        false,
+                    );
+                }
+                let total: u32 = self.machines.iter().map(|m| m.gpus).sum();
+                if spec.gpus == 0 || spec.gpus > total {
+                    return (
+                        MasterResponse::Err(format!(
+                            "requested {} GPUs, cluster has {total}",
+                            spec.gpus
+                        )),
+                        false,
+                    );
+                }
+                let model = Dnn::by_name(&spec.model).unwrap_or(Dnn::ResNet50);
+                let n_machines = self.machines.len();
+                let submit_s = self.now_s();
+                eprintln!("[master] submitted job {:?} ({} GPUs)", spec.name, spec.gpus);
+                self.jobs.push(LiveJob {
+                    spec,
+                    model,
+                    submit_s,
+                    phase: Phase::Pending,
+                    endpoint: None,
+                    ctl: None,
+                    handle: None,
+                    ctl_addr: String::new(),
+                    children: Vec::new(),
+                    held: vec![0; n_machines],
+                    busy: false,
+                    status_ok: false,
+                    last_step: 0,
+                    peak_p: 0,
+                    grow_ops: 0,
+                    shrink_ops: 0,
+                    attained_gpu_s: 0.0,
+                });
+                (MasterResponse::Submitted { job: self.jobs.len() as u64 - 1 }, false)
+            }
+            MasterRequest::Jobs => (MasterResponse::Jobs(self.job_infos()), false),
+            MasterRequest::Shutdown => (MasterResponse::Ok, true),
+        }
+    }
+
+    fn job_infos(&self) -> Vec<JobInfo> {
+        self.jobs
+            .iter()
+            .map(|j| JobInfo {
+                name: j.spec.name.clone(),
+                phase: match j.phase {
+                    Phase::Pending => "pending",
+                    Phase::Running => "running",
+                    Phase::Stopping => "stopping",
+                    Phase::Finished => "finished",
+                }
+                .to_string(),
+                requested_p: j.spec.gpus,
+                parallelism: j.held_p(),
+                step: j.last_step,
+                peak_p: j.peak_p,
+                grow_ops: j.grow_ops,
+                shrink_ops: j.shrink_ops,
+                ctl_addr: j.ctl_addr.clone(),
+                machines: j
+                    .held
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(m, &g)| {
+                        std::iter::repeat(self.machines[m].name.clone()).take(g as usize)
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    // -- the tick: poll jobs, refresh leases, run the policy ----------------
+
+    fn tick(&mut self) {
+        let now = self.now_s();
+        let dt = (now - self.last_now).max(0.0);
+        self.last_now = now;
+        for ix in 0..self.jobs.len() {
+            let held = self.jobs[ix].held_p();
+            if held > 0 {
+                self.jobs[ix].attained_gpu_s += held as f64 * dt;
+            }
+            if !matches!(self.jobs[ix].phase, Phase::Running) || self.jobs[ix].busy {
+                continue;
+            }
+            // reap worker processes that exited gracefully (scale-in)
+            self.jobs[ix].children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+            let Some(handle) = self.jobs[ix].handle.clone() else { continue };
+            // short deadline: one wedged leader must not stall the sweep,
+            // the lease refresh, or the policy tick for every other job
+            match handle.call_with_timeout(Request::Status, Duration::from_secs(5)) {
+                Response::Status(st) => {
+                    let done = {
+                        let j = &mut self.jobs[ix];
+                        if st.step < j.last_step {
+                            eprintln!(
+                                "[master] WARNING job {:?} step went backwards: {} -> {}",
+                                j.spec.name, j.last_step, st.step
+                            );
+                        }
+                        j.last_step = j.last_step.max(st.step);
+                        j.status_ok = true;
+                        j.last_step >= j.spec.steps
+                    };
+                    if done {
+                        self.begin_stop(ix);
+                    }
+                }
+                _ => self.jobs[ix].status_ok = false,
+            }
+        }
+        self.refresh_leases();
+        // the policy tick: the SAME Scheduler objects the simulator runs
+        let mut sched: Box<dyn Scheduler + Send> =
+            std::mem::replace(&mut self.sched, Box::new(NoopScheduler));
+        sched.replan(self);
+        self.sched = sched;
+    }
+
+    fn lease_key(name: &str) -> String {
+        format!("edl/jobs/{name}/ctl")
+    }
+
+    fn register_lease(&self, ix: usize) {
+        let j = &self.jobs[ix];
+        if j.ctl_addr.is_empty() {
+            return;
+        }
+        self.kv.core().put(
+            crate::util::now_ms() as u64,
+            &Self::lease_key(&j.spec.name),
+            j.ctl_addr.as_bytes(),
+            Some(self.lease_ttl_ms),
+        );
+    }
+
+    fn refresh_leases(&self) {
+        for ix in 0..self.jobs.len() {
+            if matches!(self.jobs[ix].phase, Phase::Running | Phase::Stopping) {
+                self.register_lease(ix);
+            }
+        }
+    }
+
+    // -- decision application ------------------------------------------------
+
+    fn spawn_worker(
+        &self,
+        leader_addr: &str,
+        machine: &str,
+        spec: &SubmitSpec,
+    ) -> std::io::Result<Child> {
+        let args: Vec<String> = vec![
+            "worker".into(),
+            "--leader".into(),
+            leader_addr.into(),
+            "--machine".into(),
+            machine.into(),
+            "--backend".into(),
+            "sim".into(),
+            "--params".into(),
+            spec.params.to_string(),
+            "--compute-ms".into(),
+            spec.compute_ms.to_string(),
+            "--samples".into(),
+            SIM_SAMPLES.to_string(),
+            "--data-seed".into(),
+            SIM_DATA_SEED.to_string(),
+            "--lr".into(),
+            format!("{SIM_LR}"),
+        ];
+        Command::new(&self.worker_bin)
+            .args(&args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+    }
+
+    /// `Start`: allocate slots, stand up the per-job leader + Table-1
+    /// server, spawn founder worker processes, register the ctl lease.
+    fn start_live_job(&mut self, ix: usize, p: u32) -> bool {
+        if !matches!(self.jobs[ix].phase, Phase::Pending) {
+            return false;
+        }
+        let Some(slots) = self.allocate(p) else { return false };
+        let spec = self.jobs[ix].spec.clone();
+        let backend = SimBackend {
+            compute_ms: spec.compute_ms,
+            ..SimBackend::fast(spec.params as usize)
+        };
+        let digest = config_digest(
+            SIM_SAMPLES,
+            SIM_DATA_SEED,
+            backend.param_count(),
+            backend.seq_len(),
+            SIM_LR,
+        );
+        let cfg = TrainerConfig {
+            agg_batch: SIM_AGG_BATCH,
+            lr: SIM_LR,
+            approx_recovery: true,
+            failure_timeout: Duration::from_secs(20),
+            ..Default::default()
+        };
+        let endpoint = match LeaderEndpoint::start(
+            cfg,
+            Arc::new(backend),
+            SIM_SAMPLES,
+            p as usize,
+            "127.0.0.1:0",
+            digest,
+        ) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("[master] job {:?} leader failed to start: {e}", spec.name);
+                self.release(&slots);
+                return false;
+            }
+        };
+        let ctl = match JobServer::start_on("127.0.0.1:0", endpoint.handle()) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[master] job {:?} ctl server failed: {e}", spec.name);
+                self.release(&slots);
+                return false;
+            }
+        };
+        let handle = endpoint.handle();
+        let leader_addr = endpoint.addr.clone();
+        let ctl_addr = ctl.addr.clone();
+        let mut children = Vec::new();
+        for &(m, g) in &slots {
+            let machine = self.machines[m].name.clone();
+            for _ in 0..g {
+                match self.spawn_worker(&leader_addr, &machine, &spec) {
+                    Ok(c) => children.push(c),
+                    Err(e) => eprintln!(
+                        "[master] job {:?} worker spawn on {machine} failed: {e}",
+                        spec.name
+                    ),
+                }
+            }
+        }
+        eprintln!(
+            "[master] job {:?} started: p={p} ctl={ctl_addr} leader={leader_addr}",
+            spec.name
+        );
+        {
+            let j = &mut self.jobs[ix];
+            for &(m, g) in &slots {
+                j.held[m] += g;
+            }
+            j.endpoint = Some(endpoint);
+            j.ctl = Some(ctl);
+            j.handle = Some(handle);
+            j.ctl_addr = ctl_addr;
+            j.children = children;
+            j.phase = Phase::Running;
+            j.peak_p = p;
+            j.status_ok = false;
+        }
+        self.register_lease(ix);
+        true
+    }
+
+    /// `Grow`: reserve idle slots, spawn joiner processes into the
+    /// leader's lobby, commit with ONE Table-1 `scale_out` (stop-free).
+    fn grow_live(&mut self, ix: usize, to: u32) -> bool {
+        let cur = self.jobs[ix].held_p();
+        if !matches!(self.jobs[ix].phase, Phase::Running)
+            || self.jobs[ix].busy
+            || to <= cur
+        {
+            return false;
+        }
+        let Some(handle) = self.jobs[ix].handle.clone() else { return false };
+        let Some(leader_addr) = self.jobs[ix].endpoint.as_ref().map(|e| e.addr.clone()) else {
+            return false;
+        };
+        let Some(slots) = self.allocate(to - cur) else { return false };
+        let spec = self.jobs[ix].spec.clone();
+        let child_from = self.jobs[ix].children.len();
+        // only slots whose joiner PROCESS actually spawned take part in
+        // the scale-out; a failed fork must not make the leader wait for
+        // a worker that will never connect
+        let mut labels: Vec<String> = Vec::new();
+        let mut used: Vec<u32> = vec![0; self.machines.len()];
+        for &(m, g) in &slots {
+            let machine = self.machines[m].name.clone();
+            for _ in 0..g {
+                match self.spawn_worker(&leader_addr, &machine, &spec) {
+                    Ok(c) => {
+                        self.jobs[ix].children.push(c);
+                        labels.push(machine.clone());
+                        used[m] += 1;
+                    }
+                    Err(e) => eprintln!(
+                        "[master] job {:?} joiner spawn on {machine} failed: {e}",
+                        spec.name
+                    ),
+                }
+            }
+        }
+        // give back the slots that never got a worker process
+        let unused: Vec<(usize, u32)> = slots
+            .iter()
+            .filter(|&&(m, g)| g > used[m])
+            .map(|&(m, g)| (m, g - used[m]))
+            .collect();
+        self.release(&unused);
+        if labels.is_empty() {
+            return false;
+        }
+        let reserved: Vec<(usize, u32)> = used
+            .iter()
+            .enumerate()
+            .filter(|&(_, &g)| g > 0)
+            .map(|(m, &g)| (m, g))
+            .collect();
+        for &(m, g) in &reserved {
+            self.jobs[ix].held[m] += g;
+        }
+        self.jobs[ix].busy = true;
+        let tx = self.tx.clone();
+        std::thread::spawn(move || {
+            let mut h = handle;
+            let r = ElasticTiresias::expand_job(&mut h, labels);
+            let ok = r.is_ok();
+            let err = r.err().map(|e| e.to_string()).unwrap_or_default();
+            let _ = tx.send(MIn::Done(OpDone {
+                job: ix,
+                op: Op::Grow,
+                ok,
+                freed: Vec::new(),
+                removed: 0,
+                undo: reserved,
+                child_from,
+                err,
+            }));
+        });
+        true
+    }
+
+    /// `Shrink`: graceful scale-in of the newest workers; their machine
+    /// labels (from Table-1 `status`) say which slots come back.
+    fn shrink_live(&mut self, ix: usize, to: u32) -> bool {
+        let cur = self.jobs[ix].held_p();
+        if !matches!(self.jobs[ix].phase, Phase::Running)
+            || self.jobs[ix].busy
+            || to == 0
+            || to >= cur
+        {
+            return false;
+        }
+        let Some(handle) = self.jobs[ix].handle.clone() else { return false };
+        let n = (cur - to) as usize;
+        self.jobs[ix].busy = true;
+        let tx = self.tx.clone();
+        std::thread::spawn(move || {
+            let mut h = handle;
+            let (ok, freed, err) = match h.status() {
+                Ok(st) if st.workers.len() > n => {
+                    let k = st.workers.len() - n;
+                    let victims = st.workers[k..].to_vec();
+                    let freed: Vec<String> =
+                        st.worker_machines.get(k..).map(|s| s.to_vec()).unwrap_or_default();
+                    match h.scale_in_retry(victims, Duration::from_secs(30)) {
+                        Ok(()) => (true, freed, String::new()),
+                        Err(e) => (false, Vec::new(), e.to_string()),
+                    }
+                }
+                Ok(_) => (false, Vec::new(), "shrink would remove every worker".into()),
+                Err(e) => (false, Vec::new(), e.to_string()),
+            };
+            let _ = tx.send(MIn::Done(OpDone {
+                job: ix,
+                op: Op::Shrink,
+                ok,
+                freed,
+                removed: n,
+                undo: Vec::new(),
+                child_from: usize::MAX,
+                err,
+            }));
+        });
+        true
+    }
+
+    /// The job reached its step target: graceful Table-1 `stop`.
+    fn begin_stop(&mut self, ix: usize) {
+        let Some(handle) = self.jobs[ix].handle.clone() else { return };
+        self.jobs[ix].busy = true;
+        self.jobs[ix].phase = Phase::Stopping;
+        eprintln!(
+            "[master] job {:?} reached step {} — stopping",
+            self.jobs[ix].spec.name, self.jobs[ix].last_step
+        );
+        let tx = self.tx.clone();
+        std::thread::spawn(move || {
+            let resp = handle.call(Request::Stop);
+            let ok = matches!(resp, Response::Ok);
+            let err = if ok { String::new() } else { format!("{resp:?}") };
+            let _ = tx.send(MIn::Done(OpDone {
+                job: ix,
+                op: Op::Stop,
+                ok,
+                freed: Vec::new(),
+                removed: 0,
+                undo: Vec::new(),
+                child_from: usize::MAX,
+                err,
+            }));
+        });
+    }
+
+    fn finish_op(&mut self, done: OpDone) {
+        let OpDone { job, op, ok, freed, removed, undo, child_from, err } = done;
+        self.jobs[job].busy = false;
+        let name = self.jobs[job].spec.name.clone();
+        match op {
+            Op::Grow => {
+                if ok {
+                    let held = self.jobs[job].held_p();
+                    self.jobs[job].grow_ops += 1;
+                    self.jobs[job].peak_p = self.jobs[job].peak_p.max(held);
+                    eprintln!("[master] job {name:?} grew to {held} GPUs (stop-free)");
+                } else {
+                    for &(m, g) in &undo {
+                        self.free[m] += g;
+                        self.jobs[job].held[m] = self.jobs[job].held[m].saturating_sub(g);
+                    }
+                    if child_from < self.jobs[job].children.len() {
+                        let mut tail = self.jobs[job].children.split_off(child_from);
+                        for c in &mut tail {
+                            let _ = c.kill();
+                            let _ = c.wait();
+                        }
+                    }
+                    eprintln!("[master] job {name:?} grow failed: {err}");
+                }
+            }
+            Op::Shrink => {
+                if ok {
+                    let mut returned = 0usize;
+                    for label in &freed {
+                        if let Some(m) = self.machine_ix(label) {
+                            if self.jobs[job].held[m] > 0 {
+                                self.free[m] += 1;
+                                self.jobs[job].held[m] -= 1;
+                                returned += 1;
+                            }
+                        }
+                    }
+                    // the scale-in committed `removed` workers: if some
+                    // labels were missing/unresolvable, reconcile against
+                    // the count so the inventory never leaks slots
+                    while returned < removed {
+                        let Some(m) = (0..self.machines.len())
+                            .find(|&m| self.jobs[job].held[m] > 0)
+                        else {
+                            break;
+                        };
+                        self.free[m] += 1;
+                        self.jobs[job].held[m] -= 1;
+                        returned += 1;
+                    }
+                    self.jobs[job].shrink_ops += 1;
+                    eprintln!(
+                        "[master] job {name:?} shrank to {} GPUs (graceful)",
+                        self.jobs[job].held_p()
+                    );
+                } else {
+                    eprintln!("[master] job {name:?} shrink failed: {err}");
+                }
+            }
+            Op::Stop => {
+                if !ok {
+                    eprintln!("[master] job {name:?} stop reported: {err}");
+                }
+                self.complete_job(job);
+            }
+        }
+    }
+
+    /// Tear one job down: return its slots, reap its processes, join the
+    /// per-job leader + ctl server, drop the KV lease.
+    fn complete_job(&mut self, ix: usize) {
+        let held: Vec<(usize, u32)> = self.jobs[ix]
+            .held
+            .iter()
+            .enumerate()
+            .filter(|&(_, &g)| g > 0)
+            .map(|(m, &g)| (m, g))
+            .collect();
+        self.release(&held);
+        for g in self.jobs[ix].held.iter_mut() {
+            *g = 0;
+        }
+        let mut children = std::mem::take(&mut self.jobs[ix].children);
+        for c in &mut children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        self.jobs[ix].handle = None;
+        if let Some(server) = self.jobs[ix].ctl.take() {
+            let _ = server.shutdown();
+        }
+        if let Some(endpoint) = self.jobs[ix].endpoint.take() {
+            let _ = endpoint.join();
+        }
+        self.kv.core().delete(&Self::lease_key(&self.jobs[ix].spec.name));
+        self.jobs[ix].phase = Phase::Finished;
+        eprintln!(
+            "[master] job {:?} finished at step {}",
+            self.jobs[ix].spec.name, self.jobs[ix].last_step
+        );
+    }
+
+    fn teardown(&mut self) {
+        for ix in 0..self.jobs.len() {
+            if matches!(self.jobs[ix].phase, Phase::Running | Phase::Stopping) {
+                if let Some(handle) = self.jobs[ix].handle.clone() {
+                    let _ = handle.call(Request::Stop);
+                }
+                self.complete_job(ix);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the master as a scheduling engine
+// ---------------------------------------------------------------------------
+
+impl ClusterView for Shell {
+    fn now_s(&self) -> f64 {
+        Shell::now_s(self)
+    }
+    fn n_machines(&self) -> usize {
+        self.machines.len()
+    }
+    fn gpus_per_machine(&self) -> u32 {
+        self.hw.gpus_per_machine
+    }
+    fn total_gpus(&self) -> u32 {
+        self.machines.iter().map(|m| m.gpus).sum()
+    }
+    fn free_gpus(&self) -> u32 {
+        self.free.iter().sum()
+    }
+    fn max_p_norm(&self) -> u32 {
+        64
+    }
+    fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+    fn job_view(&self, job: usize) -> JobView {
+        let j = &self.jobs[job];
+        let running = matches!(j.phase, Phase::Running);
+        JobView {
+            id: job as u64,
+            model: j.model,
+            requested_p: j.spec.gpus,
+            current_p: if running { j.held_p() } else { 0 },
+            global_batch: SIM_AGG_BATCH,
+            submitted: true,
+            pending: matches!(j.phase, Phase::Pending),
+            running,
+            // stopping jobs are out of the policy's hands
+            finished: matches!(j.phase, Phase::Stopping | Phase::Finished),
+            adjustable: running && !j.busy && j.status_ok && j.last_step >= 1,
+            elastic: j.spec.elastic,
+            submit_s: j.submit_s,
+            attained_gpu_s: j.attained_gpu_s,
+        }
+    }
+    fn predicted_throughput(&self, job: usize, p: u32) -> f64 {
+        gpu_sim::throughput(self.jobs[job].model, p, SIM_AGG_BATCH, &self.hw)
+    }
+    fn predicted_efficiency(&self, job: usize, p: u32, max_p: u32) -> f64 {
+        gpu_sim::efficiency(self.jobs[job].model, p, SIM_AGG_BATCH, max_p, &self.hw)
+    }
+}
+
+impl ClusterCtl for Shell {
+    fn submit(&mut self, d: Decision) -> bool {
+        match d {
+            Decision::Start { job, p } => self.start_live_job(job, p),
+            Decision::Grow { job, to } => self.grow_live(job, to),
+            Decision::Shrink { job, to } => self.shrink_live(job, to),
+            // the live master NEVER restarts a job; checkpoint/restart
+            // scheduling is the simulator-only baseline
+            Decision::Preempt { .. } | Decision::Migrate { .. } => false,
+        }
+    }
+}

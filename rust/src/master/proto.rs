@@ -1,0 +1,297 @@
+//! Wire protocol of the master control endpoint: what `edl submit` and
+//! `edl master jobs` speak to the `edl master` daemon. Framed with the
+//! shared [`crate::wire`] codec, same as every other control socket.
+
+use crate::wire::{self, Dec, Enc, WireError};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+/// A job submission (`edl submit`): what to run and when it is done.
+/// Jobs run on the artifact-free simulated device backend, so a master
+/// smoke cluster needs nothing but the `edl` binary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitSpec {
+    /// unique job name (`edl ctl --job <name>` resolves it via the KV)
+    pub name: String,
+    /// DNN class for the analytic what-if model (`Dnn::by_name`;
+    /// unknown names fall back to ResNet50)
+    pub model: String,
+    /// requested parallelism (GPUs)
+    pub gpus: u32,
+    /// the job completes once its step counter reaches this
+    pub steps: u64,
+    /// may the scheduler grow/shrink it (§5.1)
+    pub elastic: bool,
+    /// simulated-backend parameter count
+    pub params: u64,
+    /// simulated-backend compute delay (ms per 32-sample batch)
+    pub compute_ms: u64,
+}
+
+impl Default for SubmitSpec {
+    fn default() -> SubmitSpec {
+        SubmitSpec {
+            name: String::new(),
+            model: "ResNet50".into(),
+            gpus: 1,
+            steps: 200,
+            elastic: true,
+            params: 512,
+            compute_ms: 5,
+        }
+    }
+}
+
+/// One row of `edl master jobs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobInfo {
+    pub name: String,
+    /// "pending" | "running" | "stopping" | "finished"
+    pub phase: String,
+    pub requested_p: u32,
+    /// GPUs currently held
+    pub parallelism: u32,
+    pub step: u64,
+    /// high-water parallelism (shows R2 expansion happened)
+    pub peak_p: u32,
+    pub grow_ops: u32,
+    pub shrink_ops: u32,
+    /// the job leader's Table-1 TCP endpoint
+    pub ctl_addr: String,
+    /// machine label per held GPU
+    pub machines: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum MasterRequest {
+    Submit(SubmitSpec),
+    Jobs,
+    Shutdown,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum MasterResponse {
+    Submitted { job: u64 },
+    Jobs(Vec<JobInfo>),
+    Ok,
+    Err(String),
+}
+
+impl SubmitSpec {
+    fn encode_into(&self, e: &mut Enc) {
+        e.str(&self.name)
+            .str(&self.model)
+            .u32(self.gpus)
+            .u64(self.steps)
+            .bool(self.elastic)
+            .u64(self.params)
+            .u64(self.compute_ms);
+    }
+
+    fn decode_from(d: &mut Dec) -> wire::Result<SubmitSpec> {
+        Ok(SubmitSpec {
+            name: d.str()?,
+            model: d.str()?,
+            gpus: d.u32()?,
+            steps: d.u64()?,
+            elastic: d.bool()?,
+            params: d.u64()?,
+            compute_ms: d.u64()?,
+        })
+    }
+}
+
+impl JobInfo {
+    fn encode_into(&self, e: &mut Enc) {
+        e.str(&self.name)
+            .str(&self.phase)
+            .u32(self.requested_p)
+            .u32(self.parallelism)
+            .u64(self.step)
+            .u32(self.peak_p)
+            .u32(self.grow_ops)
+            .u32(self.shrink_ops)
+            .str(&self.ctl_addr)
+            .strs(&self.machines);
+    }
+
+    fn decode_from(d: &mut Dec) -> wire::Result<JobInfo> {
+        Ok(JobInfo {
+            name: d.str()?,
+            phase: d.str()?,
+            requested_p: d.u32()?,
+            parallelism: d.u32()?,
+            step: d.u64()?,
+            peak_p: d.u32()?,
+            grow_ops: d.u32()?,
+            shrink_ops: d.u32()?,
+            ctl_addr: d.str()?,
+            machines: d.strs()?,
+        })
+    }
+}
+
+impl MasterRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            MasterRequest::Submit(spec) => {
+                e.u8(1);
+                spec.encode_into(&mut e);
+            }
+            MasterRequest::Jobs => {
+                e.u8(2);
+            }
+            MasterRequest::Shutdown => {
+                e.u8(3);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> wire::Result<MasterRequest> {
+        let mut d = Dec::new(buf);
+        match d.u8()? {
+            1 => Ok(MasterRequest::Submit(SubmitSpec::decode_from(&mut d)?)),
+            2 => Ok(MasterRequest::Jobs),
+            3 => Ok(MasterRequest::Shutdown),
+            tag => Err(WireError::BadTag { tag: tag as u32, ty: "master::MasterRequest" }),
+        }
+    }
+}
+
+impl MasterResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            MasterResponse::Submitted { job } => {
+                e.u8(1).u64(*job);
+            }
+            MasterResponse::Jobs(jobs) => {
+                e.u8(2).u32(jobs.len() as u32);
+                for j in jobs {
+                    j.encode_into(&mut e);
+                }
+            }
+            MasterResponse::Ok => {
+                e.u8(3);
+            }
+            MasterResponse::Err(m) => {
+                e.u8(4).str(m);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> wire::Result<MasterResponse> {
+        let mut d = Dec::new(buf);
+        match d.u8()? {
+            1 => Ok(MasterResponse::Submitted { job: d.u64()? }),
+            2 => {
+                let n = d.u32()? as usize;
+                let jobs =
+                    (0..n).map(|_| JobInfo::decode_from(&mut d)).collect::<wire::Result<_>>()?;
+                Ok(MasterResponse::Jobs(jobs))
+            }
+            3 => Ok(MasterResponse::Ok),
+            4 => Ok(MasterResponse::Err(d.str()?)),
+            tag => Err(WireError::BadTag { tag: tag as u32, ty: "master::MasterResponse" }),
+        }
+    }
+}
+
+/// Blocking TCP client for the master control endpoint.
+pub struct MasterClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl MasterClient {
+    pub fn connect(addr: &str) -> std::io::Result<MasterClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(MasterClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    pub fn call(&mut self, req: &MasterRequest) -> anyhow::Result<MasterResponse> {
+        wire::write_frame(&mut self.writer, &req.encode())
+            .map_err(|e| anyhow::anyhow!("master request failed: {e}"))?;
+        let raw = wire::read_frame(&mut self.reader)
+            .map_err(|e| anyhow::anyhow!("master reply failed: {e}"))?;
+        MasterResponse::decode(&raw).map_err(|e| anyhow::anyhow!("bad master reply: {e}"))
+    }
+
+    pub fn submit(&mut self, spec: &SubmitSpec) -> anyhow::Result<u64> {
+        match self.call(&MasterRequest::Submit(spec.clone()))? {
+            MasterResponse::Submitted { job } => Ok(job),
+            MasterResponse::Err(m) => anyhow::bail!("submit rejected: {m}"),
+            other => anyhow::bail!("unexpected submit reply: {other:?}"),
+        }
+    }
+
+    pub fn jobs(&mut self) -> anyhow::Result<Vec<JobInfo>> {
+        match self.call(&MasterRequest::Jobs)? {
+            MasterResponse::Jobs(jobs) => Ok(jobs),
+            MasterResponse::Err(m) => anyhow::bail!("jobs query rejected: {m}"),
+            other => anyhow::bail!("unexpected jobs reply: {other:?}"),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        match self.call(&MasterRequest::Shutdown)? {
+            MasterResponse::Ok => Ok(()),
+            MasterResponse::Err(m) => anyhow::bail!("shutdown rejected: {m}"),
+            other => anyhow::bail!("unexpected shutdown reply: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn master_protocol_roundtrips() {
+        let reqs = vec![
+            MasterRequest::Submit(SubmitSpec {
+                name: "jobA".into(),
+                model: "VGG16".into(),
+                gpus: 2,
+                steps: 500,
+                elastic: false,
+                params: 1024,
+                compute_ms: 7,
+            }),
+            MasterRequest::Jobs,
+            MasterRequest::Shutdown,
+        ];
+        for r in reqs {
+            assert_eq!(MasterRequest::decode(&r.encode()).unwrap(), r);
+        }
+        let resps = vec![
+            MasterResponse::Submitted { job: 3 },
+            MasterResponse::Jobs(vec![JobInfo {
+                name: "jobA".into(),
+                phase: "running".into(),
+                requested_p: 1,
+                parallelism: 3,
+                step: 42,
+                peak_p: 4,
+                grow_ops: 2,
+                shrink_ops: 1,
+                ctl_addr: "127.0.0.1:9999".into(),
+                machines: vec!["m1".into(), "m1".into(), "m2".into()],
+            }]),
+            MasterResponse::Ok,
+            MasterResponse::Err("no capacity".into()),
+        ];
+        for r in resps {
+            assert_eq!(MasterResponse::decode(&r.encode()).unwrap(), r);
+        }
+        assert!(MasterRequest::decode(&[0]).is_err());
+        assert!(MasterResponse::decode(&[9]).is_err());
+    }
+}

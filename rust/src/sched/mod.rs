@@ -1,0 +1,269 @@
+//! The policy/engine split of cluster scheduling (§2, §5, §6).
+//!
+//! A scheduling **policy** (FIFO, Static, ElasticSimple, Tiresias,
+//! Elastic-Tiresias — [`crate::schedulers`]) never touches an execution
+//! engine directly. It reads an abstract cluster state through
+//! [`ClusterView`] (machine/GPU inventory, per-job state, attained
+//! service, adjustability) and emits typed [`Decision`]s through
+//! [`ClusterCtl::submit`]. An **engine** implements both traits and is
+//! responsible for applying each decision to real (or simulated) jobs:
+//!
+//!  * [`ClusterSim`](crate::cluster::ClusterSim) — the discrete-event
+//!    simulator; decisions route through the Table-1
+//!    [`SimJobHandle`](crate::cluster::SimJobHandle) and are recorded in
+//!    `decision_log`, so a run can be replayed decision-by-decision;
+//!  * [`master::Master`](crate::master) — the live multi-job cluster
+//!    daemon; decisions route through [`api::JobControl`](crate::api)
+//!    against each job's real leader (stop-free scale-out into idle GPUs,
+//!    graceful shrink on contention).
+//!
+//! Decisions are applied EAGERLY: `submit` returns once the engine has
+//! accepted (sim: applied; live: committed or dispatched) the decision,
+//! and subsequent `ClusterView` reads observe its effect on the
+//! inventory. That keeps policies sequential and engine-agnostic — the
+//! same policy object ticks against either engine unchanged.
+
+use crate::gpu_sim::Dnn;
+use crate::transport::NodeId;
+
+/// A typed scheduling decision — everything a policy may ask of an engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    /// Place a pending job and start it at parallelism `p`.
+    Start { job: usize, p: u32 },
+    /// Take a running job's GPUs away and requeue it (checkpoint/restart
+    /// engines only — the live master refuses, it never restarts a job).
+    Preempt { job: usize },
+    /// Stop-free scale-out of a running job to `to` GPUs (Table-1
+    /// `scale_out`; the engine chooses the machines).
+    Grow { job: usize, to: u32 },
+    /// Graceful scale-in of a running job to `to` GPUs (Table-1
+    /// `scale_in`; victims are the most recently added workers).
+    Shrink { job: usize, to: u32 },
+    /// Placement move in one topology switch (Table-1 `migrate`).
+    Migrate { job: usize, remove: Vec<NodeId>, add: Vec<String> },
+}
+
+impl Decision {
+    /// The job index the decision targets.
+    pub fn job(&self) -> usize {
+        match *self {
+            Decision::Start { job, .. }
+            | Decision::Preempt { job }
+            | Decision::Grow { job, .. }
+            | Decision::Shrink { job, .. }
+            | Decision::Migrate { job, .. } => job,
+        }
+    }
+}
+
+/// A point-in-time, policy-facing view of one job. Cheap to copy; engines
+/// synthesise it on demand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobView {
+    /// external job id (trace id / submit order)
+    pub id: u64,
+    pub model: Dnn,
+    pub requested_p: u32,
+    /// GPUs currently held (0 unless running)
+    pub current_p: u32,
+    /// aggregate batch size, constant under scaling (§3.1)
+    pub global_batch: u32,
+    /// submit time has passed (the job is visible to the scheduler)
+    pub submitted: bool,
+    /// submitted and waiting for placement
+    pub pending: bool,
+    /// holding GPUs (running or mid-scale-out)
+    pub running: bool,
+    pub finished: bool,
+    /// can accept a Table-1 adjustment NOW (running, no adjustment in
+    /// flight — the §3.1 guard surfaced to policies)
+    pub adjustable: bool,
+    /// user marked the job elastic (§5.1)
+    pub elastic: bool,
+    pub submit_s: f64,
+    /// GPU·s consumed so far (Tiresias priority input)
+    pub attained_gpu_s: f64,
+}
+
+/// Read-only cluster state, per the paper's scheduler inputs (§5.1):
+/// inventory, per-job state, attained service, adjustability, plus the
+/// calibrated device model for what-if throughput/efficiency queries.
+pub trait ClusterView {
+    /// scheduler clock (s) — simulated time or wall time since engine start
+    fn now_s(&self) -> f64;
+    fn n_machines(&self) -> usize;
+    fn gpus_per_machine(&self) -> u32;
+    fn total_gpus(&self) -> u32;
+    fn free_gpus(&self) -> u32;
+    /// max parallelism used for efficiency normalisation
+    fn max_p_norm(&self) -> u32;
+    /// number of jobs the engine tracks (stable indices `0..n_jobs()`)
+    fn n_jobs(&self) -> usize;
+    fn job_view(&self, job: usize) -> JobView;
+    /// predicted aggregate throughput of `job` at parallelism `p`
+    /// (samples/s, from the calibrated device model)
+    fn predicted_throughput(&self, job: usize, p: u32) -> f64;
+    /// predicted GPU efficiency of `job` at parallelism `p` (footnote 1)
+    fn predicted_efficiency(&self, job: usize, p: u32, max_p: u32) -> f64;
+}
+
+/// What a policy drives: the view plus decision submission.
+pub trait ClusterCtl: ClusterView {
+    /// Apply a decision. Returns false if the engine rejects it (no
+    /// resources, job not in the right state, adjustment in flight).
+    fn submit(&mut self, d: Decision) -> bool;
+}
+
+/// Scheduler plug-in surface: one policy object drives ANY engine.
+/// Engines call `replan` after every event (sim) or on a clock (master).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn replan(&mut self, ctl: &mut dyn ClusterCtl);
+}
+
+/// Placeholder policy that never issues a decision (used by engines that
+/// need to temporarily take ownership of their scheduler).
+pub struct NoopScheduler;
+
+impl Scheduler for NoopScheduler {
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+    fn replan(&mut self, _ctl: &mut dyn ClusterCtl) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal engine: one machine of 4 GPUs, two jobs, Start/Grow only.
+    struct MockEngine {
+        free: u32,
+        p: [u32; 2],
+        log: Vec<Decision>,
+    }
+
+    impl ClusterView for MockEngine {
+        fn now_s(&self) -> f64 {
+            0.0
+        }
+        fn n_machines(&self) -> usize {
+            1
+        }
+        fn gpus_per_machine(&self) -> u32 {
+            4
+        }
+        fn total_gpus(&self) -> u32 {
+            4
+        }
+        fn free_gpus(&self) -> u32 {
+            self.free
+        }
+        fn max_p_norm(&self) -> u32 {
+            4
+        }
+        fn n_jobs(&self) -> usize {
+            2
+        }
+        fn job_view(&self, job: usize) -> JobView {
+            JobView {
+                id: job as u64,
+                model: Dnn::ResNet50,
+                requested_p: 1,
+                current_p: self.p[job],
+                global_batch: 32,
+                submitted: true,
+                pending: self.p[job] == 0,
+                running: self.p[job] > 0,
+                finished: false,
+                adjustable: self.p[job] > 0,
+                elastic: true,
+                submit_s: 0.0,
+                attained_gpu_s: 0.0,
+            }
+        }
+        fn predicted_throughput(&self, _job: usize, p: u32) -> f64 {
+            p as f64
+        }
+        fn predicted_efficiency(&self, _job: usize, _p: u32, _max_p: u32) -> f64 {
+            1.0
+        }
+    }
+
+    impl ClusterCtl for MockEngine {
+        fn submit(&mut self, d: Decision) -> bool {
+            let ok = match d {
+                Decision::Start { job, p } => {
+                    if self.p[job] == 0 && p <= self.free {
+                        self.free -= p;
+                        self.p[job] = p;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Decision::Grow { job, to } => {
+                    let cur = self.p[job];
+                    if to > cur && to - cur <= self.free {
+                        self.free -= to - cur;
+                        self.p[job] = to;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                _ => false,
+            };
+            if ok {
+                self.log.push(d);
+            }
+            ok
+        }
+    }
+
+    struct GreedyPolicy;
+    impl Scheduler for GreedyPolicy {
+        fn name(&self) -> &'static str {
+            "greedy"
+        }
+        fn replan(&mut self, ctl: &mut dyn ClusterCtl) {
+            // start every pending job at 1, then grow job 0 into the rest
+            for i in 0..ctl.n_jobs() {
+                if ctl.job_view(i).pending {
+                    ctl.submit(Decision::Start { job: i, p: 1 });
+                }
+            }
+            let free = ctl.free_gpus();
+            if free > 0 {
+                let cur = ctl.job_view(0).current_p;
+                ctl.submit(Decision::Grow { job: 0, to: cur + free });
+            }
+        }
+    }
+
+    #[test]
+    fn policy_drives_engine_through_trait_objects() {
+        let mut eng = MockEngine { free: 4, p: [0, 0], log: Vec::new() };
+        let mut pol = GreedyPolicy;
+        pol.replan(&mut eng);
+        assert_eq!(eng.p, [3, 1]);
+        assert_eq!(eng.free, 0);
+        assert_eq!(
+            eng.log,
+            vec![
+                Decision::Start { job: 0, p: 1 },
+                Decision::Start { job: 1, p: 1 },
+                Decision::Grow { job: 0, to: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn rejected_decisions_report_false() {
+        let mut eng = MockEngine { free: 0, p: [0, 0], log: Vec::new() };
+        assert!(!eng.submit(Decision::Start { job: 0, p: 1 }));
+        assert!(!eng.submit(Decision::Preempt { job: 0 }));
+        assert!(eng.log.is_empty());
+    }
+}

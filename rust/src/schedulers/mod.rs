@@ -1,17 +1,24 @@
-//! Cluster schedulers: FIFO, Static, ElasticSimple (the Fig 11 pair),
-//! Tiresias (discretized 2D-LAS, Gu et al. NSDI'19) and Elastic-Tiresias
-//! (Tiresias + the paper's R1 compaction / R2 expansion rules, §5.1).
+//! Cluster scheduling POLICIES: FIFO, Static, ElasticSimple (the Fig 11
+//! pair), Tiresias (discretized 2D-LAS, Gu et al. NSDI'19) and
+//! Elastic-Tiresias (Tiresias + the paper's R1 compaction / R2 expansion
+//! rules, §5.1).
 //!
-//! Parallelism adjustments go through the Table-1 surface
-//! ([`crate::api::JobControl`]) via each job's `sim.job(i)` handle — the
-//! policy primitives [`ElasticTiresias::expand_job`] /
-//! [`ElasticTiresias::shrink_job`] are written against the trait, so the
-//! SAME code also drives a live `ElasticTrainer` (in-process or through
-//! `api::JobClient` over TCP).
+//! Policies are pure planners over the policy/engine split
+//! ([`crate::sched`]): they read a [`ClusterView`] (inventory, per-job
+//! state, attained service, adjustability) and submit typed
+//! [`Decision`]s. The SAME policy object drives both engines —
+//! [`ClusterSim`](crate::cluster::ClusterSim) in simulation and the live
+//! multi-job [`master`](crate::master) daemon, which maps each decision
+//! onto the Table-1 surface ([`crate::api::JobControl`]) of a real job.
+//!
+//! The per-job scaling primitives [`ElasticTiresias::expand_job`] /
+//! [`ElasticTiresias::shrink_job`] are written against [`JobControl`]
+//! directly, so engines (and tests) apply Grow/Shrink decisions to a
+//! simulated handle, an in-process `ElasticTrainer`, or a TCP
+//! `JobClient` with the same code.
 
 use crate::api::{ElasticError, JobControl, JobControlExt};
-use crate::cluster::{ClusterSim, JobState, Scheduler};
-use crate::gpu_sim;
+use crate::sched::{ClusterCtl, Decision, Scheduler};
 use std::time::Duration;
 
 /// How long the retry helpers wait out an in-flight adjustment (§3.1)
@@ -19,31 +26,33 @@ use std::time::Duration;
 /// only touch jobs that are currently adjustable.
 const RETRY_T: Duration = Duration::from_secs(30);
 
-/// A simulated job that can accept an adjustment NOW. Guarding here (not
-/// just at each rule's filter) keeps the wall-clock retry backoff in
-/// [`JobControlExt`] from ever spinning against frozen simulator time.
-fn adjustable(sim: &ClusterSim, i: usize) -> bool {
-    matches!(sim.jobs[i].state, JobState::Running { paused_until, .. } if paused_until <= sim.now)
+/// Jobs submitted and waiting for placement, by engine index.
+fn pending_jobs(ctl: &dyn ClusterCtl) -> Vec<usize> {
+    (0..ctl.n_jobs()).filter(|&i| ctl.job_view(i).pending).collect()
 }
 
-/// Grow job `i` to `target` GPUs through its Table-1 handle; false if the
-/// adjustment was rejected (in flight / no resources).
-fn grow_to(sim: &mut ClusterSim, i: usize, target: u32) -> bool {
-    let p = sim.jobs[i].current_p();
-    if target <= p || !adjustable(sim, i) {
-        return false;
-    }
-    let machines = vec![String::from("sim-gpu"); (target - p) as usize];
-    ElasticTiresias::expand_job(&mut sim.job(i), machines).is_ok()
+/// Jobs currently holding GPUs (running or mid-scale-out).
+fn running_jobs(ctl: &dyn ClusterCtl) -> Vec<usize> {
+    (0..ctl.n_jobs()).filter(|&i| ctl.job_view(i).running).collect()
 }
 
-/// Shrink job `i` to `target` GPUs through its Table-1 handle.
-fn shrink_to(sim: &mut ClusterSim, i: usize, target: u32) -> bool {
-    let p = sim.jobs[i].current_p();
-    if target >= p || target == 0 || !adjustable(sim, i) {
+/// Grow job `i` to `target` GPUs; false if the job cannot accept an
+/// adjustment now or the engine rejects the decision.
+fn grow_to(ctl: &mut dyn ClusterCtl, i: usize, target: u32) -> bool {
+    let v = ctl.job_view(i);
+    if target <= v.current_p || !v.adjustable {
         return false;
     }
-    ElasticTiresias::shrink_job(&mut sim.job(i), p - target).is_ok()
+    ctl.submit(Decision::Grow { job: i, to: target })
+}
+
+/// Shrink job `i` to `target` GPUs.
+fn shrink_to(ctl: &mut dyn ClusterCtl, i: usize, target: u32) -> bool {
+    let v = ctl.job_view(i);
+    if target >= v.current_p || target == 0 || !v.adjustable {
+        return false;
+    }
+    ctl.submit(Decision::Shrink { job: i, to: target })
 }
 
 /// Plain FIFO at requested parallelism (baseline / test harness).
@@ -54,10 +63,10 @@ impl Scheduler for FifoScheduler {
     fn name(&self) -> &'static str {
         "fifo"
     }
-    fn replan(&mut self, sim: &mut ClusterSim) {
-        for i in sim.pending_jobs() {
-            let p = sim.jobs[i].requested_p;
-            if !sim.start_job(i, p) {
+    fn replan(&mut self, ctl: &mut dyn ClusterCtl) {
+        for i in pending_jobs(ctl) {
+            let p = ctl.job_view(i).requested_p;
+            if !ctl.submit(Decision::Start { job: i, p }) {
                 break; // strict FIFO: no backfill past the head
             }
         }
@@ -74,9 +83,9 @@ impl Scheduler for StaticScheduler {
     fn name(&self) -> &'static str {
         "static"
     }
-    fn replan(&mut self, sim: &mut ClusterSim) {
-        for i in sim.pending_jobs() {
-            if !sim.start_job(i, self.fixed_p) {
+    fn replan(&mut self, ctl: &mut dyn ClusterCtl) {
+        for i in pending_jobs(ctl) {
+            if !ctl.submit(Decision::Start { job: i, p: self.fixed_p }) {
                 break;
             }
         }
@@ -103,24 +112,21 @@ impl ElasticSimple {
 
     /// uniform shares of the cluster for `n` jobs (machine-capped;
     /// remainder GPUs spread one-by-one over the first jobs)
-    fn shares(&self, sim: &ClusterSim, n: u32) -> Vec<u32> {
+    fn shares(&self, ctl: &dyn ClusterCtl, n: u32) -> Vec<u32> {
         if n == 0 {
             return Vec::new();
         }
-        let total = sim.total_gpus();
+        let total = ctl.total_gpus();
         let base = total / n;
         let rem = total % n;
         (0..n)
-            .map(|i| {
-                (base + u32::from(i < rem)).clamp(self.min_p(), sim.hw.gpus_per_machine)
-            })
+            .map(|i| (base + u32::from(i < rem)).clamp(self.min_p(), ctl.gpus_per_machine()))
             .collect()
     }
 
-    fn steerable(sim: &ClusterSim, i: usize) -> bool {
-        sim.jobs[i].elastic
-            && matches!(sim.jobs[i].state,
-                JobState::Running { paused_until, .. } if paused_until <= sim.now)
+    fn steerable(ctl: &dyn ClusterCtl, i: usize) -> bool {
+        let v = ctl.job_view(i);
+        v.elastic && v.adjustable
     }
 }
 
@@ -128,12 +134,12 @@ impl Scheduler for ElasticSimple {
     fn name(&self) -> &'static str {
         "elastic"
     }
-    fn replan(&mut self, sim: &mut ClusterSim) {
-        let pending = sim.pending_jobs();
-        let mut running = sim.running_jobs();
-        running.sort_by_key(|&i| sim.jobs[i].id);
+    fn replan(&mut self, ctl: &mut dyn ClusterCtl) {
+        let pending = pending_jobs(ctl);
+        let mut running = running_jobs(ctl);
+        running.sort_by_key(|&i| ctl.job_view(i).id);
         let n_after = (running.len() + pending.len()) as u32;
-        let shares = self.shares(sim, n_after);
+        let shares = self.shares(ctl, n_after);
 
         // per-job targets: running jobs first (stable by id), newcomers last
         let targets: Vec<(usize, u32, bool)> = running
@@ -150,36 +156,34 @@ impl Scheduler for ElasticSimple {
 
         // 1. shrink over-target jobs first (graceful exits are cheap)
         for &(i, target, is_new) in &targets {
-            if !is_new && Self::steerable(sim, i) && sim.jobs[i].current_p() > target {
-                shrink_to(sim, i, target);
+            if !is_new && Self::steerable(ctl, i) && ctl.job_view(i).current_p > target {
+                shrink_to(ctl, i, target);
             }
         }
         // 2. admit newcomers at their share
         for &(i, target, is_new) in &targets {
             if is_new {
-                let p = target.min(sim.free_gpus().max(1));
-                if p >= 1 && sim.free_gpus() >= p {
-                    sim.start_job(i, p);
+                let p = target.min(ctl.free_gpus().max(1));
+                if p >= 1 && ctl.free_gpus() >= p {
+                    ctl.submit(Decision::Start { job: i, p });
                 }
             }
         }
         // 3. grow under-target jobs into remaining idle GPUs, but only
         //    while the throughput gain is non-negative (paper footnote 7)
         for &(i, target, is_new) in &targets {
-            if is_new || !Self::steerable(sim, i) {
+            if is_new || !Self::steerable(ctl, i) {
                 continue;
             }
-            let p = sim.jobs[i].current_p();
-            if p >= target || sim.free_gpus() == 0 {
+            let p = ctl.job_view(i).current_p;
+            if p >= target || ctl.free_gpus() == 0 {
                 continue;
             }
-            let want = target.min(p + sim.free_gpus());
-            let j = &sim.jobs[i];
-            let b = j.global_batch();
-            let s_now = gpu_sim::throughput(j.model, p, b, &sim.hw);
-            let s_want = gpu_sim::throughput(j.model, want, b, &sim.hw);
+            let want = target.min(p + ctl.free_gpus());
+            let s_now = ctl.predicted_throughput(i, p);
+            let s_want = ctl.predicted_throughput(i, want);
             if s_want >= s_now {
-                grow_to(sim, i, want);
+                grow_to(ctl, i, want);
             }
         }
     }
@@ -200,52 +204,71 @@ pub struct Tiresias {
     pub starve_promote_s: f64,
     /// last time each job was running (for starvation detection)
     last_active: Vec<f64>,
+    /// queue index per job, recomputed by `plan` (policy state — engines
+    /// know nothing about Tiresias queues)
+    queues: Vec<usize>,
 }
 
 impl Tiresias {
     pub fn new(thresholds: Vec<f64>) -> Tiresias {
-        Tiresias { thresholds, starve_promote_s: 6.0 * 3600.0, last_active: Vec::new() }
+        Tiresias {
+            thresholds,
+            starve_promote_s: 6.0 * 3600.0,
+            last_active: Vec::new(),
+            queues: Vec::new(),
+        }
     }
 
     fn queue_of(&self, attained: f64) -> usize {
         self.thresholds.iter().take_while(|&&t| attained >= t).count()
     }
 
+    /// Queue index assigned to job `i` by the latest `plan`.
+    pub fn queue(&self, i: usize) -> usize {
+        self.queues.get(i).copied().unwrap_or(0)
+    }
+
     /// priority ordering: queue asc, then submit time asc
-    fn plan(&mut self, sim: &mut ClusterSim) -> Vec<usize> {
-        if self.last_active.len() < sim.jobs.len() {
-            self.last_active.resize(sim.jobs.len(), 0.0);
+    fn plan(&mut self, ctl: &mut dyn ClusterCtl) -> Vec<usize> {
+        let n = ctl.n_jobs();
+        if self.last_active.len() < n {
+            self.last_active.resize(n, 0.0);
         }
+        if self.queues.len() < n {
+            self.queues.resize(n, 0);
+        }
+        let now = ctl.now_s();
         let mut candidates: Vec<usize> = Vec::new();
-        for i in 0..sim.jobs.len() {
-            let j = &sim.jobs[i];
-            if j.submit_s > sim.now || matches!(j.state, JobState::Finished { .. }) {
+        for i in 0..n {
+            let v = ctl.job_view(i);
+            if !v.submitted || v.finished {
                 continue;
             }
             candidates.push(i);
         }
         for &i in &candidates {
-            let mut q = self.queue_of(sim.jobs[i].attained_gpu_s);
+            let v = ctl.job_view(i);
+            let mut q = self.queue_of(v.attained_gpu_s);
             // starvation: long-waiting jobs promoted to G0 (§5.1)
-            let waiting = matches!(sim.jobs[i].state, JobState::Pending);
-            if waiting && sim.now - self.last_active[i].max(sim.jobs[i].submit_s) > self.starve_promote_s {
+            let waiting = v.pending;
+            if waiting && now - self.last_active[i].max(v.submit_s) > self.starve_promote_s {
                 q = 0;
             }
             if !waiting {
-                self.last_active[i] = sim.now;
+                self.last_active[i] = now;
             }
-            sim.jobs[i].queue = q;
+            self.queues[i] = q;
         }
         candidates.sort_by(|&a, &b| {
-            (sim.jobs[a].queue, sim.jobs[a].submit_s)
-                .partial_cmp(&(sim.jobs[b].queue, sim.jobs[b].submit_s))
+            (self.queues[a], ctl.job_view(a).submit_s)
+                .partial_cmp(&(self.queues[b], ctl.job_view(b).submit_s))
                 .unwrap()
         });
         // admit in priority order while capacity lasts
-        let mut capacity = sim.total_gpus();
+        let mut capacity = ctl.total_gpus();
         let mut admitted = Vec::new();
         for &i in &candidates {
-            let p = sim.jobs[i].requested_p;
+            let p = ctl.job_view(i).requested_p;
             if p <= capacity {
                 capacity -= p;
                 admitted.push(i);
@@ -253,12 +276,8 @@ impl Tiresias {
         }
         // preempt running jobs not admitted, then start admitted pending
         for &i in &candidates {
-            let running = matches!(
-                sim.jobs[i].state,
-                JobState::Running { .. } | JobState::ScalingOut { .. }
-            );
-            if running && !admitted.contains(&i) {
-                sim.preempt_job(i);
+            if ctl.job_view(i).running && !admitted.contains(&i) {
+                ctl.submit(Decision::Preempt { job: i });
             }
         }
         admitted
@@ -269,12 +288,12 @@ impl Scheduler for Tiresias {
     fn name(&self) -> &'static str {
         "tiresias"
     }
-    fn replan(&mut self, sim: &mut ClusterSim) {
-        let admitted = self.plan(sim);
+    fn replan(&mut self, ctl: &mut dyn ClusterCtl) {
+        let admitted = self.plan(ctl);
         for i in admitted {
-            if matches!(sim.jobs[i].state, JobState::Pending) {
-                let p = sim.jobs[i].requested_p;
-                sim.start_job(i, p);
+            let v = ctl.job_view(i);
+            if v.pending {
+                ctl.submit(Decision::Start { job: i, p: v.requested_p });
             }
         }
     }
@@ -317,10 +336,11 @@ impl ElasticTiresias {
 
     /// R2 expansion primitive: one Table-1 `scale_out` adding one worker
     /// per `machines` entry. Written against [`JobControl`], so the SAME
-    /// policy code drives a [`SimJobHandle`](crate::cluster::SimJobHandle)
-    /// in simulation and a live `ElasticTrainer` — in-process or behind
-    /// `api::JobClient` over TCP. §3.1 in-flight rejections are retried
-    /// with backoff by [`JobControlExt`].
+    /// code applies a Grow decision to a
+    /// [`SimJobHandle`](crate::cluster::SimJobHandle) in simulation and
+    /// to a live job leader — in-process or behind `api::JobClient` over
+    /// TCP. §3.1 in-flight rejections are retried with backoff by
+    /// [`JobControlExt`].
     pub fn expand_job(
         job: &mut (impl JobControl + ?Sized),
         machines: Vec<String>,
@@ -349,23 +369,20 @@ impl ElasticTiresias {
     }
 
     /// efficiency gain of shrinking job i by one GPU
-    fn shrink_gain(sim: &ClusterSim, i: usize, max_p: u32) -> f64 {
-        let j = &sim.jobs[i];
-        let p = j.current_p();
+    fn shrink_gain(ctl: &dyn ClusterCtl, i: usize, max_p: u32) -> f64 {
+        let p = ctl.job_view(i).current_p;
         if p <= 1 {
             return f64::MIN;
         }
-        let b = j.global_batch();
-        gpu_sim::efficiency(j.model, p - 1, b, max_p, &sim.hw)
-            - gpu_sim::efficiency(j.model, p, b, max_p, &sim.hw)
+        ctl.predicted_efficiency(i, p - 1, max_p) - ctl.predicted_efficiency(i, p, max_p)
     }
 
-    fn shrinkable(&self, sim: &ClusterSim, i: usize) -> bool {
-        let j = &sim.jobs[i];
-        j.elastic
-            && j.queue > 0 // never shrink G0 jobs (§5.1)
-            && matches!(j.state, JobState::Running { paused_until, .. } if paused_until <= sim.now)
-            && j.current_p() > self.min_p(j.requested_p)
+    fn shrinkable(&self, ctl: &dyn ClusterCtl, i: usize) -> bool {
+        let v = ctl.job_view(i);
+        v.elastic
+            && self.base.queue(i) > 0 // never shrink G0 jobs (§5.1)
+            && v.adjustable
+            && v.current_p > self.min_p(v.requested_p)
     }
 }
 
@@ -373,13 +390,13 @@ impl Scheduler for ElasticTiresias {
     fn name(&self) -> &'static str {
         "elastic-tiresias"
     }
-    fn replan(&mut self, sim: &mut ClusterSim) {
+    fn replan(&mut self, ctl: &mut dyn ClusterCtl) {
         // base Tiresias allocation first
-        let admitted = self.base.plan(sim);
+        let admitted = self.base.plan(ctl);
         for &i in &admitted {
-            if matches!(sim.jobs[i].state, JobState::Pending) {
-                let p = sim.jobs[i].requested_p;
-                sim.start_job(i, p);
+            let v = ctl.job_view(i);
+            if v.pending {
+                ctl.submit(Decision::Start { job: i, p: v.requested_p });
             }
         }
 
@@ -389,44 +406,42 @@ impl Scheduler for ElasticTiresias {
         // requested parallelism so newcomers can start. Graceful exits are
         // cheap, so reclaim is immediate.
         if self.enable_r2 {
-            let mut pending = sim.pending_jobs();
+            let mut pending = pending_jobs(ctl);
             pending.sort_by(|&a, &b| {
-                (sim.jobs[a].queue, sim.jobs[a].submit_s)
-                    .partial_cmp(&(sim.jobs[b].queue, sim.jobs[b].submit_s))
+                (self.base.queue(a), ctl.job_view(a).submit_s)
+                    .partial_cmp(&(self.base.queue(b), ctl.job_view(b).submit_s))
                     .unwrap()
             });
             for w in pending {
-                let want = sim.jobs[w].requested_p;
-                if sim.free_gpus() >= want {
-                    sim.start_job(w, want);
+                let want = ctl.job_view(w).requested_p;
+                if ctl.free_gpus() >= want {
+                    ctl.submit(Decision::Start { job: w, p: want });
                     continue;
                 }
                 // reclaim from the most over-allocated expanded jobs first
-                let mut expanded: Vec<usize> = sim
-                    .running_jobs()
+                let mut expanded: Vec<usize> = running_jobs(ctl)
                     .into_iter()
                     .filter(|&i| {
-                        sim.jobs[i].elastic
-                            && sim.jobs[i].current_p() > sim.jobs[i].requested_p
-                            && matches!(sim.jobs[i].state,
-                                JobState::Running { paused_until, .. } if paused_until <= sim.now)
+                        let v = ctl.job_view(i);
+                        v.elastic && v.current_p > v.requested_p && v.adjustable
                     })
                     .collect();
                 expanded.sort_by_key(|&i| {
-                    std::cmp::Reverse(sim.jobs[i].current_p() - sim.jobs[i].requested_p)
+                    let v = ctl.job_view(i);
+                    std::cmp::Reverse(v.current_p - v.requested_p)
                 });
                 for i in expanded {
-                    if sim.free_gpus() >= want {
+                    if ctl.free_gpus() >= want {
                         break;
                     }
-                    let deficit = want - sim.free_gpus();
-                    let surplus = sim.jobs[i].current_p() - sim.jobs[i].requested_p;
+                    let deficit = want - ctl.free_gpus();
+                    let v = ctl.job_view(i);
+                    let surplus = v.current_p - v.requested_p;
                     let give = surplus.min(deficit);
-                    let p = sim.jobs[i].current_p();
-                    shrink_to(sim, i, p - give);
+                    shrink_to(ctl, i, v.current_p - give);
                 }
-                if sim.free_gpus() >= want {
-                    sim.start_job(w, want);
+                if ctl.free_gpus() >= want {
+                    ctl.submit(Decision::Start { job: w, p: want });
                 } else {
                     break;
                 }
@@ -440,26 +455,26 @@ impl Scheduler for ElasticTiresias {
         // for arbitrary large waiters under sustained overload inverts the
         // SJF discipline and inflates everyone's JCT (see the
         // ablation_elastic_rules example), so only G0 waiters qualify.
-        let mut waiting = sim.pending_jobs();
+        let mut waiting = pending_jobs(ctl);
         if self.enable_r1 && waiting.len() > self.n_waiting_threshold {
-            waiting.retain(|&w| sim.jobs[w].queue == 0);
+            waiting.retain(|&w| self.base.queue(w) == 0);
             waiting.sort_by(|&a, &b| {
-                sim.jobs[a].submit_s.partial_cmp(&sim.jobs[b].submit_s).unwrap()
+                ctl.job_view(a).submit_s.partial_cmp(&ctl.job_view(b).submit_s).unwrap()
             });
             for w in waiting {
-                let want = sim.jobs[w].requested_p;
-                let max_p = sim.max_p_norm;
+                let want = ctl.job_view(w).requested_p;
+                let max_p = ctl.max_p_norm();
                 let mut guard = 0;
-                while sim.free_gpus() < want {
+                while ctl.free_gpus() < want {
                     guard += 1;
                     if guard > 4096 {
                         break;
                     }
                     // victim with the best efficiency gain from shrinking
                     let mut best: Option<(usize, f64)> = None;
-                    for i in sim.running_jobs() {
-                        if self.shrinkable(sim, i) {
-                            let g = Self::shrink_gain(sim, i, max_p);
+                    for i in running_jobs(ctl) {
+                        if self.shrinkable(ctl, i) {
+                            let g = Self::shrink_gain(ctl, i, max_p);
                             if best.map(|(_, bg)| g > bg).unwrap_or(true) {
                                 best = Some((i, g));
                             }
@@ -467,16 +482,16 @@ impl Scheduler for ElasticTiresias {
                     }
                     match best {
                         Some((i, _)) => {
-                            let p = sim.jobs[i].current_p();
-                            if !shrink_to(sim, i, p - 1) {
+                            let p = ctl.job_view(i).current_p;
+                            if !shrink_to(ctl, i, p - 1) {
                                 break;
                             }
                         }
                         None => break,
                     }
                 }
-                if sim.free_gpus() >= want {
-                    sim.start_job(w, want);
+                if ctl.free_gpus() >= want {
+                    ctl.submit(Decision::Start { job: w, p: want });
                 } else {
                     break; // can't help lower-priority waiters either
                 }
@@ -484,25 +499,23 @@ impl Scheduler for ElasticTiresias {
         }
 
         // R2 expansion: allocate idle GPUs greedily by marginal gain, then
-        // merge each job's consecutive +1 grants into ONE scale operation
+        // merge each job's consecutive +1 grants into ONE Grow decision
         // (one topology switch — §5.2's migration-merging idea applied to
         // expansion; issuing them one at a time would pay the scale-out
         // e2e latency per GPU)
-        if self.enable_r2 && sim.pending_jobs().is_empty() && sim.free_gpus() > 0 {
-            let mut budget = sim.free_gpus();
+        if self.enable_r2 && pending_jobs(ctl).is_empty() && ctl.free_gpus() > 0 {
+            let mut budget = ctl.free_gpus();
             // virtual parallelism during the greedy pass
             let mut virt: std::collections::HashMap<usize, u32> = std::collections::HashMap::new();
-            let candidates: Vec<usize> = sim
-                .running_jobs()
+            let candidates: Vec<usize> = running_jobs(ctl)
                 .into_iter()
                 .filter(|&i| {
-                    sim.jobs[i].elastic
-                        && matches!(sim.jobs[i].state,
-                            JobState::Running { paused_until, .. } if paused_until <= sim.now)
+                    let v = ctl.job_view(i);
+                    v.elastic && v.adjustable
                 })
                 .collect();
             for &i in &candidates {
-                virt.insert(i, sim.jobs[i].current_p());
+                virt.insert(i, ctl.job_view(i).current_p);
             }
             let mut guard = 0;
             while budget > 0 {
@@ -513,10 +526,8 @@ impl Scheduler for ElasticTiresias {
                 let mut best: Option<(usize, f64)> = None;
                 for &i in &candidates {
                     let p = virt[&i];
-                    let j = &sim.jobs[i];
-                    let b = j.global_batch();
-                    let s_p = gpu_sim::throughput(j.model, p, b, &sim.hw);
-                    let s_p1 = gpu_sim::throughput(j.model, p + 1, b, &sim.hw);
+                    let s_p = ctl.predicted_throughput(i, p);
+                    let s_p1 = ctl.predicted_throughput(i, p + 1);
                     let g = (s_p1 - s_p) / s_p;
                     if g > 0.0 && best.map(|(_, bg)| g > bg).unwrap_or(true) {
                         best = Some((i, g));
@@ -532,8 +543,8 @@ impl Scheduler for ElasticTiresias {
             }
             for &i in &candidates {
                 let target = virt[&i];
-                if target > sim.jobs[i].current_p() {
-                    grow_to(sim, i, target);
+                if target > ctl.job_view(i).current_p {
+                    grow_to(ctl, i, target);
                 }
             }
         }
@@ -543,7 +554,7 @@ impl Scheduler for ElasticTiresias {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::ScaleMode;
+    use crate::cluster::{ClusterSim, JobState, ScaleMode};
     use crate::gpu_sim::Dnn;
     use crate::metrics::JctStats;
     use crate::trace::TraceJob;
@@ -670,6 +681,12 @@ mod tests {
             sim.jobs[0].current_p() > 2,
             "R2 should expand the only job: p={}",
             sim.jobs[0].current_p()
+        );
+        // the expansion is visible in the decision log as Grow decisions
+        assert!(
+            sim.decision_log.iter().any(|(_, d)| matches!(d, Decision::Grow { job: 0, .. })),
+            "decision log must record the R2 expansion: {:?}",
+            sim.decision_log
         );
     }
 

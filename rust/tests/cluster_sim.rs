@@ -160,28 +160,24 @@ fn stop_resume_scaling_pauses_job() {
         service_gpu_s: 2.0 * 300.0,
         model: Dnn::ResNet50,
     }];
-    struct ScaleAt(bool);
-    impl edl::cluster::Scheduler for ScaleAt {
-        fn name(&self) -> &'static str {
-            "scale-at"
+    fn scale_at(sim: &mut ClusterSim, done: &mut bool) {
+        for i in sim.pending_jobs() {
+            sim.start_job(i, 2);
         }
-        fn replan(&mut self, sim: &mut ClusterSim) {
-            for i in sim.pending_jobs() {
-                sim.start_job(i, 2);
-            }
-            if !self.0 && sim.now > 50.0 {
-                for i in sim.running_jobs() {
-                    if sim.scale_job(i, 4) {
-                        self.0 = true;
-                    }
+        if !*done && sim.now > 50.0 {
+            for i in sim.running_jobs() {
+                if sim.scale_job(i, 4) {
+                    *done = true;
                 }
             }
         }
     }
     let mut ideal = ClusterSim::new(1, 8, &trace, ScaleMode::Ideal);
-    ideal.run(&mut ScaleAt(false), 1e9);
+    let mut done = false;
+    ideal.run_with(|sim| scale_at(sim, &mut done), 1e9);
     let mut sr = ClusterSim::new(1, 8, &trace, ScaleMode::StopResume);
-    sr.run(&mut ScaleAt(false), 1e9);
+    let mut done = false;
+    sr.run_with(|sim| scale_at(sim, &mut done), 1e9);
     let d_ideal = ideal.jobs[0].jct().unwrap();
     let d_sr = sr.jobs[0].jct().unwrap();
     // SR pays launch (~40s) + restart (~45s at p=4)

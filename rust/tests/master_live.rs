@@ -1,0 +1,208 @@
+//! End-to-end test of the live multi-tenant control plane (PR 4
+//! acceptance): a real `edl master` OS process on 2 machines × 2
+//! simulated-GPU slots runs THREE concurrent jobs, each with its own
+//! leader and `edl worker` OS processes. The ElasticTiresias policy —
+//! the same object the simulator runs — must expand a job into idle GPUs
+//! (stop-free Grow through Table-1 `scale_out`) and shrink it on
+//! contention when later jobs arrive (graceful Shrink through
+//! `scale_in`), with NO job ever restarting: every job's step counter,
+//! observed through `edl ctl`-style Table-1 status polls resolved by
+//! name via the master's coordination KV, must be monotone.
+
+use edl::api::{JobClient, JobControl};
+use edl::coordsvc::KvClient;
+use edl::master::proto::{JobInfo, MasterClient, SubmitSpec};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_edl")
+}
+
+/// Master process killed on drop so a failing assert can't leak it (its
+/// worker children die with their leaders once the process exits).
+struct MasterProc(Child);
+
+impl Drop for MasterProc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn jobs_by_name(mc: &mut MasterClient) -> HashMap<String, JobInfo> {
+    mc.jobs().unwrap_or_default().into_iter().map(|j| (j.name.clone(), j)).collect()
+}
+
+fn wait_for(
+    mc: &mut MasterClient,
+    what: &str,
+    timeout: Duration,
+    mut pred: impl FnMut(&HashMap<String, JobInfo>) -> bool,
+) -> HashMap<String, JobInfo> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let jobs = jobs_by_name(mc);
+        if pred(&jobs) {
+            return jobs;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}; jobs: {jobs:?}");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+}
+
+#[test]
+fn master_runs_three_concurrent_jobs_with_live_elasticity() {
+    let mut child = Command::new(bin())
+        .args([
+            "master",
+            "--machines",
+            "2",
+            "--gpus",
+            "2",
+            "--scheduler",
+            "elastic-tiresias",
+            "--tick-ms",
+            "200",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn edl master");
+    let stdout = child.stdout.take().expect("master stdout");
+    let _master = MasterProc(child);
+
+    // the daemon prints its control + KV addresses on stdout
+    let mut reader = BufReader::new(stdout);
+    let (mut master_addr, mut kv_addr) = (String::new(), String::new());
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while master_addr.is_empty() || kv_addr.is_empty() {
+        assert!(Instant::now() < deadline, "master never printed its addresses");
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read master stdout");
+        assert!(n > 0, "master exited before printing its addresses");
+        if let Some(rest) = line.strip_prefix("master-control ") {
+            master_addr = rest.trim().to_string();
+        } else if let Some(rest) = line.strip_prefix("kv ") {
+            kv_addr = rest.trim().to_string();
+        }
+    }
+
+    let mut mc = MasterClient::connect(&master_addr).expect("connect master");
+
+    // ---- job A alone: must be expanded into the idle GPUs (R2) ----------
+    mc.submit(&SubmitSpec {
+        name: "jobA".into(),
+        gpus: 1,
+        steps: 1_500,
+        compute_ms: 10,
+        ..Default::default()
+    })
+    .unwrap();
+    let jobs = wait_for(&mut mc, "jobA to grow past its request", Duration::from_secs(90), |j| {
+        j.get("jobA").map(|a| a.parallelism > 1).unwrap_or(false)
+    });
+    assert!(jobs["jobA"].peak_p > 1, "R2 never expanded jobA: {:?}", jobs["jobA"]);
+
+    // ---- step monitor: Table-1 status by NAME through the KV ------------
+    // (the §3.1 stop-free guarantee: steps never go backwards — a restart
+    // would reset the counter)
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let stop = stop.clone();
+        let kv_addr = kv_addr.clone();
+        std::thread::spawn(move || {
+            let mut seen: HashMap<String, Vec<u64>> = HashMap::new();
+            let mut conns: HashMap<String, JobClient> = HashMap::new();
+            while !stop.load(Ordering::Relaxed) {
+                for name in ["jobA", "jobB", "jobC"] {
+                    if !conns.contains_key(name) {
+                        // resolve the job's ctl address by name via the KV
+                        let Ok(mut kv) = KvClient::connect(&kv_addr) else { continue };
+                        let Ok(Some((raw, _))) = kv.get(&format!("edl/jobs/{name}/ctl")) else {
+                            continue;
+                        };
+                        let addr = String::from_utf8_lossy(&raw).to_string();
+                        if let Ok(c) = JobClient::connect(&addr) {
+                            conns.insert(name.to_string(), c);
+                        }
+                    }
+                    if let Some(c) = conns.get_mut(name) {
+                        match c.status() {
+                            Ok(st) => seen.entry(name.to_string()).or_default().push(st.step),
+                            // job finished / leader gone: stop polling it
+                            Err(_) => {
+                                conns.remove(name);
+                            }
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(150));
+            }
+            seen
+        })
+    };
+
+    // ---- contention: jobs B and C force a graceful shrink of A (R0) -----
+    for name in ["jobB", "jobC"] {
+        mc.submit(&SubmitSpec {
+            name: name.into(),
+            gpus: 1,
+            steps: 150,
+            compute_ms: 10,
+            ..Default::default()
+        })
+        .unwrap();
+    }
+    wait_for(
+        &mut mc,
+        "jobB and jobC to run concurrently with jobA",
+        Duration::from_secs(120),
+        |j| {
+            ["jobB", "jobC"].iter().all(|n| {
+                j.get(*n)
+                    .map(|i| i.parallelism >= 1 || i.phase == "finished")
+                    .unwrap_or(false)
+            })
+        },
+    );
+
+    // ---- everything completes; A grew AND shrank live -------------------
+    let finished =
+        wait_for(&mut mc, "all three jobs to finish", Duration::from_secs(240), |j| {
+            j.len() == 3 && j.values().all(|i| i.phase == "finished")
+        });
+    let a = &finished["jobA"];
+    assert!(a.peak_p > a.requested_p, "jobA never expanded into idle GPUs: {a:?}");
+    assert!(a.grow_ops >= 1, "no live stop-free grow committed: {a:?}");
+    assert!(a.shrink_ops >= 1, "no live graceful shrink on contention: {a:?}");
+    for i in finished.values() {
+        assert_eq!(i.parallelism, 0, "finished job still holds GPUs: {i:?}");
+        assert!(i.step >= 150, "job finished before its step target: {i:?}");
+    }
+
+    // ---- step monotonicity: no job ever restarted -----------------------
+    stop.store(true, Ordering::Relaxed);
+    let seen = monitor.join().expect("monitor thread");
+    assert!(
+        seen.contains_key("jobA"),
+        "monitor never resolved jobA through the KV: {seen:?}"
+    );
+    for (name, steps) in &seen {
+        assert!(
+            steps.windows(2).all(|w| w[0] <= w[1]),
+            "{name} steps went backwards (a restart?): {steps:?}"
+        );
+    }
+
+    // the monitor observed jobA across the shrink — its step trace spans
+    // the contention window and still never decreased
+    let a_steps = &seen["jobA"];
+    assert!(a_steps.len() >= 3, "too few jobA status samples: {a_steps:?}");
+
+    mc.shutdown().expect("master shutdown");
+}
