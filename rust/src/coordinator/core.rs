@@ -98,6 +98,15 @@ struct WInfo {
     state: WState,
     step_times: std::collections::VecDeque<f64>,
     straggle_hits: u32,
+    /// When this worker last entered a *limbo* state — attached but not
+    /// ready, ready but orphaned from an aborted operation, or switched
+    /// out but its Goodbye still outstanding. The §4.2 failure detector
+    /// only watches the *active* set at barriers; this timestamp lets the
+    /// tick sweep reclaim workers that died in limbo (see
+    /// [`LeaderCore::sweep_limbo_workers`]), so a joiner that crashes
+    /// mid-preparation cannot wedge a scale operation forever and an exit
+    /// victim whose Goodbye was lost cannot leak its data shard.
+    limbo_since_ms: f64,
 }
 
 struct SyncInfo {
@@ -133,7 +142,9 @@ pub struct LeaderCore {
     op_reply: Option<ReqToken>,
     joining: Vec<NodeId>,
     op_exiting: Vec<NodeId>,
-    ckpt_pending: Option<(PathBuf, ReqToken)>,
+    /// (path, token, asked_at_ms) — at most ONE checkpoint in flight; the
+    /// tick sweep aborts it if the parameter source dies before answering
+    ckpt_pending: Option<(PathBuf, ReqToken, f64)>,
     pending_load: Option<LoadCtx>,
     /// Spawn actions emitted whose worker has not attached yet. In the
     /// TCP deployment a spawned worker process takes real time to connect
@@ -235,6 +246,8 @@ impl LeaderCore {
             Event::Tick => {
                 if !self.stopping {
                     self.check_failures();
+                    self.sweep_limbo_workers();
+                    self.expire_stale_checkpoint();
                 }
             }
             Event::CheckpointData { data } => self.handle_checkpoint_data(data),
@@ -392,17 +405,31 @@ impl LeaderCore {
         if !all_ready {
             return;
         }
+        // Failures since the request may have shrunk the active set to the
+        // exit victims themselves: with nobody left to keep training (and
+        // broadcast the model to joiners), abort with a typed error — the
+        // request-time validation cannot see future failures (chaos-harness
+        // finding; the seed panicked here).
+        let Some(&broadcast_src) =
+            self.active.iter().find(|id| !self.op_exiting.contains(id))
+        else {
+            self.joining.clear();
+            self.op_exiting.clear();
+            if let Some(token) = self.op_reply.take() {
+                self.reply(
+                    token,
+                    Response::Err(ElasticError::Aborted(
+                        "every surviving worker is an exit victim".into(),
+                    )),
+                );
+            }
+            return;
+        };
         let at_step = self.step + self.switch_k();
         let mut new_ring: Vec<NodeId> =
             self.active.iter().copied().filter(|id| !self.op_exiting.contains(id)).collect();
         new_ring.extend(self.joining.iter().copied());
-        assert!(!new_ring.is_empty(), "scale-in would remove every worker");
         let lb = self.local_batch_for(new_ring.len() as u32);
-        let broadcast_src = *self
-            .active
-            .iter()
-            .find(|id| !self.op_exiting.contains(id))
-            .expect("need one surviving worker to broadcast");
         let plan = SwitchPlan {
             at_step,
             ring: Arc::new(new_ring),
@@ -477,6 +504,14 @@ impl LeaderCore {
                 for id in &plan.joiners {
                     if let Some(w) = self.workers.get_mut(id) {
                         w.state = WState::Active;
+                    }
+                }
+                for id in &plan.exiting {
+                    // exit victims stay known until their Goodbye; restart
+                    // their limbo clock so a lost Goodbye is reclaimed by
+                    // the tick sweep instead of leaking their data shard
+                    if let Some(w) = self.workers.get_mut(id) {
+                        w.limbo_since_ms = self.now_ms;
                     }
                 }
                 self.joining.clear();
@@ -585,6 +620,80 @@ impl LeaderCore {
         self.approximate_recover();
     }
 
+    /// Reclaim workers stuck in limbo past the failure timeout (§4.2
+    /// hardening found by the chaos harness). Three limbo shapes:
+    ///
+    ///  * attached but never Ready (joiner crashed during execution-context
+    ///    preparation) — would hold the §3.1 in-flight guard forever;
+    ///  * Ready but no longer part of any pending operation (its scale-out
+    ///    aborted when a sibling died) — a ghost entry;
+    ///  * switched out of the ring but its Goodbye never arrived (exit
+    ///    victim partitioned at the boundary) — would keep its data shard
+    ///    in flight forever, so the epoch could never complete.
+    ///
+    /// Each is treated as a silent Goodbye: shard remainder back to the
+    /// pool, worker forgotten, pending operation re-evaluated.
+    fn sweep_limbo_workers(&mut self) {
+        if !self.started {
+            // pre-start founders are the shell's to reclaim (it owns the
+            // founder slots); the protocol has not begun
+            return;
+        }
+        let timeout_ms = self.cfg.failure_timeout.as_secs_f64() * 1e3;
+        let stale: Vec<NodeId> = self
+            .workers
+            .iter()
+            .filter(|(id, w)| {
+                let limit_ms = match w.state {
+                    // execution-context preparation is EXPECTED to be slow
+                    // (stop-free scaling exists to hide it) — only reclaim
+                    // a preparing joiner after a generous multiple
+                    WState::Joining { ready: false } => 4.0 * timeout_ms,
+                    WState::Joining { ready: true } if !self.joining.contains(id) => timeout_ms,
+                    WState::Active if !self.active.contains(id) => timeout_ms,
+                    _ => return false,
+                };
+                self.now_ms - w.limbo_since_ms > limit_ms
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        if stale.is_empty() {
+            return;
+        }
+        let affects_op = stale
+            .iter()
+            .any(|id| self.joining.contains(id) || self.op_exiting.contains(id));
+        for id in stale {
+            self.event(format!("limbo-timeout worker={id}"));
+            self.assigner.worker_left(id);
+            self.workers.remove(&id);
+        }
+        if affects_op {
+            // prunes the stale ids; aborts the operation if nothing is left
+            self.maybe_commit_scale();
+        }
+    }
+
+    /// A checkpoint whose parameter source died before uploading must not
+    /// hang its requester forever (chaos-harness finding): abort with a
+    /// typed error after the failure timeout — the caller retries and the
+    /// next attempt picks a live source.
+    fn expire_stale_checkpoint(&mut self) {
+        let timeout_ms = self.cfg.failure_timeout.as_secs_f64() * 1e3;
+        if let Some((_, _, asked_ms)) = self.ckpt_pending {
+            if self.now_ms - asked_ms > timeout_ms {
+                let (_, token, _) = self.ckpt_pending.take().unwrap();
+                self.event("checkpoint-timeout".into());
+                self.reply(
+                    token,
+                    Response::Err(ElasticError::Aborted(
+                        "checkpoint source never uploaded parameters".into(),
+                    )),
+                );
+            }
+        }
+    }
+
     /// approximate recovery (§4.2): survivors redo the current mini-batch's
     /// allreduce on the repaired ring — reply to those already waiting
     fn approximate_recover(&mut self) {
@@ -653,6 +762,7 @@ impl LeaderCore {
                         state: WState::Joining { ready: false },
                         step_times: Default::default(),
                         straggle_hits: 0,
+                        limbo_since_ms: self.now_ms,
                     },
                 );
                 if joiner {
@@ -700,6 +810,14 @@ impl LeaderCore {
                 }
             }
             WorkerEvent::NeedPartition { id } => {
+                if !self.workers.contains_key(&id) {
+                    // a delayed request from a worker already removed by the
+                    // failure detector: assigning would park the partition in
+                    // the ghost's in-flight slot forever and the epoch could
+                    // never complete (chaos-harness finding)
+                    self.event(format!("stale-needpartition worker={id}"));
+                    return;
+                }
                 if self.assigner.pool_empty() {
                     if self.assigner.epoch_exhausted() {
                         self.assigner.advance_epoch();
@@ -733,7 +851,7 @@ impl LeaderCore {
                 }
             }
             WorkerEvent::Params { id: _, step, params } => {
-                if let Some((path, token)) = self.ckpt_pending.take() {
+                if let Some((path, token, _)) = self.ckpt_pending.take() {
                     let mut e = Enc::with_capacity(params.len() * 4 + 256);
                     e.u64(step);
                     e.f32s(&params);
@@ -873,8 +991,17 @@ impl LeaderCore {
                 );
             }
             Request::Checkpoint { path } => {
-                if let Some(&src) = self.active.first() {
-                    self.ckpt_pending = Some((PathBuf::from(path), token));
+                if self.ckpt_pending.is_some() {
+                    // a second in-flight checkpoint would orphan the first
+                    // requester's token (it could never be answered)
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::InvalidRequest(
+                            "a checkpoint is already in progress".into(),
+                        )),
+                    );
+                } else if let Some(&src) = self.active.first() {
+                    self.ckpt_pending = Some((PathBuf::from(path), token, self.now_ms));
                     self.send_ctrl(src, CtrlMsg::SendParams);
                 } else {
                     self.reply(
@@ -884,8 +1011,17 @@ impl LeaderCore {
                 }
             }
             Request::Restore { path } => {
-                self.pending_load = Some(LoadCtx::Manual(token));
-                self.out.push(Action::LoadCheckpoint { path: PathBuf::from(path) });
+                if self.pending_load.is_some() {
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::InvalidRequest(
+                            "a checkpoint load is already in progress".into(),
+                        )),
+                    );
+                } else {
+                    self.pending_load = Some(LoadCtx::Manual(token));
+                    self.out.push(Action::LoadCheckpoint { path: PathBuf::from(path) });
+                }
             }
             Request::Stop => {
                 self.stopping = true;

@@ -5,6 +5,7 @@
 //! against etcd on the paper's testbed).
 
 use super::{KvCore, Ms};
+use crate::transport::{tag, FaultCell, FaultHook, FrameFate};
 use crate::wire::{read_frame, write_frame, Dec, Enc};
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
@@ -27,6 +28,7 @@ pub struct KvServer {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     expiry_thread: Option<std::thread::JoinHandle<()>>,
+    faults: Arc<FaultCell>,
 }
 
 impl KvServer {
@@ -42,17 +44,20 @@ impl KvServer {
         let listener = TcpListener::bind(bind_addr)?;
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
+        let faults = Arc::new(FaultCell::new());
 
         let accept_core = core.clone();
         let accept_stop = stop.clone();
+        let accept_faults = faults.clone();
         listener.set_nonblocking(true)?;
         let accept_thread = std::thread::spawn(move || {
             while !accept_stop.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let core = accept_core.clone();
+                        let faults = accept_faults.clone();
                         std::thread::spawn(move || {
-                            let _ = serve_conn(stream, core);
+                            let _ = serve_conn(stream, core, faults);
                         });
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -73,11 +78,27 @@ impl KvServer {
             }
         });
 
-        Ok(KvServer { addr, core, stop, accept_thread: Some(accept_thread), expiry_thread: Some(expiry_thread) })
+        Ok(KvServer {
+            addr,
+            core,
+            stop,
+            accept_thread: Some(accept_thread),
+            expiry_thread: Some(expiry_thread),
+            faults,
+        })
     }
 
     pub fn core(&self) -> &Arc<KvCore> {
         &self.core
+    }
+
+    /// Arm/disarm the chaos-harness fault hook over incoming KV requests
+    /// (`tag::KV` family; node key `(0, 0)`). `Delay` stalls the request
+    /// before it is applied — a delayed lease refresh lands AFTER expiry
+    /// and correctly loses leadership; `Drop` severs the connection, like
+    /// a partition between the client and the coordination service.
+    pub fn set_fault_hook(&self, hook: Option<Arc<dyn FaultHook>>) {
+        self.faults.arm(hook);
     }
 }
 
@@ -93,10 +114,25 @@ impl Drop for KvServer {
     }
 }
 
-fn serve_conn(stream: TcpStream, core: Arc<KvCore>) -> crate::wire::Result<()> {
+fn serve_conn(
+    stream: TcpStream,
+    core: Arc<KvCore>,
+    faults: Arc<FaultCell>,
+) -> crate::wire::Result<()> {
     // framed request/reply loop shared with api::JobServer (§4.4: Nagle
     // disabled on every coordination socket)
     crate::wire::serve_framed(stream, move |req| {
+        match faults.fate(0, 0, tag::KV) {
+            FrameFate::Deliver | FrameFate::Duplicate => {}
+            FrameFate::Delay(d) => std::thread::sleep(d),
+            FrameFate::Drop => {
+                // partition: sever the connection instead of replying
+                return Err(crate::wire::WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "kv fault hook dropped the request",
+                )));
+            }
+        }
         let mut d = Dec::new(req);
         let op = d.u8()?;
         let now = wall_ms();

@@ -211,6 +211,26 @@ impl Assigner {
         self.start_epoch();
     }
 
+    /// Sample ranges of the CURRENT epoch not yet credited as consumed:
+    /// unassigned partitions, returned remainders, and the unconsumed
+    /// tails of in-flight assignments. Used by the chaos harness to
+    /// rebuild its independent coverage tracker from a decoded checkpoint
+    /// (everything outside these ranges is credited after the restore's
+    /// `reset_in_flight`).
+    pub fn outstanding_ranges(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self
+            .queue
+            .iter()
+            .map(|&idx| {
+                let m = self.table.partition(idx, self.epoch);
+                (m.start, m.len)
+            })
+            .collect();
+        v.extend(self.returned.iter().map(|m| (m.start, m.len)));
+        v.extend(self.in_flight.values().map(|(m, done)| (m.start + done, m.len - done)));
+        v
+    }
+
     /// Serialise assigner state for leader handoff (§4.2: the departing
     /// leader sends the permutation list + progress to the new leader) and
     /// for checkpointing.

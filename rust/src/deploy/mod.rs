@@ -36,7 +36,7 @@ use crate::coordinator::{
 };
 use crate::data::corpus::Corpus;
 use crate::rpc::{FromLeader, ToLeader};
-use crate::transport::{NodeId, TcpNode};
+use crate::transport::{tag, FaultCell, FaultHook, FrameFate, NodeId, TcpNode};
 use crate::util::now_ms;
 use crate::wire;
 use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
@@ -102,6 +102,7 @@ pub struct LeaderEndpoint {
     shell: Option<std::thread::JoinHandle<TrainReport>>,
     accept_stop: Arc<AtomicBool>,
     step_cell: Arc<StepCell>,
+    faults: Arc<FaultCell>,
 }
 
 impl LeaderEndpoint {
@@ -146,9 +147,11 @@ impl LeaderEndpoint {
         let reclaim_timeout = cfg.failure_timeout;
         let core = LeaderCore::new(cfg, backend, assigner, n_workers);
         let step_cell = StepCell::new();
+        let faults = Arc::new(FaultCell::new());
         let shell = DeployShell {
             core,
             rx,
+            faults: faults.clone(),
             writers: HashMap::new(),
             joiner_flag: HashMap::new(),
             attached: std::collections::HashSet::new(),
@@ -169,13 +172,21 @@ impl LeaderEndpoint {
             .spawn(move || shell.run())
             .expect("spawn deploy leader");
 
-        Ok(LeaderEndpoint { addr, tx, shell: Some(shell_handle), accept_stop, step_cell })
+        Ok(LeaderEndpoint { addr, tx, shell: Some(shell_handle), accept_stop, step_cell, faults })
     }
 
     /// A cloneable Table-1 control handle (wrap it in `api::JobServer` to
     /// expose the job to remote schedulers).
     pub fn handle(&self) -> LeaderHandle {
         LeaderHandle { tx: self.tx.clone(), step_cell: self.step_cell.clone() }
+    }
+
+    /// Arm/disarm the chaos-harness fault hook on the leader's OUTBOUND
+    /// control frames (`rpc::FromLeader`, from pseudo-node 0 to the worker
+    /// id, `tag::RPC` family). Zero-cost when off; the §4.2 failure
+    /// detector is what turns injected silence into recovery.
+    pub fn set_fault_hook(&self, hook: Option<Arc<dyn FaultHook>>) {
+        self.faults.arm(hook);
     }
 
     /// Block until the job stops (a scheduler issued `stop`), then tear
@@ -234,6 +245,8 @@ fn conn_loop(stream: TcpStream, tx: Sender<In>) -> wire::Result<()> {
 struct DeployShell {
     core: LeaderCore,
     rx: Receiver<In>,
+    /// chaos-harness hook over outbound control frames (off by default)
+    faults: Arc<FaultCell>,
     /// control-message writers, one socket per registered worker
     writers: HashMap<NodeId, TcpStream>,
     joiner_flag: HashMap<NodeId, bool>,
@@ -387,14 +400,31 @@ impl DeployShell {
     }
 
     fn send_frame(&mut self, to: NodeId, msg: &FromLeader) {
-        let dead = match self.writers.get_mut(&to) {
-            Some(w) => wire::write_frame(w, &msg.encode()).is_err(),
-            None => false,
-        };
-        if dead {
-            // worker process gone: drop the route; the barrier-timeout
-            // failure detector removes it from the job
-            self.writers.remove(&to);
+        // the chaos seam: the SAME code path runs with faults armed — a
+        // dropped frame here looks exactly like a flaky network to the
+        // worker, and the protocol must recover on its own. The Welcome
+        // handshake is exempt: connection setup is retried by the worker
+        // process itself, and faulting it only tests the reclaim sweep.
+        let mut copies = 1u32;
+        if !matches!(msg, FromLeader::Welcome { .. }) {
+            match self.faults.fate(0, to, tag::RPC) {
+                FrameFate::Deliver => {}
+                FrameFate::Drop => return,
+                FrameFate::Duplicate => copies = 2,
+                FrameFate::Delay(d) => std::thread::sleep(d),
+            }
+        }
+        for _ in 0..copies {
+            let dead = match self.writers.get_mut(&to) {
+                Some(w) => wire::write_frame(w, &msg.encode()).is_err(),
+                None => false,
+            };
+            if dead {
+                // worker process gone: drop the route; the barrier-timeout
+                // failure detector removes it from the job
+                self.writers.remove(&to);
+                break;
+            }
         }
     }
 

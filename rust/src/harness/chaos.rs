@@ -1,0 +1,1812 @@
+//! Deterministic chaos: a FoundationDB-style simulation of the WHOLE
+//! coordination stack under an injected clock, a seeded RNG and a
+//! [`FaultPlan`].
+//!
+//! From one `u64` seed, [`ChaosSchedule::generate`] derives a reproducible
+//! script of worker kills, partitions, delayed/duplicated control frames,
+//! concurrent `Grow`/`Shrink`/`Migrate` decisions, checkpoints and leader
+//! restarts. [`ChaosCluster::run`] executes that script against the REAL
+//! [`LeaderCore`] (the same state machine all three production shells
+//! drive) surrounded by virtual workers that model `worker_loop` at
+//! protocol granularity — no threads, no sockets, no wall clock, so the
+//! run is bit-reproducible: same seed ⇒ byte-identical event log.
+//!
+//! After every event the harness checks the paper's invariants with
+//! INDEPENDENT mirrors (never by trusting the leader's own bookkeeping):
+//!
+//!  * **step monotonicity** — the status step never decreases except at a
+//!    restore, and then lands exactly on the checkpointed step;
+//!  * **no lost / double-applied adjustment** — every Table-1 request gets
+//!    exactly one reply; an `Ok` Grow's joiners are in the active set at
+//!    commit, an `Ok` Shrink's victims are not; after quiescing, the
+//!    leader's member list equals the set of virtual workers that are
+//!    alive and training;
+//!  * **barrier-loss integrity** — a mirror recomputes every completed
+//!    barrier's weighted loss from the control frames it actually
+//!    delivered; a stale or foreign Sync counted by the leader (e.g. the
+//!    PR 3 stale-Sync guard reverted) shows up as a loss mismatch;
+//!  * **exactly-once sample accounting** (§4.3) — every credit the leader
+//!    can make (ShardDone, Goodbye, silent death, requeue) is mirrored
+//!    into a per-epoch coverage map; overlaps fail immediately, and a
+//!    completed epoch must cover the dataset exactly. A restore rebuilds
+//!    the map from the decoded checkpoint, so post-recovery re-consumption
+//!    is handled like the leader handles it;
+//!  * **checkpoint-recovery convergence** — the restored step equals the
+//!    checkpointed step and the restored model equals the fault-free
+//!    oracle state for that step (virtual params are a pure function of
+//!    the step count);
+//!  * **liveness** — the run must keep completing barriers and must
+//!    quiesce (all operations answered, all corpses reaped) once faults
+//!    heal, within a virtual deadline.
+
+use super::fault::{Family, FaultKind, FaultPlan, FaultRule};
+use crate::api::{JobStatus, Request, Response};
+use crate::coordinator::{
+    decode_checkpoint, Action, CtrlMsg, Event, LeaderCore, SwitchPlan, TrainReport, TrainerConfig,
+    WorkerEvent,
+};
+use crate::data::PartitionMeta;
+use crate::transport::{FrameFate, NodeId};
+use crate::util::rng::Pcg;
+use crate::worker::SimBackend;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+use std::sync::Arc;
+
+/// The leader's pseudo node id in the fault plan's `(from, to)` key space
+/// (workers are 1-based).
+pub const LEADER: NodeId = 0;
+
+const CTRL_LAT_US: u64 = 500;
+const SPAWN_LAG_US: u64 = 20_000;
+const TICK_US: u64 = 100_000;
+const POLL_US: u64 = 450_000;
+const CKPT_PATH: &str = "/virtual/ckpt.bin";
+
+// ---------------------------------------------------------------------------
+// schedule generation
+// ---------------------------------------------------------------------------
+
+/// One scripted chaos step (targets are chosen at execution time from the
+/// same seeded stream, so the whole run derives from one `u64`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChaosEvent {
+    /// nothing — a settle window
+    Calm,
+    /// Table-1 scale-out by `n` workers
+    Grow(u32),
+    /// Table-1 scale-in by `n` workers
+    Shrink(u32),
+    /// Table-1 merged migration: -1 worker, +1 worker, ONE switch
+    Migrate,
+    /// two conflicting adjustments issued back-to-back (§3.1 guard)
+    Storm,
+    /// a worker dies silently (§4.2 forced exit)
+    Kill,
+    /// a worker is partitioned from the leader for `ms` (heals after)
+    Partition { ms: u64 },
+    /// control frames in one direction delayed by `delay_ms` for `ms`
+    DelayLink { ms: u64, delay_ms: u64 },
+    /// leader→worker barrier releases duplicated for `ms` (retransmission)
+    DupRelease { ms: u64 },
+    /// write a consistent checkpoint (model + §4.3 pipeline state)
+    Checkpoint,
+    /// the leader machine is lost; a new leader restores from checkpoint
+    RestartLeader,
+    /// a scale-out whose worker processes never arrive (spawn timeout)
+    GrowGhost,
+}
+
+/// The generated script plus the sizing knobs derived from the seed.
+#[derive(Debug, Clone)]
+pub struct ChaosSchedule {
+    pub seed: u64,
+    pub founders: usize,
+    pub n_samples: u64,
+    pub n_partitions: u64,
+    /// (gap before the event in virtual ms, event)
+    pub events: Vec<(u64, ChaosEvent)>,
+}
+
+impl ChaosSchedule {
+    /// Derive a schedule from one seed. `max_events` bounds the script
+    /// (the shrinker replays prefixes of the same seed's script).
+    pub fn generate(seed: u64, max_events: usize) -> ChaosSchedule {
+        let mut rng = Pcg::seeded(seed ^ 0xC0A5_CADE);
+        let founders = 2 + rng.gen_range(3) as usize; // 2..=4
+        let n_partitions = 6 + rng.gen_range(10); // 6..=15
+        let n_samples = n_partitions * (24 + rng.gen_range(40)); // whole-ish partitions
+        let n_events = (4 + rng.gen_range(7) as usize).min(max_events); // 4..=10
+        let mut events = Vec::new();
+        let mut checkpointed = false;
+        for _ in 0..n_events {
+            let gap = 900 + rng.gen_range(2600); // 0.9..3.5 s settle
+            let ev = match rng.gen_range(100) {
+                0..=9 => ChaosEvent::Calm,
+                10..=24 => ChaosEvent::Grow(1 + rng.gen_range(2) as u32),
+                25..=36 => ChaosEvent::Shrink(1 + rng.gen_range(2) as u32),
+                37..=44 => ChaosEvent::Migrate,
+                45..=51 => ChaosEvent::Storm,
+                52..=64 => ChaosEvent::Kill,
+                65..=72 => ChaosEvent::Partition { ms: 400 + rng.gen_range(4200) },
+                73..=79 => ChaosEvent::DelayLink {
+                    ms: 500 + rng.gen_range(1500),
+                    delay_ms: 100 + rng.gen_range(1200),
+                },
+                80..=84 => ChaosEvent::DupRelease { ms: 500 + rng.gen_range(1500) },
+                85..=92 => ChaosEvent::Checkpoint,
+                93..=96 if checkpointed => ChaosEvent::RestartLeader,
+                93..=96 => ChaosEvent::Checkpoint,
+                _ => ChaosEvent::GrowGhost,
+            };
+            if ev == ChaosEvent::Checkpoint {
+                checkpointed = true;
+            }
+            events.push((gap, ev));
+        }
+        ChaosSchedule { seed, founders, n_samples, n_partitions, events }
+    }
+
+    /// The same schedule truncated to its first `n` events (seed
+    /// shrinking: find the shortest failing prefix).
+    pub fn prefix(&self, n: usize) -> ChaosSchedule {
+        let mut s = self.clone();
+        s.events.truncate(n);
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// outcome
+// ---------------------------------------------------------------------------
+
+/// What a finished (passing) run looked like.
+#[derive(Debug)]
+pub struct ChaosReport {
+    /// the deterministic event log — byte-identical across replays
+    pub log: Vec<String>,
+    /// barriers completed across all leader generations
+    pub barriers: u64,
+    /// chaos events executed
+    pub events_run: usize,
+    /// frames the fault plan affected
+    pub fault_hits: u64,
+    /// leader generations (1 + restarts)
+    pub generations: u32,
+}
+
+/// An invariant violation (or a panic inside the stack), with the log
+/// tail for debugging.
+#[derive(Debug)]
+pub struct ChaosFailure {
+    pub what: String,
+    pub log_tail: Vec<String>,
+}
+
+impl std::fmt::Display for ChaosFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{}", self.what)?;
+        for l in &self.log_tail {
+            writeln!(f, "  | {l}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Run one seed end to end. Panics inside the stack (e.g. a leader
+/// assertion) are caught and reported as failures with the seed's log.
+pub fn run_seed(seed: u64) -> Result<ChaosReport, ChaosFailure> {
+    run_schedule(&ChaosSchedule::generate(seed, usize::MAX))
+}
+
+/// Run an explicit schedule (the shrinker's entry point).
+pub fn run_schedule(schedule: &ChaosSchedule) -> Result<ChaosReport, ChaosFailure> {
+    let sched = schedule.clone();
+    match std::panic::catch_unwind(move || ChaosCluster::new(sched).run()) {
+        Ok(r) => r,
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "non-string panic".into());
+            Err(ChaosFailure { what: format!("panic inside the stack: {msg}"), log_tail: vec![] })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// virtual worker
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum WSt {
+    /// attached, waiting for the leader's Ok
+    WaitOk,
+    /// admitted joiner waiting for the model broadcast at the boundary
+    WaitBroadcast,
+    /// collecting the local mini-batch from the dynamic pipeline
+    Gather,
+    /// device compute in progress (a StepDone item is queued)
+    Compute,
+    /// Sync sent, waiting for the barrier release
+    WaitGo,
+    /// exited (graceful, Stop, or fenced)
+    Gone,
+}
+
+struct VWorker {
+    machine: String,
+    alive: bool,
+    st: WSt,
+    step: u64,
+    local_batch: u32,
+    gathered: u32,
+    shard: Option<(PartitionMeta, u64)>,
+    pending_switch: Option<SwitchPlan>,
+    step_us: u64,
+    /// invalidates queued StepDone items after restores/restarts
+    compute_seq: u64,
+}
+
+/// Deterministic per-barrier worker loss: step- AND member-sensitive, so
+/// a mis-counted Sync (wrong step or wrong worker) shifts the weighted
+/// mean the mirror recomputes.
+fn vloss(id: NodeId, step: u64) -> f32 {
+    (step % 97) as f32 * 0.125 + id as f32 * 1e-3
+}
+
+// ---------------------------------------------------------------------------
+// event queue
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Q {
+    ToLeader(NodeId, WorkerEvent),
+    ToWorker(NodeId, CtrlMsg),
+    StepDone(NodeId, u64),
+    SpawnArrive(NodeId, String),
+    SpawnFailed(NodeId),
+    /// execution-context preparation finished: the worker sends Ready
+    WorkerReady(NodeId),
+    /// quiesce conditions held at a poll: run the settle checks once the
+    /// in-flight deliveries of that instant have drained
+    Settle,
+    Tick,
+    Poll,
+    Chaos(usize),
+}
+
+struct Item {
+    at_us: u64,
+    seq: u64,
+    gen: u32,
+    q: Q,
+}
+
+impl PartialEq for Item {
+    fn eq(&self, o: &Item) -> bool {
+        self.at_us == o.at_us && self.seq == o.seq
+    }
+}
+impl Eq for Item {}
+impl PartialOrd for Item {
+    fn partial_cmp(&self, o: &Item) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Item {
+    fn cmp(&self, o: &Item) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: reverse so the EARLIEST item pops first
+        (o.at_us, o.seq).cmp(&(self.at_us, self.seq))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// invariant state
+// ---------------------------------------------------------------------------
+
+/// Independent §4.3 coverage mirror: per-epoch consumed marks.
+struct Coverage {
+    n: u64,
+    epochs: BTreeMap<u64, Vec<bool>>,
+}
+
+impl Coverage {
+    fn new(n: u64) -> Coverage {
+        Coverage { n, epochs: BTreeMap::new() }
+    }
+
+    fn credit(&mut self, epoch: u64, start: u64, len: u64) -> Result<(), String> {
+        let map = self.epochs.entry(epoch).or_insert_with(|| vec![false; self.n as usize]);
+        for i in start..start + len {
+            let slot = map
+                .get_mut(i as usize)
+                .ok_or_else(|| format!("credit out of range: epoch {epoch} sample {i}"))?;
+            if *slot {
+                return Err(format!("sample {i} credited twice in epoch {epoch}"));
+            }
+            *slot = true;
+        }
+        Ok(())
+    }
+
+    /// Epoch `done` finished (we saw epoch `done+1` begin): it must cover
+    /// the dataset exactly once.
+    fn check_complete(&self, done: u64) -> Result<(), String> {
+        match self.epochs.get(&done) {
+            Some(map) => {
+                let missing = map.iter().filter(|&&b| !b).count();
+                if missing > 0 {
+                    return Err(format!("epoch {done} completed with {missing} samples omitted"));
+                }
+                Ok(())
+            }
+            None => Err(format!("epoch {done} completed but nothing was ever credited")),
+        }
+    }
+
+    /// Rebuild after a restore: the restored epoch's map is everything
+    /// outside the decoded assigner's outstanding ranges; later epochs are
+    /// rolled back entirely.
+    fn rebuild(&mut self, epoch: u64, outstanding: &[(u64, u64)]) {
+        self.epochs.retain(|&e, _| e < epoch);
+        let mut map = vec![true; self.n as usize];
+        for &(s, l) in outstanding {
+            for i in s..s + l {
+                map[i as usize] = false;
+            }
+        }
+        self.epochs.insert(epoch, map);
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum OpKind {
+    Grow,
+    Shrink,
+    Migrate,
+    Ckpt,
+    Poll,
+    Stop,
+}
+
+struct OpRec {
+    kind: OpKind,
+    gen: u32,
+    replies: u32,
+    /// joiners spawned for a Grow/Migrate (checked at the Ok reply)
+    spawned: Vec<NodeId>,
+    /// victims of a Shrink/Migrate (checked at the Ok reply)
+    victims: Vec<NodeId>,
+}
+
+// ---------------------------------------------------------------------------
+// the cluster
+// ---------------------------------------------------------------------------
+
+pub struct ChaosCluster {
+    sched: ChaosSchedule,
+    plan: Arc<FaultPlan>,
+    rng: Pcg,
+    now_us: u64,
+    seq: u64,
+    queue: BinaryHeap<Item>,
+    core: Option<LeaderCore>,
+    gen: u32,
+    reports: Vec<TrainReport>,
+    vfs: HashMap<String, Vec<u8>>,
+    workers: BTreeMap<NodeId, VWorker>,
+    log: Vec<String>,
+
+    // mirrors
+    tokens: BTreeMap<u64, OpRec>,
+    next_token: u64,
+    pending_ops: usize,
+    leader_inflight: HashMap<NodeId, (PartitionMeta, u64)>,
+    coverage: Coverage,
+    max_epoch_seen: u64,
+    cur_ring: Vec<NodeId>,
+    gracefully_left: BTreeSet<NodeId>,
+    sync_seen: HashMap<(u32, NodeId, u64), (f32, f32)>,
+    predicted: Vec<(u32, u64, f32)>,
+    last_loaded_ckpt: Option<Vec<u8>>,
+    /// min checkpoint step restored since the last status poll (None =
+    /// no restore): the monotonicity exemption window
+    restored_since_poll: Option<u64>,
+    last_status: Option<JobStatus>,
+    last_status_step: u64,
+    barriers: u64,
+    last_barrier_us: u64,
+    killed: BTreeSet<NodeId>,
+    /// fault-clock ms until which each worker is partitioned
+    partitioned_until: HashMap<NodeId, u64>,
+    chaos_done: bool,
+    quiesce_step: u64,
+    settle_scheduled: bool,
+    stopped: bool,
+    failure: Option<String>,
+    events_run: usize,
+}
+
+impl ChaosCluster {
+    pub fn new(sched: ChaosSchedule) -> ChaosCluster {
+        let plan = FaultPlan::new(sched.seed);
+        let rng = Pcg::seeded(sched.seed ^ 0x5EED_F00D);
+        let n = sched.n_samples;
+        ChaosCluster {
+            sched,
+            plan,
+            rng,
+            now_us: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            core: None,
+            gen: 0,
+            reports: Vec::new(),
+            vfs: HashMap::new(),
+            workers: BTreeMap::new(),
+            log: Vec::new(),
+            tokens: BTreeMap::new(),
+            next_token: 0,
+            pending_ops: 0,
+            leader_inflight: HashMap::new(),
+            coverage: Coverage::new(n),
+            max_epoch_seen: 0,
+            cur_ring: Vec::new(),
+            gracefully_left: BTreeSet::new(),
+            sync_seen: HashMap::new(),
+            predicted: Vec::new(),
+            last_loaded_ckpt: None,
+            restored_since_poll: None,
+            last_status: None,
+            last_status_step: 0,
+            barriers: 0,
+            last_barrier_us: 0,
+            killed: BTreeSet::new(),
+            partitioned_until: HashMap::new(),
+            chaos_done: false,
+            quiesce_step: 0,
+            settle_scheduled: false,
+            stopped: false,
+            failure: None,
+            events_run: 0,
+        }
+    }
+
+    fn trainer_cfg(&self) -> TrainerConfig {
+        TrainerConfig {
+            agg_batch: 32,
+            lr: 0.1,
+            n_partitions: self.sched.n_partitions,
+            seed: self.sched.seed,
+            switch_allowance_ms: 200.0,
+            failure_timeout: std::time::Duration::from_secs(3),
+            straggler_mitigation: false,
+            straggler_ratio: 1.2,
+            straggler_window: 10,
+            approx_recovery: false,
+            checkpoint_path: Some(CKPT_PATH.into()),
+        }
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.now_us as f64 / 1e3
+    }
+
+    fn logln(&mut self, s: String) {
+        self.log.push(format!("{:>10} {s}", self.now_us));
+    }
+
+    fn fail(&mut self, what: String) {
+        if self.failure.is_none() {
+            self.logln(format!("INVARIANT-VIOLATION {what}"));
+            self.failure = Some(what);
+        }
+    }
+
+    fn push(&mut self, at_us: u64, q: Q) {
+        self.seq += 1;
+        self.queue.push(Item { at_us, seq: self.seq, gen: self.gen, q });
+    }
+
+    // -- fault-subjected message passing -------------------------------------
+
+    /// worker → leader control frame
+    fn wsend(&mut self, from: NodeId, ev: WorkerEvent) {
+        let fate = self.plan.fate_at(from, LEADER, Family::Rpc, self.now_us / 1000);
+        match fate {
+            FrameFate::Deliver => self.push(self.now_us + CTRL_LAT_US, Q::ToLeader(from, ev)),
+            FrameFate::Drop => {
+                self.logln(format!("net-drop {from}->leader {}", ev_name(&ev)));
+                // a Goodbye lost on the wire: the leader will reclaim the
+                // victim by timeout and credit its last REPORTED progress —
+                // mirror that credit now (no further Syncs can arrive)
+                if matches!(ev, WorkerEvent::Goodbye { .. }) {
+                    self.credit_inflight(from);
+                }
+            }
+            FrameFate::Duplicate => {
+                self.push(self.now_us + CTRL_LAT_US, Q::ToLeader(from, ev.clone()));
+                self.push(self.now_us + CTRL_LAT_US, Q::ToLeader(from, ev));
+            }
+            FrameFate::Delay(d) => {
+                let at = self.now_us + CTRL_LAT_US + d.as_micros() as u64;
+                self.push(at, Q::ToLeader(from, ev));
+            }
+        }
+    }
+
+    /// leader → worker control frame (from a core `Send` action)
+    fn lsend(&mut self, to: NodeId, msg: CtrlMsg) {
+        let fate = self.plan.fate_at(LEADER, to, Family::Rpc, self.now_us / 1000);
+        match fate {
+            FrameFate::Deliver => self.push(self.now_us + CTRL_LAT_US, Q::ToWorker(to, msg)),
+            FrameFate::Drop => self.logln(format!("net-drop leader->{to} {}", ctrl_name(&msg))),
+            FrameFate::Duplicate => {
+                self.push(self.now_us + CTRL_LAT_US, Q::ToWorker(to, msg.clone()));
+                self.push(self.now_us + CTRL_LAT_US, Q::ToWorker(to, msg));
+            }
+            FrameFate::Delay(d) => {
+                let at = self.now_us + CTRL_LAT_US + d.as_micros() as u64;
+                self.push(at, Q::ToWorker(to, msg));
+            }
+        }
+    }
+
+    // -- the run -------------------------------------------------------------
+
+    pub fn run(mut self) -> Result<ChaosReport, ChaosFailure> {
+        // stand up the core + founders
+        let cfg = self.trainer_cfg();
+        let backend = Arc::new(SimBackend::fast(4));
+        let assigner = cfg.assigner_for(self.sched.n_samples);
+        let mut core = LeaderCore::new(cfg, backend, assigner, self.sched.founders);
+        let mut founder_ids = Vec::new();
+        for _ in 0..self.sched.founders {
+            founder_ids.push(core.next_worker_id());
+        }
+        self.core = Some(core);
+        self.logln(format!(
+            "chaos-start seed={:#x} founders={} samples={} partitions={} events={}",
+            self.sched.seed,
+            self.sched.founders,
+            self.sched.n_samples,
+            self.sched.n_partitions,
+            self.sched.events.len()
+        ));
+        for id in founder_ids {
+            self.spawn_vworker(id, format!("m{id}"));
+            self.attach_worker(id, false);
+        }
+        self.push(TICK_US, Q::Tick);
+        self.push(POLL_US, Q::Poll);
+        let first_gap =
+            self.sched.events.first().map(|&(g, _)| g * 1000).unwrap_or(1_000_000);
+        self.push(self.now_us + first_gap, Q::Chaos(0));
+        if self.sched.events.is_empty() {
+            self.begin_quiesce();
+        }
+
+        // virtual deadline: the script plus a generous quiesce allowance
+        let total_gap: u64 = self.sched.events.iter().map(|&(g, _)| g).sum();
+        let deadline_us = (total_gap + 90_000) * 1000;
+        let mut processed: u64 = 0;
+
+        while self.failure.is_none() && !self.stopped {
+            let Some(item) = self.queue.pop() else {
+                self.fail("event queue drained before the run completed".into());
+                break;
+            };
+            processed += 1;
+            if processed > 3_000_000 {
+                self.fail("event-count cap exceeded (runaway schedule)".into());
+                break;
+            }
+            debug_assert!(item.at_us >= self.now_us, "time went backwards");
+            self.now_us = item.at_us.max(self.now_us);
+            if self.now_us > deadline_us {
+                self.fail(format!(
+                    "liveness: did not quiesce within the virtual deadline \
+                     (barriers={}, last at {} us)",
+                    self.barriers, self.last_barrier_us
+                ));
+                break;
+            }
+            // items addressed to a dead leader generation die with it
+            if item.gen != self.gen && !matches!(item.q, Q::Chaos(_)) {
+                continue;
+            }
+            match item.q {
+                Q::ToLeader(from, ev) => self.deliver_to_leader(from, ev),
+                Q::ToWorker(id, msg) => self.deliver_to_worker(id, msg),
+                Q::StepDone(id, cseq) => self.step_done(id, cseq),
+                Q::SpawnArrive(id, machine) => {
+                    self.spawn_vworker(id, machine);
+                    self.attach_worker(id, true);
+                }
+                Q::SpawnFailed(id) => self.do_core(Event::SpawnFailed { id }),
+                Q::WorkerReady(id) => {
+                    if self.workers.get(&id).map(|w| w.alive).unwrap_or(false) {
+                        self.wsend(id, WorkerEvent::Ready { id });
+                    }
+                }
+                Q::Settle => {
+                    if !self.stopped {
+                        self.settle_checks();
+                        self.logln("quiesce reached: stopping the job".into());
+                        self.issue_request(Request::Stop, OpKind::Stop, vec![], vec![]);
+                    }
+                }
+                Q::Tick => {
+                    self.do_core(Event::Tick);
+                    if !self.stopped {
+                        self.push(self.now_us + TICK_US, Q::Tick);
+                    }
+                }
+                Q::Poll => {
+                    self.issue_request(Request::Status, OpKind::Poll, vec![], vec![]);
+                    if !self.stopped {
+                        self.push(self.now_us + POLL_US, Q::Poll);
+                    }
+                }
+                Q::Chaos(ix) => self.run_chaos(ix),
+            }
+            self.check_quiesce();
+        }
+
+        // collect the last generation's report and run the final sweep
+        if let Some(core) = self.core.take() {
+            self.reports.push(core.into_report());
+        }
+        if self.failure.is_none() {
+            self.final_checks();
+        }
+        match self.failure.take() {
+            None => Ok(ChaosReport {
+                log: std::mem::take(&mut self.log),
+                barriers: self.barriers,
+                events_run: self.events_run,
+                fault_hits: self.plan.hits(),
+                generations: self.gen + 1,
+            }),
+            Some(what) => {
+                let tail: Vec<String> =
+                    self.log.iter().rev().take(40).rev().cloned().collect();
+                Err(ChaosFailure {
+                    what: format!("seed {:#x}: {what}", self.sched.seed),
+                    log_tail: tail,
+                })
+            }
+        }
+    }
+
+    // -- chaos script execution ----------------------------------------------
+
+    fn run_chaos(&mut self, ix: usize) {
+        let Some(&(_, ev)) = self.sched.events.get(ix) else {
+            return;
+        };
+        self.events_run = self.events_run.max(ix + 1);
+        self.logln(format!("chaos[{ix}] {ev:?}"));
+        let active = self.core.as_ref().map(|c| c.active_workers()).unwrap_or_default();
+        let alive_active: Vec<NodeId> = active
+            .iter()
+            .copied()
+            .filter(|id| self.workers.get(id).map(|w| w.alive).unwrap_or(false))
+            .collect();
+        match ev {
+            ChaosEvent::Calm => {}
+            ChaosEvent::Grow(n) => {
+                let n = n.min(8u32.saturating_sub(active.len() as u32));
+                if n > 0 {
+                    let machines: Vec<String> =
+                        (0..n).map(|i| format!("cm{}-{}", ix, i)).collect();
+                    self.issue_request(
+                        Request::ScaleOut { machines },
+                        OpKind::Grow,
+                        vec![],
+                        vec![],
+                    );
+                }
+            }
+            ChaosEvent::Shrink(n) => {
+                let n = (n as usize).min(alive_active.len().saturating_sub(1));
+                if n > 0 {
+                    let mut pool = alive_active.clone();
+                    let mut victims = Vec::new();
+                    for _ in 0..n {
+                        let i = self.rng.gen_range(pool.len() as u64) as usize;
+                        victims.push(pool.swap_remove(i));
+                    }
+                    victims.sort_unstable();
+                    self.issue_request(
+                        Request::ScaleIn { workers: victims.clone() },
+                        OpKind::Shrink,
+                        vec![],
+                        victims,
+                    );
+                }
+            }
+            ChaosEvent::Migrate => {
+                if !alive_active.is_empty() {
+                    let v = alive_active
+                        [self.rng.gen_range(alive_active.len() as u64) as usize];
+                    self.issue_request(
+                        Request::Migrate { remove: vec![v], add: vec![format!("mm{ix}")] },
+                        OpKind::Migrate,
+                        vec![],
+                        vec![v],
+                    );
+                }
+            }
+            ChaosEvent::Storm => {
+                // two conflicting requests in the same instant: at most one
+                // may commit, the other must get a typed §3.1 error
+                if alive_active.len() >= 2 {
+                    let v = alive_active
+                        [self.rng.gen_range(alive_active.len() as u64) as usize];
+                    self.issue_request(
+                        Request::ScaleOut { machines: vec![format!("sm{ix}")] },
+                        OpKind::Grow,
+                        vec![],
+                        vec![],
+                    );
+                    self.issue_request(
+                        Request::ScaleIn { workers: vec![v] },
+                        OpKind::Shrink,
+                        vec![],
+                        vec![v],
+                    );
+                }
+            }
+            ChaosEvent::Kill => {
+                // any alive worker may die — including a joiner mid-prep —
+                // but at least one alive ACTIVE worker must remain
+                let mut pool: Vec<NodeId> = self
+                    .workers
+                    .iter()
+                    .filter(|(_, w)| w.alive && w.st != WSt::Gone)
+                    .map(|(&id, _)| id)
+                    .collect();
+                if alive_active.len() < 2 {
+                    pool.retain(|id| !alive_active.contains(id));
+                }
+                if !pool.is_empty() {
+                    let victim = pool[self.rng.gen_range(pool.len() as u64) as usize];
+                    self.kill_worker(victim, "chaos-kill");
+                }
+            }
+            ChaosEvent::Partition { ms } => {
+                // never isolate the whole job: at least two unpartitioned
+                // active workers must remain (a total partition is a hung
+                // job by definition — nobody is left to open the barrier
+                // the failure detector anchors on)
+                let now = self.now_us / 1000;
+                let pool: Vec<NodeId> = alive_active
+                    .iter()
+                    .copied()
+                    .filter(|id| {
+                        self.partitioned_until.get(id).map(|&t| t <= now).unwrap_or(true)
+                    })
+                    .collect();
+                if pool.len() >= 2 {
+                    let w = pool[self.rng.gen_range(pool.len() as u64) as usize];
+                    self.plan.partition(&[w], &[LEADER], now, now + ms);
+                    self.partitioned_until.insert(w, now + ms);
+                    self.logln(format!("partition worker={w} for {ms}ms"));
+                }
+            }
+            ChaosEvent::DelayLink { ms, delay_ms } => {
+                if !alive_active.is_empty() {
+                    let w = alive_active
+                        [self.rng.gen_range(alive_active.len() as u64) as usize];
+                    let now = self.now_us / 1000;
+                    let rule = FaultRule::always(FaultKind::Delay(delay_ms))
+                        .window(now, now + ms)
+                        .family(Family::Rpc);
+                    let rule = if self.rng.gen_range(2) == 0 {
+                        self.logln(format!("delay-link {w}->leader {delay_ms}ms for {ms}ms"));
+                        rule.from_node(w).to_node(LEADER)
+                    } else {
+                        self.logln(format!("delay-link leader->{w} {delay_ms}ms for {ms}ms"));
+                        rule.from_node(LEADER).to_node(w)
+                    };
+                    self.plan.add(rule);
+                }
+            }
+            ChaosEvent::DupRelease { ms } => {
+                if !alive_active.is_empty() {
+                    let w = alive_active
+                        [self.rng.gen_range(alive_active.len() as u64) as usize];
+                    let now = self.now_us / 1000;
+                    self.plan.add(
+                        FaultRule::always(FaultKind::Duplicate)
+                            .from_node(LEADER)
+                            .to_node(w)
+                            .family(Family::Rpc)
+                            .window(now, now + ms),
+                    );
+                    self.logln(format!("dup-release leader->{w} for {ms}ms"));
+                }
+            }
+            ChaosEvent::Checkpoint => {
+                self.issue_request(
+                    Request::Checkpoint { path: CKPT_PATH.into() },
+                    OpKind::Ckpt,
+                    vec![],
+                    vec![],
+                );
+            }
+            ChaosEvent::RestartLeader => {
+                if self.vfs.contains_key(CKPT_PATH) {
+                    self.restart_leader();
+                } else {
+                    self.issue_request(
+                        Request::Checkpoint { path: CKPT_PATH.into() },
+                        OpKind::Ckpt,
+                        vec![],
+                        vec![],
+                    );
+                }
+            }
+            ChaosEvent::GrowGhost => {
+                self.issue_request(
+                    Request::ScaleOut { machines: vec![format!("ghost{ix}")] },
+                    OpKind::Grow,
+                    vec![],
+                    vec![],
+                );
+                // mark the freshly spawned slots as ghosts: their arrival
+                // items are cancelled and SpawnFailed fires instead
+                if let Some(tok) = self.tokens.get(&self.next_token) {
+                    let ghosts = tok.spawned.clone();
+                    // remove queued arrivals for these ids
+                    let mut keep = BinaryHeap::new();
+                    for it in std::mem::take(&mut self.queue).into_sorted_vec() {
+                        let ghosted =
+                            matches!(&it.q, Q::SpawnArrive(id, _) if ghosts.contains(id));
+                        if !ghosted {
+                            keep.push(it);
+                        }
+                    }
+                    self.queue = keep;
+                    for id in ghosts {
+                        self.push(self.now_us + 3_000_000, Q::SpawnFailed(id));
+                    }
+                }
+            }
+        }
+        // schedule the next chaos step (or begin quiescing)
+        match self.sched.events.get(ix + 1) {
+            Some(&(gap, _)) => self.push(self.now_us + gap * 1000, Q::Chaos(ix + 1)),
+            None => self.begin_quiesce(),
+        }
+    }
+
+    fn begin_quiesce(&mut self) {
+        self.plan.heal();
+        self.chaos_done = true;
+        self.quiesce_step = self.core.as_ref().map(|c| c.step()).unwrap_or(0);
+        self.logln("quiesce: faults healed, waiting for the stack to settle".into());
+    }
+
+    /// Once the script is done and faults are healed: wait until every
+    /// request is answered, every corpse is reaped and training advanced
+    /// well past the quiesce point, then stop the job (the run ends at
+    /// `Shutdown`). The step margin guarantees several clean barriers —
+    /// i.e. every transient (in-flight switches, pending detections) has
+    /// drained — before the settle checks run.
+    fn check_quiesce(&mut self) {
+        if !self.chaos_done || self.stopped {
+            return;
+        }
+        let Some(st) = self.last_status.as_ref() else { return };
+        let settled = self.pending_ops == 0
+            && st.workers.iter().all(|id| !self.killed.contains(id))
+            && st.step >= self.quiesce_step + 8;
+        if settled && !self.settle_scheduled {
+            // defer past the in-flight deliveries of this instant: a
+            // switch that committed in the same microsecond may still owe
+            // its victim the release that makes it exit
+            self.settle_scheduled = true;
+            self.push(self.now_us + 5_000, Q::Settle);
+        }
+    }
+
+    // -- leader lifecycle ----------------------------------------------------
+
+    fn restart_leader(&mut self) {
+        self.logln("leader-restart: machine lost, new leader restores from checkpoint".into());
+        if let Some(core) = self.core.take() {
+            self.reports.push(core.into_report());
+        }
+        self.gen += 1; // queued items of the old generation die
+        // requests parked in the old leader died with it: their tokens may
+        // stay unanswered (final_checks exempts older generations)
+        self.pending_ops = 0;
+        self.leader_inflight.clear();
+        self.cur_ring.clear();
+        // the new leader is a new machine with fresh connections: faults
+        // pinned to the old leader's links do not carry over (and a
+        // restart into a total partition would be an unrecoverable wedge
+        // by definition, not a protocol bug)
+        self.plan.heal();
+        self.partitioned_until.clear();
+        let survivors: Vec<NodeId> = self
+            .workers
+            .iter_mut()
+            .filter_map(|(&id, w)| {
+                if w.alive && w.st != WSt::Gone {
+                    w.st = WSt::WaitOk;
+                    w.shard = None;
+                    w.pending_switch = None;
+                    w.gathered = 0;
+                    w.compute_seq += 1;
+                    Some(id)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let cfg = self.trainer_cfg();
+        let backend = Arc::new(SimBackend::fast(4));
+        let assigner = cfg.assigner_for(self.sched.n_samples);
+        let mut core = LeaderCore::new(cfg, backend, assigner, survivors.len().max(1));
+        // re-registration is retried until it lands in the real system:
+        // deliver it synchronously, outside the fault plan
+        for &id in &survivors {
+            let machine = self.workers[&id].machine.clone();
+            let acts = core.handle(
+                self.now_ms(),
+                Event::Worker(WorkerEvent::Attach { id, machine, joiner: false }),
+            );
+            self.core = Some(core);
+            self.do_actions(acts);
+            core = self.core.take().unwrap();
+        }
+        self.core = Some(core);
+        for &id in &survivors {
+            self.do_core(Event::Worker(WorkerEvent::Ready { id }));
+        }
+        // the new leader immediately restores the job from the checkpoint
+        self.issue_request(Request::Restore { path: CKPT_PATH.into() }, OpKind::Ckpt, vec![], vec![]);
+        // monotonicity: the step will fall back to the checkpointed step
+        if let Ok((step, _, _)) = decode_checkpoint(
+            self.vfs.get(CKPT_PATH).cloned().unwrap_or_default().as_slice(),
+            self.sched.seed,
+        ) {
+            self.restored_since_poll =
+                Some(self.restored_since_poll.map_or(step, |p| p.min(step)));
+        }
+        self.push(self.now_us + TICK_US, Q::Tick);
+        self.push(self.now_us + POLL_US, Q::Poll);
+    }
+
+    fn kill_worker(&mut self, id: NodeId, why: &str) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            if w.alive {
+                w.alive = false;
+                self.killed.insert(id);
+                self.logln(format!("{why} worker={id}"));
+            }
+        }
+    }
+
+    // -- request plumbing ----------------------------------------------------
+
+    fn issue_request(
+        &mut self,
+        req: Request,
+        kind: OpKind,
+        spawned: Vec<NodeId>,
+        victims: Vec<NodeId>,
+    ) {
+        self.next_token += 1;
+        let token = self.next_token;
+        self.tokens.insert(token, OpRec { kind, gen: self.gen, replies: 0, spawned, victims });
+        if !matches!(kind, OpKind::Poll) {
+            self.pending_ops += 1;
+            self.logln(format!("request token={token} {req:?}"));
+        }
+        self.do_core(Event::Request { token, req });
+    }
+
+    // -- core event + action processing --------------------------------------
+
+    fn do_core(&mut self, ev: Event) {
+        let Some(mut core) = self.core.take() else { return };
+        let step_before = core.step();
+        let acts = core.handle(self.now_ms(), ev);
+        let step_after = core.step();
+        self.core = Some(core);
+        if step_after == step_before + 1 {
+            self.on_barrier_complete(step_before, &acts);
+        }
+        self.do_actions(acts);
+    }
+
+    fn do_actions(&mut self, acts: Vec<Action>) {
+        for a in acts {
+            self.do_action(a);
+        }
+    }
+
+    fn do_action(&mut self, a: Action) {
+        match a {
+            Action::Send { to, msg } => {
+                self.observe_ctrl(to, &msg);
+                self.lsend(to, msg);
+            }
+            Action::Reply { token, resp } => self.on_reply(token, resp),
+            Action::Spawn { id, machine, joiner } => {
+                self.logln(format!("spawn id={id} machine={machine} joiner={joiner}"));
+                // remember which op spawned it (the most recent request)
+                if let Some(rec) = self.tokens.get_mut(&self.next_token) {
+                    if matches!(rec.kind, OpKind::Grow | OpKind::Migrate) {
+                        rec.spawned.push(id);
+                    }
+                }
+                let _ = joiner;
+                self.push(self.now_us + SPAWN_LAG_US, Q::SpawnArrive(id, machine));
+            }
+            Action::WriteCheckpoint { token, path, bytes } => {
+                self.logln(format!("write-checkpoint {} bytes", bytes.len()));
+                // checkpoint-convergence: the blob must describe the
+                // fault-free oracle state for its step (virtual params are
+                // the pure function step ↦ [step])
+                match decode_checkpoint(&bytes, self.sched.seed) {
+                    Ok((step, params, _asg)) => {
+                        if params.first().copied() != Some(step as f32) {
+                            self.fail(format!(
+                                "checkpoint at step {step} holds params {:?} — diverged from \
+                                 the oracle state [{step}]",
+                                params.first()
+                            ));
+                        }
+                    }
+                    Err(e) => self.fail(format!("checkpoint blob undecodable: {e}")),
+                }
+                self.vfs.insert(path.to_string_lossy().into_owned(), bytes);
+                self.on_reply(token, Response::Ok);
+            }
+            Action::LoadCheckpoint { path } => {
+                let data = self.vfs.get(path.to_string_lossy().as_ref()).cloned();
+                self.logln(format!(
+                    "load-checkpoint {} -> {}",
+                    path.display(),
+                    data.as_ref().map(|d| d.len()).unwrap_or(0)
+                ));
+                self.last_loaded_ckpt = data.clone();
+                self.do_core(Event::CheckpointData { data });
+            }
+            Action::Shutdown => {
+                self.logln("shutdown".into());
+                self.stopped = true;
+            }
+        }
+    }
+
+    fn on_reply(&mut self, token: u64, resp: Response) {
+        let Some(rec) = self.tokens.get_mut(&token) else {
+            self.fail(format!("reply for a token never issued: {token}"));
+            return;
+        };
+        rec.replies += 1;
+        if rec.replies > 1 {
+            self.fail(format!("token {token} answered {} times", rec.replies));
+            return;
+        }
+        let kind = rec.kind;
+        let spawned = rec.spawned.clone();
+        let victims = rec.victims.clone();
+        if matches!(kind, OpKind::Poll) {
+            match resp {
+                Response::Status(st) => self.on_status(st),
+                other => self.fail(format!("status poll answered with {other:?}")),
+            }
+            return;
+        }
+        self.pending_ops = self.pending_ops.saturating_sub(1);
+        let ok = matches!(resp, Response::Ok);
+        self.logln(format!("reply token={token} {kind:?} -> {resp:?}"));
+        if !ok {
+            // a refused/aborted op must be a TYPED error, never a hang or
+            // a wrong-shaped reply (any typed error is acceptable here)
+            if !matches!(resp, Response::Err(_)) {
+                self.fail(format!("op {kind:?} got malformed reply {resp:?}"));
+            }
+            return;
+        }
+        // Ok replies must have their effect visible at commit time —
+        // the "no lost adjustment" half of the reconciliation invariant
+        let active = self.core.as_ref().map(|c| c.active_workers()).unwrap_or_default();
+        match kind {
+            OpKind::Grow | OpKind::Migrate => {
+                for j in spawned {
+                    let lively =
+                        self.workers.get(&j).map(|w| w.alive && w.st != WSt::Gone).unwrap_or(false);
+                    if lively && !active.contains(&j) {
+                        self.fail(format!(
+                            "{kind:?} committed Ok but live joiner {j} is not in the active set"
+                        ));
+                    }
+                }
+                if matches!(kind, OpKind::Migrate) {
+                    for v in victims {
+                        if active.contains(&v) {
+                            self.fail(format!(
+                                "migrate committed Ok but victim {v} is still active"
+                            ));
+                        }
+                    }
+                }
+            }
+            OpKind::Shrink => {
+                for v in victims {
+                    if active.contains(&v) {
+                        self.fail(format!("scale-in committed Ok but victim {v} is still active"));
+                    }
+                }
+            }
+            OpKind::Ckpt | OpKind::Stop | OpKind::Poll => {}
+        }
+    }
+
+    // -- mirrors -------------------------------------------------------------
+
+    /// Observe a leader→worker control message BEFORE it is subjected to
+    /// faults: this is the harness's wire-tap for ring membership, data
+    /// assignment and restore events.
+    fn observe_ctrl(&mut self, to: NodeId, msg: &CtrlMsg) {
+        match msg {
+            CtrlMsg::Assign { meta } => {
+                self.leader_inflight.insert(to, (*meta, 0));
+                if meta.epoch > self.max_epoch_seen {
+                    // epochs < meta.epoch just completed: exactly-once check
+                    for e in self.max_epoch_seen..meta.epoch {
+                        if let Err(err) = self.coverage.check_complete(e) {
+                            self.fail(err);
+                        } else {
+                            self.logln(format!("epoch {e} verified exactly-once"));
+                        }
+                    }
+                    self.max_epoch_seen = meta.epoch;
+                }
+            }
+            CtrlMsg::Ok { join_at_step: 0, ring, .. } => {
+                // job start: the founding ring
+                self.cur_ring = (**ring).clone();
+            }
+            CtrlMsg::SyncGo { ring, .. } => {
+                let r: Vec<NodeId> = (**ring).clone();
+                self.observe_ring(&r);
+            }
+            CtrlMsg::Restore { at_step, .. } => {
+                self.restored_since_poll =
+                    Some(self.restored_since_poll.map_or(*at_step, |p| p.min(*at_step)));
+                self.rebuild_mirrors_from_ckpt(*at_step);
+            }
+            _ => {}
+        }
+    }
+
+    /// Ring-membership diff: a worker that leaves the ring without a
+    /// delivered Goodbye was failure-removed by the leader — mirror the
+    /// leader's credit of its last REPORTED shard progress, and fence the
+    /// worker if it is still alive (it is now outside the job; the real
+    /// process would be rejected on its next Sync).
+    fn observe_ring(&mut self, ring: &[NodeId]) {
+        let removed: Vec<NodeId> = self
+            .cur_ring
+            .iter()
+            .copied()
+            .filter(|id| !ring.contains(id))
+            .collect();
+        for id in removed {
+            if !self.gracefully_left.contains(&id) {
+                self.logln(format!("leader removed worker={id} (failure path)"));
+                self.credit_inflight(id);
+                if self.workers.get(&id).map(|w| w.alive).unwrap_or(false) {
+                    self.kill_worker(id, "fenced");
+                }
+            } else {
+                self.leader_inflight.remove(&id);
+            }
+        }
+        self.cur_ring = ring.to_vec();
+    }
+
+    fn credit_inflight(&mut self, id: NodeId) {
+        if let Some((meta, done)) = self.leader_inflight.remove(&id) {
+            if done > 0 {
+                if let Err(e) = self.coverage.credit(meta.epoch, meta.start, done) {
+                    self.fail(e);
+                }
+            }
+        }
+    }
+
+    fn rebuild_mirrors_from_ckpt(&mut self, at_step: u64) {
+        let Some(bytes) = self.last_loaded_ckpt.clone() else {
+            self.fail("restore observed but no checkpoint was ever loaded".into());
+            return;
+        };
+        match decode_checkpoint(&bytes, self.sched.seed) {
+            Ok((step, params, asg)) => {
+                if step != at_step {
+                    self.fail(format!(
+                        "restore rewound to step {at_step} but the checkpoint holds step {step}"
+                    ));
+                }
+                if params.first().copied() != Some(step as f32) {
+                    self.fail(format!(
+                        "restored params {:?} diverge from the oracle state [{step}]",
+                        params.first()
+                    ));
+                }
+                self.coverage.rebuild(asg.epoch, &asg.outstanding_ranges());
+                self.max_epoch_seen = self.max_epoch_seen.max(asg.epoch);
+                self.leader_inflight.clear();
+                self.logln(format!("mirrors rebuilt from checkpoint step={step}"));
+            }
+            Err(e) => self.fail(format!("restore applied an undecodable checkpoint: {e}")),
+        }
+    }
+
+    /// A barrier for `step` completed inside the last `handle` call:
+    /// recompute its weighted loss from the Syncs the harness delivered.
+    /// A step change WITHOUT a release batch is a restore landing near the
+    /// old step, not a barrier — the caller filters on the SyncGo sends.
+    fn on_barrier_complete(&mut self, step: u64, acts: &[Action]) {
+        let mut recipients: Vec<NodeId> = acts
+            .iter()
+            .filter_map(|a| match a {
+                Action::Send { to, msg: CtrlMsg::SyncGo { .. } } => Some(*to),
+                _ => None,
+            })
+            .collect();
+        recipients.sort_unstable();
+        recipients.dedup();
+        if recipients.is_empty() {
+            return;
+        }
+        self.barriers += 1;
+        self.last_barrier_us = self.now_us;
+        let mut wsum = 0.0f32;
+        let mut lsum = 0.0f32;
+        let mut complete = true;
+        for &id in &recipients {
+            match self.sync_seen.get(&(self.gen, id, step)) {
+                Some(&(loss, w)) => {
+                    wsum += w;
+                    lsum += loss * w;
+                }
+                None => complete = false,
+            }
+        }
+        if complete && wsum > 0.0 {
+            self.predicted.push((self.gen, step, lsum / wsum));
+        } else if !complete {
+            // a recipient the harness never delivered a Sync for: the
+            // leader counted a Sync that never crossed the wire
+            self.fail(format!(
+                "barrier at step {step} released {recipients:?} but the harness delivered \
+                 no Sync for at least one of them"
+            ));
+        }
+    }
+
+    fn on_status(&mut self, st: JobStatus) {
+        // step monotonicity, with the restore exemption
+        if st.step < self.last_status_step {
+            match self.restored_since_poll {
+                Some(ckpt_step) if st.step >= ckpt_step => {}
+                Some(ckpt_step) => self.fail(format!(
+                    "step rolled back below the restored checkpoint: {} < {ckpt_step}",
+                    st.step
+                )),
+                None => self.fail(format!(
+                    "step went backwards with no restore: {} -> {}",
+                    self.last_status_step, st.step
+                )),
+            }
+        }
+        self.restored_since_poll = None;
+        self.last_status_step = st.step;
+        self.last_status = Some(st);
+    }
+
+    // -- delivery into the core ----------------------------------------------
+
+    fn deliver_to_leader(&mut self, from: NodeId, ev: WorkerEvent) {
+        let (step_now, active) = match self.core.as_ref() {
+            Some(c) => (c.step(), c.active_workers()),
+            None => return,
+        };
+        match &ev {
+            WorkerEvent::Sync { id, step, loss, weight, shard, .. } => {
+                // mirror the CORRECT acceptance rule; if the leader counts
+                // a Sync this mirror rejects, the loss check trips
+                if *step == step_now && active.contains(id) {
+                    self.sync_seen.insert((self.gen, *id, *step), (*loss, *weight));
+                    if let Some((pid, used)) = shard {
+                        if let Some((meta, done)) = self.leader_inflight.get_mut(id) {
+                            if meta.id == *pid {
+                                *done = (*used).max(*done);
+                            }
+                        }
+                    }
+                }
+            }
+            WorkerEvent::ShardDone { id } => {
+                if let Some((meta, _)) = self.leader_inflight.remove(id) {
+                    if let Err(e) = self.coverage.credit(meta.epoch, meta.start, meta.len) {
+                        self.fail(e);
+                    }
+                }
+            }
+            WorkerEvent::Goodbye { id, shard } => {
+                self.gracefully_left.insert(*id);
+                if let Some((meta, done)) = self.leader_inflight.remove(id) {
+                    let used = shard.map(|(_, u)| u).unwrap_or(done).max(done);
+                    if used > 0 {
+                        if let Err(e) = self.coverage.credit(meta.epoch, meta.start, used) {
+                            self.fail(e);
+                        }
+                    }
+                }
+            }
+            WorkerEvent::NeedPartition { id } => {
+                // a re-request supersedes the outstanding assignment
+                self.credit_inflight(*id);
+            }
+            _ => {}
+        }
+        self.do_core(Event::Worker(ev));
+    }
+
+    // -- virtual workers -----------------------------------------------------
+
+    fn spawn_vworker(&mut self, id: NodeId, machine: String) {
+        let step_us = 40_000 + self.rng.gen_range(20) * 1000;
+        self.workers.insert(
+            id,
+            VWorker {
+                machine,
+                alive: true,
+                st: WSt::WaitOk,
+                step: 0,
+                local_batch: 0,
+                gathered: 0,
+                shard: None,
+                pending_switch: None,
+                step_us,
+                compute_seq: 0,
+            },
+        );
+    }
+
+    /// The shell half of provisioning: Attach + Register synchronously
+    /// (connection-level, retried in the real system), Ready after the
+    /// execution-context preparation delay, through the faulty network.
+    fn attach_worker(&mut self, id: NodeId, joiner: bool) {
+        let machine = self.workers[&id].machine.clone();
+        self.do_core(Event::Worker(WorkerEvent::Attach {
+            id,
+            machine: machine.clone(),
+            joiner,
+        }));
+        self.do_core(Event::Worker(WorkerEvent::Register { id, machine }));
+        let prep = 50_000 + self.rng.gen_range(350) * 1000; // 50..400 ms
+        self.push(self.now_us + prep, Q::WorkerReady(id));
+    }
+
+    fn step_done(&mut self, id: NodeId, cseq: u64) {
+        let Some(w) = self.workers.get_mut(&id) else { return };
+        if !w.alive || w.st != WSt::Compute || w.compute_seq != cseq {
+            return;
+        }
+        w.st = WSt::WaitGo;
+        let sync = self.make_sync(id);
+        self.wsend(id, sync);
+    }
+
+    fn make_sync(&self, id: NodeId) -> WorkerEvent {
+        let w = &self.workers[&id];
+        WorkerEvent::Sync {
+            id,
+            step: w.step,
+            loss: vloss(id, w.step),
+            weight: w.gathered as f32,
+            step_ms: w.step_us as f64 / 1e3,
+            shard: w.shard.map(|(m, u)| (m.id, u)),
+        }
+    }
+
+    fn start_step(&mut self, id: NodeId) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            w.st = WSt::Gather;
+            w.gathered = 0;
+        }
+        self.gather(id);
+    }
+
+    /// The §4.3 consumer loop at protocol granularity: fill the local
+    /// batch from the current shard, reporting ShardDone / requesting the
+    /// next partition as needed; on NoData proceed with a partial batch.
+    fn gather(&mut self, id: NodeId) {
+        enum D {
+            Consumed,
+            Compute,
+            ShardDone,
+            Need,
+            Stop,
+        }
+        loop {
+            let d = {
+                let Some(w) = self.workers.get_mut(&id) else { return };
+                if !w.alive || w.st != WSt::Gather {
+                    D::Stop
+                } else if w.gathered >= w.local_batch.max(1) {
+                    D::Compute
+                } else {
+                    let lb = w.local_batch.max(1);
+                    let gathered = w.gathered;
+                    match &mut w.shard {
+                        Some((meta, used)) if *used < meta.len => {
+                            let take = ((lb - gathered) as u64).min(meta.len - *used);
+                            *used += take;
+                            w.gathered += take as u32;
+                            D::Consumed
+                        }
+                        Some(_) => {
+                            w.shard = None;
+                            D::ShardDone
+                        }
+                        None => D::Need,
+                    }
+                }
+            };
+            match d {
+                D::Consumed => continue,
+                D::Stop => return,
+                D::Compute => {
+                    self.begin_compute(id);
+                    return;
+                }
+                D::ShardDone => {
+                    self.wsend(id, WorkerEvent::ShardDone { id });
+                    continue;
+                }
+                D::Need => {
+                    self.wsend(id, WorkerEvent::NeedPartition { id });
+                    return; // resumes on Assign / NoData
+                }
+            }
+        }
+    }
+
+    fn begin_compute(&mut self, id: NodeId) {
+        let Some(w) = self.workers.get_mut(&id) else { return };
+        w.st = WSt::Compute;
+        w.compute_seq += 1;
+        let at = self.now_us + w.step_us;
+        let cseq = w.compute_seq;
+        self.push(at, Q::StepDone(id, cseq));
+    }
+
+    fn deliver_to_worker(&mut self, id: NodeId, msg: CtrlMsg) {
+        let (alive, st) = match self.workers.get(&id) {
+            Some(w) => (w.alive, w.st),
+            None => return,
+        };
+        if !alive || st == WSt::Gone {
+            return;
+        }
+        match msg {
+            CtrlMsg::Ok { join_at_step, local_batch, joiners, .. } => {
+                if st == WSt::WaitOk {
+                    let founder = join_at_step == 0 && joiners.is_empty();
+                    {
+                        let w = self.workers.get_mut(&id).unwrap();
+                        w.local_batch = local_batch;
+                        w.step = join_at_step;
+                        if !founder {
+                            // joiner: blocks in broadcast_recv until the
+                            // model arrives at the switch boundary
+                            w.st = WSt::WaitBroadcast;
+                        }
+                    }
+                    if founder {
+                        self.start_step(id);
+                    }
+                }
+            }
+            CtrlMsg::Assign { meta } => {
+                let adopted = {
+                    let w = self.workers.get_mut(&id).unwrap();
+                    if w.shard.is_none() {
+                        w.shard = Some((meta, 0));
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if adopted {
+                    if st == WSt::Gather {
+                        self.gather(id);
+                    }
+                } else {
+                    self.logln(format!("worker {id} ignored Assign while holding a shard"));
+                }
+            }
+            CtrlMsg::NoData => {
+                if st == WSt::Gather {
+                    self.begin_compute(id); // partial (possibly empty) batch
+                }
+            }
+            CtrlMsg::SyncGo { sync_tag, switch, .. } => {
+                if st != WSt::WaitGo {
+                    self.logln(format!("worker {id} dropped stray SyncGo"));
+                    return;
+                }
+                let step = {
+                    let w = self.workers.get_mut(&id).unwrap();
+                    if let Some(plan) = switch {
+                        w.pending_switch = Some(plan);
+                    }
+                    w.step
+                };
+                if sync_tag & 0xFF_FFFF != step & 0xFF_FFFF {
+                    // mistagged release (stale duplicate): the allreduce
+                    // would fail; the worker re-syncs (§4.2)
+                    self.logln(format!("worker {id} re-syncs on mistagged release"));
+                    let sync = self.make_sync(id);
+                    self.wsend(id, sync);
+                    return;
+                }
+                // commit point: mini-batch boundary
+                let mut released_joiners: Vec<(NodeId, SwitchPlan)> = Vec::new();
+                let mut goodbye: Option<WorkerEvent> = None;
+                {
+                    let w = self.workers.get_mut(&id).unwrap();
+                    if let Some(plan) = w.pending_switch.clone() {
+                        if plan.at_step == w.step + 1 {
+                            if plan.exiting.contains(&id) {
+                                goodbye = Some(WorkerEvent::Goodbye {
+                                    id,
+                                    shard: w.shard.map(|(m, u)| (m.id, u)),
+                                });
+                                w.st = WSt::Gone;
+                            } else {
+                                if plan.broadcast_src == id && !plan.joiners.is_empty() {
+                                    for &j in plan.joiners.iter() {
+                                        released_joiners.push((j, plan.clone()));
+                                    }
+                                }
+                                w.local_batch = plan.local_batch;
+                                w.pending_switch = None;
+                            }
+                        }
+                    }
+                    if goodbye.is_none() {
+                        w.step += 1;
+                    }
+                }
+                if let Some(ev) = goodbye {
+                    self.wsend(id, ev);
+                    return;
+                }
+                // model broadcast to the joiner cohort (virtual: instant)
+                for (j, plan) in released_joiners {
+                    let release = self
+                        .workers
+                        .get_mut(&j)
+                        .filter(|jw| jw.alive && jw.st == WSt::WaitBroadcast)
+                        .map(|jw| {
+                            jw.step = plan.at_step;
+                            jw.local_batch = plan.local_batch;
+                        })
+                        .is_some();
+                    if release {
+                        self.start_step(j);
+                    }
+                }
+                self.start_step(id);
+            }
+            CtrlMsg::SendParams => {
+                let step = self.workers[&id].step;
+                self.wsend(id, WorkerEvent::Params { id, step, params: vec![step as f32] });
+            }
+            CtrlMsg::Restore { params, at_step } => {
+                if params.first().copied() != Some(at_step as f32) {
+                    self.fail(format!(
+                        "worker {id} restored params {:?} that diverge from oracle [{at_step}]",
+                        params.first()
+                    ));
+                }
+                {
+                    let w = self.workers.get_mut(&id).unwrap();
+                    w.step = at_step;
+                    w.shard = None;
+                    w.pending_switch = None;
+                    w.gathered = 0;
+                    w.compute_seq += 1;
+                }
+                if !matches!(st, WSt::WaitOk | WSt::WaitBroadcast) {
+                    self.start_step(id);
+                }
+            }
+            CtrlMsg::Stop => {
+                self.workers.get_mut(&id).unwrap().st = WSt::Gone;
+            }
+        }
+    }
+
+    // -- settle / final invariants -------------------------------------------
+
+    /// Checks that require a settled stack (run once quiesce conditions
+    /// hold, before Stop). Reads the live core, not a stale status.
+    fn settle_checks(&mut self) {
+        let (mut members, step) = match self.core.as_ref() {
+            Some(c) => (c.active_workers(), c.step()),
+            None => return,
+        };
+        members.sort_unstable();
+        // three-way membership reconciliation: leader's active set ==
+        // virtual workers still alive and training
+        let training: Vec<NodeId> = self
+            .workers
+            .iter()
+            .filter(|(_, w)| {
+                w.alive && matches!(w.st, WSt::Gather | WSt::Compute | WSt::WaitGo)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        if members != training {
+            self.fail(format!(
+                "membership diverged after quiesce: leader {members:?} vs virtual \
+                 workers training {training:?}"
+            ));
+        }
+        if let Some(st) = self.last_status.as_ref() {
+            if st.parallelism as usize != st.workers.len() {
+                self.fail(format!(
+                    "status parallelism {} disagrees with its own member list {:?}",
+                    st.parallelism, st.workers
+                ));
+            }
+        }
+        // state agreement: every member's step within one barrier of the
+        // leader (checkpoint-recovery convergence at the worker level)
+        for id in &members {
+            let ws = self.workers[id].step;
+            if ws + 1 < step || ws > step + 1 {
+                self.fail(format!("worker {id} step {ws} diverged from leader step {step}"));
+            }
+        }
+    }
+
+    /// End-of-run sweep over the collected reports and mirrors.
+    fn final_checks(&mut self) {
+        // barrier-loss integrity: every LossPoint must match the mirror's
+        // independent recomputation (order-preserving per generation)
+        let mut predicted_by_gen: HashMap<u32, Vec<(u64, f32)>> = HashMap::new();
+        for &(g, s, l) in &self.predicted {
+            predicted_by_gen.entry(g).or_default().push((s, l));
+        }
+        for (g, report) in self.reports.iter().enumerate() {
+            let pred = predicted_by_gen.remove(&(g as u32)).unwrap_or_default();
+            if report.loss_history.len() != pred.len() {
+                self.failure.get_or_insert(format!(
+                    "gen {g}: leader recorded {} barrier losses, the mirror predicted {}",
+                    report.loss_history.len(),
+                    pred.len()
+                ));
+                return;
+            }
+            for (lp, (ps, pl)) in report.loss_history.iter().zip(pred) {
+                if lp.step != ps || (lp.loss - pl).abs() > 1e-4 {
+                    self.failure.get_or_insert(format!(
+                        "gen {g}: barrier at step {} computed loss {} but the mirror (from \
+                         delivered Syncs only) predicts step {ps} loss {pl} — a stale or \
+                         foreign Sync was counted",
+                        lp.step, lp.loss
+                    ));
+                    return;
+                }
+            }
+        }
+        if self.barriers < 10 {
+            self.failure.get_or_insert(format!(
+                "liveness: only {} barriers completed in the whole run",
+                self.barriers
+            ));
+        }
+        // unanswered tokens are only legal if their leader died
+        for (tok, rec) in &self.tokens {
+            if rec.replies == 0 && !matches!(rec.kind, OpKind::Poll) && rec.gen == self.gen {
+                self.failure.get_or_insert(format!(
+                    "request token={tok} ({:?}) never answered and its leader survived",
+                    rec.kind
+                ));
+            }
+        }
+    }
+}
+
+// Helper-name plumbing kept out of the hot match arms.
+
+fn ev_name(ev: &WorkerEvent) -> &'static str {
+    match ev {
+        WorkerEvent::Attach { .. } => "Attach",
+        WorkerEvent::Register { .. } => "Register",
+        WorkerEvent::Ready { .. } => "Ready",
+        WorkerEvent::Sync { .. } => "Sync",
+        WorkerEvent::NeedPartition { .. } => "NeedPartition",
+        WorkerEvent::ShardDone { .. } => "ShardDone",
+        WorkerEvent::Goodbye { .. } => "Goodbye",
+        WorkerEvent::Params { .. } => "Params",
+    }
+}
+
+fn ctrl_name(msg: &CtrlMsg) -> &'static str {
+    match msg {
+        CtrlMsg::Ok { .. } => "Ok",
+        CtrlMsg::Assign { .. } => "Assign",
+        CtrlMsg::NoData => "NoData",
+        CtrlMsg::SyncGo { .. } => "SyncGo",
+        CtrlMsg::SendParams => "SendParams",
+        CtrlMsg::Restore { .. } => "Restore",
+        CtrlMsg::Stop => "Stop",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coverage_catches_double_credit_and_omission() {
+        let mut c = Coverage::new(10);
+        c.credit(0, 0, 4).unwrap();
+        c.credit(0, 4, 6).unwrap();
+        assert!(c.check_complete(0).is_ok());
+        assert!(c.credit(0, 3, 1).unwrap_err().contains("credited twice"));
+        let mut c = Coverage::new(10);
+        c.credit(1, 0, 9).unwrap();
+        assert!(c.check_complete(1).unwrap_err().contains("omitted"));
+        assert!(c.check_complete(2).is_err(), "never-credited epoch cannot be complete");
+        assert!(c.credit(1, 9, 2).is_err(), "out-of-range credit rejected");
+    }
+
+    #[test]
+    fn coverage_rebuild_rolls_back_later_epochs() {
+        let mut c = Coverage::new(8);
+        c.credit(0, 0, 8).unwrap();
+        c.credit(1, 0, 5).unwrap();
+        c.credit(2, 0, 2).unwrap();
+        // restore to epoch 1 with samples 5..8 outstanding
+        c.rebuild(1, &[(5, 3)]);
+        assert!(c.check_complete(0).is_ok(), "earlier epochs survive the rollback");
+        // the rebuilt epoch can consume exactly the outstanding tail again
+        c.credit(1, 5, 3).unwrap();
+        assert!(c.check_complete(1).is_ok());
+        // epoch 2 was rolled back entirely: a fresh pass re-credits it
+        c.credit(2, 0, 8).unwrap();
+        assert!(c.check_complete(2).is_ok());
+    }
+
+    #[test]
+    fn schedule_generation_is_deterministic_and_sized() {
+        for seed in 0..64u64 {
+            let a = ChaosSchedule::generate(seed, usize::MAX);
+            let b = ChaosSchedule::generate(seed, usize::MAX);
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+            assert!((4..=10).contains(&a.events.len()));
+            assert!((2..=4).contains(&a.founders));
+            assert!(a.n_samples >= a.n_partitions, "partitions must be non-empty");
+            assert_eq!(a.prefix(2).events.len(), 2.min(a.events.len()));
+        }
+    }
+}

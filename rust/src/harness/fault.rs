@@ -1,0 +1,337 @@
+//! The fault model of the deterministic chaos harness: one [`FaultPlan`]
+//! describes everything the harness may do to a frame in flight —
+//! **drop**, **delay**, **duplicate**, **partition** (and **heal**) —
+//! keyed by `(from, to, tag family)` and a fault-clock time window.
+//!
+//! The same plan drives two worlds:
+//!
+//!  * **live transports** — `FaultPlan` implements
+//!    [`transport::FaultHook`], so it can be armed on an `InProcHub`, a
+//!    `TcpNode`, a `deploy::LeaderEndpoint` control plane or a
+//!    `coordsvc::KvServer` (all behind the zero-cost-when-off
+//!    `FaultCell`); the clock is a shared atomic the test advances;
+//!  * **the virtual cluster** (`harness::chaos`) — the executor calls
+//!    [`FaultPlan::fate_at`] with its own virtual clock, so schedules are
+//!    bit-reproducible.
+//!
+//! Probabilistic rules are decided by a pure hash of
+//! `(seed, from, to, family, time-bucket)` — NOT by stateful RNG draws —
+//! so the verdict for a given frame is independent of thread interleaving
+//! and call order. Same seed ⇒ same fate, always.
+
+use crate::transport::{tag, FaultHook, FrameFate, NodeId};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Coarse traffic classes a fault rule can target. Raw transport tags are
+/// mapped down: everything that is not control traffic is `Data` (the
+/// allreduce/broadcast tag space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// allreduce / model-broadcast frames
+    Data,
+    /// worker ⇄ leader control frames (`rpc::ToLeader`/`FromLeader`)
+    Rpc,
+    /// coordination-KV requests (leases, election)
+    Kv,
+}
+
+impl Family {
+    /// Family of a raw transport tag.
+    pub fn of_tag(t: u32) -> Family {
+        match t {
+            tag::RPC => Family::Rpc,
+            tag::KV => Family::Kv,
+            _ => Family::Data,
+        }
+    }
+}
+
+/// What a matching rule does to the frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Drop,
+    Duplicate,
+    /// delay by this many fault-clock milliseconds
+    Delay(u64),
+}
+
+/// One injectable fault: `kind` applied to frames matching the key within
+/// `[from_ms, until_ms)` on the fault clock, with probability
+/// `per_mille`/1000 (decided deterministically per frame).
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// sending node (None = any)
+    pub from: Option<NodeId>,
+    /// receiving node (None = any)
+    pub to: Option<NodeId>,
+    /// traffic family (None = any)
+    pub family: Option<Family>,
+    /// active window on the fault clock, milliseconds
+    pub from_ms: u64,
+    pub until_ms: u64,
+    /// probability in 1/1000 that a matching frame is affected
+    pub per_mille: u32,
+    pub kind: FaultKind,
+}
+
+impl FaultRule {
+    /// An always-firing rule for the whole of time; builder-style setters
+    /// narrow it.
+    pub fn always(kind: FaultKind) -> FaultRule {
+        FaultRule {
+            from: None,
+            to: None,
+            family: None,
+            from_ms: 0,
+            until_ms: u64::MAX,
+            per_mille: 1000,
+            kind,
+        }
+    }
+
+    pub fn from_node(mut self, n: NodeId) -> FaultRule {
+        self.from = Some(n);
+        self
+    }
+    pub fn to_node(mut self, n: NodeId) -> FaultRule {
+        self.to = Some(n);
+        self
+    }
+    pub fn family(mut self, f: Family) -> FaultRule {
+        self.family = Some(f);
+        self
+    }
+    pub fn window(mut self, from_ms: u64, until_ms: u64) -> FaultRule {
+        self.from_ms = from_ms;
+        self.until_ms = until_ms;
+        self
+    }
+    pub fn per_mille(mut self, p: u32) -> FaultRule {
+        self.per_mille = p.min(1000);
+        self
+    }
+
+    fn matches(&self, from: NodeId, to: NodeId, family: Family, now_ms: u64) -> bool {
+        now_ms >= self.from_ms
+            && now_ms < self.until_ms
+            && self.from.map(|f| f == from).unwrap_or(true)
+            && self.to.map(|t| t == to).unwrap_or(true)
+            && self.family.map(|f| f == family).unwrap_or(true)
+    }
+}
+
+/// A symmetric partition: frames between the two node sets are dropped in
+/// both directions within the window (healing = window end, or
+/// [`FaultPlan::heal`]).
+#[derive(Debug, Clone)]
+struct Partition {
+    a: Vec<NodeId>,
+    b: Vec<NodeId>,
+    from_ms: u64,
+    until_ms: u64,
+}
+
+/// The shared fault clock: milliseconds on whatever timeline the owner
+/// advances (virtual time in the chaos executor, test-driven wall offsets
+/// in live tests). Cloning shares the underlying counter.
+#[derive(Clone, Default)]
+pub struct FaultClock(Arc<AtomicU64>);
+
+impl FaultClock {
+    pub fn new() -> FaultClock {
+        FaultClock::default()
+    }
+    pub fn set_ms(&self, ms: u64) {
+        self.0.store(ms, Ordering::Release);
+    }
+    pub fn advance_ms(&self, ms: u64) {
+        self.0.fetch_add(ms, Ordering::AcqRel);
+    }
+    pub fn now_ms(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// The full injectable-fault schedule. Construct once per test/run, add
+/// rules and partitions, arm it on live layers (it is a
+/// [`transport::FaultHook`]) or query [`FaultPlan::fate_at`] from the
+/// virtual executor.
+pub struct FaultPlan {
+    seed: u64,
+    clock: FaultClock,
+    rules: Mutex<Vec<FaultRule>>,
+    partitions: Mutex<Vec<Partition>>,
+    /// frames affected so far (observability: tests assert faults actually
+    /// fired instead of silently passing on a miswired hook)
+    hits: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            seed,
+            clock: FaultClock::new(),
+            rules: Mutex::new(Vec::new()),
+            partitions: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+        })
+    }
+
+    /// The clock live layers share; the owner advances it.
+    pub fn clock(&self) -> FaultClock {
+        self.clock.clone()
+    }
+
+    pub fn add(&self, rule: FaultRule) {
+        self.rules.lock().unwrap().push(rule);
+    }
+
+    /// Partition node sets `a` and `b` (both directions) for the window.
+    pub fn partition(&self, a: &[NodeId], b: &[NodeId], from_ms: u64, until_ms: u64) {
+        self.partitions.lock().unwrap().push(Partition {
+            a: a.to_vec(),
+            b: b.to_vec(),
+            from_ms,
+            until_ms,
+        });
+    }
+
+    /// Remove every rule and partition: the network is whole again.
+    pub fn heal(&self) {
+        self.rules.lock().unwrap().clear();
+        self.partitions.lock().unwrap().clear();
+    }
+
+    /// How many frames any rule/partition has affected.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic per-frame coin: FNV-1a over the full frame key. Same
+    /// inputs ⇒ same verdict regardless of thread timing.
+    fn coin(&self, from: NodeId, to: NodeId, family: Family, now_ms: u64) -> u32 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ self.seed;
+        let fam = match family {
+            Family::Data => 0u64,
+            Family::Rpc => 1,
+            Family::Kv => 2,
+        };
+        for word in [from as u64, to as u64, fam, now_ms] {
+            for b in word.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        (h % 1000) as u32
+    }
+
+    /// Fate of a frame at an explicit fault-clock time (the virtual
+    /// executor's entry point). First matching partition, then the first
+    /// matching rule whose coin lands, wins.
+    pub fn fate_at(&self, from: NodeId, to: NodeId, family: Family, now_ms: u64) -> FrameFate {
+        {
+            let parts = self.partitions.lock().unwrap();
+            for p in parts.iter() {
+                if now_ms >= p.from_ms
+                    && now_ms < p.until_ms
+                    && ((p.a.contains(&from) && p.b.contains(&to))
+                        || (p.b.contains(&from) && p.a.contains(&to)))
+                {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return FrameFate::Drop;
+                }
+            }
+        }
+        let rules = self.rules.lock().unwrap();
+        for r in rules.iter() {
+            if r.matches(from, to, family, now_ms) && self.coin(from, to, family, now_ms) < r.per_mille
+            {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return match r.kind {
+                    FaultKind::Drop => FrameFate::Drop,
+                    FaultKind::Duplicate => FrameFate::Duplicate,
+                    FaultKind::Delay(ms) => FrameFate::Delay(Duration::from_millis(ms)),
+                };
+            }
+        }
+        FrameFate::Deliver
+    }
+}
+
+impl FaultHook for FaultPlan {
+    fn fate(&self, from: NodeId, to: NodeId, tag: u32) -> FrameFate {
+        self.fate_at(from, to, Family::of_tag(tag), self.clock.now_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_respect_key_and_window() {
+        let plan = FaultPlan::new(1);
+        plan.add(FaultRule::always(FaultKind::Drop).from_node(1).to_node(2).family(Family::Rpc).window(100, 200));
+        assert_eq!(plan.fate_at(1, 2, Family::Rpc, 150), FrameFate::Drop);
+        assert_eq!(plan.fate_at(1, 2, Family::Rpc, 99), FrameFate::Deliver);
+        assert_eq!(plan.fate_at(1, 2, Family::Rpc, 200), FrameFate::Deliver);
+        assert_eq!(plan.fate_at(1, 2, Family::Data, 150), FrameFate::Deliver);
+        assert_eq!(plan.fate_at(2, 1, Family::Rpc, 150), FrameFate::Deliver);
+        assert_eq!(plan.hits(), 1);
+    }
+
+    #[test]
+    fn partition_is_symmetric_and_heals() {
+        let plan = FaultPlan::new(2);
+        plan.partition(&[1, 2], &[3], 0, 500);
+        assert_eq!(plan.fate_at(1, 3, Family::Data, 10), FrameFate::Drop);
+        assert_eq!(plan.fate_at(3, 2, Family::Rpc, 10), FrameFate::Drop);
+        assert_eq!(plan.fate_at(1, 2, Family::Data, 10), FrameFate::Deliver);
+        // heal by window end
+        assert_eq!(plan.fate_at(1, 3, Family::Data, 500), FrameFate::Deliver);
+        // explicit heal
+        plan.partition(&[1], &[3], 0, u64::MAX);
+        plan.heal();
+        assert_eq!(plan.fate_at(1, 3, Family::Data, 10), FrameFate::Deliver);
+    }
+
+    #[test]
+    fn probabilistic_rules_are_deterministic_and_calibrated() {
+        let plan_a = FaultPlan::new(7);
+        let plan_b = FaultPlan::new(7);
+        for p in [&plan_a, &plan_b] {
+            p.add(FaultRule::always(FaultKind::Drop).per_mille(300));
+        }
+        let mut dropped = 0;
+        for t in 0..10_000u64 {
+            let fa = plan_a.fate_at(1, 2, Family::Data, t);
+            let fb = plan_b.fate_at(1, 2, Family::Data, t);
+            assert_eq!(fa, fb, "same seed must give same fate at t={t}");
+            if fa == FrameFate::Drop {
+                dropped += 1;
+            }
+        }
+        // ~30% with slack; a different seed decides differently
+        assert!((2000..4000).contains(&dropped), "dropped={dropped}");
+        let other = FaultPlan::new(8);
+        other.add(FaultRule::always(FaultKind::Drop).per_mille(300));
+        let diff = (0..10_000u64)
+            .filter(|&t| other.fate_at(1, 2, Family::Data, t) != plan_a.fate_at(1, 2, Family::Data, t))
+            .count();
+        assert!(diff > 1000, "seeds should decide differently: {diff}");
+    }
+
+    #[test]
+    fn hook_uses_shared_clock() {
+        let plan = FaultPlan::new(3);
+        plan.add(FaultRule::always(FaultKind::Duplicate).window(1000, 2000));
+        let clock = plan.clock();
+        assert_eq!(FaultHook::fate(&*plan, 1, 2, 0x4000_0000), FrameFate::Deliver);
+        clock.set_ms(1500);
+        assert_eq!(FaultHook::fate(&*plan, 1, 2, 0x4000_0000), FrameFate::Duplicate);
+        clock.advance_ms(600);
+        assert_eq!(FaultHook::fate(&*plan, 1, 2, 0x4000_0000), FrameFate::Deliver);
+    }
+}

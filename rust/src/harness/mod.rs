@@ -1,0 +1,34 @@
+//! `edl::harness` — the deterministic chaos harness (FoundationDB-style
+//! simulation testing for the whole EDL stack).
+//!
+//! Three pillars:
+//!
+//!  * [`fault`] — the injectable fault model: a [`FaultPlan`]
+//!    (drop/delay/duplicate/partition/heal, keyed by `(from, to,
+//!    tag-family)` and fault-clock time) that live layers accept behind a
+//!    zero-cost-when-off hook ([`transport::FaultCell`]): `InProcHub`,
+//!    `TcpNode`, the deploy control plane and the coordination KV all run
+//!    their REAL code paths with faults armed;
+//!  * [`chaos`] — seeded chaos schedules: one `u64` seed derives a
+//!    reproducible script of worker kills, partitions, delayed/duplicated
+//!    control frames, concurrent Grow/Shrink/Migrate decisions,
+//!    checkpoints and leader restarts, executed against the real
+//!    [`LeaderCore`](crate::coordinator::LeaderCore) under a virtual
+//!    clock, with independent invariant mirrors checked after every
+//!    event (step monotonicity, exactly-one-reply adjustment
+//!    reconciliation, barrier-loss integrity, §4.3 exactly-once sample
+//!    accounting, checkpoint-recovery convergence, liveness);
+//!  * [`testutil`] — bounded condition-polling helpers shared by the e2e
+//!    suites, so no test waits on a bare tuned `sleep`.
+//!
+//! `rust/tests/chaos.rs` runs hundreds of seeds per push, shrinks a
+//! failing seed to its shortest failing script prefix, and prints the
+//! exact repro command. DESIGN.md §6 documents the fault taxonomy and the
+//! invariant list.
+
+pub mod chaos;
+pub mod fault;
+pub mod testutil;
+
+pub use chaos::{run_schedule, run_seed, ChaosFailure, ChaosReport, ChaosSchedule};
+pub use fault::{FaultClock, FaultKind, FaultPlan, FaultRule, Family};

@@ -1,0 +1,103 @@
+//! Bounded condition-polling helpers shared by the e2e suites
+//! (`rust/tests/remote_deploy.rs`, `rust/tests/master_live.rs`,
+//! `rust/tests/chaos.rs`). The rule they encode: a test may WAIT for a
+//! condition, but only behind a deadline and only by re-checking real
+//! state — never by a bare `sleep(N)` whose N was tuned to one machine.
+
+use std::time::{Duration, Instant};
+
+/// Default probe interval: fast enough to keep e2e latency low, slow
+/// enough not to hammer a busy control plane.
+pub const POLL_EVERY: Duration = Duration::from_millis(25);
+
+/// Poll `probe` until it returns `Some(T)` or the deadline passes.
+pub fn poll_until<T>(
+    timeout: Duration,
+    every: Duration,
+    mut probe: impl FnMut() -> Option<T>,
+) -> Option<T> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(v) = probe() {
+            return Some(v);
+        }
+        if Instant::now() >= deadline {
+            return None;
+        }
+        std::thread::sleep(every.min(Duration::from_millis(250)));
+    }
+}
+
+/// Poll until `cond` holds; panic with `what` (and the caller's last
+/// observed state via the closure's own asserts) on timeout.
+pub fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    if poll_until(timeout, POLL_EVERY, || cond().then_some(())).is_none() {
+        panic!("timed out after {timeout:?} waiting for {what}");
+    }
+}
+
+/// Keep evaluating `probe` (which may fail transiently, e.g. a TCP
+/// connect while the server is still binding) until it returns Ok or the
+/// deadline passes; panics with the last error on timeout.
+pub fn retry_until<T, E: std::fmt::Display>(
+    what: &str,
+    timeout: Duration,
+    mut probe: impl FnMut() -> Result<T, E>,
+) -> T {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match probe() {
+            Ok(v) => return v,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    panic!("timed out after {timeout:?} waiting for {what}: last error: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn poll_until_returns_value_when_ready() {
+        let n = AtomicU32::new(0);
+        let got = poll_until(Duration::from_secs(5), Duration::from_millis(1), || {
+            (n.fetch_add(1, Ordering::Relaxed) >= 3).then_some(42)
+        });
+        assert_eq!(got, Some(42));
+    }
+
+    #[test]
+    fn poll_until_gives_up_at_deadline() {
+        let t0 = Instant::now();
+        let got: Option<()> =
+            poll_until(Duration::from_millis(40), Duration::from_millis(5), || None);
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not hang");
+    }
+
+    #[test]
+    #[should_panic(expected = "waiting for the-impossible")]
+    fn wait_until_panics_with_context() {
+        wait_until("the-impossible", Duration::from_millis(20), || false);
+    }
+
+    #[test]
+    fn retry_until_swallows_transient_errors() {
+        let n = AtomicU32::new(0);
+        let v = retry_until("flaky-thing", Duration::from_secs(5), || {
+            if n.fetch_add(1, Ordering::Relaxed) < 2 {
+                Err("not yet")
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(v, 7);
+    }
+}

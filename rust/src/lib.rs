@@ -40,6 +40,7 @@ pub mod coordsvc;
 pub mod data;
 pub mod deploy;
 pub mod gpu_sim;
+pub mod harness;
 pub mod master;
 pub mod metrics;
 pub mod rpc;

@@ -521,6 +521,28 @@ impl Shell {
             std::mem::replace(&mut self.sched, Box::new(NoopScheduler));
         sched.replan(self);
         self.sched = sched;
+        self.assert_inventory();
+    }
+
+    /// GPU-slot conservation (chaos-harness invariant): for every machine,
+    /// free slots plus the slots every job holds must equal the machine's
+    /// capacity — a violation means a Grow/Shrink/Stop path leaked or
+    /// double-counted a slot. Loud failure beats silently shrinking the
+    /// cluster: the master is the root of truth for the inventory.
+    fn assert_inventory(&self) {
+        for (m, spec) in self.machines.iter().enumerate() {
+            let held: u32 = self.jobs.iter().map(|j| j.held[m]).sum();
+            assert!(
+                self.free[m] + held == spec.gpus,
+                "inventory leak on {}: free {} + held {} != capacity {} \
+                 (per-job held: {:?})",
+                spec.name,
+                self.free[m],
+                held,
+                spec.gpus,
+                self.jobs.iter().map(|j| (j.spec.name.clone(), j.held[m])).collect::<Vec<_>>(),
+            );
+        }
     }
 
     fn lease_key(name: &str) -> String {

@@ -32,6 +32,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, Read};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -48,6 +49,68 @@ pub type Shared = Arc<Vec<u8>>;
 pub mod tag {
     /// RPC frames
     pub const RPC: u32 = 0x3000;
+    /// coordination-KV frames (fault-family marker only; the KV speaks
+    /// its own framed protocol, not a `PointToPoint` transport)
+    pub const KV: u32 = 0x3001;
+}
+
+// ---------------------------------------------------------------------------
+// fault injection hook (the chaos harness's transport seam)
+// ---------------------------------------------------------------------------
+
+/// What should happen to one frame about to be sent. Returned by a
+/// [`FaultHook`]; interpreted identically by every transport (and by the
+/// deploy/KV control planes, which frame their own sockets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFate {
+    Deliver,
+    /// silently lose the frame (lossy link / partition)
+    Drop,
+    /// deliver the frame twice (retransmission storm)
+    Duplicate,
+    /// stall the link for this long before delivering (slow/congested
+    /// link; implemented sender-side, so subsequent frames queue behind it)
+    Delay(Duration),
+}
+
+/// Decides the fate of every frame `from → to` with transport tag `tag`.
+/// Implemented by `harness::FaultPlan`; threaded through [`InProcHub`],
+/// [`TcpNode`], the deploy control plane and the coordination KV behind a
+/// zero-cost-when-off check (one relaxed atomic load per send).
+pub trait FaultHook: Send + Sync {
+    fn fate(&self, from: NodeId, to: NodeId, tag: u32) -> FrameFate;
+}
+
+/// Optional fault hook with a zero-cost disarmed fast path. Embedded by
+/// every fault-injectable layer; `arm`/`disarm` flips it at runtime.
+#[derive(Default)]
+pub struct FaultCell {
+    armed: AtomicBool,
+    hook: Mutex<Option<Arc<dyn FaultHook>>>,
+}
+
+impl FaultCell {
+    pub fn new() -> FaultCell {
+        FaultCell::default()
+    }
+
+    /// Install (Some) or remove (None) the hook.
+    pub fn arm(&self, hook: Option<Arc<dyn FaultHook>>) {
+        let mut g = self.hook.lock().unwrap();
+        self.armed.store(hook.is_some(), Ordering::Release);
+        *g = hook;
+    }
+
+    /// Fate of a frame: `Deliver` (one relaxed load) unless armed.
+    pub fn fate(&self, from: NodeId, to: NodeId, tag: u32) -> FrameFate {
+        if !self.armed.load(Ordering::Relaxed) {
+            return FrameFate::Deliver;
+        }
+        match self.hook.lock().unwrap().as_ref() {
+            Some(h) => h.fate(from, to, tag),
+            None => FrameFate::Deliver,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -414,6 +477,7 @@ pub trait PointToPoint: Send {
 #[derive(Default)]
 pub struct InProcHub {
     senders: Mutex<HashMap<NodeId, Sender<Frame>>>,
+    faults: FaultCell,
 }
 
 impl InProcHub {
@@ -434,9 +498,30 @@ impl InProcHub {
         v
     }
 
+    /// Install/remove the chaos-harness fault hook for every frame sent
+    /// through this hub (zero-cost when off).
+    pub fn set_fault_hook(&self, hook: Option<Arc<dyn FaultHook>>) {
+        self.faults.arm(hook);
+    }
+
     fn send(&self, frame: Frame, to: NodeId) -> Result<()> {
+        let dup = match self.faults.fate(frame.from, to, frame.tag) {
+            FrameFate::Deliver => false,
+            FrameFate::Drop => return Ok(()),
+            FrameFate::Duplicate => true,
+            FrameFate::Delay(d) => {
+                // sender-side stall: subsequent frames queue behind it,
+                // like a congested link
+                std::thread::sleep(d);
+                false
+            }
+        };
         let senders = self.senders.lock().unwrap();
         let tx = senders.get(&to).ok_or(NetError::UnknownPeer(to))?;
+        if dup {
+            let copy = Frame { from: frame.from, tag: frame.tag, body: frame.body.clone() };
+            tx.send(copy).map_err(|_| NetError::UnknownPeer(to))?;
+        }
         tx.send(frame).map_err(|_| NetError::UnknownPeer(to))
     }
 
@@ -532,6 +617,7 @@ pub struct TcpNode {
     directory: Arc<Mutex<HashMap<NodeId, String>>>,
     stop: Arc<std::sync::atomic::AtomicBool>,
     pool: SharedBufPool,
+    faults: FaultCell,
 }
 
 impl TcpNode {
@@ -569,7 +655,14 @@ impl TcpNode {
             directory,
             stop,
             pool,
+            faults: FaultCell::new(),
         })
+    }
+
+    /// Install/remove the chaos-harness fault hook for frames this node
+    /// sends (zero-cost when off).
+    pub fn set_fault_hook(&self, hook: Option<Arc<dyn FaultHook>>) {
+        self.faults.arm(hook);
     }
 
     fn stream_to(&mut self, to: NodeId) -> Result<&mut std::net::TcpStream> {
@@ -595,6 +688,16 @@ impl TcpNode {
                 format!("frame too large: {} bytes", payload.len()),
             )));
         }
+        match self.faults.fate(self.id, to, tag) {
+            FrameFate::Deliver => {}
+            FrameFate::Drop => return Ok(()),
+            FrameFate::Duplicate => self.write_frame_to(to, tag, payload)?,
+            FrameFate::Delay(d) => std::thread::sleep(d),
+        }
+        self.write_frame_to(to, tag, payload)
+    }
+
+    fn write_frame_to(&mut self, to: NodeId, tag: u32, payload: &[u8]) -> Result<()> {
         let id = self.id;
         let stream = self.stream_to(to)?;
         let mut head = [0u8; 12];
@@ -916,6 +1019,63 @@ mod tests {
         // receive must untangle it
         assert_eq!(c.recv_from(2, 1, T).unwrap(), vec![2]);
         assert_eq!(c.recv_from(1, 1, T).unwrap(), vec![1]);
+    }
+
+    /// Test hook: a fixed fate for every frame matching (from, to).
+    struct FixedFate(NodeId, NodeId, FrameFate);
+
+    impl FaultHook for FixedFate {
+        fn fate(&self, from: NodeId, to: NodeId, _tag: u32) -> FrameFate {
+            if from == self.0 && to == self.1 {
+                self.2
+            } else {
+                FrameFate::Deliver
+            }
+        }
+    }
+
+    #[test]
+    fn inproc_fault_hook_drops_and_duplicates() {
+        let hub = InProcHub::new();
+        let mut a = hub.join(1);
+        let mut b = hub.join(2);
+        hub.set_fault_hook(Some(Arc::new(FixedFate(1, 2, FrameFate::Drop))));
+        a.send(2, 1, vec![1]).unwrap(); // lost
+        assert!(matches!(
+            b.recv_from(1, 1, Duration::from_millis(30)),
+            Err(NetError::Timeout { .. })
+        ));
+        hub.set_fault_hook(Some(Arc::new(FixedFate(1, 2, FrameFate::Duplicate))));
+        a.send(2, 2, vec![2]).unwrap(); // delivered twice
+        assert_eq!(b.recv_from(1, 2, T).unwrap(), vec![2]);
+        assert_eq!(b.recv_from(1, 2, T).unwrap(), vec![2]);
+        // disarmed: back to exactly-once
+        hub.set_fault_hook(None);
+        a.send(2, 3, vec![3]).unwrap();
+        assert_eq!(b.recv_from(1, 3, T).unwrap(), vec![3]);
+        assert!(matches!(
+            b.recv_from(1, 3, Duration::from_millis(30)),
+            Err(NetError::Timeout { .. })
+        ));
+    }
+
+    #[test]
+    fn tcp_fault_hook_drops_matching_frames_only() {
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let mut a = TcpNode::start(1, dir.clone()).unwrap();
+        let mut b = TcpNode::start(2, dir.clone()).unwrap();
+        let mut c = TcpNode::start(3, dir.clone()).unwrap();
+        a.set_fault_hook(Some(Arc::new(FixedFate(1, 2, FrameFate::Drop))));
+        a.send(2, 1, vec![2]).unwrap(); // partitioned link: lost
+        a.send(3, 1, vec![3]).unwrap(); // other link unaffected
+        assert_eq!(c.recv_from(1, 1, T).unwrap(), vec![3]);
+        assert!(matches!(
+            b.recv_from(1, 1, Duration::from_millis(50)),
+            Err(NetError::Timeout { .. })
+        ));
+        a.set_fault_hook(None); // heal
+        a.send(2, 1, vec![4]).unwrap();
+        assert_eq!(b.recv_from(1, 1, T).unwrap(), vec![4]);
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Leader election over the TCP coordination service — the §4.1 protocol
 //! at integration scale (many contending clients, failure, re-election,
-//! lease refresh).
+//! lease refresh), including a leader-restart-under-lease-expiry case
+//! driven through the chaos harness's fault hooks.
 
 use edl::coordsvc::{KvClient, KvServer};
+use edl::harness::{FaultKind, FaultPlan, FaultRule, Family};
+use edl::transport::FaultHook;
 use edl::util::stats;
+use std::sync::Arc;
 
 #[test]
 fn contended_election_many_workers() {
@@ -82,6 +86,54 @@ fn graceful_resignation_hands_over() {
     // graceful exit (§4.2): the leader erases its address
     assert!(c1.delete("edl/leader/job").unwrap());
     assert_eq!(c2.elect("job", "w2", 10_000).unwrap(), "w2");
+}
+
+#[test]
+fn leader_restart_under_lease_expiry_with_fault_hook() {
+    // TTL-lease handover regression, driven through the SAME fault hooks
+    // the chaos harness arms elsewhere: the incumbent leader keeps
+    // refreshing its lease, but a fault window delays every KV request
+    // past the TTL — exactly what a partition between the leader machine
+    // and the coordination service looks like. The lease must expire, a
+    // restarted leader must win the re-election, and after the window
+    // heals the OLD leader's refresh must fail (leadership lost) instead
+    // of resurrecting a split brain.
+    let server = KvServer::start().unwrap();
+    let mut old_leader = KvClient::connect(&server.addr).unwrap();
+    let mut new_leader = KvClient::connect(&server.addr).unwrap();
+
+    const TTL_MS: u64 = 120;
+    assert_eq!(old_leader.elect("job", "w-old", TTL_MS).unwrap(), "w-old");
+    // healthy refreshes keep leadership
+    for _ in 0..3 {
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert!(old_leader.refresh("edl/leader/job", b"w-old", TTL_MS).unwrap());
+    }
+
+    // fault window: every KV request is delayed past the TTL, so the
+    // incumbent's refresh arrives only after its lease already expired
+    let plan = FaultPlan::new(0xE1EC);
+    plan.add(
+        FaultRule::always(FaultKind::Delay(2 * TTL_MS))
+            .family(Family::Kv)
+            .window(0, u64::MAX),
+    );
+    let hook: Arc<dyn FaultHook> = plan.clone();
+    server.set_fault_hook(Some(hook));
+    // the delayed refresh lands after expiry: it must report failure
+    assert!(
+        !old_leader.refresh("edl/leader/job", b"w-old", TTL_MS).unwrap(),
+        "a refresh that arrived after lease expiry must not extend it"
+    );
+    assert!(plan.hits() > 0, "the fault hook never fired");
+    server.set_fault_hook(None); // heal
+
+    // the restarted leader claims the vacant key
+    assert_eq!(new_leader.elect("job", "w-new", 10_000).unwrap(), "w-new");
+    // the old incumbent cannot refresh a lease it lost, and re-election
+    // tells it who the real leader is now
+    assert!(!old_leader.refresh("edl/leader/job", b"w-old", TTL_MS).unwrap());
+    assert_eq!(old_leader.elect("job", "w-old", TTL_MS).unwrap(), "w-new");
 }
 
 #[test]

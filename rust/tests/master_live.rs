@@ -11,6 +11,7 @@
 
 use edl::api::{JobClient, JobControl};
 use edl::coordsvc::KvClient;
+use edl::harness::testutil::poll_until;
 use edl::master::proto::{JobInfo, MasterClient, SubmitSpec};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader};
@@ -44,15 +45,15 @@ fn wait_for(
     timeout: Duration,
     mut pred: impl FnMut(&HashMap<String, JobInfo>) -> bool,
 ) -> HashMap<String, JobInfo> {
-    let deadline = Instant::now() + timeout;
-    loop {
+    // bounded condition-polling (harness::testutil): re-check real master
+    // state on an interval instead of sleeping a tuned amount
+    let mut last: HashMap<String, JobInfo> = HashMap::new();
+    poll_until(timeout, Duration::from_millis(200), || {
         let jobs = jobs_by_name(mc);
-        if pred(&jobs) {
-            return jobs;
-        }
-        assert!(Instant::now() < deadline, "timed out waiting for {what}; jobs: {jobs:?}");
-        std::thread::sleep(Duration::from_millis(200));
-    }
+        last = jobs.clone();
+        pred(&jobs).then_some(jobs)
+    })
+    .unwrap_or_else(|| panic!("timed out waiting for {what}; jobs: {last:?}"))
 }
 
 #[test]

@@ -8,6 +8,7 @@
 //! configured switch allowance while the joiners prepare and switch in.
 
 use edl::api::{JobClient, JobControl};
+use edl::harness::testutil::{poll_until, retry_until, wait_until, POLL_EVERY};
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -52,28 +53,17 @@ fn spawn_worker(leader: &str, machine: &str) -> Child {
 }
 
 fn connect(ctl: &str) -> JobClient {
-    let deadline = Instant::now() + Duration::from_secs(30);
-    loop {
-        match JobClient::connect(ctl) {
-            Ok(c) => return c,
-            Err(e) => {
-                assert!(Instant::now() < deadline, "cannot reach job-control {ctl}: {e}");
-                std::thread::sleep(Duration::from_millis(50));
-            }
-        }
-    }
+    retry_until(&format!("job-control endpoint {ctl}"), Duration::from_secs(30), || {
+        JobClient::connect(ctl)
+    })
 }
 
 fn wait_step(job: &mut JobClient, step: u64, timeout: Duration) -> u64 {
-    let deadline = Instant::now() + timeout;
-    loop {
+    poll_until(timeout, POLL_EVERY, || {
         let st = job.status().expect("status");
-        if st.step >= step {
-            return st.step;
-        }
-        assert!(Instant::now() < deadline, "step stalled at {} (want {step})", st.step);
-        std::thread::sleep(Duration::from_millis(25));
-    }
+        (st.step >= step).then_some(st.step)
+    })
+    .unwrap_or_else(|| panic!("step never reached {step} within {timeout:?}"))
 }
 
 #[test]
@@ -181,13 +171,13 @@ fn three_process_tcp_job_scales_out_and_in_without_stopping() {
     // -- stop: every process exits cleanly ----------------------------------
     JobControl::stop(&mut job).expect("stop");
     drop(job);
-    let deadline = Instant::now() + Duration::from_secs(30);
-    loop {
-        if let Some(status) = procs.0[0].try_wait().expect("try_wait serve") {
-            assert!(status.success(), "serve exited with {status}");
-            break;
+    wait_until("serve process to exit after stop", Duration::from_secs(30), || {
+        match procs.0[0].try_wait().expect("try_wait serve") {
+            Some(status) => {
+                assert!(status.success(), "serve exited with {status}");
+                true
+            }
+            None => false,
         }
-        assert!(Instant::now() < deadline, "serve did not exit after stop");
-        std::thread::sleep(Duration::from_millis(100));
-    }
+    });
 }
