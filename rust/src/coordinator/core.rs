@@ -92,6 +92,7 @@ enum WState {
     Active,
 }
 
+#[derive(Clone)]
 struct WInfo {
     /// reported back in `status` so cluster masters can track placement
     machine: String,
@@ -109,12 +110,14 @@ struct WInfo {
     limbo_since_ms: f64,
 }
 
+#[derive(Clone)]
 struct SyncInfo {
     loss: f32,
     weight: f32,
 }
 
 /// Why a checkpoint load is outstanding.
+#[derive(Clone)]
 enum LoadCtx {
     /// a manual Table-1 `restore` (reply under the token)
     Manual(ReqToken),
@@ -236,6 +239,116 @@ impl LeaderCore {
         self.report
     }
 
+    // -- model-checker surface (crate-internal) ------------------------------
+
+    /// Every worker id the leader still tracks (any state).
+    pub(crate) fn known_worker_ids(&self) -> Vec<NodeId> {
+        self.workers.keys().copied().collect()
+    }
+
+    /// The current allreduce ring, by value.
+    pub(crate) fn ring_snapshot(&self) -> Vec<NodeId> {
+        (*self.ring).clone()
+    }
+
+    /// Workers whose Sync for the current step has been accepted.
+    pub(crate) fn waiting_ids(&self) -> Vec<NodeId> {
+        self.sync_waiting.keys().copied().collect()
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        self.assigner.epoch
+    }
+
+    /// The most recent completed-barrier loss point, if any.
+    pub(crate) fn last_loss_point(&self) -> Option<(u64, f32)> {
+        self.report.loss_history.last().map(|p| (p.step, p.loss))
+    }
+
+    /// Bound the in-core training log so model-checker state clones stay
+    /// O(1): keep only the most recent `keep` entries of each log.
+    pub(crate) fn trim_log(&mut self, keep: usize) {
+        let n = self.report.events.len();
+        if n > keep {
+            self.report.events.drain(..n - keep);
+        }
+        let n = self.report.loss_history.len();
+        if n > keep {
+            self.report.loss_history.drain(..n - keep);
+        }
+    }
+
+    /// Fold the protocol-relevant state into `h` (model-checker state
+    /// dedup). Wall-clock-derived fields — stored timestamps, the
+    /// step-time windows, the training log — are deliberately excluded:
+    /// the model checker's lazy-time abstraction treats states that differ
+    /// only in clock readings as identical. `barrier_open_ms` contributes
+    /// its some-ness only (whether a barrier is open is protocol state;
+    /// when it opened is not).
+    pub(crate) fn hash_state<H: std::hash::Hasher>(&self, h: &mut H) {
+        use std::hash::Hash;
+        self.started.hash(h);
+        self.stopping.hash(h);
+        self.step.hash(h);
+        self.ring_version.hash(h);
+        self.active.hash(h);
+        self.ring.hash(h);
+        h.write_usize(self.workers.len());
+        for (id, w) in &self.workers {
+            id.hash(h);
+            w.machine.hash(h);
+            match w.state {
+                WState::Joining { ready } => {
+                    h.write_u8(1);
+                    ready.hash(h);
+                }
+                WState::Active => h.write_u8(2),
+            }
+        }
+        h.write_usize(self.sync_waiting.len());
+        for (id, s) in &self.sync_waiting {
+            id.hash(h);
+            h.write_u32(s.loss.to_bits());
+            h.write_u32(s.weight.to_bits());
+        }
+        h.write_u8(self.barrier_open_ms.is_some() as u8);
+        match &self.plan {
+            None => h.write_u8(0),
+            Some(p) => {
+                h.write_u8(1);
+                p.at_step.hash(h);
+                p.ring.hash(h);
+                p.local_batch.hash(h);
+                p.broadcast_src.hash(h);
+                p.joiners.hash(h);
+                p.exiting.hash(h);
+            }
+        }
+        self.op_reply.hash(h);
+        self.joining.hash(h);
+        self.op_exiting.hash(h);
+        h.write_usize(self.pending_spawn);
+        match &self.ckpt_pending {
+            None => h.write_u8(0),
+            Some((path, token, _asked_ms)) => {
+                h.write_u8(1);
+                path.hash(h);
+                token.hash(h);
+            }
+        }
+        match &self.pending_load {
+            None => h.write_u8(0),
+            Some(LoadCtx::Manual(t)) => {
+                h.write_u8(1);
+                t.hash(h);
+            }
+            Some(LoadCtx::Recovery) => h.write_u8(2),
+        }
+        h.write_u32(self.last_loss.to_bits());
+        self.next_id.hash(h);
+        self.assigner.hash_state(h);
+    }
+
     /// Feed one event at clock time `now_ms`; returns the actions the
     /// shell must perform, in order.
     pub fn handle(&mut self, now_ms: f64, ev: Event) -> Vec<Action> {
@@ -306,11 +419,14 @@ impl LeaderCore {
     }
 
     fn throughput_sps(&self) -> f64 {
+        let (Some(&(t0, _)), Some(&(t1, _))) =
+            (self.recent_barriers.front(), self.recent_barriers.back())
+        else {
+            return 0.0;
+        };
         if self.recent_barriers.len() < 2 {
             return 0.0;
         }
-        let (t0, _) = self.recent_barriers.front().unwrap();
-        let (t1, _) = self.recent_barriers.back().unwrap();
         let samples: f64 = self.recent_barriers.iter().skip(1).map(|&(_, w)| w).sum();
         let dt = (t1 - t0) / 1e3;
         if dt <= 0.0 {
@@ -680,9 +796,10 @@ impl LeaderCore {
     /// next attempt picks a live source.
     fn expire_stale_checkpoint(&mut self) {
         let timeout_ms = self.cfg.failure_timeout.as_secs_f64() * 1e3;
-        if let Some((_, _, asked_ms)) = self.ckpt_pending {
-            if self.now_ms - asked_ms > timeout_ms {
-                let (_, token, _) = self.ckpt_pending.take().unwrap();
+        let expired = matches!(self.ckpt_pending, Some((_, _, asked_ms))
+            if self.now_ms - asked_ms > timeout_ms);
+        if expired {
+            if let Some((_, token, _)) = self.ckpt_pending.take() {
                 self.event("checkpoint-timeout".into());
                 self.reply(
                     token,
@@ -870,7 +987,8 @@ impl LeaderCore {
 
     /// True while a parallelism adjustment is uncommitted (§3.1): new
     /// scaling requests get [`ElasticError::AdjustmentInFlight`].
-    fn adjustment_in_flight(&self) -> bool {
+    /// Crate-visible so the model checker can mirror the guard.
+    pub(crate) fn adjustment_in_flight(&self) -> bool {
         self.plan.is_some()
             || !self.joining.is_empty()
             || self.pending_spawn > 0
@@ -1032,6 +1150,44 @@ impl LeaderCore {
                 self.reply(token, Response::Ok);
                 self.out.push(Action::Shutdown);
             }
+        }
+    }
+}
+
+/// Model-checker support: states are cloned at every BFS branch. `out` is
+/// always drained by `handle` before a clone can happen, and `Action` is
+/// deliberately not `Clone` (actions are performed exactly once), so the
+/// clone starts with an empty action buffer.
+impl Clone for LeaderCore {
+    fn clone(&self) -> LeaderCore {
+        debug_assert!(self.out.is_empty(), "cloned mid-handle");
+        LeaderCore {
+            cfg: self.cfg.clone(),
+            backend: self.backend.clone(),
+            expected_founders: self.expected_founders,
+            workers: self.workers.clone(),
+            active: self.active.clone(),
+            ring: self.ring.clone(),
+            ring_version: self.ring_version,
+            step: self.step,
+            started: self.started,
+            assigner: self.assigner.clone(),
+            sync_waiting: self.sync_waiting.clone(),
+            barrier_open_ms: self.barrier_open_ms,
+            plan: self.plan.clone(),
+            op_reply: self.op_reply,
+            joining: self.joining.clone(),
+            op_exiting: self.op_exiting.clone(),
+            ckpt_pending: self.ckpt_pending.clone(),
+            pending_load: self.pending_load.clone(),
+            pending_spawn: self.pending_spawn,
+            report: self.report.clone(),
+            recent_barriers: self.recent_barriers.clone(),
+            last_loss: self.last_loss,
+            stopping: self.stopping,
+            next_id: self.next_id,
+            now_ms: self.now_ms,
+            out: Vec::new(),
         }
     }
 }

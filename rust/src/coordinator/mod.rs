@@ -29,7 +29,7 @@ use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub mod core;
@@ -110,7 +110,7 @@ pub struct EngineEvent {
 }
 
 /// Final report returned by [`ElasticTrainer::stop`].
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct TrainReport {
     pub loss_history: Vec<LossPoint>,
     pub events: Vec<EngineEvent>,
@@ -197,18 +197,28 @@ enum LeaderIn {
 /// control-message sender the shell routes [`Action::Send`] through.
 type Spawner = Arc<dyn Fn(NodeId, String, bool) -> Sender<CtrlMsg> + Send + Sync>;
 
+/// `StepCell`'s primitives are cfg(loom)-switchable so its wakeup protocol
+/// can be exhaustively permuted by the loom model checker (nightly `loom`
+/// CI job: `RUSTFLAGS="--cfg loom" cargo test --lib loom_`). Everything
+/// else in this module keeps std primitives — loom only needs to model the
+/// types the permuted tests actually touch.
+#[cfg(loom)]
+use loom::sync::{Condvar as StepCondvar, Mutex as StepMutex};
+#[cfg(not(loom))]
+use std::sync::{Condvar as StepCondvar, Mutex as StepMutex};
+
 /// Leader-step publication for `wait_step`: waiters block on the condvar
 /// instead of busy-polling `status` round-trips. Shared by the in-proc
 /// shell ([`ElasticTrainer::wait_step`]) and the TCP deployment's
 /// `LeaderHandle`. `(step, leader_gone)`.
 pub(crate) struct StepCell {
-    state: Mutex<(u64, bool)>,
-    cv: Condvar,
+    state: StepMutex<(u64, bool)>,
+    cv: StepCondvar,
 }
 
 impl StepCell {
     pub(crate) fn new() -> Arc<StepCell> {
-        Arc::new(StepCell { state: Mutex::new((0, false)), cv: Condvar::new() })
+        Arc::new(StepCell { state: StepMutex::new((0, false)), cv: StepCondvar::new() })
     }
 
     pub(crate) fn publish(&self, step: u64) {
@@ -227,6 +237,7 @@ impl StepCell {
 
     /// Wait until `step` is reached (true) or the deadline passes / the
     /// leader exits (false). No busy-polling: purely condvar wakeups.
+    #[cfg(not(loom))]
     pub(crate) fn wait(&self, step: u64, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
         let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
@@ -247,6 +258,83 @@ impl StepCell {
                 .unwrap_or_else(|p| p.into_inner());
             g = g2;
         }
+    }
+
+    /// loom build: loom does not model wall-clock deadlines, so the
+    /// permuted wait is deadline-free — loom's bounded exploration
+    /// guarantees termination, and the properties under test (no lost
+    /// wakeup, leader_gone always releases) don't involve the timeout.
+    #[cfg(loom)]
+    pub(crate) fn wait(&self, step: u64, _timeout: Duration) -> bool {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if g.0 >= step {
+                return true;
+            }
+            if g.1 {
+                return false;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Exhaustive interleaving tests for [`StepCell`] (run by the nightly
+/// `loom` CI job; invisible to tier-1, which builds without `--cfg loom`).
+#[cfg(all(test, loom))]
+mod loom_step_cell {
+    use super::StepCell;
+    use std::time::Duration;
+
+    /// A waiter blocked on a future step is ALWAYS released by a publish —
+    /// across every permutation, including publish-before-wait (the lost-
+    /// wakeup shape a naive check-then-block implementation gets wrong).
+    #[test]
+    fn loom_publish_never_loses_a_waiter() {
+        loom::model(|| {
+            let cell = StepCell::new();
+            let waiter = {
+                let cell = cell.clone();
+                loom::thread::spawn(move || cell.wait(1, Duration::from_secs(1)))
+            };
+            cell.publish(1);
+            assert!(waiter.join().unwrap(), "waiter must see step 1");
+        });
+    }
+
+    /// leader_gone releases a blocked waiter with `false` in every
+    /// interleaving — a waiter must never outlive the leader.
+    #[test]
+    fn loom_leader_gone_always_releases() {
+        loom::model(|| {
+            let cell = StepCell::new();
+            let waiter = {
+                let cell = cell.clone();
+                loom::thread::spawn(move || cell.wait(5, Duration::from_secs(1)))
+            };
+            cell.leader_gone();
+            assert!(!waiter.join().unwrap(), "leader_gone must release with false");
+        });
+    }
+
+    /// Concurrent publishers racing a waiter: whichever order loom picks,
+    /// the waiter returns true once the target step is published.
+    #[test]
+    fn loom_racing_publishers_release_waiter() {
+        loom::model(|| {
+            let cell = StepCell::new();
+            let waiter = {
+                let cell = cell.clone();
+                loom::thread::spawn(move || cell.wait(2, Duration::from_secs(1)))
+            };
+            let p1 = {
+                let cell = cell.clone();
+                loom::thread::spawn(move || cell.publish(1))
+            };
+            cell.publish(2);
+            p1.join().unwrap();
+            assert!(waiter.join().unwrap(), "step 2 was published");
+        });
     }
 }
 

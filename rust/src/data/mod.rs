@@ -70,6 +70,7 @@ impl PartitionTable {
 
 /// Leader-side dynamic assigner: epoch permutation + in-flight tracking +
 /// remainder pool.
+#[derive(Clone)]
 pub struct Assigner {
     table: PartitionTable,
     rng: Pcg,
@@ -229,6 +230,41 @@ impl Assigner {
         v.extend(self.returned.iter().map(|m| (m.start, m.len)));
         v.extend(self.in_flight.values().map(|(m, done)| (m.start + done, m.len - done)));
         v
+    }
+
+    /// Fold the assignment state into a hasher (model-checker state
+    /// dedup). The RNG is excluded: it only advances in `start_epoch`, a
+    /// fixed number of draws per epoch, so its state is a function of
+    /// `(seed, epoch)` and hashing `epoch` covers it. `returned` is hashed
+    /// in order — it is a stack, so order affects future assignments.
+    pub fn hash_state<H: std::hash::Hasher>(&self, h: &mut H) {
+        h.write_u64(self.table.n_samples);
+        h.write_u64(self.table.n_partitions);
+        h.write_u64(self.epoch);
+        h.write_u64(self.consumed);
+        h.write_usize(self.queue.len());
+        for q in &self.queue {
+            h.write_u64(*q);
+        }
+        h.write_usize(self.returned.len());
+        for m in &self.returned {
+            h.write_u64(m.id);
+            h.write_u64(m.start);
+            h.write_u64(m.len);
+            h.write_u64(m.epoch);
+        }
+        let mut keys: Vec<u32> = self.in_flight.keys().copied().collect();
+        keys.sort_unstable();
+        h.write_usize(keys.len());
+        for w in keys {
+            let (m, done) = &self.in_flight[&w];
+            h.write_u32(w);
+            h.write_u64(m.id);
+            h.write_u64(m.start);
+            h.write_u64(m.len);
+            h.write_u64(m.epoch);
+            h.write_u64(*done);
+        }
     }
 
     /// Serialise assigner state for leader handoff (§4.2: the departing

@@ -305,60 +305,7 @@ impl Ord for Item {
 // invariant state
 // ---------------------------------------------------------------------------
 
-/// Independent §4.3 coverage mirror: per-epoch consumed marks.
-struct Coverage {
-    n: u64,
-    epochs: BTreeMap<u64, Vec<bool>>,
-}
-
-impl Coverage {
-    fn new(n: u64) -> Coverage {
-        Coverage { n, epochs: BTreeMap::new() }
-    }
-
-    fn credit(&mut self, epoch: u64, start: u64, len: u64) -> Result<(), String> {
-        let map = self.epochs.entry(epoch).or_insert_with(|| vec![false; self.n as usize]);
-        for i in start..start + len {
-            let slot = map
-                .get_mut(i as usize)
-                .ok_or_else(|| format!("credit out of range: epoch {epoch} sample {i}"))?;
-            if *slot {
-                return Err(format!("sample {i} credited twice in epoch {epoch}"));
-            }
-            *slot = true;
-        }
-        Ok(())
-    }
-
-    /// Epoch `done` finished (we saw epoch `done+1` begin): it must cover
-    /// the dataset exactly once.
-    fn check_complete(&self, done: u64) -> Result<(), String> {
-        match self.epochs.get(&done) {
-            Some(map) => {
-                let missing = map.iter().filter(|&&b| !b).count();
-                if missing > 0 {
-                    return Err(format!("epoch {done} completed with {missing} samples omitted"));
-                }
-                Ok(())
-            }
-            None => Err(format!("epoch {done} completed but nothing was ever credited")),
-        }
-    }
-
-    /// Rebuild after a restore: the restored epoch's map is everything
-    /// outside the decoded assigner's outstanding ranges; later epochs are
-    /// rolled back entirely.
-    fn rebuild(&mut self, epoch: u64, outstanding: &[(u64, u64)]) {
-        self.epochs.retain(|&e, _| e < epoch);
-        let mut map = vec![true; self.n as usize];
-        for &(s, l) in outstanding {
-            for i in s..s + l {
-                map[i as usize] = false;
-            }
-        }
-        self.epochs.insert(epoch, map);
-    }
-}
+pub use super::mirrors::Coverage;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum OpKind {
@@ -1765,37 +1712,6 @@ fn ctrl_name(msg: &CtrlMsg) -> &'static str {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn coverage_catches_double_credit_and_omission() {
-        let mut c = Coverage::new(10);
-        c.credit(0, 0, 4).unwrap();
-        c.credit(0, 4, 6).unwrap();
-        assert!(c.check_complete(0).is_ok());
-        assert!(c.credit(0, 3, 1).unwrap_err().contains("credited twice"));
-        let mut c = Coverage::new(10);
-        c.credit(1, 0, 9).unwrap();
-        assert!(c.check_complete(1).unwrap_err().contains("omitted"));
-        assert!(c.check_complete(2).is_err(), "never-credited epoch cannot be complete");
-        assert!(c.credit(1, 9, 2).is_err(), "out-of-range credit rejected");
-    }
-
-    #[test]
-    fn coverage_rebuild_rolls_back_later_epochs() {
-        let mut c = Coverage::new(8);
-        c.credit(0, 0, 8).unwrap();
-        c.credit(1, 0, 5).unwrap();
-        c.credit(2, 0, 2).unwrap();
-        // restore to epoch 1 with samples 5..8 outstanding
-        c.rebuild(1, &[(5, 3)]);
-        assert!(c.check_complete(0).is_ok(), "earlier epochs survive the rollback");
-        // the rebuilt epoch can consume exactly the outstanding tail again
-        c.credit(1, 5, 3).unwrap();
-        assert!(c.check_complete(1).is_ok());
-        // epoch 2 was rolled back entirely: a fresh pass re-credits it
-        c.credit(2, 0, 8).unwrap();
-        assert!(c.check_complete(2).is_ok());
-    }
 
     #[test]
     fn schedule_generation_is_deterministic_and_sized() {

@@ -28,6 +28,7 @@
 
 pub mod chaos;
 pub mod fault;
+pub mod mirrors;
 pub mod testutil;
 
 pub use chaos::{run_schedule, run_seed, ChaosFailure, ChaosReport, ChaosSchedule};

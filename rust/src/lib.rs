@@ -50,5 +50,6 @@ pub mod schedulers;
 pub mod trace;
 pub mod transport;
 pub mod util;
+pub mod verify;
 pub mod wire;
 pub mod worker;

@@ -51,9 +51,10 @@ fn main() -> anyhow::Result<()> {
         Some("sim") => cmd_sim(&args),
         Some("trace-stats") => cmd_trace_stats(&args),
         Some("kv") => cmd_kv(),
+        Some("verify") => cmd_verify(&args),
         _ => {
             eprintln!(
-                "usage: edl <train|serve|worker|ctl|master|submit|profile|sim|trace-stats|kv> [--flags]\n\
+                "usage: edl <train|serve|worker|ctl|master|submit|profile|sim|trace-stats|kv|verify> [--flags]\n\
                  \n  train       --config tiny|small --workers N --steps N --agg-batch B --lr F\n\
                  \n  serve       (train flags; prints the job-control address, serves until the job stops)\n\
                  \n              --remote: workers are separate `edl worker` processes;\n\
@@ -71,6 +72,10 @@ fn main() -> anyhow::Result<()> {
                  \n  sim         --scheduler tiresias|elastic-tiresias --jobs N --machines M\n\
                  \n  trace-stats --jobs N\n\
                  \n  kv          (serves an etcd-like KV on an ephemeral port)\n\
+                 \n  verify      static-analysis pass + protocol model checker (DESIGN.md §7)\n\
+                 \n              --root rust/src,rust/tests --allow rust/verify_allow.txt\n\
+                 \n              --skip-model|--model-only --model-steps 4 --model-ops 2\n\
+                 \n              --model-workers 3 --max-states 250000\n\
                  \n  common      --backend pjrt|sim (sim: artifact-free synthetic device)"
             );
             Ok(())
@@ -543,6 +548,98 @@ fn cmd_trace_stats(args: &Args) -> anyhow::Result<()> {
         st.size_p20, st.size_p50, st.size_p90, st.size_p99
     );
     println!("(paper Fig 2b: p20=85, p90=58,330)");
+    Ok(())
+}
+
+/// `edl verify` — the repo's custom static-analysis pass plus the bounded
+/// protocol model checker (DESIGN.md §7). Exits nonzero on any surviving
+/// diagnostic, any model invariant violation, or a non-exhausted
+/// exploration (state cap hit means the scope was NOT fully checked).
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    use edl::verify::{self, model, Allowlist};
+    use std::path::Path;
+
+    let model_only = args.bool("model-only", false);
+    let mut failed = false;
+
+    if !model_only {
+        // default roots work from the repo root or from rust/; the tests
+        // tree must be scanned too — wire-coverage counts constructions in
+        // integration tests
+        let root = args.opt_str("root").unwrap_or_else(|| {
+            if Path::new("rust/src").is_dir() {
+                "rust/src,rust/tests".into()
+            } else {
+                "src,tests".into()
+            }
+        });
+        let allow_path = args.opt_str("allow").unwrap_or_else(|| {
+            if Path::new("rust/verify_allow.txt").is_file() {
+                "rust/verify_allow.txt".into()
+            } else {
+                "verify_allow.txt".into()
+            }
+        });
+        let roots: Vec<&Path> = root.split(',').map(Path::new).collect();
+        let sources = verify::collect_sources(&roots)?;
+        anyhow::ensure!(
+            !sources.is_empty(),
+            "verify: no .rs sources under {root:?} (run from the repo root or pass --root)"
+        );
+        let allow = Allowlist::load(Path::new(&allow_path)).map_err(anyhow::Error::msg)?;
+        let report = verify::run_lints(&sources, &allow);
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        println!(
+            "verify: {} files linted, {} diagnostics, {} suppressed via {}",
+            sources.len(),
+            report.diagnostics.len(),
+            report.suppressed,
+            allow_path
+        );
+        failed |= !report.diagnostics.is_empty();
+    }
+
+    if !args.bool("skip-model", false) {
+        let scope = model::ModelScope {
+            max_workers: args.usize("model-workers", 3),
+            max_ops: args.usize("model-ops", 2),
+            step_cap: args.u64("model-steps", 4),
+            max_states: args.usize("max-states", 250_000),
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let rep = model::explore(scope);
+        println!(
+            "model: {} states, {} transitions, max depth {}, exhausted={} ({:.1}s)",
+            rep.states,
+            rep.transitions,
+            rep.max_depth,
+            rep.exhausted,
+            t0.elapsed().as_secs_f64()
+        );
+        match &rep.violation {
+            Some((what, trace)) => {
+                println!("model: INVARIANT VIOLATION: {what}");
+                for (i, step) in trace.iter().enumerate() {
+                    println!("  {:>3}. {step}", i + 1);
+                }
+                failed = true;
+            }
+            None if !rep.exhausted => {
+                println!(
+                    "model: state cap hit before the scope was exhausted — raise \
+                     --max-states or shrink --model-steps/--model-ops"
+                );
+                failed = true;
+            }
+            None => {}
+        }
+    }
+
+    anyhow::ensure!(!failed, "verify failed");
+    println!("verify: OK");
     Ok(())
 }
 

@@ -270,10 +270,24 @@ impl BufPool {
     }
 }
 
+/// The pool's lock is cfg(loom)-switchable so the take/put race between a
+/// `TcpNode`'s send path and its reader threads can be exhaustively
+/// permuted by the loom model checker (`verify` stack, DESIGN.md §7).
+#[cfg(loom)]
+use loom::sync::Mutex as PoolMutex;
+#[cfg(not(loom))]
+use std::sync::Mutex as PoolMutex;
+
 /// Thread-safe pool handle shared between a `TcpNode` and its reader
 /// threads.
-#[derive(Clone, Default)]
-struct SharedBufPool(Arc<Mutex<BufPool>>);
+#[derive(Clone)]
+struct SharedBufPool(Arc<PoolMutex<BufPool>>);
+
+impl Default for SharedBufPool {
+    fn default() -> SharedBufPool {
+        SharedBufPool(Arc::new(PoolMutex::new(BufPool::default())))
+    }
+}
 
 impl SharedBufPool {
     fn take(&self, cap: usize) -> Vec<u8> {
@@ -1089,5 +1103,96 @@ mod tests {
         // the blocking accept must be woken, not waited out
         assert!(t0.elapsed() < Duration::from_secs(2));
         assert!(dir.lock().unwrap().is_empty());
+    }
+}
+
+/// loom permutation tests for the transport's shared mutable state
+/// (DESIGN.md §7). loom cannot model `std::sync::mpsc`, so the `Mailbox`
+/// `Receiver` drain itself is out of scope here; what IS exhaustively
+/// permuted is everything behind a lock: the `SharedBufPool` take/put race
+/// between a sender and a reader thread, and a `PendingQueue` shared under
+/// a mutex the way a future multi-reader mailbox would share it. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --lib loom_` (nightly CI job).
+#[cfg(all(test, loom))]
+mod loom_transport {
+    use super::{Body, Frame, PendingQueue, SharedBufPool};
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+
+    #[test]
+    fn loom_pool_accounts_every_take_across_threads() {
+        loom::model(|| {
+            let pool = SharedBufPool::default();
+            let p2 = pool.clone();
+            let t = thread::spawn(move || {
+                let b = p2.take(1024);
+                p2.put(b);
+            });
+            let b = pool.take(1024);
+            pool.put(b);
+            t.join().unwrap();
+            let (hits, misses) = pool.stats();
+            // every take is classified exactly once, in every interleaving
+            assert_eq!(hits + misses, 2, "pool stats lost a take: {hits}+{misses}");
+        });
+    }
+
+    #[test]
+    fn loom_pool_recycled_buffer_is_always_clean() {
+        loom::model(|| {
+            let pool = SharedBufPool::default();
+            let p2 = pool.clone();
+            let t = thread::spawn(move || {
+                // return a dirty spent buffer, as the reader thread does
+                let mut dirty = Vec::with_capacity(8192);
+                dirty.extend_from_slice(&[0xAA; 64]);
+                p2.put(dirty);
+            });
+            let b = pool.take(4096);
+            // whether the take hit the recycled buffer or allocated fresh,
+            // the hot path must never observe stale bytes
+            assert_eq!(b.len(), 0, "pool handed out a dirty buffer");
+            assert!(b.capacity() >= 4096);
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn loom_pending_queue_no_frame_lost_or_duplicated() {
+        loom::model(|| {
+            let pq = Arc::new(Mutex::new(PendingQueue::default()));
+            let producer = {
+                let pq = pq.clone();
+                thread::spawn(move || {
+                    for from in [1u32, 2u32] {
+                        pq.lock().unwrap().push(Frame {
+                            from,
+                            tag: 7,
+                            body: Body::Owned(vec![from as u8]),
+                        });
+                    }
+                })
+            };
+            let consumer = {
+                let pq = pq.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    for _ in 0..2 {
+                        if let Some(f) = pq.lock().unwrap().pop_any() {
+                            got.push(f.from);
+                        }
+                    }
+                    got
+                })
+            };
+            producer.join().unwrap();
+            let mut got = consumer.join().unwrap();
+            while let Some(f) = pq.lock().unwrap().pop_any() {
+                got.push(f.from);
+            }
+            got.sort_unstable();
+            // exactly the two pushed frames surface, in every interleaving
+            assert_eq!(got, vec![1, 2], "frames lost or duplicated: {got:?}");
+        });
     }
 }

@@ -1,0 +1,331 @@
+//! A minimal Rust token scanner for the `edl verify` lints.
+//!
+//! `syn` is unavailable in the offline registry, so the lints work on a
+//! hand-rolled token stream instead of a real AST. The scanner only has to
+//! be faithful about the things the lints key on:
+//!
+//!  * comments (line, nested block) and string/char literals are skipped —
+//!    a `lock()` inside a doc comment must not trip the lock lint;
+//!  * lifetimes (`'a`) are distinguished from char literals (`'x'`);
+//!  * every token carries its 1-based source line for diagnostics;
+//!  * identifiers, numbers and single-character punctuation come out as
+//!    separate tokens, so lints match on contiguous token runs like
+//!    `["Instant", ":", ":", "now"]`.
+//!
+//! This is NOT a general Rust lexer — it is exactly as much lexer as the
+//! lints in this module need, with property tests pinning that contract.
+
+/// One scanned token: its text and the 1-based line it starts on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    fn new(text: impl Into<String>, line: u32) -> Tok {
+        Tok { text: text.into(), line }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+/// True when the token text starts like an identifier (letter or `_`).
+pub fn ident_like(t: &str) -> bool {
+    t.chars().next().is_some_and(is_ident_start)
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scan `src` into tokens, skipping whitespace, comments and the insides
+/// of string/char literals (a literal leaves no token at all — the lints
+/// only care about code).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let n = b.len();
+
+    // advance over one char, tracking newlines
+    macro_rules! bump {
+        () => {{
+            if b[i] == '\n' {
+                line += 1;
+            }
+            i += 1;
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        // -- whitespace ----------------------------------------------------
+        if c.is_whitespace() {
+            bump!();
+            continue;
+        }
+        // -- comments ------------------------------------------------------
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    bump!();
+                }
+            }
+            continue;
+        }
+        // -- raw / byte strings -------------------------------------------
+        if c == 'r' || c == 'b' {
+            // r"..."  r#"..."#  br"..."  b"..."  b'..'
+            let mut j = i;
+            let mut is_byte = false;
+            if b[j] == 'b' {
+                is_byte = true;
+                j += 1;
+            }
+            let mut raw = false;
+            if j < n && b[j] == 'r' {
+                raw = true;
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while raw && j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' && (raw || (is_byte && j == i + 1)) {
+                // consume the whole (raw/byte) string literal
+                i = j + 1;
+                'outer: while i < n {
+                    if b[i] == '\\' && !raw {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '"' {
+                        let mut k = i + 1;
+                        let mut seen = 0usize;
+                        while seen < hashes && k < n && b[k] == '#' {
+                            seen += 1;
+                            k += 1;
+                        }
+                        if seen == hashes {
+                            i = k;
+                            break 'outer;
+                        }
+                    }
+                    bump!();
+                }
+                continue;
+            }
+            if is_byte && j < n && b[j] == '\'' {
+                // byte char b'x' / b'\n'
+                i = j + 1;
+                if i < n && b[i] == '\\' {
+                    i += 1;
+                }
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            // plain identifier starting with r/b — fall through
+        }
+        // -- plain strings -------------------------------------------------
+        if c == '"' {
+            bump!();
+            while i < n && b[i] != '"' {
+                if b[i] == '\\' {
+                    i += 1;
+                }
+                if i < n {
+                    bump!();
+                }
+            }
+            i += 1;
+            continue;
+        }
+        // -- char literal vs lifetime -------------------------------------
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal '\n'
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                // one-char literal 'x'
+                i += 3;
+                continue;
+            }
+            // lifetime: consume the tick + ident, emit nothing
+            i += 1;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            continue;
+        }
+        // -- identifiers ---------------------------------------------------
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            out.push(Tok::new(b[start..i].iter().collect::<String>(), line));
+            continue;
+        }
+        // -- numbers (covers 0x7FFF, 1_000, 1e3, 0.5, suffixed ints) ------
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (is_ident_char(b[i]) || b[i] == '.') {
+                // a second '.' means a range expr like `0..n` — stop before
+                if b[i] == '.' {
+                    if i + 1 < n && b[i + 1] == '.' {
+                        break;
+                    }
+                    if i + 1 < n && !b[i + 1].is_ascii_digit() {
+                        break;
+                    }
+                }
+                i += 1;
+            }
+            out.push(Tok::new(b[start..i].iter().collect::<String>(), line));
+            continue;
+        }
+        // -- punctuation: one char per token ------------------------------
+        out.push(Tok::new(c.to_string(), line));
+        bump!();
+    }
+    out
+}
+
+/// The index ranges (over a `lex` result) covered by `mod tests { .. }`
+/// blocks — lints exclude them (tests may unwrap and sleep at will).
+pub fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].text == "mod" && toks[i + 1].text == "tests" && toks[i + 2].text == "{" {
+            let mut depth = 1usize;
+            let mut j = i + 3;
+            while j < toks.len() && depth > 0 {
+                match toks[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            regions.push((i, j));
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    regions
+}
+
+/// `toks` with every `mod tests` region removed.
+pub fn strip_tests(toks: &[Tok]) -> Vec<Tok> {
+    let regions = test_regions(toks);
+    if regions.is_empty() {
+        return toks.to_vec();
+    }
+    let mut out = Vec::with_capacity(toks.len());
+    let mut r = 0usize;
+    for (ix, t) in toks.iter().enumerate() {
+        while r < regions.len() && ix >= regions[r].1 {
+            r += 1;
+        }
+        if r < regions.len() && ix >= regions[r].0 {
+            continue;
+        }
+        out.push(t.clone());
+    }
+    out
+}
+
+/// Only the `mod tests` regions of `toks` (for coverage-style lints).
+pub fn only_tests(toks: &[Tok]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    for (a, z) in test_regions(toks) {
+        out.extend(toks[a..z].iter().cloned());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_lines() {
+        let toks = lex("fn a() {\n  b.lock();\n}");
+        assert_eq!(
+            toks.iter().map(|t| t.text.as_str()).collect::<Vec<_>>(),
+            vec!["fn", "a", "(", ")", "{", "b", ".", "lock", "(", ")", ";", "}"]
+        );
+        assert_eq!(toks[5].line, 2, "b is on line 2");
+    }
+
+    #[test]
+    fn comments_and_strings_leave_no_tokens() {
+        assert_eq!(texts("// Instant::now()\nx"), vec!["x"]);
+        assert_eq!(texts("/* a /* nested */ b */ y"), vec!["y"]);
+        assert_eq!(texts(r#"let s = "Instant::now()";"#), vec!["let", "s", "=", ";"]);
+        assert_eq!(texts("let s = r#\"unwrap()\"#;"), vec!["let", "s", "=", ";"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        assert_eq!(texts("fn f<'a>(x: &'a str) {}"),
+            vec!["fn", "f", "<", ">", "(", "x", ":", "&", "str", ")", "{", "}"]);
+        assert_eq!(texts("let c = 'x'; let d = '\\n';"),
+            vec!["let", "c", "=", ";", "let", "d", "=", ";"]);
+    }
+
+    #[test]
+    fn numbers_stay_single_tokens() {
+        assert_eq!(texts("0x4000_0000 | (p << 29)"),
+            vec!["0x4000_0000", "|", "(", "p", "<", "<", "29", ")"]);
+        assert_eq!(texts("0..n"), vec!["0", ".", ".", "n"]);
+        assert_eq!(texts("1.5e3 + 2"), vec!["1.5e3", "+", "2"]);
+    }
+
+    #[test]
+    fn test_region_stripping() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests { fn t() { y.unwrap(); } }";
+        let toks = lex(src);
+        let stripped = strip_tests(&toks);
+        let joined: Vec<&str> = stripped.iter().map(|t| t.text.as_str()).collect();
+        assert!(joined.contains(&"x"));
+        assert!(!joined.contains(&"y"), "test region must be stripped: {joined:?}");
+        let only: Vec<String> = only_tests(&toks).into_iter().map(|t| t.text).collect();
+        assert!(only.contains(&"y".to_string()));
+        assert!(!only.contains(&"x".to_string()));
+    }
+}

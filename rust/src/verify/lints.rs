@@ -1,0 +1,310 @@
+//! Token-level lints: determinism, panic-path, wire-coverage.
+//!
+//! Each lint takes `(path, source)` pairs rather than touching the
+//! filesystem itself, so `verify_self.rs` can feed deliberately broken
+//! fixture sources through the exact code path `edl verify` runs.
+
+use super::lexer::{ident_like, lex, only_tests, strip_tests, Tok};
+use super::{Diagnostic, SourceFile};
+
+pub const LINT_DETERMINISM: &str = "determinism";
+pub const LINT_PANIC: &str = "panic-path";
+pub const LINT_WIRE: &str = "wire-coverage";
+
+/// Modules that must stay pure: no wall-clock reads, no sleeps, no ambient
+/// RNG. `coordinator::core` and the harness are the replay/model-checking
+/// substrate; `sched`/`schedulers`/`data` feed deterministic simulations;
+/// `verify` itself must be deterministic so CI diagnostics are stable.
+const PURE_MODULES: &[&str] = &[
+    "/coordinator/core.rs",
+    "/harness/fault.rs",
+    "/harness/chaos.rs",
+    "/harness/mirrors.rs",
+    "/sched/",
+    "/schedulers/",
+    "/data/",
+    "/verify/",
+];
+
+/// Banned token runs inside pure modules. Matched contiguously, so both
+/// `Instant::now()` and `std::time::Instant::now()` trip the first entry.
+const BANNED: &[(&[&str], &str)] = &[
+    (&["Instant", ":", ":", "now"], "wall-clock read (Instant::now)"),
+    (&["SystemTime", ":", ":", "now"], "wall-clock read (SystemTime::now)"),
+    (&["thread", ":", ":", "sleep"], "real sleep (thread::sleep)"),
+    (&["thread_rng"], "ambient RNG (thread_rng) — use util::rng::Pcg with an explicit seed"),
+    (&["util", ":", ":", "now_ms"], "wall-clock read (util::now_ms)"),
+];
+
+fn is_pure_module(path: &str) -> bool {
+    let p = path.replace('\\', "/");
+    PURE_MODULES.iter().any(|m| p.contains(m))
+}
+
+fn run_matches(toks: &[Tok], at: usize, run: &[&str]) -> bool {
+    toks.len() >= at + run.len() && run.iter().enumerate().all(|(k, w)| toks[at + k].text == *w)
+}
+
+/// Determinism lint: pure modules must not read wall clocks, sleep, or use
+/// ambient RNG. Test modules are excluded (they may time things).
+pub fn determinism(sources: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for sf in sources {
+        if !is_pure_module(&sf.path) {
+            continue;
+        }
+        let toks = strip_tests(&lex(&sf.text));
+        for i in 0..toks.len() {
+            for (run, why) in BANNED {
+                if run_matches(&toks, i, run) {
+                    out.push(Diagnostic {
+                        lint: LINT_DETERMINISM.into(),
+                        file: sf.path.clone(),
+                        line: toks[i].line,
+                        msg: format!(
+                            "{why} in pure module — inject the value through the event/config \
+                             surface instead [{}]",
+                            run.join("")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Files whose non-test code forms the protocol handle paths: a panic here
+/// takes down a leader or worker mid-protocol instead of surfacing a typed
+/// error, so `unwrap`/`expect`/`panic!` are banned (assert!/debug_assert!
+/// remain allowed — they state invariants, and the model checker exercises
+/// them).
+const PANIC_SCOPE: &[&str] = &[
+    "/coordinator/core.rs",
+    "/rpc/mod.rs",
+    "/wire/mod.rs",
+    "/api/mod.rs",
+    "/master/proto.rs",
+];
+
+pub fn panic_paths(sources: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for sf in sources {
+        let p = sf.path.replace('\\', "/");
+        if !PANIC_SCOPE.iter().any(|m| p.contains(m)) {
+            continue;
+        }
+        let lines: Vec<&str> = sf.text.lines().collect();
+        let toks = strip_tests(&lex(&sf.text));
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            let hit = match t.text.as_str() {
+                // `.unwrap()` / `.expect(..)` — exact ident match, so
+                // unwrap_or / unwrap_or_else / map_or never trip it.
+                "unwrap" | "expect" => i > 0 && toks[i - 1].text == ".",
+                "panic" | "unreachable" | "todo" | "unimplemented" => {
+                    i + 1 < toks.len() && toks[i + 1].text == "!"
+                }
+                _ => false,
+            };
+            if hit {
+                let src_line = lines
+                    .get(t.line as usize - 1)
+                    .map(|l| l.trim())
+                    .unwrap_or("");
+                out.push(Diagnostic {
+                    lint: LINT_PANIC.into(),
+                    file: sf.path.clone(),
+                    line: t.line,
+                    msg: format!(
+                        "`{}` on a protocol handle path — return a typed error instead: {src_line}",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Wire-coverage lint: every variant of these protocol enums must be
+/// constructed by name (`Enum::Variant`) somewhere in a test — the
+/// round-trip property tests are only exhaustive if nobody can add a
+/// variant without also adding it to a test.
+const WIRE_ENUMS: &[(&str, &str)] = &[
+    ("/rpc/mod.rs", "ToLeader"),
+    ("/rpc/mod.rs", "FromLeader"),
+    ("/coordinator/mod.rs", "CtrlMsg"),
+    ("/coordinator/mod.rs", "WorkerEvent"),
+    ("/api/mod.rs", "Request"),
+    ("/api/mod.rs", "Response"),
+    ("/api/mod.rs", "ElasticError"),
+    ("/master/proto.rs", "MasterRequest"),
+    ("/master/proto.rs", "MasterResponse"),
+];
+
+/// Extract the variant names of `enum <name> { .. }` from a token stream.
+/// Variant names are exactly the identifiers at brace-depth 1 of the enum
+/// body (field names and types sit at depth ≥ 2; attribute contents sit
+/// inside `[..]` which we also track).
+pub fn enum_variants(toks: &[Tok], name: &str) -> Option<Vec<String>> {
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].text == "enum" && toks[i + 1].text == name {
+            // skip generics etc. up to the opening brace
+            let mut j = i + 2;
+            while j < toks.len() && toks[j].text != "{" {
+                j += 1;
+            }
+            let mut depth = 1i32;
+            let mut variants = Vec::new();
+            j += 1;
+            while j < toks.len() && depth > 0 {
+                match toks[j].text.as_str() {
+                    "{" | "(" | "[" => {
+                        depth += 1;
+                    }
+                    "}" | ")" | "]" => {
+                        depth -= 1;
+                    }
+                    txt => {
+                        if depth == 1 && ident_like(txt) {
+                            variants.push(txt.to_string());
+                        }
+                    }
+                }
+                j += 1;
+            }
+            return Some(variants);
+        }
+        i += 1;
+    }
+    None
+}
+
+pub fn wire_coverage(sources: &[SourceFile]) -> Vec<Diagnostic> {
+    wire_coverage_for(sources, WIRE_ENUMS)
+}
+
+/// Parameterised core so fixtures can check synthetic enums.
+pub fn wire_coverage_for(sources: &[SourceFile], enums: &[(&str, &str)]) -> Vec<Diagnostic> {
+    // Test corpus: every `mod tests` region in src files, plus everything in
+    // integration-test files (path containing "/tests/").
+    let mut corpus: Vec<Tok> = Vec::new();
+    let mut lexed: Vec<(String, Vec<Tok>)> = Vec::new();
+    for sf in sources {
+        let toks = lex(&sf.text);
+        let p = sf.path.replace('\\', "/");
+        if p.contains("/tests/") {
+            corpus.extend(toks.iter().cloned());
+        } else {
+            corpus.extend(only_tests(&toks));
+        }
+        lexed.push((p, toks));
+    }
+    let constructed = |enum_name: &str, variant: &str| -> bool {
+        (0..corpus.len()).any(|i| {
+            corpus[i].text == enum_name
+                && run_matches(&corpus, i + 1, &[":", ":", variant])
+        })
+    };
+
+    let mut out = Vec::new();
+    for (file_suffix, enum_name) in enums {
+        let Some((path, toks)) = lexed.iter().find(|(p, _)| p.contains(file_suffix)) else {
+            out.push(Diagnostic {
+                lint: LINT_WIRE.into(),
+                file: (*file_suffix).into(),
+                line: 0,
+                msg: format!("protocol enum source {file_suffix} not found in scanned tree"),
+            });
+            continue;
+        };
+        let Some(variants) = enum_variants(toks, enum_name) else {
+            out.push(Diagnostic {
+                lint: LINT_WIRE.into(),
+                file: path.clone(),
+                line: 0,
+                msg: format!("protocol enum {enum_name} not found in {path}"),
+            });
+            continue;
+        };
+        for v in variants {
+            if !constructed(enum_name, &v) {
+                out.push(Diagnostic {
+                    lint: LINT_WIRE.into(),
+                    file: path.clone(),
+                    line: 0,
+                    msg: format!(
+                        "{enum_name}::{v} is never constructed in any test — add it to the \
+                         round-trip property test"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.into(), text: text.into() }
+    }
+
+    #[test]
+    fn determinism_flags_instant_now_in_pure_module() {
+        let diags = determinism(&[sf(
+            "rust/src/coordinator/core.rs",
+            "fn t(&mut self) { let t0 = std::time::Instant::now(); }",
+        )]);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("Instant"));
+    }
+
+    #[test]
+    fn determinism_ignores_shell_modules_and_tests() {
+        // shell module: allowed to read clocks
+        assert!(determinism(&[sf(
+            "rust/src/transport/mod.rs",
+            "fn t() { let t0 = Instant::now(); }",
+        )])
+        .is_empty());
+        // test region in a pure module: allowed
+        assert!(determinism(&[sf(
+            "rust/src/coordinator/core.rs",
+            "mod tests { fn t() { let t0 = Instant::now(); } }",
+        )])
+        .is_empty());
+    }
+
+    #[test]
+    fn panic_lint_exact_ident_only() {
+        let diags = panic_paths(&[sf(
+            "rust/src/rpc/mod.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) + x.unwrap() }",
+        )]);
+        assert_eq!(diags.len(), 1, "unwrap_or must not trip the lint");
+        assert!(diags[0].msg.contains("`unwrap`"));
+    }
+
+    #[test]
+    fn wire_coverage_reports_missing_variant() {
+        let src = sf(
+            "rust/src/rpc/mod.rs",
+            "pub enum ToLeader { Hello { m: String }, Goodbye }\n\
+             mod tests { fn t() { let _ = ToLeader::Hello { m: String::new() }; } }",
+        );
+        let diags = wire_coverage_for(&[src], &[("/rpc/mod.rs", "ToLeader")]);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("ToLeader::Goodbye"), "{}", diags[0].msg);
+    }
+
+    #[test]
+    fn enum_variant_extraction_skips_fields() {
+        let toks = lex("pub enum E { A { x: Vec<u32>, y: B }, C(D, F), G }");
+        assert_eq!(enum_variants(&toks, "E").unwrap(), vec!["A", "C", "G"]);
+    }
+}

@@ -1,0 +1,448 @@
+//! Lock-order lint: build the (conservative) inter-procedural lock graph
+//! and fail on cycles.
+//!
+//! Acquisition sites are `.lock()` / `.read()` / `.write()` calls with no
+//! arguments (the no-argument rule keeps `io::Read::read(&mut buf)` out).
+//! A lock's identity is the receiver chain (`self.state`, `knobs`, ...)
+//! qualified by file, which merges same-named fields of different structs
+//! in one file — conservative, but cheap and allowlistable.
+//!
+//! Guard lifetimes follow the two Rust idioms that matter here:
+//!  * `let g = x.lock()...;` — held to the end of the enclosing block;
+//!  * `x.lock().unwrap().f();` — a temporary, dropped at the statement's
+//!    semicolon.
+//!
+//! While any guard is held, acquiring another lock adds a directed edge.
+//! Calls to same-file functions propagate: if `f` calls `g` while holding
+//! `A`, every lock `g` (transitively) acquires is ordered after `A`.
+//! A cycle in the resulting graph is a potential deadlock.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, strip_tests, Tok};
+use super::{Diagnostic, SourceFile};
+
+pub const LINT_LOCKS: &str = "lock-order";
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: u32,
+}
+
+#[derive(Debug, Default)]
+struct FnFacts {
+    /// locks this function acquires directly
+    acquires: BTreeSet<String>,
+    /// (callee, locks held at the call site)
+    calls: Vec<(String, BTreeSet<String>)>,
+    /// direct edges observed inside the body
+    edges: Vec<Edge>,
+}
+
+/// One function body: tokens of the body plus the fn's name.
+fn functions(toks: &[Tok]) -> Vec<(String, Vec<Tok>)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].text == "fn" {
+            let name = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            // scan to the body's opening brace; a `;` first means a trait
+            // method declaration with no body
+            let mut body = None;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "{" => {
+                        let start = j + 1;
+                        let mut depth = 1i32;
+                        j += 1;
+                        while j < toks.len() && depth > 0 {
+                            match toks[j].text.as_str() {
+                                "{" => depth += 1,
+                                "}" => depth -= 1,
+                                _ => {}
+                            }
+                            j += 1;
+                        }
+                        body = Some(toks[start..j.saturating_sub(1)].to_vec());
+                        break;
+                    }
+                    ";" => break,
+                    _ => j += 1,
+                }
+            }
+            if let Some(b) = body {
+                out.push((name, b));
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Walk back from the `.lock()` dot to collect the receiver chain
+/// (`self.state`, `pool`, ...). Returns None when the receiver is a call
+/// expression (e.g. `stdout().lock()`): those get per-site unique names.
+fn receiver_chain(toks: &[Tok], dot_ix: usize) -> Option<String> {
+    let mut parts: Vec<String> = Vec::new();
+    let mut i = dot_ix; // index of the '.' before lock/read/write
+    loop {
+        if i == 0 {
+            break;
+        }
+        let prev = &toks[i - 1];
+        let c = prev.text.chars().next().unwrap_or(' ');
+        if !(c.is_ascii_alphabetic() || c == '_') {
+            // receiver is not a plain ident chain (call/paren/index result)
+            if prev.text == ")" || prev.text == "]" {
+                return None;
+            }
+            break;
+        }
+        parts.push(prev.text.clone());
+        if i >= 2 && toks[i - 2].text == "." {
+            i -= 2;
+        } else {
+            break;
+        }
+    }
+    if parts.is_empty() {
+        return None;
+    }
+    parts.reverse();
+    Some(parts.join("."))
+}
+
+/// Is the statement containing token `ix` a `let` binding? Scan back to the
+/// statement start (`;`, `{`, `}`) at the same brace depth.
+fn is_let_bound(toks: &[Tok], ix: usize) -> bool {
+    let mut depth = 0i32;
+    let mut i = ix;
+    while i > 0 {
+        i -= 1;
+        match toks[i].text.as_str() {
+            ")" | "]" => depth += 1,
+            "(" | "[" => {
+                if depth == 0 {
+                    // we are inside a call argument — keep walking out
+                } else {
+                    depth -= 1;
+                }
+            }
+            ";" | "{" | "}" if depth == 0 => {
+                return toks.get(i + 1).map(|t| t.text.as_str()) == Some("let");
+            }
+            _ => {}
+        }
+    }
+    toks.first().map(|t| t.text.as_str()) == Some("let")
+}
+
+fn analyze_fn(file: &str, fn_name: &str, body: &[Tok], fn_names: &BTreeSet<String>) -> FnFacts {
+    let mut facts = FnFacts::default();
+    // held guards: (lock name, brace depth at acquisition, let-bound?)
+    let mut held: Vec<(String, i32, bool)> = Vec::new();
+    let mut depth = 0i32;
+    let mut uniq = 0u32;
+
+    for i in 0..body.len() {
+        match body[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                held.retain(|(_, d, _)| *d <= depth);
+            }
+            ";" => {
+                // temporaries die at their statement's semicolon
+                held.retain(|(_, d, let_bound)| *let_bound || *d != depth);
+            }
+            "lock" | "read" | "write" => {
+                let is_acquire = i > 0
+                    && body[i - 1].text == "."
+                    && body.get(i + 1).map(|t| t.text.as_str()) == Some("(")
+                    && body.get(i + 2).map(|t| t.text.as_str()) == Some(")");
+                if is_acquire {
+                    let name = match receiver_chain(body, i - 1) {
+                        Some(c) => format!("{file}::{c}"),
+                        None => {
+                            uniq += 1;
+                            format!("{file}::{fn_name}::<expr#{uniq}>")
+                        }
+                    };
+                    for (h, _, _) in &held {
+                        if *h != name {
+                            facts.edges.push(Edge {
+                                from: h.clone(),
+                                to: name.clone(),
+                                file: file.to_string(),
+                                line: body[i].line,
+                            });
+                        }
+                    }
+                    facts.acquires.insert(name.clone());
+                    held.push((name, depth, is_let_bound(body, i)));
+                }
+            }
+            t => {
+                // same-file call with locks held: `foo(..)` or `.foo(..)`
+                if !held.is_empty()
+                    && fn_names.contains(t)
+                    && body.get(i + 1).map(|x| x.text.as_str()) == Some("(")
+                    && t != fn_name
+                {
+                    let held_set: BTreeSet<String> =
+                        held.iter().map(|(h, _, _)| h.clone()).collect();
+                    facts.calls.push((t.to_string(), held_set));
+                }
+            }
+        }
+    }
+    facts
+}
+
+/// Run the lint over all sources; returns one diagnostic per distinct cycle
+/// entry point.
+pub fn lock_order(sources: &[SourceFile]) -> Vec<Diagnostic> {
+    // per-file function analysis
+    let mut all_facts: BTreeMap<String, FnFacts> = BTreeMap::new(); // "file::fn"
+    let mut edges: Vec<Edge> = Vec::new();
+    for sf in sources {
+        let p = sf.path.replace('\\', "/");
+        if p.contains("/tests/") {
+            continue;
+        }
+        let toks = strip_tests(&lex(&sf.text));
+        let fns = functions(&toks);
+        let names: BTreeSet<String> = fns.iter().map(|(n, _)| n.clone()).collect();
+        for (name, body) in &fns {
+            let facts = analyze_fn(&p, name, body, &names);
+            edges.extend(facts.edges.iter().cloned());
+            all_facts.insert(format!("{p}::{name}"), facts);
+        }
+    }
+
+    // transitive lock sets per function (fixpoint over same-file call graph)
+    let mut trans: BTreeMap<String, BTreeSet<String>> = all_facts
+        .iter()
+        .map(|(k, f)| (k.clone(), f.acquires.clone()))
+        .collect();
+    loop {
+        let mut changed = false;
+        for (key, facts) in &all_facts {
+            let file = key.rsplit_once("::").map(|(f, _)| f).unwrap_or("");
+            let mut add = BTreeSet::new();
+            for (callee, _) in &facts.calls {
+                if let Some(t) = trans.get(&format!("{file}::{callee}")) {
+                    add.extend(t.iter().cloned());
+                }
+            }
+            let mine = trans.get_mut(key).expect("own entry");
+            for a in add {
+                changed |= mine.insert(a);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // inter-procedural edges: held locks at a call site order before every
+    // lock the callee transitively acquires
+    for (key, facts) in &all_facts {
+        let file = key.rsplit_once("::").map(|(f, _)| f).unwrap_or("");
+        for (callee, held) in &facts.calls {
+            if let Some(t) = trans.get(&format!("{file}::{callee}")) {
+                for h in held {
+                    for l in t {
+                        if h != l {
+                            edges.push(Edge {
+                                from: h.clone(),
+                                to: l.clone(),
+                                file: file.to_string(),
+                                line: 0,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // cycle detection (iterative DFS, three colors)
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in &edges {
+        adj.entry(&e.from).or_default().insert(&e.to);
+    }
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new(); // 0 white 1 grey 2 black
+    let mut out = Vec::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for start in nodes {
+        if color.get(start).copied().unwrap_or(0) != 0 {
+            continue;
+        }
+        // stack of (node, iterator position over its successors)
+        let mut stack: Vec<(&str, Vec<&str>, usize)> = Vec::new();
+        let succ = |n: &str| -> Vec<&str> {
+            adj.get(n).map(|s| s.iter().copied().collect()).unwrap_or_default()
+        };
+        color.insert(start, 1);
+        stack.push((start, succ(start), 0));
+        while !stack.is_empty() {
+            let top = stack.len() - 1;
+            let node = stack[top].0;
+            if stack[top].2 >= stack[top].1.len() {
+                color.insert(node, 2);
+                stack.pop();
+                continue;
+            }
+            let next = stack[top].1[stack[top].2];
+            stack[top].2 += 1;
+            match color.get(next).copied().unwrap_or(0) {
+                0 => {
+                    color.insert(next, 1);
+                    let s = succ(next);
+                    stack.push((next, s, 0));
+                }
+                1 => {
+                    // grey → cycle; reconstruct the path on the stack
+                    let mut cyc: Vec<&str> =
+                        stack.iter().map(|(n, _, _)| *n).collect();
+                    if let Some(pos) = cyc.iter().position(|n| *n == next) {
+                        cyc = cyc[pos..].to_vec();
+                    }
+                    cyc.push(next);
+                    let site = edges
+                        .iter()
+                        .find(|e| e.from == node && e.to == next)
+                        .cloned();
+                    let (file, line) = site
+                        .map(|e| (e.file, e.line))
+                        .unwrap_or_else(|| ("<multiple>".into(), 0));
+                    out.push(Diagnostic {
+                        lint: LINT_LOCKS.into(),
+                        file,
+                        line,
+                        msg: format!(
+                            "lock-order cycle: {} — two threads taking these locks in \
+                             opposite order deadlock",
+                            cyc.join(" -> ")
+                        ),
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+    out.sort_by(|a, b| a.msg.cmp(&b.msg));
+    out.dedup_by(|a, b| a.msg == b.msg);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.into(), text: text.into() }
+    }
+
+    #[test]
+    fn nested_opposite_order_is_a_cycle() {
+        let src = sf(
+            "rust/src/x.rs",
+            r#"
+            fn ab(&self) {
+                let g = self.a.lock().unwrap();
+                let h = self.b.lock().unwrap();
+            }
+            fn ba(&self) {
+                let g = self.b.lock().unwrap();
+                let h = self.a.lock().unwrap();
+            }
+            "#,
+        );
+        let diags = lock_order(&[src]);
+        assert_eq!(diags.len(), 1, "{diags:#?}");
+        assert!(diags[0].msg.contains("cycle"), "{}", diags[0].msg);
+    }
+
+    #[test]
+    fn sequential_block_scoped_guards_are_clean() {
+        // the harness::fault idiom: guard dropped at block end before the
+        // next lock is taken
+        let src = sf(
+            "rust/src/x.rs",
+            r#"
+            fn f(&self) {
+                { let g = self.a.lock().unwrap(); g.touch(); }
+                { let g = self.b.lock().unwrap(); g.touch(); }
+            }
+            fn g(&self) {
+                { let g = self.b.lock().unwrap(); g.touch(); }
+                { let g = self.a.lock().unwrap(); g.touch(); }
+            }
+            "#,
+        );
+        assert!(lock_order(&[src]).is_empty());
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_semicolon() {
+        let src = sf(
+            "rust/src/x.rs",
+            r#"
+            fn f(&self) {
+                self.a.lock().unwrap().push(1);
+                self.b.lock().unwrap().push(2);
+            }
+            fn g(&self) {
+                self.b.lock().unwrap().push(1);
+                self.a.lock().unwrap().push(2);
+            }
+            "#,
+        );
+        assert!(lock_order(&[src]).is_empty());
+    }
+
+    #[test]
+    fn interprocedural_cycle_is_caught() {
+        let src = sf(
+            "rust/src/x.rs",
+            r#"
+            fn outer(&self) {
+                let g = self.a.lock().unwrap();
+                self.inner();
+            }
+            fn inner(&self) {
+                let g = self.b.lock().unwrap();
+            }
+            fn other(&self) {
+                let g = self.b.lock().unwrap();
+                let h = self.a.lock().unwrap();
+            }
+            "#,
+        );
+        let diags = lock_order(&[src]);
+        assert!(!diags.is_empty(), "expected inter-procedural cycle");
+    }
+
+    #[test]
+    fn io_read_with_args_is_not_a_lock() {
+        let src = sf(
+            "rust/src/x.rs",
+            r#"
+            fn f(&self, s: &mut TcpStream) {
+                let g = self.a.lock().unwrap();
+                s.read(&mut buf).unwrap();
+                s.write(&buf).unwrap();
+            }
+            "#,
+        );
+        assert!(lock_order(&[src]).is_empty());
+    }
+}

@@ -1,0 +1,228 @@
+//! `edl verify` — the repo's custom static-analysis pass and bounded model
+//! checker (see DESIGN.md §7).
+//!
+//! Five lints enforce invariants the rest of the stack leans on:
+//!
+//! | lint            | invariant                                           |
+//! |-----------------|-----------------------------------------------------|
+//! | `determinism`   | pure modules read no clocks, sleep never, no        |
+//! |                 | ambient RNG                                         |
+//! | `tag-layout`    | allreduce tag bitfields are disjoint, namespaced,   |
+//! |                 | generation-sensitive                                |
+//! | `wire-coverage` | every protocol enum variant appears in a round-trip |
+//! |                 | test                                                |
+//! | `lock-order`    | the inter-procedural lock graph is acyclic          |
+//! | `panic-path`    | protocol handle paths return typed errors, never    |
+//! |                 | unwrap/expect/panic                                 |
+//!
+//! `verify::model` then BFS-explores the pure `LeaderCore` exhaustively
+//! over a small scope where the PR 5 chaos harness only samples.
+//!
+//! All lints run on `(path, source-text)` pairs so the self-tests can feed
+//! seeded-regression fixtures through the same code path, and diagnostics
+//! are deterministic (sorted) so CI output is stable.
+
+pub mod lexer;
+pub mod lints;
+pub mod locks;
+pub mod model;
+pub mod tags;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding. `line == 0` means "whole file" (layout/coverage lints).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub lint: String,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "[{}] {}:{}: {}", self.lint, self.file, self.line, self.msg)
+        } else {
+            write!(f, "[{}] {}: {}", self.lint, self.file, self.msg)
+        }
+    }
+}
+
+/// A source file fed to the lints (real or fixture).
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// Recursively collect `.rs` files under each root, sorted by path so every
+/// run sees the same order.
+pub fn collect_sources(roots: &[&Path]) -> std::io::Result<Vec<SourceFile>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    fn walk(dir: &Path, paths: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        let mut entries: Vec<PathBuf> =
+            std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, paths)?;
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                paths.push(p);
+            }
+        }
+        Ok(())
+    }
+    for root in roots {
+        if root.is_dir() {
+            walk(root, &mut paths)?;
+        }
+    }
+    paths.sort();
+    paths
+        .into_iter()
+        .map(|p| {
+            Ok(SourceFile {
+                path: p.to_string_lossy().replace('\\', "/"),
+                text: std::fs::read_to_string(&p)?,
+            })
+        })
+        .collect()
+}
+
+/// One allowlist entry: `lint | path-suffix | message-needle  # why`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub lint: String,
+    pub path: String,
+    pub needle: String,
+    pub why: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse the allowlist format: one entry per line,
+    /// `lint | path-suffix | message-needle # justification`.
+    /// Blank lines and lines starting with `#` are comments. An entry with
+    /// no `#` justification is itself a parse error — exceptions must say
+    /// why they exist.
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let mut entries = Vec::new();
+        for (ix, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (body, why) = line
+                .split_once('#')
+                .ok_or_else(|| format!("allowlist line {}: missing `# justification`", ix + 1))?;
+            let why = why.trim();
+            if why.is_empty() {
+                return Err(format!("allowlist line {}: empty justification", ix + 1));
+            }
+            let parts: Vec<&str> = body.split('|').map(|s| s.trim()).collect();
+            if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
+                return Err(format!(
+                    "allowlist line {}: expected `lint | path-suffix | needle # why`",
+                    ix + 1
+                ));
+            }
+            entries.push(AllowEntry {
+                lint: parts[0].to_string(),
+                path: parts[1].to_string(),
+                needle: parts[2].to_string(),
+                why: why.to_string(),
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Allowlist, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Allowlist::default()),
+            Err(e) => Err(format!("reading {}: {e}", path.display())),
+        }
+    }
+
+    pub fn suppresses(&self, d: &Diagnostic) -> bool {
+        self.entries.iter().any(|e| {
+            e.lint == d.lint && d.file.contains(&e.path) && d.msg.contains(&e.needle)
+        })
+    }
+}
+
+/// Result of the static pass: surviving diagnostics plus suppression count.
+#[derive(Debug)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub suppressed: usize,
+}
+
+/// Run every lint over `sources`, apply the allowlist, and return the
+/// surviving diagnostics sorted (lint, file, line) for stable output.
+pub fn run_lints(sources: &[SourceFile], allow: &Allowlist) -> LintReport {
+    let mut diags = Vec::new();
+    diags.extend(lints::determinism(sources));
+    diags.extend(lints::panic_paths(sources));
+    diags.extend(lints::wire_coverage(sources));
+    diags.extend(locks::lock_order(sources));
+    let find = |suffix: &str| sources.iter().find(|s| s.path.contains(suffix));
+    match (find("/allreduce/mod.rs"), find("/transport/mod.rs")) {
+        (Some(ar), Some(tp)) => diags.extend(tags::tag_layout(ar, tp)),
+        _ => diags.push(Diagnostic {
+            lint: tags::LINT_TAGS.into(),
+            file: "<tree>".into(),
+            line: 0,
+            msg: "allreduce/transport sources not found — tag lint could not run".into(),
+        }),
+    }
+
+    let before = diags.len();
+    let mut survived: Vec<Diagnostic> =
+        diags.into_iter().filter(|d| !allow.suppresses(d)).collect();
+    survived.sort_by(|a, b| {
+        (&a.lint, &a.file, a.line, &a.msg).cmp(&(&b.lint, &b.file, b.line, &b.msg))
+    });
+    let suppressed = before - survived.len();
+    LintReport { diagnostics: survived, suppressed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_requires_justification() {
+        assert!(Allowlist::parse("panic-path | wire/mod.rs | unwrap").is_err());
+        assert!(Allowlist::parse("panic-path | wire/mod.rs | unwrap #   ").is_err());
+        let ok = Allowlist::parse(
+            "# comment\n\npanic-path | wire/mod.rs | try_into # take(N) guarantees length\n",
+        )
+        .unwrap();
+        assert_eq!(ok.entries.len(), 1);
+        assert_eq!(ok.entries[0].lint, "panic-path");
+    }
+
+    #[test]
+    fn allowlist_suppression_matches_lint_path_and_needle() {
+        let allow = Allowlist::parse(
+            "panic-path | wire/mod.rs | try_into # infallible\n",
+        )
+        .unwrap();
+        let hit = Diagnostic {
+            lint: "panic-path".into(),
+            file: "rust/src/wire/mod.rs".into(),
+            line: 189,
+            msg: "`unwrap` on a protocol handle path: try_into().unwrap()".into(),
+        };
+        let miss = Diagnostic { lint: "determinism".into(), ..hit.clone() };
+        assert!(allow.suppresses(&hit));
+        assert!(!allow.suppresses(&miss));
+    }
+}

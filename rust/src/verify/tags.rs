@@ -1,0 +1,631 @@
+//! Tag-layout lint: prove the allreduce tag bitfields cannot alias.
+//!
+//! PR 2 shipped (and fixed) a tag-alias bug where the generation field
+//! overlapped the sequence field, so segment N of step S could match
+//! segment M of step S'. This lint re-proves the fix on every run, against
+//! the *actual source* of `ring_tag`/`bcast_tag`: it extracts the constant
+//! and function definitions with the verify lexer, evaluates them with a
+//! tiny const-expression interpreter, and then measures which output bits
+//! each input field can influence. The checks are semantic — rewriting the
+//! layout in any equivalent form still passes; re-introducing an overlap
+//! fails no matter how it is spelled.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{ident_like, lex, strip_tests, Tok};
+use super::{Diagnostic, SourceFile};
+
+pub const LINT_TAGS: &str = "tag-layout";
+
+/// A parsed `fn name(p1, p2, ..) -> T { .. }` body: parameter names plus
+/// the tokens of its final expression (statements such as `debug_assert!`
+/// are dropped — only the value expression matters to the interpreter).
+#[derive(Debug, Clone)]
+struct FnDef {
+    params: Vec<String>,
+    body: Vec<Tok>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TagDefs {
+    consts: BTreeMap<String, u64>,
+    fns: BTreeMap<String, FnDef>,
+}
+
+/// Extract `const NAME: T = <expr>;` and `fn name(..) -> T { .. }` items.
+pub fn extract_defs(src: &str) -> Result<TagDefs, String> {
+    let toks = strip_tests(&lex(src));
+    let mut defs = TagDefs::default();
+    let mut i = 0usize;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "const" if i + 1 < toks.len() && toks[i + 1].text != "fn" => {
+                let name = toks[i + 1].text.clone();
+                // skip to '='
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "=" {
+                    j += 1;
+                }
+                let start = j + 1;
+                let mut k = start;
+                let mut d = 0i32;
+                while k < toks.len() && !(d == 0 && toks[k].text == ";") {
+                    match toks[k].text.as_str() {
+                        "{" | "(" | "[" => d += 1,
+                        "}" | ")" | "]" => d -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                if start < k {
+                    // non-integer consts (strings, arrays, paths) simply
+                    // don't enter the environment; the tag functions only
+                    // reference integer consts, which must evaluate
+                    if let Ok(v) = Eval::new(&defs, &BTreeMap::new()).expr(&toks[start..k]) {
+                        defs.consts.insert(name, v);
+                    }
+                }
+                i = k + 1;
+            }
+            "fn" if i + 1 < toks.len() => {
+                let name = toks[i + 1].text.clone();
+                // parameter names: idents directly followed by ':' at paren
+                // depth 1 of the signature
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "(" {
+                    j += 1;
+                }
+                let mut depth = 1i32;
+                let mut params = Vec::new();
+                let mut k = j + 1;
+                while k < toks.len() && depth > 0 {
+                    match toks[k].text.as_str() {
+                        "(" => depth += 1,
+                        ")" => depth -= 1,
+                        t => {
+                            if depth == 1
+                                && k + 1 < toks.len()
+                                && toks[k + 1].text == ":"
+                                && ident_like(t)
+                            {
+                                params.push(t.to_string());
+                            }
+                        }
+                    }
+                    k += 1;
+                }
+                // body: matching braces
+                while k < toks.len() && toks[k].text != "{" {
+                    k += 1;
+                }
+                let body_start = k + 1;
+                let mut bdepth = 1i32;
+                k += 1;
+                while k < toks.len() && bdepth > 0 {
+                    match toks[k].text.as_str() {
+                        "{" => bdepth += 1,
+                        "}" => bdepth -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let body_toks = &toks[body_start..k.saturating_sub(1)];
+                // final expression = tokens after the last top-level ';'
+                let mut last_semi = None;
+                let mut d = 0i32;
+                for (ix, t) in body_toks.iter().enumerate() {
+                    match t.text.as_str() {
+                        "{" | "(" | "[" => d += 1,
+                        "}" | ")" | "]" => d -= 1,
+                        ";" if d == 0 => last_semi = Some(ix),
+                        _ => {}
+                    }
+                }
+                let expr_start = last_semi.map(|s| s + 1).unwrap_or(0);
+                defs.fns.insert(
+                    name,
+                    FnDef { params, body: body_toks[expr_start..].to_vec() },
+                );
+                i = k;
+            }
+            _ => i += 1,
+        }
+    }
+    Ok(defs)
+}
+
+/// Recursive-descent const-expression interpreter over u64.
+/// Precedence (low→high): `|`, `^`, `&`, `<< >>`, `+ -`, `* / %`, unary,
+/// atoms. `expr as T` casts are applied with the target width (`u32`
+/// truncates — a tag function that silently overflows u32 shows up as a
+/// field influencing no output bits, which the disjointness checks catch).
+struct Eval<'a> {
+    defs: &'a TagDefs,
+    env: &'a BTreeMap<String, u64>,
+}
+
+struct P<'a> {
+    toks: &'a [Tok],
+    i: usize,
+}
+
+impl<'a> Eval<'a> {
+    fn new(defs: &'a TagDefs, env: &'a BTreeMap<String, u64>) -> Self {
+        Eval { defs, env }
+    }
+
+    fn expr(&self, toks: &[Tok]) -> Result<u64, String> {
+        let mut p = P { toks, i: 0 };
+        let v = self.bitor(&mut p)?;
+        if p.i < p.toks.len() {
+            return Err(format!(
+                "trailing tokens at {:?}",
+                p.toks[p.i..].iter().map(|t| &t.text).collect::<Vec<_>>()
+            ));
+        }
+        Ok(v)
+    }
+
+    fn bitor(&self, p: &mut P) -> Result<u64, String> {
+        let mut v = self.bitxor(p)?;
+        while p.i < p.toks.len() && p.toks[p.i].text == "|" {
+            p.i += 1;
+            v |= self.bitxor(p)?;
+        }
+        Ok(v)
+    }
+
+    fn bitxor(&self, p: &mut P) -> Result<u64, String> {
+        let mut v = self.bitand(p)?;
+        while p.i < p.toks.len() && p.toks[p.i].text == "^" {
+            p.i += 1;
+            v ^= self.bitand(p)?;
+        }
+        Ok(v)
+    }
+
+    fn bitand(&self, p: &mut P) -> Result<u64, String> {
+        let mut v = self.shift(p)?;
+        while p.i < p.toks.len() && p.toks[p.i].text == "&" {
+            p.i += 1;
+            v &= self.shift(p)?;
+        }
+        Ok(v)
+    }
+
+    fn shift(&self, p: &mut P) -> Result<u64, String> {
+        let mut v = self.add(p)?;
+        loop {
+            if p.i + 1 < p.toks.len() && p.toks[p.i].text == "<" && p.toks[p.i + 1].text == "<" {
+                p.i += 2;
+                let s = self.add(p)?;
+                v = if s >= 64 { 0 } else { v.wrapping_shl(s as u32) };
+            } else if p.i + 1 < p.toks.len()
+                && p.toks[p.i].text == ">"
+                && p.toks[p.i + 1].text == ">"
+            {
+                p.i += 2;
+                let s = self.add(p)?;
+                v = if s >= 64 { 0 } else { v.wrapping_shr(s as u32) };
+            } else {
+                break;
+            }
+        }
+        Ok(v)
+    }
+
+    fn add(&self, p: &mut P) -> Result<u64, String> {
+        let mut v = self.mul(p)?;
+        while p.i < p.toks.len() && (p.toks[p.i].text == "+" || p.toks[p.i].text == "-") {
+            let op = p.toks[p.i].text.clone();
+            p.i += 1;
+            let rhs = self.mul(p)?;
+            v = if op == "+" { v.wrapping_add(rhs) } else { v.wrapping_sub(rhs) };
+        }
+        Ok(v)
+    }
+
+    fn mul(&self, p: &mut P) -> Result<u64, String> {
+        let mut v = self.unary(p)?;
+        while p.i < p.toks.len()
+            && (p.toks[p.i].text == "*" || p.toks[p.i].text == "/" || p.toks[p.i].text == "%")
+        {
+            let op = p.toks[p.i].text.clone();
+            p.i += 1;
+            let rhs = self.unary(p)?;
+            v = match op.as_str() {
+                "*" => v.wrapping_mul(rhs),
+                "/" => v.checked_div(rhs).ok_or("division by zero")?,
+                _ => v.checked_rem(rhs).ok_or("modulo by zero")?,
+            };
+        }
+        Ok(v)
+    }
+
+    fn unary(&self, p: &mut P) -> Result<u64, String> {
+        if p.i < p.toks.len() && p.toks[p.i].text == "!" {
+            p.i += 1;
+            return Ok(!self.unary(p)?);
+        }
+        if p.i < p.toks.len() && p.toks[p.i].text == "-" {
+            p.i += 1;
+            return Ok(self.unary(p)?.wrapping_neg());
+        }
+        self.postfix(p)
+    }
+
+    /// Atom plus trailing `as <type>` casts.
+    fn postfix(&self, p: &mut P) -> Result<u64, String> {
+        let mut v = self.atom(p)?;
+        while p.i + 1 < p.toks.len() && p.toks[p.i].text == "as" {
+            let ty = p.toks[p.i + 1].text.as_str();
+            v = match ty {
+                "u8" => v & 0xFF,
+                "u16" => v & 0xFFFF,
+                "u32" => v & 0xFFFF_FFFF,
+                _ => v, // u64 / usize: identity at model width
+            };
+            p.i += 2;
+        }
+        Ok(v)
+    }
+
+    fn atom(&self, p: &mut P) -> Result<u64, String> {
+        let Some(t) = p.toks.get(p.i) else {
+            return Err("unexpected end of expression".into());
+        };
+        if t.text == "(" {
+            p.i += 1;
+            let v = self.bitor(p)?;
+            if p.toks.get(p.i).map(|t| t.text.as_str()) != Some(")") {
+                return Err("missing closing paren".into());
+            }
+            p.i += 1;
+            return self.trailing_casts(p, v);
+        }
+        let first = t.text.chars().next().unwrap_or(' ');
+        if first.is_ascii_digit() {
+            p.i += 1;
+            return parse_num(&t.text);
+        }
+        // identifier: parameter, const, or a call `name(args..)`
+        let name = t.text.clone();
+        p.i += 1;
+        if p.toks.get(p.i).map(|t| t.text.as_str()) == Some("(") {
+            // call: evaluate comma-separated args, then the callee body
+            p.i += 1;
+            let mut args = Vec::new();
+            if p.toks.get(p.i).map(|t| t.text.as_str()) != Some(")") {
+                loop {
+                    args.push(self.bitor(p)?);
+                    match p.toks.get(p.i).map(|t| t.text.as_str()) {
+                        Some(",") => p.i += 1,
+                        Some(")") => break,
+                        other => return Err(format!("bad call syntax near {other:?}")),
+                    }
+                }
+            }
+            p.i += 1;
+            let f = self
+                .defs
+                .fns
+                .get(&name)
+                .ok_or_else(|| format!("call to unknown fn {name}"))?;
+            if f.params.len() != args.len() {
+                return Err(format!("{name}: arity {} vs {}", f.params.len(), args.len()));
+            }
+            let env: BTreeMap<String, u64> =
+                f.params.iter().cloned().zip(args).collect();
+            return Eval::new(self.defs, &env).expr(&f.body);
+        }
+        if let Some(v) = self.env.get(&name).or_else(|| self.defs.consts.get(&name)) {
+            return Ok(*v);
+        }
+        Err(format!("unknown identifier {name}"))
+    }
+
+    fn trailing_casts(&self, p: &mut P, mut v: u64) -> Result<u64, String> {
+        while p.i + 1 < p.toks.len() && p.toks[p.i].text == "as" {
+            v = match p.toks[p.i + 1].text.as_str() {
+                "u8" => v & 0xFF,
+                "u16" => v & 0xFFFF,
+                "u32" => v & 0xFFFF_FFFF,
+                _ => v,
+            };
+            p.i += 2;
+        }
+        Ok(v)
+    }
+}
+
+fn parse_num(s: &str) -> Result<u64, String> {
+    let clean: String = s.chars().filter(|c| *c != '_').collect();
+    // strip integer type suffixes (u8/u16/u32/u64/usize/i32/..)
+    let strip = |txt: &str| -> String {
+        for suf in ["usize", "isize", "u64", "i64", "u32", "i32", "u16", "i16", "u8", "i8"] {
+            if let Some(base) = txt.strip_suffix(suf) {
+                if !base.is_empty() {
+                    return base.to_string();
+                }
+            }
+        }
+        txt.to_string()
+    };
+    if let Some(hex) = clean.strip_prefix("0x").or_else(|| clean.strip_prefix("0X")) {
+        return u64::from_str_radix(&strip(hex), 16).map_err(|e| format!("bad hex {s}: {e}"));
+    }
+    if let Some(bin) = clean.strip_prefix("0b") {
+        return u64::from_str_radix(&strip(bin), 2).map_err(|e| format!("bad bin {s}: {e}"));
+    }
+    strip(&clean).parse::<u64>().map_err(|e| format!("bad number {s}: {e}"))
+}
+
+// -- the lint itself ------------------------------------------------------
+
+const STEP_SAMPLES: &[u64] = &[
+    0, 1, 2, 3, 5, 7, 100, 0x7FFE, 0x7FFF, 0x8000, 0xFFFE, 0xFFFF,
+    1 << 24, (1 << 24) + 1, (1 << 24) + 2, 123_456_789, (1 << 40) + 3,
+];
+const SEQ_SAMPLES: &[u64] = &[0, 1, 2, 3, 7, 100, 0x1FFF, 0x3FFE, 0x3FFF];
+
+/// Compute the ring/bcast tag layout checks against the allreduce source
+/// (and the transport source, for the control-plane constants).
+pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut diag = |msg: String| {
+        out.push(Diagnostic {
+            lint: LINT_TAGS.into(),
+            file: allreduce.path.clone(),
+            line: 0,
+            msg,
+        });
+    };
+
+    let defs = match extract_defs(&allreduce.text) {
+        Ok(d) => d,
+        Err(e) => {
+            diag(format!("failed to parse tag definitions: {e}"));
+            return out;
+        }
+    };
+    for f in ["ring_tag", "bcast_tag"] {
+        if !defs.fns.contains_key(f) {
+            diag(format!("tag function {f} not found in {}", allreduce.path));
+            return out;
+        }
+    }
+    let call = |f: &str, args: &[(&str, u64)]| -> Result<u64, String> {
+        let fd = defs.fns.get(f).ok_or("missing fn")?;
+        let env: BTreeMap<String, u64> = fd
+            .params
+            .iter()
+            .enumerate()
+            .map(|(ix, p)| (p.clone(), args.get(ix).map(|a| a.1).unwrap_or(0)))
+            .collect();
+        Eval::new(&defs, &env).expr(&fd.body)
+    };
+    let rt = |step: u64, phase: u64, seq: u64| -> Result<u64, String> {
+        call("ring_tag", &[("step", step), ("phase", phase), ("seq", seq)])
+    };
+    let bt = |step: u64, seq: u64| -> Result<u64, String> {
+        call("bcast_tag", &[("step", step), ("seq", seq)])
+    };
+
+    // sample every combination; abort the lint on evaluator errors
+    let mut ring_vals = Vec::new();
+    let mut bcast_vals = Vec::new();
+    for &s in STEP_SAMPLES {
+        for &q in SEQ_SAMPLES {
+            for p in [0u64, 1] {
+                match rt(s, p, q) {
+                    Ok(v) => ring_vals.push(v),
+                    Err(e) => {
+                        diag(format!("ring_tag({s},{p},{q}) failed to evaluate: {e}"));
+                        return out;
+                    }
+                }
+            }
+            match bt(s, q) {
+                Ok(v) => bcast_vals.push(v),
+                Err(e) => {
+                    diag(format!("bcast_tag({s},{q}) failed to evaluate: {e}"));
+                    return out;
+                }
+            }
+        }
+    }
+
+    // influence masks: which output bits can each input toggle?
+    let base = (STEP_SAMPLES[6], 0u64, SEQ_SAMPLES[5]); // arbitrary interior point
+    let mut seq_mask = 0u64;
+    let mut phase_mask = 0u64;
+    let mut gen_mask = 0u64;
+    let mut bseq_mask = 0u64;
+    let mut bgen_mask = 0u64;
+    for &s in STEP_SAMPLES {
+        for &q in SEQ_SAMPLES {
+            for p in [0u64, 1] {
+                seq_mask |= rt(s, p, q).unwrap_or(0) ^ rt(s, p, base.2).unwrap_or(0);
+                phase_mask |= rt(s, 0, q).unwrap_or(0) ^ rt(s, 1, q).unwrap_or(0);
+                gen_mask |= rt(s, p, q).unwrap_or(0) ^ rt(base.0, p, q).unwrap_or(0);
+            }
+            bseq_mask |= bt(s, q).unwrap_or(0) ^ bt(s, base.2).unwrap_or(0);
+            bgen_mask |= bt(s, q).unwrap_or(0) ^ bt(base.0, q).unwrap_or(0);
+        }
+    }
+
+    // 1. field disjointness within ring_tag
+    for (a, an, b, bn) in [
+        (seq_mask, "seq", phase_mask, "phase"),
+        (seq_mask, "seq", gen_mask, "generation"),
+        (phase_mask, "phase", gen_mask, "generation"),
+    ] {
+        if a & b != 0 {
+            diag(format!(
+                "ring_tag fields overlap: {an} and {bn} share bits {:#010x} — tags from \
+                 different {bn}s can alias",
+                a & b
+            ));
+        }
+    }
+    if bseq_mask & bgen_mask != 0 {
+        diag(format!(
+            "bcast_tag fields overlap: seq and generation share bits {:#010x}",
+            bseq_mask & bgen_mask
+        ));
+    }
+
+    // 2. family separation: the invariant bits of each family must be
+    //    non-empty and disjoint, so no ring tag can ever equal a bcast tag
+    let ring_family = ring_vals.iter().fold(u64::MAX, |a, v| a & v);
+    let bcast_family = bcast_vals.iter().fold(u64::MAX, |a, v| a & v);
+    if ring_family == 0 {
+        diag("ring_tag has no invariant family bit — ring tags are not namespaced".into());
+    }
+    if bcast_family == 0 {
+        diag("bcast_tag has no invariant family bit — bcast tags are not namespaced".into());
+    }
+    if ring_family & bcast_family != 0 {
+        diag(format!(
+            "ring/bcast families share invariant bits {:#010x} — the two collectives can \
+             alias each other's segments",
+            ring_family & bcast_family
+        ));
+    }
+    // decisive cross-family check on the sampled values themselves
+    let ring_set: std::collections::HashSet<u64> = ring_vals.iter().copied().collect();
+    if let Some(v) = bcast_vals.iter().find(|v| ring_set.contains(v)) {
+        diag(format!("tag value {v:#010x} is produced by BOTH ring_tag and bcast_tag"));
+    }
+
+    // 3. generation sensitivity: adjacent steps and ring-version bumps
+    //    (step + 2^24 in the sync-tag encoding) must change the tag
+    for s in 0..64u64 {
+        if rt(s, 0, 1) == rt(s + 1, 0, 1) {
+            diag(format!("ring_tag is insensitive to step {s} -> {} — late traffic from \
+                          the previous step aliases the current one", s + 1));
+            break;
+        }
+    }
+    if rt(3, 0, 1) == rt(3 + (1 << 24), 0, 1) {
+        diag("ring_tag generation folds a ring-version bump (step + 2^24) onto the same \
+              tag — post-rescale traffic aliases pre-rescale traffic"
+            .into());
+    }
+    if rt(5, 0, 2) == rt(5, 1, 2) {
+        diag(
+            "ring_tag is insensitive to phase — reduce-scatter and allgather traffic alias".into(),
+        );
+    }
+
+    // 4. control-plane constants must live outside both data families
+    match extract_defs(&transport.text) {
+        Ok(tdefs) => {
+            let rpc = tdefs.consts.get("RPC").copied();
+            let kv = tdefs.consts.get("KV").copied();
+            match (rpc, kv) {
+                (Some(rpc), Some(kv)) => {
+                    if rpc == kv {
+                        diag("transport tag::RPC == tag::KV — control channels alias".into());
+                    }
+                    for (name, c) in [("RPC", rpc), ("KV", kv)] {
+                        if ring_set.contains(&c) || bcast_vals.contains(&c) {
+                            diag(format!(
+                                "transport tag::{name} ({c:#x}) collides with a data-plane tag"
+                            ));
+                        }
+                        if c & (ring_family | bcast_family) != 0 {
+                            diag(format!(
+                                "transport tag::{name} ({c:#x}) sets a data-plane family bit"
+                            ));
+                        }
+                    }
+                }
+                _ => diag("transport tag consts RPC/KV not found".into()),
+            }
+        }
+        Err(e) => diag(format!("failed to parse transport tag consts: {e}")),
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+        const FAMILY_RING: u32 = 0x4000_0000;
+        const FAMILY_BCAST: u32 = 0x8000_0000;
+        fn gen_field(step: u64) -> u32 {
+            (step % 0x7FFF) as u32
+        }
+        pub fn ring_tag(step: u64, phase: u32, seq: u32) -> u32 {
+            debug_assert!(phase < 2);
+            FAMILY_RING | (phase << 29) | (gen_field(step) << 14) | (seq & 0x3FFF)
+        }
+        pub fn bcast_tag(step: u64, seq: u32) -> u32 {
+            FAMILY_BCAST | (gen_field(step) << 14) | (seq & 0x3FFF)
+        }
+    "#;
+
+    const TRANSPORT: &str = r#"
+        pub mod tag {
+            pub const RPC: u32 = 0x3000;
+            pub const KV: u32 = 0x3001;
+        }
+    "#;
+
+    fn sf(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.into(), text: text.into() }
+    }
+
+    #[test]
+    fn const_expr_interpreter_basics() {
+        let defs = TagDefs::default();
+        let env = BTreeMap::new();
+        let eval = |src: &str| Eval::new(&defs, &env).expr(&lex(src)).unwrap();
+        assert_eq!(eval("0x4000_0000 | (1 << 29)"), 0x6000_0000);
+        assert_eq!(eval("(7 % 0x7FFF) as u32"), 7);
+        assert_eq!(eval("(0x1_0000_0003 as u32)"), 3);
+        assert_eq!(eval("100 - 2 * 3"), 94);
+        assert_eq!(eval("5 & 0x3FFF"), 5);
+    }
+
+    #[test]
+    fn good_layout_is_clean() {
+        let diags = tag_layout(
+            &sf("rust/src/allreduce/mod.rs", GOOD),
+            &sf("rust/src/transport/mod.rs", TRANSPORT),
+        );
+        assert!(diags.is_empty(), "{diags:#?}");
+    }
+
+    #[test]
+    fn aliased_generation_field_is_caught() {
+        // the PR-2 regression: generation shifted only 13, so its low bit
+        // lands inside the 14-bit seq field
+        let bad = GOOD.replace("gen_field(step) << 14", "gen_field(step) << 13");
+        let diags = tag_layout(
+            &sf("rust/src/allreduce/mod.rs", &bad),
+            &sf("rust/src/transport/mod.rs", TRANSPORT),
+        );
+        assert!(
+            diags.iter().any(|d| d.msg.contains("overlap")),
+            "expected an overlap diagnostic, got {diags:#?}"
+        );
+    }
+
+    #[test]
+    fn shared_family_bit_is_caught() {
+        let bad = GOOD.replace("0x8000_0000", "0x4000_0000");
+        let diags = tag_layout(
+            &sf("rust/src/allreduce/mod.rs", &bad),
+            &sf("rust/src/transport/mod.rs", TRANSPORT),
+        );
+        assert!(
+            diags.iter().any(|d| d.msg.contains("famil")),
+            "expected a family diagnostic, got {diags:#?}"
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Self-tests for `edl verify` (DESIGN.md §7): the repo must lint clean
+//! under the checked-in allowlist, the allowlist must be tight (it may
+//! suppress only the justified sites, nothing else), and — the part that
+//! keeps the lints honest — every lint must provably catch a seeded
+//! regression injected into the REAL tree through the exact code path
+//! `edl verify` runs. A lint that cannot fail is not a lint.
+
+use std::path::{Path, PathBuf};
+
+use edl::verify::model::{explore, ModelScope};
+use edl::verify::{collect_sources, lints, locks, run_lints, tags, Allowlist, SourceFile};
+
+fn repo_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// The real tree exactly as `edl verify` scans it (src + integration tests).
+fn real_sources() -> Vec<SourceFile> {
+    let src = repo_path("rust/src");
+    let tests = repo_path("rust/tests");
+    let sources = collect_sources(&[src.as_path(), tests.as_path()]).expect("scan tree");
+    assert!(sources.len() > 30, "suspiciously small tree: {} files", sources.len());
+    sources
+}
+
+fn real_allowlist() -> Allowlist {
+    Allowlist::load(&repo_path("rust/verify_allow.txt")).expect("parse allowlist")
+}
+
+#[test]
+fn repo_lints_clean_under_the_checked_in_allowlist() {
+    let report = run_lints(&real_sources(), &real_allowlist());
+    assert!(
+        report.diagnostics.is_empty(),
+        "tree must lint clean; got:\n{}",
+        report
+            .diagnostics
+            .iter()
+            .map(|d| format!("  {d}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.suppressed >= 2, "allowlist entries went unused — prune them");
+}
+
+#[test]
+fn allowlist_is_tight() {
+    // with NO allowlist, the only findings may be the two justified
+    // exception classes — anything else means a real regression crept in
+    // (or an allowlist entry is broader than its justification)
+    let report = run_lints(&real_sources(), &Allowlist::default());
+    assert!(!report.diagnostics.is_empty(), "expected the known panic-path exceptions");
+    for d in &report.diagnostics {
+        assert_eq!(d.lint, "panic-path", "unexpected non-exception finding: {d}");
+        assert!(
+            d.msg.contains("try_into") || d.msg.contains("spawn job server"),
+            "finding outside the justified exception classes: {d}"
+        );
+    }
+}
+
+/// Append `extra` to the real file whose path contains `suffix`, returning
+/// the mutated tree — a seeded regression in production code, linted
+/// through the production pass.
+fn seed_into(suffix: &str, extra: &str) -> Vec<SourceFile> {
+    let mut sources = real_sources();
+    let sf = sources
+        .iter_mut()
+        .find(|s| s.path.contains(suffix))
+        .unwrap_or_else(|| panic!("{suffix} not in tree"));
+    sf.text.push_str(extra);
+    sources
+}
+
+#[test]
+fn determinism_lint_catches_seeded_clock_read() {
+    let sources = seed_into(
+        "/coordinator/core.rs",
+        "\nfn _seeded_regression() -> u128 { std::time::Instant::now().elapsed().as_millis() }\n",
+    );
+    let report = run_lints(&sources, &real_allowlist());
+    assert!(
+        report.diagnostics.iter().any(|d| {
+            d.lint == "determinism"
+                && d.file.contains("/coordinator/core.rs")
+                && d.msg.contains("Instant")
+        }),
+        "seeded Instant::now in a pure module went undetected: {:?}",
+        report.diagnostics
+    );
+}
+
+#[test]
+fn panic_lint_catches_seeded_unwrap_on_protocol_path() {
+    let sources = seed_into(
+        "/rpc/mod.rs",
+        "\nfn _seeded_regression(o: Option<u32>) -> u32 { o.unwrap() }\n",
+    );
+    let report = run_lints(&sources, &real_allowlist());
+    assert!(
+        report.diagnostics.iter().any(|d| {
+            d.lint == "panic-path" && d.file.contains("/rpc/mod.rs") && d.msg.contains("`unwrap`")
+        }),
+        "seeded unwrap on a protocol path went undetected: {:?}",
+        report.diagnostics
+    );
+}
+
+#[test]
+fn lock_lint_catches_seeded_order_inversion() {
+    // two functions taking the same two locks in opposite orders, seeded
+    // into a real shell module, must surface as a cycle
+    let sources = seed_into(
+        "/transport/mod.rs",
+        r#"
+struct _SeededRegression {
+    a: std::sync::Mutex<u32>,
+    b: std::sync::Mutex<u32>,
+}
+impl _SeededRegression {
+    fn ab(&self) {
+        let _g = self.a.lock().unwrap();
+        let _h = self.b.lock().unwrap();
+    }
+    fn ba(&self) {
+        let _g = self.b.lock().unwrap();
+        let _h = self.a.lock().unwrap();
+    }
+}
+"#,
+    );
+    let report = run_lints(&sources, &real_allowlist());
+    assert!(
+        report
+            .diagnostics
+            .iter()
+            .any(|d| d.lint == "lock-order" && d.msg.contains("cycle")),
+        "seeded lock-order inversion went undetected: {:?}",
+        report.diagnostics
+    );
+}
+
+#[test]
+fn wire_lint_catches_variant_missing_from_every_test() {
+    let src = SourceFile {
+        path: "rust/src/rpc/mod.rs".into(),
+        text: "pub enum ToLeader { Hello { m: String }, Sync { step: u64 }, Goodbye }\n\
+               mod tests { fn t() { let _ = ToLeader::Hello { m: String::new() }; \
+               let _ = ToLeader::Sync { step: 3 }; } }"
+            .into(),
+    };
+    let diags = lints::wire_coverage_for(&[src], &[("/rpc/mod.rs", "ToLeader")]);
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    assert!(diags[0].msg.contains("ToLeader::Goodbye"), "{}", diags[0].msg);
+}
+
+const TAG_FIXTURE: &str = r#"
+const FAMILY_RING: u32 = 0x4000_0000;
+const FAMILY_BCAST: u32 = 0x8000_0000;
+fn gen_field(step: u64) -> u32 {
+    (step % 0x7FFF) as u32
+}
+pub fn ring_tag(step: u64, phase: u32, seq: u32) -> u32 {
+    FAMILY_RING | (phase << 29) | (gen_field(step) << 14) | (seq & 0x3FFF)
+}
+pub fn bcast_tag(step: u64, seq: u32) -> u32 {
+    FAMILY_BCAST | (gen_field(step) << 14) | (seq & 0x3FFF)
+}
+"#;
+
+const TRANSPORT_FIXTURE: &str =
+    "pub mod tag { pub const RPC: u32 = 0x3000; pub const KV: u32 = 0x3001; }";
+
+fn tag_diags(allreduce_src: &str) -> Vec<String> {
+    let ar = SourceFile { path: "rust/src/allreduce/mod.rs".into(), text: allreduce_src.into() };
+    let tp = SourceFile {
+        path: "rust/src/transport/mod.rs".into(),
+        text: TRANSPORT_FIXTURE.into(),
+    };
+    tags::tag_layout(&ar, &tp).into_iter().map(|d| d.msg).collect()
+}
+
+#[test]
+fn tag_lint_catches_seeded_field_alias() {
+    assert!(tag_diags(TAG_FIXTURE).is_empty(), "fixture layout must be clean");
+    // the PR-2 regression: generation shifted one bit short, overlapping seq
+    let aliased = TAG_FIXTURE.replace("gen_field(step) << 14", "gen_field(step) << 13");
+    let msgs = tag_diags(&aliased);
+    assert!(msgs.iter().any(|m| m.contains("overlap")), "{msgs:?}");
+}
+
+#[test]
+fn tag_lint_catches_seeded_family_collision() {
+    let shared = TAG_FIXTURE.replace("0x8000_0000", "0x4000_0000");
+    let msgs = tag_diags(&shared);
+    assert!(msgs.iter().any(|m| m.contains("famil")), "{msgs:?}");
+}
+
+#[test]
+fn lock_lint_fixture_interprocedural_cycle() {
+    // the inter-procedural shape: outer holds A and calls inner (takes B),
+    // other takes B then A — a cycle across three functions
+    let src = SourceFile {
+        path: "rust/src/fixture.rs".into(),
+        text: r#"
+impl S {
+    fn outer(&self) {
+        let _g = self.a.lock().unwrap();
+        self.inner();
+    }
+    fn inner(&self) {
+        let _g = self.b.lock().unwrap();
+    }
+    fn other(&self) {
+        let _g = self.b.lock().unwrap();
+        let _h = self.a.lock().unwrap();
+    }
+}
+"#
+        .into(),
+    };
+    let diags = locks::lock_order(&[src]);
+    assert!(!diags.is_empty(), "inter-procedural cycle went undetected");
+}
+
+// ---------------------------------------------------------------------------
+// bounded model checker
+// ---------------------------------------------------------------------------
+
+/// A scope small enough for debug-mode CI: one concurrent op, two steps of
+/// horizon. The release-mode `edl verify` run explores the full scope.
+fn small_scope() -> ModelScope {
+    ModelScope { max_ops: 1, step_cap: 2, max_states: 200_000, ..Default::default() }
+}
+
+#[test]
+fn model_checker_exhausts_small_scope_with_no_violation() {
+    let report = explore(small_scope());
+    if let Some((what, trace)) = &report.violation {
+        panic!("model violation: {what}\ntrace:\n  {}", trace.join("\n  "));
+    }
+    assert!(report.exhausted, "state cap hit: {} states", report.states);
+    assert!(
+        report.states > 100,
+        "scope suspiciously shallow: {} states — did the enabled-set collapse?",
+        report.states
+    );
+}
+
+#[test]
+fn model_exploration_is_deterministic() {
+    let a = explore(small_scope());
+    let b = explore(small_scope());
+    assert_eq!(a.states, b.states);
+    assert_eq!(a.transitions, b.transitions);
+    assert_eq!(a.max_depth, b.max_depth);
+}
