@@ -56,6 +56,23 @@ pub enum ArError {
     Wire(crate::wire::WireError),
     /// malformed data-plane traffic (wrong segment size, bad header, …)
     Protocol(String),
+    /// a specific ring neighbour is dead (send failed / probe bounced /
+    /// receive starved for the whole timeout) — callers trigger reform
+    /// instead of retrying blind
+    PeerLost(u32),
+    /// an out-of-band abort frame for this generation arrived: some other
+    /// participant saw the death first and cancelled the collective
+    Aborted,
+}
+
+impl ArError {
+    /// The ring neighbour this error identifies as dead, if any.
+    pub fn lost_peer(&self) -> Option<u32> {
+        match self {
+            ArError::PeerLost(p) => Some(*p),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for ArError {
@@ -66,6 +83,8 @@ impl std::fmt::Display for ArError {
             ArError::Net(e) => write!(f, "net: {e}"),
             ArError::Wire(e) => write!(f, "wire: {e}"),
             ArError::Protocol(s) => write!(f, "protocol: {s}"),
+            ArError::PeerLost(p) => write!(f, "ring neighbour {p} lost mid-collective"),
+            ArError::Aborted => write!(f, "collective aborted by a peer"),
         }
     }
 }
@@ -108,6 +127,12 @@ const MAX_BCAST_SEGS: usize = 16_000;
 
 const FAMILY_RING: u32 = 0x4000_0000;
 const FAMILY_BCAST: u32 = 0x8000_0000;
+/// Out-of-band abort/probe family: the fourth quadrant of the tag space,
+/// disjoint from ring (0x4...), broadcast (0x8...) and the static
+/// coordination tags (`transport::tag::RPC`/`KV`, which have no high
+/// bits). Carved per generation so an abort can never cancel a collective
+/// it was not aimed at.
+const FAMILY_ABORT: u32 = 0xC000_0000;
 
 /// Map an arbitrary 64-bit step/generation id into the 15-bit tag field:
 /// reduction mod 32767 (not a power of two, so every input bit
@@ -137,6 +162,27 @@ pub fn bcast_tag(step: u64, seq: u32) -> u32 {
     debug_assert!(seq < (1 << 14));
     FAMILY_BCAST | (gen_field(step) << 14) | (seq & 0x3FFF)
 }
+
+/// Abort/probe tag for generation `step`: one tag per generation in the
+/// abort family. Both the abort frame (payload = the full 64-bit step,
+/// little-endian — receivers verify it, so a stale abort from a
+/// mod-32767-aliased generation is consumed and ignored) and the
+/// liveness probe ([`ABORT_PING`]) travel under it.
+pub fn abort_tag(step: u64) -> u32 {
+    FAMILY_ABORT | (gen_field(step) << 14)
+}
+
+/// Probe payload on the abort tag: a live receiver consumes and ignores
+/// it; a DEAD in-proc receiver makes the send fail fast (`UnknownPeer`),
+/// which is the point. Distinct from any abort payload: a real abort
+/// carries a step, and `u64::MAX` is never a step.
+const ABORT_PING: [u8; 8] = [0xFF; 8];
+
+/// Receive-quantum for abort polling: blocked data-plane receives are
+/// sliced into windows this long so a survivor notices an abort frame or
+/// a dead neighbour in tens of milliseconds instead of burning the full
+/// per-recv timeout per segment.
+const ABORT_QUANTUM: Duration = Duration::from_millis(50);
 
 // ---------------------------------------------------------------------------
 // raw f32 segment helpers
@@ -201,6 +247,8 @@ struct PassSpec {
     right: u32,
     left: u32,
     tag: u32,
+    /// generation id of the whole collective (abort-tag namespace)
+    step: u64,
     send: (usize, usize),
     recv: (usize, usize),
     seg: usize,
@@ -208,10 +256,86 @@ struct PassSpec {
     copy: bool,
 }
 
+/// Best-effort abort fan-out: tell `peers` to abandon generation `step`.
+/// The payload carries the full 64-bit step so a receiver can reject a
+/// stale abort whose generation merely aliases mod 32767. Send failures
+/// are ignored — a dead peer needs no abort.
+fn flood_abort<N: PointToPoint>(net: &mut N, step: u64, peers: &[u32]) {
+    let atag = abort_tag(step);
+    for &p in peers {
+        let mut out = net.take_buf(8);
+        out.extend_from_slice(&step.to_le_bytes());
+        let _ = net.send(p, atag, out);
+    }
+}
+
+/// Drain queued abort-tag frames from `from` without blocking; `true`
+/// iff a genuine abort for `step` surfaced. PING probes and aliased
+/// stale aborts are consumed (recycled) and ignored.
+fn poll_abort<N: PointToPoint>(net: &mut N, from: u32, step: u64) -> bool {
+    let atag = abort_tag(step);
+    let mut hit = false;
+    while let Ok(p) = net.recv_from(from, atag, Duration::ZERO) {
+        if p.as_slice() == step.to_le_bytes() {
+            hit = true;
+        }
+        net.recycle(p);
+    }
+    hit
+}
+
+/// Receive one data segment from `left`, polling the out-of-band abort
+/// tag between short quanta. Fast unwind paths:
+///  * an abort frame from either neighbour → forward it once to the
+///    other side, return [`ArError::Aborted`];
+///  * the liveness probe to `left` bounces (`UnknownPeer`: in-proc
+///    endpoint dropped) → [`ArError::PeerLost`] within one quantum;
+///  * nothing at all for the full `timeout` → [`ArError::PeerLost`]
+///    (the first dead-neighbour verdict — later passes are never
+///    attempted, so a death costs ONE timeout, not one per segment).
+fn recv_abortable<N: PointToPoint>(
+    net: &mut N,
+    spec: &PassSpec,
+    timeout: Duration,
+) -> Result<Vec<u8>> {
+    let mut elapsed = Duration::ZERO;
+    loop {
+        let remaining = timeout.saturating_sub(elapsed);
+        if remaining.is_zero() {
+            flood_abort(net, spec.step, &[spec.right]);
+            return Err(ArError::PeerLost(spec.left));
+        }
+        let quantum = ABORT_QUANTUM.min(remaining);
+        match net.recv_from(spec.left, spec.tag, quantum) {
+            Ok(p) => return Ok(p),
+            Err(NetError::Timeout { .. }) => {}
+            Err(e) => return Err(ArError::Net(e)),
+        }
+        elapsed += quantum;
+        for &n in &[spec.left, spec.right] {
+            if poll_abort(net, n, spec.step) {
+                let other = if n == spec.left { spec.right } else { spec.left };
+                flood_abort(net, spec.step, &[other]);
+                return Err(ArError::Aborted);
+            }
+        }
+        // liveness probe: a send to a departed in-proc peer fails fast;
+        // a live peer consumes the PING marker and carries on
+        let mut ping = net.take_buf(8);
+        ping.extend_from_slice(&ABORT_PING);
+        if net.send(spec.left, abort_tag(spec.step), ping).is_err() {
+            flood_abort(net, spec.step, &[spec.right]);
+            return Err(ArError::PeerLost(spec.left));
+        }
+    }
+}
+
 /// Segment-pipelined transfer: segment `i`'s send is issued before
 /// segment `i−1`'s receive+reduce, so outbound bytes overlap the inbound
 /// reduce on a full-duplex link. Buffers come from (and return to) the
-/// endpoint's pool — zero allocations in steady state.
+/// endpoint's pool — zero allocations in steady state. Abortable: see
+/// [`recv_abortable`]; a failed send to `right` floods the abort left so
+/// the rest of the ring unwinds without burning its own timeouts.
 fn pipelined_pass<N: PointToPoint>(
     net: &mut N,
     buf: &mut [f32],
@@ -226,13 +350,21 @@ fn pipelined_pass<N: PointToPoint>(
             let raw = f32s_as_bytes(&buf[a..b]);
             let mut out = net.take_buf(raw.len());
             out.extend_from_slice(raw);
-            net.send(spec.right, spec.tag, out)?;
+            if let Err(e) = net.send(spec.right, spec.tag, out) {
+                return Err(match e {
+                    NetError::UnknownPeer(_) | NetError::Io(_) => {
+                        flood_abort(net, spec.step, &[spec.left]);
+                        ArError::PeerLost(spec.right)
+                    }
+                    other => ArError::Net(other),
+                });
+            }
         }
         if i == 0 {
             continue;
         }
         if let Some(&(ra, rb)) = recvs.get(i - 1) {
-            let payload = net.recv_from(spec.left, spec.tag, timeout)?;
+            let payload = recv_abortable(net, spec, timeout)?;
             let want = (rb - ra) * 4;
             if payload.len() != want {
                 return Err(ArError::Protocol(format!(
@@ -249,6 +381,27 @@ fn pipelined_pass<N: PointToPoint>(
         }
     }
     Ok(())
+}
+
+/// Post-abort mailbox hygiene: consume (and recycle) every already-queued
+/// frame of generation `step` — all ring tags from `left`, abort frames
+/// from both neighbours — so no poisoned state survives into the redo.
+/// Frames the not-yet-unwound `left` sends AFTER this drain stay
+/// quarantined by tag: the redo runs under a bumped ring-version, whose
+/// generation field cannot alias within 32766 generations.
+fn drain_step<N: PointToPoint>(net: &mut N, n: usize, step: u64, left: u32, right: u32) {
+    for phase in 0..2u32 {
+        for s in 0..n.saturating_sub(1) as u32 {
+            while let Ok(p) = net.recv_from(left, ring_tag(step, phase, s), Duration::ZERO) {
+                net.recycle(p);
+            }
+        }
+    }
+    for &peer in &[left, right] {
+        while let Ok(p) = net.recv_from(peer, abort_tag(step), Duration::ZERO) {
+            net.recycle(p);
+        }
+    }
 }
 
 /// In-place weighted-sum ring allreduce of `buf` across `ring`, with the
@@ -302,6 +455,15 @@ pub fn ring_allreduce_seg<N: PointToPoint>(
     let bounds = chunks(buf.len(), n);
     let seg = seg_elems.max(1);
 
+    // on PeerLost/Aborted, drain this generation's queued frames so the
+    // mailbox and pool are clean for the reformed redo
+    let unwind = |net: &mut N, e: ArError| {
+        if matches!(e, ArError::PeerLost(_) | ArError::Aborted) {
+            drain_step(net, n, step, left, right);
+        }
+        Err(e)
+    };
+
     // --- reduce-scatter: after N-1 steps, chunk (me+1)%n holds the sum ---
     for s in 0..n - 1 {
         let send_chunk = (me + n - s) % n;
@@ -310,12 +472,15 @@ pub fn ring_allreduce_seg<N: PointToPoint>(
             right,
             left,
             tag: ring_tag(step, 0, s as u32),
+            step,
             send: bounds[send_chunk],
             recv: bounds[recv_chunk],
             seg,
             copy: false,
         };
-        pipelined_pass(net, buf, &spec, timeout)?;
+        if let Err(e) = pipelined_pass(net, buf, &spec, timeout) {
+            return unwind(net, e);
+        }
     }
 
     // --- allgather: circulate the reduced chunks ---
@@ -326,12 +491,15 @@ pub fn ring_allreduce_seg<N: PointToPoint>(
             right,
             left,
             tag: ring_tag(step, 1, s as u32),
+            step,
             send: bounds[send_chunk],
             recv: bounds[recv_chunk],
             seg,
             copy: true,
         };
-        pipelined_pass(net, buf, &spec, timeout)?;
+        if let Err(e) = pipelined_pass(net, buf, &spec, timeout) {
+            return unwind(net, e);
+        }
     }
     Ok(())
 }
@@ -410,8 +578,45 @@ pub fn broadcast_send<N: PointToPoint>(
     Ok(())
 }
 
+/// [`broadcast_recv`]'s abortable receive: quantum-sliced like
+/// [`recv_abortable`], but for a single upstream peer (the tree parent)
+/// and a refcounted payload.
+fn recv_shared_abortable<N: PointToPoint>(
+    net: &mut N,
+    from: u32,
+    tag: u32,
+    step: u64,
+    timeout: Duration,
+) -> Result<Shared> {
+    let mut elapsed = Duration::ZERO;
+    loop {
+        let remaining = timeout.saturating_sub(elapsed);
+        if remaining.is_zero() {
+            return Err(ArError::PeerLost(from));
+        }
+        let quantum = ABORT_QUANTUM.min(remaining);
+        match net.recv_shared(from, tag, quantum) {
+            Ok(p) => return Ok(p),
+            Err(NetError::Timeout { .. }) => {}
+            Err(e) => return Err(ArError::Net(e)),
+        }
+        elapsed += quantum;
+        if poll_abort(net, from, step) {
+            return Err(ArError::Aborted);
+        }
+        let mut ping = net.take_buf(8);
+        ping.extend_from_slice(&ABORT_PING);
+        if net.send(from, abort_tag(step), ping).is_err() {
+            return Err(ArError::PeerLost(from));
+        }
+    }
+}
+
 /// Receive a broadcast model from `src`, relaying each segment to this
 /// node's binomial-tree children among `dests` (see [`broadcast_send`]).
+/// Abortable: a dead relay parent surfaces as [`ArError::PeerLost`]
+/// within one probe quantum (in-proc) or one timeout (TCP), never one
+/// timeout per segment.
 pub fn broadcast_recv<N: PointToPoint>(
     net: &mut N,
     src: u32,
@@ -426,7 +631,7 @@ pub fn broadcast_recv<N: PointToPoint>(
     let parent = parent.expect("non-root rank always has a parent");
     let pid = if parent == 0 { src } else { dests[parent - 1] };
 
-    let header = net.recv_shared(pid, bcast_tag(step, 0), timeout)?;
+    let header = recv_shared_abortable(net, pid, bcast_tag(step, 0), step, timeout)?;
     for &c in &children {
         net.send_shared(dests[c - 1], bcast_tag(step, 0), &header)?;
     }
@@ -445,7 +650,7 @@ pub fn broadcast_recv<N: PointToPoint>(
     let mut out = vec![0f32; total];
     for (i, &(a, b)) in segs.iter().enumerate() {
         let t = bcast_tag(step, 1 + i as u32);
-        let payload = net.recv_shared(pid, t, timeout)?;
+        let payload = recv_shared_abortable(net, pid, t, step, timeout)?;
         for &c in &children {
             net.send_shared(dests[c - 1], t, &payload)?;
         }
@@ -728,6 +933,27 @@ mod tests {
         // families are disjoint from each other and from legacy RPC tags
         assert_ne!(ring_tag(7, 0, 0) & 0xC000_0000, bcast_tag(7, 0) & 0xC000_0000);
         assert_eq!(crate::transport::tag::RPC & 0xC000_0000, 0);
+        // the abort family owns the fourth quadrant: disjoint from ring,
+        // bcast and the static coordination tags, for every generation
+        assert_eq!(abort_tag(7) & 0xC000_0000, 0xC000_0000);
+        assert_ne!(abort_tag(7) & 0xC000_0000, ring_tag(7, 0, 0) & 0xC000_0000);
+        assert_ne!(abort_tag(7) & 0xC000_0000, bcast_tag(7, 0) & 0xC000_0000);
+        assert_eq!(crate::transport::tag::RPC & 0xC000_0000, 0);
+        assert_eq!(crate::transport::tag::KV & 0xC000_0000, 0);
+        for step in 0..512u64 {
+            for phase in 0..2u32 {
+                for seq in 0..8u32 {
+                    assert_ne!(ring_tag(step, phase, seq), abort_tag(step));
+                }
+            }
+            for seq in 0..8u32 {
+                assert_ne!(bcast_tag(step, seq), abort_tag(step));
+            }
+        }
+        // ring-version bumps re-namespace the abort tag too
+        for v in 0..255u64 {
+            assert_ne!(abort_tag((v << 24) | 42), abort_tag(((v + 1) << 24) | 42));
+        }
     }
 
     #[test]
@@ -854,5 +1080,181 @@ mod tests {
             assert!(misses <= 16, "hot path still allocating: {misses} misses");
             assert!(hits >= 480, "pool barely used: {hits} hits");
         }
+    }
+
+    #[test]
+    fn survivors_unblock_fast_when_peer_dies_mid_collective() {
+        // worker 2 dies before participating; with a 30s recv timeout the
+        // survivors must still unwind in a couple of abort quanta, each
+        // with a typed verdict (PeerLost from a probe/send failure, or
+        // Aborted from the neighbour's out-of-band flood)
+        let hub = InProcHub::new();
+        let ring: Vec<u32> = vec![0, 1, 2];
+        let eps: Vec<_> = (0..3).map(|i| hub.join(i as u32)).collect();
+        let t0 = std::time::Instant::now();
+        let results: Vec<Option<ArError>> = std::thread::scope(|s| {
+            eps.into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    let ring = ring.clone();
+                    s.spawn(move || {
+                        if i == 2 {
+                            drop(ep); // channel disconnect = process death
+                            return None;
+                        }
+                        let mut buf = vec![i as f32; 64];
+                        Some(
+                            ring_allreduce(
+                                &mut ep,
+                                &ring,
+                                5,
+                                &mut buf,
+                                1.0,
+                                Duration::from_secs(30),
+                            )
+                            .unwrap_err(),
+                        )
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "survivors burned the full timeout: {:?}",
+            t0.elapsed()
+        );
+        for (i, r) in results.iter().enumerate().take(2) {
+            match r {
+                Some(ArError::PeerLost(2)) | Some(ArError::Aborted) => {}
+                other => panic!("worker {i}: unexpected outcome {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn reformed_redo_is_bit_identical_over_survivors() {
+        // step 9 on ring [0,1,2] aborts when 2 dies; the survivors then
+        // redo the SAME step under a bumped ring-version tag on ring [0,1]
+        // with pristine gradients. The redone reduction must bit-equal a
+        // 2-worker run that never saw worker 2 — i.e. an aborted attempt
+        // leaves no partial sums behind.
+        let hub = InProcHub::new();
+        let full: Vec<u32> = vec![0, 1, 2];
+        let reformed: Vec<u32> = vec![0, 1];
+        let step = 9u64;
+        let redo_tag = (1u64 << 24) | step; // ring_version 1, same step
+        let mut rng = Pcg::seeded(77);
+        let inputs: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..131).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let eps: Vec<_> = (0..3).map(|i| hub.join(i as u32)).collect();
+        let inputs2 = inputs.clone();
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            eps.into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    let full = full.clone();
+                    let reformed = reformed.clone();
+                    let pristine = inputs2.get(i).cloned();
+                    s.spawn(move || {
+                        if i == 2 {
+                            drop(ep);
+                            return Vec::new();
+                        }
+                        let pristine = pristine.unwrap();
+                        let mut buf = pristine.clone();
+                        let err = ring_allreduce(
+                            &mut ep,
+                            &full,
+                            step,
+                            &mut buf,
+                            0.5,
+                            Duration::from_secs(30),
+                        )
+                        .unwrap_err();
+                        assert!(
+                            matches!(err, ArError::PeerLost(2) | ArError::Aborted),
+                            "unexpected abort verdict: {err}"
+                        );
+                        // reform: fresh gradient copy, surviving cohort,
+                        // bumped generation
+                        let mut buf = pristine;
+                        ring_allreduce(
+                            &mut ep,
+                            &reformed,
+                            redo_tag,
+                            &mut buf,
+                            0.5,
+                            Duration::from_secs(30),
+                        )
+                        .unwrap();
+                        buf
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        // oracle: two-term weighted sum; f32 addition of two terms is
+        // commutative bitwise, so this is exact whichever worker reduces
+        for o in outs.iter().take(2) {
+            assert_eq!(o.len(), 131);
+            for (k, x) in o.iter().enumerate() {
+                let want = inputs[0][k] * 0.5 + inputs[1][k] * 0.5;
+                assert_eq!(
+                    x.to_bits(),
+                    want.to_bits(),
+                    "elt {k}: redo {x} != oracle {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aliased_stale_abort_does_not_cancel_healthy_collective() {
+        // generation g+0x7FFF maps to the same abort TAG as g; the 8-byte
+        // step payload disambiguates: stale aborts (and PING probes) are
+        // consumed without cancelling gen g, a genuine abort is honoured
+        let hub = InProcHub::new();
+        let mut a = hub.join(0);
+        let mut b = hub.join(1);
+        let g = 3u64;
+        let stale = g + 0x7FFF;
+        assert_eq!(abort_tag(g), abort_tag(stale));
+        a.send(1, abort_tag(stale), stale.to_le_bytes().to_vec()).unwrap();
+        a.send(1, abort_tag(g), ABORT_PING.to_vec()).unwrap();
+        // drain the channel into the mailbox's pending queue (a zero-
+        // timeout poll only inspects frames already received)
+        let _ = b.recv_from(0, ring_tag(g, 0, 0), Duration::from_millis(50));
+        assert!(!poll_abort(&mut b, 0, g), "stale abort / probe cancelled gen g");
+        a.send(1, abort_tag(g), g.to_le_bytes().to_vec()).unwrap();
+        let _ = b.recv_from(0, ring_tag(g, 0, 0), Duration::from_millis(50));
+        assert!(poll_abort(&mut b, 0, g), "genuine abort for gen g was missed");
+    }
+
+    #[test]
+    fn broadcast_recv_fails_fast_when_source_dies() {
+        // a joiner whose broadcast parent dies must not burn the full
+        // timeout: the per-quantum liveness probe bounces and yields a
+        // typed PeerLost verdict
+        let hub = InProcHub::new();
+        let src = hub.join(0);
+        let mut j = hub.join(1);
+        drop(src);
+        let t0 = std::time::Instant::now();
+        let err = broadcast_recv(&mut j, 0, &[1], 4, Duration::from_secs(30)).unwrap_err();
+        assert!(
+            matches!(err, ArError::PeerLost(0)),
+            "want PeerLost(0), got {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "joiner burned the full timeout: {:?}",
+            t0.elapsed()
+        );
     }
 }

@@ -125,6 +125,39 @@ enum LoadCtx {
     Recovery,
 }
 
+/// The last barrier release: which cohort is (or was) inside the
+/// collective it released, and under which tag. This is what an
+/// abort/reform must redo when a [`WorkerEvent::PeerDead`] arrives.
+#[derive(Clone)]
+struct GoRecord {
+    step: u64,
+    cohort: Vec<NodeId>,
+    sync_tag: u64,
+}
+
+/// An in-flight abort/reform for the collective released at `step`
+/// (the leader itself is already at `step + 1`). Every cohort member
+/// ends up in exactly one of `reported` (sent PeerDead — alive, stuck),
+/// `suspects` (named dead by a reporter, or silent past the timeout) or
+/// `completed` (its Sync for `step + 1` arrived — it finished the
+/// collective before the failure). Once all members are accounted for,
+/// the reform issues [`CtrlMsg::RingReform`] to the reporters and waits
+/// for [`WorkerEvent::ReformAck`]s against `issued_tag`.
+#[derive(Clone)]
+struct ReformState {
+    step: u64,
+    cohort: Vec<NodeId>,
+    reported: std::collections::BTreeSet<NodeId>,
+    suspects: std::collections::BTreeSet<NodeId>,
+    completed: std::collections::BTreeSet<NodeId>,
+    acked: std::collections::BTreeSet<NodeId>,
+    issued: bool,
+    issued_tag: u64,
+    round: u32,
+    /// when this phase (collecting reports / awaiting acks) began
+    since_ms: f64,
+}
+
 /// The pure leader state machine. See the module docs for the contract.
 pub struct LeaderCore {
     cfg: TrainerConfig,
@@ -149,6 +182,10 @@ pub struct LeaderCore {
     /// tick sweep aborts it if the parameter source dies before answering
     ckpt_pending: Option<(PathBuf, ReqToken, f64)>,
     pending_load: Option<LoadCtx>,
+    /// the most recent barrier release (what a reform would redo)
+    last_go: Option<GoRecord>,
+    /// in-flight abort/reform state machine (None = no failure mid-step)
+    reform: Option<ReformState>,
     /// Spawn actions emitted whose worker has not attached yet. In the
     /// TCP deployment a spawned worker process takes real time to connect
     /// and register; until it does, the §3.1 in-flight guard must hold
@@ -191,6 +228,8 @@ impl LeaderCore {
             op_exiting: Vec::new(),
             ckpt_pending: None,
             pending_load: None,
+            last_go: None,
+            reform: None,
             pending_spawn: 0,
             report: TrainReport::default(),
             recent_barriers: Default::default(),
@@ -254,6 +293,12 @@ impl LeaderCore {
     /// Workers whose Sync for the current step has been accepted.
     pub(crate) fn waiting_ids(&self) -> Vec<NodeId> {
         self.sync_waiting.keys().copied().collect()
+    }
+
+    /// True while an abort/reform for the last released collective is
+    /// still being collected, issued or acked.
+    pub(crate) fn reform_in_progress(&self) -> bool {
+        self.reform.is_some()
     }
 
     pub(crate) fn epoch(&self) -> u64 {
@@ -344,6 +389,31 @@ impl LeaderCore {
             }
             Some(LoadCtx::Recovery) => h.write_u8(2),
         }
+        match &self.last_go {
+            None => h.write_u8(0),
+            Some(g) => {
+                h.write_u8(1);
+                g.step.hash(h);
+                g.cohort.hash(h);
+                g.sync_tag.hash(h);
+            }
+        }
+        match &self.reform {
+            None => h.write_u8(0),
+            Some(r) => {
+                h.write_u8(1);
+                r.step.hash(h);
+                r.cohort.hash(h);
+                r.reported.hash(h);
+                r.suspects.hash(h);
+                r.completed.hash(h);
+                r.acked.hash(h);
+                r.issued.hash(h);
+                r.issued_tag.hash(h);
+                r.round.hash(h);
+                // since_ms excluded: lazy-time abstraction
+            }
+        }
         h.write_u32(self.last_loss.to_bits());
         self.next_id.hash(h);
         self.assigner.hash_state(h);
@@ -358,7 +428,15 @@ impl LeaderCore {
             Event::Request { token, req } => self.handle_request(token, req),
             Event::Tick => {
                 if !self.stopping {
-                    self.check_failures();
+                    self.tick_reform();
+                    // the barrier failure detector is suppressed while a
+                    // reform is still collecting reports/acks — a stuck
+                    // cohort is being handled, not silently dead
+                    let reforming = matches!(&self.reform, Some(r)
+                        if !r.issued || r.reported.iter().any(|id| !r.acked.contains(id)));
+                    if !reforming {
+                        self.check_failures();
+                    }
                     self.sweep_limbo_workers();
                     self.expire_stale_checkpoint();
                 }
@@ -607,6 +685,13 @@ impl LeaderCore {
                 CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: plan.clone() },
             );
         }
+        // record the release so a mid-collective failure can abort/reform
+        // exactly this cohort; completing the NEXT barrier proves the
+        // previous collective (redone or not) is over, so any reform for
+        // it is moot
+        self.last_go =
+            Some(GoRecord { step: self.step, cohort: self.active.clone(), sync_tag });
+        self.reform = None;
         self.sync_waiting.clear();
         self.barrier_open_ms = None;
         self.step += 1;
@@ -699,29 +784,7 @@ impl LeaderCore {
             return;
         }
         self.event(format!("failure-detected dead={dead:?} step={}", self.step));
-        for &d in &dead {
-            self.assigner.worker_left(d);
-            self.workers.remove(&d);
-        }
-        self.active.retain(|id| !dead.contains(id));
-        self.ring = Arc::new(self.active.clone());
-        self.ring_version += 1;
-        // drop any in-flight plan that references dead workers
-        if let Some(p) = &self.plan {
-            if p.joiners.iter().chain(p.exiting.iter()).any(|id| dead.contains(id))
-                || dead.contains(&p.broadcast_src)
-            {
-                self.plan = None;
-                self.joining.clear();
-                self.op_exiting.clear();
-                if let Some(token) = self.op_reply.take() {
-                    self.reply(
-                        token,
-                        Response::Err(ElasticError::Aborted("worker failed mid-operation".into())),
-                    );
-                }
-            }
-        }
+        self.remove_failed(&dead);
 
         if !self.cfg.approx_recovery {
             if let Some(path) = self.cfg.checkpoint_path.clone() {
@@ -811,6 +874,275 @@ impl LeaderCore {
         }
     }
 
+    /// Remove failed workers from membership: shard remainders back to the
+    /// pool, active/ring rebuilt with a bumped ring-version, any in-flight
+    /// plan referencing them dropped with a typed abort. Shared by the
+    /// barrier failure detector and the abort/reform machinery.
+    fn remove_failed(&mut self, dead: &[NodeId]) {
+        for &d in dead {
+            self.assigner.worker_left(d);
+            self.workers.remove(&d);
+        }
+        self.active.retain(|id| !dead.contains(id));
+        self.ring = Arc::new(self.active.clone());
+        self.ring_version += 1;
+        // drop any in-flight plan that references dead workers
+        if let Some(p) = &self.plan {
+            if p.joiners.iter().chain(p.exiting.iter()).any(|id| dead.contains(id))
+                || dead.contains(&p.broadcast_src)
+            {
+                self.plan = None;
+                self.joining.clear();
+                self.op_exiting.clear();
+                if let Some(token) = self.op_reply.take() {
+                    self.reply(
+                        token,
+                        Response::Err(ElasticError::Aborted("worker failed mid-operation".into())),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- abort/reform (fault-tolerant collectives) ---------------------------
+
+    /// A worker reported its collective failed ([`WorkerEvent::PeerDead`]).
+    /// Opens (or folds into) the reform for the last released step.
+    fn handle_peer_dead(&mut self, id: NodeId, step: u64, peer: Option<NodeId>) {
+        if !self.active.contains(&id) {
+            // a survivor of a cohort this leader already gave up on (it
+            // was reaped as a reform suspect or by the failure detector):
+            // it cannot rejoin the collective — tell it to exit
+            self.event(format!("stale-peerdead worker={id} step={step}"));
+            self.send_ctrl(id, CtrlMsg::Stop);
+            return;
+        }
+        if !matches!(&self.last_go, Some(g) if g.step == step) {
+            self.event(format!("stale-peerdead worker={id} step={step}"));
+            return;
+        }
+        if step == self.step {
+            // failure inside an approximate-recovery re-release (the
+            // leader has not completed this barrier): repair membership
+            // if the reporter named a silent peer, then re-release — the
+            // reporter's ctrl-wait accepts the fresh SyncGo
+            self.event(format!("peer-dead reporter={id} step={step} peer={peer:?}"));
+            if let Some(p) = peer {
+                if self.active.contains(&p) && !self.sync_waiting.contains_key(&p) {
+                    self.event(format!("failure-detected dead=[{p}] step={}", self.step));
+                    self.remove_failed(&[p]);
+                }
+            }
+            self.approximate_recover();
+            return;
+        }
+        if step + 1 != self.step {
+            self.event(format!("stale-peerdead worker={id} step={step}"));
+            return;
+        }
+        self.event(format!("peer-dead reporter={id} step={step} peer={peer:?}"));
+        if self.reform.is_none() {
+            // first report: abort the collective for everyone else still
+            // inside it, so survivors unwind instead of burning timeouts
+            let (cohort, sync_tag) = match &self.last_go {
+                Some(g) => (
+                    g.cohort
+                        .iter()
+                        .copied()
+                        .filter(|c| self.active.contains(c))
+                        .collect::<Vec<_>>(),
+                    g.sync_tag,
+                ),
+                None => return,
+            };
+            for c in cohort.clone() {
+                if c != id {
+                    self.send_ctrl(c, CtrlMsg::AbortCollective { sync_tag });
+                }
+            }
+            self.reform = Some(ReformState {
+                step,
+                cohort,
+                reported: Default::default(),
+                suspects: Default::default(),
+                completed: Default::default(),
+                acked: Default::default(),
+                issued: false,
+                issued_tag: 0,
+                round: 0,
+                since_ms: self.now_ms,
+            });
+        }
+        if let Some(r) = self.reform.as_mut() {
+            if r.issued {
+                // a failure during the redo itself: reopen for a fresh
+                // round (the new suspect shrinks the cohort, so this
+                // terminates)
+                r.issued = false;
+                r.acked.clear();
+                r.since_ms = self.now_ms;
+            }
+            r.reported.insert(id);
+            r.suspects.remove(&id);
+            if let Some(p) = peer {
+                if p != id && r.cohort.contains(&p) && !r.completed.contains(&p) {
+                    r.suspects.insert(p);
+                    r.reported.remove(&p);
+                }
+            }
+        }
+        self.try_complete_reform();
+    }
+
+    /// Issue the reform once every cohort member is accounted for:
+    /// suspects are removed from membership, the ring-version is bumped so
+    /// the redo cannot collide with aborted frames, and the surviving
+    /// reporters get [`CtrlMsg::RingReform`] with the redo ring in prior
+    /// ring order. The step is REDONE, not restored: no checkpoint, no
+    /// quiesce — and never double-counted, because the aborted attempt
+    /// applied nothing on any reporter.
+    fn try_complete_reform(&mut self) {
+        let Some(r) = self.reform.clone() else { return };
+        if r.issued {
+            return;
+        }
+        let accounted = r
+            .cohort
+            .iter()
+            .all(|c| r.reported.contains(c) || r.suspects.contains(c) || r.completed.contains(c));
+        if !accounted {
+            return;
+        }
+        let redo: Vec<NodeId> = r
+            .cohort
+            .iter()
+            .copied()
+            .filter(|c| r.reported.contains(c) && !r.completed.contains(c))
+            .collect();
+        let dead: Vec<NodeId> = r
+            .suspects
+            .iter()
+            .copied()
+            .filter(|d| self.workers.contains_key(d))
+            .collect();
+        if redo.is_empty() {
+            // no reporter survives: nothing to redo — reap the suspects
+            // and let the next barrier's failure detector handle the rest.
+            // Same safety valve as check_failures: never remove the WHOLE
+            // active set (a reissue timeout can drop reporters that are
+            // merely slow — their queued RingReform still lets them redo
+            // and re-Sync, so keeping them beats wedging an empty job)
+            self.event(format!("reform-empty step={}", r.step));
+            self.reform = None;
+            if !dead.is_empty() && dead.len() < self.active.len() {
+                self.event(format!("failure-detected dead={dead:?} step={}", self.step));
+                self.remove_failed(&dead);
+            }
+            return;
+        }
+        if !r.completed.is_empty() && !self.cfg.approx_recovery {
+            if let Some(path) = self.cfg.checkpoint_path.clone() {
+                // part of the cohort already applied an update computed
+                // over the pre-failure cohort; a redo over the survivors
+                // would diverge from it. Consistent mode falls back to
+                // checkpoint recovery (the redo-vs-quiesce decision table,
+                // DESIGN.md §8).
+                self.event(format!("reform-diverged step={}", r.step));
+                self.reform = None;
+                if !dead.is_empty() {
+                    self.remove_failed(&dead);
+                }
+                self.pending_load = Some(LoadCtx::Recovery);
+                self.out.push(Action::LoadCheckpoint { path });
+                return;
+            }
+            // no checkpoint configured: an approximate redo beats wedging
+            // the job (§4.2)
+            self.event(format!("reform-diverged step={}; proceeding approximately", r.step));
+        }
+        if dead.is_empty() {
+            // nothing actually died (spurious abort): still re-namespace
+            // the generation so the redo cannot alias aborted frames
+            self.ring = Arc::new(self.active.clone());
+            self.ring_version += 1;
+        } else {
+            self.event(format!("failure-detected dead={dead:?} step={}", self.step));
+            self.remove_failed(&dead);
+        }
+        let sync_tag = (self.ring_version << 24) | (r.step & 0xFF_FFFF);
+        let ring = Arc::new(redo.clone());
+        for &id in &redo {
+            self.send_ctrl(id, CtrlMsg::RingReform { ring: ring.clone(), sync_tag });
+        }
+        self.event(format!(
+            "ring-reform step={} survivors={} tag={sync_tag}",
+            r.step,
+            redo.len()
+        ));
+        // restart the S+1 barrier's failure clock: the redoers need time
+        // to redo + recompute before they can possibly Sync
+        if self.barrier_open_ms.is_some() {
+            self.barrier_open_ms = Some(self.now_ms);
+        }
+        if let Some(rr) = self.reform.as_mut() {
+            rr.issued = true;
+            rr.issued_tag = sync_tag;
+            rr.acked.clear();
+            rr.round += 1;
+            rr.since_ms = self.now_ms;
+        }
+    }
+
+    /// Reform timeouts: before issue, silent cohort members become
+    /// suspects; after issue, unacked reporters are dropped and the reform
+    /// reissued to the rest. Each round strictly shrinks the reported set,
+    /// so this terminates within |cohort| rounds.
+    fn tick_reform(&mut self) {
+        let timeout_ms = self.cfg.failure_timeout.as_secs_f64() * 1e3;
+        let reissue = {
+            let Some(r) = self.reform.as_mut() else { return };
+            if self.now_ms - r.since_ms < timeout_ms {
+                return;
+            }
+            if !r.issued {
+                let silent: Vec<NodeId> = r
+                    .cohort
+                    .iter()
+                    .copied()
+                    .filter(|c| {
+                        !r.reported.contains(c)
+                            && !r.completed.contains(c)
+                            && !r.suspects.contains(c)
+                    })
+                    .collect();
+                for s in silent {
+                    r.suspects.insert(s);
+                }
+                r.since_ms = self.now_ms;
+                None
+            } else {
+                let unacked: Vec<NodeId> =
+                    r.reported.iter().copied().filter(|id| !r.acked.contains(id)).collect();
+                if unacked.is_empty() {
+                    // redo in flight; the S+1 barrier detector takes over
+                    return;
+                }
+                for u in &unacked {
+                    r.reported.remove(u);
+                    r.suspects.insert(*u);
+                }
+                r.issued = false;
+                r.acked.clear();
+                r.since_ms = self.now_ms;
+                Some((r.step, unacked))
+            }
+        };
+        if let Some((step, dropped)) = reissue {
+            self.event(format!("reform-reissue step={step} dropped={dropped:?}"));
+        }
+        self.try_complete_reform();
+    }
+
     /// approximate recovery (§4.2): survivors redo the current mini-batch's
     /// allreduce on the repaired ring — reply to those already waiting
     fn approximate_recover(&mut self) {
@@ -819,6 +1151,10 @@ impl LeaderCore {
         for id in waiting {
             self.send_ctrl(id, CtrlMsg::SyncGo { ring: self.ring.clone(), sync_tag, switch: None });
         }
+        // the re-released collective is now the one a PeerDead would abort
+        self.last_go =
+            Some(GoRecord { step: self.step, cohort: self.active.clone(), sync_tag });
+        self.reform = None;
         // NOTE: waiting entries stay; stragglers of this step will re-Sync
         // and the barrier completes normally on the repaired active set.
         if self.sync_waiting.len() == self.active.len() {
@@ -834,6 +1170,9 @@ impl LeaderCore {
         self.step = at_step;
         self.sync_waiting.clear();
         self.barrier_open_ms = None;
+        // any in-flight collective is dead with the restore
+        self.last_go = None;
+        self.reform = None;
         let params = Arc::new(params);
         for id in self.active.clone() {
             self.send_ctrl(id, CtrlMsg::Restore { params: params.clone(), at_step });
@@ -922,6 +1261,17 @@ impl LeaderCore {
                     self.barrier_open_ms = Some(self.now_ms);
                 }
                 self.sync_waiting.insert(id, SyncInfo { loss, weight });
+                // a reform-cohort member syncing at step+1 finished the
+                // aborted collective before the failure: it must not be a
+                // suspect, and it must be excluded from any redo ring
+                // (try_complete_reform handles the divergence)
+                if let Some(r) = self.reform.as_mut() {
+                    if r.cohort.contains(&id) {
+                        r.completed.insert(id);
+                        r.suspects.remove(&id);
+                    }
+                }
+                self.try_complete_reform();
                 if self.active.iter().all(|a| self.sync_waiting.contains_key(a)) {
                     self.complete_barrier();
                 }
@@ -965,6 +1315,22 @@ impl LeaderCore {
                 // which prunes the stale id and aborts if nothing is left
                 if self.joining.contains(&id) || self.op_exiting.contains(&id) {
                     self.maybe_commit_scale();
+                }
+            }
+            WorkerEvent::PeerDead { id, step, peer } => {
+                self.handle_peer_dead(id, step, peer);
+            }
+            WorkerEvent::ReformAck { id, sync_tag } => {
+                if let Some(r) = self.reform.as_mut() {
+                    // count only acks against the CURRENT issued tag:
+                    // each reissue round re-bumps the ring-version, so a
+                    // straggling ack from a superseded round can never
+                    // complete the wrong round
+                    if r.issued && sync_tag == r.issued_tag {
+                        r.acked.insert(id);
+                    }
+                } else {
+                    self.event(format!("stale-reformack worker={id}"));
                 }
             }
             WorkerEvent::Params { id: _, step, params } => {
@@ -1180,6 +1546,8 @@ impl Clone for LeaderCore {
             op_exiting: self.op_exiting.clone(),
             ckpt_pending: self.ckpt_pending.clone(),
             pending_load: self.pending_load.clone(),
+            last_go: self.last_go.clone(),
+            reform: self.reform.clone(),
             pending_spawn: self.pending_spawn,
             report: self.report.clone(),
             recent_barriers: self.recent_barriers.clone(),

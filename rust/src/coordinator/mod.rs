@@ -57,6 +57,14 @@ pub enum WorkerEvent {
     ShardDone { id: NodeId },
     Goodbye { id: NodeId, shard: Option<(u64, u64)> },
     Params { id: NodeId, step: u64, params: Vec<f32> },
+    /// a collective for `step` failed under this worker; `peer` names the
+    /// dead ring neighbour when the abort machinery produced a verdict
+    /// (`ArError::PeerLost`), `None` for an undiagnosed failure
+    PeerDead { id: NodeId, step: u64, peer: Option<NodeId> },
+    /// echo of [`CtrlMsg::RingReform::sync_tag`] — the leader counts an
+    /// ack only against the currently-issued reform tag, so acks from
+    /// superseded reissue rounds can never complete the wrong round
+    ReformAck { id: NodeId, sync_tag: u64 },
 }
 
 /// leader → worker control messages
@@ -78,6 +86,15 @@ pub enum CtrlMsg {
     SendParams,
     Restore { params: Arc<Vec<f32>>, at_step: u64 },
     Stop,
+    /// cancel the collective released under `sync_tag`: survivors unwind
+    /// via the out-of-band abort tag family instead of burning the recv
+    /// timeout (data-plane aborts already propagate peer-to-peer; this is
+    /// the leader-initiated edge and the replay/model representation)
+    AbortCollective { sync_tag: u64 },
+    /// redo the current step's collective over `ring` (the surviving
+    /// cohort, prior ring order) under a fresh ring-version tag; the
+    /// receiver must answer with [`WorkerEvent::ReformAck`]
+    RingReform { ring: Arc<Vec<NodeId>>, sync_tag: u64 },
 }
 
 /// A committed topology switch (§4.2): executed by every worker at the end

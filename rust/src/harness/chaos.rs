@@ -60,6 +60,9 @@ const CTRL_LAT_US: u64 = 500;
 const SPAWN_LAG_US: u64 = 20_000;
 const TICK_US: u64 = 100_000;
 const POLL_US: u64 = 450_000;
+/// virtual duration of one ring allreduce — the window in which an armed
+/// mid-collective kill can land
+const COLLECTIVE_US: u64 = 8_000;
 const CKPT_PATH: &str = "/virtual/ckpt.bin";
 
 // ---------------------------------------------------------------------------
@@ -94,6 +97,17 @@ pub enum ChaosEvent {
     RestartLeader,
     /// a scale-out whose worker processes never arrive (spawn timeout)
     GrowGhost,
+    /// arm a kill that fires halfway through the next collective: one
+    /// ring member dies mid-reduce-scatter and the survivors must redo
+    /// the step via abort/reform (no checkpoint, no quiesce)
+    KillDuringReduceScatter,
+    /// arm a kill of the broadcast source after its collective but before
+    /// the joiner model broadcast: joiners strand and the failure
+    /// detector must reclaim both ends
+    KillDuringBroadcastRelay,
+    /// arm a kill of two ring-ADJACENT members mid-collective (the
+    /// hardest tear: both neighbours of some survivor vanish at once)
+    KillRingNeighbourPair,
 }
 
 /// The generated script plus the sizing knobs derived from the seed.
@@ -134,9 +148,12 @@ impl ChaosSchedule {
                 },
                 80..=84 => ChaosEvent::DupRelease { ms: 500 + rng.gen_range(1500) },
                 85..=92 => ChaosEvent::Checkpoint,
-                93..=96 if checkpointed => ChaosEvent::RestartLeader,
-                93..=96 => ChaosEvent::Checkpoint,
-                _ => ChaosEvent::GrowGhost,
+                93..=94 if checkpointed => ChaosEvent::RestartLeader,
+                93..=94 => ChaosEvent::Checkpoint,
+                95 => ChaosEvent::GrowGhost,
+                96..=97 => ChaosEvent::KillDuringReduceScatter,
+                98 => ChaosEvent::KillDuringBroadcastRelay,
+                _ => ChaosEvent::KillRingNeighbourPair,
             };
             if ev == ChaosEvent::Checkpoint {
                 checkpointed = true;
@@ -172,6 +189,10 @@ pub struct ChaosReport {
     pub fault_hits: u64,
     /// leader generations (1 + restarts)
     pub generations: u32,
+    /// every leader generation's engine event log, flattened in order —
+    /// tests assert protocol-level outcomes here (e.g. a mid-collective
+    /// kill produced a `ring-reform` and never a checkpoint restore)
+    pub engine_events: Vec<String>,
 }
 
 /// An invariant violation (or a panic inside the stack), with the log
@@ -230,6 +251,11 @@ enum WSt {
     Compute,
     /// Sync sent, waiting for the barrier release
     WaitGo,
+    /// released: the ring allreduce is in flight (a CollectiveDone item
+    /// is queued) — the window a mid-collective kill tears open
+    Collective,
+    /// the collective aborted: PeerDead sent, waiting for RingReform
+    AwaitReform,
     /// exited (graceful, Stop, or fenced)
     Gone,
 }
@@ -244,8 +270,12 @@ struct VWorker {
     shard: Option<(PartitionMeta, u64)>,
     pending_switch: Option<SwitchPlan>,
     step_us: u64,
-    /// invalidates queued StepDone items after restores/restarts
+    /// invalidates queued StepDone/CollectiveDone items after restores,
+    /// restarts and aborts
     compute_seq: u64,
+    /// the ring this worker's in-flight collective runs over (from the
+    /// releasing SyncGo / RingReform)
+    cohort: Vec<NodeId>,
 }
 
 /// Deterministic per-barrier worker loss: step- AND member-sensitive, so
@@ -264,6 +294,11 @@ enum Q {
     ToLeader(NodeId, WorkerEvent),
     ToWorker(NodeId, CtrlMsg),
     StepDone(NodeId, u64),
+    /// the ring allreduce finished for this member (guarded by
+    /// compute_seq like StepDone)
+    CollectiveDone(NodeId, u64),
+    /// an armed mid-collective kill fires on these victims
+    ArmedStrike(Vec<NodeId>),
     SpawnArrive(NodeId, String),
     SpawnFailed(NodeId),
     /// execution-context preparation finished: the worker sends Ready
@@ -306,6 +341,18 @@ impl Ord for Item {
 // ---------------------------------------------------------------------------
 
 pub use super::mirrors::Coverage;
+
+/// An armed mid-collective kill waiting for its firing condition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ArmedKill {
+    /// one ring member dies halfway through the next collective
+    ReduceScatter,
+    /// the broadcast source dies after its collective, before any joiner
+    /// receives the model
+    BroadcastRelay,
+    /// two ring-adjacent members die halfway through the next collective
+    NeighbourPair,
+}
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum OpKind {
@@ -367,6 +414,8 @@ pub struct ChaosCluster {
     killed: BTreeSet<NodeId>,
     /// fault-clock ms until which each worker is partitioned
     partitioned_until: HashMap<NodeId, u64>,
+    /// a scripted mid-collective kill waiting for its firing condition
+    armed_kill: Option<ArmedKill>,
     chaos_done: bool,
     quiesce_step: u64,
     settle_scheduled: bool,
@@ -411,6 +460,7 @@ impl ChaosCluster {
             last_barrier_us: 0,
             killed: BTreeSet::new(),
             partitioned_until: HashMap::new(),
+            armed_kill: None,
             chaos_done: false,
             quiesce_step: 0,
             settle_scheduled: false,
@@ -567,6 +617,12 @@ impl ChaosCluster {
                 Q::ToLeader(from, ev) => self.deliver_to_leader(from, ev),
                 Q::ToWorker(id, msg) => self.deliver_to_worker(id, msg),
                 Q::StepDone(id, cseq) => self.step_done(id, cseq),
+                Q::CollectiveDone(id, cseq) => self.collective_done(id, cseq),
+                Q::ArmedStrike(victims) => {
+                    for v in victims {
+                        self.kill_worker(v, "chaos-kill-collective");
+                    }
+                }
                 Q::SpawnArrive(id, machine) => {
                     self.spawn_vworker(id, machine);
                     self.attach_worker(id, true);
@@ -615,6 +671,16 @@ impl ChaosCluster {
                 events_run: self.events_run,
                 fault_hits: self.plan.hits(),
                 generations: self.gen + 1,
+                engine_events: self
+                    .reports
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(g, r)| {
+                        r.events.iter().map(move |e| {
+                            format!("g{g} s{} {}", e.step, e.what)
+                        })
+                    })
+                    .collect(),
             }),
             Some(what) => {
                 let tail: Vec<String> =
@@ -796,6 +862,28 @@ impl ChaosCluster {
                     );
                 }
             }
+            ChaosEvent::KillDuringReduceScatter => {
+                self.armed_kill = Some(ArmedKill::ReduceScatter);
+                self.logln("armed kill-during-reduce-scatter".into());
+            }
+            ChaosEvent::KillDuringBroadcastRelay => {
+                self.armed_kill = Some(ArmedKill::BroadcastRelay);
+                self.logln("armed kill-during-broadcast-relay".into());
+                // a relay death needs joiners to strand: drive a
+                // scale-out alongside so a broadcast actually happens
+                if active.len() < 8 {
+                    self.issue_request(
+                        Request::ScaleOut { machines: vec![format!("bm{ix}")] },
+                        OpKind::Grow,
+                        vec![],
+                        vec![],
+                    );
+                }
+            }
+            ChaosEvent::KillRingNeighbourPair => {
+                self.armed_kill = Some(ArmedKill::NeighbourPair);
+                self.logln("armed kill-ring-neighbour-pair".into());
+            }
             ChaosEvent::GrowGhost => {
                 self.issue_request(
                     Request::ScaleOut { machines: vec![format!("ghost{ix}")] },
@@ -832,6 +920,9 @@ impl ChaosCluster {
 
     fn begin_quiesce(&mut self) {
         self.plan.heal();
+        // an armed kill that never found its firing condition is a fault
+        // too: disarm it, or it could strike after the settle checks
+        self.armed_kill = None;
         self.chaos_done = true;
         self.quiesce_step = self.core.as_ref().map(|c| c.step()).unwrap_or(0);
         self.logln("quiesce: faults healed, waiting for the stack to settle".into());
@@ -889,6 +980,7 @@ impl ChaosCluster {
                     w.pending_switch = None;
                     w.gathered = 0;
                     w.compute_seq += 1;
+                    w.cohort.clear();
                     Some(id)
                 } else {
                     None
@@ -1128,6 +1220,13 @@ impl ChaosCluster {
                 let r: Vec<NodeId> = (**ring).clone();
                 self.observe_ring(&r);
             }
+            CtrlMsg::RingReform { ring, .. } => {
+                // with approx_recovery off, a RingReform's redo ring IS
+                // the new active set (suspects were failure-removed in
+                // the same reform round) — mirror the membership change
+                let r: Vec<NodeId> = (**ring).clone();
+                self.observe_ring(&r);
+            }
             CtrlMsg::Restore { at_step, .. } => {
                 self.restored_since_poll =
                     Some(self.restored_since_poll.map_or(*at_step, |p| p.min(*at_step)));
@@ -1329,6 +1428,7 @@ impl ChaosCluster {
                 pending_switch: None,
                 step_us,
                 compute_seq: 0,
+                cohort: Vec::new(),
             },
         );
     }
@@ -1368,6 +1468,162 @@ impl ChaosCluster {
             step_ms: w.step_us as f64 / 1e3,
             shard: w.shard.map(|(m, u)| (m.id, u)),
         }
+    }
+
+    /// Begin the ring allreduce for this member: a CollectiveDone item
+    /// lands COLLECTIVE_US later, and an armed kill may strike halfway.
+    fn enter_collective(&mut self, id: NodeId, cohort: Vec<NodeId>) {
+        let boundary = {
+            let w = self.workers.get_mut(&id).unwrap();
+            w.st = WSt::Collective;
+            w.cohort = cohort;
+            w.compute_seq += 1;
+            w.pending_switch.as_ref().map(|p| p.at_step == w.step + 1).unwrap_or(false)
+        };
+        let cseq = self.workers[&id].compute_seq;
+        self.push(self.now_us + COLLECTIVE_US, Q::CollectiveDone(id, cseq));
+        // switch-boundary steps are excluded: exiting members and joiner
+        // broadcasts make the tear ambiguous — the armed kill waits for
+        // the next plain step
+        if !boundary {
+            self.maybe_fire_armed_kill(id);
+        }
+    }
+
+    /// The first member entering a plain (non-boundary) collective trips
+    /// any armed mid-collective kill: victims die halfway through, so no
+    /// member completes before the tear (the redo cannot diverge).
+    fn maybe_fire_armed_kill(&mut self, id: NodeId) {
+        let Some(kind) = self.armed_kill else { return };
+        let cohort = self.workers[&id].cohort.clone();
+        let victims: Vec<NodeId> = match kind {
+            ArmedKill::ReduceScatter => {
+                if cohort.len() < 2 {
+                    return;
+                }
+                vec![cohort[self.rng.gen_range(cohort.len() as u64) as usize]]
+            }
+            ArmedKill::NeighbourPair => {
+                if cohort.len() < 3 {
+                    return;
+                }
+                let i = self.rng.gen_range(cohort.len() as u64) as usize;
+                vec![cohort[i], cohort[(i + 1) % cohort.len()]]
+            }
+            // fires at the broadcast commit, not mid-collective
+            ArmedKill::BroadcastRelay => return,
+        };
+        self.armed_kill = None;
+        self.logln(format!("armed-kill {kind:?} fires victims={victims:?}"));
+        self.push(self.now_us + COLLECTIVE_US / 2, Q::ArmedStrike(victims));
+    }
+
+    /// This member's allreduce finished — unless a cohort member died
+    /// before finishing its own (step still at this member's step), in
+    /// which case the ring is torn and the §4.2 abort/reform path runs.
+    fn collective_done(&mut self, id: NodeId, cseq: u64) {
+        let Some(w) = self.workers.get(&id) else { return };
+        if !w.alive || w.st != WSt::Collective || w.compute_seq != cseq {
+            return;
+        }
+        let step = w.step;
+        let dead_peer = w.cohort.iter().copied().find(|m| {
+            *m != id
+                && self
+                    .workers
+                    .get(m)
+                    .map(|p| !p.alive && p.step <= step)
+                    .unwrap_or(false)
+        });
+        if let Some(p) = dead_peer {
+            self.abort_to_reform(id, step, Some(p));
+            return;
+        }
+        self.commit_step(id);
+    }
+
+    /// The collective failed under this member: report PeerDead and wait
+    /// for the leader's RingReform — except an exiting member at its
+    /// switch boundary, which leaves gracefully instead (its gradient is
+    /// not needed by the surviving cohort's redo).
+    fn abort_to_reform(&mut self, id: NodeId, step: u64, peer: Option<NodeId>) {
+        let exiting = {
+            let w = self.workers.get_mut(&id).unwrap();
+            let ex = w
+                .pending_switch
+                .as_ref()
+                .map(|p| p.at_step == step + 1 && p.exiting.contains(&id))
+                .unwrap_or(false);
+            w.st = if ex { WSt::Gone } else { WSt::AwaitReform };
+            w.compute_seq += 1;
+            ex
+        };
+        if exiting {
+            let shard = self.workers[&id].shard.map(|(m, u)| (m.id, u));
+            self.wsend(id, WorkerEvent::Goodbye { id, shard });
+        } else {
+            self.wsend(id, WorkerEvent::PeerDead { id, step, peer });
+        }
+    }
+
+    /// Commit point: mini-batch boundary after a completed collective.
+    fn commit_step(&mut self, id: NodeId) {
+        let mut released_joiners: Vec<(NodeId, SwitchPlan)> = Vec::new();
+        let mut goodbye: Option<WorkerEvent> = None;
+        {
+            let w = self.workers.get_mut(&id).unwrap();
+            if let Some(plan) = w.pending_switch.clone() {
+                if plan.at_step == w.step + 1 {
+                    if plan.exiting.contains(&id) {
+                        goodbye = Some(WorkerEvent::Goodbye {
+                            id,
+                            shard: w.shard.map(|(m, u)| (m.id, u)),
+                        });
+                        w.st = WSt::Gone;
+                    } else {
+                        if plan.broadcast_src == id && !plan.joiners.is_empty() {
+                            for &j in plan.joiners.iter() {
+                                released_joiners.push((j, plan.clone()));
+                            }
+                        }
+                        w.local_batch = plan.local_batch;
+                        w.pending_switch = None;
+                    }
+                }
+            }
+            if goodbye.is_none() {
+                w.step += 1;
+            }
+        }
+        if let Some(ev) = goodbye {
+            self.wsend(id, ev);
+            return;
+        }
+        if !released_joiners.is_empty() && self.armed_kill == Some(ArmedKill::BroadcastRelay) {
+            // the relay dies AFTER its collective committed (step already
+            // bumped, so cohort members do not see a torn ring) but before
+            // any joiner receives the model: joiners strand in
+            // WaitBroadcast and the failure detector reclaims both ends
+            self.armed_kill = None;
+            self.kill_worker(id, "chaos-kill-broadcast-relay");
+            return;
+        }
+        // model broadcast to the joiner cohort (virtual: instant)
+        for (j, plan) in released_joiners {
+            let release = self
+                .workers
+                .get_mut(&j)
+                .filter(|jw| jw.alive && jw.st == WSt::WaitBroadcast)
+                .map(|jw| {
+                    jw.step = plan.at_step;
+                    jw.local_batch = plan.local_batch;
+                })
+                .is_some();
+            if release {
+                self.start_step(j);
+            }
+        }
+        self.start_step(id);
     }
 
     fn start_step(&mut self, id: NodeId) {
@@ -1492,7 +1748,7 @@ impl ChaosCluster {
                     self.begin_compute(id); // partial (possibly empty) batch
                 }
             }
-            CtrlMsg::SyncGo { sync_tag, switch, .. } => {
+            CtrlMsg::SyncGo { ring, sync_tag, switch } => {
                 if st != WSt::WaitGo {
                     self.logln(format!("worker {id} dropped stray SyncGo"));
                     return;
@@ -1512,54 +1768,27 @@ impl ChaosCluster {
                     self.wsend(id, sync);
                     return;
                 }
-                // commit point: mini-batch boundary
-                let mut released_joiners: Vec<(NodeId, SwitchPlan)> = Vec::new();
-                let mut goodbye: Option<WorkerEvent> = None;
-                {
-                    let w = self.workers.get_mut(&id).unwrap();
-                    if let Some(plan) = w.pending_switch.clone() {
-                        if plan.at_step == w.step + 1 {
-                            if plan.exiting.contains(&id) {
-                                goodbye = Some(WorkerEvent::Goodbye {
-                                    id,
-                                    shard: w.shard.map(|(m, u)| (m.id, u)),
-                                });
-                                w.st = WSt::Gone;
-                            } else {
-                                if plan.broadcast_src == id && !plan.joiners.is_empty() {
-                                    for &j in plan.joiners.iter() {
-                                        released_joiners.push((j, plan.clone()));
-                                    }
-                                }
-                                w.local_batch = plan.local_batch;
-                                w.pending_switch = None;
-                            }
-                        }
-                    }
-                    if goodbye.is_none() {
-                        w.step += 1;
-                    }
+                self.enter_collective(id, (*ring).clone());
+            }
+            CtrlMsg::AbortCollective { .. } => {
+                // out-of-band cancel: only meaningful mid-collective;
+                // anywhere else it is a stale duplicate
+                if st == WSt::Collective {
+                    let step = self.workers[&id].step;
+                    self.abort_to_reform(id, step, None);
                 }
-                if let Some(ev) = goodbye {
-                    self.wsend(id, ev);
-                    return;
+            }
+            CtrlMsg::RingReform { ring, sync_tag } => {
+                // ack ALWAYS (the leader retries until every reporter
+                // acks), adopt only when aborted at the matching step
+                self.wsend(id, WorkerEvent::ReformAck { id, sync_tag });
+                let (step, aborted) = {
+                    let w = &self.workers[&id];
+                    (w.step, w.st == WSt::AwaitReform)
+                };
+                if aborted && sync_tag & 0xFF_FFFF == step & 0xFF_FFFF {
+                    self.enter_collective(id, (*ring).clone());
                 }
-                // model broadcast to the joiner cohort (virtual: instant)
-                for (j, plan) in released_joiners {
-                    let release = self
-                        .workers
-                        .get_mut(&j)
-                        .filter(|jw| jw.alive && jw.st == WSt::WaitBroadcast)
-                        .map(|jw| {
-                            jw.step = plan.at_step;
-                            jw.local_batch = plan.local_batch;
-                        })
-                        .is_some();
-                    if release {
-                        self.start_step(j);
-                    }
-                }
-                self.start_step(id);
             }
             CtrlMsg::SendParams => {
                 let step = self.workers[&id].step;
@@ -1606,7 +1835,15 @@ impl ChaosCluster {
             .workers
             .iter()
             .filter(|(_, w)| {
-                w.alive && matches!(w.st, WSt::Gather | WSt::Compute | WSt::WaitGo)
+                w.alive
+                    && matches!(
+                        w.st,
+                        WSt::Gather
+                            | WSt::Compute
+                            | WSt::WaitGo
+                            | WSt::Collective
+                            | WSt::AwaitReform
+                    )
             })
             .map(|(&id, _)| id)
             .collect();
@@ -1694,6 +1931,8 @@ fn ev_name(ev: &WorkerEvent) -> &'static str {
         WorkerEvent::ShardDone { .. } => "ShardDone",
         WorkerEvent::Goodbye { .. } => "Goodbye",
         WorkerEvent::Params { .. } => "Params",
+        WorkerEvent::PeerDead { .. } => "PeerDead",
+        WorkerEvent::ReformAck { .. } => "ReformAck",
     }
 }
 
@@ -1706,6 +1945,8 @@ fn ctrl_name(msg: &CtrlMsg) -> &'static str {
         CtrlMsg::SendParams => "SendParams",
         CtrlMsg::Restore { .. } => "Restore",
         CtrlMsg::Stop => "Stop",
+        CtrlMsg::AbortCollective { .. } => "AbortCollective",
+        CtrlMsg::RingReform { .. } => "RingReform",
     }
 }
 

@@ -130,6 +130,10 @@ fn build_cfg(args: &Args) -> TrainerConfig {
         n_partitions: args.u64("partitions", 64),
         seed: args.u64("seed", 7),
         switch_allowance_ms: args.f64("switch-allowance-ms", 500.0),
+        failure_timeout: std::time::Duration::from_millis(args.u64(
+            "failure-timeout-ms",
+            TrainerConfig::default().failure_timeout.as_millis() as u64,
+        )),
         straggler_mitigation: args.bool("straggler-mitigation", false),
         // the paper's USE_APPX_RECOVERY switch, resolved ONCE here at
         // config construction — the trainer never reads the environment
@@ -607,15 +611,18 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
             max_ops: args.usize("model-ops", 2),
             step_cap: args.u64("model-steps", 4),
             max_states: args.usize("max-states", 250_000),
+            max_fails: args.usize("model-fails", 2),
             ..Default::default()
         };
         let t0 = std::time::Instant::now();
         let rep = model::explore(scope);
         println!(
-            "model: {} states, {} transitions, max depth {}, exhausted={} ({:.1}s)",
+            "model: {} states, {} transitions, max depth {}, {} mid-reform, \
+             exhausted={} ({:.1}s)",
             rep.states,
             rep.transitions,
             rep.max_depth,
+            rep.reform_states,
             rep.exhausted,
             t0.elapsed().as_secs_f64()
         );

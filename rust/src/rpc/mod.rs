@@ -55,6 +55,13 @@ pub enum ToLeader {
     Goodbye { worker: NodeId, shard: Option<(u64, u64)> },
     /// parameter upload (checkpoint path)
     Params { worker: NodeId, step: u64, params: Vec<f32> },
+    /// a collective for `step` died under this worker: `peer` is the
+    /// neighbour it diagnosed as lost (if any); the leader answers with
+    /// [`FromLeader::AbortCollective`] + [`FromLeader::RingReform`]
+    PeerDead { worker: NodeId, step: u64, peer: Option<NodeId> },
+    /// ack of a [`FromLeader::RingReform`], echoing its `sync_tag`; the
+    /// leader re-issues the reform until every reporter acks
+    ReformAck { worker: NodeId, sync_tag: u64 },
 }
 
 /// Leader → worker messages.
@@ -90,6 +97,13 @@ pub enum FromLeader {
     /// handshake refused (config mismatch, shutdown): the worker process
     /// must exit with the reason instead of training on wrong data
     Reject { reason: String },
+    /// cancel the in-flight collective tagged `sync_tag` (out-of-band
+    /// abort: survivors unwind instead of burning the full timeout)
+    AbortCollective { sync_tag: u64 },
+    /// redo the aborted step over `ring` (the surviving reporters) under
+    /// a re-namespaced `sync_tag`; must be acked with
+    /// [`ToLeader::ReformAck`]
+    RingReform { ring: Vec<NodeId>, sync_tag: u64 },
 }
 
 /// A [`SwitchPlan`] in wire form (no `Arc`s).
@@ -162,6 +176,12 @@ impl ToLeader {
             WorkerEvent::Params { id, step, params } => {
                 ToLeader::Params { worker: *id, step: *step, params: params.clone() }
             }
+            WorkerEvent::PeerDead { id, step, peer } => {
+                ToLeader::PeerDead { worker: *id, step: *step, peer: *peer }
+            }
+            WorkerEvent::ReformAck { id, sync_tag } => {
+                ToLeader::ReformAck { worker: *id, sync_tag: *sync_tag }
+            }
         })
     }
 
@@ -187,6 +207,12 @@ impl ToLeader {
             ToLeader::Goodbye { worker, shard } => WorkerEvent::Goodbye { id: worker, shard },
             ToLeader::Params { worker, step, params } => {
                 WorkerEvent::Params { id: worker, step, params }
+            }
+            ToLeader::PeerDead { worker, step, peer } => {
+                WorkerEvent::PeerDead { id: worker, step, peer }
+            }
+            ToLeader::ReformAck { worker, sync_tag } => {
+                WorkerEvent::ReformAck { id: worker, sync_tag }
             }
         })
     }
@@ -217,6 +243,12 @@ impl FromLeader {
                 FromLeader::Restore { params: (**params).clone(), at_step: *at_step }
             }
             CtrlMsg::Stop => FromLeader::Stop,
+            CtrlMsg::AbortCollective { sync_tag } => {
+                FromLeader::AbortCollective { sync_tag: *sync_tag }
+            }
+            CtrlMsg::RingReform { ring, sync_tag } => {
+                FromLeader::RingReform { ring: (**ring).clone(), sync_tag: *sync_tag }
+            }
         }
     }
 
@@ -249,6 +281,10 @@ impl FromLeader {
                 CtrlMsg::Restore { params: Arc::new(params), at_step }
             }
             FromLeader::Stop => CtrlMsg::Stop,
+            FromLeader::AbortCollective { sync_tag } => CtrlMsg::AbortCollective { sync_tag },
+            FromLeader::RingReform { ring, sync_tag } => {
+                CtrlMsg::RingReform { ring: Arc::new(ring), sync_tag }
+            }
         })
     }
 }
@@ -323,6 +359,20 @@ impl ToLeader {
             ToLeader::Params { worker, step, params } => {
                 e.u8(8).u32(*worker).u64(*step).f32s(params);
             }
+            ToLeader::PeerDead { worker, step, peer } => {
+                e.u8(9).u32(*worker).u64(*step);
+                match peer {
+                    Some(p) => {
+                        e.bool(true).u32(*p);
+                    }
+                    None => {
+                        e.bool(false);
+                    }
+                }
+            }
+            ToLeader::ReformAck { worker, sync_tag } => {
+                e.u8(10).u32(*worker).u64(*sync_tag);
+            }
         }
         e.into_bytes()
     }
@@ -349,6 +399,12 @@ impl ToLeader {
             6 => Ok(ToLeader::ShardDone { worker: d.u32()? }),
             7 => Ok(ToLeader::Goodbye { worker: d.u32()?, shard: dec_shard(&mut d)? }),
             8 => Ok(ToLeader::Params { worker: d.u32()?, step: d.u64()?, params: d.f32s()? }),
+            9 => Ok(ToLeader::PeerDead {
+                worker: d.u32()?,
+                step: d.u64()?,
+                peer: if d.bool()? { Some(d.u32()?) } else { None },
+            }),
+            10 => Ok(ToLeader::ReformAck { worker: d.u32()?, sync_tag: d.u64()? }),
             tag => Err(WireError::BadTag { tag: tag as u32, ty: "ToLeader" }),
         }
     }
@@ -406,6 +462,14 @@ impl FromLeader {
             FromLeader::Reject { reason } => {
                 e.u8(10).str(reason);
             }
+            FromLeader::AbortCollective { sync_tag } => {
+                e.u8(11).u64(*sync_tag);
+            }
+            FromLeader::RingReform { ring, sync_tag } => {
+                e.u8(12);
+                e.u32s(ring);
+                e.u64(*sync_tag);
+            }
         }
         e.into_bytes()
     }
@@ -440,6 +504,8 @@ impl FromLeader {
             8 => Ok(FromLeader::Restore { params: d.f32s()?, at_step: d.u64()? }),
             9 => Ok(FromLeader::Stop),
             10 => Ok(FromLeader::Reject { reason: d.str()? }),
+            11 => Ok(FromLeader::AbortCollective { sync_tag: d.u64()? }),
+            12 => Ok(FromLeader::RingReform { ring: d.u32s()?, sync_tag: d.u64()? }),
             tag => Err(WireError::BadTag { tag: tag as u32, ty: "FromLeader" }),
         }
     }
@@ -518,6 +584,16 @@ mod tests {
                     step: rng.next_u64() >> 16,
                     params: (0..rng.gen_range(256)).map(|_| rng.normal() as f32).collect(),
                 },
+                ToLeader::PeerDead {
+                    worker: w,
+                    step: rng.next_u64() >> 16,
+                    peer: if rng.gen_range(2) == 0 {
+                        None
+                    } else {
+                        Some(rng.gen_range(1 << 20) as NodeId)
+                    },
+                },
+                ToLeader::ReformAck { worker: w, sync_tag: rng.next_u64() },
             ];
             for m in msgs {
                 let back = ToLeader::decode(&m.encode()).map_err(|e| e.to_string())?;
@@ -563,6 +639,8 @@ mod tests {
                 },
                 FromLeader::Stop,
                 FromLeader::Reject { reason: rand_str(rng) },
+                FromLeader::AbortCollective { sync_tag: rng.next_u64() },
+                FromLeader::RingReform { ring: rand_ids(rng), sync_tag: rng.next_u64() },
             ];
             for m in msgs {
                 let back = FromLeader::decode(&m.encode()).map_err(|e| e.to_string())?;
@@ -595,6 +673,8 @@ mod tests {
             }
             .encode(),
             ToLeader::Params { worker: 2, step: 9, params: vec![1.0, 2.0, 3.0] }.encode(),
+            ToLeader::PeerDead { worker: 1, step: 42, peer: Some(2) }.encode(),
+            ToLeader::ReformAck { worker: 1, sync_tag: (2u64 << 24) | 42 }.encode(),
         ];
         for full in samples {
             for cut in 0..full.len() {
@@ -630,6 +710,8 @@ mod tests {
             FromLeader::Peers { peers: vec![(1, "127.0.0.1:1".into())] }.encode(),
             FromLeader::Restore { params: vec![0.5; 4], at_step: 3 }.encode(),
             FromLeader::Reject { reason: "config mismatch".into() }.encode(),
+            FromLeader::AbortCollective { sync_tag: (1u64 << 24) | 10 }.encode(),
+            FromLeader::RingReform { ring: vec![1, 2], sync_tag: (2u64 << 24) | 10 }.encode(),
         ];
         for full in samples {
             for cut in 0..full.len() {
@@ -679,6 +761,8 @@ mod tests {
             CtrlMsg::SendParams,
             CtrlMsg::Restore { params: Arc::new(vec![1.0, 2.0]), at_step: 11 },
             CtrlMsg::Stop,
+            CtrlMsg::AbortCollective { sync_tag: (3u64 << 24) | 7 },
+            CtrlMsg::RingReform { ring: Arc::new(vec![1, 2]), sync_tag: (4u64 << 24) | 7 },
         ];
         for msg in msgs {
             let wire = FromLeader::from_ctrl(&msg);
@@ -708,6 +792,9 @@ mod tests {
             WorkerEvent::ShardDone { id: 5 },
             WorkerEvent::Goodbye { id: 5, shard: None },
             WorkerEvent::Params { id: 5, step: 9, params: vec![0.1, 0.2] },
+            WorkerEvent::PeerDead { id: 5, step: 9, peer: Some(6) },
+            WorkerEvent::PeerDead { id: 5, step: 9, peer: None },
+            WorkerEvent::ReformAck { id: 5, sync_tag: (7u64 << 24) | 9 },
         ];
         for ev in evs {
             let wire = ToLeader::from_event(&ev, "127.0.0.1:4000").expect("wire-visible event");

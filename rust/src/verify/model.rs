@@ -9,8 +9,9 @@
 //!    FIFO message queues + the invariant mirrors from
 //!    [`harness::mirrors`](crate::harness::mirrors);
 //!  * a transition = delivering one queued message, letting one worker
-//!    compute, a fault (kill / lost Goodbye / spawn failure), injecting a
-//!    Table-1 operation, or firing the failure-detector timeout;
+//!    compute, a fault (kill / lost Goodbye / spawn failure / collective
+//!    abort mid-allreduce), injecting a Table-1 operation, or firing the
+//!    failure-detector timeout;
 //!  * states are deduplicated by a structural digest that deliberately
 //!    EXCLUDES absolute time ("lazy time"): the clock only advances by a
 //!    huge jump in the explicit `TimeoutTick` transition, which models
@@ -55,6 +56,10 @@ pub struct ModelScope {
     pub max_workers: usize,
     /// total Table-1 operations injected along any path
     pub max_ops: usize,
+    /// total mid-collective aborts ([`Step::FailCollective`]) injected
+    /// along any path — bounds the reform-cascade depth the same way
+    /// `max_ops` bounds adjustment interleavings
+    pub max_fails: usize,
     /// exploration horizon: states whose leader step reached this become
     /// BFS leaves (training cycles forever, so the raw graph is infinite);
     /// the quiesce drain still proves every leaf settles and keeps
@@ -73,6 +78,7 @@ impl Default for ModelScope {
             founders: 2,
             max_workers: 3,
             max_ops: 2,
+            max_fails: 2,
             step_cap: 4,
             max_states: 250_000,
             n_samples: 6,
@@ -90,6 +96,9 @@ pub struct ModelReport {
     pub transitions: usize,
     /// longest BFS depth reached
     pub max_depth: usize,
+    /// distinct states with an abort/reform in progress on the leader —
+    /// proves the fault-tolerant-collective protocol is actually in scope
+    pub reform_states: usize,
     /// true iff the frontier emptied before `max_states`
     pub exhausted: bool,
     /// first invariant violation: (description, transition trace)
@@ -111,6 +120,12 @@ enum Step {
     Compute(NodeId),
     /// kill worker `w` silently (no Goodbye ever)
     Kill(NodeId),
+    /// worker `w` enters the collective released by the SyncGo at the
+    /// head of its queue and the collective ABORTS mid-flight: `w` pops
+    /// the SyncGo, reports [`WorkerEvent::PeerDead`] (naming a dead ring
+    /// member if one exists — spurious abort otherwise) and parks in
+    /// [`MSt::AwaitReform`] until the leader's [`CtrlMsg::RingReform`]
+    FailCollective(NodeId),
     /// drop the Goodbye at the head of `w`'s →leader queue
     LoseGoodbye(NodeId),
     /// a spawned worker process comes up
@@ -150,6 +165,9 @@ enum MSt {
     Gather,
     Compute,
     WaitGo,
+    /// collective aborted: PeerDead sent, waiting for the RingReform
+    /// that releases the redo (fault-tolerant collectives)
+    AwaitReform,
     Gone,
 }
 
@@ -209,6 +227,7 @@ struct MState {
     ops: BTreeMap<u64, OpRec>,
     next_token: u64,
     ops_done: usize,
+    fails_done: usize,
     // -- invariant mirrors (harness::mirrors semantics) --
     coverage: Coverage,
     leader_inflight: BTreeMap<NodeId, (PartitionMeta, u64)>,
@@ -294,6 +313,7 @@ impl MState {
         }
         h.write_u64(self.next_token);
         h.write_usize(self.ops_done);
+        h.write_usize(self.fails_done);
         self.coverage.hash_state(&mut h);
         h.write_usize(self.leader_inflight.len());
         for (id, (m, done)) in &self.leader_inflight {
@@ -370,6 +390,17 @@ fn hash_worker_event<H: Hasher>(ev: &WorkerEvent, h: &mut H) {
                 h.write_u32(p.to_bits());
             }
         }
+        WorkerEvent::PeerDead { id, step, peer } => {
+            h.write_u8(9);
+            id.hash(h);
+            step.hash(h);
+            peer.hash(h);
+        }
+        WorkerEvent::ReformAck { id, sync_tag } => {
+            h.write_u8(10);
+            id.hash(h);
+            sync_tag.hash(h);
+        }
     }
 }
 
@@ -416,6 +447,15 @@ fn hash_ctrl_msg<H: Hasher>(msg: &CtrlMsg, h: &mut H) {
             }
         }
         CtrlMsg::Stop => h.write_u8(7),
+        CtrlMsg::AbortCollective { sync_tag } => {
+            h.write_u8(8);
+            sync_tag.hash(h);
+        }
+        CtrlMsg::RingReform { ring, sync_tag } => {
+            h.write_u8(9);
+            ring.hash(h);
+            sync_tag.hash(h);
+        }
     }
 }
 
@@ -478,6 +518,7 @@ impl Checker {
             ops: BTreeMap::new(),
             next_token: 0,
             ops_done: 0,
+            fails_done: 0,
             coverage: Coverage::new(self.scope.n_samples),
             leader_inflight: BTreeMap::new(),
             cur_ring: Vec::new(),
@@ -661,6 +702,22 @@ impl Checker {
             CtrlMsg::Restore { .. } => {
                 return viol("Restore sent outside model scope");
             }
+            CtrlMsg::RingReform { ring, .. } => {
+                // no-ghost-redo invariant: a reform must only ever ask
+                // CURRENT members to redo the collective — a removed
+                // worker's redo would feed a stale-sync (or worse, a
+                // double count) into the repaired barrier. NOTE: the
+                // redo ring is the reporter subset, NOT the membership
+                // ring, so it must not flow into observe_ring.
+                let active = st.core.active_workers();
+                for m in ring.iter() {
+                    if !active.contains(m) {
+                        return viol(format!(
+                            "RingReform names non-active worker {m} (active {active:?})"
+                        ));
+                    }
+                }
+            }
             _ => {}
         }
         Ok(())
@@ -804,6 +861,49 @@ impl Checker {
         self.gather(st, id);
     }
 
+    /// Commit the collective for worker `id`'s current step: boundary
+    /// switch handling (exit → Goodbye, broadcast release of joiners),
+    /// then advance into the next mini-batch. Shared by the SyncGo arm
+    /// (the collective ran clean) and the RingReform arm (the collective
+    /// was aborted and redone over the reformed ring — same commit, no
+    /// double count, because the aborted attempt applied nothing).
+    fn commit_step(&self, st: &mut MState, id: NodeId) {
+        let Some(w) = st.workers.get_mut(&id) else { return };
+        let boundary = w
+            .pending_switch
+            .as_ref()
+            .is_some_and(|p| p.at_step == w.step + 1);
+        if boundary {
+            let plan = w.pending_switch.clone().expect("boundary plan");
+            if plan.exiting.contains(&id) {
+                let shard = w.shard.map(|(m, used)| (m.id, used));
+                w.st = MSt::Gone;
+                st.wq.entry(id).or_default().push_back(WorkerEvent::Goodbye { id, shard });
+                return;
+            }
+            if plan.broadcast_src == id && !plan.joiners.is_empty() {
+                // release the joiners (broadcast completes)
+                for j in plan.joiners.clone() {
+                    if let Some(jw) = st.workers.get_mut(&j) {
+                        if jw.alive && jw.st == MSt::WaitBroadcast {
+                            jw.step = plan.at_step;
+                            jw.local_batch = plan.local_batch;
+                            self.start_step(st, j);
+                        }
+                    }
+                }
+            }
+            let Some(w) = st.workers.get_mut(&id) else { return };
+            w.local_batch = plan.local_batch;
+            w.pending_switch = None;
+            w.step += 1;
+            self.start_step(st, id);
+            return;
+        }
+        w.step += 1;
+        self.start_step(st, id);
+    }
+
     /// Deliver the head of the leader→worker queue (chaos
     /// `deliver_to_worker`, timing removed).
     fn deliver_to_worker(&self, st: &mut MState, id: NodeId) -> MResult<()> {
@@ -862,40 +962,7 @@ impl Checker {
                     st.wq.entry(id).or_default().push_back(sync);
                     return Ok(());
                 }
-                // boundary handling
-                let boundary = w
-                    .pending_switch
-                    .as_ref()
-                    .is_some_and(|p| p.at_step == w.step + 1);
-                if boundary {
-                    let plan = w.pending_switch.clone().expect("boundary plan");
-                    if plan.exiting.contains(&id) {
-                        let shard = w.shard.map(|(m, used)| (m.id, used));
-                        w.st = MSt::Gone;
-                        st.wq.entry(id).or_default().push_back(WorkerEvent::Goodbye { id, shard });
-                        return Ok(());
-                    }
-                    if plan.broadcast_src == id && !plan.joiners.is_empty() {
-                        // release the joiners (broadcast completes)
-                        for j in plan.joiners.clone() {
-                            if let Some(jw) = st.workers.get_mut(&j) {
-                                if jw.alive && jw.st == MSt::WaitBroadcast {
-                                    jw.step = plan.at_step;
-                                    jw.local_batch = plan.local_batch;
-                                    self.start_step(st, j);
-                                }
-                            }
-                        }
-                    }
-                    let Some(w) = st.workers.get_mut(&id) else { return Ok(()) };
-                    w.local_batch = plan.local_batch;
-                    w.pending_switch = None;
-                    w.step += 1;
-                    self.start_step(st, id);
-                    return Ok(());
-                }
-                w.step += 1;
-                self.start_step(st, id);
+                self.commit_step(st, id);
             }
             CtrlMsg::SendParams => {
                 let step = w.step;
@@ -909,6 +976,27 @@ impl Checker {
             CtrlMsg::Stop => {
                 if let Some(w) = st.workers.get_mut(&id) {
                     w.st = MSt::Gone;
+                }
+            }
+            CtrlMsg::AbortCollective { .. } => {
+                // the model's collective abort is atomic (FailCollective
+                // pops the SyncGo and reports in one transition), so no
+                // worker is ever "inside" a collective when this lands;
+                // the survivors it would unblock are modelled by their
+                // own FailCollective transitions
+            }
+            CtrlMsg::RingReform { ring: _, sync_tag } => {
+                // ack first — the real worker acks even a stale reform so
+                // the leader's reissue loop converges — then, if this
+                // worker is parked on an abort for the same step, the redo
+                // runs over the reformed ring: instant in the model, and
+                // it commits the step exactly once (the aborted attempt
+                // applied nothing)
+                let step = w.step;
+                let aborted = w.st == MSt::AwaitReform;
+                st.wq.entry(id).or_default().push_back(WorkerEvent::ReformAck { id, sync_tag });
+                if aborted && sync_tag & 0xFF_FFFF == step & 0xFF_FFFF {
+                    self.commit_step(st, id);
                 }
             }
         }
@@ -1040,12 +1128,37 @@ impl Checker {
         let training = |id: &NodeId| {
             st.workers
                 .get(id)
-                .map(|w| w.alive && matches!(w.st, MSt::Gather | MSt::Compute | MSt::WaitGo))
+                .map(|w| {
+                    w.alive
+                        && matches!(
+                            w.st,
+                            // AwaitReform counts: a parked reporter WILL
+                            // sync again once its RingReform lands
+                            MSt::Gather | MSt::Compute | MSt::WaitGo | MSt::AwaitReform
+                        )
+                })
                 .unwrap_or(false)
         };
         if alive_active.iter().filter(|id| training(id)).count() >= 2 {
             for &id in &alive_active {
                 out.push(Step::Kill(id));
+            }
+        }
+        // Mid-collective abort: a worker acting on a matching SyncGo can
+        // find its ring torn. Rings of one have no peers to lose, and a
+        // mistagged SyncGo re-syncs instead of entering the collective.
+        if st.fails_done < self.scope.max_fails {
+            for (&id, w) in &st.workers {
+                if !(w.alive && w.st == MSt::WaitGo) {
+                    continue;
+                }
+                if let Some(CtrlMsg::SyncGo { ring, sync_tag, .. }) =
+                    st.lq.get(&id).and_then(|q| q.front())
+                {
+                    if ring.len() >= 2 && sync_tag & 0xFF_FFFF == w.step & 0xFF_FFFF {
+                        out.push(Step::FailCollective(id));
+                    }
+                }
             }
         }
         if st.ops_done < self.scope.max_ops {
@@ -1080,6 +1193,46 @@ impl Checker {
             Step::Kill(id) => {
                 if let Some(w) = st.workers.get_mut(id) {
                     w.alive = false;
+                }
+            }
+            Step::FailCollective(id) => {
+                let Some(CtrlMsg::SyncGo { ring, sync_tag: _, switch }) =
+                    st.lq.get_mut(id).and_then(|q| q.pop_front())
+                else {
+                    return viol("FailCollective fired without a SyncGo at the head");
+                };
+                st.fails_done += 1;
+                // the first dead cohort member is the neighbour the abort
+                // diagnoses; None models a spurious / inconclusive abort
+                let peer = ring
+                    .iter()
+                    .copied()
+                    .find(|&m| m != *id && st.workers.get(&m).is_some_and(|p| !p.alive));
+                let Some(w) = st.workers.get_mut(id) else { return Ok(()) };
+                if let Some(p) = switch {
+                    w.pending_switch = Some(p);
+                }
+                let boundary_exit = w
+                    .pending_switch
+                    .as_ref()
+                    .is_some_and(|p| p.at_step == w.step + 1 && p.exiting.contains(id));
+                if boundary_exit {
+                    // the real worker turns an aborted collective into its
+                    // Goodbye when it was leaving at this boundary anyway:
+                    // it has nothing to redo and nobody waits for it
+                    let shard = w.shard.map(|(m, used)| (m.id, used));
+                    w.st = MSt::Gone;
+                    st.wq
+                        .entry(*id)
+                        .or_default()
+                        .push_back(WorkerEvent::Goodbye { id: *id, shard });
+                } else {
+                    let step = w.step;
+                    w.st = MSt::AwaitReform;
+                    st.wq
+                        .entry(*id)
+                        .or_default()
+                        .push_back(WorkerEvent::PeerDead { id: *id, step, peer });
                 }
             }
             Step::LoseGoodbye(id) => {
@@ -1243,6 +1396,7 @@ pub fn explore(scope: ModelScope) -> ModelReport {
         states: 0,
         transitions: 0,
         max_depth: 0,
+        reform_states: 0,
         exhausted: false,
         violation: None,
     };
@@ -1305,6 +1459,9 @@ pub fn explore(scope: ModelScope) -> ModelReport {
             }
             visited.insert(nd, (d, label.clone(), depth + 1));
             report.states += 1;
+            if next.core.reform_in_progress() {
+                report.reform_states += 1;
+            }
             // liveness from every NEW state
             if let Err(Violation(v)) = checker.drain(&next, &[label.clone()]) {
                 let mut trace = trace_of(&visited, nd);
@@ -1342,6 +1499,14 @@ mod tests {
         );
         assert!(r.exhausted, "tiny scope must close ({} states)", r.states);
         assert!(r.states > 100, "tiny scope is not trivial: {}", r.states);
+        // the fault-tolerant-collective protocol must actually be in
+        // scope: some reachable states have an abort/reform in flight,
+        // and none of them escalated to LoadCheckpoint/Restore (both are
+        // hard violations in this model)
+        assert!(
+            r.reform_states > 0,
+            "no reachable state had an abort/reform in progress"
+        );
     }
 
     #[test]
@@ -1351,5 +1516,16 @@ mod tests {
         assert_eq!(a.states, b.states);
         assert_eq!(a.transitions, b.transitions);
         assert_eq!(a.max_depth, b.max_depth);
+        assert_eq!(a.reform_states, b.reform_states);
+    }
+
+    #[test]
+    fn collective_aborts_are_gated_by_scope() {
+        // max_fails = 0 must reproduce the pre-reform state graph: no
+        // FailCollective transition fires, so no reform is ever entered
+        let r = explore(ModelScope { max_fails: 0, ..tiny() });
+        assert!(r.violation.is_none(), "violation: {:?}", r.violation);
+        assert!(r.exhausted);
+        assert_eq!(r.reform_states, 0);
     }
 }

@@ -388,7 +388,7 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
             return out;
         }
     };
-    for f in ["ring_tag", "bcast_tag"] {
+    for f in ["ring_tag", "bcast_tag", "abort_tag"] {
         if !defs.fns.contains_key(f) {
             diag(format!("tag function {f} not found in {}", allreduce.path));
             return out;
@@ -410,6 +410,7 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
     let bt = |step: u64, seq: u64| -> Result<u64, String> {
         call("bcast_tag", &[("step", step), ("seq", seq)])
     };
+    let at = |step: u64| -> Result<u64, String> { call("abort_tag", &[("step", step)]) };
 
     // sample every combination; abort the lint on evaluator errors
     let mut ring_vals = Vec::new();
@@ -431,6 +432,16 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
                     diag(format!("bcast_tag({s},{q}) failed to evaluate: {e}"));
                     return out;
                 }
+            }
+        }
+    }
+    let mut abort_vals = Vec::new();
+    for &s in STEP_SAMPLES {
+        match at(s) {
+            Ok(v) => abort_vals.push(v),
+            Err(e) => {
+                diag(format!("abort_tag({s}) failed to evaluate: {e}"));
+                return out;
             }
         }
     }
@@ -498,6 +509,47 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
         diag(format!("tag value {v:#010x} is produced by BOTH ring_tag and bcast_tag"));
     }
 
+    // 2b. abort family (fault-tolerant collectives): the out-of-band abort
+    //     channel is identified by an invariant bit PATTERN that no ring or
+    //     bcast tag may ever present. NOTE the abort family's invariant
+    //     bits deliberately intersect both data families (it is the
+    //     both-bits-set quadrant), so the property is "no other tag
+    //     carries the full pattern", not bitwise disjointness.
+    let abort_family = abort_vals.iter().fold(u64::MAX, |a, v| a & v);
+    if abort_family == 0 {
+        diag("abort_tag has no invariant family bit — abort frames are not namespaced".into());
+    } else {
+        if let Some(v) = ring_vals
+            .iter()
+            .chain(bcast_vals.iter())
+            .find(|v| **v & abort_family == abort_family)
+        {
+            diag(format!(
+                "data-plane tag {v:#010x} presents the full abort-family pattern \
+                 {abort_family:#010x} — a data segment could be mistaken for an abort"
+            ));
+        }
+        let mut agen_mask = 0u64;
+        for &s in STEP_SAMPLES {
+            agen_mask |= at(s).unwrap_or(0) ^ at(base.0).unwrap_or(0);
+        }
+        if agen_mask & abort_family != 0 {
+            diag(format!(
+                "abort_tag generation bits overlap its family bits {:#010x} — some step's \
+                 abort loses the family signature",
+                agen_mask & abort_family
+            ));
+        }
+    }
+    let abort_set: std::collections::HashSet<u64> = abort_vals.iter().copied().collect();
+    if let Some(v) = ring_vals
+        .iter()
+        .chain(bcast_vals.iter())
+        .find(|v| abort_set.contains(v))
+    {
+        diag(format!("tag value {v:#010x} is produced by BOTH abort_tag and a data-plane tag"));
+    }
+
     // 3. generation sensitivity: adjacent steps and ring-version bumps
     //    (step + 2^24 in the sync-tag encoding) must change the tag
     for s in 0..64u64 {
@@ -517,6 +569,16 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
             "ring_tag is insensitive to phase — reduce-scatter and allgather traffic alias".into(),
         );
     }
+    for s in 0..64u64 {
+        if at(s) == at(s + 1) {
+            diag(format!(
+                "abort_tag is insensitive to step {s} -> {} — a stale abort could cancel \
+                 the NEXT step's healthy collective",
+                s + 1
+            ));
+            break;
+        }
+    }
 
     // 4. control-plane constants must live outside both data families
     match extract_defs(&transport.text) {
@@ -529,12 +591,13 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
                         diag("transport tag::RPC == tag::KV — control channels alias".into());
                     }
                     for (name, c) in [("RPC", rpc), ("KV", kv)] {
-                        if ring_set.contains(&c) || bcast_vals.contains(&c) {
+                        if ring_set.contains(&c) || bcast_vals.contains(&c) || abort_set.contains(&c)
+                        {
                             diag(format!(
                                 "transport tag::{name} ({c:#x}) collides with a data-plane tag"
                             ));
                         }
-                        if c & (ring_family | bcast_family) != 0 {
+                        if c & (ring_family | bcast_family | abort_family) != 0 {
                             diag(format!(
                                 "transport tag::{name} ({c:#x}) sets a data-plane family bit"
                             ));
@@ -557,6 +620,7 @@ mod tests {
     const GOOD: &str = r#"
         const FAMILY_RING: u32 = 0x4000_0000;
         const FAMILY_BCAST: u32 = 0x8000_0000;
+        const FAMILY_ABORT: u32 = 0xC000_0000;
         fn gen_field(step: u64) -> u32 {
             (step % 0x7FFF) as u32
         }
@@ -566,6 +630,9 @@ mod tests {
         }
         pub fn bcast_tag(step: u64, seq: u32) -> u32 {
             FAMILY_BCAST | (gen_field(step) << 14) | (seq & 0x3FFF)
+        }
+        pub fn abort_tag(step: u64) -> u32 {
+            FAMILY_ABORT | (gen_field(step) << 14)
         }
     "#;
 
@@ -613,6 +680,22 @@ mod tests {
         assert!(
             diags.iter().any(|d| d.msg.contains("overlap")),
             "expected an overlap diagnostic, got {diags:#?}"
+        );
+    }
+
+    #[test]
+    fn abort_family_collision_is_caught() {
+        // abort frames demoted into the ring family: every ring tag now
+        // presents the full abort pattern, and abort_tag(s) literally
+        // equals ring_tag(s, 0, 0) — a data segment would cancel a step
+        let bad = GOOD.replace("0xC000_0000", "0x4000_0000");
+        let diags = tag_layout(
+            &sf("rust/src/allreduce/mod.rs", &bad),
+            &sf("rust/src/transport/mod.rs", TRANSPORT),
+        );
+        assert!(
+            diags.iter().any(|d| d.msg.contains("abort")),
+            "expected an abort-family diagnostic, got {diags:#?}"
         );
     }
 

@@ -417,6 +417,11 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
                         CtrlMsg::SendParams => {
                             send(WorkerEvent::Params { id: ctx.id, step, params: device.get_params()? });
                         }
+                        // stray reform from a step we already finished:
+                        // always ack so the leader's reissue round drains
+                        CtrlMsg::RingReform { sync_tag, .. } => {
+                            send(WorkerEvent::ReformAck { id: ctx.id, sync_tag });
+                        }
                         _ => {}
                     }
                     if shard.is_none() {
@@ -427,15 +432,21 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
         }
         let real = indices.len();
         let weight = real as f32; // normalised ring-wide via the extra element
-        // fixed-shape executables: pad by repeating (weight counts real only)
+        // fixed-shape executables: pad by repeating (weight counts real only).
+        // Tokens outlive the barrier: an abort/reform redo recomputes the
+        // gradients from the same tokens (params are unchanged until apply),
+        // so a redone step is bit-identical without cloning grads per step.
+        let mut tokens: Option<Vec<i32>> = None;
         let (loss, grads) = if real > 0 {
             let mut padded = indices.clone();
             while padded.len() < local_batch as usize {
                 padded.push(indices[padded.len() % real]);
             }
-            let tokens = ctx.corpus.gather(&padded);
-            debug_assert_eq!(tokens.len(), local_batch as usize * seq);
-            device.grad(&tokens, local_batch)?
+            let t = ctx.corpus.gather(&padded);
+            debug_assert_eq!(t.len(), local_batch as usize * seq);
+            let out = device.grad(&t, local_batch)?;
+            tokens = Some(t);
+            out
         } else {
             (0.0, vec![0f32; ctx.backend.param_count()])
         };
@@ -478,43 +489,114 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
                     CtrlMsg::SendParams => {
                         send(WorkerEvent::Params { id: ctx.id, step, params: device.get_params()? });
                     }
+                    // a reform addressed at THIS step doubles as the release
+                    // (the barrier completed before the failure, so SyncGo
+                    // may have been lost on a live transport); a stale one
+                    // is ack-only
+                    CtrlMsg::RingReform { ring: r, sync_tag } => {
+                        send(WorkerEvent::ReformAck { id: ctx.id, sync_tag });
+                        if sync_tag & 0xFF_FFFF == step & 0xFF_FFFF {
+                            break (r, sync_tag, None);
+                        }
+                    }
+                    CtrlMsg::AbortCollective { .. } => {}
                     _ => {}
                 }
             };
             ring = go_ring;
+            let mut go_tag = go_tag;
             if let Some(plan) = go_switch {
                 pending_switch = Some(plan);
             }
 
             // -- weighted ring allreduce (grads ++ [weight]) -----------------
-            let mut buf = std::mem::take(&mut grads);
-            buf.push(1.0); // weight slot
-            let res =
-                allreduce::ring_allreduce(&mut ctx.net, &ring, go_tag, &mut buf, weight, NET_T);
-            match res {
-                Ok(()) => {
-                    let wsum = buf.pop().unwrap();
-                    if wsum > 0.0 {
-                        for g in buf.iter_mut() {
-                            *g /= wsum;
+            'collective: loop {
+                let mut buf = std::mem::take(&mut grads);
+                buf.push(1.0); // weight slot
+                let res =
+                    allreduce::ring_allreduce(&mut ctx.net, &ring, go_tag, &mut buf, weight, NET_T);
+                match res {
+                    Ok(()) => {
+                        let wsum = buf.pop().unwrap();
+                        if wsum > 0.0 {
+                            for g in buf.iter_mut() {
+                                *g /= wsum;
+                            }
+                            device.apply(&buf, ctx.lr)?;
                         }
-                        device.apply(&buf, ctx.lr)?;
+                        grads = buf; // keep allocation
+                        break 'sync;
                     }
-                    grads = buf; // keep allocation
-                    break 'sync;
-                }
-                Err(_) => {
-                    // a peer died mid-allreduce: re-sync with the leader,
-                    // which will hand back a repaired topology (§4.2
-                    // approximate recovery). Gradients are NOT recomputed.
-                    buf.pop();
-                    if weight != 0.0 {
-                        for g in buf.iter_mut() {
-                            *g /= weight;
+                    Err(e) => {
+                        // a peer died mid-allreduce. If this worker was about
+                        // to exit at the boundary anyway, leave now: its
+                        // gradients are not required for the redone step and
+                        // a Goodbye keeps the leader's exit accounting exact.
+                        if let Some(plan) = &pending_switch {
+                            if step + 1 == plan.at_step && plan.exiting.contains(&ctx.id) {
+                                send(WorkerEvent::Goodbye {
+                                    id: ctx.id,
+                                    shard: shard.as_ref().map(|c| (c.meta.id, c.used)),
+                                });
+                                return Ok(());
+                            }
                         }
+                        // report the failure with the dead neighbour's
+                        // identity when the abort machinery produced a
+                        // verdict, then wait for the leader's reform
+                        send(WorkerEvent::PeerDead { id: ctx.id, step, peer: e.lost_peer() });
+                        loop {
+                            match ctx.ctrl.recv()? {
+                                CtrlMsg::RingReform { ring: r, sync_tag } => {
+                                    send(WorkerEvent::ReformAck { id: ctx.id, sync_tag });
+                                    if sync_tag & 0xFF_FFFF == step & 0xFF_FFFF {
+                                        ring = r;
+                                        go_tag = sync_tag;
+                                        break;
+                                    }
+                                }
+                                // leader fell back to a fresh barrier release
+                                // (approximate recovery, §4.2): adopt it
+                                CtrlMsg::SyncGo { ring: r, sync_tag, switch } => {
+                                    ring = r;
+                                    go_tag = sync_tag;
+                                    if let Some(plan) = switch {
+                                        pending_switch = Some(plan);
+                                    }
+                                    break;
+                                }
+                                CtrlMsg::AbortCollective { .. } => {}
+                                CtrlMsg::Stop => break 'train,
+                                CtrlMsg::Restore { params: p, at_step } => {
+                                    device.set_params((*p).clone())?;
+                                    step = at_step;
+                                    shard = None;
+                                    pending_switch = None;
+                                    drain_stale_ctrl(&ctx.ctrl);
+                                    continue 'train;
+                                }
+                                CtrlMsg::Assign { meta } if shard.is_none() => {
+                                    shard = Some(ShardCursor { meta, used: 0 });
+                                }
+                                CtrlMsg::SendParams => {
+                                    send(WorkerEvent::Params {
+                                        id: ctx.id,
+                                        step,
+                                        params: device.get_params()?,
+                                    });
+                                }
+                                _ => {}
+                            }
+                        }
+                        // the aborted attempt left scaled partial sums in
+                        // buf — recompute pristine gradients so the redo is
+                        // bit-identical to a run that never saw the failure
+                        grads = match tokens.as_deref() {
+                            Some(t) => device.grad(t, local_batch)?.1,
+                            None => vec![0f32; ctx.backend.param_count()],
+                        };
+                        continue 'collective;
                     }
-                    grads = buf;
-                    continue 'sync;
                 }
             }
         }

@@ -217,6 +217,48 @@ fn live_deploy_trains_through_injected_control_delays() {
     let _ = w1.join();
 }
 
+/// §4.2 tentpole acceptance: a worker killed HALFWAY through a ring
+/// collective must cost the job one redone step, not a checkpoint
+/// restore — the survivors abort the torn collective, the leader reforms
+/// the ring from live membership, and the redo commits exactly once.
+/// The engine event log must show the `ring-reform` and must contain no
+/// `load-checkpoint` anywhere (the mirror invariants inside the harness
+/// already proved the redone reduction bit-identical to a clean run).
+#[test]
+fn mid_collective_kill_reforms_without_checkpoint_restore() {
+    use edl::harness::chaos::ChaosEvent as E;
+    for (ev, armed_line) in [
+        (E::KillDuringReduceScatter, "armed kill-during-reduce-scatter"),
+        (E::KillRingNeighbourPair, "armed kill-ring-neighbour-pair"),
+    ] {
+        let schedule = ChaosSchedule {
+            seed: 0xFEED_F00D,
+            founders: 4,
+            n_samples: 256,
+            n_partitions: 8,
+            events: vec![(1500, ev), (2500, E::Calm), (2500, E::Calm)],
+        };
+        let r = run_schedule(&schedule)
+            .unwrap_or_else(|e| panic!("{ev:?} schedule failed:\n{e}"));
+        let log = r.log.join("\n");
+        assert!(log.contains(armed_line), "{ev:?}: kill never armed:\n{log}");
+        assert!(
+            log.contains("armed-kill") && log.contains("fires victims="),
+            "{ev:?}: armed kill never fired:\n{log}"
+        );
+        let events = r.engine_events.join("\n");
+        assert!(
+            events.contains("ring-reform step="),
+            "{ev:?}: no abort/reform round in the engine log:\n{events}"
+        );
+        assert!(
+            !events.contains("load-checkpoint") && !log.contains("load-checkpoint"),
+            "{ev:?}: the reform escalated to a checkpoint restore:\n{events}"
+        );
+        assert!(r.barriers > 0, "{ev:?}: job never trained");
+    }
+}
+
 #[test]
 fn schedules_cover_the_whole_fault_taxonomy() {
     // across the default seed set, every chaos event kind must appear —
@@ -238,12 +280,17 @@ fn schedules_cover_the_whole_fault_taxonomy() {
                 E::Checkpoint => "checkpoint",
                 E::RestartLeader => "restart-leader",
                 E::GrowGhost => "grow-ghost",
+                E::KillDuringReduceScatter => "kill-during-reduce-scatter",
+                E::KillDuringBroadcastRelay => "kill-during-broadcast-relay",
+                E::KillRingNeighbourPair => "kill-ring-neighbour-pair",
             });
         }
     }
     for want in [
         "calm", "grow", "shrink", "migrate", "storm", "kill", "partition", "delay",
         "duplicate", "checkpoint", "restart-leader", "grow-ghost",
+        "kill-during-reduce-scatter", "kill-during-broadcast-relay",
+        "kill-ring-neighbour-pair",
     ] {
         assert!(kinds.contains(want), "no generated schedule contains {want:?}: {kinds:?}");
     }

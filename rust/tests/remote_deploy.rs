@@ -66,6 +66,87 @@ fn wait_step(job: &mut JobClient, step: u64, timeout: Duration) -> u64 {
     .unwrap_or_else(|| panic!("step never reached {step} within {timeout:?}"))
 }
 
+/// §4.2 fault-tolerant collectives, live: SIGKILL one `edl worker`
+/// process while the three-process job is mid-step. The survivors' ring
+/// tears mid-allreduce; they must abort, report the dead peer, and redo
+/// the step on the reformed two-worker ring. The leader's failure
+/// detector is configured at 60 s, so the job advancing within 25 s
+/// proves the abort/reform path did the recovery — not the timeout, and
+/// not a restart (there is no checkpoint in this deployment at all).
+#[test]
+fn killing_a_worker_process_mid_step_reforms_and_training_continues() {
+    let mut serve = Command::new(bin())
+        .args([
+            "serve",
+            "--remote",
+            "--workers",
+            "3",
+            "--backend",
+            "sim",
+            "--compute-ms",
+            "5",
+            "--failure-timeout-ms",
+            "60000",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn edl serve --remote");
+    let mut lines = BufReader::new(serve.stdout.take().unwrap()).lines();
+    let (mut worker_addr, mut ctl_addr) = (None, None);
+    while worker_addr.is_none() || ctl_addr.is_none() {
+        let line = lines
+            .next()
+            .expect("serve exited before printing its endpoints")
+            .expect("read serve stdout");
+        if let Some(a) = line.strip_prefix("worker-endpoint ") {
+            worker_addr = Some(a.trim().to_string());
+        } else if let Some(a) = line.strip_prefix("job-control ") {
+            ctl_addr = Some(a.trim().to_string());
+        }
+    }
+    let worker_addr = worker_addr.unwrap();
+    let ctl_addr = ctl_addr.unwrap();
+    std::thread::spawn(move || for _line in lines {});
+
+    let mut procs = Procs(vec![serve]);
+    for m in ["m1", "m2", "m3"] {
+        procs.0.push(spawn_worker(&worker_addr, m));
+    }
+    let mut job = connect(&ctl_addr);
+    wait_step(&mut job, 5, Duration::from_secs(60));
+    let st = job.status().unwrap();
+    assert_eq!(st.parallelism, 3, "{st:?}");
+
+    // SIGKILL the last worker process: no goodbye, no socket shutdown
+    // handshake — its ring neighbours find out mid-collective
+    let killed_at = job.status().unwrap().step;
+    let mut victim = procs.0.pop().unwrap();
+    victim.kill().expect("kill worker process");
+    let _ = victim.wait();
+
+    // survivors must redo the torn step and keep training, well inside
+    // the 60 s failure-detector window
+    wait_step(&mut job, killed_at + 10, Duration::from_secs(25));
+    wait_until("membership to drop to the two survivors", Duration::from_secs(25), || {
+        job.status().expect("status").parallelism == 2
+    });
+    let st = job.status().unwrap();
+    assert_eq!(st.workers.len(), 2, "{st:?}");
+
+    JobControl::stop(&mut job).expect("stop");
+    drop(job);
+    wait_until("serve process to exit after stop", Duration::from_secs(30), || {
+        match procs.0[0].try_wait().expect("try_wait serve") {
+            Some(status) => {
+                assert!(status.success(), "serve exited with {status}");
+                true
+            }
+            None => false,
+        }
+    });
+}
+
 #[test]
 fn three_process_tcp_job_scales_out_and_in_without_stopping() {
     // -- leader process -----------------------------------------------------
