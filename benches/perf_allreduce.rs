@@ -11,8 +11,8 @@
 //!  * `EDL_BENCH_BASELINE=1` — also write `BENCH_perf_allreduce.json`
 //!    into the current directory (the committed trajectory baseline)
 
-use edl::allreduce::{chunks, ring_allreduce};
-use edl::transport::{InProcHub, PointToPoint, TcpNode};
+use edl::allreduce::{chunks, ring_allreduce, topo_allreduce};
+use edl::transport::{InProcHub, MixedNode, PointToPoint, ShmNode, TcpNode};
 use edl::util::json::{write_results, Json};
 use edl::util::stats;
 use edl::wire::{Dec, Enc};
@@ -170,6 +170,96 @@ fn bench_tcp(n_workers: usize, len: usize, iters: u64) -> (f64, f64) {
     (mean_s * 1e3, volume / mean_s / 1e9)
 }
 
+/// (ms/call, algo GB/s) over shared-memory rings (DESIGN.md §9) — the
+/// intra-machine data plane `MixedNode` negotiates for co-located
+/// workers. Unix-only at runtime (the rings live under /dev/shm).
+fn bench_shm(n_workers: usize, len: usize, iters: u64, tag: &str) -> (f64, f64) {
+    let ns = format!("edl-bench-{}-{tag}", std::process::id());
+    let ring: Vec<u32> = (0..n_workers as u32).collect();
+    let nodes: Vec<ShmNode> =
+        (0..n_workers as u32).map(|i| ShmNode::start(i, &ns).unwrap()).collect();
+    let times: Vec<Vec<f64>> = std::thread::scope(|s| {
+        nodes
+            .into_iter()
+            .map(|mut node| {
+                let ring = ring.clone();
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    let mut times = Vec::with_capacity(iters as usize);
+                    for step in 0..iters {
+                        let t0 = Instant::now();
+                        ring_allreduce(&mut node, &ring, step, &mut buf, 1.0, T).unwrap();
+                        times.push(t0.elapsed().as_secs_f64());
+                        for x in buf.iter_mut() {
+                            *x = 1.0;
+                        }
+                    }
+                    times
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    let mean_s = stats::mean(&times[0]);
+    let volume = 2.0 * (n_workers as f64 - 1.0) / n_workers as f64 * (len * 4) as f64;
+    (mean_s * 1e3, volume / mean_s / 1e9)
+}
+
+/// ms/call over the MIXED data plane on a simulated two-machine
+/// topology (digest 0xA: nodes 0,1 / digest 0xB: nodes 2,3 — intra-pair
+/// links negotiate shm, the rest ride loopback TCP). `hier` picks the
+/// topology-aware hierarchical path vs the flat ring over the same links.
+fn bench_mixed(len: usize, iters: u64, hier: bool) -> f64 {
+    let dir = Arc::new(Mutex::new(HashMap::new()));
+    let ns = format!("edl-bench-mix-{}-{}", std::process::id(), u8::from(hier));
+    let digests: HashMap<u32, u64> = HashMap::from([(0u32, 0xAu64), (1, 0xA), (2, 0xB), (3, 0xB)]);
+    let ring: Vec<u32> = (0..4).collect();
+    let nodes: Vec<MixedNode> = (0..4u32)
+        .map(|i| {
+            let mut m = MixedNode::start(i, dir.clone(), digests[&i], &ns).unwrap();
+            for p in 0..4u32 {
+                if p != i {
+                    m.set_peer_digest(p, digests[&p]);
+                }
+            }
+            m
+        })
+        .collect();
+    let times: Vec<Vec<f64>> = std::thread::scope(|s| {
+        nodes
+            .into_iter()
+            .map(|mut node| {
+                let ring = ring.clone();
+                let digests = digests.clone();
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    let mut times = Vec::with_capacity(iters as usize);
+                    for step in 0..iters {
+                        let t0 = Instant::now();
+                        if hier {
+                            topo_allreduce(&mut node, &ring, &digests, step, &mut buf, 1.0, T)
+                                .unwrap();
+                        } else {
+                            ring_allreduce(&mut node, &ring, step, &mut buf, 1.0, T).unwrap();
+                        }
+                        times.push(t0.elapsed().as_secs_f64());
+                        for x in buf.iter_mut() {
+                            *x = 1.0;
+                        }
+                    }
+                    times
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    stats::mean(&times[0]) * 1e3
+}
+
 fn main() {
     let smoke = std::env::var("EDL_BENCH_SMOKE").is_ok();
     let mut out = Json::obj();
@@ -254,6 +344,73 @@ fn main() {
         .set("ms_per_call", tcp_ms)
         .set("algo_gbs", tcp_bw);
     out.set("tcp", tcp);
+
+    // shm rings vs loopback TCP at >=1 MiB payloads: the intra-machine
+    // data plane (DESIGN.md §9); acceptance is >=5x on the same machine
+    if cfg!(unix) {
+        println!("\n== ring allreduce: shm rings vs loopback TCP (same machine) ==");
+        println!(
+            "{:>8} {:>12} {:>12} {:>12} {:>9} {:>14}",
+            "workers", "elems", "tcp ms", "shm ms", "speedup", "shm algo GB/s"
+        );
+        let cases: &[(usize, usize, u64)] = if smoke {
+            &[(2, 262_144, 3)]
+        } else {
+            &[(2, 262_144, 20), (4, 1_000_000, 10), (4, 4_250_000, 5)]
+        };
+        let mut shm_rows = Json::Arr(vec![]);
+        for &(n, len, iters) in cases {
+            let (tcp_ms, _) = bench_tcp(n, len, iters);
+            let (shm_ms, shm_bw) = bench_shm(n, len, iters, &format!("{n}x{len}"));
+            let speedup = tcp_ms / shm_ms;
+            println!(
+                "{n:>8} {len:>12} {tcp_ms:>12.3} {shm_ms:>12.3} {speedup:>8.2}x {shm_bw:>14.2}"
+            );
+            let mut r = Json::obj();
+            r.set("workers", n)
+                .set("elems", len)
+                .set("tcp_ms_per_call", tcp_ms)
+                .set("shm_ms_per_call", shm_ms)
+                .set("speedup", speedup)
+                .set("shm_algo_gbs", shm_bw);
+            shm_rows.push(r);
+            // the PR acceptance gate: every case is >=1 MiB of payload
+            if !smoke {
+                assert!(
+                    speedup >= 5.0,
+                    "acceptance: shm rings must be >= 5x loopback TCP at \
+                     {len} elems, measured {speedup:.2}x"
+                );
+            }
+        }
+        out.set("shm", shm_rows);
+
+        // hierarchical vs flat on the mixed two-machine topology: the
+        // topology-aware path must win once intra-machine traffic is free
+        println!("\n== hierarchical vs flat allreduce (2 machines x 2 workers, mixed) ==");
+        let (hier_len, hier_iters) = if smoke { (100_000, 3) } else { (4_250_000, 5) };
+        let flat_ms = bench_mixed(hier_len, hier_iters, false);
+        let hier_ms = bench_mixed(hier_len, hier_iters, true);
+        let hier_speedup = flat_ms / hier_ms;
+        println!(
+            "{:>8} {:>12} {flat_ms:>12.3} {hier_ms:>12.3} {hier_speedup:>8.2}x",
+            "4", hier_len
+        );
+        let mut hier = Json::obj();
+        hier.set("workers", 4)
+            .set("elems", hier_len)
+            .set("flat_ms_per_call", flat_ms)
+            .set("hier_ms_per_call", hier_ms)
+            .set("speedup", hier_speedup);
+        out.set("hier", hier);
+        if !smoke {
+            assert!(
+                hier_ms < flat_ms,
+                "acceptance: hierarchical allreduce must beat the flat ring \
+                 on the mixed two-machine topology ({hier_ms:.1}ms vs {flat_ms:.1}ms)"
+            );
+        }
+    }
 
     let path = write_results("perf_allreduce", &out).unwrap();
     println!("\nresults -> {}", path.display());

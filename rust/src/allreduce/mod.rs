@@ -45,6 +45,7 @@
 
 use crate::transport::{NetError, PointToPoint, Shared};
 use crate::wire::{Dec, Enc};
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -133,6 +134,12 @@ const FAMILY_BCAST: u32 = 0x8000_0000;
 /// bits). Carved per generation so an abort can never cancel a collective
 /// it was not aimed at.
 const FAMILY_ABORT: u32 = 0xC000_0000;
+/// Hierarchical intra-node family: bit 31 + bit 29. This pattern is free
+/// because broadcast tags (0x8...) never set bit 29 (their generation
+/// field tops out at bit 28), ring tags never set bit 31, and abort tags
+/// always set bit 30 (which hierarchical tags never do) — so the full
+/// 3-bit high pattern `101` collides with none of the other families.
+const FAMILY_HIER: u32 = 0xA000_0000;
 
 /// Map an arbitrary 64-bit step/generation id into the 15-bit tag field:
 /// reduction mod 32767 (not a power of two, so every input bit
@@ -170,6 +177,19 @@ pub fn bcast_tag(step: u64, seq: u32) -> u32 {
 /// liveness probe ([`ABORT_PING`]) travel under it.
 pub fn abort_tag(step: u64) -> u32 {
     FAMILY_ABORT | (gen_field(step) << 14)
+}
+
+/// Hierarchical intra-node tag: `[31:29]=101  [28:14]=generation
+/// [13]=phase (0 = member→leader reduce, 1 = leader→member broadcast)
+/// [12:0]=segment seq`. The intra phases of [`hierarchical_allreduce`]
+/// run concurrently with the inter-node ring (which uses [`ring_tag`])
+/// under the SAME generation, so they need their own family — reusing
+/// the broadcast family would let a model broadcast of an aliased
+/// generation collide with an intra-node segment.
+pub fn hier_tag(step: u64, phase: u32, seq: u32) -> u32 {
+    debug_assert!(phase < 2);
+    debug_assert!(seq < (1 << 13));
+    FAMILY_HIER | (gen_field(step) << 14) | (phase << 13) | (seq & 0x1FFF)
 }
 
 /// Probe payload on the abort tag: a live receiver consumes and ignores
@@ -666,6 +686,277 @@ pub fn broadcast_recv<N: PointToPoint>(
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// topology-aware hierarchical allreduce
+// ---------------------------------------------------------------------------
+
+/// Most segments one hierarchical intra-node transfer may use (13-bit seq
+/// field of [`hier_tag`]).
+const MAX_HIER_SEGS: usize = 1 << 13;
+
+/// Intra-node segment size for a buffer of `total` elements.
+fn hier_seg(total: usize) -> usize {
+    SEG_ELEMS.max(total.div_ceil(MAX_HIER_SEGS)).max(1)
+}
+
+/// Partition `ring` into machine groups by identity digest, preserving
+/// first-occurrence order (every participant computes the identical
+/// partition from the identical `Peers` data, so no extra agreement round
+/// is needed). A zero or missing digest means "machine unknown" — such
+/// nodes get singleton groups and always take the inter-node path, which
+/// degrades gracefully to the flat ring.
+pub fn machine_groups(ring: &[u32], digests: &HashMap<u32, u64>) -> Vec<Vec<u32>> {
+    let mut groups: Vec<(u64, Vec<u32>)> = Vec::new();
+    'next: for &id in ring {
+        let d = digests.get(&id).copied().unwrap_or(0);
+        if d != 0 {
+            for (gd, g) in groups.iter_mut() {
+                if *gd == d {
+                    g.push(id);
+                    continue 'next;
+                }
+            }
+        }
+        groups.push((d, vec![id]));
+    }
+    groups.into_iter().map(|(_, g)| g).collect()
+}
+
+/// Whether a grouping actually buys anything: hierarchical reduction pays
+/// only when there are at least two machines AND at least one machine
+/// hosts more than one worker — otherwise it degenerates to the flat ring
+/// with extra hops.
+pub fn hierarchy_pays(groups: &[Vec<u32>]) -> bool {
+    groups.len() >= 2 && groups.iter().any(|g| g.len() >= 2)
+}
+
+/// Topology-aware entry point: group `ring` by machine digest and run
+/// [`hierarchical_allreduce`] when the grouping pays, the flat
+/// [`ring_allreduce`] otherwise. With no digests (or all-distinct
+/// machines) this is exactly the flat ring — bit-identical, same tags.
+pub fn topo_allreduce<N: PointToPoint>(
+    net: &mut N,
+    ring: &[u32],
+    digests: &HashMap<u32, u64>,
+    step: u64,
+    buf: &mut [f32],
+    weight: f32,
+    timeout: Duration,
+) -> Result<()> {
+    let groups = machine_groups(ring, digests);
+    if hierarchy_pays(&groups) {
+        hierarchical_allreduce(net, ring, &groups, step, buf, weight, timeout)
+    } else {
+        ring_allreduce(net, ring, step, buf, weight, timeout)
+    }
+}
+
+/// One hierarchical receive: quantum-sliced like [`recv_abortable`], but
+/// against a single intra-node peer.
+fn recv_hier<N: PointToPoint>(
+    net: &mut N,
+    from: u32,
+    tag: u32,
+    step: u64,
+    timeout: Duration,
+) -> Result<Vec<u8>> {
+    let mut elapsed = Duration::ZERO;
+    loop {
+        let remaining = timeout.saturating_sub(elapsed);
+        if remaining.is_zero() {
+            return Err(ArError::PeerLost(from));
+        }
+        let quantum = ABORT_QUANTUM.min(remaining);
+        match net.recv_from(from, tag, quantum) {
+            Ok(p) => return Ok(p),
+            Err(NetError::Timeout { .. }) => {}
+            Err(e) => return Err(ArError::Net(e)),
+        }
+        elapsed += quantum;
+        if poll_abort(net, from, step) {
+            return Err(ArError::Aborted);
+        }
+        let mut ping = net.take_buf(8);
+        ping.extend_from_slice(&ABORT_PING);
+        if net.send(from, abort_tag(step), ping).is_err() {
+            return Err(ArError::PeerLost(from));
+        }
+    }
+}
+
+/// Post-abort hygiene for the intra-node phases: consume every queued
+/// hier-tag frame of this generation from `peers`, plus their abort-tag
+/// frames (mirrors [`drain_step`] for the ring phases).
+fn drain_hier<N: PointToPoint>(net: &mut N, step: u64, peers: &[u32], nsegs: usize) {
+    for &peer in peers {
+        for phase in 0..2u32 {
+            for s in 0..nsegs as u32 {
+                while let Ok(p) = net.recv_from(peer, hier_tag(step, phase, s), Duration::ZERO) {
+                    net.recycle(p);
+                }
+            }
+        }
+        while let Ok(p) = net.recv_from(peer, abort_tag(step), Duration::ZERO) {
+            net.recycle(p);
+        }
+    }
+}
+
+/// Hierarchical weighted-sum allreduce (§Perf, DESIGN.md §9): intra-node
+/// reduce to the first member of each machine group → one inter-node
+/// [`ring_allreduce`] over the group leaders → intra-node broadcast of
+/// the result. The heavy O(N) traffic stays on the intra-machine links
+/// (shared memory when `transport::shm` negotiated them); only the group
+/// leaders touch the network, so inter-node traffic drops from
+/// 2(N−1)/N·|buf| per node to 2(G−1)/G·|buf| per MACHINE (G = number of
+/// machines).
+///
+/// Every participant must pass the same `ring` and the same `groups`
+/// partition of it (derive both from shared `Peers` data, e.g. via
+/// [`machine_groups`]). Reduction order is canonical — each leader folds
+/// itself, then its members in group order, and the leaders ring is
+/// deterministic — so all participants end bit-identical, and an
+/// all-singleton grouping is bit-identical to the flat ring.
+pub fn hierarchical_allreduce<N: PointToPoint>(
+    net: &mut N,
+    ring: &[u32],
+    groups: &[Vec<u32>],
+    step: u64,
+    buf: &mut [f32],
+    weight: f32,
+    timeout: Duration,
+) -> Result<()> {
+    // the partition must cover the ring exactly — anything else means the
+    // participants disagree about topology and would deadlock
+    let mut seen = std::collections::HashSet::new();
+    for g in groups {
+        if g.is_empty() {
+            return Err(ArError::Protocol("empty machine group".into()));
+        }
+        for &id in g {
+            if !seen.insert(id) || !ring.contains(&id) {
+                return Err(ArError::Protocol(format!("group member {id} not uniquely in ring")));
+            }
+        }
+    }
+    if seen.len() != ring.len() {
+        return Err(ArError::RingTooSmall(ring.len()));
+    }
+    let me = net.id();
+    let gi = groups.iter().position(|g| g.contains(&me)).ok_or(ArError::NotInRing)?;
+    let group = &groups[gi];
+    let mi = group.iter().position(|&id| id == me).expect("membership checked above");
+    let leader = group[0];
+    let leaders: Vec<u32> = groups.iter().map(|g| g[0]).collect();
+
+    // pre-scale the local contribution, exactly as ring_allreduce does
+    if weight != 1.0 {
+        for x in buf.iter_mut() {
+            *x *= weight;
+        }
+    }
+    let seg = hier_seg(buf.len());
+    let segs = seg_ranges(0, buf.len(), seg);
+
+    if mi != 0 {
+        // ---- member: stream the weighted buffer to the group leader ----
+        let unwind = |net: &mut N, e: ArError| {
+            if matches!(e, ArError::PeerLost(_) | ArError::Aborted) {
+                flood_abort(net, step, &[leader]);
+                drain_hier(net, step, &[leader], segs.len());
+            }
+            Err(e)
+        };
+        for (i, &(a, b)) in segs.iter().enumerate() {
+            let raw = f32s_as_bytes(&buf[a..b]);
+            let mut out = net.take_buf(raw.len());
+            out.extend_from_slice(raw);
+            if let Err(e) = net.send(leader, hier_tag(step, 0, i as u32), out) {
+                return unwind(
+                    net,
+                    match e {
+                        NetError::UnknownPeer(_) | NetError::Io(_) => ArError::PeerLost(leader),
+                        other => ArError::Net(other),
+                    },
+                );
+            }
+        }
+        // ---- member: receive the globally reduced buffer back ----
+        for (i, &(a, b)) in segs.iter().enumerate() {
+            let t = hier_tag(step, 1, i as u32);
+            let payload = match recv_hier(net, leader, t, step, timeout) {
+                Ok(p) => p,
+                Err(e) => return unwind(net, e),
+            };
+            if payload.len() != (b - a) * 4 {
+                return Err(ArError::Protocol(format!(
+                    "hier segment {i}: want {} bytes, got {}",
+                    (b - a) * 4,
+                    payload.len()
+                )));
+            }
+            copy_raw(&mut buf[a..b], &payload);
+            net.recycle(payload);
+        }
+        return Ok(());
+    }
+
+    // ---- leader: fold members in canonical group order ----
+    let others: Vec<u32> = group[1..]
+        .iter()
+        .chain(leaders.iter().filter(|&&l| l != me))
+        .copied()
+        .collect();
+    let unwind = |net: &mut N, e: ArError| {
+        if matches!(e, ArError::PeerLost(_) | ArError::Aborted) {
+            flood_abort(net, step, &others);
+            drain_hier(net, step, group, segs.len());
+        }
+        Err(e)
+    };
+    for (i, &(a, b)) in segs.iter().enumerate() {
+        let t = hier_tag(step, 0, i as u32);
+        for &m in &group[1..] {
+            let payload = match recv_hier(net, m, t, step, timeout) {
+                Ok(p) => p,
+                Err(e) => return unwind(net, e),
+            };
+            if payload.len() != (b - a) * 4 {
+                return Err(ArError::Protocol(format!(
+                    "hier segment {i} from {m}: want {} bytes, got {}",
+                    (b - a) * 4,
+                    payload.len()
+                )));
+            }
+            add_raw(&mut buf[a..b], &payload);
+            net.recycle(payload);
+        }
+    }
+    // ---- leaders: one inter-node ring over the machine sums ----
+    // (weight already applied; ring_allreduce does its own ring-tag drain
+    // on abort, ours below covers the intra phases)
+    if let Err(e) = ring_allreduce(net, &leaders, step, buf, 1.0, timeout) {
+        return unwind(net, e);
+    }
+    // ---- leader: fan the result back out, refcounted per segment ----
+    for (i, &(a, b)) in segs.iter().enumerate() {
+        let t = hier_tag(step, 1, i as u32);
+        let shared: Shared = Arc::new(f32s_as_bytes(&buf[a..b]).to_vec());
+        for &m in &group[1..] {
+            if let Err(e) = net.send_shared(m, t, &shared) {
+                return unwind(
+                    net,
+                    match e {
+                        NetError::UnknownPeer(_) | NetError::Io(_) => ArError::PeerLost(m),
+                        other => ArError::Net(other),
+                    },
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -851,6 +1142,254 @@ mod tests {
         });
     }
 
+    /// Run one allreduce per worker over a fresh hub: `flat` uses
+    /// [`ring_allreduce`], otherwise [`topo_allreduce`] with `digests`.
+    fn run_with_topology(
+        inputs: &[Vec<f32>],
+        weights: &[f32],
+        digests: &HashMap<u32, u64>,
+        flat: bool,
+    ) -> Vec<Vec<f32>> {
+        let n = inputs.len();
+        let hub = InProcHub::new();
+        let ring: Vec<u32> = (0..n as u32).collect();
+        let eps: Vec<_> = (0..n).map(|i| hub.join(i as u32)).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    let ring = ring.clone();
+                    let digests = digests.clone();
+                    let mut buf = inputs[i].clone();
+                    let w = weights[i];
+                    s.spawn(move || {
+                        if flat {
+                            ring_allreduce(&mut ep, &ring, 7, &mut buf, w, T).unwrap();
+                        } else {
+                            topo_allreduce(&mut ep, &ring, &digests, 7, &mut buf, w, T).unwrap();
+                        }
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn machine_groups_first_occurrence_partition() {
+        let mut d = HashMap::new();
+        d.insert(5u32, 0xA);
+        d.insert(7, 0xA);
+        d.insert(3, 0xB);
+        d.insert(9, 0); // digest 0 = machine unknown
+        let groups = machine_groups(&[5, 3, 7, 9, 2], &d); // 2 missing entirely
+        assert_eq!(groups, vec![vec![5, 7], vec![3], vec![9], vec![2]]);
+        assert!(hierarchy_pays(&groups));
+        assert!(!hierarchy_pays(&machine_groups(&[1, 2, 3], &HashMap::new())));
+        // one machine hosting everyone: nothing to gain either
+        let all_one: HashMap<u32, u64> = [(1u32, 9u64), (2, 9), (3, 9)].into();
+        assert!(!hierarchy_pays(&machine_groups(&[1, 2, 3], &all_one)));
+    }
+
+    #[test]
+    fn machine_groups_partition_property() {
+        prop::check("machine-groups-partition", 50, |rng| {
+            let n = 1 + rng.gen_range(12) as usize;
+            let ring: Vec<u32> = (0..n as u32).collect();
+            let mut digests = HashMap::new();
+            for &id in &ring {
+                digests.insert(id, rng.gen_range(4)); // 0 = unknown
+            }
+            let groups = machine_groups(&ring, &digests);
+            let flat: Vec<u32> = groups.iter().flatten().copied().collect();
+            let mut sorted = flat.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != n || flat.len() != n {
+                return Err(format!("not a partition: {groups:?}"));
+            }
+            for g in &groups {
+                if g.is_empty() {
+                    return Err("empty group".into());
+                }
+                let d = digests[&g[0]];
+                if d == 0 && g.len() != 1 {
+                    return Err(format!("unknown-machine nodes must be singletons: {g:?}"));
+                }
+                if g.iter().any(|id| digests[id] != d) {
+                    return Err(format!("mixed digests in group {g:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hierarchical_matches_flat_bit_identical_on_dyadic_inputs() {
+        // inputs are small multiples of 0.25, so every partial sum is
+        // exactly representable and f32 addition is associative on them:
+        // hierarchical and flat MUST agree bitwise, for ANY grouping
+        prop::check("hier-vs-flat-dyadic", 10, |rng| {
+            let n = 2 + rng.gen_range(5) as usize;
+            let len = 1 + rng.gen_range(200) as usize;
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| (rng.gen_range(64) as f32 - 32.0) * 0.25).collect())
+                .collect();
+            let weights = vec![1.0f32; n];
+            let mut digests = HashMap::new();
+            for i in 0..n as u32 {
+                digests.insert(i, rng.gen_range(3)); // machines {0=unknown,1,2}
+            }
+            let hier = run_with_topology(&inputs, &weights, &digests, false);
+            let flat = run_with_topology(&inputs, &weights, &digests, true);
+            for (w, (h, f)) in hier.iter().zip(&flat).enumerate() {
+                for (i, (x, y)) in h.iter().zip(f).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "worker {w} elt {i}: hier {x} != flat {y} (digests {digests:?})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hierarchical_weighted_consensus_and_accuracy() {
+        // two 2-worker "machines" + one singleton; weighted inputs: all
+        // five workers must end BITWISE identical, and within float
+        // tolerance of the weighted sum
+        let mut rng = Pcg::seeded(21);
+        let n = 5usize;
+        let len = 1031usize;
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let raw: Vec<f32> = (0..n).map(|_| 0.1 + rng.f64() as f32).collect();
+        let s: f32 = raw.iter().sum();
+        let weights: Vec<f32> = raw.iter().map(|w| w / s).collect();
+        let digests: HashMap<u32, u64> = [(0u32, 0xAA), (1, 0xAA), (2, 0xBB), (3, 0xBB), (4, 0)]
+            .into_iter()
+            .collect();
+        assert!(hierarchy_pays(&machine_groups(&[0, 1, 2, 3, 4], &digests)));
+        let outs = run_with_topology(&inputs, &weights, &digests, false);
+        let mut expected = vec![0f32; len];
+        for (inp, w) in inputs.iter().zip(&weights) {
+            for (e, x) in expected.iter_mut().zip(inp) {
+                *e += *x * *w;
+            }
+        }
+        for o in &outs {
+            for (a, b) in o.iter().zip(&outs[0]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers disagree bitwise");
+            }
+            for (i, (a, b)) in o.iter().zip(&expected).enumerate() {
+                assert!((a - b).abs() < 1e-3, "elt {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_singleton_groups_bit_identical_to_flat() {
+        // with every group a singleton, the leaders ring IS the full ring:
+        // hierarchical_allreduce must reproduce ring_allreduce bit-for-bit
+        // even on non-associative (normal) inputs
+        let mut rng = Pcg::seeded(33);
+        let n = 4usize;
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..257).map(|_| rng.normal() as f32).collect()).collect();
+        let groups: Vec<Vec<u32>> = (0..n as u32).map(|i| vec![i]).collect();
+        let hub = InProcHub::new();
+        let ring: Vec<u32> = (0..n as u32).collect();
+        let eps: Vec<_> = (0..n).map(|i| hub.join(i as u32)).collect();
+        let hier: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    let ring = ring.clone();
+                    let groups = groups.clone();
+                    let mut buf = inputs[i].clone();
+                    s.spawn(move || {
+                        hierarchical_allreduce(&mut ep, &ring, &groups, 7, &mut buf, 0.25, T)
+                            .unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let weights = vec![0.25f32; n];
+        let flat = run_with_topology(&inputs, &weights, &HashMap::new(), true);
+        for (h, f) in hier.iter().zip(&flat) {
+            for (x, y) in h.iter().zip(f) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_survivors_unblock_fast_on_member_death() {
+        // groups [[0,1],[2,3]]; member 1 dies before participating. The
+        // group leader's probe bounces within a quantum; the abort floods
+        // across the leaders ring and down into the other group, so ALL
+        // survivors unwind in seconds with typed verdicts
+        let digests: HashMap<u32, u64> =
+            [(0u32, 0x1), (1, 0x1), (2, 0x2), (3, 0x2)].into_iter().collect();
+        let hub = InProcHub::new();
+        let ring: Vec<u32> = vec![0, 1, 2, 3];
+        let eps: Vec<_> = (0..4).map(|i| hub.join(i as u32)).collect();
+        let t0 = std::time::Instant::now();
+        let results: Vec<Option<ArError>> = std::thread::scope(|s| {
+            eps.into_iter()
+                .enumerate()
+                .map(|(i, mut ep)| {
+                    let ring = ring.clone();
+                    let digests = digests.clone();
+                    s.spawn(move || {
+                        if i == 1 {
+                            drop(ep);
+                            return None;
+                        }
+                        let mut buf = vec![i as f32; 64];
+                        Some(
+                            topo_allreduce(
+                                &mut ep,
+                                &ring,
+                                &digests,
+                                5,
+                                &mut buf,
+                                1.0,
+                                Duration::from_secs(30),
+                            )
+                            .unwrap_err(),
+                        )
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "survivors burned the full timeout: {:?}",
+            t0.elapsed()
+        );
+        for (i, r) in results.iter().enumerate() {
+            if i == 1 {
+                continue;
+            }
+            match r {
+                Some(ArError::PeerLost(_)) | Some(ArError::Aborted) => {}
+                other => panic!("worker {i}: unexpected outcome {other:?}"),
+            }
+        }
+    }
+
     #[test]
     fn consecutive_steps_do_not_crosstalk() {
         // run two allreduces back-to-back on the same endpoints with
@@ -953,6 +1492,40 @@ mod tests {
         // ring-version bumps re-namespace the abort tag too
         for v in 0..255u64 {
             assert_ne!(abort_tag((v << 24) | 42), abort_tag(((v + 1) << 24) | 42));
+        }
+        // the hierarchical family owns the `101` high pattern: under the
+        // 3-bit mask every family lands on a distinct pattern (ring
+        // phase-0 = 010, ring phase-1 = 011, bcast = 100 — its generation
+        // field tops out at bit 28, so bit 29 is always clear — hier =
+        // 101, abort = 110), so hierarchical intra-node segments can
+        // never alias ring, broadcast, abort or coordination traffic
+        const HI: u32 = 0xE000_0000;
+        for step in 0..512u64 {
+            for phase in 0..2u32 {
+                for seq in 0..8u32 {
+                    let h = hier_tag(step, phase, seq);
+                    assert_eq!(h & HI, 0xA000_0000);
+                    assert_ne!(h & HI, ring_tag(step, 0, seq) & HI);
+                    assert_ne!(h & HI, ring_tag(step, 1, seq) & HI);
+                    assert_ne!(h & HI, bcast_tag(step, seq) & HI);
+                    assert_ne!(h & HI, abort_tag(step) & HI);
+                }
+            }
+        }
+        assert_eq!(crate::transport::tag::RPC & HI, 0);
+        assert_eq!(crate::transport::tag::KV & HI, 0);
+        // (step, phase, seq) -> hier_tag is injective within a window,
+        // and the intra-reduce / intra-broadcast phases never collide
+        let mut hseen = std::collections::HashSet::new();
+        for step in 0..512u64 {
+            for phase in 0..2u32 {
+                for seq in 0..4u32 {
+                    assert!(
+                        hseen.insert(hier_tag(step, phase, seq)),
+                        "hier tag collision at step={step} phase={phase} seq={seq}"
+                    );
+                }
+            }
         }
     }
 

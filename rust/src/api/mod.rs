@@ -85,6 +85,12 @@ pub struct JobStatus {
     /// machine label of each worker, aligned with `workers` — what a
     /// cluster master needs to return shrunk GPUs to the right machine
     pub worker_machines: Vec<String>,
+    /// physical-machine identity digest of each worker, aligned with
+    /// `workers` (0 = unknown / shm disabled): two workers with equal
+    /// nonzero digests share an OS instance and run their data-plane
+    /// link over shared memory — `ctl status --json` surfaces this so
+    /// operators (and CI) can verify the negotiation actually happened
+    pub worker_digests: Vec<u64>,
 }
 
 /// One level of a `profile()` sweep (Table 1 `profile`, §5.2).
@@ -356,7 +362,8 @@ impl JobStatus {
             .f64(self.throughput_sps)
             .f32(self.last_loss)
             .u32s(&self.workers)
-            .strs(&self.worker_machines);
+            .strs(&self.worker_machines)
+            .u64s(&self.worker_digests);
     }
 
     pub fn decode(d: &mut Dec) -> wire::Result<JobStatus> {
@@ -368,6 +375,7 @@ impl JobStatus {
             last_loss: d.f32()?,
             workers: d.u32s()?,
             worker_machines: d.strs()?,
+            worker_digests: d.u64s()?,
         })
     }
 }
@@ -680,6 +688,7 @@ mod tests {
                 last_loss: 1.25,
                 workers: vec![1, 2, 3, 4],
                 worker_machines: vec!["m0".into(), "m0".into(), "m1".into(), "m1".into()],
+                worker_digests: vec![0xA1, 0xA1, 0xB2, 0xB2],
             }),
             Response::Profile(vec![ProfileRow {
                 parallelism: 2,

@@ -96,6 +96,11 @@ enum WState {
 struct WInfo {
     /// reported back in `status` so cluster masters can track placement
     machine: String,
+    /// physical-machine identity hash from the worker's Register (0 =
+    /// unknown): equal nonzero digests mean "same OS instance", which
+    /// drives topology-aware ring grouping ([`LeaderCore::topo_order`])
+    /// and is reported in `status` so `ctl` can verify shm negotiation
+    machine_digest: u64,
     state: WState,
     step_times: std::collections::VecDeque<f64>,
     straggle_hits: u32,
@@ -342,6 +347,7 @@ impl LeaderCore {
         for (id, w) in &self.workers {
             id.hash(h);
             w.machine.hash(h);
+            w.machine_digest.hash(h);
             match w.state {
                 WState::Joining { ready } => {
                     h.write_u8(1);
@@ -524,6 +530,32 @@ impl LeaderCore {
         self.out.push(Action::Reply { token, resp });
     }
 
+    /// Topology-aware ring order (DESIGN.md §9): stable-group the cohort
+    /// so workers sharing a physical machine (equal nonzero machine
+    /// digests) sit adjacent in the ring. `allreduce::machine_groups`
+    /// derives the hierarchical grouping from the same digests, and
+    /// adjacency keeps the heavy intra-node phases on the shared-memory
+    /// links. Workers with unknown digests (in-proc deployment, shm off)
+    /// stay singletons in their original relative order, so this is the
+    /// identity permutation whenever no digests are known — existing
+    /// rings, replays and chaos seeds are unchanged.
+    fn topo_order(&self, ids: Vec<NodeId>) -> Vec<NodeId> {
+        let mut groups: Vec<(u64, Vec<NodeId>)> = Vec::new();
+        'next: for id in ids {
+            let d = self.workers.get(&id).map(|w| w.machine_digest).unwrap_or(0);
+            if d != 0 {
+                for (gd, g) in groups.iter_mut() {
+                    if *gd == d {
+                        g.push(id);
+                        continue 'next;
+                    }
+                }
+            }
+            groups.push((d, vec![id]));
+        }
+        groups.into_iter().flat_map(|(_, g)| g).collect()
+    }
+
     fn maybe_start_job(&mut self) {
         if self.started {
             return;
@@ -540,7 +572,7 @@ impl LeaderCore {
             return;
         }
         self.active = founders.clone();
-        self.ring = Arc::new(founders.clone());
+        self.ring = Arc::new(self.topo_order(founders.clone()));
         let lb = self.local_batch_for(self.active.len() as u32);
         for id in founders {
             if let Some(w) = self.workers.get_mut(&id) {
@@ -623,6 +655,7 @@ impl LeaderCore {
         let mut new_ring: Vec<NodeId> =
             self.active.iter().copied().filter(|id| !self.op_exiting.contains(id)).collect();
         new_ring.extend(self.joining.iter().copied());
+        let new_ring = self.topo_order(new_ring);
         let lb = self.local_batch_for(new_ring.len() as u32);
         let plan = SwitchPlan {
             at_step,
@@ -884,7 +917,7 @@ impl LeaderCore {
             self.workers.remove(&d);
         }
         self.active.retain(|id| !dead.contains(id));
-        self.ring = Arc::new(self.active.clone());
+        self.ring = Arc::new(self.topo_order(self.active.clone()));
         self.ring_version += 1;
         // drop any in-flight plan that references dead workers
         if let Some(p) = &self.plan {
@@ -1063,14 +1096,14 @@ impl LeaderCore {
         if dead.is_empty() {
             // nothing actually died (spurious abort): still re-namespace
             // the generation so the redo cannot alias aborted frames
-            self.ring = Arc::new(self.active.clone());
+            self.ring = Arc::new(self.topo_order(self.active.clone()));
             self.ring_version += 1;
         } else {
             self.event(format!("failure-detected dead={dead:?} step={}", self.step));
             self.remove_failed(&dead);
         }
         let sync_tag = (self.ring_version << 24) | (r.step & 0xFF_FFFF);
-        let ring = Arc::new(redo.clone());
+        let ring = Arc::new(self.topo_order(redo.clone()));
         for &id in &redo {
             self.send_ctrl(id, CtrlMsg::RingReform { ring: ring.clone(), sync_tag });
         }
@@ -1215,6 +1248,7 @@ impl LeaderCore {
                     id,
                     WInfo {
                         machine,
+                        machine_digest: 0,
                         state: WState::Joining { ready: false },
                         step_times: Default::default(),
                         straggle_hits: 0,
@@ -1226,7 +1260,13 @@ impl LeaderCore {
                     self.pending_spawn = self.pending_spawn.saturating_sub(1);
                 }
             }
-            WorkerEvent::Register { .. } => {}
+            WorkerEvent::Register { id, machine_digest, .. } => {
+                // Register precedes Ready, so the digest is in place
+                // before this worker can appear in any ring
+                if let Some(w) = self.workers.get_mut(&id) {
+                    w.machine_digest = machine_digest;
+                }
+            }
             WorkerEvent::Ready { id } => {
                 if let Some(w) = self.workers.get_mut(&id) {
                     w.state = WState::Joining { ready: true };
@@ -1458,6 +1498,13 @@ impl LeaderCore {
                         .iter()
                         .map(|id| {
                             self.workers.get(id).map(|w| w.machine.clone()).unwrap_or_default()
+                        })
+                        .collect(),
+                    worker_digests: self
+                        .active
+                        .iter()
+                        .map(|id| {
+                            self.workers.get(id).map(|w| w.machine_digest).unwrap_or_default()
                         })
                         .collect(),
                 });

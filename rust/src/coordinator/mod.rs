@@ -50,7 +50,11 @@ pub enum WorkerEvent {
     /// the SHELL — thread spawner in-proc, connection handler over TCP —
     /// never by the worker itself)
     Attach { id: NodeId, machine: String, joiner: bool },
-    Register { id: NodeId, machine: String },
+    /// sent by the worker itself once running; `machine_digest` is the
+    /// physical-machine identity hash (`transport::machine_identity`) used
+    /// for topology-aware ring construction — 0 when unknown (in-proc
+    /// deployment, shm disabled)
+    Register { id: NodeId, machine: String, machine_digest: u64 },
     Ready { id: NodeId },
     Sync { id: NodeId, step: u64, loss: f32, weight: f32, step_ms: f64, shard: Option<(u64, u64)> },
     NeedPartition { id: NodeId },
@@ -588,6 +592,11 @@ impl ElasticTrainer {
                     knobs,
                     joiner,
                     init_seed: 42,
+                    // in-proc workers share one OS process by definition,
+                    // but the hub endpoints already bypass the kernel, so
+                    // the flat ring (digest 0) is both correct and fastest
+                    machine_digest: 0,
+                    peer_digests: Arc::new(Mutex::new(std::collections::HashMap::new())),
                 };
                 let handle = std::thread::Builder::new()
                     .name(format!("edl-worker-{id}"))

@@ -17,6 +17,10 @@ const OP_CAS: u8 = 2;
 const OP_PUT: u8 = 3;
 const OP_DELETE: u8 = 4;
 const OP_REFRESH: u8 = 5;
+/// N scalar sub-ops in one frame, answered with N sub-replies in one
+/// frame: a per-tick sweep (the master refreshing every job's ctl lease)
+/// costs one round-trip instead of one per job. Batches do not nest.
+const OP_BATCH: u8 = 6;
 
 fn wall_ms() -> Ms {
     crate::util::now_ms() as Ms
@@ -133,70 +137,83 @@ fn serve_conn(
                 )));
             }
         }
-        let mut d = Dec::new(req);
-        let op = d.u8()?;
-        let now = wall_ms();
-        let mut resp = Enc::new();
-        match op {
-            OP_GET => {
-                let key = d.str()?;
-                match core.get(now, &key) {
-                    Some((v, ver)) => {
-                        resp.bool(true).u64(ver).bytes(&v);
-                    }
-                    None => {
-                        resp.bool(false);
-                    }
+        apply_op(&core, req, true)
+    })
+}
+
+/// One request → one reply, shared by the scalar path and each sub-op of
+/// an [`OP_BATCH`] frame (`top` gates nesting).
+fn apply_op(core: &KvCore, req: &[u8], top: bool) -> crate::wire::Result<Vec<u8>> {
+    let mut d = Dec::new(req);
+    let op = d.u8()?;
+    let now = wall_ms();
+    let mut resp = Enc::new();
+    match op {
+        OP_BATCH if top => {
+            let n = d.u32()?;
+            resp.u32(n);
+            for _ in 0..n {
+                let sub = d.bytes()?;
+                resp.bytes(&apply_op(core, &sub, false)?);
+            }
+        }
+        OP_GET => {
+            let key = d.str()?;
+            match core.get(now, &key) {
+                Some((v, ver)) => {
+                    resp.bool(true).u64(ver).bytes(&v);
+                }
+                None => {
+                    resp.bool(false);
                 }
             }
-            OP_CAS => {
-                let key = d.str()?;
-                let has_expected = d.bool()?;
-                let expected = if has_expected { Some(d.bytes()?) } else { None };
-                let new = d.bytes()?;
-                let ttl = d.u64()?;
-                let ttl = if ttl == 0 { None } else { Some(ttl) };
-                match core.compare_and_swap(now, &key, expected.as_deref(), &new, ttl) {
-                    Ok(ver) => {
-                        resp.bool(true).u64(ver);
-                    }
-                    Err(cur) => {
-                        resp.bool(false);
-                        match cur {
-                            Some((v, ver)) => {
-                                resp.bool(true).u64(ver).bytes(&v);
-                            }
-                            None => {
-                                resp.bool(false);
-                            }
+        }
+        OP_CAS => {
+            let key = d.str()?;
+            let has_expected = d.bool()?;
+            let expected = if has_expected { Some(d.bytes()?) } else { None };
+            let new = d.bytes()?;
+            let ttl = d.u64()?;
+            let ttl = if ttl == 0 { None } else { Some(ttl) };
+            match core.compare_and_swap(now, &key, expected.as_deref(), &new, ttl) {
+                Ok(ver) => {
+                    resp.bool(true).u64(ver);
+                }
+                Err(cur) => {
+                    resp.bool(false);
+                    match cur {
+                        Some((v, ver)) => {
+                            resp.bool(true).u64(ver).bytes(&v);
+                        }
+                        None => {
+                            resp.bool(false);
                         }
                     }
                 }
             }
-            OP_PUT => {
-                let key = d.str()?;
-                let value = d.bytes()?;
-                let ttl = d.u64()?;
-                let ttl = if ttl == 0 { None } else { Some(ttl) };
-                let ver = core.put(now, &key, &value, ttl);
-                resp.u64(ver);
-            }
-            OP_DELETE => {
-                let key = d.str()?;
-                resp.bool(core.delete(&key));
-            }
-            OP_REFRESH => {
-                let key = d.str()?;
-                let value = d.bytes()?;
-                let ttl = d.u64()?;
-                resp.bool(core.refresh_lease(now, &key, &value, ttl));
-            }
-            other => {
-                return Err(crate::wire::WireError::BadTag { tag: other as u32, ty: "kv op" })
-            }
         }
-        Ok(resp.into_bytes())
-    })
+        OP_PUT => {
+            let key = d.str()?;
+            let value = d.bytes()?;
+            let ttl = d.u64()?;
+            let ttl = if ttl == 0 { None } else { Some(ttl) };
+            let ver = core.put(now, &key, &value, ttl);
+            resp.u64(ver);
+        }
+        OP_DELETE => {
+            let key = d.str()?;
+            resp.bool(core.delete(&key));
+        }
+        OP_REFRESH => {
+            let key = d.str()?;
+            let value = d.bytes()?;
+            let ttl = d.u64()?;
+            resp.bool(core.refresh_lease(now, &key, &value, ttl));
+        }
+        // a nested OP_BATCH lands here too: batches do not nest
+        other => return Err(crate::wire::WireError::BadTag { tag: other as u32, ty: "kv op" }),
+    }
+    Ok(resp.into_bytes())
 }
 
 /// Blocking TCP client for the KV service.
@@ -286,6 +303,41 @@ impl KvClient {
         Dec::new(&resp).bool()
     }
 
+    /// Execute many scalar sub-requests in ONE framed round-trip
+    /// ([`OP_BATCH`]); returns one raw sub-reply per sub-request.
+    fn call_batch(&mut self, subs: &[Vec<u8>]) -> crate::wire::Result<Vec<Vec<u8>>> {
+        let mut e = Enc::new();
+        e.u8(OP_BATCH).u32(subs.len() as u32);
+        for s in subs {
+            e.bytes(s);
+        }
+        let resp = self.call(e)?;
+        let mut d = Dec::new(&resp);
+        let n = d.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            out.push(d.bytes()?);
+        }
+        Ok(out)
+    }
+
+    /// Batched [`KvClient::put`]: one round-trip for a whole lease sweep
+    /// (the master's per-tick refresh of every running job's ctl lease).
+    pub fn put_many(
+        &mut self,
+        items: &[(String, Vec<u8>, u64)],
+    ) -> crate::wire::Result<Vec<u64>> {
+        let subs: Vec<Vec<u8>> = items
+            .iter()
+            .map(|(key, value, ttl_ms)| {
+                let mut e = Enc::new();
+                e.u8(OP_PUT).str(key).bytes(value).u64(*ttl_ms);
+                e.into_bytes()
+            })
+            .collect();
+        self.call_batch(&subs)?.iter().map(|r| Dec::new(r).u64()).collect()
+    }
+
     /// The full §4.1 election protocol over TCP: query, claim if void,
     /// retry on races. Returns the winner's address.
     pub fn elect(&mut self, job: &str, my_addr: &str, ttl_ms: u64) -> crate::wire::Result<String> {
@@ -334,6 +386,49 @@ mod tests {
         assert!(c.get("k").unwrap().is_some());
         std::thread::sleep(std::time::Duration::from_millis(80));
         assert!(c.get("k").unwrap().is_none());
+    }
+
+    #[test]
+    fn batch_put_matches_scalar_puts() {
+        let server = KvServer::start().unwrap();
+        let mut c = KvClient::connect(&server.addr).unwrap();
+        let items: Vec<(String, Vec<u8>, u64)> = (0..8)
+            .map(|i| (format!("edl/jobs/j{i}/ctl"), format!("127.0.0.1:{i}").into_bytes(), 0))
+            .collect();
+        let vers = c.put_many(&items).unwrap();
+        assert_eq!(vers.len(), items.len());
+        for (key, value, _) in &items {
+            assert_eq!(&c.get(key).unwrap().unwrap().0, value);
+        }
+        // a second sweep bumps every version, exactly like scalar puts
+        let vers2 = c.put_many(&items).unwrap();
+        assert!(vers.iter().zip(&vers2).all(|(a, b)| b > a), "{vers:?} -> {vers2:?}");
+        // the same connection still speaks the scalar protocol afterwards
+        c.put("k", b"v", 0).unwrap();
+        assert_eq!(c.get("k").unwrap().unwrap().0, b"v".to_vec());
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop_roundtrip() {
+        let server = KvServer::start().unwrap();
+        let mut c = KvClient::connect(&server.addr).unwrap();
+        assert!(c.put_many(&[]).unwrap().is_empty());
+        c.put("still-alive", b"1", 0).unwrap();
+        assert!(c.get("still-alive").unwrap().is_some());
+    }
+
+    #[test]
+    fn nested_batch_rejected() {
+        let server = KvServer::start().unwrap();
+        let mut c = KvClient::connect(&server.addr).unwrap();
+        // hand-build a batch whose single sub-op is itself a batch; the
+        // server must refuse (BadTag severs the connection via serve_framed)
+        let mut inner = Enc::new();
+        inner.u8(OP_BATCH).u32(0);
+        let sub = inner.into_bytes();
+        let mut outer = Enc::new();
+        outer.u8(OP_BATCH).u32(1).bytes(&sub);
+        assert!(c.call(outer).is_err());
     }
 
     #[test]

@@ -10,16 +10,19 @@
 //!                                 │    ▼
 //!   edl worker ───────────► control socket ⇄ worker_loop
 //!                                │
-//!                            TcpNode data plane (ring allreduce +
-//!                            model broadcast between worker processes)
+//!                            MixedNode data plane (ring allreduce +
+//!                            model broadcast between worker processes;
+//!                            shm ring-buffers between same-machine
+//!                            peers, TCP across machines)
 //! ```
 //!
 //! The SAME [`LeaderCore`] drives this deployment and the in-process
 //! [`ElasticTrainer`](crate::coordinator::ElasticTrainer); this module is
 //! only transport: it frames control messages through [`crate::rpc`],
 //! matches connecting worker processes to the core's `Spawn` actions, and
-//! pushes the data-plane peer directory ([`rpc::FromLeader::Peers`]) so
-//! `TcpNode`s can dial each other.
+//! pushes the data-plane peer directory ([`rpc::FromLeader::Peers`]:
+//! address + machine digest per worker) so data planes can dial each
+//! other and same-machine pairs can negotiate the shm transport.
 //!
 //! Worker arrival model (PyTorch-Elastic-style rendezvous): `edl worker`
 //! processes connect unsolicited. The first `n_workers` connections become
@@ -36,7 +39,7 @@ use crate::coordinator::{
 };
 use crate::data::corpus::Corpus;
 use crate::rpc::{FromLeader, ToLeader};
-use crate::transport::{tag, FaultCell, FaultHook, FrameFate, NodeId, TcpNode};
+use crate::transport::{machine_identity, tag, FaultCell, FaultHook, FrameFate, MixedNode, NodeId};
 use crate::util::now_ms;
 use crate::wire;
 use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
@@ -82,6 +85,9 @@ pub fn config_digest(
 struct ConnHandle {
     writer: TcpStream,
     config_digest: u64,
+    /// physical-machine identity from the Hello (0 = shm disabled); kept
+    /// so the peer directory can tell workers which peers share a machine
+    machine_digest: u64,
 }
 
 enum In {
@@ -148,6 +154,10 @@ impl LeaderEndpoint {
         let core = LeaderCore::new(cfg, backend, assigner, n_workers);
         let step_cell = StepCell::new();
         let faults = Arc::new(FaultCell::new());
+        // per-job shm namespace: every worker of THIS job maps rings under
+        // the same directory, and two jobs never collide (time + port)
+        let port = addr.rsplit(':').next().unwrap_or("0");
+        let shm_ns = format!("edl-{:x}-{port}", now_ms());
         let shell = DeployShell {
             core,
             rx,
@@ -163,6 +173,8 @@ impl LeaderEndpoint {
             expected_digest,
             reclaim_timeout,
             directory: BTreeMap::new(),
+            digests: BTreeMap::new(),
+            shm_ns,
             replies: HashMap::new(),
             next_token: 0,
             step_cell: step_cell.clone(),
@@ -218,8 +230,9 @@ fn conn_loop(stream: TcpStream, tx: Sender<In>) -> wire::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let first = wire::read_frame(&mut reader)?;
     match ToLeader::decode(&first) {
-        Ok(ToLeader::Hello { machine: _, config_digest }) => {
-            if tx.send(In::Conn(ConnHandle { writer: stream, config_digest })).is_err() {
+        Ok(ToLeader::Hello { machine: _, config_digest, machine_digest }) => {
+            let conn = ConnHandle { writer: stream, config_digest, machine_digest };
+            if tx.send(In::Conn(conn)).is_err() {
                 return Ok(());
             }
         }
@@ -266,6 +279,12 @@ struct DeployShell {
     reclaim_timeout: Duration,
     /// data-plane peer directory (worker id → TcpNode listen addr)
     directory: BTreeMap<NodeId, String>,
+    /// worker id → machine-identity digest (from Hello); pushed alongside
+    /// addresses so every pair of same-machine workers negotiates the shm
+    /// transport, and fed to the core for topology-aware ring order
+    digests: BTreeMap<NodeId, u64>,
+    /// job-unique shm namespace, told to each worker in its Welcome
+    shm_ns: String,
     replies: ReplyMap,
     next_token: ReqToken,
     step_cell: Arc<StepCell>,
@@ -356,9 +375,11 @@ impl DeployShell {
         // the worker is treated as dead
         let _ = conn.writer.set_write_timeout(Some(self.reclaim_timeout));
         self.writers.insert(id, conn.writer);
+        self.digests.insert(id, conn.machine_digest);
         self.joiner_flag.insert(id, joiner);
         self.welcomed_at.insert(id, Instant::now());
-        self.send_frame(id, &FromLeader::Welcome { worker: id, joiner });
+        let shm_ns = self.shm_ns.clone();
+        self.send_frame(id, &FromLeader::Welcome { worker: id, joiner, shm_ns });
     }
 
     /// Timeout-driven slot hygiene so a process that dies mid-handshake
@@ -378,6 +399,7 @@ impl DeployShell {
             .collect();
         for id in expired {
             self.welcomed_at.remove(&id);
+            self.digests.remove(&id);
             if let Some(w) = self.writers.remove(&id) {
                 let _ = w.shutdown(std::net::Shutdown::Both);
             }
@@ -433,8 +455,11 @@ impl DeployShell {
     /// new peer — per-socket ordering then guarantees workers can dial
     /// every ring member they are told about).
     fn broadcast_peers(&mut self) {
-        let peers: Vec<(NodeId, String)> =
-            self.directory.iter().map(|(&id, a)| (id, a.clone())).collect();
+        let peers: Vec<(NodeId, String, u64)> = self
+            .directory
+            .iter()
+            .map(|(&id, a)| (id, a.clone(), self.digests.get(&id).copied().unwrap_or(0)))
+            .collect();
         let msg = FromLeader::Peers { peers };
         let ids: Vec<NodeId> = self.writers.keys().copied().collect();
         for id in ids {
@@ -444,9 +469,10 @@ impl DeployShell {
 
     fn handle_wire(&mut self, msg: ToLeader) -> Vec<Action> {
         let mut actions = Vec::new();
-        if let ToLeader::Register { worker, machine, data_addr } = &msg {
+        if let ToLeader::Register { worker, machine, data_addr, machine_digest } = &msg {
             self.welcomed_at.remove(worker);
             self.directory.insert(*worker, data_addr.clone());
+            self.digests.insert(*worker, *machine_digest);
             self.broadcast_peers();
             if self.attached.insert(*worker) {
                 let joiner = self.joiner_flag.get(worker).copied().unwrap_or(false);
@@ -464,6 +490,7 @@ impl DeployShell {
             let worker = *worker;
             self.writers.remove(&worker);
             self.directory.remove(&worker);
+            self.digests.remove(&worker);
             self.attached.remove(&worker);
         }
         if let Some(ev) = msg.into_event() {
@@ -473,14 +500,24 @@ impl DeployShell {
     }
 
     /// Perform a batch of core actions; true once the job stopped.
+    ///
+    /// Consecutive `Send`s are coalesced and flushed per destination with
+    /// ONE vectored write ([`wire::write_frames`]): a sync barrier or a
+    /// scale commit emits a burst of small control frames to every
+    /// worker, and with TCP_NODELAY each scalar write is a syscall plus a
+    /// segment. Any non-Send action flushes first, so per-socket frame
+    /// order is exactly what the scalar path produced.
     fn apply(&mut self, actions: Vec<Action>) -> bool {
         let mut shutdown = false;
+        let mut burst: Vec<(NodeId, FromLeader)> = Vec::new();
         for a in actions {
+            if let Action::Send { to, msg } = a {
+                burst.push((to, FromLeader::from_ctrl(&msg)));
+                continue;
+            }
+            self.flush_sends(&mut burst);
             match a {
-                Action::Send { to, msg } => {
-                    let frame = FromLeader::from_ctrl(&msg);
-                    self.send_frame(to, &frame);
-                }
+                Action::Send { .. } => unreachable!("queued above"),
                 Action::Reply { token, resp } => {
                     deliver_reply(&mut self.replies, token, resp);
                 }
@@ -502,7 +539,46 @@ impl DeployShell {
                 Action::Shutdown => shutdown = true,
             }
         }
+        self.flush_sends(&mut burst);
         shutdown
+    }
+
+    /// Write a queued run of control frames, one vectored write per
+    /// destination socket. The chaos seam is per FRAME, exactly as on the
+    /// scalar path (same `fate` call order), so armed fault plans produce
+    /// identical verdicts whether or not frames happened to batch.
+    fn flush_sends(&mut self, burst: &mut Vec<(NodeId, FromLeader)>) {
+        if burst.is_empty() {
+            return;
+        }
+        if burst.len() == 1 {
+            let (to, msg) = burst.pop().expect("len checked");
+            self.send_frame(to, &msg);
+            return;
+        }
+        let mut per: BTreeMap<NodeId, Vec<Vec<u8>>> = BTreeMap::new();
+        for (to, msg) in burst.drain(..) {
+            match self.faults.fate(0, to, tag::RPC) {
+                FrameFate::Deliver => {}
+                FrameFate::Drop => continue,
+                FrameFate::Duplicate => {
+                    per.entry(to).or_default().push(msg.encode());
+                }
+                FrameFate::Delay(d) => std::thread::sleep(d),
+            }
+            per.entry(to).or_default().push(msg.encode());
+        }
+        for (to, frames) in per {
+            let dead = match self.writers.get_mut(&to) {
+                Some(w) => wire::write_frames(w, &frames).is_err(),
+                None => false,
+            };
+            if dead {
+                // worker process gone: drop the route; the barrier-timeout
+                // failure detector removes it from the job
+                self.writers.remove(&to);
+            }
+        }
     }
 }
 
@@ -598,7 +674,8 @@ pub struct WorkerParams {
 }
 
 /// Run one worker process: handshake with the leader endpoint, stand up a
-/// `TcpNode` data plane, bridge the control socket onto the channel pair
+/// [`MixedNode`] data plane (shm rings to same-machine peers, TCP across
+/// machines), bridge the control socket onto the channel pair
 /// [`worker_loop`] expects, and train until `Stop` / graceful exit. This
 /// is the same training loop the in-process engine runs — only the
 /// transport differs.
@@ -608,15 +685,21 @@ pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
 
-    // -- handshake: Hello -> Welcome{id, joiner} ----------------------------
+    // -- handshake: Hello -> Welcome{id, joiner, shm_ns} --------------------
+    let my_digest = machine_identity();
     wire::write_frame(
         &mut writer,
-        &ToLeader::Hello { machine: p.machine.clone(), config_digest: p.config_digest }.encode(),
+        &ToLeader::Hello {
+            machine: p.machine.clone(),
+            config_digest: p.config_digest,
+            machine_digest: my_digest,
+        }
+        .encode(),
     )?;
-    let (id, joiner) = loop {
+    let (id, joiner, shm_ns) = loop {
         let raw = wire::read_frame(&mut reader)?;
         match FromLeader::decode(&raw)? {
-            FromLeader::Welcome { worker, joiner } => break (worker, joiner),
+            FromLeader::Welcome { worker, joiner, shm_ns } => break (worker, joiner, shm_ns),
             FromLeader::Reject { reason } => {
                 anyhow::bail!("leader refused this worker: {reason}");
             }
@@ -627,10 +710,18 @@ pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
     };
 
     // -- data plane ---------------------------------------------------------
+    // MixedNode: shm ring-buffers to peers whose machine digest matches
+    // ours (negotiated from the Peers directory, no extra handshake), TCP
+    // to everyone else. A digest of 0 (EDL_SHM=0, or no stable identity)
+    // degrades every link to TCP.
     let directory: Arc<Mutex<HashMap<NodeId, String>>> = Arc::new(Mutex::new(HashMap::new()));
-    let net = TcpNode::start(id, directory.clone())
+    let net = MixedNode::start(id, directory.clone(), my_digest, &shm_ns)
         .map_err(|e| anyhow::anyhow!("data-plane bind failed: {e}"))?;
-    let data_addr = net.addr.clone();
+    let data_addr = net.addr().to_string();
+    let peer_digests = net.peer_digests();
+    // the grouping map must cover the whole ring, self included (the rx
+    // bridge below only learns about OTHER peers)
+    peer_digests.lock().unwrap_or_else(|e| e.into_inner()).insert(id, my_digest);
 
     // -- control bridges ----------------------------------------------------
     let (ev_tx, ev_rx) = channel::<WorkerEvent>();
@@ -650,8 +741,11 @@ pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
         .expect("spawn worker tx bridge");
 
     // rpc frames -> ctrl messages; Peers frames maintain the directory
+    // (addresses for the TCP half, machine digests for shm negotiation
+    // and hierarchical ring grouping)
     {
         let directory = directory.clone();
+        let peer_digests = peer_digests.clone();
         std::thread::Builder::new()
             .name(format!("edl-worker-{id}-rx"))
             .spawn(move || loop {
@@ -660,8 +754,12 @@ pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
                 match msg {
                     FromLeader::Peers { peers } => {
                         let mut d = directory.lock().unwrap_or_else(|e| e.into_inner());
-                        for (pid, addr) in peers {
+                        let mut g = peer_digests.lock().unwrap_or_else(|e| e.into_inner());
+                        for (pid, addr, digest) in peers {
                             d.insert(pid, addr);
+                            if pid != id {
+                                g.insert(pid, digest);
+                            }
                         }
                     }
                     other => {
@@ -689,6 +787,8 @@ pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
         knobs: WorkerKnobs::new(),
         joiner,
         init_seed: 42,
+        machine_digest: my_digest,
+        peer_digests,
     };
     worker_loop(ctx);
     // ctx (and its event sender) is gone; the tx bridge drains the last

@@ -1443,7 +1443,10 @@ impl ChaosCluster {
             machine: machine.clone(),
             joiner,
         }));
-        self.do_core(Event::Worker(WorkerEvent::Register { id, machine }));
+        // digest 0: the chaos harness models machine identity at the
+        // label level, and 0 keeps ring order (and thus event logs) from
+        // PR-5 seeds byte-identical
+        self.do_core(Event::Worker(WorkerEvent::Register { id, machine, machine_digest: 0 }));
         let prep = 50_000 + self.rng.gen_range(350) * 1000; // 50..400 ms
         self.push(self.now_us + prep, Q::WorkerReady(id));
     }

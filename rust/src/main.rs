@@ -306,7 +306,16 @@ fn cmd_ctl(args: &Args) -> anyhow::Result<()> {
                         },
                     )
                     .set("workers", st.workers.clone())
-                    .set("worker_machines", st.worker_machines.clone());
+                    .set("worker_machines", st.worker_machines.clone())
+                    // hex strings: digests are full 64-bit values and JSON
+                    // numbers here are f64 (53-bit mantissa)
+                    .set(
+                        "worker_digests",
+                        st.worker_digests
+                            .iter()
+                            .map(|d| format!("{d:016x}"))
+                            .collect::<Vec<_>>(),
+                    );
                 println!("{}", o.to_string_pretty());
             } else {
                 println!(

@@ -41,7 +41,7 @@ pub mod proto;
 
 use crate::api::{JobControl, JobControlExt, JobServer, Request, Response};
 use crate::coordinator::TrainerConfig;
-use crate::coordsvc::KvServer;
+use crate::coordsvc::{KvClient, KvServer};
 use crate::deploy::{config_digest, LeaderEndpoint, LeaderHandle};
 use crate::gpu_sim::{self, Dnn, HwConfig};
 use crate::sched::{ClusterCtl, ClusterView, Decision, JobView, NoopScheduler, Scheduler};
@@ -181,6 +181,7 @@ impl Master {
             rx,
             tx,
             kv,
+            kv_client: None,
             start: Instant::now(),
             last_now: 0.0,
             last_tick: Instant::now(),
@@ -315,6 +316,10 @@ struct Shell {
     rx: Receiver<MIn>,
     tx: Sender<MIn>,
     kv: KvServer,
+    /// lazily connected loopback client to the embedded KV: the per-tick
+    /// lease sweep goes over the wire in ONE batched frame (OP_BATCH),
+    /// the same path a remote coordination service would take
+    kv_client: Option<KvClient>,
     start: Instant,
     last_now: f64,
     last_tick: Instant,
@@ -562,11 +567,36 @@ impl Shell {
         );
     }
 
-    fn refresh_leases(&self) {
-        for ix in 0..self.jobs.len() {
-            if matches!(self.jobs[ix].phase, Phase::Running | Phase::Stopping) {
-                self.register_lease(ix);
+    /// Per-tick lease sweep, batched: every running job's ctl lease goes
+    /// to the KV in ONE framed round-trip (OP_BATCH over the loopback
+    /// client — the exact path a remote etcd stand-in would see). Any
+    /// connection trouble falls back to in-process puts against the
+    /// embedded core, so a flaky loopback can never cost a lease.
+    fn refresh_leases(&mut self) {
+        let items: Vec<(String, Vec<u8>, u64)> = self
+            .jobs
+            .iter()
+            .filter(|j| {
+                matches!(j.phase, Phase::Running | Phase::Stopping) && !j.ctl_addr.is_empty()
+            })
+            .map(|j| {
+                (Self::lease_key(&j.spec.name), j.ctl_addr.clone().into_bytes(), self.lease_ttl_ms)
+            })
+            .collect();
+        if items.is_empty() {
+            return;
+        }
+        if self.kv_client.is_none() {
+            self.kv_client = KvClient::connect(&self.kv.addr).ok();
+        }
+        if let Some(kv) = self.kv_client.as_mut() {
+            if kv.put_many(&items).is_ok() {
+                return;
             }
+            self.kv_client = None; // reconnect next tick
+        }
+        for (key, value, ttl) in &items {
+            self.kv.core().put(crate::util::now_ms() as u64, key, value, Some(*ttl));
         }
     }
 
@@ -597,8 +627,13 @@ impl Shell {
             "--lr".into(),
             format!("{SIM_LR}"),
         ];
+        // the simulated cluster runs every "machine" on one host; stamping
+        // the machine label as the worker's shm identity makes same-machine
+        // workers negotiate shared-memory rings exactly as a real multi-node
+        // deployment would (transport::machine_identity reads this first)
         Command::new(&self.worker_bin)
             .args(&args)
+            .env("EDL_MACHINE_ID", machine)
             .stdout(Stdio::null())
             .stderr(Stdio::null())
             .spawn()

@@ -29,11 +29,17 @@ pub enum ToLeader {
     /// leader endpoint assigns its id with [`FromLeader::Welcome`], or
     /// refuses with [`FromLeader::Reject`] when `config_digest` (a hash
     /// of the data/model config both sides must agree on — see
-    /// [`deploy::config_digest`](crate::deploy::config_digest)) differs
-    Hello { machine: String, config_digest: u64 },
+    /// [`deploy::config_digest`](crate::deploy::config_digest)) differs.
+    /// `machine_digest` is the physical-machine identity hash
+    /// ([`transport::shm::machine_identity`](crate::transport::machine_identity)):
+    /// workers with equal nonzero digests share an OS instance and
+    /// negotiate shared-memory data-plane links; 0 means "unknown /
+    /// shm disabled"
+    Hello { machine: String, config_digest: u64, machine_digest: u64 },
     /// registration after the handshake, carrying the worker's
-    /// data-plane listen address for the peer directory (§4.2)
-    Register { worker: NodeId, machine: String, data_addr: String },
+    /// data-plane listen address for the peer directory (§4.2) and its
+    /// machine digest for topology-aware ring construction
+    Register { worker: NodeId, machine: String, data_addr: String, machine_digest: u64 },
     /// execution-context preparation finished; blocked awaiting OK
     Ready { worker: NodeId },
     /// per-mini-batch gradient synchronisation request; doubles as
@@ -67,12 +73,17 @@ pub enum ToLeader {
 /// Leader → worker messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FromLeader {
-    /// handshake reply: the id this process trains under, and whether it
-    /// joins a running job (stop-free path) or founds one
-    Welcome { worker: NodeId, joiner: bool },
-    /// data-plane directory push: `(id, addr)` pairs the worker merges
-    /// into its `TcpNode` peer directory before they appear in a ring
-    Peers { peers: Vec<(NodeId, String)> },
+    /// handshake reply: the id this process trains under, whether it
+    /// joins a running job (stop-free path) or founds one, and the job's
+    /// shared-memory namespace (ring files live under
+    /// `<shm base>/<shm_ns>/`; every worker of one job must use the same
+    /// namespace or same-machine peers would open disjoint rings)
+    Welcome { worker: NodeId, joiner: bool, shm_ns: String },
+    /// data-plane directory push: `(id, addr, machine_digest)` triples
+    /// the worker merges into its `MixedNode` peer directory before they
+    /// appear in a ring — the digest decides shm vs TCP per link, and
+    /// both ends derive the SAME verdict from this shared data
+    Peers { peers: Vec<(NodeId, String, u64)> },
     /// join ack + future timestamp (stop-free scaling, §4.2)
     Ok {
         join_at_step: u64,
@@ -154,10 +165,11 @@ impl ToLeader {
     pub fn from_event(ev: &WorkerEvent, data_addr: &str) -> Option<ToLeader> {
         Some(match ev {
             WorkerEvent::Attach { .. } => return None,
-            WorkerEvent::Register { id, machine } => ToLeader::Register {
+            WorkerEvent::Register { id, machine, machine_digest } => ToLeader::Register {
                 worker: *id,
                 machine: machine.clone(),
                 data_addr: data_addr.to_string(),
+                machine_digest: *machine_digest,
             },
             WorkerEvent::Ready { id } => ToLeader::Ready { worker: *id },
             WorkerEvent::Sync { id, step, loss, weight, step_ms, shard } => ToLeader::Sync {
@@ -190,8 +202,8 @@ impl ToLeader {
     pub fn into_event(self) -> Option<WorkerEvent> {
         Some(match self {
             ToLeader::Hello { .. } => return None,
-            ToLeader::Register { worker, machine, .. } => {
-                WorkerEvent::Register { id: worker, machine }
+            ToLeader::Register { worker, machine, machine_digest, .. } => {
+                WorkerEvent::Register { id: worker, machine, machine_digest }
             }
             ToLeader::Ready { worker } => WorkerEvent::Ready { id: worker },
             ToLeader::Sync { worker, step, loss, weight, step_ms, shard } => WorkerEvent::Sync {
@@ -333,11 +345,11 @@ impl ToLeader {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::new();
         match self {
-            ToLeader::Hello { machine, config_digest } => {
-                e.u8(1).str(machine).u64(*config_digest);
+            ToLeader::Hello { machine, config_digest, machine_digest } => {
+                e.u8(1).str(machine).u64(*config_digest).u64(*machine_digest);
             }
-            ToLeader::Register { worker, machine, data_addr } => {
-                e.u8(2).u32(*worker).str(machine).str(data_addr);
+            ToLeader::Register { worker, machine, data_addr, machine_digest } => {
+                e.u8(2).u32(*worker).str(machine).str(data_addr).u64(*machine_digest);
             }
             ToLeader::Ready { worker } => {
                 e.u8(3).u32(*worker);
@@ -380,11 +392,16 @@ impl ToLeader {
     pub fn decode(buf: &[u8]) -> Result<ToLeader> {
         let mut d = Dec::new(buf);
         match d.u8()? {
-            1 => Ok(ToLeader::Hello { machine: d.str()?, config_digest: d.u64()? }),
+            1 => Ok(ToLeader::Hello {
+                machine: d.str()?,
+                config_digest: d.u64()?,
+                machine_digest: d.u64()?,
+            }),
             2 => Ok(ToLeader::Register {
                 worker: d.u32()?,
                 machine: d.str()?,
                 data_addr: d.str()?,
+                machine_digest: d.u64()?,
             }),
             3 => Ok(ToLeader::Ready { worker: d.u32()? }),
             4 => Ok(ToLeader::Sync {
@@ -414,13 +431,13 @@ impl FromLeader {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::new();
         match self {
-            FromLeader::Welcome { worker, joiner } => {
-                e.u8(1).u32(*worker).bool(*joiner);
+            FromLeader::Welcome { worker, joiner, shm_ns } => {
+                e.u8(1).u32(*worker).bool(*joiner).str(shm_ns);
             }
             FromLeader::Peers { peers } => {
                 e.u8(2).u32(peers.len() as u32);
-                for (id, addr) in peers {
-                    e.u32(*id).str(addr);
+                for (id, addr, digest) in peers {
+                    e.u32(*id).str(addr).u64(*digest);
                 }
             }
             FromLeader::Ok { join_at_step, ring, local_batch, broadcast_src, joiners } => {
@@ -477,12 +494,16 @@ impl FromLeader {
     pub fn decode(buf: &[u8]) -> Result<FromLeader> {
         let mut d = Dec::new(buf);
         match d.u8()? {
-            1 => Ok(FromLeader::Welcome { worker: d.u32()?, joiner: d.bool()? }),
+            1 => Ok(FromLeader::Welcome {
+                worker: d.u32()?,
+                joiner: d.bool()?,
+                shm_ns: d.str()?,
+            }),
             2 => {
                 let n = d.u32()? as usize;
                 let mut peers = Vec::with_capacity(n.min(1 << 16));
                 for _ in 0..n {
-                    peers.push((d.u32()?, d.str()?));
+                    peers.push((d.u32()?, d.str()?, d.u64()?));
                 }
                 Ok(FromLeader::Peers { peers })
             }
@@ -561,11 +582,16 @@ mod tests {
         prop::check("rpc-to-leader-roundtrip", 200, |rng: &mut Pcg| {
             let w = rng.gen_range(1 << 20) as NodeId;
             let msgs = vec![
-                ToLeader::Hello { machine: rand_str(rng), config_digest: rng.next_u64() },
+                ToLeader::Hello {
+                    machine: rand_str(rng),
+                    config_digest: rng.next_u64(),
+                    machine_digest: rng.next_u64(),
+                },
                 ToLeader::Register {
                     worker: w,
                     machine: rand_str(rng),
                     data_addr: format!("127.0.0.1:{}", rng.gen_range(65536)),
+                    machine_digest: rng.next_u64(),
                 },
                 ToLeader::Ready { worker: w },
                 ToLeader::Sync {
@@ -612,10 +638,13 @@ mod tests {
                 FromLeader::Welcome {
                     worker: rng.gen_range(1 << 20) as NodeId,
                     joiner: rng.gen_range(2) == 1,
+                    shm_ns: rand_str(rng),
                 },
                 FromLeader::Peers {
                     peers: (0..rng.gen_range(8))
-                        .map(|_| (rng.gen_range(1 << 20) as NodeId, rand_str(rng)))
+                        .map(|_| {
+                            (rng.gen_range(1 << 20) as NodeId, rand_str(rng), rng.next_u64())
+                        })
                         .collect(),
                 },
                 FromLeader::Ok {
@@ -657,10 +686,17 @@ mod tests {
         // every proper prefix of every encoding must decode to a clean
         // error (a malformed/short TCP frame must not crash the peer)
         let samples: Vec<Vec<u8>> = vec![
+            ToLeader::Hello {
+                machine: "m1".into(),
+                config_digest: 0xDEAD,
+                machine_digest: 0xBEEF,
+            }
+            .encode(),
             ToLeader::Register {
                 worker: 7,
                 machine: "m1".into(),
                 data_addr: "127.0.0.1:9000".into(),
+                machine_digest: 0xBEEF,
             }
             .encode(),
             ToLeader::Sync {
@@ -707,7 +743,8 @@ mod tests {
                 }),
             }
             .encode(),
-            FromLeader::Peers { peers: vec![(1, "127.0.0.1:1".into())] }.encode(),
+            FromLeader::Welcome { worker: 3, joiner: true, shm_ns: "edl-1".into() }.encode(),
+            FromLeader::Peers { peers: vec![(1, "127.0.0.1:1".into(), 0xAB)] }.encode(),
             FromLeader::Restore { params: vec![0.5; 4], at_step: 3 }.encode(),
             FromLeader::Reject { reason: "config mismatch".into() }.encode(),
             FromLeader::AbortCollective { sync_tag: (1u64 << 24) | 10 }.encode(),
@@ -778,7 +815,7 @@ mod tests {
     #[test]
     fn worker_event_conversions_roundtrip() {
         let evs = vec![
-            WorkerEvent::Register { id: 5, machine: "m2".into() },
+            WorkerEvent::Register { id: 5, machine: "m2".into(), machine_digest: 0xC0FFEE },
             WorkerEvent::Ready { id: 5 },
             WorkerEvent::Sync {
                 id: 5,
@@ -816,7 +853,8 @@ mod tests {
         );
         // Hello is connection plumbing: never reaches the core
         assert_eq!(
-            ToLeader::Hello { machine: "m".into(), config_digest: 7 }.into_event(),
+            ToLeader::Hello { machine: "m".into(), config_digest: 7, machine_digest: 9 }
+                .into_event(),
             None
         );
         // Reject is connection plumbing: never reaches the worker loop

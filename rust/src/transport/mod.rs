@@ -1,12 +1,16 @@
 //! Point-to-point transport used by the ring-allreduce engine and the
-//! model-broadcast path. Two implementations share one trait:
+//! model-broadcast path. The implementations share one trait:
 //!
 //!  * [`InProcHub`]/[`InProcEndpoint`] — lock-free-ish MPSC channels for
 //!    workers living in one process (the elastic trainer's data plane; the
 //!    stand-in for NCCL on the paper's NVLink/IB fabric),
 //!  * [`TcpNode`] — framed TCP with `TCP_NODELAY` (§4.4 of the paper:
 //!    Nagle's algorithm disabled on every coordination socket) for the
-//!    multi-process deployment and the latency benchmark.
+//!    multi-process deployment and the latency benchmark,
+//!  * [`ShmNode`]/[`MixedNode`] (`transport::shm`, DESIGN.md §9) —
+//!    mmap'd per-link SPSC ring buffers for worker processes that share
+//!    a machine, negotiated per link by [`machine_identity`] digest with
+//!    automatic TCP fallback for cross-machine links.
 //!
 //! Messages are tagged; `recv_from` performs selective receive with an
 //! internal pending queue so ring neighbours and broadcast frames can
@@ -36,6 +40,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+pub mod shm;
+
+pub use shm::{machine_identity, MixedNode, ShmNode};
 
 pub type NodeId = u32;
 

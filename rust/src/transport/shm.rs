@@ -1,0 +1,1314 @@
+//! Shared-memory data plane: per-link SPSC ring buffers in `mmap`'d files
+//! plus the machine-identity digest that gates them (DESIGN.md §9).
+//!
+//! Workers that prove they share a machine (equal nonzero
+//! [`machine_identity`] digests, exchanged through the Hello/Welcome
+//! handshake and the `Peers` directory) route their data-plane frames
+//! through [`ShmNode`] instead of loopback TCP; everything else stays on
+//! [`TcpNode`]. [`MixedNode`] wraps both behind the one
+//! [`PointToPoint`] surface, so allreduce, abort/reform and the chaos
+//! harness are untouched at the call site.
+//!
+//! §Ring layout — one file per *directed* link, `link-<from>-<to>.ring`
+//! inside a per-job namespace directory under `/dev/shm` (fallback: the
+//! system temp dir):
+//!
+//! ```text
+//! [Hdr 192 B: magic | version | state | cap | pids
+//!             | head+space_seq   (consumer cacheline)
+//!             | tail+data_seq    (producer cacheline)]
+//! [data: cap bytes, cap a power of two]
+//! ```
+//!
+//! `head`/`tail` are MONOTONIC byte positions (index = `pos & (cap-1)`);
+//! the data region is a circular *byte stream*, so a frame
+//! (`[len u32][tag u32][payload]`) may wrap, and a payload larger than
+//! the ring streams through in capacity-bounded partial writes — there
+//! is no separate spill path and no frame-size ceiling below
+//! `wire::MAX_FRAME`. The producer is the sole writer of `tail`, the
+//! consumer of `head` (SPSC: no CAS on the hot path, one release store
+//! per transfer).
+//!
+//! §Parking — blocked sides sleep on a futex word (`data_seq` for
+//! empty-ring consumers, `space_seq` for full-ring producers) that the
+//! other side bumps after every transfer; wake syscalls are skipped
+//! unless a waiter registered. Every wait is timeout-bounded (≤
+//! [`PARK`]), so a missed wake degrades to sub-millisecond polling and
+//! can never deadlock; on architectures without a wired-up futex
+//! syscall the same protocol runs on a sleep-poll fallback. A producer
+//! blocked on a full ring re-checks the consumer's liveness via
+//! `/proc/<pid>` so a dead peer surfaces as [`NetError::UnknownPeer`]
+//! instead of a 30 s stall; a *vanished* consumer on the receive side
+//! needs no check — it simply times out, exactly like TCP.
+//!
+//! Fault injection: the [`FaultCell`] seam is applied sender-side
+//! (drop/duplicate/delay) before bytes enter the ring, so chaos
+//! verdicts are byte-for-byte identical to the TCP path.
+
+use super::{
+    Body, BufPool, FaultCell, FaultHook, Frame, FrameFate, Msg, NetError, NodeId, PendingQueue,
+    PointToPoint, Result, Shared, TcpNode,
+};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on one futex/poll park: a missed wake costs at most this
+/// much latency and a broken wake path degrades to polling, not deadlock.
+const PARK: Duration = Duration::from_micros(500);
+
+/// How long a producer tolerates a full ring before declaring the link
+/// stalled (mirrors the data-plane receive timeouts).
+const SEND_STALL: Duration = Duration::from_secs(30);
+
+/// Re-check the blocked-producer's consumer liveness this often.
+const LIVENESS_EVERY: Duration = Duration::from_millis(10);
+
+/// Default per-link ring capacity (bytes; power of two). Allreduce
+/// segments are 256 KiB, so 4 MiB keeps the lock-step pipeline from ever
+/// blocking on space in steady state. Override: `EDL_SHM_RING_CAP`.
+const DEFAULT_RING_CAP: usize = 4 << 20;
+
+// ---------------------------------------------------------------------------
+// machine identity
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// This process's machine-identity digest: equal nonzero digests mean
+/// "same physical machine" and unlock the shm path for that link.
+/// Digest 0 means "shm unsupported/disabled" (always negotiate TCP).
+///
+/// Sources, in priority order:
+///  * `EDL_SHM=0` — kill switch, returns 0;
+///  * `EDL_MACHINE_ID` — explicit label (the master stamps each spawned
+///    worker with its machine label, so same-label workers — which truly
+///    share the host — negotiate shm even in single-host simulations);
+///  * the kernel boot id + hostname, hashed (two hosts cannot collide on
+///    a shared filesystem, and containers get distinct boot ids).
+pub fn machine_identity() -> u64 {
+    if std::env::var("EDL_SHM").ok().as_deref() == Some("0") {
+        return 0;
+    }
+    if let Ok(label) = std::env::var("EDL_MACHINE_ID") {
+        if label.is_empty() {
+            return 0;
+        }
+        return nonzero(fnv1a(FNV_OFFSET, label.as_bytes()));
+    }
+    let mut h = FNV_OFFSET;
+    let mut any = false;
+    for src in ["/proc/sys/kernel/random/boot_id", "/etc/hostname"] {
+        if let Ok(s) = std::fs::read_to_string(src) {
+            h = fnv1a(h, s.trim().as_bytes());
+            any = true;
+        }
+    }
+    if any {
+        nonzero(h)
+    } else {
+        0
+    }
+}
+
+/// Digest 0 is the "no shm" sentinel; remap the (astronomically
+/// unlikely) genuine 0 hash so a real machine is never mistaken for it.
+fn nonzero(h: u64) -> u64 {
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// Namespace directory for a job's ring files: `/dev/shm` when present
+/// (Linux: a tmpfs, so ring traffic never touches a disk), else the
+/// system temp dir.
+pub fn shm_base_dir() -> PathBuf {
+    let dev_shm = Path::new("/dev/shm");
+    if dev_shm.is_dir() {
+        dev_shm.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mmap + futex FFI (std-only: libc is already linked by std)
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::{c_int, c_long, c_void};
+    use std::time::Duration;
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        fn syscall(num: c_long, ...) -> c_long;
+    }
+
+    pub unsafe fn map_shared(fd: c_int, len: usize) -> Option<*mut u8> {
+        let p = mmap(std::ptr::null_mut(), len, PROT_READ | PROT_WRITE, MAP_SHARED, fd, 0);
+        if p as isize == -1 || p.is_null() {
+            None
+        } else {
+            Some(p as *mut u8)
+        }
+    }
+
+    pub unsafe fn unmap(ptr: *mut u8, len: usize) {
+        munmap(ptr as *mut c_void, len);
+    }
+
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    const SYS_FUTEX: c_long = 202;
+    #[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+    const SYS_FUTEX: c_long = 98;
+    // futex op codes WITHOUT FUTEX_PRIVATE_FLAG: the word lives in a
+    // MAP_SHARED mapping and must wake across processes
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    const FUTEX_WAIT: c_long = 0;
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    const FUTEX_WAKE: c_long = 1;
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+
+    /// Sleep until `word != expected`, a wake, or `dur` — whichever is
+    /// first. Callers always bound `dur` (≤ `PARK`), so a lost wake or a
+    /// fallback build degrades to polling, never a hang.
+    pub fn futex_wait(word: *const u32, expected: u32, dur: Duration) {
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        unsafe {
+            let ts = Timespec {
+                tv_sec: dur.as_secs() as i64,
+                tv_nsec: dur.subsec_nanos() as i64,
+            };
+            // result intentionally ignored: EAGAIN (word changed),
+            // ETIMEDOUT and EINTR are all "go re-check the ring"
+            syscall(
+                SYS_FUTEX,
+                word,
+                FUTEX_WAIT,
+                expected as c_long,
+                &ts as *const Timespec,
+                0 as c_long,
+                0 as c_long,
+            );
+        }
+        #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+        {
+            let _ = (word, expected);
+            std::thread::sleep(dur.min(Duration::from_micros(200)));
+        }
+    }
+
+    pub fn futex_wake(word: *const u32) {
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        unsafe {
+            syscall(SYS_FUTEX, word, FUTEX_WAKE, i32::MAX as c_long, 0 as c_long);
+        }
+        #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+        {
+            let _ = word;
+        }
+    }
+
+    /// Best-effort liveness of another local process (`/proc` probe).
+    /// Non-Linux unix has no `/proc`; report alive and let the bounded
+    /// stall timeout make the call instead.
+    pub fn pid_alive(pid: u32) -> bool {
+        #[cfg(target_os = "linux")]
+        {
+            std::path::Path::new(&format!("/proc/{pid}")).exists()
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = pid;
+            true
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ring header + mapping
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// File-ring magic: "EDLSHM1\0" little-endian.
+#[cfg(unix)]
+const RING_MAGIC: u64 = 0x004d_4853_4c44_4531;
+#[cfg(unix)]
+const RING_VERSION: u32 = 1;
+#[cfg(unix)]
+const STATE_EMPTY: u32 = 0;
+#[cfg(unix)]
+const STATE_INIT: u32 = 1;
+#[cfg(unix)]
+const STATE_READY: u32 = 2;
+
+/// Ring header. `head` (+ the space futex word the producer waits on)
+/// and `tail` (+ the data futex word the consumer waits on) live on
+/// separate cachelines so the SPSC hot path never false-shares.
+#[cfg(unix)]
+#[repr(C)]
+struct Hdr {
+    magic: AtomicU64,
+    version: AtomicU32,
+    state: AtomicU32,
+    cap: AtomicU64,
+    producer_pid: AtomicU32,
+    consumer_pid: AtomicU32,
+    _pad0: [u8; 32],
+    /// consumer's monotonic byte position (sole writer: consumer)
+    head: AtomicU64,
+    /// bumped by the consumer after freeing space; producers park on it
+    space_seq: AtomicU32,
+    space_waiters: AtomicU32,
+    _pad1: [u8; 48],
+    /// producer's monotonic byte position (sole writer: producer)
+    tail: AtomicU64,
+    /// bumped by the producer after publishing bytes; consumers park on it
+    data_seq: AtomicU32,
+    data_waiters: AtomicU32,
+    _pad2: [u8; 48],
+}
+
+#[cfg(unix)]
+const HDR_SIZE: usize = 192;
+#[cfg(unix)]
+const _: () = assert!(std::mem::size_of::<Hdr>() == HDR_SIZE);
+
+/// One mapped ring file. Unmapped on drop; the fd is closed immediately
+/// after mapping (the mapping keeps the inode alive).
+#[cfg(unix)]
+struct RingMap {
+    ptr: *mut u8,
+    len: usize,
+    cap: usize,
+    mask: u64,
+    path: PathBuf,
+}
+
+// raw pointer into a MAP_SHARED file; every access goes through atomics
+// or SPSC-disciplined copies
+#[cfg(unix)]
+unsafe impl Send for RingMap {}
+
+#[cfg(unix)]
+impl Drop for RingMap {
+    fn drop(&mut self) {
+        unsafe { sys::unmap(self.ptr, self.len) };
+    }
+}
+
+#[cfg(unix)]
+impl RingMap {
+    fn hdr(&self) -> &Hdr {
+        unsafe { &*(self.ptr as *const Hdr) }
+    }
+
+    fn data(&self) -> *mut u8 {
+        unsafe { self.ptr.add(HDR_SIZE) }
+    }
+
+    /// Open-or-create the ring at `path`. The first toucher wins the
+    /// `state` CAS, sizes and stamps the header, and flips it READY;
+    /// the loser spins (bounded) until READY and verifies the layout.
+    /// Both orders work — a consumer may create the ring before its
+    /// producer has ever sent.
+    fn open(path: &Path, want_cap: usize) -> std::io::Result<RingMap> {
+        use std::os::unix::io::AsRawFd;
+        assert!(want_cap.is_power_of_two());
+        let file = std::fs::OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        let total = HDR_SIZE + want_cap;
+        // grow-only sizing: never shrink a ring another process mapped
+        if file.metadata()?.len() < total as u64 {
+            file.set_len(total as u64)?;
+        }
+        let ptr = unsafe { sys::map_shared(file.as_raw_fd(), total) }.ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::Other, "mmap of shm ring failed")
+        })?;
+        let map = RingMap {
+            ptr,
+            len: total,
+            cap: want_cap,
+            mask: (want_cap - 1) as u64,
+            path: path.into(),
+        };
+        let h = map.hdr();
+        match h.state.compare_exchange(
+            STATE_EMPTY,
+            STATE_INIT,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {
+                h.magic.store(RING_MAGIC, Ordering::Relaxed);
+                h.version.store(RING_VERSION, Ordering::Relaxed);
+                h.cap.store(want_cap as u64, Ordering::Relaxed);
+                h.state.store(STATE_READY, Ordering::Release);
+            }
+            Err(_) => {
+                let deadline = Instant::now() + Duration::from_secs(5);
+                while h.state.load(Ordering::Acquire) != STATE_READY {
+                    if Instant::now() >= deadline {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            format!("shm ring {} stuck initializing", path.display()),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+        if h.magic.load(Ordering::Acquire) != RING_MAGIC
+            || h.version.load(Ordering::Acquire) != RING_VERSION
+            || h.cap.load(Ordering::Acquire) != want_cap as u64
+        {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("shm ring {} has incompatible layout", path.display()),
+            ));
+        }
+        Ok(map)
+    }
+
+    /// Bytes available to read.
+    fn avail(&self) -> usize {
+        let h = self.hdr();
+        (h.tail.load(Ordering::Acquire) - h.head.load(Ordering::Relaxed)) as usize
+    }
+
+    /// Copy `src` into the stream at monotonic position `pos` (wraps).
+    unsafe fn copy_in(&self, pos: u64, src: &[u8]) {
+        let i = (pos & self.mask) as usize;
+        let first = src.len().min(self.cap - i);
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.data().add(i), first);
+        std::ptr::copy_nonoverlapping(src.as_ptr().add(first), self.data(), src.len() - first);
+    }
+
+    /// Copy `dst.len()` stream bytes at monotonic position `pos` out.
+    unsafe fn copy_out(&self, pos: u64, dst: &mut [u8]) {
+        let i = (pos & self.mask) as usize;
+        let first = dst.len().min(self.cap - i);
+        std::ptr::copy_nonoverlapping(self.data().add(i), dst.as_mut_ptr(), first);
+        std::ptr::copy_nonoverlapping(self.data(), dst.as_mut_ptr().add(first), dst.len() - first);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// producer / consumer link halves
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+struct OutLink {
+    map: RingMap,
+    last_live_check: Instant,
+}
+
+#[cfg(unix)]
+impl OutLink {
+    fn open(path: &Path, cap: usize) -> std::io::Result<OutLink> {
+        let map = RingMap::open(path, cap)?;
+        map.hdr().producer_pid.store(std::process::id(), Ordering::Release);
+        Ok(OutLink { map, last_live_check: Instant::now() })
+    }
+
+    /// Stream `src` into the ring in capacity-bounded chunks, parking on
+    /// the space futex while full. Uniform for every payload size: a
+    /// frame larger than the ring simply streams through it.
+    fn write_bytes(&mut self, mut src: &[u8], to: NodeId, deadline: Instant) -> Result<()> {
+        let h = self.map.hdr();
+        while !src.is_empty() {
+            let tail = h.tail.load(Ordering::Relaxed);
+            let head = h.head.load(Ordering::Acquire);
+            let space = self.map.cap - (tail - head) as usize;
+            if space == 0 {
+                let now = Instant::now();
+                if now >= deadline {
+                    // a consumer that stopped draining for the whole
+                    // stall window is as good as dead: surface an Io
+                    // error so allreduce unwinds it as PeerLost
+                    return Err(NetError::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!("shm ring to {to} stalled: consumer not draining"),
+                    )));
+                }
+                if now.duration_since(self.last_live_check) >= LIVENESS_EVERY {
+                    self.last_live_check = now;
+                    let pid = h.consumer_pid.load(Ordering::Acquire);
+                    // pid 0 = consumer not attached yet (rendezvous:
+                    // the ring itself is the buffer); a known-dead
+                    // consumer fails fast like a dropped in-proc peer
+                    if pid != 0 && !sys::pid_alive(pid) {
+                        return Err(NetError::UnknownPeer(to));
+                    }
+                }
+                self.wait_space(deadline);
+                continue;
+            }
+            let n = space.min(src.len());
+            unsafe { self.map.copy_in(tail, &src[..n]) };
+            h.tail.store(tail + n as u64, Ordering::Release);
+            h.data_seq.fetch_add(1, Ordering::Release);
+            if h.data_waiters.load(Ordering::Acquire) > 0 {
+                sys::futex_wake(&h.data_seq as *const AtomicU32 as *const u32);
+            }
+            src = &src[n..];
+        }
+        Ok(())
+    }
+
+    fn wait_space(&self, deadline: Instant) {
+        let h = self.map.hdr();
+        let seq = h.space_seq.load(Ordering::Acquire);
+        let full = |h: &Hdr| {
+            let tail = h.tail.load(Ordering::Relaxed);
+            let head = h.head.load(Ordering::Acquire);
+            (tail - head) as usize == self.map.cap
+        };
+        if !full(h) {
+            return;
+        }
+        h.space_waiters.fetch_add(1, Ordering::AcqRel);
+        if full(h) {
+            let dur = PARK.min(deadline.saturating_duration_since(Instant::now()));
+            if !dur.is_zero() {
+                sys::futex_wait(&h.space_seq as *const AtomicU32 as *const u32, seq, dur);
+            }
+        }
+        h.space_waiters.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Mid-frame read state, preserved across timeouts so a slow producer
+/// never poisons the stream: the next receive resumes exactly where the
+/// bytes stopped.
+#[cfg(unix)]
+enum Partial {
+    Head { got: usize, bytes: [u8; 8] },
+    Body { tag: u32, buf: Vec<u8>, need: usize },
+}
+
+#[cfg(unix)]
+struct InLink {
+    map: RingMap,
+    partial: Option<Partial>,
+}
+
+#[cfg(unix)]
+impl InLink {
+    fn open(path: &Path, cap: usize) -> std::io::Result<InLink> {
+        let map = RingMap::open(path, cap)?;
+        map.hdr().consumer_pid.store(std::process::id(), Ordering::Release);
+        Ok(InLink { map, partial: None })
+    }
+
+    /// Consume `n` stream bytes into `dst`, publishing the freed space.
+    fn consume(&self, dst: &mut [u8]) {
+        let h = self.map.hdr();
+        let head = h.head.load(Ordering::Relaxed);
+        unsafe { self.map.copy_out(head, dst) };
+        h.head.store(head + dst.len() as u64, Ordering::Release);
+        h.space_seq.fetch_add(1, Ordering::Release);
+        if h.space_waiters.load(Ordering::Acquire) > 0 {
+            sys::futex_wake(&h.space_seq as *const AtomicU32 as *const u32);
+        }
+    }
+
+    /// Read one complete frame, parking on the data futex while the ring
+    /// is empty. `deadline` in the past = non-blocking poll. On timeout
+    /// the partial state is kept for the next call.
+    fn read_frame(&mut self, pool: &mut BufPool, deadline: Instant) -> Result<(u32, Vec<u8>)> {
+        loop {
+            // complete any stage that needs no further bytes first, so a
+            // zero-length payload never waits on an empty ring
+            if let Some(Partial::Body { need: 0, .. }) = self.partial {
+                match self.partial.take() {
+                    Some(Partial::Body { tag, buf, .. }) => return Ok((tag, buf)),
+                    _ => unreachable!("matched Body above"),
+                }
+            }
+            let avail = self.map.avail();
+            if avail == 0 {
+                if Instant::now() >= deadline {
+                    return Err(NetError::Timeout { from: None, tag: None });
+                }
+                self.wait_data(deadline);
+                continue;
+            }
+            match self.partial.take() {
+                None => self.partial = Some(Partial::Head { got: 0, bytes: [0u8; 8] }),
+                Some(Partial::Head { mut got, mut bytes }) => {
+                    let n = avail.min(8 - got);
+                    self.consume(&mut bytes[got..got + n]);
+                    got += n;
+                    if got < 8 {
+                        self.partial = Some(Partial::Head { got, bytes });
+                        continue;
+                    }
+                    let len = u32::from_le_bytes(bytes[..4].try_into().expect("4-byte slice"))
+                        as usize;
+                    let tag = u32::from_le_bytes(bytes[4..8].try_into().expect("4-byte slice"));
+                    if len > crate::wire::MAX_FRAME {
+                        return Err(NetError::Io(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!(
+                                "shm ring {}: corrupt frame length {len}",
+                                self.map.path.display()
+                            ),
+                        )));
+                    }
+                    self.partial = Some(Partial::Body { tag, buf: pool.take(len), need: len });
+                }
+                Some(Partial::Body { tag, mut buf, need }) => {
+                    let n = avail.min(need);
+                    let old = buf.len();
+                    buf.resize(old + n, 0);
+                    self.consume(&mut buf[old..old + n]);
+                    self.partial = Some(Partial::Body { tag, buf, need: need - n });
+                }
+            }
+        }
+    }
+
+    fn wait_data(&self, deadline: Instant) {
+        let h = self.map.hdr();
+        let seq = h.data_seq.load(Ordering::Acquire);
+        if self.map.avail() > 0 {
+            return;
+        }
+        h.data_waiters.fetch_add(1, Ordering::AcqRel);
+        if self.map.avail() == 0 {
+            let dur = PARK.min(deadline.saturating_duration_since(Instant::now()));
+            if !dur.is_zero() {
+                sys::futex_wait(&h.data_seq as *const AtomicU32 as *const u32, seq, dur);
+            }
+        }
+        h.data_waiters.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShmNode
+// ---------------------------------------------------------------------------
+
+/// Shared-memory [`PointToPoint`] endpoint: one SPSC ring per directed
+/// link under a per-job namespace directory. SPSC discipline holds
+/// because `PointToPoint` takes `&mut self` — the owning thread is the
+/// sole consumer, so (unlike `TcpNode`) there are no reader threads and
+/// frames are pulled from the rings on demand into the same
+/// selective-receive [`PendingQueue`].
+#[cfg(unix)]
+pub struct ShmNode {
+    id: NodeId,
+    dir: PathBuf,
+    ring_cap: usize,
+    out: HashMap<NodeId, OutLink>,
+    inn: HashMap<NodeId, InLink>,
+    pending: PendingQueue,
+    pool: BufPool,
+    faults: FaultCell,
+}
+
+#[cfg(unix)]
+impl ShmNode {
+    /// Join namespace `ns` (created under [`shm_base_dir`]) as node `id`.
+    pub fn start(id: NodeId, ns: &str) -> Result<ShmNode> {
+        let cap = std::env::var("EDL_SHM_RING_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|v| v.max(64 * 1024).next_power_of_two())
+            .unwrap_or(DEFAULT_RING_CAP);
+        ShmNode::start_with(id, shm_base_dir().join(ns), cap)
+    }
+
+    /// Explicit directory + ring capacity (tests force tiny rings to
+    /// exercise wrap-around and large-payload streaming).
+    pub fn start_with(id: NodeId, dir: PathBuf, ring_cap: usize) -> Result<ShmNode> {
+        assert!(ring_cap.is_power_of_two(), "ring capacity must be a power of two");
+        std::fs::create_dir_all(&dir)?;
+        Ok(ShmNode {
+            id,
+            dir,
+            ring_cap,
+            out: HashMap::new(),
+            inn: HashMap::new(),
+            pending: PendingQueue::default(),
+            pool: BufPool::new(),
+            faults: FaultCell::new(),
+        })
+    }
+
+    fn link_path(&self, from: NodeId, to: NodeId) -> PathBuf {
+        self.dir.join(format!("link-{from}-{to}.ring"))
+    }
+
+    /// Install/remove the chaos-harness fault hook for frames this node
+    /// sends (zero-cost when off; verdicts match the TCP path exactly).
+    pub fn set_fault_hook(&self, hook: Option<Arc<dyn FaultHook>>) {
+        self.faults.arm(hook);
+    }
+
+    /// (hits, misses) of the node's buffer pool.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        self.pool.stats()
+    }
+
+    /// Pre-open the consumer half of the link from `peer`, so `recv_any`
+    /// can see its frames before the first selective receive targets it.
+    /// Either side may create the ring file; first toucher initialises.
+    pub fn ensure_link_from(&mut self, peer: NodeId) -> Result<()> {
+        if !self.inn.contains_key(&peer) {
+            let link = InLink::open(&self.link_path(peer, self.id), self.ring_cap)?;
+            self.inn.insert(peer, link);
+        }
+        Ok(())
+    }
+
+    fn out_link(&mut self, to: NodeId) -> Result<&mut OutLink> {
+        if !self.out.contains_key(&to) {
+            let link = OutLink::open(&self.link_path(self.id, to), self.ring_cap)?;
+            self.out.insert(to, link);
+        }
+        Ok(self.out.get_mut(&to).expect("inserted above"))
+    }
+
+    /// Write one `[len][tag][payload]` frame (streamed; any size).
+    fn write_frame(&mut self, to: NodeId, tag: u32, payload: &[u8]) -> Result<()> {
+        let deadline = Instant::now() + SEND_STALL;
+        let mut head = [0u8; 8];
+        head[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        head[4..8].copy_from_slice(&tag.to_le_bytes());
+        let link = self.out_link(to)?;
+        link.write_bytes(&head, to, deadline)?;
+        link.write_bytes(payload, to, deadline)
+    }
+
+    fn send_slice(&mut self, to: NodeId, tag: u32, payload: &[u8]) -> Result<()> {
+        if 8 + payload.len() > crate::wire::MAX_FRAME {
+            return Err(NetError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame too large: {} bytes", payload.len()),
+            )));
+        }
+        match self.faults.fate(self.id, to, tag) {
+            FrameFate::Deliver => {}
+            FrameFate::Drop => return Ok(()),
+            FrameFate::Duplicate => self.write_frame(to, tag, payload)?,
+            FrameFate::Delay(d) => std::thread::sleep(d),
+        }
+        self.write_frame(to, tag, payload)
+    }
+
+    /// Pull the next complete frame from `from`'s ring (pending-queue
+    /// misses only), respecting `deadline`.
+    fn pull_from(&mut self, from: NodeId, deadline: Instant) -> Result<(u32, Vec<u8>)> {
+        self.ensure_link_from(from)?;
+        let link = self.inn.get_mut(&from).expect("ensured above");
+        link.read_frame(&mut self.pool, deadline)
+    }
+}
+
+#[cfg(unix)]
+impl Drop for ShmNode {
+    fn drop(&mut self) {
+        // unlink every ring file this node touched (idempotent: the
+        // other side's unlink of the same file just ENOENTs) and try to
+        // remove the namespace dir once it empties
+        let to_ids: Vec<NodeId> = self.out.keys().copied().collect();
+        for to in to_ids {
+            let _ = std::fs::remove_file(self.link_path(self.id, to));
+        }
+        let from_ids: Vec<NodeId> = self.inn.keys().copied().collect();
+        for from in from_ids {
+            let _ = std::fs::remove_file(self.link_path(from, self.id));
+        }
+        let _ = std::fs::remove_dir(&self.dir);
+    }
+}
+
+#[cfg(unix)]
+impl PointToPoint for ShmNode {
+    fn id(&self) -> NodeId {
+        self.id
+    }
+
+    fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()> {
+        self.send_slice(to, tag, &payload)?;
+        self.pool.put(payload);
+        Ok(())
+    }
+
+    fn send_shared(&mut self, to: NodeId, tag: u32, payload: &Shared) -> Result<()> {
+        // no intermediate serialisation: bytes go straight from the
+        // shared buffer into the mapped ring
+        self.send_slice(to, tag, payload)
+    }
+
+    fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>> {
+        if let Some(b) = self.pending.pop_match(from, tag) {
+            return Ok(b.into_vec());
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.pull_from(from, deadline) {
+                Ok((ftag, payload)) if ftag == tag => return Ok(payload),
+                Ok((ftag, payload)) => {
+                    self.pending.push(Frame { from, tag: ftag, body: Body::Owned(payload) })
+                }
+                Err(NetError::Timeout { .. }) => {
+                    return Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn recv_into(
+        &mut self,
+        from: NodeId,
+        tag: u32,
+        dst: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<usize> {
+        let payload = self.recv_from(from, tag, timeout)?;
+        dst.clear();
+        dst.extend_from_slice(&payload);
+        self.pool.put(payload);
+        Ok(dst.len())
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Msg> {
+        if let Some(f) = self.pending.pop_any() {
+            return Ok(Msg { from: f.from, tag: f.tag, payload: f.body.into_vec() });
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            // poll every linked ring without blocking; with several
+            // producers there is no single futex word to park on
+            let peers: Vec<NodeId> = self.inn.keys().copied().collect();
+            for from in peers {
+                let link = self.inn.get_mut(&from).expect("key from iteration");
+                match link.read_frame(&mut self.pool, Instant::now()) {
+                    Ok((tag, payload)) => return Ok(Msg { from, tag, payload }),
+                    Err(NetError::Timeout { .. }) => {}
+                    Err(e) => return Err(e),
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(NetError::Timeout { from: None, tag: None });
+            }
+            std::thread::sleep(PARK.min(deadline - now));
+        }
+    }
+
+    fn take_buf(&mut self, cap: usize) -> Vec<u8> {
+        self.pool.take(cap)
+    }
+
+    fn recycle(&mut self, spent: Vec<u8>) {
+        self.pool.put(spent);
+    }
+}
+
+/// Non-unix stub: shm is never negotiated ([`machine_identity`] needs
+/// `/proc`/`/etc` or an env override, and [`MixedNode`] treats a failed
+/// `start` as "TCP only"), but the type must exist for cross-platform
+/// builds.
+#[cfg(not(unix))]
+pub struct ShmNode;
+
+#[cfg(not(unix))]
+impl ShmNode {
+    pub fn start(_id: NodeId, _ns: &str) -> Result<ShmNode> {
+        Err(NetError::Io(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "shm transport requires a unix platform",
+        )))
+    }
+
+    pub fn set_fault_hook(&self, _hook: Option<Arc<dyn FaultHook>>) {}
+
+    pub fn ensure_link_from(&mut self, _peer: NodeId) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(not(unix))]
+impl PointToPoint for ShmNode {
+    fn id(&self) -> NodeId {
+        0
+    }
+    fn send(&mut self, to: NodeId, _tag: u32, _payload: Vec<u8>) -> Result<()> {
+        Err(NetError::UnknownPeer(to))
+    }
+    fn recv_from(&mut self, from: NodeId, tag: u32, _timeout: Duration) -> Result<Vec<u8>> {
+        Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
+    }
+    fn recv_any(&mut self, _timeout: Duration) -> Result<Msg> {
+        Err(NetError::Timeout { from: None, tag: None })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MixedNode: per-peer shm/TCP routing
+// ---------------------------------------------------------------------------
+
+/// Slice of the receive timeout spent inside the TCP mailbox per probe
+/// round when shm links are also live (only `recv_any` needs to
+/// interleave — selective receives route to exactly one transport).
+const MIX_SLICE: Duration = Duration::from_millis(1);
+
+/// The negotiated per-link data plane: frames to a peer whose
+/// machine-identity digest equals ours ride the shm rings, everything
+/// else rides TCP. The routing decision is a pure function of the two
+/// digests (carried in `Peers`), so both ends of every link agree on the
+/// transport without any per-link handshake bytes.
+pub struct MixedNode {
+    tcp: TcpNode,
+    shm: Option<ShmNode>,
+    my_digest: u64,
+    peer_digests: Arc<Mutex<HashMap<NodeId, u64>>>,
+}
+
+impl MixedNode {
+    /// Start the TCP half immediately; attach the shm half only when
+    /// this process has a usable machine identity and namespace (any shm
+    /// setup failure degrades to TCP-only, never to an error).
+    pub fn start(
+        id: NodeId,
+        directory: Arc<Mutex<HashMap<NodeId, String>>>,
+        my_digest: u64,
+        shm_ns: &str,
+    ) -> Result<MixedNode> {
+        let tcp = TcpNode::start(id, directory)?;
+        let shm = if my_digest != 0 && !shm_ns.is_empty() {
+            ShmNode::start(id, shm_ns).ok()
+        } else {
+            None
+        };
+        Ok(MixedNode {
+            tcp,
+            shm,
+            my_digest,
+            peer_digests: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    /// The TCP listen address (what `Register` advertises).
+    pub fn addr(&self) -> &str {
+        &self.tcp.addr
+    }
+
+    /// Whether the shm half is live (namespace mapped, digest nonzero).
+    pub fn shm_active(&self) -> bool {
+        self.shm.is_some()
+    }
+
+    /// Handle to the digest directory, shared with whatever thread
+    /// applies `Peers` updates.
+    pub fn peer_digests(&self) -> Arc<Mutex<HashMap<NodeId, u64>>> {
+        self.peer_digests.clone()
+    }
+
+    /// Record `peer`'s machine digest (from a `Peers` frame). Same-
+    /// machine peers get their inbound ring linked eagerly so `recv_any`
+    /// sees them.
+    pub fn set_peer_digest(&mut self, peer: NodeId, digest: u64) {
+        if peer == self.tcp.id() {
+            return;
+        }
+        self.peer_digests.lock().unwrap().insert(peer, digest);
+        if digest != 0 && digest == self.my_digest {
+            if let Some(shm) = &mut self.shm {
+                let _ = shm.ensure_link_from(peer);
+            }
+        }
+    }
+
+    /// Install/remove the chaos fault hook on BOTH halves, so verdicts
+    /// are independent of which transport a link negotiated.
+    pub fn set_fault_hook(&self, hook: Option<Arc<dyn FaultHook>>) {
+        self.tcp.set_fault_hook(hook.clone());
+        if let Some(shm) = &self.shm {
+            shm.set_fault_hook(hook);
+        }
+    }
+
+    /// Pure routing predicate: shm iff both digests are nonzero and
+    /// equal. Both ends compute the same answer from the same `Peers`
+    /// data, so a link's frames always travel (and are awaited) on
+    /// exactly one transport.
+    fn routes_shm(&self, peer: NodeId) -> bool {
+        self.shm.is_some()
+            && self.my_digest != 0
+            && self.peer_digests.lock().unwrap().get(&peer) == Some(&self.my_digest)
+    }
+}
+
+impl PointToPoint for MixedNode {
+    fn id(&self) -> NodeId {
+        self.tcp.id()
+    }
+
+    fn send(&mut self, to: NodeId, tag: u32, payload: Vec<u8>) -> Result<()> {
+        if self.routes_shm(to) {
+            self.shm.as_mut().expect("routes_shm checked").send(to, tag, payload)
+        } else {
+            self.tcp.send(to, tag, payload)
+        }
+    }
+
+    fn send_shared(&mut self, to: NodeId, tag: u32, payload: &Shared) -> Result<()> {
+        if self.routes_shm(to) {
+            self.shm.as_mut().expect("routes_shm checked").send_shared(to, tag, payload)
+        } else {
+            self.tcp.send_shared(to, tag, payload)
+        }
+    }
+
+    fn recv_from(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Vec<u8>> {
+        if self.routes_shm(from) {
+            self.shm.as_mut().expect("routes_shm checked").recv_from(from, tag, timeout)
+        } else {
+            self.tcp.recv_from(from, tag, timeout)
+        }
+    }
+
+    fn recv_shared(&mut self, from: NodeId, tag: u32, timeout: Duration) -> Result<Shared> {
+        if self.routes_shm(from) {
+            self.shm.as_mut().expect("routes_shm checked").recv_shared(from, tag, timeout)
+        } else {
+            self.tcp.recv_shared(from, tag, timeout)
+        }
+    }
+
+    fn recv_into(
+        &mut self,
+        from: NodeId,
+        tag: u32,
+        dst: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<usize> {
+        if self.routes_shm(from) {
+            self.shm.as_mut().expect("routes_shm checked").recv_into(from, tag, dst, timeout)
+        } else {
+            self.tcp.recv_into(from, tag, dst, timeout)
+        }
+    }
+
+    fn recv_any(&mut self, timeout: Duration) -> Result<Msg> {
+        match &mut self.shm {
+            None => self.tcp.recv_any(timeout),
+            Some(shm) => {
+                // interleave short probes of both halves; selective
+                // receives never pay this — only recv_any must multiplex
+                let deadline = Instant::now() + timeout;
+                loop {
+                    match shm.recv_any(Duration::ZERO) {
+                        Ok(m) => return Ok(m),
+                        Err(NetError::Timeout { .. }) => {}
+                        Err(e) => return Err(e),
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(NetError::Timeout { from: None, tag: None });
+                    }
+                    match self.tcp.recv_any(MIX_SLICE.min(deadline - now)) {
+                        Ok(m) => return Ok(m),
+                        Err(NetError::Timeout { .. }) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    fn take_buf(&mut self, cap: usize) -> Vec<u8> {
+        match &mut self.shm {
+            Some(shm) => shm.take_buf(cap),
+            None => self.tcp.take_buf(cap),
+        }
+    }
+
+    fn recycle(&mut self, spent: Vec<u8>) {
+        match &mut self.shm {
+            Some(shm) => shm.recycle(spent),
+            None => self.tcp.recycle(spent),
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64 as StdAtomicU64, Ordering as StdOrdering};
+
+    const T: Duration = Duration::from_secs(5);
+
+    /// Fresh namespace dir per test (pid + counter), so parallel test
+    /// binaries and leftover runs can never cross-talk.
+    fn test_dir() -> PathBuf {
+        static SEQ: StdAtomicU64 = StdAtomicU64::new(0);
+        let n = SEQ.fetch_add(1, StdOrdering::Relaxed);
+        shm_base_dir().join(format!("edl-shmtest-{}-{n}", std::process::id()))
+    }
+
+    fn pair(cap: usize) -> (ShmNode, ShmNode) {
+        let dir = test_dir();
+        let a = ShmNode::start_with(1, dir.clone(), cap).unwrap();
+        let b = ShmNode::start_with(2, dir, cap).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn shm_roundtrip() {
+        let (mut a, mut b) = pair(64 * 1024);
+        a.send(2, 5, b"ping".to_vec()).unwrap();
+        assert_eq!(b.recv_from(1, 5, T).unwrap(), b"ping".to_vec());
+        b.send(1, 6, b"pong".to_vec()).unwrap();
+        assert_eq!(a.recv_from(2, 6, T).unwrap(), b"pong".to_vec());
+    }
+
+    #[test]
+    fn shm_selective_receive_buffers_others() {
+        let (mut a, mut b) = pair(64 * 1024);
+        a.send(2, 10, vec![10]).unwrap();
+        a.send(2, 20, vec![20]).unwrap();
+        assert_eq!(b.recv_from(1, 20, T).unwrap(), vec![20]);
+        assert_eq!(b.recv_from(1, 10, T).unwrap(), vec![10]);
+    }
+
+    #[test]
+    fn shm_zero_and_empty_payloads() {
+        let (mut a, mut b) = pair(64 * 1024);
+        a.send(2, 1, vec![]).unwrap();
+        a.send(2, 2, vec![9]).unwrap();
+        assert_eq!(b.recv_from(1, 1, T).unwrap(), Vec::<u8>::new());
+        assert_eq!(b.recv_from(1, 2, T).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn shm_timeout_on_silence() {
+        let (_a, mut b) = pair(64 * 1024);
+        let err = b.recv_from(1, 9, Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, NetError::Timeout { from: Some(1), tag: Some(9) }));
+    }
+
+    #[test]
+    fn shm_payload_larger_than_ring_streams_through() {
+        // 4 MiB payload through a 64 KiB ring: the frame must stream in
+        // capacity-bounded chunks while the consumer drains concurrently
+        let (a, b) = pair(64 * 1024);
+        let big: Vec<u8> = (0..(4 << 20)).map(|i| (i * 31 % 251) as u8).collect();
+        let want = big.clone();
+        let (mut a, mut b) = (a, b);
+        std::thread::scope(|s| {
+            s.spawn(move || a.send(2, 1, big).unwrap());
+            let got = b.recv_from(1, 1, Duration::from_secs(30)).unwrap();
+            assert_eq!(got.len(), want.len());
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn shm_wraparound_many_frames() {
+        // frames repeatedly wrap a tiny ring; framing must survive every
+        // split position
+        let (a, mut b) = pair(64 * 1024);
+        let mut a = a;
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for i in 0..500u32 {
+                    let len = 100 + (i as usize * 37) % 5000;
+                    a.send(2, i, vec![(i % 251) as u8; len]).unwrap();
+                }
+            });
+            for i in 0..500u32 {
+                let len = 100 + (i as usize * 37) % 5000;
+                assert_eq!(b.recv_from(1, i, T).unwrap(), vec![(i % 251) as u8; len]);
+            }
+        });
+    }
+
+    #[test]
+    fn shm_shared_send_and_recv_shared() {
+        let (mut a, mut b) = pair(64 * 1024);
+        let payload: Shared = Arc::new(vec![0xEE; 4096]);
+        a.send_shared(2, 9, &payload).unwrap();
+        let got = b.recv_shared(1, 9, T).unwrap();
+        assert_eq!(*got, *payload);
+    }
+
+    #[test]
+    fn shm_recv_into_reuses_capacity_and_pools() {
+        let (mut a, mut b) = pair(64 * 1024);
+        let mut dst = Vec::with_capacity(64);
+        for i in 0..10u8 {
+            a.send(2, 1, vec![i; 16]).unwrap();
+            let n = b.recv_into(1, 1, &mut dst, T).unwrap();
+            assert_eq!(n, 16);
+            assert_eq!(dst, vec![i; 16]);
+        }
+        // transported buffers were pooled: a take_buf now hits
+        let before = b.pool_stats().0;
+        let buf = b.take_buf(16);
+        assert!(buf.capacity() >= 16);
+        assert_eq!(b.pool_stats().0, before + 1, "pooled receive buffer reused");
+    }
+
+    #[test]
+    fn shm_recv_any_sees_all_linked_peers() {
+        let dir = test_dir();
+        let mut a = ShmNode::start_with(1, dir.clone(), 64 * 1024).unwrap();
+        let mut b = ShmNode::start_with(2, dir.clone(), 64 * 1024).unwrap();
+        let mut c = ShmNode::start_with(3, dir, 64 * 1024).unwrap();
+        a.send(3, 1, vec![1]).unwrap();
+        b.send(3, 2, vec![2]).unwrap();
+        c.ensure_link_from(1).unwrap();
+        c.ensure_link_from(2).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..2 {
+            let m = c.recv_any(T).unwrap();
+            seen.insert((m.from, m.tag, m.payload));
+        }
+        assert!(seen.contains(&(1, 1, vec![1])));
+        assert!(seen.contains(&(2, 2, vec![2])));
+    }
+
+    /// Fixed fate for every frame matching (from, to) — mirrors the
+    /// transport::tests hook so shm verdicts can be compared 1:1.
+    struct FixedFate(NodeId, NodeId, FrameFate);
+
+    impl FaultHook for FixedFate {
+        fn fate(&self, from: NodeId, to: NodeId, _tag: u32) -> FrameFate {
+            if from == self.0 && to == self.1 {
+                self.2
+            } else {
+                FrameFate::Deliver
+            }
+        }
+    }
+
+    #[test]
+    fn shm_fault_hook_drops_and_duplicates() {
+        let (mut a, mut b) = pair(64 * 1024);
+        a.set_fault_hook(Some(Arc::new(FixedFate(1, 2, FrameFate::Drop))));
+        a.send(2, 1, vec![1]).unwrap(); // lost
+        assert!(matches!(
+            b.recv_from(1, 1, Duration::from_millis(30)),
+            Err(NetError::Timeout { .. })
+        ));
+        a.set_fault_hook(Some(Arc::new(FixedFate(1, 2, FrameFate::Duplicate))));
+        a.send(2, 2, vec![2]).unwrap(); // delivered twice
+        assert_eq!(b.recv_from(1, 2, T).unwrap(), vec![2]);
+        assert_eq!(b.recv_from(1, 2, T).unwrap(), vec![2]);
+        a.set_fault_hook(None); // healed: exactly-once again
+        a.send(2, 3, vec![3]).unwrap();
+        assert_eq!(b.recv_from(1, 3, T).unwrap(), vec![3]);
+        assert!(matches!(
+            b.recv_from(1, 3, Duration::from_millis(30)),
+            Err(NetError::Timeout { .. })
+        ));
+    }
+
+    #[test]
+    fn shm_drop_unlinks_ring_files() {
+        let dir = test_dir();
+        {
+            let mut a = ShmNode::start_with(1, dir.clone(), 64 * 1024).unwrap();
+            let mut b = ShmNode::start_with(2, dir.clone(), 64 * 1024).unwrap();
+            a.send(2, 1, vec![1]).unwrap();
+            assert_eq!(b.recv_from(1, 1, T).unwrap(), vec![1]);
+            assert!(dir.join("link-1-2.ring").exists());
+        }
+        assert!(!dir.join("link-1-2.ring").exists(), "ring file leaked");
+        assert!(!dir.exists(), "namespace dir leaked");
+    }
+
+    #[test]
+    fn machine_identity_is_deterministic() {
+        // only READS the ambient identity (env-mutating variants would
+        // race the parallel test runner); determinism is the property
+        // the negotiation protocol actually depends on
+        let a = machine_identity();
+        let b = machine_identity();
+        assert_eq!(a, b, "machine identity must be deterministic within a process");
+    }
+
+    #[test]
+    fn mixed_node_routes_by_digest() {
+        // two MixedNodes sharing a digest route via shm; a third with a
+        // different digest stays on TCP — and both sides agree
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let ns = format!("edl-mixtest-{}-{}", std::process::id(), line!());
+        let mut a = MixedNode::start(1, dir.clone(), 7, &ns).unwrap();
+        let mut b = MixedNode::start(2, dir.clone(), 7, &ns).unwrap();
+        let mut c = MixedNode::start(3, dir.clone(), 99, &ns).unwrap();
+        for n in [&mut a, &mut b, &mut c] {
+            n.set_peer_digest(1, 7);
+            n.set_peer_digest(2, 7);
+            n.set_peer_digest(3, 99);
+        }
+        assert!(a.routes_shm(2) && b.routes_shm(1));
+        assert!(!a.routes_shm(3) && !c.routes_shm(1));
+        a.send(2, 5, vec![5]).unwrap();
+        assert_eq!(b.recv_from(1, 5, T).unwrap(), vec![5]);
+        a.send(3, 6, vec![6]).unwrap();
+        assert_eq!(c.recv_from(1, 6, T).unwrap(), vec![6]);
+        b.send(1, 7, vec![7]).unwrap();
+        c.send(1, 8, vec![8]).unwrap();
+        // recv_any multiplexes both halves
+        let mut tags = Vec::new();
+        for _ in 0..2 {
+            tags.push(a.recv_any(T).unwrap().tag);
+        }
+        tags.sort_unstable();
+        assert_eq!(tags, vec![7, 8]);
+    }
+
+    #[test]
+    fn mixed_node_digest_zero_is_tcp_only() {
+        let dir = Arc::new(Mutex::new(HashMap::new()));
+        let mut a = MixedNode::start(1, dir.clone(), 0, "never-created").unwrap();
+        let mut b = MixedNode::start(2, dir.clone(), 0, "never-created").unwrap();
+        assert!(!a.shm_active() && !b.shm_active());
+        a.set_peer_digest(2, 0);
+        b.set_peer_digest(1, 0);
+        a.send(2, 1, vec![1]).unwrap();
+        assert_eq!(b.recv_from(1, 1, T).unwrap(), vec![1]);
+    }
+}

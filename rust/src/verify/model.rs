@@ -352,10 +352,11 @@ fn hash_worker_event<H: Hasher>(ev: &WorkerEvent, h: &mut H) {
             machine.hash(h);
             joiner.hash(h);
         }
-        WorkerEvent::Register { id, machine } => {
+        WorkerEvent::Register { id, machine, machine_digest } => {
             h.write_u8(2);
             id.hash(h);
             machine.hash(h);
+            machine_digest.hash(h);
         }
         WorkerEvent::Ready { id } => {
             h.write_u8(3);
@@ -558,7 +559,7 @@ impl Checker {
             st,
             Event::Worker(WorkerEvent::Attach { id, machine: machine.clone(), joiner }),
         )?;
-        self.do_core(st, Event::Worker(WorkerEvent::Register { id, machine }))?;
+        self.do_core(st, Event::Worker(WorkerEvent::Register { id, machine, machine_digest: 0 }))?;
         st.wq.get_mut(&id).expect("queue exists").push_back(WorkerEvent::Ready { id });
         Ok(())
     }

@@ -388,7 +388,7 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
             return out;
         }
     };
-    for f in ["ring_tag", "bcast_tag", "abort_tag"] {
+    for f in ["ring_tag", "bcast_tag", "abort_tag", "hier_tag"] {
         if !defs.fns.contains_key(f) {
             diag(format!("tag function {f} not found in {}", allreduce.path));
             return out;
@@ -411,10 +411,14 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
         call("bcast_tag", &[("step", step), ("seq", seq)])
     };
     let at = |step: u64| -> Result<u64, String> { call("abort_tag", &[("step", step)]) };
+    let ht = |step: u64, phase: u64, seq: u64| -> Result<u64, String> {
+        call("hier_tag", &[("step", step), ("phase", phase), ("seq", seq)])
+    };
 
     // sample every combination; abort the lint on evaluator errors
     let mut ring_vals = Vec::new();
     let mut bcast_vals = Vec::new();
+    let mut hier_vals = Vec::new();
     for &s in STEP_SAMPLES {
         for &q in SEQ_SAMPLES {
             for p in [0u64, 1] {
@@ -422,6 +426,13 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
                     Ok(v) => ring_vals.push(v),
                     Err(e) => {
                         diag(format!("ring_tag({s},{p},{q}) failed to evaluate: {e}"));
+                        return out;
+                    }
+                }
+                match ht(s, p, q) {
+                    Ok(v) => hier_vals.push(v),
+                    Err(e) => {
+                        diag(format!("hier_tag({s},{p},{q}) failed to evaluate: {e}"));
                         return out;
                     }
                 }
@@ -453,19 +464,25 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
     let mut gen_mask = 0u64;
     let mut bseq_mask = 0u64;
     let mut bgen_mask = 0u64;
+    let mut hseq_mask = 0u64;
+    let mut hphase_mask = 0u64;
+    let mut hgen_mask = 0u64;
     for &s in STEP_SAMPLES {
         for &q in SEQ_SAMPLES {
             for p in [0u64, 1] {
                 seq_mask |= rt(s, p, q).unwrap_or(0) ^ rt(s, p, base.2).unwrap_or(0);
                 phase_mask |= rt(s, 0, q).unwrap_or(0) ^ rt(s, 1, q).unwrap_or(0);
                 gen_mask |= rt(s, p, q).unwrap_or(0) ^ rt(base.0, p, q).unwrap_or(0);
+                hseq_mask |= ht(s, p, q).unwrap_or(0) ^ ht(s, p, base.2).unwrap_or(0);
+                hphase_mask |= ht(s, 0, q).unwrap_or(0) ^ ht(s, 1, q).unwrap_or(0);
+                hgen_mask |= ht(s, p, q).unwrap_or(0) ^ ht(base.0, p, q).unwrap_or(0);
             }
             bseq_mask |= bt(s, q).unwrap_or(0) ^ bt(s, base.2).unwrap_or(0);
             bgen_mask |= bt(s, q).unwrap_or(0) ^ bt(base.0, q).unwrap_or(0);
         }
     }
 
-    // 1. field disjointness within ring_tag
+    // 1. field disjointness within ring_tag and hier_tag
     for (a, an, b, bn) in [
         (seq_mask, "seq", phase_mask, "phase"),
         (seq_mask, "seq", gen_mask, "generation"),
@@ -474,6 +491,19 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
         if a & b != 0 {
             diag(format!(
                 "ring_tag fields overlap: {an} and {bn} share bits {:#010x} — tags from \
+                 different {bn}s can alias",
+                a & b
+            ));
+        }
+    }
+    for (a, an, b, bn) in [
+        (hseq_mask, "seq", hphase_mask, "phase"),
+        (hseq_mask, "seq", hgen_mask, "generation"),
+        (hphase_mask, "phase", hgen_mask, "generation"),
+    ] {
+        if a & b != 0 {
+            diag(format!(
+                "hier_tag fields overlap: {an} and {bn} share bits {:#010x} — tags from \
                  different {bn}s can alias",
                 a & b
             ));
@@ -522,6 +552,7 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
         if let Some(v) = ring_vals
             .iter()
             .chain(bcast_vals.iter())
+            .chain(hier_vals.iter())
             .find(|v| **v & abort_family == abort_family)
         {
             diag(format!(
@@ -545,9 +576,39 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
     if let Some(v) = ring_vals
         .iter()
         .chain(bcast_vals.iter())
+        .chain(hier_vals.iter())
         .find(|v| abort_set.contains(v))
     {
         diag(format!("tag value {v:#010x} is produced by BOTH abort_tag and a data-plane tag"));
+    }
+
+    // 2c. hierarchical family (topology-aware allreduce): like abort, its
+    //     invariant bit PATTERN deliberately shares bit 31 with the bcast
+    //     family, so the property is full-pattern exclusivity (no other
+    //     tag presents every hier family bit) plus exact-value
+    //     disjointness — not bitwise disjointness.
+    let hier_family = hier_vals.iter().fold(u64::MAX, |a, v| a & v);
+    if hier_family == 0 {
+        diag("hier_tag has no invariant family bit — hier frames are not namespaced".into());
+    } else if let Some(v) = ring_vals
+        .iter()
+        .chain(bcast_vals.iter())
+        .chain(abort_vals.iter())
+        .find(|v| **v & hier_family == hier_family)
+    {
+        diag(format!(
+            "non-hierarchical tag {v:#010x} presents the full hier-family pattern \
+             {hier_family:#010x} — it could be mistaken for an intra-node reduce/broadcast frame"
+        ));
+    }
+    let hier_set: std::collections::HashSet<u64> = hier_vals.iter().copied().collect();
+    if let Some(v) = ring_vals
+        .iter()
+        .chain(bcast_vals.iter())
+        .chain(abort_vals.iter())
+        .find(|v| hier_set.contains(v))
+    {
+        diag(format!("tag value {v:#010x} is produced by BOTH hier_tag and another family"));
     }
 
     // 3. generation sensitivity: adjacent steps and ring-version bumps
@@ -579,6 +640,22 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
             break;
         }
     }
+    for s in 0..64u64 {
+        if ht(s, 0, 1) == ht(s + 1, 0, 1) {
+            diag(format!(
+                "hier_tag is insensitive to step {s} -> {} — late intra-node traffic from \
+                 the previous step aliases the current one",
+                s + 1
+            ));
+            break;
+        }
+    }
+    if ht(5, 0, 2) == ht(5, 1, 2) {
+        diag(
+            "hier_tag is insensitive to phase — intra-node reduce and broadcast traffic alias"
+                .into(),
+        );
+    }
 
     // 4. control-plane constants must live outside both data families
     match extract_defs(&transport.text) {
@@ -591,13 +668,16 @@ pub fn tag_layout(allreduce: &SourceFile, transport: &SourceFile) -> Vec<Diagnos
                         diag("transport tag::RPC == tag::KV — control channels alias".into());
                     }
                     for (name, c) in [("RPC", rpc), ("KV", kv)] {
-                        if ring_set.contains(&c) || bcast_vals.contains(&c) || abort_set.contains(&c)
+                        if ring_set.contains(&c)
+                            || bcast_vals.contains(&c)
+                            || abort_set.contains(&c)
+                            || hier_set.contains(&c)
                         {
                             diag(format!(
                                 "transport tag::{name} ({c:#x}) collides with a data-plane tag"
                             ));
                         }
-                        if c & (ring_family | bcast_family | abort_family) != 0 {
+                        if c & (ring_family | bcast_family | abort_family | hier_family) != 0 {
                             diag(format!(
                                 "transport tag::{name} ({c:#x}) sets a data-plane family bit"
                             ));
@@ -633,6 +713,10 @@ mod tests {
         }
         pub fn abort_tag(step: u64) -> u32 {
             FAMILY_ABORT | (gen_field(step) << 14)
+        }
+        const FAMILY_HIER: u32 = 0xA000_0000;
+        pub fn hier_tag(step: u64, phase: u32, seq: u32) -> u32 {
+            FAMILY_HIER | (gen_field(step) << 14) | (phase << 13) | (seq & 0x1FFF)
         }
     "#;
 
@@ -696,6 +780,49 @@ mod tests {
         assert!(
             diags.iter().any(|d| d.msg.contains("abort")),
             "expected an abort-family diagnostic, got {diags:#?}"
+        );
+    }
+
+    #[test]
+    fn hier_phase_folded_into_seq_is_caught() {
+        // the hier phase bit demoted inside the seq field: member→leader
+        // reduce frames would alias leader→member broadcast frames
+        let bad = GOOD.replace("(phase << 13) | (seq & 0x1FFF)", "(phase << 12) | (seq & 0x1FFF)");
+        let diags = tag_layout(
+            &sf("rust/src/allreduce/mod.rs", &bad),
+            &sf("rust/src/transport/mod.rs", TRANSPORT),
+        );
+        assert!(
+            diags.iter().any(|d| d.msg.contains("hier_tag fields overlap")),
+            "expected a hier overlap diagnostic, got {diags:#?}"
+        );
+    }
+
+    #[test]
+    fn hier_family_collapse_into_bcast_is_caught() {
+        // hier demoted to the bare bcast bit: every bcast tag then presents
+        // the full hier pattern
+        let bad = GOOD.replace("0xA000_0000", "0x8000_0000");
+        let diags = tag_layout(
+            &sf("rust/src/allreduce/mod.rs", &bad),
+            &sf("rust/src/transport/mod.rs", TRANSPORT),
+        );
+        assert!(
+            diags.iter().any(|d| d.msg.contains("hier")),
+            "expected a hier-family diagnostic, got {diags:#?}"
+        );
+    }
+
+    #[test]
+    fn missing_hier_tag_is_reported() {
+        let bad = GOOD.replace("fn hier_tag", "fn hier_tag_renamed");
+        let diags = tag_layout(
+            &sf("rust/src/allreduce/mod.rs", &bad),
+            &sf("rust/src/transport/mod.rs", TRANSPORT),
+        );
+        assert!(
+            diags.iter().any(|d| d.msg.contains("hier_tag not found")),
+            "expected a missing-fn diagnostic, got {diags:#?}"
         );
     }
 

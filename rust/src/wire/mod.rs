@@ -320,6 +320,54 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Write MANY length-prefixed frames as one vectored burst: every length
+/// prefix and payload goes into a single `write_vectored` call (resumed
+/// on partial writes), then one flush. With TCP_NODELAY each scalar
+/// [`write_frame`] costs a syscall and usually a segment; a scale
+/// operation fans Peers + Assign + SyncGo to every worker, and batching
+/// the burst collapses each worker's run to one write.
+pub fn write_frames<W: Write>(w: &mut W, payloads: &[Vec<u8>]) -> Result<()> {
+    if payloads.is_empty() {
+        return Ok(());
+    }
+    for p in payloads {
+        if p.len() > MAX_FRAME {
+            return Err(WireError::FrameTooLarge(p.len()));
+        }
+    }
+    let heads: Vec<[u8; 4]> = payloads.iter().map(|p| (p.len() as u32).to_le_bytes()).collect();
+    let mut parts: Vec<&[u8]> = Vec::with_capacity(payloads.len() * 2);
+    for (h, p) in heads.iter().zip(payloads) {
+        parts.push(&h[..]);
+        parts.push(&p[..]);
+    }
+    let total: usize = parts.iter().map(|s| s.len()).sum();
+    let mut done = 0usize;
+    while done < total {
+        // find the first unwritten byte, then hand the kernel everything
+        // from there in one vectored call; partial writes resume here
+        let mut skip = done;
+        let mut first = 0usize;
+        while skip >= parts[first].len() {
+            skip -= parts[first].len();
+            first += 1;
+        }
+        let mut iov: Vec<std::io::IoSlice<'_>> = Vec::with_capacity(parts.len() - first);
+        iov.push(std::io::IoSlice::new(&parts[first][skip..]));
+        iov.extend(parts[first + 1..].iter().map(|p| std::io::IoSlice::new(p)));
+        let n = w.write_vectored(&iov)?;
+        if n == 0 {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "write returned zero bytes",
+            )));
+        }
+        done += n;
+    }
+    w.flush()?;
+    Ok(())
+}
+
 /// Read one length-prefixed frame.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];
@@ -482,6 +530,38 @@ mod tests {
         let mut w = OneByte(Vec::new());
         write_all_vectored(&mut w, &[9], &[]).unwrap();
         assert_eq!(w.0, vec![9]);
+        // the multi-frame burst must resume through every offset too,
+        // including across empty payloads
+        let frames = vec![b"abc".to_vec(), Vec::new(), b"defgh".to_vec()];
+        let mut w = OneByte(Vec::new());
+        write_frames(&mut w, &frames).unwrap();
+        let mut cursor = std::io::Cursor::new(w.0);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut cursor).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn frame_burst_matches_scalar_framing() {
+        // batching is a transport optimisation: the bytes on the wire must
+        // be EXACTLY what N scalar write_frame calls would have produced
+        prop::check("frame_burst_matches_scalar_framing", 40, |rng| {
+            let n = rng.gen_range(6) as usize;
+            let frames: Vec<Vec<u8>> = (0..n)
+                .map(|_| {
+                    let len = rng.gen_range(100) as usize;
+                    (0..len).map(|_| rng.gen_range(256) as u8).collect()
+                })
+                .collect();
+            let mut burst = Vec::new();
+            write_frames(&mut burst, &frames).unwrap();
+            let mut scalar = Vec::new();
+            for f in &frames {
+                write_frame(&mut scalar, f).unwrap();
+            }
+            assert_eq!(burst, scalar);
+            Ok(())
+        });
     }
 
     #[test]

@@ -29,10 +29,11 @@ use crate::runtime::{xla, ModelMeta, Runtime};
 use crate::transport::{InProcEndpoint, NodeId, PointToPoint};
 use crate::util::rng::Pcg;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Thread-local training device. Created inside the worker thread by
@@ -284,6 +285,14 @@ pub struct WorkerCtx<N: PointToPoint = InProcEndpoint> {
     pub joiner: bool,
     /// parameter seed for founding workers (all founders must agree)
     pub init_seed: i32,
+    /// physical-machine identity hash (`transport::machine_identity`);
+    /// 0 = unknown (in-proc engine) — reported in Register and used to
+    /// decide when the hierarchical allreduce pays
+    pub machine_digest: u64,
+    /// machine digest of every known peer, fed by `FromLeader::Peers`
+    /// pushes (shared with the deploy shell's control bridge); empty in
+    /// the in-proc engine, which collapses to the flat ring
+    pub peer_digests: Arc<Mutex<HashMap<NodeId, u64>>>,
 }
 
 const NET_T: Duration = Duration::from_secs(30);
@@ -331,7 +340,11 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
     };
 
     // -- join protocol -------------------------------------------------------
-    send(WorkerEvent::Register { id: ctx.id, machine: ctx.machine.clone() });
+    send(WorkerEvent::Register {
+        id: ctx.id,
+        machine: ctx.machine.clone(),
+        machine_digest: ctx.machine_digest,
+    });
 
     // execution-context preparation (expensive; §4.2). For joiners this
     // overlaps with ongoing training — the heart of stop-free scaling.
@@ -513,8 +526,20 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
             'collective: loop {
                 let mut buf = std::mem::take(&mut grads);
                 buf.push(1.0); // weight slot
-                let res =
-                    allreduce::ring_allreduce(&mut ctx.net, &ring, go_tag, &mut buf, weight, NET_T);
+                // topology-aware: with machine digests known (multi-process
+                // deployment), same-machine workers reduce hierarchically
+                // over their shm links; with none (in-proc engine) this IS
+                // ring_allreduce, bit for bit
+                let digests = ctx.peer_digests.lock().expect("peer digest map").clone();
+                let res = allreduce::topo_allreduce(
+                    &mut ctx.net,
+                    &ring,
+                    &digests,
+                    go_tag,
+                    &mut buf,
+                    weight,
+                    NET_T,
+                );
                 match res {
                     Ok(()) => {
                         let wsum = buf.pop().unwrap();

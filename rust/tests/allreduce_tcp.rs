@@ -3,10 +3,10 @@
 //! runs over NCCL/TCP. Verifies numerics, elastic topology switches, and
 //! the rpc wire messages end-to-end across sockets.
 
-use edl::allreduce::{broadcast_recv, broadcast_send, ring_allreduce};
+use edl::allreduce::{broadcast_recv, broadcast_send, ring_allreduce, topo_allreduce};
 use edl::api::Request;
 use edl::rpc::{FromLeader, ToLeader, WireSwitch};
-use edl::transport::{PointToPoint, TcpNode};
+use edl::transport::{MixedNode, PointToPoint, TcpNode};
 use edl::util::rng::Pcg;
 use edl::wire::Envelope;
 use std::collections::HashMap;
@@ -167,6 +167,89 @@ fn tcp_ring_allreduce_multi_mb_tensor() {
     for j in [0usize, 1, 999, len - 1] {
         let expect: f32 = (0..3).map(|i| ((i * 31 + j % 1013) as f32) * 1e-3).sum();
         assert!((outs[0][j] - expect).abs() < 1e-4, "elt {j}: {} vs {expect}", outs[0][j]);
+    }
+}
+
+#[test]
+fn hierarchical_allreduce_over_mixed_transport_matches_flat() {
+    // two simulated machines — digest 0xA hosts nodes 0,1 and digest 0xB
+    // hosts nodes 2,3 — so the intra-machine links negotiate shm rings
+    // while the leaders ring stays on TCP. With weight 1.0 and dyadic
+    // inputs f32 addition is exact, so the hierarchical reduction must be
+    // BIT-identical to the flat TCP ring despite the different
+    // association order and transport mix.
+    let n = 4u32;
+    let len = 40_000;
+    let mut rng = Pcg::seeded(11);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..len).map(|_| (rng.gen_range(4001) as f32 - 2000.0) * 0.25).collect())
+        .collect();
+    let digests: HashMap<u32, u64> =
+        HashMap::from([(0u32, 0xAu64), (1, 0xA), (2, 0xB), (3, 0xB)]);
+    let ring: Vec<u32> = (0..n).collect();
+
+    // flat reference over plain TCP
+    let dir = Arc::new(Mutex::new(HashMap::new()));
+    let nodes: Vec<TcpNode> = (0..n).map(|i| TcpNode::start(i, dir.clone()).unwrap()).collect();
+    let flat: Vec<Vec<f32>> = std::thread::scope(|s| {
+        nodes
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut node)| {
+                let ring = ring.clone();
+                let mut buf = inputs[i].clone();
+                s.spawn(move || {
+                    ring_allreduce(&mut node, &ring, 3, &mut buf, 1.0, T).unwrap();
+                    buf
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+
+    // mixed data plane: both ends of every link hold the same digest pair
+    let dir2 = Arc::new(Mutex::new(HashMap::new()));
+    let ns = format!("edl-hier-it-{}", std::process::id());
+    let mixed: Vec<MixedNode> = (0..n)
+        .map(|i| {
+            let mut m = MixedNode::start(i, dir2.clone(), digests[&i], &ns).unwrap();
+            for p in 0..n {
+                if p != i {
+                    m.set_peer_digest(p, digests[&p]);
+                }
+            }
+            #[cfg(unix)]
+            assert!(m.shm_active(), "node {i}: shm half failed to start");
+            m
+        })
+        .collect();
+    let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+        mixed
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut node)| {
+                let ring = ring.clone();
+                let digests = digests.clone();
+                let mut buf = inputs[i].clone();
+                s.spawn(move || {
+                    topo_allreduce(&mut node, &ring, &digests, 3, &mut buf, 1.0, T).unwrap();
+                    buf
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (w, o) in outs.iter().enumerate() {
+        for (i, (a, b)) in o.iter().zip(&flat[0]).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "worker {w} elt {i}: hierarchical {a} != flat {b}"
+            );
+        }
     }
 }
 

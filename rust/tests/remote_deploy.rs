@@ -52,6 +52,29 @@ fn spawn_worker(leader: &str, machine: &str) -> Child {
         .expect("spawn edl worker")
 }
 
+/// Like [`spawn_worker`], but pins the worker's machine identity so the
+/// test controls which processes count as co-located (two workers with
+/// the same `host` negotiate the shm data plane between themselves).
+fn spawn_worker_on(leader: &str, machine: &str, host: &str) -> Child {
+    Command::new(bin())
+        .args([
+            "worker",
+            "--leader",
+            leader,
+            "--machine",
+            machine,
+            "--backend",
+            "sim",
+            "--compute-ms",
+            "5",
+        ])
+        .env("EDL_MACHINE_ID", host)
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn edl worker")
+}
+
 fn connect(ctl: &str) -> JobClient {
     retry_until(&format!("job-control endpoint {ctl}"), Duration::from_secs(30), || {
         JobClient::connect(ctl)
@@ -133,6 +156,78 @@ fn killing_a_worker_process_mid_step_reforms_and_training_continues() {
     });
     let st = job.status().unwrap();
     assert_eq!(st.workers.len(), 2, "{st:?}");
+
+    JobControl::stop(&mut job).expect("stop");
+    drop(job);
+    wait_until("serve process to exit after stop", Duration::from_secs(30), || {
+        match procs.0[0].try_wait().expect("try_wait serve") {
+            Some(status) => {
+                assert!(status.success(), "serve exited with {status}");
+                true
+            }
+            None => false,
+        }
+    });
+}
+
+/// DESIGN.md §9 end to end across REAL process boundaries: four worker
+/// processes on two simulated machines (EDL_MACHINE_ID boxA/boxB). The
+/// Hello/Welcome negotiation must surface two pairs of equal nonzero
+/// machine digests in `status`, the data plane runs the hierarchical
+/// allreduce (two groups of two — the grouping pays) with the
+/// intra-machine phases on shm rings, and a graceful scale-in reforms
+/// the mixed topology without stopping training.
+#[test]
+fn same_machine_worker_processes_negotiate_shm_and_train_hierarchically() {
+    let mut serve = Command::new(bin())
+        .args(["serve", "--remote", "--workers", "4", "--backend", "sim", "--compute-ms", "5"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn edl serve --remote");
+    let mut lines = BufReader::new(serve.stdout.take().unwrap()).lines();
+    let (mut worker_addr, mut ctl_addr) = (None, None);
+    while worker_addr.is_none() || ctl_addr.is_none() {
+        let line = lines
+            .next()
+            .expect("serve exited before printing its endpoints")
+            .expect("read serve stdout");
+        if let Some(a) = line.strip_prefix("worker-endpoint ") {
+            worker_addr = Some(a.trim().to_string());
+        } else if let Some(a) = line.strip_prefix("job-control ") {
+            ctl_addr = Some(a.trim().to_string());
+        }
+    }
+    let worker_addr = worker_addr.unwrap();
+    let ctl_addr = ctl_addr.unwrap();
+    std::thread::spawn(move || for _line in lines {});
+
+    let mut procs = Procs(vec![serve]);
+    for (m, host) in [("m1", "boxA"), ("m2", "boxA"), ("m3", "boxB"), ("m4", "boxB")] {
+        procs.0.push(spawn_worker_on(&worker_addr, m, host));
+    }
+    let mut job = connect(&ctl_addr);
+    wait_step(&mut job, 10, Duration::from_secs(60));
+
+    let st = job.status().unwrap();
+    assert_eq!(st.parallelism, 4, "{st:?}");
+    assert_eq!(st.worker_digests.len(), 4, "{st:?}");
+    assert!(st.worker_digests.iter().all(|&d| d != 0), "digest missing: {st:?}");
+    let mut counts = std::collections::HashMap::new();
+    for &d in &st.worker_digests {
+        *counts.entry(d).or_insert(0u32) += 1;
+    }
+    assert_eq!(counts.len(), 2, "want two machine groups: {st:?}");
+    assert!(counts.values().all(|&c| c == 2), "want two workers per machine: {st:?}");
+
+    // graceful scale-in: the reformed 3-worker ring still mixes one
+    // singleton machine with one shm pair, and training keeps advancing
+    let victim = *st.workers.last().unwrap();
+    job.scale_in(vec![victim]).expect("scale-in");
+    let st = job.status().unwrap();
+    assert_eq!(st.parallelism, 3, "{st:?}");
+    assert_eq!(st.worker_digests.len(), 3, "{st:?}");
+    wait_step(&mut job, st.step + 10, Duration::from_secs(60));
 
     JobControl::stop(&mut job).expect("stop");
     drop(job);
