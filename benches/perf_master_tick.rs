@@ -1,0 +1,354 @@
+//! Scheduler-throughput bench for the PR 9 datacenter master (§5–§6
+//! scale claims): a real `Master` engine with the sharded inventory,
+//! pipelined decision application and sim-slot jobs is loaded to a
+//! Philly-scale fleet (1,000 machines × 8 slots, 200+ live jobs), hit
+//! with a storm of concurrent submits, and measured on
+//!
+//!  * scheduler decisions/sec over a steady-state window,
+//!  * tick p50/p99 latency (the master's own ring-buffer timings),
+//!  * end-to-end submit→running latency across the storm,
+//!
+//! against an in-bench **unsharded baseline**: the pre-PR tick shape —
+//! one global lock, full-fleet sweep + sort per decision, serial apply —
+//! run over the same fleet sizes. Full mode asserts the master's tick
+//! p99 grows sub-linearly with fleet size relative to that baseline, and
+//! that the storm drains with zero lost or double-held slots (the
+//! engine's own per-shard `free + held == capacity` check, re-proven
+//! every tick, is reported over the wire as `conservation_ok`).
+//!
+//!  * `EDL_BENCH_SMOKE=1`    — tiny fleet for CI (no perf asserts)
+//!  * `EDL_BENCH_BASELINE=1` — also write `BENCH_master_tick.json`
+
+use edl::harness::testutil::poll_until;
+use edl::master::proto::{MasterClient, MasterStats, SubmitSpec};
+use edl::master::{MachineSpec, Master, MasterConfig};
+use edl::sched::Scheduler;
+use edl::schedulers::ElasticTiresias;
+use edl::util::json::{write_results, Json};
+use edl::util::stats;
+use std::time::{Duration, Instant};
+
+/// Fleet + load shape for one measured arm.
+struct Arm {
+    machines: usize,
+    gpus: u32,
+    rack_size: usize,
+    load_jobs: usize,
+    storm_jobs: usize,
+    measure_s: u64,
+}
+
+struct ArmResult {
+    st: MasterStats,
+    decisions_per_sec: f64,
+    submit_running_ms: Vec<f64>,
+}
+
+fn run_arm(a: &Arm) -> ArmResult {
+    let cfg = MasterConfig {
+        machines: (0..a.machines)
+            .map(|i| MachineSpec { name: format!("m{i}"), gpus: a.gpus })
+            .collect(),
+        tick_ms: 50,
+        lease_ttl_ms: 5_000,
+        listen: "127.0.0.1:0".into(),
+        kv_listen: "127.0.0.1:0".into(),
+        worker_bin: None,
+        rack_size: a.rack_size,
+        sim_slots: true,
+        headless_workers: false,
+        pipeline: true,
+        executors: 4,
+        pollers: 4,
+    };
+    let sched: Box<dyn Scheduler + Send> =
+        Box::new(ElasticTiresias::new(vec![500.0, 10_000.0], 10, 0.5));
+    let master = Master::start(cfg, sched).expect("start master");
+    let addr = master.addr.clone();
+    let mut mc = MasterClient::connect(&addr).expect("connect");
+
+    // -- load: long-running jobs that stay live through the window --------
+    for k in 0..a.load_jobs {
+        mc.submit(&SubmitSpec {
+            name: format!("load{k}"),
+            gpus: 1 + (k % 2) as u32,
+            steps: 1_000_000_000,
+            compute_ms: 2,
+            ..Default::default()
+        })
+        .expect("submit load");
+    }
+    let want = a.load_jobs as u64;
+    poll_until(Duration::from_secs(120), Duration::from_millis(200), || {
+        (mc.stats().ok()?.jobs_running >= want).then_some(())
+    })
+    .unwrap_or_else(|| {
+        panic!("load never reached running: {:?}", mc.stats());
+    });
+
+    // -- storm: concurrent submits, measuring submit→running end to end --
+    let threads = 10usize.min(a.storm_jobs.max(1));
+    let per = a.storm_jobs / threads;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut mc = MasterClient::connect(&addr).expect("storm client");
+                let mut lat = Vec::with_capacity(per);
+                for k in 0..per {
+                    let name = format!("storm{t}x{k}");
+                    let t0 = Instant::now();
+                    mc.submit(&SubmitSpec {
+                        name: name.clone(),
+                        gpus: 1,
+                        steps: 1_000_000_000,
+                        compute_ms: 2,
+                        ..Default::default()
+                    })
+                    .expect("submit storm");
+                    poll_until(Duration::from_secs(120), Duration::from_millis(50), || {
+                        let jobs = mc.jobs().ok()?;
+                        jobs.iter()
+                            .any(|j| j.name == name && j.phase == "running")
+                            .then_some(())
+                    })
+                    .unwrap_or_else(|| panic!("storm job {name} never reached running"));
+                    lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut submit_running_ms = Vec::new();
+    for h in handles {
+        submit_running_ms.extend(h.join().expect("storm thread"));
+    }
+
+    // -- steady-state window: decisions/sec + tick latency distribution --
+    let s0 = mc.stats().expect("stats");
+    std::thread::sleep(Duration::from_secs(a.measure_s));
+    let st = mc.stats().expect("stats");
+    let decisions_per_sec = (st.decisions - s0.decisions) as f64 / a.measure_s as f64;
+
+    assert!(st.conservation_ok, "inventory conservation violated: {st:?}");
+    for s in &st.shards {
+        assert_eq!(
+            s.free + s.held,
+            s.capacity,
+            "shard {} lost or double-held slots: {st:?}",
+            s.shard
+        );
+    }
+
+    mc.shutdown().expect("shutdown");
+    master.join();
+    ArmResult { st, decisions_per_sec, submit_running_ms }
+}
+
+/// The pre-PR tick, reproduced in-bench as the unsharded baseline: one
+/// global lock around the whole machine array, a full-fleet view sweep
+/// under that lock, and serial decision application that re-sorts the
+/// entire fleet per decision — the shape PR 9 replaced. Returns per-tick
+/// latencies in microseconds.
+fn unsharded_baseline_tick_us(
+    machines: usize,
+    gpus: u32,
+    jobs: usize,
+    ticks: usize,
+    decisions_per_tick: usize,
+) -> Vec<f64> {
+    let free = std::sync::Mutex::new(vec![gpus; machines]);
+    let mut held: Vec<(usize, u32)> = Vec::new();
+    let mut out = Vec::with_capacity(ticks);
+    for _ in 0..ticks {
+        let t0 = Instant::now();
+        let mut g = free.lock().unwrap();
+        // full view sweep under the global lock (what every pre-PR tick did)
+        let total_free: u32 = g.iter().sum();
+        let mut rows: Vec<(usize, u32)> = g.iter().copied().enumerate().collect();
+        let _jobs_scanned = (0..jobs).map(|j| j % machines).sum::<usize>();
+        for d in 0..decisions_per_tick {
+            // serial apply: greedy most-free placement, full sort per decision
+            rows.sort_by_key(|&(m, f)| (std::cmp::Reverse(f), m));
+            if d % 2 == 0 && total_free > 0 {
+                let (m, f) = rows[0];
+                if f > 0 {
+                    g[m] -= 1;
+                    rows[0].1 -= 1;
+                    held.push((m, 1));
+                }
+            } else if let Some((m, n)) = held.pop() {
+                g[m] += n;
+                if let Some(r) = rows.iter_mut().find(|r| r.0 == m) {
+                    r.1 += n;
+                }
+            }
+        }
+        drop(g);
+        out.push(t0.elapsed().as_micros() as f64);
+    }
+    out
+}
+
+fn arm_json(label: &str, machines: usize, slots: u32, r: &ArmResult) -> Json {
+    let mut o = Json::obj();
+    o.set("label", label)
+        .set("machines", machines)
+        .set("slots", slots as u64)
+        .set("shards", r.st.shards.len() as u64)
+        .set("jobs_total", r.st.jobs_total)
+        .set("jobs_running", r.st.jobs_running)
+        .set("ticks", r.st.ticks)
+        .set("tick_p50_us", r.st.tick_p50_us)
+        .set("tick_p99_us", r.st.tick_p99_us)
+        .set("tick_max_us", r.st.tick_max_us)
+        .set("decisions", r.st.decisions)
+        .set("decisions_per_sec", r.decisions_per_sec)
+        .set("submit_running_p50_ms", stats::median(&r.submit_running_ms))
+        .set("submit_running_p99_ms", stats::percentile(&r.submit_running_ms, 99.0))
+        .set("conservation_ok", r.st.conservation_ok);
+    o
+}
+
+fn main() {
+    let smoke = std::env::var("EDL_BENCH_SMOKE").is_ok();
+    let mut out = Json::obj();
+    out.set("smoke", smoke);
+
+    println!("== master tick throughput: sharded+pipelined engine at fleet scale ==");
+    let (arms, base_ticks, base_decisions): (Vec<Arm>, usize, usize) = if smoke {
+        (
+            vec![Arm {
+                machines: 40,
+                gpus: 4,
+                rack_size: 8,
+                load_jobs: 12,
+                storm_jobs: 10,
+                measure_s: 2,
+            }],
+            50,
+            8,
+        )
+    } else {
+        (
+            vec![
+                Arm {
+                    machines: 250,
+                    gpus: 8,
+                    rack_size: 32,
+                    load_jobs: 220,
+                    storm_jobs: 100,
+                    measure_s: 10,
+                },
+                Arm {
+                    machines: 1000,
+                    gpus: 8,
+                    rack_size: 32,
+                    load_jobs: 220,
+                    storm_jobs: 100,
+                    measure_s: 10,
+                },
+            ],
+            400,
+            64,
+        )
+    };
+
+    let mut rows = Json::Arr(vec![]);
+    let mut results = Vec::new();
+    println!(
+        "{:>9} {:>7} {:>7} {:>12} {:>12} {:>14} {:>16}",
+        "machines", "slots", "jobs", "tick p50 us", "tick p99 us", "decisions/s", "sub->run p99 ms"
+    );
+    for a in &arms {
+        let r = run_arm(a);
+        let slots = a.machines as u32 * a.gpus;
+        println!(
+            "{:>9} {:>7} {:>7} {:>12} {:>12} {:>14.1} {:>16.1}",
+            a.machines,
+            slots,
+            r.st.jobs_total,
+            r.st.tick_p50_us,
+            r.st.tick_p99_us,
+            r.decisions_per_sec,
+            stats::percentile(&r.submit_running_ms, 99.0),
+        );
+        rows.push(arm_json(&format!("master_{}x{}", a.machines, a.gpus), a.machines, slots, &r));
+        results.push(r);
+    }
+    out.set("rows", rows);
+
+    // -- in-bench unsharded baseline over the same fleet sizes ------------
+    println!("\n-- unsharded pre-PR baseline (in-bench, same fleets) --");
+    let mut base_rows = Json::Arr(vec![]);
+    let mut base_p99 = Vec::new();
+    for a in &arms {
+        let ts =
+            unsharded_baseline_tick_us(a.machines, a.gpus, a.load_jobs, base_ticks, base_decisions);
+        let (p50, p99) = (stats::median(&ts), stats::percentile(&ts, 99.0));
+        println!("{:>9} machines: tick p50 {p50:.1}us p99 {p99:.1}us", a.machines);
+        let mut o = Json::obj();
+        o.set("machines", a.machines).set("tick_p50_us", p50).set("tick_p99_us", p99);
+        base_rows.push(o);
+        base_p99.push(p99);
+    }
+    out.set("unsharded_baseline", base_rows);
+
+    // -- acceptance -------------------------------------------------------
+    for r in &results {
+        assert!(r.st.decisions > 0, "no scheduler decisions recorded");
+        assert!(r.decisions_per_sec >= 0.0);
+        assert!(!r.submit_running_ms.is_empty(), "storm measured nothing");
+    }
+    if !smoke {
+        // Philly scale actually reached: ≥1,000 machines / ≥8,000 slots,
+        // ≥200 concurrent jobs + a 100-submit storm, all running at once.
+        let big = &results[1];
+        assert!(big.st.jobs_running >= 320, "big fleet not at load: {:?}", big.st);
+        // sub-linear tick growth vs the unsharded baseline: growing the
+        // fleet 4x must cost the sharded engine a smaller p99 multiple
+        // than it costs the pre-PR tick shape
+        let master_growth =
+            results[1].st.tick_p99_us.max(1) as f64 / results[0].st.tick_p99_us.max(1) as f64;
+        let base_growth = base_p99[1].max(1.0) / base_p99[0].max(1.0);
+        println!(
+            "\ntick p99 growth 250->1000 machines: sharded {master_growth:.2}x \
+             vs unsharded baseline {base_growth:.2}x"
+        );
+        assert!(
+            master_growth < base_growth,
+            "sharded tick p99 must grow sub-linearly vs the unsharded baseline \
+             (sharded {master_growth:.2}x vs baseline {base_growth:.2}x)"
+        );
+        let mut acc = Json::obj();
+        acc.set("master_p99_growth", master_growth).set("baseline_p99_growth", base_growth);
+        out.set("acceptance_observed", acc);
+    }
+
+    let path = write_results("perf_master_tick", &out).unwrap();
+    println!("\nresults -> {}", path.display());
+    if std::env::var("EDL_BENCH_BASELINE").is_ok() {
+        let mut acceptance = Json::obj();
+        acceptance
+            .set("min_machines", 1000u64)
+            .set("min_slots", 8000u64)
+            .set("min_concurrent_jobs", 200u64)
+            .set("storm_submits", 100u64)
+            .set("conservation_ok", true)
+            .set("tick_p99_growth_must_beat_unsharded_baseline", true);
+        let mut baseline = Json::obj();
+        baseline
+            .set(
+                "_comment",
+                "Master tick-throughput baseline for benches/perf_master_tick.rs. \
+                 Numbers are machine-dependent; regenerate with: EDL_BENCH_BASELINE=1 \
+                 cargo bench --bench perf_master_tick (the bench overwrites this file \
+                 in the current directory).",
+            )
+            .set("generated", true)
+            .set("acceptance", acceptance)
+            .set("results", out.clone());
+        std::fs::write("BENCH_master_tick.json", baseline.to_string_pretty()).unwrap();
+        println!("baseline -> BENCH_master_tick.json");
+    }
+}

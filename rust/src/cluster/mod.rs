@@ -589,6 +589,23 @@ impl ClusterSim {
         self.run_with(|sim| sched.replan(sim), max_t)
     }
 
+    /// [`ClusterSim::run`], but every replan reads through a
+    /// [`SnapshotCtl`](crate::sched::SnapshotCtl) — the same view
+    /// assembly the sharded live master uses. Since accepted decisions
+    /// refresh their own job's row eagerly, a policy observes exactly
+    /// what it would observe against the engine directly, so the
+    /// decision log must come out byte-identical (the golden test in
+    /// `rust/tests/sched_policies.rs` holds both engines to that).
+    pub fn run_snapshot(&mut self, sched: &mut dyn Scheduler, max_t: f64) {
+        self.run_with(
+            |sim| {
+                let mut ctl = crate::sched::SnapshotCtl::new(sim);
+                sched.replan(&mut ctl);
+            },
+            max_t,
+        )
+    }
+
     /// The event loop with an arbitrary replan callback — what `run` uses
     /// and what decision-log replay / oracle tests drive directly.
     pub fn run_with<F: FnMut(&mut ClusterSim)>(&mut self, mut replan: F, max_t: f64) {

@@ -597,6 +597,7 @@ impl ElasticTrainer {
                     // the flat ring (digest 0) is both correct and fastest
                     machine_digest: 0,
                     peer_digests: Arc::new(Mutex::new(std::collections::HashMap::new())),
+                    headless: false,
                 };
                 let handle = std::thread::Builder::new()
                     .name(format!("edl-worker-{id}"))

@@ -39,7 +39,9 @@ use crate::coordinator::{
 };
 use crate::data::corpus::Corpus;
 use crate::rpc::{FromLeader, ToLeader};
-use crate::transport::{machine_identity, tag, FaultCell, FaultHook, FrameFate, MixedNode, NodeId};
+use crate::transport::{
+    machine_identity, tag, FaultCell, FaultHook, FrameFate, MixedNode, NodeId, NullNode,
+};
 use crate::util::now_ms;
 use crate::wire;
 use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
@@ -671,6 +673,10 @@ pub struct WorkerParams {
     /// must match the leader's [`config_digest`] or the handshake is
     /// refused (prevents silently training on mismatched data)
     pub config_digest: u64,
+    /// run without a data plane: sends are blackholed, collectives skipped.
+    /// Valid only when every worker of the job is headless (master
+    /// `--headless-workers`); lets one box host hundreds of live jobs.
+    pub headless: bool,
 }
 
 /// Run one worker process: handshake with the leader endpoint, stand up a
@@ -715,13 +721,25 @@ pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
     // to everyone else. A digest of 0 (EDL_SHM=0, or no stable identity)
     // degrades every link to TCP.
     let directory: Arc<Mutex<HashMap<NodeId, String>>> = Arc::new(Mutex::new(HashMap::new()));
-    let net = MixedNode::start(id, directory.clone(), my_digest, &shm_ns)
-        .map_err(|e| anyhow::anyhow!("data-plane bind failed: {e}"))?;
-    let data_addr = net.addr().to_string();
-    let peer_digests = net.peer_digests();
+    // Headless workers bind no data plane at all: a NullNode blackholes
+    // sends and times receives out instantly, and the registered address
+    // is a placeholder no peer will ever dial (valid only when the whole
+    // job is headless). `eff_digest` is 0 there — no shm negotiation.
+    let (net, data_addr, eff_digest) = if p.headless {
+        (None, format!("headless/{id}"), 0)
+    } else {
+        let n = MixedNode::start(id, directory.clone(), my_digest, &shm_ns)
+            .map_err(|e| anyhow::anyhow!("data-plane bind failed: {e}"))?;
+        let addr = n.addr().to_string();
+        (Some(n), addr, my_digest)
+    };
+    let peer_digests = match &net {
+        Some(n) => n.peer_digests(),
+        None => Arc::new(Mutex::new(HashMap::new())),
+    };
     // the grouping map must cover the whole ring, self included (the rx
     // bridge below only learns about OTHER peers)
-    peer_digests.lock().unwrap_or_else(|e| e.into_inner()).insert(id, my_digest);
+    peer_digests.lock().unwrap_or_else(|e| e.into_inner()).insert(id, eff_digest);
 
     // -- control bridges ----------------------------------------------------
     let (ev_tx, ev_rx) = channel::<WorkerEvent>();
@@ -775,22 +793,46 @@ pub fn run_worker(p: WorkerParams) -> anyhow::Result<()> {
     }
 
     // -- the one true training loop ----------------------------------------
-    let ctx = WorkerCtx {
-        id,
-        machine: p.machine,
-        backend: p.backend,
-        corpus: p.corpus,
-        net,
-        to_leader: ev_tx,
-        ctrl: ctrl_rx,
-        lr: p.lr,
-        knobs: WorkerKnobs::new(),
-        joiner,
-        init_seed: 42,
-        machine_digest: my_digest,
-        peer_digests,
-    };
-    worker_loop(ctx);
+    match net {
+        Some(n) => {
+            let ctx = WorkerCtx {
+                id,
+                machine: p.machine,
+                backend: p.backend,
+                corpus: p.corpus,
+                net: n,
+                to_leader: ev_tx,
+                ctrl: ctrl_rx,
+                lr: p.lr,
+                knobs: WorkerKnobs::new(),
+                joiner,
+                init_seed: 42,
+                machine_digest: eff_digest,
+                peer_digests,
+                headless: false,
+            };
+            worker_loop(ctx);
+        }
+        None => {
+            let ctx = WorkerCtx {
+                id,
+                machine: p.machine,
+                backend: p.backend,
+                corpus: p.corpus,
+                net: NullNode::new(id),
+                to_leader: ev_tx,
+                ctrl: ctrl_rx,
+                lr: p.lr,
+                knobs: WorkerKnobs::new(),
+                joiner,
+                init_seed: 42,
+                machine_digest: 0,
+                peer_digests,
+                headless: true,
+            };
+            worker_loop(ctx);
+        }
+    }
     // ctx (and its event sender) is gone; the tx bridge drains the last
     // frames (Goodbye) and exits — join it so they reach the leader
     let _ = writer_bridge.join();

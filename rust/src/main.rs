@@ -59,12 +59,16 @@ fn main() -> anyhow::Result<()> {
                  \n  serve       (train flags; prints the job-control address, serves until the job stops)\n\
                  \n              --remote: workers are separate `edl worker` processes;\n\
                  \n              --listen h:p (worker endpoint) --ctl h:p (job-control endpoint)\n\
-                 \n  worker      --leader <addr> --machine m1 [--backend sim]\n\
+                 \n  worker      --leader <addr> --machine m1 [--backend sim] [--headless]\n\
                  \n  ctl <addr>|--job <name> --kv <addr> <status|scale-out|scale-in|migrate|profile|checkpoint|restore|stop>\n\
                  \n              --machines m1,m1 --workers 3,4|last --path ckpt.bin --min-p 1 [--json]\n\
                  \n  master      --machines N --gpus G --scheduler elastic-tiresias|tiresias|fifo\n\
                  \n              --listen h:p --kv-listen h:p --tick-ms 250 (daemon; sim-backend jobs)\n\
+                 \n              --rack-size 32 (inventory shard width) --sim-slots (no worker procs)\n\
+                 \n              --headless-workers (workers without a data plane) --serial\n\
+                 \n              --executors 4 --pollers 4 (decision/status thread pools)\n\
                  \n  master jobs     --master <addr> [--json]   (list jobs on a running master)\n\
+                 \n  master stats    --master <addr> [--json]   (tick latency, decision + shard stats)\n\
                  \n  master shutdown --master <addr>\n\
                  \n  submit      --master <addr> --name j1 --gpus N --steps N [--model ResNet50]\n\
                  \n              [--inelastic] [--params 512] [--compute-ms 5]\n\
@@ -245,6 +249,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         corpus,
         lr: args.f64("lr", 0.05) as f32,
         config_digest: digest,
+        headless: args.bool("headless", false),
     })
 }
 
@@ -433,6 +438,55 @@ fn cmd_master(args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        Some("stats") => {
+            let addr = args.str("master", "127.0.0.1:7500");
+            let st = MasterClient::connect(&addr)?.stats()?;
+            if args.bool("json", false) {
+                let mut o = Json::obj();
+                o.set("ticks", st.ticks)
+                    .set("tick_p50_us", st.tick_p50_us)
+                    .set("tick_p99_us", st.tick_p99_us)
+                    .set("tick_max_us", st.tick_max_us)
+                    .set("decisions", st.decisions)
+                    .set("starts", st.starts)
+                    .set("grows", st.grows)
+                    .set("shrinks", st.shrinks)
+                    .set("stops", st.stops)
+                    .set("jobs_total", st.jobs_total)
+                    .set("jobs_running", st.jobs_running)
+                    .set("conservation_ok", st.conservation_ok)
+                    .set("shards", st.shards.len() as u64);
+                println!("{}", o.to_string_pretty());
+            } else {
+                println!(
+                    "ticks={} tick_p50={}us tick_p99={}us decisions={} \
+                     (start {} / grow {} / shrink {} / stop {}) jobs {}/{} running \
+                     conservation_ok={}",
+                    st.ticks,
+                    st.tick_p50_us,
+                    st.tick_p99_us,
+                    st.decisions,
+                    st.starts,
+                    st.grows,
+                    st.shrinks,
+                    st.stops,
+                    st.jobs_running,
+                    st.jobs_total,
+                    st.conservation_ok
+                );
+                println!(
+                    "{:<6} {:>8} {:>8} {:>8} {:>8}",
+                    "shard", "machines", "cap", "free", "held"
+                );
+                for s in &st.shards {
+                    println!(
+                        "{:<6} {:>8} {:>8} {:>8} {:>8}",
+                        s.shard, s.machines, s.capacity, s.free, s.held
+                    );
+                }
+            }
+            Ok(())
+        }
         Some("shutdown") => {
             let addr = args.str("master", "127.0.0.1:7500");
             MasterClient::connect(&addr)?.shutdown()?;
@@ -461,6 +515,12 @@ fn cmd_master(args: &Args) -> anyhow::Result<()> {
                 listen: args.str("listen", "127.0.0.1:0"),
                 kv_listen: args.str("kv-listen", "127.0.0.1:0"),
                 worker_bin: None,
+                rack_size: args.usize("rack-size", 32),
+                sim_slots: args.bool("sim-slots", false),
+                headless_workers: args.bool("headless-workers", false),
+                pipeline: !args.bool("serial", false),
+                executors: args.usize("executors", 4),
+                pollers: args.usize("pollers", 4),
             };
             let master = Master::start(cfg, sched)?;
             println!("master-control {}", master.addr);

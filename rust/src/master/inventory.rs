@@ -1,0 +1,472 @@
+//! Sharded machine×GPU-slot inventory for the live master.
+//!
+//! The PR 4 master kept one `free: Vec<u32>` owned by the shell thread, so
+//! every allocate/release — and every policy tick — serialised on the shell.
+//! At Philly scale (thousands of machines, hundreds of concurrent ops) that
+//! single structure becomes the bottleneck the paper's §5 warns about.
+//!
+//! [`ShardedInventory`] splits the fleet into per-rack shards, each owning
+//! its slice of the machine×slot maps behind its own mutex. The rules:
+//!
+//! - **At most one shard lock is ever held at a time.** Every touch goes
+//!   through [`ShardedInventory::with_shard`], the single acquisition site;
+//!   multi-shard operations (allocate, release, conservation checks) walk
+//!   shards sequentially. No lock-order edges can exist, so the `edl verify`
+//!   lock lint stays trivially clean and deadlock is impossible by
+//!   construction.
+//! - **Reads are lock-free.** Each shard mirrors its free-slot total in an
+//!   atomic; [`ShardedInventory::free_gpus`] sums the mirrors without
+//!   touching any mutex, which is what lets a policy tick assemble its
+//!   `ClusterView` snapshot without stopping the world.
+//! - **Placement is deterministic.** `allocate` computes the same
+//!   most-free-first greedy order the unsharded master used (global sort by
+//!   descending free count, index-stable tie-break), so a single-threaded
+//!   caller gets byte-identical placements regardless of shard count — the
+//!   golden decision-log tests depend on this.
+//! - **Conservation is checkable per shard.** `free + held == capacity`
+//!   must hold for every machine at all times; [`ShardedInventory::check_conservation`]
+//!   verifies it shard by shard and the master asserts it every tick.
+
+use super::MachineSpec;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One rack's slice of the inventory. `free`/`held`/`cap` are indexed by
+/// *local* machine index; `base` maps local index 0 back to the fleet-wide
+/// machine index.
+pub(crate) struct ShardState {
+    pub free: Vec<u32>,
+    pub held: Vec<u32>,
+    pub cap: Vec<u32>,
+}
+
+struct Shard {
+    /// fleet-wide index of this shard's first machine
+    base: usize,
+    state: Mutex<ShardState>,
+    /// lock-free mirror of `state.free.iter().sum()`; advisory (readers may
+    /// observe a value mid-update), authoritative state lives under the lock
+    free_total: AtomicU64,
+}
+
+/// Aggregate counters for one shard, as reported by `edl master` stats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRow {
+    pub shard: usize,
+    pub machines: usize,
+    pub capacity: u32,
+    pub free: u32,
+    pub held: u32,
+}
+
+/// The fleet: machine names plus per-rack shards of slot state. Shared by
+/// the master shell, its decision executors, and its status pollers.
+pub struct ShardedInventory {
+    names: Vec<String>,
+    by_name: HashMap<String, usize>,
+    caps: Vec<u32>,
+    rack_size: usize,
+    total: u32,
+    shards: Vec<Shard>,
+}
+
+impl ShardedInventory {
+    /// Build from machine specs, `rack_size` machines per shard (the last
+    /// shard may be short). `rack_size == usize::MAX` (or >= fleet size)
+    /// yields one shard — the "unsharded" baseline configuration.
+    pub fn new(machines: &[MachineSpec], rack_size: usize) -> ShardedInventory {
+        assert!(!machines.is_empty(), "inventory needs at least one machine");
+        let rack_size = rack_size.clamp(1, machines.len());
+        let names: Vec<String> = machines.iter().map(|m| m.name.clone()).collect();
+        let by_name = names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        let caps: Vec<u32> = machines.iter().map(|m| m.gpus).collect();
+        let total = caps.iter().sum();
+        let shards = caps
+            .chunks(rack_size)
+            .enumerate()
+            .map(|(i, chunk)| Shard {
+                base: i * rack_size,
+                free_total: AtomicU64::new(chunk.iter().map(|&c| u64::from(c)).sum()),
+                state: Mutex::new(ShardState {
+                    free: chunk.to_vec(),
+                    held: vec![0; chunk.len()],
+                    cap: chunk.to_vec(),
+                }),
+            })
+            .collect();
+        ShardedInventory { names, by_name, caps, rack_size, total, shards }
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.total
+    }
+
+    pub fn machine_name(&self, m: usize) -> &str {
+        &self.names[m]
+    }
+
+    pub fn machine_ix(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn capacity(&self, m: usize) -> u32 {
+        self.caps[m]
+    }
+
+    fn shard_of(&self, m: usize) -> usize {
+        m / self.rack_size
+    }
+
+    /// The single shard-lock acquisition site. `f` must not acquire any
+    /// other lock (enforced by the repo lock-order lint: nothing is ever
+    /// held when a shard lock is taken, and nothing is taken under one).
+    fn with_shard<R>(&self, s: usize, f: impl FnOnce(&mut ShardState, &AtomicU64) -> R) -> R {
+        let shard = &self.shards[s];
+        let mut st = shard.state.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut st, &shard.free_total)
+    }
+
+    /// Fleet-wide free slots, summed from the per-shard atomic mirrors.
+    /// Never blocks on a shard lock; concurrent writers make the value
+    /// advisory, but it is exact whenever no operation is in flight.
+    pub fn free_gpus(&self) -> u32 {
+        let sum: u64 = self.shards.iter().map(|s| s.free_total.load(Ordering::Acquire)).sum();
+        sum.min(u64::from(u32::MAX)) as u32
+    }
+
+    /// Copy of the per-machine free counts, read one shard at a time.
+    fn snapshot_free(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.names.len());
+        for s in 0..self.shards.len() {
+            self.with_shard(s, |st, _| out.extend_from_slice(&st.free));
+        }
+        out
+    }
+
+    /// Reserve `p` slots, most-free-machines-first (descending free count,
+    /// machine index breaking ties — the exact order the unsharded master
+    /// used). Returns `(machine, gpus)` pairs or `None` if the fleet cannot
+    /// hold `p` slots. Under concurrent allocators a planned take may be
+    /// gone by commit time; the remainder is replanned from a fresh
+    /// snapshot, and on final failure every partial reservation is rolled
+    /// back — `allocate` is all-or-nothing.
+    pub fn allocate(&self, p: u32) -> Option<Vec<(usize, u32)>> {
+        if p == 0 || p > self.free_gpus() {
+            return None;
+        }
+        let mut got: Vec<(usize, u32)> = Vec::new();
+        let mut need = p;
+        // one pass per shard count + slack: each retry only happens because
+        // a *concurrent* taker won a race, so a couple of replans settle it
+        for _attempt in 0..4 {
+            let free = self.snapshot_free();
+            let mut order: Vec<usize> = (0..free.len()).collect();
+            order.sort_by_key(|&m| std::cmp::Reverse(free[m]));
+            // plan against the snapshot, skipping machines this job already
+            // reserved from during an earlier attempt (one entry per machine
+            // keeps release bookkeeping simple)
+            let mut plan: Vec<(usize, u32)> = Vec::new();
+            let mut planned = 0u32;
+            for &m in &order {
+                if planned == need {
+                    break;
+                }
+                if free[m] == 0 || got.iter().any(|&(gm, _)| gm == m) {
+                    continue;
+                }
+                let take = free[m].min(need - planned);
+                plan.push((m, take));
+                planned += take;
+            }
+            // commit shard by shard, taking what is still actually free
+            plan.sort_by_key(|&(m, _)| m);
+            for &(m, want) in &plan {
+                let s = self.shard_of(m);
+                let local = m - self.shards[s].base;
+                let taken = self.with_shard(s, |st, free_total| {
+                    let take = st.free[local].min(want);
+                    if take > 0 {
+                        st.free[local] -= take;
+                        st.held[local] += take;
+                        free_total.fetch_sub(u64::from(take), Ordering::AcqRel);
+                    }
+                    take
+                });
+                if taken > 0 {
+                    got.push((m, taken));
+                    need -= taken;
+                }
+            }
+            if need == 0 {
+                got.sort_by_key(|&(m, _)| m);
+                return Some(got);
+            }
+        }
+        // fleet drained out from under us: roll back, report failure
+        self.release(&got);
+        None
+    }
+
+    /// Return slots previously handed out by [`allocate`]. Panics (loudly,
+    /// like the master's tick-time conservation assert) if a release would
+    /// push a machine past its capacity — that means a double-free upstream.
+    pub fn release(&self, slots: &[(usize, u32)]) {
+        for &(m, g) in slots {
+            if g == 0 {
+                continue;
+            }
+            let s = self.shard_of(m);
+            let local = m - self.shards[s].base;
+            self.with_shard(s, |st, free_total| {
+                assert!(
+                    st.held[local] >= g && st.free[local] + g <= st.cap[local],
+                    "inventory release over capacity: machine {m} free {} held {} cap {} release {g}",
+                    st.free[local],
+                    st.held[local],
+                    st.cap[local],
+                );
+                st.free[local] += g;
+                st.held[local] -= g;
+                free_total.fetch_add(u64::from(g), Ordering::AcqRel);
+            });
+        }
+    }
+
+    /// Per-shard aggregate rows for `edl master` stats / the scale bench.
+    pub fn shard_rows(&self) -> Vec<ShardRow> {
+        (0..self.shards.len())
+            .map(|s| {
+                self.with_shard(s, |st, _| ShardRow {
+                    shard: s,
+                    machines: st.cap.len(),
+                    capacity: st.cap.iter().sum(),
+                    free: st.free.iter().sum(),
+                    held: st.held.iter().sum(),
+                })
+            })
+            .collect()
+    }
+
+    /// Copy of per-machine held counts (for the master's cross-check of
+    /// job-table holdings against the inventory).
+    pub fn held_by_machine(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.names.len());
+        for s in 0..self.shards.len() {
+            self.with_shard(s, |st, _| out.extend_from_slice(&st.held));
+        }
+        out
+    }
+
+    /// Verify `free + held == capacity` on every machine of every shard and
+    /// that each shard's atomic mirror agrees with its locked state.
+    /// Returns the first violation as a human-readable string.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        for s in 0..self.shards.len() {
+            let base = self.shards[s].base;
+            let r = self.with_shard(s, |st, free_total| {
+                for i in 0..st.cap.len() {
+                    if st.free[i] + st.held[i] != st.cap[i] {
+                        return Err(format!(
+                            "shard {s} machine {}: free {} + held {} != cap {}",
+                            base + i,
+                            st.free[i],
+                            st.held[i],
+                            st.cap[i]
+                        ));
+                    }
+                }
+                let sum: u64 = st.free.iter().map(|&f| u64::from(f)).sum();
+                let mirror = free_total.load(Ordering::Acquire);
+                if sum != mirror {
+                    return Err(format!("shard {s}: free mirror {mirror} != locked sum {sum}"));
+                }
+                Ok(())
+            });
+            r?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize, gpus: u32) -> Vec<MachineSpec> {
+        (0..n).map(|i| MachineSpec { name: format!("m{}", i + 1), gpus }).collect()
+    }
+
+    /// the PR 4 master's unsharded greedy, kept verbatim as the placement
+    /// oracle
+    fn reference_allocate(free: &mut [u32], p: u32) -> Option<Vec<(usize, u32)>> {
+        if p == 0 || p > free.iter().sum::<u32>() {
+            return None;
+        }
+        let mut order: Vec<usize> = (0..free.len()).collect();
+        order.sort_by_key(|&m| std::cmp::Reverse(free[m]));
+        let mut out = Vec::new();
+        let mut need = p;
+        for m in order {
+            if need == 0 {
+                break;
+            }
+            let take = free[m].min(need);
+            if take > 0 {
+                free[m] -= take;
+                need -= take;
+                out.push((m, take));
+            }
+        }
+        out.sort_by_key(|&(m, _)| m);
+        Some(out)
+    }
+
+    #[test]
+    fn basic_allocate_release_conserves() {
+        let inv = ShardedInventory::new(&fleet(10, 4), 3);
+        assert_eq!(inv.n_shards(), 4);
+        assert_eq!(inv.total_gpus(), 40);
+        assert_eq!(inv.free_gpus(), 40);
+        let a = inv.allocate(6).expect("fits");
+        assert_eq!(a.iter().map(|&(_, g)| g).sum::<u32>(), 6);
+        assert_eq!(inv.free_gpus(), 34);
+        inv.check_conservation().unwrap();
+        inv.release(&a);
+        assert_eq!(inv.free_gpus(), 40);
+        inv.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn over_capacity_allocation_fails_cleanly() {
+        let inv = ShardedInventory::new(&fleet(3, 2), 2);
+        assert!(inv.allocate(0).is_none());
+        assert!(inv.allocate(7).is_none());
+        let a = inv.allocate(6).unwrap();
+        assert!(inv.allocate(1).is_none());
+        inv.release(&a);
+        assert_eq!(inv.free_gpus(), 6);
+        inv.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn placement_matches_unsharded_reference_for_any_rack_size() {
+        // a deterministic allocate/release script must place identically on
+        // 1 shard, small racks, and per-machine shards
+        let specs: Vec<MachineSpec> = vec![4, 2, 8, 1, 4, 4, 2, 8]
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| MachineSpec { name: format!("m{}", i + 1), gpus: g })
+            .collect();
+        let script: Vec<(bool, u32)> = vec![
+            (true, 5),
+            (true, 3),
+            (true, 9),
+            (false, 1), // release allocation #1
+            (true, 4),
+            (true, 8),
+            (false, 2), // release allocation #2
+            (true, 6),
+        ];
+        let mut oracle_free: Vec<u32> = specs.iter().map(|m| m.gpus).collect();
+        let mut oracle_allocs: Vec<Vec<(usize, u32)>> = Vec::new();
+        let mut oracle_log: Vec<Option<Vec<(usize, u32)>>> = Vec::new();
+        for &(alloc, arg) in &script {
+            if alloc {
+                let r = reference_allocate(&mut oracle_free, arg);
+                if let Some(a) = &r {
+                    oracle_allocs.push(a.clone());
+                }
+                oracle_log.push(r);
+            } else {
+                for &(m, g) in &oracle_allocs[arg as usize] {
+                    oracle_free[m] += g;
+                }
+            }
+        }
+        for rack in [1usize, 3, 8, usize::MAX] {
+            let inv = ShardedInventory::new(&specs, rack);
+            let mut allocs: Vec<Vec<(usize, u32)>> = Vec::new();
+            let mut log: Vec<Option<Vec<(usize, u32)>>> = Vec::new();
+            for &(alloc, arg) in &script {
+                if alloc {
+                    let r = inv.allocate(arg);
+                    if let Some(a) = &r {
+                        allocs.push(a.clone());
+                    }
+                    log.push(r);
+                } else {
+                    inv.release(&allocs[arg as usize]);
+                }
+            }
+            assert_eq!(log, oracle_log, "rack_size {rack} diverged from reference");
+            inv.check_conservation().unwrap();
+        }
+    }
+
+    #[test]
+    fn concurrent_hammer_conserves_every_shard() {
+        use std::sync::Arc;
+        let inv = Arc::new(ShardedInventory::new(&fleet(32, 4), 4));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let inv = inv.clone();
+                std::thread::spawn(move || {
+                    let mut held: Vec<Vec<(usize, u32)>> = Vec::new();
+                    for i in 0..400usize {
+                        let p = 1 + ((t * 7 + i * 3) % 9) as u32;
+                        if let Some(a) = inv.allocate(p) {
+                            held.push(a);
+                        }
+                        // interleave releases so the fleet churns
+                        if i % 3 == 0 {
+                            if let Some(a) = held.pop() {
+                                inv.release(&a);
+                            }
+                        }
+                        if i % 10 == 0 {
+                            inv.check_conservation().expect("mid-storm conservation");
+                        }
+                    }
+                    for a in held {
+                        inv.release(&a);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        inv.check_conservation().unwrap();
+        assert_eq!(inv.free_gpus(), inv.total_gpus(), "all slots returned");
+    }
+
+    #[test]
+    fn shard_rows_and_held_by_machine_agree() {
+        let inv = ShardedInventory::new(&fleet(7, 2), 3);
+        let a = inv.allocate(5).unwrap();
+        let rows = inv.shard_rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.iter().map(|r| r.machines).sum::<usize>(), 7);
+        assert_eq!(rows.iter().map(|r| r.capacity).sum::<u32>(), 14);
+        assert_eq!(rows.iter().map(|r| r.held).sum::<u32>(), 5);
+        let held = inv.held_by_machine();
+        assert_eq!(held.iter().sum::<u32>(), 5);
+        for &(m, g) in &a {
+            assert_eq!(held[m], g);
+        }
+        for r in &rows {
+            assert_eq!(r.free + r.held, r.capacity);
+        }
+        inv.release(&a);
+        assert!(inv.held_by_machine().iter().all(|&h| h == 0));
+    }
+}

@@ -7,23 +7,25 @@
 //!   edl master jobs ────────────►│ control endpoint
 //!                                ▼
 //!                         Master shell thread
-//!             inventory ─ job table ─ policy tick (Scheduler)
-//!                │                │
-//!                │ Decision       │ per job
+//!        sharded inventory ─ job table ─ policy tick (Scheduler
+//!        (per-rack locks)         │       over a ViewSnapshot)
+//!                │ Decision       │ ExecTask queue
 //!                ▼                ▼
-//!         api::JobControl   deploy::LeaderEndpoint + JobServer
-//!         (Grow/Shrink via  (one leader per job; `edl worker`
-//!          Table-1 calls)    OS processes on machine slots)
+//!         api::JobControl   executor pool ─ poller pool
+//!         (Grow/Shrink via  (leader spawn, Table-1 calls,
+//!          Table-1 calls)    bounded status sweeps)
 //! ```
 //!
-//! The master owns the machine inventory (named machines × GPU slots),
-//! accepts `edl submit` jobs, and for each started job spawns a per-job
-//! leader ([`LeaderEndpoint`]) plus one `edl worker` OS process per
-//! granted GPU slot — the PR 3 lobby/Spawn rendezvous does the matching,
-//! so scale-out is stop-free across real process boundaries. A
-//! [`Scheduler`] policy (the SAME objects the simulator runs) ticks on a
-//! clock over the [`ClusterView`] and its [`Decision`]s are applied
-//! through each job's Table-1 handle ([`crate::api::JobControl`]):
+//! The master owns the machine inventory (named machines × GPU slots,
+//! sharded per rack — [`inventory::ShardedInventory`]), accepts
+//! `edl submit` jobs, and for each started job spawns a per-job leader
+//! ([`LeaderEndpoint`]) plus one `edl worker` OS process per granted GPU
+//! slot. A [`Scheduler`] policy (the SAME objects the simulator runs)
+//! ticks on a clock over an owned [`ViewSnapshot`](crate::sched::ViewSnapshot)
+//! — assembled from lock-free per-shard counters, never holding a global
+//! inventory lock — and its [`Decision`]s are validated and their slots
+//! reserved synchronously (eager, per the sched contract), while the
+//! slow Table-1/process work drains through a fixed executor pool:
 //!
 //!  * `Start` — allocate slots, spawn leader + founder workers;
 //!  * `Grow`  — reserve idle slots, spawn joiner workers, `scale_out`;
@@ -32,11 +34,20 @@
 //!  * `Preempt`/`Migrate` — refused: the master NEVER restarts a job
 //!    (the paper's checkpoint/restart baseline is simulator-only).
 //!
+//! Datacenter-scale knobs: `sim_slots` runs jobs as in-process virtual
+//! step cadences (no leader, no worker processes) so one box hosts
+//! hundreds of live jobs for the `perf_master_tick` bench;
+//! `headless_workers` spawns `edl worker --headless` processes (control
+//! plane only, no data plane); `pipeline = false` restores the serial
+//! apply-per-tick engine as an in-bench baseline.
+//!
 //! Every started job's Table-1 address is registered in the embedded
 //! coordination KV under `edl/jobs/<name>/ctl` with a TTL lease the
-//! master refreshes each tick, so `edl ctl --job <name> --kv <addr>`
-//! resolves live jobs by name.
+//! master refreshes each tick (batched `put_many`, chunked so one frame
+//! never carries more than 512 leases), so `edl ctl --job <name> --kv
+//! <addr>` resolves live jobs by name.
 
+pub mod inventory;
 pub mod proto;
 
 use crate::api::{JobControl, JobControlExt, JobServer, Request, Response};
@@ -44,17 +55,20 @@ use crate::coordinator::TrainerConfig;
 use crate::coordsvc::{KvClient, KvServer};
 use crate::deploy::{config_digest, LeaderEndpoint, LeaderHandle};
 use crate::gpu_sim::{self, Dnn, HwConfig};
-use crate::sched::{ClusterCtl, ClusterView, Decision, JobView, NoopScheduler, Scheduler};
+use crate::sched::{
+    ClusterCtl, ClusterView, Decision, JobView, NoopScheduler, Scheduler, SnapshotCtl,
+};
 use crate::schedulers::ElasticTiresias;
 use crate::wire;
 use crate::worker::{Backend, SimBackend};
-use proto::{JobInfo, MasterRequest, MasterResponse, SubmitSpec};
+use inventory::ShardedInventory;
+use proto::{JobInfo, MasterRequest, MasterResponse, MasterStats, ShardStat, SubmitSpec};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Fixed sim-job data-pipeline shape, shared with `edl worker` defaults so
@@ -67,6 +81,10 @@ const SIM_LR: f32 = 0.05;
 /// §3.1). Used for BOTH the leader's `TrainerConfig` and the policy's
 /// what-if queries, so the analytic model describes the job that runs.
 const SIM_AGG_BATCH: u32 = 32;
+/// Sliding window of per-tick durations kept for the p50/p99 stats.
+const TICK_WINDOW: usize = 4096;
+/// Max leases per KV `put_many` frame.
+const LEASE_CHUNK: usize = 512;
 
 /// One named machine with a number of GPU slots.
 #[derive(Debug, Clone)]
@@ -87,6 +105,24 @@ pub struct MasterConfig {
     pub kv_listen: String,
     /// binary to spawn worker processes from (default: this executable)
     pub worker_bin: Option<PathBuf>,
+    /// machines per inventory shard (rack) — the lock granularity of the
+    /// sharded inventory; `usize::MAX` means one shard (unsharded)
+    pub rack_size: usize,
+    /// run jobs as in-process virtual step cadences: no leader, no worker
+    /// processes — one box hosts hundreds of "live" jobs (bench mode)
+    pub sim_slots: bool,
+    /// pass `--headless` to spawned `edl worker` processes (control plane
+    /// only, no data plane — see DESIGN.md §10)
+    pub headless_workers: bool,
+    /// batched, pipelined decision application through the executor pool;
+    /// `false` restores the serial apply-per-tick engine (the
+    /// `perf_master_tick` in-bench baseline)
+    pub pipeline: bool,
+    /// executor threads draining the decision queue (pipeline mode)
+    pub executors: usize,
+    /// status-poll threads (pipeline mode; separate pool so a slow
+    /// Table-1 op never starves the status sweep)
+    pub pollers: usize,
 }
 
 impl Default for MasterConfig {
@@ -101,6 +137,12 @@ impl Default for MasterConfig {
             listen: "127.0.0.1:0".into(),
             kv_listen: "127.0.0.1:0".into(),
             worker_bin: None,
+            rack_size: 32,
+            sim_slots: false,
+            headless_workers: false,
+            pipeline: true,
+            executors: 4,
+            pollers: 4,
         }
     }
 }
@@ -170,11 +212,19 @@ impl Master {
             gpus_per_machine: cfg.machines.iter().map(|m| m.gpus).max().unwrap_or(1),
             ..HwConfig::default()
         };
-        let free: Vec<u32> = cfg.machines.iter().map(|m| m.gpus).collect();
+        let inv = Arc::new(ShardedInventory::new(&cfg.machines, cfg.rack_size));
+        let exec_ctx = ExecCtx { worker_bin, headless: cfg.headless_workers };
+        let (exec_tx, poll_tx) = if cfg.pipeline {
+            (
+                Some(spawn_pool("edl-master-exec", cfg.executors.max(1), &exec_ctx, &tx)),
+                Some(spawn_pool("edl-master-poll", cfg.pollers.max(1), &exec_ctx, &tx)),
+            )
+        } else {
+            (None, None)
+        };
         let halt = Arc::new(AtomicBool::new(false));
         let shell = Shell {
-            machines: cfg.machines,
-            free,
+            inv,
             hw,
             jobs: Vec::new(),
             sched,
@@ -187,7 +237,11 @@ impl Master {
             last_tick: Instant::now(),
             tick_ms: cfg.tick_ms.max(50),
             lease_ttl_ms: cfg.lease_ttl_ms.max(500),
-            worker_bin,
+            exec_ctx,
+            exec_tx,
+            poll_tx,
+            sim_slots: cfg.sim_slots,
+            stats: Stats::default(),
             accept_stop: accept_stop.clone(),
             halt: halt.clone(),
         };
@@ -236,18 +290,30 @@ fn serve_master_conn(stream: TcpStream, tx: Sender<MIn>) -> wire::Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// shell
+// executors: the decision pipeline
 // ---------------------------------------------------------------------------
 
-/// Which asynchronous Table-1 operation an executor thread ran.
+/// Which asynchronous operation an executor ran.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Op {
+    Start,
     Grow,
     Shrink,
     Stop,
 }
 
-/// Outcome of an asynchronous Table-1 op, reported by its executor thread.
+/// Everything a freshly started live job hands back to the shell.
+struct StartPayload {
+    endpoint: LeaderEndpoint,
+    ctl: JobServer<LeaderHandle>,
+    handle: LeaderHandle,
+    children: Vec<Child>,
+    ctl_addr: String,
+}
+
+/// Outcome of an executor-run operation, reported back to the shell. The
+/// shell (sole owner of the job table and sole inventory mutator) commits
+/// or rolls back the slot bookkeeping.
 struct OpDone {
     job: usize,
     op: Op,
@@ -257,24 +323,395 @@ struct OpDone {
     /// Shrink: how many workers the committed scale-in removed (the
     /// inventory reconciles against this even if labels are missing)
     removed: usize,
-    /// Grow: slots to un-reserve on failure
+    /// slots to un-reserve: on failure the whole reservation, on a
+    /// partially-spawned Grow the unspawned remainder
     undo: Vec<(usize, u32)>,
-    /// Grow: first index of the joiner processes spawned for this op
-    child_from: usize,
+    /// Grow: joiner processes for the shell to adopt
+    children: Vec<Child>,
+    /// Start (live): leader endpoint + ctl server + founders
+    start: Option<Box<StartPayload>>,
     err: String,
+}
+
+impl OpDone {
+    fn fail(job: usize, op: Op, undo: Vec<(usize, u32)>, err: String) -> OpDone {
+        OpDone {
+            job,
+            op,
+            ok: false,
+            freed: Vec::new(),
+            removed: 0,
+            undo,
+            children: Vec::new(),
+            start: None,
+            err,
+        }
+    }
+
+    fn ok(job: usize, op: Op) -> OpDone {
+        OpDone {
+            job,
+            op,
+            ok: true,
+            freed: Vec::new(),
+            removed: 0,
+            undo: Vec::new(),
+            children: Vec::new(),
+            start: None,
+            err: String::new(),
+        }
+    }
 }
 
 enum MIn {
     Ctl(MasterRequest, Sender<MasterResponse>),
     Done(OpDone),
+    PollDone { job: usize, step: Option<u64> },
 }
+
+/// One queued unit of decision work. Accepted decisions reserve their
+/// slots synchronously on the shell; the slow half (process spawning,
+/// Table-1 round-trips) runs here, concurrently across jobs. `live: None`
+/// means the job is a `sim_slots` virtual job and the op completes
+/// immediately.
+enum ExecTask {
+    Start {
+        job: usize,
+        spec: SubmitSpec,
+        slots: Vec<(usize, u32)>,
+        labels: Vec<String>,
+        sim: bool,
+    },
+    Grow {
+        job: usize,
+        reserved: Vec<(usize, u32)>,
+        labels: Vec<String>,
+        live: Option<(LeaderHandle, String)>,
+        spec: SubmitSpec,
+    },
+    Shrink { job: usize, n: usize, live: Option<LeaderHandle> },
+    Stop { job: usize, live: Option<LeaderHandle> },
+    Poll { job: usize, handle: LeaderHandle },
+}
+
+/// What an executor needs besides the task itself.
+#[derive(Clone)]
+struct ExecCtx {
+    worker_bin: PathBuf,
+    headless: bool,
+}
+
+/// `n` executor threads sharing one task queue. The shared receiver sits
+/// behind a mutex; a thread holds it only while blocked in `recv`, so
+/// pickup is serial but execution is concurrent. Dropping the returned
+/// sender shuts the pool down.
+fn spawn_pool(name: &str, n: usize, ctx: &ExecCtx, out: &Sender<MIn>) -> Sender<ExecTask> {
+    let (tx, rx) = channel::<ExecTask>();
+    let rx = Arc::new(Mutex::new(rx));
+    for i in 0..n {
+        let rx = rx.clone();
+        let ctx = ctx.clone();
+        let out = out.clone();
+        std::thread::Builder::new()
+            .name(format!("{name}-{i}"))
+            .spawn(move || loop {
+                let task = {
+                    let r = rx.lock().unwrap_or_else(|e| e.into_inner());
+                    r.recv()
+                };
+                let Ok(task) = task else { break };
+                if out.send(run_task(task, &ctx)).is_err() {
+                    break;
+                }
+            })
+            .expect("spawn master executor");
+    }
+    tx
+}
+
+fn spawn_worker(
+    ctx: &ExecCtx,
+    leader_addr: &str,
+    machine: &str,
+    spec: &SubmitSpec,
+) -> std::io::Result<Child> {
+    let mut args: Vec<String> = vec![
+        "worker".into(),
+        "--leader".into(),
+        leader_addr.into(),
+        "--machine".into(),
+        machine.into(),
+        "--backend".into(),
+        "sim".into(),
+        "--params".into(),
+        spec.params.to_string(),
+        "--compute-ms".into(),
+        spec.compute_ms.to_string(),
+        "--samples".into(),
+        SIM_SAMPLES.to_string(),
+        "--data-seed".into(),
+        SIM_DATA_SEED.to_string(),
+        "--lr".into(),
+        format!("{SIM_LR}"),
+    ];
+    if ctx.headless {
+        args.push("--headless".into());
+    }
+    // the simulated cluster runs every "machine" on one host; stamping
+    // the machine label as the worker's shm identity makes same-machine
+    // workers negotiate shared-memory rings exactly as a real multi-node
+    // deployment would (transport::machine_identity reads this first)
+    Command::new(&ctx.worker_bin)
+        .args(&args)
+        .env("EDL_MACHINE_ID", machine)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+}
+
+/// The executor body: one task in, one shell message out. Never touches
+/// the inventory or the job table — commit/rollback happens on the shell.
+fn run_task(task: ExecTask, ctx: &ExecCtx) -> MIn {
+    match task {
+        ExecTask::Start { job, spec, slots, labels, sim } => {
+            if sim {
+                let mut done = OpDone::ok(job, Op::Start);
+                done.undo = slots;
+                return MIn::Done(done);
+            }
+            run_start(job, spec, slots, labels, ctx)
+        }
+        ExecTask::Grow { job, reserved, labels, live, spec } => {
+            let Some((handle, leader_addr)) = live else {
+                return MIn::Done(OpDone::ok(job, Op::Grow));
+            };
+            run_grow(job, reserved, labels, handle, leader_addr, spec, ctx)
+        }
+        ExecTask::Shrink { job, n, live } => {
+            let Some(handle) = live else {
+                let mut done = OpDone::ok(job, Op::Shrink);
+                done.removed = n;
+                return MIn::Done(done);
+            };
+            run_shrink(job, n, handle)
+        }
+        ExecTask::Stop { job, live } => {
+            let Some(handle) = live else {
+                return MIn::Done(OpDone::ok(job, Op::Stop));
+            };
+            let resp = handle.call_with_timeout(Request::Stop, Duration::from_secs(30));
+            let ok = matches!(resp, Response::Ok);
+            let err = if ok { String::new() } else { format!("{resp:?}") };
+            let mut done = OpDone::ok(job, Op::Stop);
+            done.ok = ok;
+            done.err = err;
+            MIn::Done(done)
+        }
+        ExecTask::Poll { job, handle } => {
+            // short deadline: one wedged leader must not hold a poller
+            // thread hostage; the shell keeps `status_ok = false` until
+            // a sweep comes back
+            let step = match handle.call_with_timeout(Request::Status, Duration::from_secs(5)) {
+                Response::Status(st) => Some(st.step),
+                _ => None,
+            };
+            MIn::PollDone { job, step }
+        }
+    }
+}
+
+/// `Start` (live): stand up the per-job leader + Table-1 server, spawn
+/// founder worker processes. Slot bookkeeping already happened at accept;
+/// `slots` rides along only so a failure can be rolled back by the shell.
+fn run_start(
+    job: usize,
+    spec: SubmitSpec,
+    slots: Vec<(usize, u32)>,
+    labels: Vec<String>,
+    ctx: &ExecCtx,
+) -> MIn {
+    let backend =
+        SimBackend { compute_ms: spec.compute_ms, ..SimBackend::fast(spec.params as usize) };
+    let digest = config_digest(
+        SIM_SAMPLES,
+        SIM_DATA_SEED,
+        backend.param_count(),
+        backend.seq_len(),
+        SIM_LR,
+    );
+    let cfg = TrainerConfig {
+        agg_batch: SIM_AGG_BATCH,
+        lr: SIM_LR,
+        approx_recovery: true,
+        failure_timeout: Duration::from_secs(20),
+        ..Default::default()
+    };
+    let endpoint = match LeaderEndpoint::start(
+        cfg,
+        Arc::new(backend),
+        SIM_SAMPLES,
+        labels.len(),
+        "127.0.0.1:0",
+        digest,
+    ) {
+        Ok(e) => e,
+        Err(e) => {
+            return MIn::Done(OpDone::fail(
+                job,
+                Op::Start,
+                slots,
+                format!("leader failed to start: {e}"),
+            ))
+        }
+    };
+    let ctl = match JobServer::start_on("127.0.0.1:0", endpoint.handle()) {
+        Ok(s) => s,
+        Err(e) => {
+            return MIn::Done(OpDone::fail(job, Op::Start, slots, format!("ctl server failed: {e}")))
+        }
+    };
+    let handle = endpoint.handle();
+    let leader_addr = endpoint.addr.clone();
+    let ctl_addr = ctl.addr.clone();
+    let mut children = Vec::new();
+    for machine in &labels {
+        match spawn_worker(ctx, &leader_addr, machine, &spec) {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                eprintln!("[master] job {:?} worker spawn on {machine} failed: {e}", spec.name)
+            }
+        }
+    }
+    eprintln!(
+        "[master] job {:?} started: p={} ctl={ctl_addr} leader={leader_addr}",
+        spec.name,
+        labels.len()
+    );
+    let mut done = OpDone::ok(job, Op::Start);
+    done.undo = slots;
+    done.start = Some(Box::new(StartPayload { endpoint, ctl, handle, children, ctl_addr }));
+    MIn::Done(done)
+}
+
+/// `Grow` (live): spawn joiner processes into the leader's lobby, commit
+/// with ONE Table-1 `scale_out` (stop-free). Only slots whose joiner
+/// PROCESS actually spawned take part; the unspawned remainder goes back
+/// via `undo`, and a failed scale-out kills the joiners it spawned.
+fn run_grow(
+    job: usize,
+    reserved: Vec<(usize, u32)>,
+    labels: Vec<String>,
+    handle: LeaderHandle,
+    leader_addr: String,
+    spec: SubmitSpec,
+    ctx: &ExecCtx,
+) -> MIn {
+    // labels[i] belongs to reserved[unit_pos[i]]
+    let unit_pos: Vec<usize> = reserved
+        .iter()
+        .enumerate()
+        .flat_map(|(i, &(_, g))| std::iter::repeat(i).take(g as usize))
+        .collect();
+    let mut failed = vec![0u32; reserved.len()];
+    let mut children: Vec<Child> = Vec::new();
+    let mut spawned: Vec<String> = Vec::new();
+    for (i, machine) in labels.iter().enumerate() {
+        match spawn_worker(ctx, &leader_addr, machine, &spec) {
+            Ok(c) => {
+                children.push(c);
+                spawned.push(machine.clone());
+            }
+            Err(e) => {
+                failed[unit_pos[i]] += 1;
+                eprintln!("[master] job {:?} joiner spawn on {machine} failed: {e}", spec.name);
+            }
+        }
+    }
+    if spawned.is_empty() {
+        return MIn::Done(OpDone::fail(
+            job,
+            Op::Grow,
+            reserved,
+            "no joiner process could be spawned".into(),
+        ));
+    }
+    let unspawned: Vec<(usize, u32)> = reserved
+        .iter()
+        .zip(&failed)
+        .filter(|&(_, &f)| f > 0)
+        .map(|(&(m, _), &f)| (m, f))
+        .collect();
+    let mut h = handle;
+    match ElasticTiresias::expand_job(&mut h, spawned) {
+        Ok(()) => {
+            let mut done = OpDone::ok(job, Op::Grow);
+            done.undo = unspawned;
+            done.children = children;
+            MIn::Done(done)
+        }
+        Err(e) => {
+            // joiners never joined: reap them here (the shell never saw
+            // them), roll back the whole reservation
+            for c in &mut children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            MIn::Done(OpDone::fail(job, Op::Grow, reserved, e.to_string()))
+        }
+    }
+}
+
+/// `Shrink` (live): graceful scale-in of the newest workers; their
+/// machine labels (from Table-1 `status`) say which slots come back.
+fn run_shrink(job: usize, n: usize, handle: LeaderHandle) -> MIn {
+    let mut h = handle;
+    let (ok, freed, err) = match h.status() {
+        Ok(st) if st.workers.len() > n => {
+            let k = st.workers.len() - n;
+            let victims = st.workers[k..].to_vec();
+            let freed: Vec<String> =
+                st.worker_machines.get(k..).map(|s| s.to_vec()).unwrap_or_default();
+            match h.scale_in_retry(victims, Duration::from_secs(30)) {
+                Ok(()) => (true, freed, String::new()),
+                Err(e) => (false, Vec::new(), e.to_string()),
+            }
+        }
+        Ok(_) => (false, Vec::new(), "shrink would remove every worker".into()),
+        Err(e) => (false, Vec::new(), e.to_string()),
+    };
+    let mut done = OpDone::ok(job, Op::Shrink);
+    done.ok = ok;
+    done.freed = freed;
+    done.removed = n;
+    done.err = err;
+    MIn::Done(done)
+}
+
+// ---------------------------------------------------------------------------
+// shell
+// ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
     Pending,
+    /// slots reserved, leader/ctl standing up on an executor
+    Starting,
     Running,
     Stopping,
     Finished,
+}
+
+/// Virtual step cadence of a `sim_slots` job: steps advance with wall
+/// time at the simulated backend's per-batch compute rate, no processes.
+struct SimSlot {
+    started: Instant,
+    compute_ms: u64,
+}
+
+impl SimSlot {
+    fn step_now(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64 / self.compute_ms
+    }
 }
 
 struct LiveJob {
@@ -287,11 +724,15 @@ struct LiveJob {
     handle: Option<LeaderHandle>,
     ctl_addr: String,
     children: Vec<Child>,
+    /// virtual step cadence (sim_slots jobs only)
+    sim: Option<SimSlot>,
     /// GPUs held per machine index
     held: Vec<u32>,
-    /// a Table-1 op is in flight on an executor thread (§3.1 guard
-    /// surfaced to the policy as `adjustable = false`)
+    /// an operation is in flight on an executor (§3.1 guard surfaced to
+    /// the policy as `adjustable = false`)
     busy: bool,
+    /// a status poll is in flight on the poller pool
+    in_poll: bool,
     /// last `status` round-trip succeeded
     status_ok: bool,
     last_step: u64,
@@ -307,9 +748,34 @@ impl LiveJob {
     }
 }
 
+/// Decision/tick counters, windowed tick latencies.
+#[derive(Default)]
+struct Stats {
+    ticks: u64,
+    tick_us: Vec<u64>,
+    tick_cursor: usize,
+    starts: u64,
+    grows: u64,
+    shrinks: u64,
+    stops: u64,
+    conservation_ok: bool,
+}
+
+impl Stats {
+    fn record_tick(&mut self, dur: Duration) {
+        self.ticks += 1;
+        let us = dur.as_micros() as u64;
+        if self.tick_us.len() < TICK_WINDOW {
+            self.tick_us.push(us);
+        } else {
+            self.tick_us[self.tick_cursor] = us;
+            self.tick_cursor = (self.tick_cursor + 1) % TICK_WINDOW;
+        }
+    }
+}
+
 struct Shell {
-    machines: Vec<MachineSpec>,
-    free: Vec<u32>,
+    inv: Arc<ShardedInventory>,
     hw: HwConfig,
     jobs: Vec<LiveJob>,
     sched: Box<dyn Scheduler + Send>,
@@ -317,21 +783,27 @@ struct Shell {
     tx: Sender<MIn>,
     kv: KvServer,
     /// lazily connected loopback client to the embedded KV: the per-tick
-    /// lease sweep goes over the wire in ONE batched frame (OP_BATCH),
-    /// the same path a remote coordination service would take
+    /// lease sweep goes over the wire in batched frames (OP_BATCH), the
+    /// same path a remote coordination service would take
     kv_client: Option<KvClient>,
     start: Instant,
     last_now: f64,
     last_tick: Instant,
     tick_ms: u64,
     lease_ttl_ms: u64,
-    worker_bin: PathBuf,
+    exec_ctx: ExecCtx,
+    /// pipelined decision application (None = serial inline baseline)
+    exec_tx: Option<Sender<ExecTask>>,
+    poll_tx: Option<Sender<ExecTask>>,
+    sim_slots: bool,
+    stats: Stats,
     accept_stop: Arc<AtomicBool>,
     halt: Arc<AtomicBool>,
 }
 
 impl Shell {
     fn run(mut self) {
+        self.stats.conservation_ok = true;
         let poll = Duration::from_millis(self.tick_ms.min(100));
         let mut quit = false;
         while !quit && !self.halt.load(Ordering::Relaxed) {
@@ -341,7 +813,7 @@ impl Shell {
                     let _ = reply.send(resp);
                     quit = q;
                 }
-                Ok(MIn::Done(done)) => self.finish_op(done),
+                Ok(m) => self.on_min(m),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -351,6 +823,10 @@ impl Shell {
             }
         }
         self.teardown();
+        // dropping the task senders shuts the pools down; in-flight tasks
+        // finish against a closed mailbox and their threads exit
+        self.exec_tx = None;
+        self.poll_tx = None;
         self.accept_stop.store(true, Ordering::Relaxed);
     }
 
@@ -358,40 +834,53 @@ impl Shell {
         self.start.elapsed().as_secs_f64()
     }
 
-    fn machine_ix(&self, name: &str) -> Option<usize> {
-        self.machines.iter().position(|m| m.name == name)
-    }
-
-    // -- inventory ----------------------------------------------------------
-
-    /// Reserve `p` GPU slots, most-free machines first (the simulator's
-    /// packing). Returns None (and reserves nothing) if impossible.
-    fn allocate(&mut self, p: u32) -> Option<Vec<(usize, u32)>> {
-        if p == 0 || p > self.free.iter().sum::<u32>() {
-            return None;
-        }
-        let mut need = p;
-        let mut order: Vec<usize> = (0..self.machines.len()).collect();
-        order.sort_by_key(|&m| std::cmp::Reverse(self.free[m]));
-        let mut slots = Vec::new();
-        for m in order {
-            if need == 0 {
-                break;
-            }
-            let take = self.free[m].min(need);
-            if take > 0 {
-                self.free[m] -= take;
-                slots.push((m, take));
-                need -= take;
+    fn on_min(&mut self, m: MIn) {
+        match m {
+            MIn::Ctl(..) => unreachable!("ctl handled in run loop"),
+            MIn::Done(done) => self.finish_op(done),
+            MIn::PollDone { job, step } => {
+                self.jobs[job].in_poll = false;
+                match step {
+                    Some(s) => self.note_step(job, s),
+                    None => self.jobs[job].status_ok = false,
+                }
             }
         }
-        debug_assert_eq!(need, 0);
-        Some(slots)
     }
 
-    fn release(&mut self, slots: &[(usize, u32)]) {
-        for &(m, g) in slots {
-            self.free[m] += g;
+    /// Fold a status-sweep result into the job table; a job past its step
+    /// target begins its graceful stop.
+    fn note_step(&mut self, ix: usize, step: u64) {
+        {
+            let j = &mut self.jobs[ix];
+            if step < j.last_step {
+                eprintln!(
+                    "[master] WARNING job {:?} step went backwards: {} -> {}",
+                    j.spec.name, j.last_step, step
+                );
+            }
+            j.last_step = j.last_step.max(step);
+            j.status_ok = true;
+        }
+        if self.jobs[ix].last_step >= self.jobs[ix].spec.steps
+            && matches!(self.jobs[ix].phase, Phase::Running)
+            && !self.jobs[ix].busy
+        {
+            self.begin_stop(ix);
+        }
+    }
+
+    /// Queue a task on the executor pool, or — serial baseline — run it
+    /// inline and commit its outcome immediately.
+    fn dispatch(&mut self, task: ExecTask) {
+        match &self.exec_tx {
+            Some(tx) => {
+                let _ = tx.send(task);
+            }
+            None => {
+                let m = run_task(task, &self.exec_ctx);
+                self.on_min(m);
+            }
         }
     }
 
@@ -409,7 +898,7 @@ impl Shell {
                         false,
                     );
                 }
-                let total: u32 = self.machines.iter().map(|m| m.gpus).sum();
+                let total = self.inv.total_gpus();
                 if spec.gpus == 0 || spec.gpus > total {
                     return (
                         MasterResponse::Err(format!(
@@ -420,7 +909,7 @@ impl Shell {
                     );
                 }
                 let model = Dnn::by_name(&spec.model).unwrap_or(Dnn::ResNet50);
-                let n_machines = self.machines.len();
+                let n_machines = self.inv.n_machines();
                 let submit_s = self.now_s();
                 eprintln!("[master] submitted job {:?} ({} GPUs)", spec.name, spec.gpus);
                 self.jobs.push(LiveJob {
@@ -433,8 +922,10 @@ impl Shell {
                     handle: None,
                     ctl_addr: String::new(),
                     children: Vec::new(),
+                    sim: None,
                     held: vec![0; n_machines],
                     busy: false,
+                    in_poll: false,
                     status_ok: false,
                     last_step: 0,
                     peak_p: 0,
@@ -445,44 +936,99 @@ impl Shell {
                 (MasterResponse::Submitted { job: self.jobs.len() as u64 - 1 }, false)
             }
             MasterRequest::Jobs => (MasterResponse::Jobs(self.job_infos()), false),
+            MasterRequest::JobsPage { from, limit } => {
+                let total = self.jobs.len() as u64;
+                let from = from.min(total);
+                let limit = limit.clamp(1, 256);
+                let to = (from + limit).min(total);
+                let jobs = (from..to).map(|i| self.job_info(i as usize)).collect();
+                (MasterResponse::JobsPage { jobs, next: to, total }, false)
+            }
+            MasterRequest::Stats => (MasterResponse::Stats(self.stats_snapshot()), false),
             MasterRequest::Shutdown => (MasterResponse::Ok, true),
         }
     }
 
+    fn job_info(&self, ix: usize) -> JobInfo {
+        let j = &self.jobs[ix];
+        JobInfo {
+            name: j.spec.name.clone(),
+            phase: match j.phase {
+                Phase::Pending => "pending",
+                Phase::Starting => "starting",
+                Phase::Running => "running",
+                Phase::Stopping => "stopping",
+                Phase::Finished => "finished",
+            }
+            .to_string(),
+            requested_p: j.spec.gpus,
+            parallelism: j.held_p(),
+            step: j.last_step,
+            peak_p: j.peak_p,
+            grow_ops: j.grow_ops,
+            shrink_ops: j.shrink_ops,
+            ctl_addr: j.ctl_addr.clone(),
+            machines: j
+                .held
+                .iter()
+                .enumerate()
+                .flat_map(|(m, &g)| {
+                    std::iter::repeat(self.inv.machine_name(m).to_string()).take(g as usize)
+                })
+                .collect(),
+        }
+    }
+
     fn job_infos(&self) -> Vec<JobInfo> {
-        self.jobs
-            .iter()
-            .map(|j| JobInfo {
-                name: j.spec.name.clone(),
-                phase: match j.phase {
-                    Phase::Pending => "pending",
-                    Phase::Running => "running",
-                    Phase::Stopping => "stopping",
-                    Phase::Finished => "finished",
-                }
-                .to_string(),
-                requested_p: j.spec.gpus,
-                parallelism: j.held_p(),
-                step: j.last_step,
-                peak_p: j.peak_p,
-                grow_ops: j.grow_ops,
-                shrink_ops: j.shrink_ops,
-                ctl_addr: j.ctl_addr.clone(),
-                machines: j
-                    .held
-                    .iter()
-                    .enumerate()
-                    .flat_map(|(m, &g)| {
-                        std::iter::repeat(self.machines[m].name.clone()).take(g as usize)
-                    })
-                    .collect(),
-            })
-            .collect()
+        (0..self.jobs.len()).map(|i| self.job_info(i)).collect()
+    }
+
+    fn stats_snapshot(&self) -> MasterStats {
+        let mut xs = self.stats.tick_us.clone();
+        xs.sort_unstable();
+        let pct = |q: f64| -> u64 {
+            if xs.is_empty() {
+                0
+            } else {
+                xs[((xs.len() - 1) as f64 * q).round() as usize]
+            }
+        };
+        MasterStats {
+            ticks: self.stats.ticks,
+            tick_p50_us: pct(0.50),
+            tick_p99_us: pct(0.99),
+            tick_max_us: xs.last().copied().unwrap_or(0),
+            decisions: self.stats.starts + self.stats.grows + self.stats.shrinks,
+            starts: self.stats.starts,
+            grows: self.stats.grows,
+            shrinks: self.stats.shrinks,
+            stops: self.stats.stops,
+            jobs_total: self.jobs.len() as u64,
+            jobs_running: self
+                .jobs
+                .iter()
+                .filter(|j| matches!(j.phase, Phase::Starting | Phase::Running))
+                .count() as u64,
+            conservation_ok: self.stats.conservation_ok,
+            shards: self
+                .inv
+                .shard_rows()
+                .into_iter()
+                .map(|r| ShardStat {
+                    shard: r.shard as u32,
+                    machines: r.machines as u32,
+                    capacity: r.capacity,
+                    free: r.free,
+                    held: r.held,
+                })
+                .collect(),
+        }
     }
 
     // -- the tick: poll jobs, refresh leases, run the policy ----------------
 
     fn tick(&mut self) {
+        let t0 = Instant::now();
         let now = self.now_s();
         let dt = (now - self.last_now).max(0.0);
         self.last_now = now;
@@ -494,59 +1040,77 @@ impl Shell {
             if !matches!(self.jobs[ix].phase, Phase::Running) || self.jobs[ix].busy {
                 continue;
             }
+            if self.jobs[ix].sim.is_some() {
+                // virtual cadence: no round-trip, the "status" is a clock
+                let step = self.jobs[ix].sim.as_ref().map(|s| s.step_now()).unwrap_or(0);
+                self.note_step(ix, step);
+                continue;
+            }
             // reap worker processes that exited gracefully (scale-in)
             self.jobs[ix].children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
             let Some(handle) = self.jobs[ix].handle.clone() else { continue };
-            // short deadline: one wedged leader must not stall the sweep,
-            // the lease refresh, or the policy tick for every other job
-            match handle.call_with_timeout(Request::Status, Duration::from_secs(5)) {
-                Response::Status(st) => {
-                    let done = {
-                        let j = &mut self.jobs[ix];
-                        if st.step < j.last_step {
-                            eprintln!(
-                                "[master] WARNING job {:?} step went backwards: {} -> {}",
-                                j.spec.name, j.last_step, st.step
-                            );
-                        }
-                        j.last_step = j.last_step.max(st.step);
-                        j.status_ok = true;
-                        j.last_step >= j.spec.steps
-                    };
-                    if done {
-                        self.begin_stop(ix);
+            match self.poll_tx.clone() {
+                Some(ptx) => {
+                    // pipelined sweep: at most one in-flight poll per job,
+                    // each bounded by the 5 s deadline on a poller thread —
+                    // hundreds of leaders never serialise the tick
+                    if !self.jobs[ix].in_poll {
+                        self.jobs[ix].in_poll = true;
+                        let _ = ptx.send(ExecTask::Poll { job: ix, handle });
                     }
                 }
-                _ => self.jobs[ix].status_ok = false,
+                None => {
+                    // serial baseline: block the tick on each leader in turn
+                    match handle.call_with_timeout(Request::Status, Duration::from_secs(5)) {
+                        Response::Status(st) => self.note_step(ix, st.step),
+                        _ => self.jobs[ix].status_ok = false,
+                    }
+                }
             }
         }
         self.refresh_leases();
-        // the policy tick: the SAME Scheduler objects the simulator runs
+        // the policy tick: the SAME Scheduler objects the simulator runs,
+        // planning over an owned snapshot (assembled from lock-free shard
+        // mirrors — no global inventory lock is ever held here)
         let mut sched: Box<dyn Scheduler + Send> =
             std::mem::replace(&mut self.sched, Box::new(NoopScheduler));
-        sched.replan(self);
+        {
+            let mut ctl = SnapshotCtl::new(&mut *self);
+            sched.replan(&mut ctl);
+        }
         self.sched = sched;
         self.assert_inventory();
+        self.stats.record_tick(t0.elapsed());
     }
 
-    /// GPU-slot conservation (chaos-harness invariant): for every machine,
-    /// free slots plus the slots every job holds must equal the machine's
-    /// capacity — a violation means a Grow/Shrink/Stop path leaked or
+    /// GPU-slot conservation (chaos-harness invariant): every shard must
+    /// satisfy `free + held == capacity` per machine, and the inventory's
+    /// held counts must equal what the job table thinks it holds — a
+    /// violation means a Start/Grow/Shrink/Stop path leaked or
     /// double-counted a slot. Loud failure beats silently shrinking the
     /// cluster: the master is the root of truth for the inventory.
-    fn assert_inventory(&self) {
-        for (m, spec) in self.machines.iter().enumerate() {
-            let held: u32 = self.jobs.iter().map(|j| j.held[m]).sum();
-            assert!(
-                self.free[m] + held == spec.gpus,
-                "inventory leak on {}: free {} + held {} != capacity {} \
-                 (per-job held: {:?})",
-                spec.name,
-                self.free[m],
-                held,
-                spec.gpus,
-                self.jobs.iter().map(|j| (j.spec.name.clone(), j.held[m])).collect::<Vec<_>>(),
-            );
+    fn assert_inventory(&mut self) {
+        let check = self.inv.check_conservation().and_then(|()| {
+            let inv_held = self.inv.held_by_machine();
+            for (m, &h) in inv_held.iter().enumerate() {
+                let job_held: u32 = self.jobs.iter().map(|j| j.held[m]).sum();
+                if job_held != h {
+                    return Err(format!(
+                        "machine {}: inventory holds {h}, jobs hold {job_held} (per-job: {:?})",
+                        self.inv.machine_name(m),
+                        self.jobs
+                            .iter()
+                            .filter(|j| j.held[m] > 0)
+                            .map(|j| (j.spec.name.clone(), j.held[m]))
+                            .collect::<Vec<_>>(),
+                    ));
+                }
+            }
+            Ok(())
+        });
+        self.stats.conservation_ok = check.is_ok();
+        if let Err(e) = check {
+            panic!("inventory conservation violated: {e}");
         }
     }
 
@@ -568,10 +1132,12 @@ impl Shell {
     }
 
     /// Per-tick lease sweep, batched: every running job's ctl lease goes
-    /// to the KV in ONE framed round-trip (OP_BATCH over the loopback
-    /// client — the exact path a remote etcd stand-in would see). Any
-    /// connection trouble falls back to in-process puts against the
-    /// embedded core, so a flaky loopback can never cost a lease.
+    /// to the KV in chunked framed round-trips (OP_BATCH over the
+    /// loopback client — the exact path a remote etcd stand-in would
+    /// see; ≤512 leases per frame keeps frames bounded at hundreds of
+    /// jobs). Any connection trouble falls back to in-process puts
+    /// against the embedded core, so a flaky loopback can never cost a
+    /// lease.
     fn refresh_leases(&mut self) {
         let items: Vec<(String, Vec<u8>, u64)> = self
             .jobs
@@ -589,224 +1155,93 @@ impl Shell {
         if self.kv_client.is_none() {
             self.kv_client = KvClient::connect(&self.kv.addr).ok();
         }
+        let mut sent = false;
         if let Some(kv) = self.kv_client.as_mut() {
-            if kv.put_many(&items).is_ok() {
-                return;
+            sent = items.chunks(LEASE_CHUNK).all(|c| kv.put_many(c).is_ok());
+            if !sent {
+                self.kv_client = None; // reconnect next tick
             }
-            self.kv_client = None; // reconnect next tick
+        }
+        if sent {
+            return;
         }
         for (key, value, ttl) in &items {
             self.kv.core().put(crate::util::now_ms() as u64, key, value, Some(*ttl));
         }
     }
 
-    // -- decision application ------------------------------------------------
+    // -- decision acceptance (the eager half of the pipeline) ---------------
 
-    fn spawn_worker(
-        &self,
-        leader_addr: &str,
-        machine: &str,
-        spec: &SubmitSpec,
-    ) -> std::io::Result<Child> {
-        let args: Vec<String> = vec![
-            "worker".into(),
-            "--leader".into(),
-            leader_addr.into(),
-            "--machine".into(),
-            machine.into(),
-            "--backend".into(),
-            "sim".into(),
-            "--params".into(),
-            spec.params.to_string(),
-            "--compute-ms".into(),
-            spec.compute_ms.to_string(),
-            "--samples".into(),
-            SIM_SAMPLES.to_string(),
-            "--data-seed".into(),
-            SIM_DATA_SEED.to_string(),
-            "--lr".into(),
-            format!("{SIM_LR}"),
-        ];
-        // the simulated cluster runs every "machine" on one host; stamping
-        // the machine label as the worker's shm identity makes same-machine
-        // workers negotiate shared-memory rings exactly as a real multi-node
-        // deployment would (transport::machine_identity reads this first)
-        Command::new(&self.worker_bin)
-            .args(&args)
-            .env("EDL_MACHINE_ID", machine)
-            .stdout(Stdio::null())
-            .stderr(Stdio::null())
-            .spawn()
-    }
-
-    /// `Start`: allocate slots, stand up the per-job leader + Table-1
-    /// server, spawn founder worker processes, register the ctl lease.
-    fn start_live_job(&mut self, ix: usize, p: u32) -> bool {
-        if !matches!(self.jobs[ix].phase, Phase::Pending) {
+    /// `Start`: reserve slots NOW (the policy's next view read sees them
+    /// held), queue the slow half (leader + founders) on an executor.
+    fn accept_start(&mut self, ix: usize, p: u32) -> bool {
+        if ix >= self.jobs.len() || !matches!(self.jobs[ix].phase, Phase::Pending) {
             return false;
         }
-        let Some(slots) = self.allocate(p) else { return false };
-        let spec = self.jobs[ix].spec.clone();
-        let backend = SimBackend {
-            compute_ms: spec.compute_ms,
-            ..SimBackend::fast(spec.params as usize)
-        };
-        let digest = config_digest(
-            SIM_SAMPLES,
-            SIM_DATA_SEED,
-            backend.param_count(),
-            backend.seq_len(),
-            SIM_LR,
-        );
-        let cfg = TrainerConfig {
-            agg_batch: SIM_AGG_BATCH,
-            lr: SIM_LR,
-            approx_recovery: true,
-            failure_timeout: Duration::from_secs(20),
-            ..Default::default()
-        };
-        let endpoint = match LeaderEndpoint::start(
-            cfg,
-            Arc::new(backend),
-            SIM_SAMPLES,
-            p as usize,
-            "127.0.0.1:0",
-            digest,
-        ) {
-            Ok(e) => e,
-            Err(e) => {
-                eprintln!("[master] job {:?} leader failed to start: {e}", spec.name);
-                self.release(&slots);
-                return false;
-            }
-        };
-        let ctl = match JobServer::start_on("127.0.0.1:0", endpoint.handle()) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("[master] job {:?} ctl server failed: {e}", spec.name);
-                self.release(&slots);
-                return false;
-            }
-        };
-        let handle = endpoint.handle();
-        let leader_addr = endpoint.addr.clone();
-        let ctl_addr = ctl.addr.clone();
-        let mut children = Vec::new();
-        for &(m, g) in &slots {
-            let machine = self.machines[m].name.clone();
-            for _ in 0..g {
-                match self.spawn_worker(&leader_addr, &machine, &spec) {
-                    Ok(c) => children.push(c),
-                    Err(e) => eprintln!(
-                        "[master] job {:?} worker spawn on {machine} failed: {e}",
-                        spec.name
-                    ),
-                }
-            }
-        }
-        eprintln!(
-            "[master] job {:?} started: p={p} ctl={ctl_addr} leader={leader_addr}",
-            spec.name
-        );
+        let Some(slots) = self.inv.allocate(p) else { return false };
+        let labels: Vec<String> = slots
+            .iter()
+            .flat_map(|&(m, g)| {
+                std::iter::repeat(self.inv.machine_name(m).to_string()).take(g as usize)
+            })
+            .collect();
         {
             let j = &mut self.jobs[ix];
             for &(m, g) in &slots {
                 j.held[m] += g;
             }
-            j.endpoint = Some(endpoint);
-            j.ctl = Some(ctl);
-            j.handle = Some(handle);
-            j.ctl_addr = ctl_addr;
-            j.children = children;
-            j.phase = Phase::Running;
-            j.peak_p = p;
+            j.phase = Phase::Starting;
+            j.busy = true;
             j.status_ok = false;
         }
-        self.register_lease(ix);
+        self.stats.starts += 1;
+        let spec = self.jobs[ix].spec.clone();
+        let sim = self.sim_slots;
+        self.dispatch(ExecTask::Start { job: ix, spec, slots, labels, sim });
         true
     }
 
-    /// `Grow`: reserve idle slots, spawn joiner processes into the
-    /// leader's lobby, commit with ONE Table-1 `scale_out` (stop-free).
-    fn grow_live(&mut self, ix: usize, to: u32) -> bool {
+    /// `Grow`: reserve the delta NOW, queue joiner spawn + `scale_out`.
+    fn accept_grow(&mut self, ix: usize, to: u32) -> bool {
+        if ix >= self.jobs.len() {
+            return false;
+        }
         let cur = self.jobs[ix].held_p();
-        if !matches!(self.jobs[ix].phase, Phase::Running)
-            || self.jobs[ix].busy
-            || to <= cur
-        {
+        if !matches!(self.jobs[ix].phase, Phase::Running) || self.jobs[ix].busy || to <= cur {
             return false;
         }
-        let Some(handle) = self.jobs[ix].handle.clone() else { return false };
-        let Some(leader_addr) = self.jobs[ix].endpoint.as_ref().map(|e| e.addr.clone()) else {
-            return false;
+        let live = if self.jobs[ix].sim.is_some() {
+            None
+        } else {
+            let Some(handle) = self.jobs[ix].handle.clone() else { return false };
+            let Some(leader_addr) = self.jobs[ix].endpoint.as_ref().map(|e| e.addr.clone()) else {
+                return false;
+            };
+            Some((handle, leader_addr))
         };
-        let Some(slots) = self.allocate(to - cur) else { return false };
-        let spec = self.jobs[ix].spec.clone();
-        let child_from = self.jobs[ix].children.len();
-        // only slots whose joiner PROCESS actually spawned take part in
-        // the scale-out; a failed fork must not make the leader wait for
-        // a worker that will never connect
-        let mut labels: Vec<String> = Vec::new();
-        let mut used: Vec<u32> = vec![0; self.machines.len()];
-        for &(m, g) in &slots {
-            let machine = self.machines[m].name.clone();
-            for _ in 0..g {
-                match self.spawn_worker(&leader_addr, &machine, &spec) {
-                    Ok(c) => {
-                        self.jobs[ix].children.push(c);
-                        labels.push(machine.clone());
-                        used[m] += 1;
-                    }
-                    Err(e) => eprintln!(
-                        "[master] job {:?} joiner spawn on {machine} failed: {e}",
-                        spec.name
-                    ),
-                }
-            }
-        }
-        // give back the slots that never got a worker process
-        let unused: Vec<(usize, u32)> = slots
+        let Some(reserved) = self.inv.allocate(to - cur) else { return false };
+        let labels: Vec<String> = reserved
             .iter()
-            .filter(|&&(m, g)| g > used[m])
-            .map(|&(m, g)| (m, g - used[m]))
-            .collect();
-        self.release(&unused);
-        if labels.is_empty() {
-            return false;
-        }
-        let reserved: Vec<(usize, u32)> = used
-            .iter()
-            .enumerate()
-            .filter(|&(_, &g)| g > 0)
-            .map(|(m, &g)| (m, g))
+            .flat_map(|&(m, g)| {
+                std::iter::repeat(self.inv.machine_name(m).to_string()).take(g as usize)
+            })
             .collect();
         for &(m, g) in &reserved {
             self.jobs[ix].held[m] += g;
         }
         self.jobs[ix].busy = true;
-        let tx = self.tx.clone();
-        std::thread::spawn(move || {
-            let mut h = handle;
-            let r = ElasticTiresias::expand_job(&mut h, labels);
-            let ok = r.is_ok();
-            let err = r.err().map(|e| e.to_string()).unwrap_or_default();
-            let _ = tx.send(MIn::Done(OpDone {
-                job: ix,
-                op: Op::Grow,
-                ok,
-                freed: Vec::new(),
-                removed: 0,
-                undo: reserved,
-                child_from,
-                err,
-            }));
-        });
+        self.stats.grows += 1;
+        let spec = self.jobs[ix].spec.clone();
+        self.dispatch(ExecTask::Grow { job: ix, reserved, labels, live, spec });
         true
     }
 
-    /// `Shrink`: graceful scale-in of the newest workers; their machine
-    /// labels (from Table-1 `status`) say which slots come back.
-    fn shrink_live(&mut self, ix: usize, to: u32) -> bool {
+    /// `Shrink`: mark busy, queue the graceful scale-in; slots come back
+    /// when the executor reports which workers actually left.
+    fn accept_shrink(&mut self, ix: usize, to: u32) -> bool {
+        if ix >= self.jobs.len() {
+            return false;
+        }
         let cur = self.jobs[ix].held_p();
         if !matches!(self.jobs[ix].phase, Phase::Running)
             || self.jobs[ix].busy
@@ -815,101 +1250,130 @@ impl Shell {
         {
             return false;
         }
-        let Some(handle) = self.jobs[ix].handle.clone() else { return false };
+        let live = if self.jobs[ix].sim.is_some() {
+            None
+        } else {
+            let Some(handle) = self.jobs[ix].handle.clone() else { return false };
+            Some(handle)
+        };
         let n = (cur - to) as usize;
         self.jobs[ix].busy = true;
-        let tx = self.tx.clone();
-        std::thread::spawn(move || {
-            let mut h = handle;
-            let (ok, freed, err) = match h.status() {
-                Ok(st) if st.workers.len() > n => {
-                    let k = st.workers.len() - n;
-                    let victims = st.workers[k..].to_vec();
-                    let freed: Vec<String> =
-                        st.worker_machines.get(k..).map(|s| s.to_vec()).unwrap_or_default();
-                    match h.scale_in_retry(victims, Duration::from_secs(30)) {
-                        Ok(()) => (true, freed, String::new()),
-                        Err(e) => (false, Vec::new(), e.to_string()),
-                    }
-                }
-                Ok(_) => (false, Vec::new(), "shrink would remove every worker".into()),
-                Err(e) => (false, Vec::new(), e.to_string()),
-            };
-            let _ = tx.send(MIn::Done(OpDone {
-                job: ix,
-                op: Op::Shrink,
-                ok,
-                freed,
-                removed: n,
-                undo: Vec::new(),
-                child_from: usize::MAX,
-                err,
-            }));
-        });
+        self.stats.shrinks += 1;
+        self.dispatch(ExecTask::Shrink { job: ix, n, live });
         true
     }
 
     /// The job reached its step target: graceful Table-1 `stop`.
     fn begin_stop(&mut self, ix: usize) {
-        let Some(handle) = self.jobs[ix].handle.clone() else { return };
+        let live = self.jobs[ix].handle.clone();
+        if self.jobs[ix].sim.is_none() && live.is_none() {
+            return;
+        }
         self.jobs[ix].busy = true;
         self.jobs[ix].phase = Phase::Stopping;
+        self.stats.stops += 1;
         eprintln!(
             "[master] job {:?} reached step {} — stopping",
             self.jobs[ix].spec.name, self.jobs[ix].last_step
         );
-        let tx = self.tx.clone();
-        std::thread::spawn(move || {
-            let resp = handle.call(Request::Stop);
-            let ok = matches!(resp, Response::Ok);
-            let err = if ok { String::new() } else { format!("{resp:?}") };
-            let _ = tx.send(MIn::Done(OpDone {
-                job: ix,
-                op: Op::Stop,
-                ok,
-                freed: Vec::new(),
-                removed: 0,
-                undo: Vec::new(),
-                child_from: usize::MAX,
-                err,
-            }));
-        });
+        let live = if self.jobs[ix].sim.is_some() { None } else { live };
+        self.dispatch(ExecTask::Stop { job: ix, live });
     }
 
+    // -- commit/rollback of executor outcomes -------------------------------
+
     fn finish_op(&mut self, done: OpDone) {
-        let OpDone { job, op, ok, freed, removed, undo, child_from, err } = done;
+        let OpDone { job, op, ok, freed, removed, undo, mut children, start, err } = done;
         self.jobs[job].busy = false;
         let name = self.jobs[job].spec.name.clone();
+        if matches!(self.jobs[job].phase, Phase::Finished) {
+            // teardown raced the executor: the job's slots are already
+            // released; just reap whatever the op produced
+            for c in &mut children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            if let Some(mut payload) = start {
+                let _ = payload.handle.call_with_timeout(Request::Stop, Duration::from_secs(5));
+                for c in &mut payload.children {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                let _ = payload.ctl.shutdown();
+            }
+            return;
+        }
         match op {
+            Op::Start => {
+                if ok {
+                    if let Some(payload) = start {
+                        let payload = *payload;
+                        let j = &mut self.jobs[job];
+                        j.endpoint = Some(payload.endpoint);
+                        j.ctl = Some(payload.ctl);
+                        j.handle = Some(payload.handle);
+                        j.ctl_addr = payload.ctl_addr;
+                        j.children = payload.children;
+                    } else {
+                        // sim slot: a virtual cadence stands in for the job
+                        let j = &mut self.jobs[job];
+                        j.ctl_addr = format!("sim://{name}");
+                        j.sim = Some(SimSlot {
+                            started: Instant::now(),
+                            compute_ms: j.spec.compute_ms.max(1),
+                        });
+                    }
+                    let held = self.jobs[job].held_p();
+                    self.jobs[job].phase = Phase::Running;
+                    self.jobs[job].peak_p = self.jobs[job].peak_p.max(held);
+                    self.register_lease(job);
+                } else {
+                    // roll the reservation back; the job goes back in the
+                    // queue and the policy will retry
+                    for &(m, g) in &undo {
+                        self.jobs[job].held[m] = self.jobs[job].held[m].saturating_sub(g);
+                    }
+                    self.inv.release(&undo);
+                    self.jobs[job].phase = Phase::Pending;
+                    eprintln!("[master] job {name:?} start failed: {err}");
+                }
+            }
             Op::Grow => {
                 if ok {
+                    // give back the slots whose joiner never spawned,
+                    // adopt the ones that did
+                    for &(m, g) in &undo {
+                        self.jobs[job].held[m] = self.jobs[job].held[m].saturating_sub(g);
+                    }
+                    self.inv.release(&undo);
+                    self.jobs[job].children.append(&mut children);
                     let held = self.jobs[job].held_p();
                     self.jobs[job].grow_ops += 1;
                     self.jobs[job].peak_p = self.jobs[job].peak_p.max(held);
                     eprintln!("[master] job {name:?} grew to {held} GPUs (stop-free)");
                 } else {
                     for &(m, g) in &undo {
-                        self.free[m] += g;
                         self.jobs[job].held[m] = self.jobs[job].held[m].saturating_sub(g);
                     }
-                    if child_from < self.jobs[job].children.len() {
-                        let mut tail = self.jobs[job].children.split_off(child_from);
-                        for c in &mut tail {
-                            let _ = c.kill();
-                            let _ = c.wait();
-                        }
+                    self.inv.release(&undo);
+                    // the executor reaped its own joiners; `children` is
+                    // only non-empty on the ok path
+                    for c in &mut children {
+                        let _ = c.kill();
+                        let _ = c.wait();
                     }
                     eprintln!("[master] job {name:?} grow failed: {err}");
                 }
             }
             Op::Shrink => {
                 if ok {
+                    let mut back = vec![0u32; self.inv.n_machines()];
                     let mut returned = 0usize;
                     for label in &freed {
-                        if let Some(m) = self.machine_ix(label) {
+                        if let Some(m) = self.inv.machine_ix(label) {
                             if self.jobs[job].held[m] > 0 {
-                                self.free[m] += 1;
                                 self.jobs[job].held[m] -= 1;
+                                back[m] += 1;
                                 returned += 1;
                             }
                         }
@@ -918,15 +1382,22 @@ impl Shell {
                     // labels were missing/unresolvable, reconcile against
                     // the count so the inventory never leaks slots
                     while returned < removed {
-                        let Some(m) = (0..self.machines.len())
-                            .find(|&m| self.jobs[job].held[m] > 0)
+                        let Some(m) =
+                            (0..self.inv.n_machines()).find(|&m| self.jobs[job].held[m] > 0)
                         else {
                             break;
                         };
-                        self.free[m] += 1;
                         self.jobs[job].held[m] -= 1;
+                        back[m] += 1;
                         returned += 1;
                     }
+                    let back: Vec<(usize, u32)> = back
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &g)| g > 0)
+                        .map(|(m, &g)| (m, g))
+                        .collect();
+                    self.inv.release(&back);
                     self.jobs[job].shrink_ops += 1;
                     eprintln!(
                         "[master] job {name:?} shrank to {} GPUs (graceful)",
@@ -955,16 +1426,17 @@ impl Shell {
             .filter(|&(_, &g)| g > 0)
             .map(|(m, &g)| (m, g))
             .collect();
-        self.release(&held);
-        for g in self.jobs[ix].held.iter_mut() {
-            *g = 0;
+        for &(m, g) in &held {
+            self.jobs[ix].held[m] -= g;
         }
+        self.inv.release(&held);
         let mut children = std::mem::take(&mut self.jobs[ix].children);
         for c in &mut children {
             let _ = c.kill();
             let _ = c.wait();
         }
         self.jobs[ix].handle = None;
+        self.jobs[ix].sim = None;
         if let Some(server) = self.jobs[ix].ctl.take() {
             let _ = server.shutdown();
         }
@@ -981,9 +1453,9 @@ impl Shell {
 
     fn teardown(&mut self) {
         for ix in 0..self.jobs.len() {
-            if matches!(self.jobs[ix].phase, Phase::Running | Phase::Stopping) {
+            if matches!(self.jobs[ix].phase, Phase::Starting | Phase::Running | Phase::Stopping) {
                 if let Some(handle) = self.jobs[ix].handle.clone() {
-                    let _ = handle.call(Request::Stop);
+                    let _ = handle.call_with_timeout(Request::Stop, Duration::from_secs(30));
                 }
                 self.complete_job(ix);
             }
@@ -1000,16 +1472,16 @@ impl ClusterView for Shell {
         Shell::now_s(self)
     }
     fn n_machines(&self) -> usize {
-        self.machines.len()
+        self.inv.n_machines()
     }
     fn gpus_per_machine(&self) -> u32 {
         self.hw.gpus_per_machine
     }
     fn total_gpus(&self) -> u32 {
-        self.machines.iter().map(|m| m.gpus).sum()
+        self.inv.total_gpus()
     }
     fn free_gpus(&self) -> u32 {
-        self.free.iter().sum()
+        self.inv.free_gpus()
     }
     fn max_p_norm(&self) -> u32 {
         64
@@ -1019,7 +1491,10 @@ impl ClusterView for Shell {
     }
     fn job_view(&self, job: usize) -> JobView {
         let j = &self.jobs[job];
-        let running = matches!(j.phase, Phase::Running);
+        // a Starting job already holds its slots: the policy must see it
+        // as running (so it is neither double-started nor counted free)
+        // but never adjustable (busy until the leader stands up)
+        let running = matches!(j.phase, Phase::Running | Phase::Starting);
         JobView {
             id: job as u64,
             model: j.model,
@@ -1031,7 +1506,10 @@ impl ClusterView for Shell {
             running,
             // stopping jobs are out of the policy's hands
             finished: matches!(j.phase, Phase::Stopping | Phase::Finished),
-            adjustable: running && !j.busy && j.status_ok && j.last_step >= 1,
+            adjustable: matches!(j.phase, Phase::Running)
+                && !j.busy
+                && j.status_ok
+                && j.last_step >= 1,
             elastic: j.spec.elastic,
             submit_s: j.submit_s,
             attained_gpu_s: j.attained_gpu_s,
@@ -1048,9 +1526,9 @@ impl ClusterView for Shell {
 impl ClusterCtl for Shell {
     fn submit(&mut self, d: Decision) -> bool {
         match d {
-            Decision::Start { job, p } => self.start_live_job(job, p),
-            Decision::Grow { job, to } => self.grow_live(job, to),
-            Decision::Shrink { job, to } => self.shrink_live(job, to),
+            Decision::Start { job, p } => self.accept_start(job, p),
+            Decision::Grow { job, to } => self.accept_grow(job, to),
+            Decision::Shrink { job, to } => self.accept_shrink(job, to),
             // the live master NEVER restarts a job; checkpoint/restart
             // scheduling is the simulator-only baseline
             Decision::Preempt { .. } | Decision::Migrate { .. } => false,

@@ -62,11 +62,48 @@ pub struct JobInfo {
     pub machines: Vec<String>,
 }
 
+/// Aggregate state of one inventory shard (rack), for scale monitoring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStat {
+    pub shard: u32,
+    pub machines: u32,
+    pub capacity: u32,
+    pub free: u32,
+    pub held: u32,
+}
+
+/// Scheduler-throughput counters served by `MasterRequest::Stats`: tick
+/// latency percentiles (µs, over a sliding window of recent ticks),
+/// accepted-decision counters, and per-shard inventory conservation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MasterStats {
+    pub ticks: u64,
+    pub tick_p50_us: u64,
+    pub tick_p99_us: u64,
+    pub tick_max_us: u64,
+    /// decisions accepted by the engine (== starts + grows + shrinks)
+    pub decisions: u64,
+    pub starts: u64,
+    pub grows: u64,
+    pub shrinks: u64,
+    pub stops: u64,
+    pub jobs_total: u64,
+    pub jobs_running: u64,
+    /// `free + held == capacity` held on every shard at the last check
+    pub conservation_ok: bool,
+    pub shards: Vec<ShardStat>,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum MasterRequest {
     Submit(SubmitSpec),
     Jobs,
     Shutdown,
+    Stats,
+    /// One page of the job table: up to `limit` rows starting at `from`.
+    /// At hundreds of jobs, `Jobs` builds one giant sweep under the
+    /// control lock; pagination bounds the per-request work.
+    JobsPage { from: u64, limit: u64 },
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +112,9 @@ pub enum MasterResponse {
     Jobs(Vec<JobInfo>),
     Ok,
     Err(String),
+    Stats(MasterStats),
+    /// `next` is the index to resume from; `next == total` ends the scan
+    JobsPage { jobs: Vec<JobInfo>, next: u64, total: u64 },
 }
 
 impl SubmitSpec {
@@ -131,6 +171,64 @@ impl JobInfo {
     }
 }
 
+impl ShardStat {
+    fn encode_into(&self, e: &mut Enc) {
+        e.u32(self.shard).u32(self.machines).u32(self.capacity).u32(self.free).u32(self.held);
+    }
+
+    fn decode_from(d: &mut Dec) -> wire::Result<ShardStat> {
+        Ok(ShardStat {
+            shard: d.u32()?,
+            machines: d.u32()?,
+            capacity: d.u32()?,
+            free: d.u32()?,
+            held: d.u32()?,
+        })
+    }
+}
+
+impl MasterStats {
+    fn encode_into(&self, e: &mut Enc) {
+        e.u64(self.ticks)
+            .u64(self.tick_p50_us)
+            .u64(self.tick_p99_us)
+            .u64(self.tick_max_us)
+            .u64(self.decisions)
+            .u64(self.starts)
+            .u64(self.grows)
+            .u64(self.shrinks)
+            .u64(self.stops)
+            .u64(self.jobs_total)
+            .u64(self.jobs_running)
+            .bool(self.conservation_ok)
+            .u32(self.shards.len() as u32);
+        for s in &self.shards {
+            s.encode_into(e);
+        }
+    }
+
+    fn decode_from(d: &mut Dec) -> wire::Result<MasterStats> {
+        Ok(MasterStats {
+            ticks: d.u64()?,
+            tick_p50_us: d.u64()?,
+            tick_p99_us: d.u64()?,
+            tick_max_us: d.u64()?,
+            decisions: d.u64()?,
+            starts: d.u64()?,
+            grows: d.u64()?,
+            shrinks: d.u64()?,
+            stops: d.u64()?,
+            jobs_total: d.u64()?,
+            jobs_running: d.u64()?,
+            conservation_ok: d.bool()?,
+            shards: {
+                let n = d.u32()? as usize;
+                (0..n).map(|_| ShardStat::decode_from(d)).collect::<wire::Result<_>>()?
+            },
+        })
+    }
+}
+
 impl MasterRequest {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::new();
@@ -145,6 +243,12 @@ impl MasterRequest {
             MasterRequest::Shutdown => {
                 e.u8(3);
             }
+            MasterRequest::Stats => {
+                e.u8(4);
+            }
+            MasterRequest::JobsPage { from, limit } => {
+                e.u8(5).u64(*from).u64(*limit);
+            }
         }
         e.into_bytes()
     }
@@ -155,6 +259,8 @@ impl MasterRequest {
             1 => Ok(MasterRequest::Submit(SubmitSpec::decode_from(&mut d)?)),
             2 => Ok(MasterRequest::Jobs),
             3 => Ok(MasterRequest::Shutdown),
+            4 => Ok(MasterRequest::Stats),
+            5 => Ok(MasterRequest::JobsPage { from: d.u64()?, limit: d.u64()? }),
             tag => Err(WireError::BadTag { tag: tag as u32, ty: "master::MasterRequest" }),
         }
     }
@@ -179,6 +285,16 @@ impl MasterResponse {
             MasterResponse::Err(m) => {
                 e.u8(4).str(m);
             }
+            MasterResponse::Stats(stats) => {
+                e.u8(5);
+                stats.encode_into(&mut e);
+            }
+            MasterResponse::JobsPage { jobs, next, total } => {
+                e.u8(6).u64(*next).u64(*total).u32(jobs.len() as u32);
+                for j in jobs {
+                    j.encode_into(&mut e);
+                }
+            }
         }
         e.into_bytes()
     }
@@ -195,6 +311,15 @@ impl MasterResponse {
             }
             3 => Ok(MasterResponse::Ok),
             4 => Ok(MasterResponse::Err(d.str()?)),
+            5 => Ok(MasterResponse::Stats(MasterStats::decode_from(&mut d)?)),
+            6 => {
+                let next = d.u64()?;
+                let total = d.u64()?;
+                let n = d.u32()? as usize;
+                let jobs =
+                    (0..n).map(|_| JobInfo::decode_from(&mut d)).collect::<wire::Result<_>>()?;
+                Ok(MasterResponse::JobsPage { jobs, next, total })
+            }
             tag => Err(WireError::BadTag { tag: tag as u32, ty: "master::MasterResponse" }),
         }
     }
@@ -232,11 +357,37 @@ impl MasterClient {
         }
     }
 
+    /// Full job table, fetched page by page so the daemon never assembles
+    /// one giant sweep under its control lock (hundreds of jobs => many
+    /// small bounded requests instead of one unbounded one).
     pub fn jobs(&mut self) -> anyhow::Result<Vec<JobInfo>> {
-        match self.call(&MasterRequest::Jobs)? {
-            MasterResponse::Jobs(jobs) => Ok(jobs),
+        let mut out: Vec<JobInfo> = Vec::new();
+        let mut from = 0u64;
+        loop {
+            let (page, next, total) = self.jobs_page(from, 64)?;
+            let done = page.is_empty() || next >= total;
+            out.extend(page);
+            if done || out.len() as u64 >= total {
+                return Ok(out);
+            }
+            from = next;
+        }
+    }
+
+    /// One bounded page of the job table.
+    pub fn jobs_page(&mut self, from: u64, limit: u64) -> anyhow::Result<(Vec<JobInfo>, u64, u64)> {
+        match self.call(&MasterRequest::JobsPage { from, limit })? {
+            MasterResponse::JobsPage { jobs, next, total } => Ok((jobs, next, total)),
             MasterResponse::Err(m) => anyhow::bail!("jobs query rejected: {m}"),
             other => anyhow::bail!("unexpected jobs reply: {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<MasterStats> {
+        match self.call(&MasterRequest::Stats)? {
+            MasterResponse::Stats(s) => Ok(s),
+            MasterResponse::Err(m) => anyhow::bail!("stats query rejected: {m}"),
+            other => anyhow::bail!("unexpected stats reply: {other:?}"),
         }
     }
 
@@ -271,6 +422,31 @@ mod tests {
         }
     }
 
+    fn rand_shard(rng: &mut Pcg, shard: u32) -> ShardStat {
+        let machines = 1 + rng.gen_range(32) as u32;
+        let capacity = machines * (1 + rng.gen_range(8) as u32);
+        let held = rng.gen_range(u64::from(capacity) + 1) as u32;
+        ShardStat { shard, machines, capacity, free: capacity - held, held }
+    }
+
+    fn rand_stats(rng: &mut Pcg) -> MasterStats {
+        MasterStats {
+            ticks: rng.next_u64() >> 16,
+            tick_p50_us: rng.gen_range(1 << 20),
+            tick_p99_us: rng.gen_range(1 << 24),
+            tick_max_us: rng.gen_range(1 << 24),
+            decisions: rng.next_u64() >> 32,
+            starts: rng.gen_range(1 << 20),
+            grows: rng.gen_range(1 << 20),
+            shrinks: rng.gen_range(1 << 20),
+            stops: rng.gen_range(1 << 20),
+            jobs_total: rng.gen_range(1 << 16),
+            jobs_running: rng.gen_range(1 << 16),
+            conservation_ok: rng.gen_range(2) == 1,
+            shards: (0..rng.gen_range(5) as u32).map(|s| rand_shard(rng, s)).collect(),
+        }
+    }
+
     fn rand_info(rng: &mut Pcg) -> JobInfo {
         JobInfo {
             name: rand_str(rng),
@@ -297,6 +473,8 @@ mod tests {
                 MasterRequest::Submit(rand_spec(rng)),
                 MasterRequest::Jobs,
                 MasterRequest::Shutdown,
+                MasterRequest::Stats,
+                MasterRequest::JobsPage { from: rng.next_u64() >> 32, limit: rng.gen_range(256) },
             ];
             for r in reqs {
                 let back = MasterRequest::decode(&r.encode()).map_err(|e| e.to_string())?;
@@ -316,6 +494,12 @@ mod tests {
                 MasterResponse::Jobs((0..rng.gen_range(5)).map(|_| rand_info(rng)).collect()),
                 MasterResponse::Ok,
                 MasterResponse::Err(rand_str(rng)),
+                MasterResponse::Stats(rand_stats(rng)),
+                MasterResponse::JobsPage {
+                    jobs: (0..rng.gen_range(5)).map(|_| rand_info(rng)).collect(),
+                    next: rng.gen_range(1 << 16),
+                    total: rng.gen_range(1 << 16),
+                },
             ];
             for r in resps {
                 let back = MasterResponse::decode(&r.encode()).map_err(|e| e.to_string())?;
@@ -336,6 +520,8 @@ mod tests {
             MasterRequest::Submit(rand_spec(&mut rng)).encode(),
             MasterRequest::Jobs.encode(),
             MasterRequest::Shutdown.encode(),
+            MasterRequest::Stats.encode(),
+            MasterRequest::JobsPage { from: 128, limit: 64 }.encode(),
         ];
         for full in frames {
             for cut in 0..full.len() {
@@ -351,6 +537,9 @@ mod tests {
             MasterResponse::Jobs(vec![rand_info(&mut rng), rand_info(&mut rng)]).encode(),
             MasterResponse::Ok.encode(),
             MasterResponse::Err("no capacity".into()).encode(),
+            MasterResponse::Stats(rand_stats(&mut rng)).encode(),
+            MasterResponse::JobsPage { jobs: vec![rand_info(&mut rng)], next: 1, total: 9 }
+                .encode(),
         ];
         for full in frames {
             for cut in 0..full.len() {
@@ -377,6 +566,8 @@ mod tests {
             }),
             MasterRequest::Jobs,
             MasterRequest::Shutdown,
+            MasterRequest::Stats,
+            MasterRequest::JobsPage { from: 0, limit: 32 },
         ];
         for r in reqs {
             assert_eq!(MasterRequest::decode(&r.encode()).unwrap(), r);
@@ -397,6 +588,22 @@ mod tests {
             }]),
             MasterResponse::Ok,
             MasterResponse::Err("no capacity".into()),
+            MasterResponse::Stats(MasterStats {
+                ticks: 1000,
+                tick_p50_us: 150,
+                tick_p99_us: 900,
+                tick_max_us: 1200,
+                decisions: 420,
+                starts: 200,
+                grows: 180,
+                shrinks: 40,
+                stops: 120,
+                jobs_total: 220,
+                jobs_running: 100,
+                conservation_ok: true,
+                shards: vec![ShardStat { shard: 0, machines: 32, capacity: 256, free: 200, held: 56 }],
+            }),
+            MasterResponse::JobsPage { jobs: vec![], next: 0, total: 0 },
         ];
         for r in resps {
             assert_eq!(MasterResponse::decode(&r.encode()).unwrap(), r);

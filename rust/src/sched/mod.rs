@@ -133,6 +133,129 @@ impl Scheduler for NoopScheduler {
     fn replan(&mut self, _ctl: &mut dyn ClusterCtl) {}
 }
 
+/// An owned, point-in-time materialisation of a [`ClusterView`].
+///
+/// Datacenter-scale engines keep their inventory sharded behind many locks;
+/// letting a policy call straight into the engine would re-take those locks
+/// on every `free_gpus()` / `job_view()` probe. Instead the engine
+/// assembles a snapshot once per tick (reading each shard briefly, never
+/// all at once — no stop-the-world) and the policy plans against the
+/// owned copy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ViewSnapshot {
+    pub now_s: f64,
+    pub n_machines: usize,
+    pub gpus_per_machine: u32,
+    pub total_gpus: u32,
+    pub free_gpus: u32,
+    pub max_p_norm: u32,
+    pub jobs: Vec<JobView>,
+}
+
+impl ViewSnapshot {
+    /// Materialise every scalar and job row of `view`.
+    pub fn assemble<V: ClusterView + ?Sized>(view: &V) -> ViewSnapshot {
+        ViewSnapshot {
+            now_s: view.now_s(),
+            n_machines: view.n_machines(),
+            gpus_per_machine: view.gpus_per_machine(),
+            total_gpus: view.total_gpus(),
+            free_gpus: view.free_gpus(),
+            max_p_norm: view.max_p_norm(),
+            jobs: (0..view.n_jobs()).map(|j| view.job_view(j)).collect(),
+        }
+    }
+
+    /// Re-read the rows an accepted decision may have changed: the fleet's
+    /// free count and the target job's view. Everything else stays frozen —
+    /// engine decisions touch exactly one job plus the inventory.
+    pub fn refresh_job<V: ClusterView + ?Sized>(&mut self, view: &V, job: usize) {
+        self.free_gpus = view.free_gpus();
+        if job < self.jobs.len() {
+            self.jobs[job] = view.job_view(job);
+        }
+    }
+}
+
+/// [`ClusterCtl`] adapter that serves reads from a [`ViewSnapshot`] and
+/// forwards decisions to the wrapped engine, re-reading only what the
+/// decision changed.
+///
+/// This preserves the module contract above — decisions are applied
+/// eagerly and subsequent view reads observe their effect — because
+/// `submit` refreshes the snapshot's free count and the target job's row
+/// from the engine after every accepted decision. What a policy may
+/// observe mid-tick therefore differs from the direct path in exactly one
+/// way: rows of *other* jobs (and the clock) stay frozen at
+/// tick-assembly time. Engine decisions only ever mutate their target job
+/// plus the inventory, so for every policy in [`crate::schedulers`] the
+/// two paths produce byte-identical decision logs (golden-tested).
+///
+/// `predicted_throughput` / `predicted_efficiency` still delegate to the
+/// engine: they are pure functions of the calibrated device model (no
+/// inventory locks), and policies probe them at arbitrary `p`, which no
+/// finite snapshot could pre-answer.
+pub struct SnapshotCtl<'a, C: ClusterCtl + ?Sized> {
+    snap: ViewSnapshot,
+    inner: &'a mut C,
+}
+
+impl<'a, C: ClusterCtl + ?Sized> SnapshotCtl<'a, C> {
+    pub fn new(inner: &'a mut C) -> SnapshotCtl<'a, C> {
+        let snap = ViewSnapshot::assemble(&*inner);
+        SnapshotCtl { snap, inner }
+    }
+
+    /// The snapshot as last refreshed (for post-replan inspection).
+    pub fn snapshot(&self) -> &ViewSnapshot {
+        &self.snap
+    }
+}
+
+impl<C: ClusterCtl + ?Sized> ClusterView for SnapshotCtl<'_, C> {
+    fn now_s(&self) -> f64 {
+        self.snap.now_s
+    }
+    fn n_machines(&self) -> usize {
+        self.snap.n_machines
+    }
+    fn gpus_per_machine(&self) -> u32 {
+        self.snap.gpus_per_machine
+    }
+    fn total_gpus(&self) -> u32 {
+        self.snap.total_gpus
+    }
+    fn free_gpus(&self) -> u32 {
+        self.snap.free_gpus
+    }
+    fn max_p_norm(&self) -> u32 {
+        self.snap.max_p_norm
+    }
+    fn n_jobs(&self) -> usize {
+        self.snap.jobs.len()
+    }
+    fn job_view(&self, job: usize) -> JobView {
+        self.snap.jobs[job]
+    }
+    fn predicted_throughput(&self, job: usize, p: u32) -> f64 {
+        self.inner.predicted_throughput(job, p)
+    }
+    fn predicted_efficiency(&self, job: usize, p: u32, max_p: u32) -> f64 {
+        self.inner.predicted_efficiency(job, p, max_p)
+    }
+}
+
+impl<C: ClusterCtl + ?Sized> ClusterCtl for SnapshotCtl<'_, C> {
+    fn submit(&mut self, d: Decision) -> bool {
+        let job = d.job();
+        let ok = self.inner.submit(d);
+        if ok {
+            self.snap.refresh_job(&*self.inner, job);
+        }
+        ok
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,5 +388,52 @@ mod tests {
         assert!(!eng.submit(Decision::Start { job: 0, p: 1 }));
         assert!(!eng.submit(Decision::Preempt { job: 0 }));
         assert!(eng.log.is_empty());
+    }
+
+    #[test]
+    fn snapshot_materialises_every_row() {
+        let eng = MockEngine { free: 3, p: [1, 0], log: Vec::new() };
+        let snap = ViewSnapshot::assemble(&eng);
+        assert_eq!(snap.now_s, eng.now_s());
+        assert_eq!(snap.n_machines, 1);
+        assert_eq!(snap.total_gpus, 4);
+        assert_eq!(snap.free_gpus, 3);
+        assert_eq!(snap.max_p_norm, 4);
+        assert_eq!(snap.jobs.len(), 2);
+        assert_eq!(snap.jobs[0], eng.job_view(0));
+        assert_eq!(snap.jobs[1], eng.job_view(1));
+    }
+
+    #[test]
+    fn snapshot_ctl_refreshes_eagerly_after_accepted_decisions() {
+        let mut eng = MockEngine { free: 4, p: [0, 0], log: Vec::new() };
+        let mut ctl = SnapshotCtl::new(&mut eng);
+        assert!(ctl.submit(Decision::Start { job: 0, p: 2 }));
+        // the module contract: reads observe the decision's effect
+        assert_eq!(ctl.free_gpus(), 2);
+        assert!(ctl.job_view(0).running);
+        assert_eq!(ctl.job_view(0).current_p, 2);
+        // untouched rows stay frozen (and correct: job 1 never changed)
+        assert!(ctl.job_view(1).pending);
+        // rejected decisions leave the snapshot untouched
+        assert!(!ctl.submit(Decision::Grow { job: 1, to: 9 }));
+        assert_eq!(ctl.free_gpus(), 2);
+        assert!(!ctl.submit(Decision::Preempt { job: 0 }));
+        assert_eq!(ctl.job_view(0).current_p, 2);
+    }
+
+    #[test]
+    fn policy_through_snapshot_matches_direct_engine_byte_for_byte() {
+        let mut direct = MockEngine { free: 4, p: [0, 0], log: Vec::new() };
+        GreedyPolicy.replan(&mut direct);
+
+        let mut snapped = MockEngine { free: 4, p: [0, 0], log: Vec::new() };
+        {
+            let mut ctl = SnapshotCtl::new(&mut snapped);
+            GreedyPolicy.replan(&mut ctl);
+        }
+        assert_eq!(format!("{:?}", snapped.log), format!("{:?}", direct.log));
+        assert_eq!(snapped.p, direct.p);
+        assert_eq!(snapped.free, direct.free);
     }
 }

@@ -490,6 +490,40 @@ pub trait PointToPoint: Send {
     fn recycle(&mut self, _spent: Vec<u8>) {}
 }
 
+/// A data-plane endpoint that goes nowhere: sends are swallowed, receives
+/// time out immediately. Headless workers (`edl worker --headless`) plug
+/// this in so the training loop keeps its shape — same `WorkerCtx`, same
+/// step cadence — without opening sockets or moving gradients. Only valid
+/// when *every* worker of the job is headless; a mixed job would wait on
+/// frames that never arrive.
+pub struct NullNode {
+    id: NodeId,
+}
+
+impl NullNode {
+    pub fn new(id: NodeId) -> NullNode {
+        NullNode { id }
+    }
+}
+
+impl PointToPoint for NullNode {
+    fn id(&self) -> NodeId {
+        self.id
+    }
+
+    fn send(&mut self, _to: NodeId, _tag: u32, _payload: Vec<u8>) -> Result<()> {
+        Ok(())
+    }
+
+    fn recv_from(&mut self, from: NodeId, tag: u32, _timeout: Duration) -> Result<Vec<u8>> {
+        Err(NetError::Timeout { from: Some(from), tag: Some(tag) })
+    }
+
+    fn recv_any(&mut self, _timeout: Duration) -> Result<Msg> {
+        Err(NetError::Timeout { from: None, tag: None })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // in-process hub
 // ---------------------------------------------------------------------------

@@ -293,6 +293,11 @@ pub struct WorkerCtx<N: PointToPoint = InProcEndpoint> {
     /// pushes (shared with the deploy shell's control bridge); empty in
     /// the in-proc engine, which collapses to the flat ring
     pub peer_digests: Arc<Mutex<HashMap<NodeId, u64>>>,
+    /// headless mode: no data plane — collectives are skipped and the
+    /// worker applies its own gradients locally, preserving the step
+    /// cadence and control protocol without moving bytes. Only valid when
+    /// every worker of the job is headless.
+    pub headless: bool,
 }
 
 const NET_T: Duration = Duration::from_secs(30);
@@ -367,13 +372,21 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
                 _ => {}
             }
         };
-        device.set_params(allreduce::broadcast_recv(
-            &mut ctx.net,
-            src,
-            peers.as_slice(),
-            join_at,
-            NET_T,
-        )?)?;
+        if ctx.headless {
+            // no data plane to ship the model over — materialise params from
+            // the shared seed instead; every worker of a headless job does
+            // the same, so there is no divergence worth reconciling
+            let _ = (src, peers);
+            device.init(ctx.init_seed)?;
+        } else {
+            device.set_params(allreduce::broadcast_recv(
+                &mut ctx.net,
+                src,
+                peers.as_slice(),
+                join_at,
+                NET_T,
+            )?)?;
+        }
         step = join_at;
         ring = r;
         local_batch = lb;
@@ -523,6 +536,18 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
             }
 
             // -- weighted ring allreduce (grads ++ [weight]) -----------------
+            if ctx.headless {
+                // headless: no collective — apply own gradients normalised by
+                // own weight. Same update shape and step cadence as the real
+                // loop, zero data-plane traffic.
+                if weight > 0.0 {
+                    for g in grads.iter_mut() {
+                        *g /= weight;
+                    }
+                    device.apply(&grads, ctx.lr)?;
+                }
+                break 'sync;
+            }
             'collective: loop {
                 let mut buf = std::mem::take(&mut grads);
                 buf.push(1.0); // weight slot
@@ -637,8 +662,9 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
                     });
                     return Ok(());
                 }
-                if plan.broadcast_src == ctx.id && !plan.joiners.is_empty() {
+                if plan.broadcast_src == ctx.id && !plan.joiners.is_empty() && !ctx.headless {
                     // one existing worker broadcasts the post-update model
+                    // (headless joiners re-init from the shared seed instead)
                     let snapshot = device.get_params()?;
                     allreduce::broadcast_send(&mut ctx.net, &plan.joiners, plan.at_step, &snapshot)?;
                 }

@@ -167,6 +167,7 @@ fn live_deploy_trains_through_injected_control_delays() {
                 corpus,
                 lr: 0.05,
                 config_digest: digest,
+                headless: false,
             });
         })
     };

@@ -56,6 +56,97 @@ fn wait_for(
     .unwrap_or_else(|| panic!("timed out waiting for {what}; jobs: {last:?}"))
 }
 
+/// Spawn an `edl master` daemon with extra flags and parse the control +
+/// KV addresses it prints on stdout.
+fn spawn_master(extra: &[&str]) -> (MasterProc, String, String) {
+    let mut args = vec![
+        "master",
+        "--machines",
+        "2",
+        "--gpus",
+        "2",
+        "--scheduler",
+        "elastic-tiresias",
+        "--tick-ms",
+        "200",
+    ];
+    args.extend_from_slice(extra);
+    let mut child = Command::new(bin())
+        .args(&args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn edl master");
+    let stdout = child.stdout.take().expect("master stdout");
+    let master = MasterProc(child);
+
+    let mut reader = BufReader::new(stdout);
+    let (mut master_addr, mut kv_addr) = (String::new(), String::new());
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while master_addr.is_empty() || kv_addr.is_empty() {
+        assert!(Instant::now() < deadline, "master never printed its addresses");
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read master stdout");
+        assert!(n > 0, "master exited before printing its addresses");
+        if let Some(rest) = line.strip_prefix("master-control ") {
+            master_addr = rest.trim().to_string();
+        } else if let Some(rest) = line.strip_prefix("kv ") {
+            kv_addr = rest.trim().to_string();
+        }
+    }
+    (master, master_addr, kv_addr)
+}
+
+/// PR 9 headless mode: the master spawns real `edl worker --headless`
+/// processes — full control protocol (register, sync barriers, leases,
+/// elasticity), but no data plane at all. Jobs must reach running, make
+/// monotone step progress, finish, and leave the sharded inventory fully
+/// free with the conservation invariant intact.
+#[test]
+fn headless_workers_run_jobs_without_a_data_plane() {
+    let (_master, master_addr, _kv_addr) = spawn_master(&["--headless-workers"]);
+    let mut mc = MasterClient::connect(&master_addr).expect("connect master");
+
+    for name in ["hl1", "hl2", "hl3"] {
+        mc.submit(&SubmitSpec {
+            name: name.into(),
+            gpus: 1,
+            steps: 120,
+            compute_ms: 5,
+            ..Default::default()
+        })
+        .unwrap();
+    }
+
+    // every job trains without any gradient traffic
+    wait_for(&mut mc, "headless jobs to make step progress", Duration::from_secs(120), |j| {
+        ["hl1", "hl2", "hl3"].iter().all(|n| {
+            j.get(*n).map(|i| i.step >= 10 || i.phase == "finished").unwrap_or(false)
+        })
+    });
+    let finished =
+        wait_for(&mut mc, "headless jobs to finish", Duration::from_secs(240), |j| {
+            j.len() == 3 && j.values().all(|i| i.phase == "finished")
+        });
+    for i in finished.values() {
+        assert_eq!(i.parallelism, 0, "finished headless job still holds GPUs: {i:?}");
+        assert!(i.step >= 120, "headless job finished early: {i:?}");
+    }
+
+    // sharded-inventory invariants, observed over the wire
+    let st = mc.stats().expect("master stats");
+    assert!(st.conservation_ok, "inventory conservation violated: {st:?}");
+    assert!(st.ticks > 0, "master reported no ticks: {st:?}");
+    assert!(st.starts >= 3, "master reported fewer starts than jobs: {st:?}");
+    let (free, cap) = st
+        .shards
+        .iter()
+        .fold((0u64, 0u64), |(f, c), s| (f + s.free as u64, c + s.capacity as u64));
+    assert_eq!(free, cap, "finished fleet must be fully free: {:?}", st.shards);
+
+    mc.shutdown().expect("master shutdown");
+}
+
 #[test]
 fn master_runs_three_concurrent_jobs_with_live_elasticity() {
     let mut child = Command::new(bin())

@@ -1,0 +1,167 @@
+//! Scale-path tests for the PR 9 datacenter master: an in-process
+//! `Master` with `sim_slots` (no worker processes at all — jobs tick a
+//! simulated step cadence inside the engine) absorbs a concurrent submit
+//! storm over real TCP, and the sharded inventory must conserve
+//! `free + held == capacity` on every shard from first tick to last,
+//! with the paginated `JobsPage` scan agreeing with the full listing.
+
+use edl::harness::testutil::poll_until;
+use edl::master::proto::{MasterClient, SubmitSpec};
+use edl::master::{MachineSpec, Master, MasterConfig};
+use edl::sched::Scheduler;
+use edl::schedulers::ElasticTiresias;
+use std::time::Duration;
+
+fn fleet(n: usize, gpus: u32) -> Vec<MachineSpec> {
+    (0..n).map(|i| MachineSpec { name: format!("m{i}"), gpus }).collect()
+}
+
+fn scheduler() -> Box<dyn Scheduler + Send> {
+    Box::new(ElasticTiresias::new(vec![500.0, 10_000.0], 10, 0.5))
+}
+
+fn start_master(machines: usize, gpus: u32, rack_size: usize, pipeline: bool) -> Master {
+    let cfg = MasterConfig {
+        machines: fleet(machines, gpus),
+        tick_ms: 50,
+        lease_ttl_ms: 5_000,
+        listen: "127.0.0.1:0".into(),
+        kv_listen: "127.0.0.1:0".into(),
+        worker_bin: None,
+        rack_size,
+        sim_slots: true,
+        headless_workers: false,
+        pipeline,
+        executors: 4,
+        pollers: 4,
+    };
+    Master::start(cfg, scheduler()).expect("start master")
+}
+
+/// Drive `n_jobs` concurrent submits from `n_threads` TCP clients, wait
+/// for every job to finish, and return the final stats.
+fn storm(addr: &str, n_threads: usize, per_thread: usize) -> edl::master::proto::MasterStats {
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut mc = MasterClient::connect(&addr).expect("storm client");
+                for k in 0..per_thread {
+                    mc.submit(&SubmitSpec {
+                        name: format!("s{t}x{k}"),
+                        gpus: 1 + ((t + k) % 2) as u32,
+                        steps: 40 + (k as u64 % 3) * 20,
+                        compute_ms: 2,
+                        ..Default::default()
+                    })
+                    .expect("submit");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("storm thread");
+    }
+    let n_jobs = n_threads * per_thread;
+
+    let mut mc = MasterClient::connect(addr).expect("poll client");
+    poll_until(Duration::from_secs(180), Duration::from_millis(200), || {
+        let jobs = mc.jobs().ok()?;
+        (jobs.len() == n_jobs && jobs.iter().all(|j| j.phase == "finished")).then_some(())
+    })
+    .unwrap_or_else(|| {
+        let jobs = mc.jobs().unwrap_or_default();
+        let unfinished: Vec<_> =
+            jobs.iter().filter(|j| j.phase != "finished").map(|j| (&j.name, &j.phase)).collect();
+        panic!("storm never drained: {}/{n_jobs} jobs, unfinished: {unfinished:?}", jobs.len());
+    });
+    mc.stats().expect("stats")
+}
+
+fn assert_fleet_clean(st: &edl::master::proto::MasterStats, n_jobs: u64) {
+    assert!(st.conservation_ok, "per-shard conservation violated: {st:?}");
+    assert!(st.starts >= n_jobs, "fewer starts than jobs: {st:?}");
+    assert!(st.decisions > 0 && st.ticks > 0, "no scheduling happened: {st:?}");
+    for s in &st.shards {
+        assert_eq!(
+            s.free + s.held,
+            s.capacity,
+            "shard {} violates free+held==capacity: {st:?}",
+            s.shard
+        );
+        assert_eq!(s.held, 0, "shard {} leaks slots after drain: {st:?}", s.shard);
+    }
+}
+
+#[test]
+fn submit_storm_conserves_every_shard_until_drained() {
+    let master = start_master(32, 4, 4, true);
+    let addr = master.addr.clone();
+
+    let st = storm(&addr, 8, 5);
+    assert_fleet_clean(&st, 40);
+    assert_eq!(st.jobs_total, 40);
+    assert_eq!(st.jobs_running, 0);
+    assert_eq!(st.shards.len(), 8, "32 machines / rack 4 must shard 8 ways: {st:?}");
+
+    MasterClient::connect(&addr).unwrap().shutdown().expect("shutdown");
+    master.join();
+}
+
+/// The serial, single-shard configuration (pipeline off, one rack) is the
+/// in-repo baseline `perf_master_tick` compares against — it must pass
+/// the same storm with the same invariants, just slower.
+#[test]
+fn serial_single_shard_baseline_conserves_too() {
+    let master = start_master(16, 4, usize::MAX, false);
+    let addr = master.addr.clone();
+
+    let st = storm(&addr, 4, 4);
+    assert_fleet_clean(&st, 16);
+    assert_eq!(st.shards.len(), 1, "rack_size MAX must collapse to one shard: {st:?}");
+
+    MasterClient::connect(&addr).unwrap().shutdown().expect("shutdown");
+    master.join();
+}
+
+#[test]
+fn jobs_page_scan_agrees_with_full_listing() {
+    let master = start_master(8, 4, 2, true);
+    let addr = master.addr.clone();
+
+    let mut mc = MasterClient::connect(&addr).expect("client");
+    for k in 0..23 {
+        mc.submit(&SubmitSpec {
+            name: format!("p{k}"),
+            gpus: 1,
+            steps: 30,
+            compute_ms: 2,
+            ..Default::default()
+        })
+        .expect("submit");
+    }
+
+    // walk pages with a deliberately awkward page size; the scan must
+    // terminate, never repeat a job, and cover exactly the full listing
+    let full = mc.jobs().expect("full listing");
+    let mut paged = Vec::new();
+    let mut from = 0u64;
+    loop {
+        let (page, next, total) = mc.jobs_page(from, 7).expect("page");
+        assert!(page.len() <= 7, "oversized page");
+        assert_eq!(total, 23);
+        paged.extend(page.into_iter().map(|j| j.name));
+        if next >= total {
+            break;
+        }
+        assert!(next > from, "paging must advance");
+        from = next;
+    }
+    let mut full_names: Vec<_> = full.iter().map(|j| j.name.clone()).collect();
+    full_names.sort();
+    paged.sort();
+    assert_eq!(paged, full_names, "paged scan diverged from full listing");
+
+    MasterClient::connect(&addr).unwrap().shutdown().expect("shutdown");
+    master.join();
+}

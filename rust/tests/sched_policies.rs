@@ -9,10 +9,15 @@
 //! 2. **Decision replay** — replaying the engine's recorded decision log
 //!    through a fresh `ClusterSim` (no policy in the loop) reproduces the
 //!    run's JCTs and metrics byte for byte.
+//!
+//! 3. **Snapshot-view equivalence** — running every policy through the
+//!    sharded master's `SnapshotCtl` view assembly (PR 9) emits the
+//!    byte-identical decision stream, and its log replays cleanly.
 
 use edl::api::JobControl;
 use edl::cluster::{ClusterSim, JobState, ScaleMode};
 use edl::gpu_sim::{self, ALL_DNNS};
+use edl::sched::Scheduler;
 use edl::schedulers::{ElasticSimple, ElasticTiresias, FifoScheduler, StaticScheduler, Tiresias};
 use edl::trace::TraceJob;
 use edl::util::rng::Pcg;
@@ -563,6 +568,71 @@ fn replaying_the_decision_log_reproduces_metrics_byte_for_byte() {
             "replay diverged from the live run on seed {seed}"
         );
         assert_eq!(replayed.decision_log, log, "replay re-records the identical log");
+    }
+}
+
+// ===========================================================================
+// 3. snapshot-view golden equivalence (sharded-master view assembly)
+// ===========================================================================
+//
+// The live master's sharded engine runs every policy tick through a
+// `SnapshotCtl` — a materialised `ViewSnapshot` that refreshes only the
+// decided job's row after each accepted decision. Policies are unchanged
+// by PR 9, so the decision stream through the snapshot layer must be
+// byte-identical to the direct-engine stream, and the snapshot log must
+// replay into a fresh simulator exactly like a direct log.
+
+#[test]
+fn every_policy_through_snapshot_view_emits_identical_decision_log() {
+    for seed in SEEDS {
+        let trace = random_trace(seed, N_JOBS);
+
+        let runs: Vec<(&str, Box<dyn Fn() -> Box<dyn Scheduler + Send>>)> = vec![
+            ("fifo", Box::new(|| Box::new(FifoScheduler))),
+            ("static", Box::new(|| Box::new(StaticScheduler { fixed_p: 4 }))),
+            ("elastic-simple", Box::new(|| Box::new(ElasticSimple { default_p: 4, r: 0.5 }))),
+            ("tiresias", Box::new(|| Box::new(Tiresias::new(vec![500.0, 10_000.0])))),
+            (
+                "elastic-tiresias",
+                Box::new(|| Box::new(ElasticTiresias::new(vec![500.0, 10_000.0], 3, 0.5))),
+            ),
+        ];
+        for (name, mk) in &runs {
+            let mut direct = ClusterSim::new(2, 8, &trace, ScaleMode::Edl);
+            direct.run(&mut *mk(), HORIZON);
+            let mut snapshot = ClusterSim::new(2, 8, &trace, ScaleMode::Edl);
+            snapshot.run_snapshot(&mut *mk(), HORIZON);
+            assert_eq!(
+                format!("{:?}", direct.decision_log),
+                format!("{:?}", snapshot.decision_log),
+                "{name} decision log diverged through the snapshot view (seed {seed})"
+            );
+            assert_eq!(
+                fingerprint(&direct),
+                fingerprint(&snapshot),
+                "{name} metrics diverged through the snapshot view (seed {seed})"
+            );
+        }
+    }
+}
+
+#[test]
+fn snapshot_view_decision_log_replays_byte_for_byte() {
+    for seed in SEEDS {
+        let trace = random_trace(seed, N_JOBS);
+        let mut live = ClusterSim::new(2, 8, &trace, ScaleMode::Edl);
+        live.run_snapshot(&mut ElasticTiresias::new(vec![500.0, 10_000.0], 3, 0.5), HORIZON);
+        let log = live.decision_log.clone();
+        assert!(!log.is_empty(), "snapshot run recorded no decisions (seed {seed})");
+
+        let mut replayed = ClusterSim::new(2, 8, &trace, ScaleMode::Edl);
+        let applied = replayed.replay(&log, HORIZON);
+        assert_eq!(applied, log.len(), "snapshot log must replay fully (seed {seed})");
+        assert_eq!(
+            fingerprint(&live),
+            fingerprint(&replayed),
+            "snapshot log replay diverged (seed {seed})"
+        );
     }
 }
 
