@@ -1214,7 +1214,7 @@ impl LeaderCore {
 
     fn handle_checkpoint_data(&mut self, data: Option<Vec<u8>>) {
         let Some(ctx) = self.pending_load.take() else { return };
-        let decoded = data.and_then(|bytes| decode_checkpoint(&bytes, self.cfg.seed).ok());
+        let decoded = data.and_then(|bytes| decode_checkpoint(&bytes).ok());
         match (ctx, decoded) {
             (LoadCtx::Manual(token), Some((at_step, params, asg))) => {
                 self.apply_restore(at_step, params, asg);
@@ -1336,7 +1336,20 @@ impl LeaderCore {
                     }
                 }
                 match self.assigner.next_partition(id) {
-                    Some(meta) => self.send_ctrl(id, CtrlMsg::Assign { meta }),
+                    Some(meta) => {
+                        // the shard's migrated virtual-worker stream: pure
+                        // derivation positioned at the assignment's sample
+                        // offset, so remainder handoffs continue the stream
+                        // exactly where the departing holder stopped
+                        // (DESIGN.md §11)
+                        let rng = crate::data::schedule::shard_stream_at(
+                            self.cfg.seed,
+                            meta.epoch,
+                            meta.id,
+                            self.assigner.shard_offset(&meta),
+                        );
+                        self.send_ctrl(id, CtrlMsg::Assign { meta, rng })
+                    }
                     None => self.send_ctrl(id, CtrlMsg::NoData),
                 }
             }
@@ -1608,11 +1621,14 @@ impl Clone for LeaderCore {
 }
 
 /// Decode a checkpoint blob: `(step, params, assigner)`. Pure — the shell
-/// did the reading.
-pub fn decode_checkpoint(bytes: &[u8], seed: u64) -> anyhow::Result<(u64, Vec<f32>, Assigner)> {
+/// did the reading. The assigner section carries its own RNG state
+/// (DESIGN.md §11), so a restored run continues the exact permutation
+/// stream of the checkpointed one — no seed parameter, nothing to get
+/// wrong.
+pub fn decode_checkpoint(bytes: &[u8]) -> anyhow::Result<(u64, Vec<f32>, Assigner)> {
     let mut d = Dec::new(bytes);
     let step = d.u64()?;
     let params = d.f32s()?;
-    let asg = Assigner::decode(&mut d, seed)?;
+    let asg = Assigner::decode(&mut d)?;
     Ok((step, params, asg))
 }

@@ -25,6 +25,7 @@ use crate::data::corpus::Corpus;
 use crate::data::{Assigner, PartitionMeta, PartitionTable};
 use crate::transport::{InProcHub, NodeId};
 use crate::util::now_ms;
+use crate::util::rng::Pcg;
 use crate::worker::{worker_loop, Backend, WorkerCtx, WorkerKnobs};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -84,7 +85,11 @@ pub enum CtrlMsg {
         broadcast_src: NodeId,
         joiners: Arc<Vec<NodeId>>,
     },
-    Assign { meta: PartitionMeta },
+    /// `rng` is the shard's migrated virtual-worker stream (DESIGN.md
+    /// §11): positioned at `meta.start`'s offset within the full logical
+    /// shard, so whoever executes the assignment continues the stream
+    /// exactly where the previous holder stopped
+    Assign { meta: PartitionMeta, rng: Pcg },
     NoData,
     SyncGo { ring: Arc<Vec<NodeId>>, sync_tag: u64, switch: Option<SwitchPlan> },
     SendParams,

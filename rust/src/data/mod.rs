@@ -11,6 +11,7 @@
 //! property-tested below under random scale event schedules.
 
 pub mod corpus;
+pub mod schedule;
 
 use crate::util::rng::Pcg;
 use crate::wire::{Dec, Enc};
@@ -192,6 +193,15 @@ impl Assigner {
         }
     }
 
+    /// Sample offset of `meta` within its full logical shard: how many of
+    /// the shard's samples earlier holders already consumed. This is the
+    /// migrated per-shard RNG stream position (one draw per sample, so
+    /// the leader re-derives a remainder assignment's stream with
+    /// `schedule::shard_stream_at(seed, epoch, shard, offset)`).
+    pub fn shard_offset(&self, meta: &PartitionMeta) -> u64 {
+        meta.start - self.table.partition(meta.id, meta.epoch).start
+    }
+
     /// True when every sample of the epoch is consumed and nothing is in
     /// flight.
     pub fn epoch_exhausted(&self) -> bool {
@@ -233,11 +243,15 @@ impl Assigner {
     }
 
     /// Fold the assignment state into a hasher (model-checker state
-    /// dedup). The RNG is excluded: it only advances in `start_epoch`, a
-    /// fixed number of draws per epoch, so its state is a function of
-    /// `(seed, epoch)` and hashing `epoch` covers it. `returned` is hashed
+    /// dedup). The RNG is included: since it survives encode/decode it is
+    /// first-class trajectory state — two assigners that agree on
+    /// everything else but hold different generator positions would
+    /// produce different future permutations. `returned` is hashed
     /// in order — it is a stack, so order affects future assignments.
     pub fn hash_state<H: std::hash::Hasher>(&self, h: &mut H) {
+        let (rng_state, rng_inc) = self.rng.to_parts();
+        h.write_u64(rng_state);
+        h.write_u64(rng_inc);
         h.write_u64(self.table.n_samples);
         h.write_u64(self.table.n_partitions);
         h.write_u64(self.epoch);
@@ -271,6 +285,7 @@ impl Assigner {
     /// leader sends the permutation list + progress to the new leader) and
     /// for checkpointing.
     pub fn encode(&self, e: &mut Enc) {
+        e.pcg(&self.rng);
         e.u64(self.table.n_samples).u64(self.table.n_partitions).u64(self.epoch).u64(self.consumed);
         e.u64s(&self.queue);
         e.u32(self.returned.len() as u32);
@@ -287,10 +302,14 @@ impl Assigner {
         }
     }
 
-    /// Restore from `encode` output. RNG state restarts from `seed` —
-    /// permutations after restore differ, which is fine: the consistency
-    /// guarantee is per-epoch sample coverage, not a fixed order (§4.3).
-    pub fn decode(d: &mut Dec, seed: u64) -> crate::wire::Result<Assigner> {
+    /// Restore from `encode` output. The RNG state is carried across the
+    /// roundtrip, so the restored assigner continues the EXACT permutation
+    /// stream of the original — epoch permutations after a leader handoff
+    /// or checkpoint restore match an uninterrupted run bit for bit. (It
+    /// used to restart from the seed, which preserved §4.3 coverage but
+    /// silently diverged the training trajectory; see DESIGN.md §11.)
+    pub fn decode(d: &mut Dec) -> crate::wire::Result<Assigner> {
+        let rng = d.pcg()?;
         let n_samples = d.u64()?;
         let n_partitions = d.u64()?;
         let epoch = d.u64()?;
@@ -308,7 +327,7 @@ impl Assigner {
         }
         Ok(Assigner {
             table: PartitionTable::new(n_samples, n_partitions),
-            rng: Pcg::seeded(seed),
+            rng,
             epoch,
             queue,
             returned,
@@ -534,7 +553,7 @@ mod tests {
         let mut e = Enc::new();
         a.encode(&mut e);
         let bytes = e.into_bytes();
-        let mut b = Assigner::decode(&mut Dec::new(&bytes), 99).unwrap();
+        let mut b = Assigner::decode(&mut Dec::new(&bytes)).unwrap();
         assert_eq!(b.epoch, a.epoch);
         assert_eq!(b.consumed, a.consumed);
         assert_eq!(b.queue, a.queue);
@@ -542,6 +561,137 @@ mod tests {
         b.worker_left(1);
         let m = b.next_partition(3).unwrap();
         assert_eq!(m.start % b.table.partition_size, 5);
+    }
+
+    #[test]
+    fn restore_resumes_permutation_stream() {
+        // Regression for the reseed-on-restore bug: `decode` used to
+        // rebuild the RNG from a seed, so every epoch permutation AFTER a
+        // restore diverged from an uninterrupted run. The generator state
+        // now rides the encoding: restore-then-run must produce the same
+        // permutation stream as never-restored, indefinitely.
+        let mut a = Assigner::new(PartitionTable::new(240, 12), 42);
+        let mut e = Enc::new();
+        a.encode(&mut e);
+        let bytes = e.into_bytes();
+        let mut b = Assigner::decode(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(b.queue, a.queue);
+        for epoch in 0..4 {
+            let ra = collect_epoch(&mut a, &[1]);
+            let rb = collect_epoch(&mut b, &[1]);
+            assert_eq!(ra, rb, "epoch {epoch}: assignment streams diverged after restore");
+            a.advance_epoch();
+            b.advance_epoch();
+            assert_eq!(
+                b.queue, a.queue,
+                "epoch {}: post-restore permutation diverged from uninterrupted run",
+                epoch + 1
+            );
+        }
+        // and a restore taken mid-stream (after epochs already elapsed)
+        // resumes that later position, not epoch 0's
+        let mut e = Enc::new();
+        a.encode(&mut e);
+        let bytes = e.into_bytes();
+        let c = Assigner::decode(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(c.queue, a.queue);
+        assert_eq!(c.epoch, 4);
+    }
+
+    #[test]
+    fn schedule_is_worker_count_independent_property() {
+        // EasyScale-style claim (DESIGN.md §11): the logical-shard
+        // schedule — which samples belong to which shard, the per-epoch
+        // shard permutation, and each shard's internal sample order — is
+        // a function of (seed, epoch, shard) only. Physical worker count
+        // P and scale-event timing affect WHO consumes a shard, never
+        // WHAT the shard's sample stream is.
+        prop::check("schedule-worker-count-independent", 20, |rng| {
+            let n = 200 + rng.gen_range(1000);
+            let parts = 4 + rng.gen_range(12);
+            let seed = rng.next_u64();
+            let table = PartitionTable::new(n, parts);
+            let canonical = schedule::global_order(seed, 0, &table);
+            for &p in &[1usize, 2, 3, 5] {
+                let mut a = Assigner::new(table.clone(), seed);
+                // the live queue must match the pure derivation before a
+                // single assignment happens
+                let mut want_queue = schedule::epoch_permutation(seed, 0, a.table.n_partitions);
+                want_queue.reverse(); // queue pops from the back
+                if a.queue != want_queue {
+                    return Err(format!("P={p}: live queue != pure epoch permutation"));
+                }
+                // per-shard consumption traces under a random scale storm
+                let mut order: Vec<Vec<u64>> = vec![Vec::new(); a.table.n_partitions as usize];
+                let mut running: Vec<(u32, PartitionMeta, u64)> = Vec::new();
+                let mut next_worker: u32 = 0;
+                for _ in 0..p {
+                    next_worker += 1;
+                    if let Some(m) = a.next_partition(next_worker) {
+                        running.push((next_worker, m, 0));
+                    }
+                }
+                let mut steps = 0;
+                while !(a.epoch_exhausted() && running.is_empty()) {
+                    steps += 1;
+                    if steps > 100_000 {
+                        return Err("did not terminate".into());
+                    }
+                    match rng.gen_range(10) {
+                        0 => {
+                            next_worker += 1;
+                            if let Some(m) = a.next_partition(next_worker) {
+                                running.push((next_worker, m, 0));
+                            }
+                        }
+                        1 if !running.is_empty() => {
+                            let i = rng.gen_range(running.len() as u64) as usize;
+                            let (w, m, done) = running.swap_remove(i);
+                            for s in m.start..m.start + done {
+                                order[m.id as usize].push(s);
+                            }
+                            a.report_progress(w, done);
+                            a.worker_left(w);
+                        }
+                        _ if !running.is_empty() => {
+                            let i = rng.gen_range(running.len() as u64) as usize;
+                            let (w, m, done) = running[i];
+                            let room = m.len - done;
+                            let take = (1 + rng.gen_range(room.max(1))).min(room);
+                            let new_done = done + take;
+                            a.report_progress(w, new_done);
+                            if new_done == m.len {
+                                for s in m.start..m.start + m.len {
+                                    order[m.id as usize].push(s);
+                                }
+                                a.complete(w);
+                                if let Some(m2) = a.next_partition(w) {
+                                    running[i] = (w, m2, 0);
+                                } else {
+                                    running.swap_remove(i);
+                                }
+                            } else {
+                                running[i].2 = new_done;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                // global logical order: shards in permutation order, each
+                // shard's samples in its consumption order — must equal
+                // the canonical pure derivation for EVERY P and storm
+                let got: Vec<u64> = schedule::epoch_permutation(seed, 0, a.table.n_partitions)
+                    .into_iter()
+                    .flat_map(|idx| order[idx as usize].clone())
+                    .collect();
+                if got != canonical {
+                    return Err(format!(
+                        "P={p}: global sample order diverged from canonical schedule"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -555,7 +705,7 @@ mod tests {
         let mut e = Enc::new();
         a.encode(&mut e);
         let bytes = e.into_bytes();
-        let mut b = Assigner::decode(&mut Dec::new(&bytes), 1234).unwrap();
+        let mut b = Assigner::decode(&mut Dec::new(&bytes)).unwrap();
         b.worker_left(1); // credits 7 consumed, returns remainder
         let ranges = {
             let mut r = Vec::new();

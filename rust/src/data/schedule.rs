@@ -1,0 +1,150 @@
+//! Fixed logical-shard schedule — the pure half of accuracy-consistent
+//! elasticity (EasyScale, DESIGN.md §11).
+//!
+//! Everything trajectory-relevant about the data pipeline is a function
+//! of `(seed, epoch, shard)` only — never of the physical worker count P
+//! or of assignment timing:
+//!
+//!  * **per-epoch shard permutation** — replayed Fisher–Yates draws from
+//!    the assigner's seed. The live [`Assigner`](super::Assigner)
+//!    consumes the same draws from its persisted generator (which now
+//!    survives encode/decode), so the live queue and this pure
+//!    derivation can never disagree;
+//!  * **within-shard sample order** — sequential: a remainder handoff
+//!    (`start + done`) resumes exactly where the departing holder
+//!    stopped, so migration cannot reorder a shard's samples;
+//!  * **per-shard RNG stream** — an independent PCG stream per
+//!    `(seed, epoch, shard)` consuming exactly one draw per sample, so a
+//!    migrated assignment's stream position equals its sample offset and
+//!    is re-derivable by O(log n) jump-ahead ([`shard_stream_at`]).
+//!
+//! The permutation derivation deliberately REPLAYS the shuffles rather
+//! than jumping the generator ahead: `gen_range` uses Lemire rejection
+//! sampling, so the number of draws per epoch is data-dependent and the
+//! assigner's generator position is not a closed-form function of the
+//! epoch. Replay is exact by construction.
+
+use super::PartitionTable;
+use crate::util::rng::Pcg;
+
+/// Stream-id salt separating per-shard data streams from every other PCG
+/// stream family in the tree (cf. `Pcg::seeded`'s default stream).
+const SHARD_STREAM_SALT: u64 = 0x51AD_0557_3EA3_11D7;
+
+/// splitmix64 finaliser — decorrelates the `(epoch, shard)` lattice into
+/// stream ids so neighbouring shards get unrelated streams.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The RNG stream owned by logical shard `shard` in `epoch`, positioned
+/// at the shard's first sample. One draw per sample is the contract:
+/// anything that consumes more breaks [`shard_stream_at`]'s jump-ahead.
+pub fn shard_stream(seed: u64, epoch: u64, shard: u64) -> Pcg {
+    Pcg::new(mix(seed), mix(SHARD_STREAM_SALT ^ (epoch << 20) ^ shard))
+}
+
+/// [`shard_stream`] jumped to sample `offset` within the shard — the
+/// stream state the leader hands out with a remainder assignment whose
+/// first `offset` samples were consumed by earlier holders.
+pub fn shard_stream_at(seed: u64, epoch: u64, shard: u64, offset: u64) -> Pcg {
+    let mut rng = shard_stream(seed, epoch, shard);
+    rng.advance(offset);
+    rng
+}
+
+/// Assignment order of fresh shards for `epoch`: the Fisher–Yates
+/// permutation the live assigner builds for that epoch, in the order
+/// shards leave the pool (the live queue is popped from the back).
+/// Replays the draws of epochs `0..=epoch` from `seed`.
+pub fn epoch_permutation(seed: u64, epoch: u64, n_partitions: u64) -> Vec<u64> {
+    let mut rng = Pcg::seeded(seed);
+    let mut idx: Vec<u64> = Vec::new();
+    for _ in 0..=epoch {
+        idx = (0..n_partitions).collect();
+        for i in (1..idx.len()).rev() {
+            let j = rng.gen_range(i as u64 + 1) as usize;
+            idx.swap(i, j);
+        }
+    }
+    idx.reverse();
+    idx
+}
+
+/// The canonical global sample order of `epoch`: shards in
+/// [`epoch_permutation`] order, each shard's samples sequentially. Every
+/// physical execution — any P, any scale-event schedule — consumes the
+/// epoch's samples in exactly this logical order (property-tested in
+/// `data::tests`).
+pub fn global_order(seed: u64, epoch: u64, table: &PartitionTable) -> Vec<u64> {
+    epoch_permutation(seed, epoch, table.n_partitions)
+        .into_iter()
+        .flat_map(|idx| {
+            let m = table.partition(idx, epoch);
+            m.start..m.start + m.len
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Assigner;
+
+    #[test]
+    fn pure_permutation_matches_live_assigner_across_epochs() {
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            let table = PartitionTable::new(300, 11);
+            let mut a = Assigner::new(table.clone(), seed);
+            for epoch in 0..4u64 {
+                let mut want = epoch_permutation(seed, epoch, table.n_partitions);
+                want.reverse(); // live queue pops from the back
+                assert_eq!(a.queue, want, "seed {seed} epoch {epoch}");
+                // drain the epoch through one worker and advance
+                while let Some(_m) = a.next_partition(1) {
+                    a.complete(1);
+                }
+                a.advance_epoch();
+            }
+        }
+    }
+
+    #[test]
+    fn shard_stream_at_equals_sequential_draws() {
+        let mut base = shard_stream(9, 2, 5);
+        for _ in 0..37 {
+            base.next_u32();
+        }
+        let mut jumped = shard_stream_at(9, 2, 5, 37);
+        for _ in 0..16 {
+            assert_eq!(base.next_u32(), jumped.next_u32());
+        }
+    }
+
+    #[test]
+    fn shard_streams_are_distinct() {
+        // neighbouring (epoch, shard) cells must not share streams
+        let mut seen = std::collections::BTreeSet::new();
+        for epoch in 0..4u64 {
+            for shard in 0..8u64 {
+                let mut r = shard_stream(1, epoch, shard);
+                let sig = (r.next_u64(), r.next_u64());
+                assert!(seen.insert(sig), "stream collision at epoch {epoch} shard {shard}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_order_is_an_epoch_permutation_of_samples() {
+        let table = PartitionTable::new(103, 7);
+        let order = global_order(3, 0, &table);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..103).collect::<Vec<u64>>());
+        // and differs across epochs (shard order reshuffles)
+        assert_ne!(order, global_order(3, 1, &table));
+    }
+}

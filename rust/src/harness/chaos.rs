@@ -189,6 +189,10 @@ pub struct ChaosReport {
     pub fault_hits: u64,
     /// leader generations (1 + restarts)
     pub generations: u32,
+    /// the committed loss curve (step → loss bits): the
+    /// trajectory-equality mirror — byte-identical for the same seed at
+    /// any worker count and under any scale-event storm
+    pub trajectory: Trajectory,
     /// every leader generation's engine event log, flattened in order —
     /// tests assert protocol-level outcomes here (e.g. a mid-collective
     /// kill produced a `ring-reform` and never a checkpoint restore)
@@ -278,11 +282,14 @@ struct VWorker {
     cohort: Vec<NodeId>,
 }
 
-/// Deterministic per-barrier worker loss: step- AND member-sensitive, so
-/// a mis-counted Sync (wrong step or wrong worker) shifts the weighted
-/// mean the mirror recomputes.
-fn vloss(id: NodeId, step: u64) -> f32 {
-    (step % 97) as f32 * 0.125 + id as f32 * 1e-3
+/// The canonical per-step loss every virtual worker reports (DESIGN.md
+/// §11): a pure function of `(seed, n_logical, step)`, never of the
+/// physical worker id — the bedrock of the trajectory-equality mirror.
+/// Step-sensitivity still catches a mis-counted Sync at the wrong step;
+/// wrong-member Syncs are caught by the barrier-completeness check in
+/// `on_barrier_complete`.
+fn vloss(seed: u64, n_partitions: u64, step: u64) -> f32 {
+    crate::worker::vw::canonical_loss(seed, n_partitions, step)
 }
 
 // ---------------------------------------------------------------------------
@@ -340,7 +347,7 @@ impl Ord for Item {
 // invariant state
 // ---------------------------------------------------------------------------
 
-pub use super::mirrors::Coverage;
+pub use super::mirrors::{Coverage, Trajectory};
 
 /// An armed mid-collective kill waiting for its firing condition.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -403,6 +410,9 @@ pub struct ChaosCluster {
     gracefully_left: BTreeSet<NodeId>,
     sync_seen: HashMap<(u32, NodeId, u64), (f32, f32)>,
     predicted: Vec<(u32, u64, f32)>,
+    /// committed loss curve across ALL generations: redo consistency is
+    /// enforced at record time, cross-run equality in tests
+    trajectory: Trajectory,
     last_loaded_ckpt: Option<Vec<u8>>,
     /// min checkpoint step restored since the last status poll (None =
     /// no restore): the monotonicity exemption window
@@ -452,6 +462,7 @@ impl ChaosCluster {
             gracefully_left: BTreeSet::new(),
             sync_seen: HashMap::new(),
             predicted: Vec::new(),
+            trajectory: Trajectory::default(),
             last_loaded_ckpt: None,
             restored_since_poll: None,
             last_status: None,
@@ -671,6 +682,7 @@ impl ChaosCluster {
                 events_run: self.events_run,
                 fault_hits: self.plan.hits(),
                 generations: self.gen + 1,
+                trajectory: std::mem::take(&mut self.trajectory),
                 engine_events: self
                     .reports
                     .iter()
@@ -1010,10 +1022,9 @@ impl ChaosCluster {
         // the new leader immediately restores the job from the checkpoint
         self.issue_request(Request::Restore { path: CKPT_PATH.into() }, OpKind::Ckpt, vec![], vec![]);
         // monotonicity: the step will fall back to the checkpointed step
-        if let Ok((step, _, _)) = decode_checkpoint(
-            self.vfs.get(CKPT_PATH).cloned().unwrap_or_default().as_slice(),
-            self.sched.seed,
-        ) {
+        if let Ok((step, _, _)) =
+            decode_checkpoint(self.vfs.get(CKPT_PATH).cloned().unwrap_or_default().as_slice())
+        {
             self.restored_since_poll =
                 Some(self.restored_since_poll.map_or(step, |p| p.min(step)));
         }
@@ -1093,7 +1104,7 @@ impl ChaosCluster {
                 // checkpoint-convergence: the blob must describe the
                 // fault-free oracle state for its step (virtual params are
                 // the pure function step ↦ [step])
-                match decode_checkpoint(&bytes, self.sched.seed) {
+                match decode_checkpoint(&bytes) {
                     Ok((step, params, _asg)) => {
                         if params.first().copied() != Some(step as f32) {
                             self.fail(format!(
@@ -1198,7 +1209,7 @@ impl ChaosCluster {
     /// assignment and restore events.
     fn observe_ctrl(&mut self, to: NodeId, msg: &CtrlMsg) {
         match msg {
-            CtrlMsg::Assign { meta } => {
+            CtrlMsg::Assign { meta, .. } => {
                 self.leader_inflight.insert(to, (*meta, 0));
                 if meta.epoch > self.max_epoch_seen {
                     // epochs < meta.epoch just completed: exactly-once check
@@ -1230,6 +1241,7 @@ impl ChaosCluster {
             CtrlMsg::Restore { at_step, .. } => {
                 self.restored_since_poll =
                     Some(self.restored_since_poll.map_or(*at_step, |p| p.min(*at_step)));
+                self.trajectory.on_restore(*at_step);
                 self.rebuild_mirrors_from_ckpt(*at_step);
             }
             _ => {}
@@ -1277,7 +1289,7 @@ impl ChaosCluster {
             self.fail("restore observed but no checkpoint was ever loaded".into());
             return;
         };
-        match decode_checkpoint(&bytes, self.sched.seed) {
+        match decode_checkpoint(&bytes) {
             Ok((step, params, asg)) => {
                 if step != at_step {
                     self.fail(format!(
@@ -1331,7 +1343,11 @@ impl ChaosCluster {
             }
         }
         if complete && wsum > 0.0 {
-            self.predicted.push((self.gen, step, lsum / wsum));
+            let loss = lsum / wsum;
+            self.predicted.push((self.gen, step, loss));
+            if let Err(e) = self.trajectory.record(step, loss) {
+                self.fail(format!("trajectory mirror: {e}"));
+            }
         } else if !complete {
             // a recipient the harness never delivered a Sync for: the
             // leader counted a Sync that never crossed the wire
@@ -1466,7 +1482,7 @@ impl ChaosCluster {
         WorkerEvent::Sync {
             id,
             step: w.step,
-            loss: vloss(id, w.step),
+            loss: vloss(self.sched.seed, self.sched.n_partitions, w.step),
             weight: w.gathered as f32,
             step_ms: w.step_us as f64 / 1e3,
             shard: w.shard.map(|(m, u)| (m.id, u)),
@@ -1728,7 +1744,7 @@ impl ChaosCluster {
                     }
                 }
             }
-            CtrlMsg::Assign { meta } => {
+            CtrlMsg::Assign { meta, .. } => {
                 let adopted = {
                     let w = self.workers.get_mut(&id).unwrap();
                     if w.shard.is_none() {

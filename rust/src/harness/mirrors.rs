@@ -85,6 +85,82 @@ impl Coverage {
     }
 }
 
+/// Trajectory-equality mirror (DESIGN.md §11): the committed loss curve,
+/// step → loss **bits**. Two guarantees hang off it:
+///
+///  * **within-run redo consistency** — when a restore rolls the cluster
+///    back and steps are re-executed (possibly by different physical
+///    workers), the redone barrier must commit the *bit-identical* loss,
+///    or the run was not deterministic ([`Trajectory::record`]);
+///  * **cross-run equality** — the same seed must yield the same curve
+///    at any worker count and under any scale-event storm
+///    ([`Trajectory::diverges_from`]).
+///
+/// Only barriers that actually commit a loss (positive total weight) are
+/// recorded, mirroring `LeaderCore::complete_barrier`.
+#[derive(Debug, Clone, Default)]
+pub struct Trajectory {
+    points: BTreeMap<u64, u32>,
+}
+
+impl Trajectory {
+    /// Record the loss committed at `step`. A second commit for the same
+    /// step (a post-restore redo) must reproduce the exact bits.
+    pub fn record(&mut self, step: u64, loss: f32) -> Result<(), String> {
+        let bits = loss.to_bits();
+        match self.points.insert(step, bits) {
+            Some(prev) if prev != bits => Err(format!(
+                "step {step} redone with different loss: {} vs {}",
+                f32::from_bits(prev),
+                loss
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    /// Roll back to `at_step` (checkpoint restore): steps after it are
+    /// forgotten *except* that we keep them for redo-consistency checking
+    /// via [`Trajectory::record`] — so nothing to erase. Kept as an
+    /// explicit no-op hook so call sites document the restore.
+    pub fn on_restore(&mut self, _at_step: u64) {}
+
+    /// First step where the two curves disagree bit-wise, if any.
+    /// Only steps present in BOTH curves are compared; use
+    /// [`Trajectory::common_steps`] to assert the overlap is non-trivial.
+    pub fn diverges_from(&self, other: &Trajectory) -> Option<(u64, f32, f32)> {
+        for (step, bits) in &self.points {
+            if let Some(ob) = other.points.get(step) {
+                if ob != bits {
+                    return Some((*step, f32::from_bits(*bits), f32::from_bits(*ob)));
+                }
+            }
+        }
+        None
+    }
+
+    /// Number of steps recorded by both curves.
+    pub fn common_steps(&self, other: &Trajectory) -> usize {
+        self.points.keys().filter(|s| other.points.contains_key(s)).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Fold the mirror state into a hasher (model-checker state dedup).
+    pub fn hash_state<H: Hasher>(&self, h: &mut H) {
+        h.write_usize(self.points.len());
+        for (s, b) in &self.points {
+            h.write_u64(*s);
+            h.write_u32(*b);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +212,49 @@ mod tests {
         let mut b = Coverage::new(8);
         b.credit(0, 0, 3).unwrap();
         assert_eq!(digest(&b), d1, "same marks, same digest");
+    }
+
+    #[test]
+    fn trajectory_redo_must_be_bit_identical() {
+        let mut t = Trajectory::default();
+        t.record(1, 0.5).unwrap();
+        t.record(2, 0.25).unwrap();
+        t.on_restore(1);
+        t.record(2, 0.25).unwrap(); // faithful redo: fine
+        assert!(t.record(2, 0.250001).unwrap_err().contains("redone"));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn trajectory_divergence_and_overlap() {
+        let mut a = Trajectory::default();
+        let mut b = Trajectory::default();
+        for s in 0..5u64 {
+            a.record(s, s as f32).unwrap();
+            b.record(s, s as f32).unwrap();
+        }
+        b.record(7, 9.0).unwrap(); // extra step only in b: not a divergence
+        assert_eq!(a.common_steps(&b), 5);
+        assert!(a.diverges_from(&b).is_none());
+        let mut c = b.clone();
+        c.points.insert(3, 11.0f32.to_bits());
+        let (step, x, y) = a.diverges_from(&c).unwrap();
+        assert_eq!(step, 3);
+        assert_eq!((x, y), (3.0, 11.0));
+    }
+
+    #[test]
+    fn trajectory_hash_distinguishes_curves() {
+        use std::collections::hash_map::DefaultHasher;
+        let digest = |t: &Trajectory| {
+            let mut h = DefaultHasher::new();
+            t.hash_state(&mut h);
+            h.finish()
+        };
+        let mut a = Trajectory::default();
+        assert!(a.is_empty());
+        let d0 = digest(&a);
+        a.record(4, 1.5).unwrap();
+        assert_ne!(d0, digest(&a));
     }
 }

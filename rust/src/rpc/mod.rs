@@ -15,6 +15,7 @@
 use crate::coordinator::{CtrlMsg, SwitchPlan, WorkerEvent};
 use crate::data::PartitionMeta;
 use crate::transport::NodeId;
+use crate::util::rng::Pcg;
 use crate::wire::{Dec, Enc, Result, WireError};
 use std::sync::Arc;
 
@@ -92,8 +93,9 @@ pub enum FromLeader {
         broadcast_src: NodeId,
         joiners: Vec<NodeId>,
     },
-    /// reply to NeedPartition
-    Assign { meta: PartitionMeta },
+    /// reply to NeedPartition: the shard plus its virtual worker's
+    /// migrated RNG stream, positioned at the assignment's first sample
+    Assign { meta: PartitionMeta, rng: Pcg },
     /// no partitions left in this epoch
     NoData,
     /// barrier release for the current step, optionally carrying the
@@ -243,7 +245,9 @@ impl FromLeader {
                     joiners: (**joiners).clone(),
                 }
             }
-            CtrlMsg::Assign { meta } => FromLeader::Assign { meta: *meta },
+            CtrlMsg::Assign { meta, rng } => {
+                FromLeader::Assign { meta: *meta, rng: rng.clone() }
+            }
             CtrlMsg::NoData => FromLeader::NoData,
             CtrlMsg::SyncGo { ring, sync_tag, switch } => FromLeader::SyncGo {
                 ring: (**ring).clone(),
@@ -281,7 +285,7 @@ impl FromLeader {
                     joiners: Arc::new(joiners),
                 }
             }
-            FromLeader::Assign { meta } => CtrlMsg::Assign { meta },
+            FromLeader::Assign { meta, rng } => CtrlMsg::Assign { meta, rng },
             FromLeader::NoData => CtrlMsg::NoData,
             FromLeader::SyncGo { ring, sync_tag, switch } => CtrlMsg::SyncGo {
                 ring: Arc::new(ring),
@@ -446,9 +450,10 @@ impl FromLeader {
                 e.u32(*local_batch).u32(*broadcast_src);
                 e.u32s(joiners);
             }
-            FromLeader::Assign { meta } => {
+            FromLeader::Assign { meta, rng } => {
                 e.u8(4);
                 meta.encode(&mut e);
+                e.pcg(rng);
             }
             FromLeader::NoData => {
                 e.u8(5);
@@ -514,7 +519,10 @@ impl FromLeader {
                 broadcast_src: d.u32()?,
                 joiners: d.u32s()?,
             }),
-            4 => Ok(FromLeader::Assign { meta: PartitionMeta::decode(&mut d)? }),
+            4 => Ok(FromLeader::Assign {
+                meta: PartitionMeta::decode(&mut d)?,
+                rng: d.pcg()?,
+            }),
             5 => Ok(FromLeader::NoData),
             6 => Ok(FromLeader::SyncGo {
                 ring: d.u32s()?,
@@ -654,7 +662,10 @@ mod tests {
                     broadcast_src: rng.gen_range(1 << 20) as NodeId,
                     joiners: rand_ids(rng),
                 },
-                FromLeader::Assign { meta: rand_meta(rng) },
+                FromLeader::Assign {
+                    meta: rand_meta(rng),
+                    rng: Pcg::new(rng.next_u64(), rng.next_u64()),
+                },
                 FromLeader::NoData,
                 FromLeader::SyncGo {
                     ring: rand_ids(rng),
@@ -743,6 +754,11 @@ mod tests {
                 }),
             }
             .encode(),
+            FromLeader::Assign {
+                meta: PartitionMeta { id: 3, start: 64, len: 32, epoch: 1 },
+                rng: Pcg::new(5, 9),
+            }
+            .encode(),
             FromLeader::Welcome { worker: 3, joiner: true, shm_ns: "edl-1".into() }.encode(),
             FromLeader::Peers { peers: vec![(1, "127.0.0.1:1".into(), 0xAB)] }.encode(),
             FromLeader::Restore { params: vec![0.5; 4], at_step: 3 }.encode(),
@@ -788,6 +804,7 @@ mod tests {
             },
             CtrlMsg::Assign {
                 meta: PartitionMeta { id: 3, start: 64, len: 32, epoch: 1 },
+                rng: Pcg::new(5, 9),
             },
             CtrlMsg::NoData,
             CtrlMsg::SyncGo {

@@ -5,7 +5,7 @@
 //! exponentials and Pareto power-law sampling.
 
 /// PCG-XSH-RR 64/32 generator. Deterministic, seedable, stream-splittable.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Pcg {
     state: u64,
     inc: u64,
@@ -30,6 +30,44 @@ impl Pcg {
     /// Derive an independent stream (for per-entity RNGs in the simulator).
     pub fn split(&mut self, stream: u64) -> Pcg {
         Pcg::new(self.next_u64(), stream)
+    }
+
+    /// Raw generator state `(state, inc)` for serialisation. The cached
+    /// Box–Muller spare is NOT captured: a restored generator resumes on
+    /// the underlying u32 stream, which is the only stream the elasticity
+    /// protocol serialises (see `wire::Enc::pcg`).
+    pub fn to_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg::to_parts`] output. Continues the
+    /// u32 stream exactly where the serialised generator left off.
+    pub fn from_parts(state: u64, inc: u64) -> Pcg {
+        Pcg { state, inc, spare_normal: None }
+    }
+
+    /// Jump the generator forward by `delta` [`Pcg::next_u32`] draws in
+    /// O(log delta) time (the standard PCG LCG jump-ahead: repeated
+    /// squaring of the multiplier/increment pair). Used to re-derive a
+    /// virtual worker's stream position at an arbitrary step without
+    /// replaying the stream. Drops any cached Box–Muller spare, matching
+    /// what stepping via `next_u32` would do.
+    pub fn advance(&mut self, mut delta: u64) {
+        let mut cur_mult = PCG_MULT;
+        let mut cur_plus = self.inc;
+        let mut acc_mult: u64 = 1;
+        let mut acc_plus: u64 = 0;
+        while delta > 0 {
+            if delta & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            delta >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+        self.spare_normal = None;
     }
 
     pub fn next_u32(&mut self) -> u32 {
@@ -236,6 +274,47 @@ mod tests {
         }
         assert_eq!(counts[1], 0);
         assert!(counts[2] > counts[0] * 5);
+    }
+
+    #[test]
+    fn parts_roundtrip_resumes_stream() {
+        let mut a = Pcg::seeded(11);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (state, inc) = a.to_parts();
+        let mut b = Pcg::from_parts(state, inc);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn advance_matches_sequential_stepping() {
+        for delta in [0u64, 1, 2, 3, 7, 64, 1000, 12345] {
+            let mut jumped = Pcg::seeded(12);
+            jumped.advance(delta);
+            let mut stepped = Pcg::seeded(12);
+            for _ in 0..delta {
+                stepped.next_u32();
+            }
+            assert_eq!(
+                jumped.next_u32(),
+                stepped.next_u32(),
+                "advance({delta}) diverged from {delta} sequential draws"
+            );
+        }
+    }
+
+    #[test]
+    fn advance_composes() {
+        // advance(a); advance(b) == advance(a + b)
+        let mut split_jump = Pcg::new(13, 5);
+        split_jump.advance(1000);
+        split_jump.advance(234);
+        let mut one_jump = Pcg::new(13, 5);
+        one_jump.advance(1234);
+        assert_eq!(split_jump, one_jump);
     }
 
     #[test]

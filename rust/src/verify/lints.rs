@@ -24,6 +24,7 @@ const PURE_MODULES: &[&str] = &[
     "/schedulers/",
     "/data/",
     "/verify/",
+    "/worker/vw.rs",
 ];
 
 /// Banned token runs inside pure modules. Matched contiguously, so both

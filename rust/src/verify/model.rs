@@ -182,10 +182,11 @@ struct MWorker {
     pending_switch: Option<SwitchPlan>,
 }
 
-/// Deterministic per-(worker, step) loss — same oracle as the chaos
-/// harness, so barrier-loss mirrors agree.
-fn vloss(id: NodeId, step: u64) -> f32 {
-    (step % 97) as f32 * 0.125 + id as f32 * 1e-3
+/// Deterministic per-step loss — the same canonical oracle as the chaos
+/// harness (`worker::vw::canonical_loss`), so barrier-loss mirrors agree
+/// and the trajectory is worker-count-independent here too.
+fn vloss(seed: u64, n_partitions: u64, step: u64) -> f32 {
+    crate::worker::vw::canonical_loss(seed, n_partitions, step)
 }
 
 // ---------------------------------------------------------------------------
@@ -415,12 +416,15 @@ fn hash_ctrl_msg<H: Hasher>(msg: &CtrlMsg, h: &mut H) {
             broadcast_src.hash(h);
             joiners.hash(h);
         }
-        CtrlMsg::Assign { meta } => {
+        CtrlMsg::Assign { meta, rng } => {
             h.write_u8(2);
             h.write_u64(meta.id);
             h.write_u64(meta.start);
             h.write_u64(meta.len);
             h.write_u64(meta.epoch);
+            let (state, inc) = rng.to_parts();
+            h.write_u64(state);
+            h.write_u64(inc);
         }
         CtrlMsg::NoData => h.write_u8(3),
         CtrlMsg::SyncGo { ring, sync_tag, switch } => {
@@ -657,7 +661,7 @@ impl Checker {
                 }
             }
             Action::WriteCheckpoint { token, path, bytes } => {
-                match crate::coordinator::decode_checkpoint(&bytes, self.cfg.seed) {
+                match crate::coordinator::decode_checkpoint(&bytes) {
                     Ok((step, params, _asg)) => {
                         if params.first() != Some(&(step as f32)) {
                             return viol(format!(
@@ -684,7 +688,7 @@ impl Checker {
 
     fn observe_ctrl(&self, st: &mut MState, to: NodeId, msg: &CtrlMsg) -> MResult<()> {
         match msg {
-            CtrlMsg::Assign { meta } => {
+            CtrlMsg::Assign { meta, .. } => {
                 for e in st.max_epoch_seen..meta.epoch {
                     if let Err(e) = st.coverage.check_complete(e) {
                         return viol(e);
@@ -817,7 +821,7 @@ impl Checker {
         WorkerEvent::Sync {
             id,
             step: w.step,
-            loss: vloss(id, w.step),
+            loss: vloss(self.cfg.seed, self.cfg.n_partitions, w.step),
             weight: w.gathered as f32,
             step_ms: 1.0,
             shard: w.shard.map(|(m, used)| (m.id, used)),
@@ -930,7 +934,7 @@ impl Checker {
                     w.st = MSt::WaitBroadcast;
                 }
             }
-            CtrlMsg::Assign { meta } => {
+            CtrlMsg::Assign { meta, .. } => {
                 let Some(w) = st.workers.get_mut(&id) else { return Ok(()) };
                 if w.shard.is_none() {
                     w.shard = Some((meta, 0));

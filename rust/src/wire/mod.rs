@@ -153,6 +153,15 @@ impl Enc {
         }
         self
     }
+
+    /// PCG generator state: 16 bytes, LCG state then stream increment.
+    /// Carries virtual-worker / assigner RNG streams across migration and
+    /// checkpoint restore (DESIGN.md §11) — the decoded generator resumes
+    /// the u32 stream exactly where the encoded one stopped.
+    pub fn pcg(&mut self, rng: &crate::util::rng::Pcg) -> &mut Self {
+        let (state, inc) = rng.to_parts();
+        self.u64(state).u64(inc)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -237,6 +246,13 @@ impl<'a> Dec<'a> {
     pub fn strs(&mut self) -> Result<Vec<String>> {
         let n = self.u32()? as usize;
         (0..n).map(|_| self.str()).collect()
+    }
+
+    /// Counterpart of [`Enc::pcg`].
+    pub fn pcg(&mut self) -> Result<crate::util::rng::Pcg> {
+        let state = self.u64()?;
+        let inc = self.u64()?;
+        Ok(crate::util::rng::Pcg::from_parts(state, inc))
     }
 }
 
@@ -453,6 +469,30 @@ mod tests {
             let got = Dec::new(&b).f32s().map_err(|e| e.to_string())?;
             if got != v {
                 return Err(format!("mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pcg_roundtrip_resumes_stream_property() {
+        prop::check("pcg-roundtrip", 50, |rng: &mut Pcg| {
+            let mut src = Pcg::new(rng.next_u64(), rng.next_u64() & 0x7FFF_FFFF);
+            for _ in 0..rng.gen_range(64) {
+                src.next_u32();
+            }
+            let mut e = Enc::new();
+            e.pcg(&src);
+            let b = e.into_bytes();
+            if b.len() != 16 {
+                return Err(format!("pcg encoding must be 16 bytes, got {}", b.len()));
+            }
+            let mut got = Dec::new(&b).pcg().map_err(|e| e.to_string())?;
+            for i in 0..32 {
+                let (want, have) = (src.next_u32(), got.next_u32());
+                if want != have {
+                    return Err(format!("stream diverged at draw {i}: {want} != {have}"));
+                }
             }
             Ok(())
         });

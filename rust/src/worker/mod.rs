@@ -21,6 +21,8 @@
 //! the worker re-sends its SyncRequest and retries with the topology the
 //! leader hands back (approximate recovery, §4.2).
 
+pub mod vw;
+
 use crate::allreduce;
 use crate::coordinator::{CtrlMsg, SwitchPlan, WorkerEvent};
 use crate::data::corpus::Corpus;
@@ -183,6 +185,9 @@ struct SimDevice {
 
 impl Device for SimDevice {
     fn init(&mut self, seed: i32) -> Result<()> {
+        // reseed-on-restore audit (DESIGN.md §11.5): safe — `init` runs
+        // once at process start; Restore goes through `set_params` and
+        // never re-derives params from this generator
         let mut rng = Pcg::seeded(seed as u64);
         self.params = (0..self.cfg.n_params).map(|_| rng.normal() as f32 * 0.1).collect();
         Ok(())
@@ -405,6 +410,10 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
     }
 
     let mut shard: Option<ShardCursor> = None;
+    // the virtual workers this physical worker currently emulates
+    // (EasyScaleThread-style; DESIGN.md §11): one per held shard, each
+    // with the migrated per-shard RNG stream the leader sent in Assign
+    let mut vws = vw::VwSet::default();
     let mut pending_switch: Option<SwitchPlan> = None;
     let seq = ctx.backend.seq_len();
 
@@ -421,21 +430,30 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
             match &mut shard {
                 Some(cur) if cur.used < cur.meta.len => {
                     indices.push(cur.meta.start + cur.used);
+                    // exactly one virtual-worker stream draw per consumed
+                    // sample — the contract that keeps the migrated stream
+                    // position equal to the sample offset (DESIGN.md §11)
+                    let _ = vws.draw(cur.meta.id);
                     cur.used += 1;
                 }
                 _ => {
-                    if shard.take().is_some() {
+                    if let Some(done) = shard.take() {
+                        vws.release(done.meta.id);
                         send(WorkerEvent::ShardDone { id: ctx.id });
                     }
                     send(WorkerEvent::NeedPartition { id: ctx.id });
                     match ctx.ctrl.recv()? {
-                        CtrlMsg::Assign { meta } => shard = Some(ShardCursor { meta, used: 0 }),
+                        CtrlMsg::Assign { meta, rng } => {
+                            vws.adopt(&meta, rng);
+                            shard = Some(ShardCursor { meta, used: 0 });
+                        }
                         CtrlMsg::NoData => break, // zero/partial batch this step
                         CtrlMsg::Stop => break 'train,
                         CtrlMsg::Restore { params: p, at_step } => {
                             device.set_params((*p).clone())?;
                             step = at_step;
                             shard = None;
+                            vws.clear();
                             pending_switch = None;
                             drain_stale_ctrl(&ctx.ctrl);
                             continue 'train;
@@ -503,13 +521,15 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
                         device.set_params((*p).clone())?;
                         step = at_step;
                         shard = None;
+                        vws.clear();
                         pending_switch = None;
                         drain_stale_ctrl(&ctx.ctrl);
                         continue 'train;
                     }
                     // an Assign that raced a restore/resync: adopt it if we
                     // have no shard (it answers our own NeedPartition)
-                    CtrlMsg::Assign { meta } if shard.is_none() => {
+                    CtrlMsg::Assign { meta, rng } if shard.is_none() => {
+                        vws.adopt(&meta, rng);
                         shard = Some(ShardCursor { meta, used: 0 });
                     }
                     CtrlMsg::SendParams => {
@@ -621,11 +641,13 @@ fn worker_loop_inner<N: PointToPoint>(ctx: &mut WorkerCtx<N>) -> Result<()> {
                                     device.set_params((*p).clone())?;
                                     step = at_step;
                                     shard = None;
+                                    vws.clear();
                                     pending_switch = None;
                                     drain_stale_ctrl(&ctx.ctrl);
                                     continue 'train;
                                 }
-                                CtrlMsg::Assign { meta } if shard.is_none() => {
+                                CtrlMsg::Assign { meta, rng } if shard.is_none() => {
+                                    vws.adopt(&meta, rng);
                                     shard = Some(ShardCursor { meta, used: 0 });
                                 }
                                 CtrlMsg::SendParams => {

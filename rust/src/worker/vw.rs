@@ -1,0 +1,237 @@
+//! `EasyScaleThread`-style virtual workers (DESIGN.md §11).
+//!
+//! P physical workers always emulate the same N logical workers. A
+//! logical (virtual) worker is a logical-shard consumer: its identity is
+//! the shard id, its mutable state is a PCG stream consuming exactly one
+//! draw per sample (augmentation/dropout-class randomness). The stream
+//! rides `CtrlMsg::Assign` (serialised via `wire::Enc::pcg`), so it
+//! migrates with the shard through Grow/Shrink/Migrate and survives
+//! checkpoint restore: whoever physically executes the shard next
+//! continues the same stream at the same position. Because consumption
+//! is one draw per sample, the position always equals the assignment's
+//! sample offset and the leader can re-derive it by jump-ahead
+//! (`data::schedule::shard_stream_at`) — physical state and pure
+//! derivation can never disagree.
+//!
+//! The module also defines the **canonical loss** used by the chaos
+//! harness and the model checker as the virtual workers' training
+//! oracle. It is built so that trajectory equality is *bit-exact* at any
+//! worker count:
+//!
+//!  * every quantity is an integer count of `LOSS_UNIT` = 2⁻⁹, and
+//!    |units| < 2¹³, so the f32 value is exact;
+//!  * barrier arithmetic multiplies it by integer batch weights ≤ 2⁶
+//!    (≤ 19 significant bits, exact) and sums ≤ 2⁵ members (≤ 24 bits,
+//!    exact, associativity-independent);
+//!  * every member of a step reports the SAME canonical value, and a
+//!    correctly-rounded division of `x·Σw` by `Σw` returns `x` exactly —
+//!    so the leader's weighted mean is bit-identical no matter which
+//!    physical workers carried the step or in which order they were
+//!    folded.
+
+use crate::data::PartitionMeta;
+use crate::util::rng::Pcg;
+use std::collections::BTreeMap;
+
+/// One virtual worker: a logical shard's consumer state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualWorker {
+    /// logical shard id (= logical worker id)
+    pub shard: u64,
+    /// migrated stream; exactly one draw per consumed sample
+    pub rng: Pcg,
+}
+
+impl VirtualWorker {
+    /// Consume the per-sample draw. The value feeds sample-local
+    /// randomness (augmentation, dropout masks); the SimDevice has no
+    /// stochastic ops, so today only the stream *position* is observable
+    /// — which is exactly what the determinism tests pin down.
+    pub fn sample_draw(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+}
+
+/// The set of virtual workers a physical worker currently embodies.
+/// Ordered by shard id so iteration (and any future serialisation) is
+/// deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct VwSet {
+    active: BTreeMap<u64, VirtualWorker>,
+}
+
+impl VwSet {
+    /// Begin emulating the shard's virtual worker with the migrated
+    /// stream the leader sent alongside the assignment.
+    pub fn adopt(&mut self, meta: &PartitionMeta, rng: Pcg) {
+        self.active.insert(meta.id, VirtualWorker { shard: meta.id, rng });
+    }
+
+    /// Per-sample draw for `shard`; `None` if this physical worker is not
+    /// currently emulating that virtual worker.
+    pub fn draw(&mut self, shard: u64) -> Option<u32> {
+        self.active.get_mut(&shard).map(VirtualWorker::sample_draw)
+    }
+
+    /// Stop emulating `shard` (assignment finished or abandoned). The
+    /// stream is not lost: the leader re-derives it from the shard's
+    /// consumed-sample offset when the remainder is reassigned.
+    pub fn release(&mut self, shard: u64) -> Option<VirtualWorker> {
+        self.active.remove(&shard)
+    }
+
+    /// Drop every emulated virtual worker (restore: the worker no longer
+    /// holds its shards; fresh Assigns re-seed the set).
+    pub fn clear(&mut self) {
+        self.active.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+}
+
+/// Exact representable quantum of the canonical loss: 2⁻⁹.
+pub const LOSS_UNIT: f32 = 1.0 / 512.0;
+
+/// Stream-id salt for per-virtual-worker loss-noise streams (disjoint
+/// from the shard data streams in `data::schedule`).
+const LOSS_STREAM_SALT: u64 = 0x1055_CA2B_0DE7_E2A1;
+
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Virtual worker `vw`'s loss-noise stream: exactly one draw per step,
+/// so the position at step `s` is `s` and [`noise_units`] re-derives it
+/// by jump-ahead.
+pub fn loss_stream(seed: u64, vw: u64) -> Pcg {
+    Pcg::new(mix(seed), mix(LOSS_STREAM_SALT ^ vw))
+}
+
+/// `vw`'s loss noise at `step`, in integer units of [`LOSS_UNIT`]:
+/// uniform in [-256, 255].
+pub fn noise_units(seed: u64, vw: u64, step: u64) -> i64 {
+    let mut r = loss_stream(seed, vw);
+    r.advance(step);
+    (r.next_u32() >> 23) as i64 - 256
+}
+
+/// Deterministic base curve in units of [`LOSS_UNIT`]: 0.125·(step mod
+/// 97), i.e. 64 units per step with a period keeping magnitudes small.
+fn base_units(step: u64) -> i64 {
+    ((step % 97) * 64) as i64
+}
+
+/// The canonical loss of `step`: base curve plus the mean of the N
+/// logical workers' noise, computed entirely in integer units so the
+/// result is an exact multiple of [`LOSS_UNIT`] with |units| < 2¹³.
+/// Independent of P by construction — it never mentions physical
+/// workers.
+pub fn canonical_loss(seed: u64, n_logical: u64, step: u64) -> f32 {
+    assert!(n_logical > 0, "canonical loss needs at least one virtual worker");
+    let sum: i64 = (0..n_logical).map(|vw| noise_units(seed, vw, step)).sum();
+    (base_units(step) + sum / n_logical as i64) as f32 * LOSS_UNIT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schedule;
+    use crate::util::prop;
+
+    #[test]
+    fn migrated_stream_equals_rederived_stream() {
+        // worker A consumes k samples of a shard, dies; the leader hands
+        // the remainder to worker B with a jump-ahead re-derived stream —
+        // B must continue A's stream exactly
+        let (seed, epoch, shard) = (77u64, 1u64, 4u64);
+        let meta = PartitionMeta { id: shard, start: 40, len: 10, epoch };
+        let mut a = VwSet::default();
+        a.adopt(&meta, schedule::shard_stream(seed, epoch, shard));
+        let mut consumed_stream = Vec::new();
+        for _ in 0..6 {
+            consumed_stream.push(a.draw(shard).unwrap());
+        }
+        a.release(shard);
+        let mut b = VwSet::default();
+        let remainder = PartitionMeta { id: shard, start: 46, len: 4, epoch };
+        b.adopt(&remainder, schedule::shard_stream_at(seed, epoch, shard, 6));
+        let mut direct = schedule::shard_stream(seed, epoch, shard);
+        for x in consumed_stream {
+            assert_eq!(x, direct.next_u32());
+        }
+        for _ in 0..4 {
+            assert_eq!(b.draw(shard).unwrap(), direct.next_u32());
+        }
+        assert!(b.draw(99).is_none(), "drawing for a shard not held must fail");
+    }
+
+    #[test]
+    fn noise_units_bounded_and_stream_positioned() {
+        for step in [0u64, 1, 50, 1000] {
+            let n = noise_units(5, 3, step);
+            assert!((-256..=255).contains(&n), "noise {n} out of range");
+        }
+        // jump-ahead position matches sequential draws
+        let mut seq = loss_stream(5, 3);
+        for step in 0..20u64 {
+            let want = (seq.next_u32() >> 23) as i64 - 256;
+            assert_eq!(noise_units(5, 3, step), want, "step {step}");
+        }
+    }
+
+    #[test]
+    fn canonical_loss_is_exact_under_any_barrier_arithmetic() {
+        // THE property the trajectory-equality invariant rests on: fold
+        // the same canonical value through a weighted mean with random
+        // integer weights, membership sizes, and fold order — the result
+        // must be BIT-identical to the value itself.
+        prop::check("canonical-loss-exact", 100, |rng| {
+            let seed = rng.next_u64();
+            let n_logical = 1 + rng.gen_range(16);
+            let step = rng.gen_range(10_000);
+            let x = canonical_loss(seed, n_logical, step);
+            let members = 1 + rng.gen_range(8) as usize;
+            let mut lsum = 0.0f32;
+            let mut wsum = 0.0f32;
+            for _ in 0..members {
+                let w = (1 + rng.gen_range(32)) as f32;
+                lsum += x * w;
+                wsum += w;
+            }
+            let mean = lsum / wsum;
+            if mean.to_bits() != x.to_bits() {
+                return Err(format!(
+                    "weighted mean {mean} != canonical {x} (n={n_logical}, members={members})"
+                ));
+            }
+            // unweighted fallback (wsum == 0 barriers) must be exact too
+            let k = members as f32;
+            let unweighted = (x * k) / k;
+            if unweighted.to_bits() != x.to_bits() {
+                return Err(format!("unweighted mean {unweighted} != canonical {x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn canonical_loss_never_mentions_physical_workers() {
+        // same (seed, n_logical, step) → same bits, full stop; and the
+        // value reacts to each of its actual inputs
+        assert_eq!(
+            canonical_loss(1, 8, 5).to_bits(),
+            canonical_loss(1, 8, 5).to_bits()
+        );
+        assert_ne!(canonical_loss(1, 8, 5), canonical_loss(2, 8, 5));
+        assert_ne!(canonical_loss(1, 8, 5), canonical_loss(1, 8, 6));
+    }
+}

@@ -1,0 +1,99 @@
+//! Bit-deterministic elasticity, end to end (DESIGN.md §11).
+//!
+//! The EasyScale claim: with the fixed logical-shard schedule and
+//! migrated virtual-worker RNG streams, the committed loss curve is a
+//! pure function of the seed — independent of the physical worker count
+//! and of WHEN the cluster grew, shrank or migrated. These tests compare
+//! the trajectory-equality mirror ([`Trajectory`]) across runs:
+//!
+//!  * a quiet P=1 baseline vs the full PR-5 chaos storm of the same
+//!    seed ⇒ byte-identical losses on every step both runs committed;
+//!  * different calm worker counts ⇒ byte-identical curves;
+//!  * the same storm replayed ⇒ byte-identical curves (and logs).
+//!
+//! Within-run redo consistency (a post-restore re-execution must commit
+//! the exact bits of the first execution) is enforced by the mirror
+//! inside every chaos run, including all of `tests/chaos.rs`.
+
+use edl::harness::chaos::{run_schedule, ChaosReport, ChaosSchedule};
+
+/// Three fixed storm seeds, also pinned by the `determinism-smoke` CI
+/// job. Nothing special about them beyond being stable.
+const SEEDS: [u64; 3] = [1, 2, 3];
+
+/// Minimum steps the two curves must share for the comparison to mean
+/// anything (quiesce alone guarantees ≥ 8 barriers per run).
+const MIN_OVERLAP: usize = 5;
+
+fn run(sched: &ChaosSchedule, what: &str) -> ChaosReport {
+    run_schedule(sched)
+        .unwrap_or_else(|f| panic!("{what} (seed {:#x}) failed:\n{f}", sched.seed))
+}
+
+fn assert_trajectories_equal(a: &ChaosReport, b: &ChaosReport, seed: u64, what: &str) {
+    if let Some((step, x, y)) = a.trajectory.diverges_from(&b.trajectory) {
+        panic!(
+            "seed {seed:#x}: {what} diverged at step {step}: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+    let common = a.trajectory.common_steps(&b.trajectory);
+    assert!(
+        common >= MIN_OVERLAP,
+        "seed {seed:#x}: {what} shared only {common} steps — comparison is vacuous"
+    );
+}
+
+#[test]
+fn p1_baseline_equals_chaos_storm_loss_curve() {
+    for seed in SEEDS {
+        let storm = ChaosSchedule::generate(seed, usize::MAX);
+        // same data/seed knobs, one founder, no scale events: the
+        // reference execution every elastic run must reproduce
+        let base = ChaosSchedule { founders: 1, events: vec![], ..storm.clone() };
+        let storm_report = run(&storm, "chaos storm");
+        let base_report = run(&base, "P=1 baseline");
+        assert!(
+            !base_report.trajectory.is_empty() && !storm_report.trajectory.is_empty(),
+            "seed {seed:#x}: a run committed no losses"
+        );
+        assert_trajectories_equal(&base_report, &storm_report, seed, "P=1 vs storm");
+    }
+}
+
+#[test]
+fn calm_worker_counts_share_one_loss_curve() {
+    // no chaos at all — only the founding worker count differs
+    for seed in SEEDS {
+        let proto = ChaosSchedule::generate(seed, 0);
+        let runs: Vec<ChaosReport> = [1usize, 2, 3, 4]
+            .iter()
+            .map(|&p| {
+                run(
+                    &ChaosSchedule { founders: p, events: vec![], ..proto.clone() },
+                    "calm run",
+                )
+            })
+            .collect();
+        for pair in runs.windows(2) {
+            assert_trajectories_equal(&pair[0], &pair[1], seed, "calm P vs P+1");
+        }
+    }
+}
+
+#[test]
+fn storm_replay_is_bit_identical() {
+    // the storm itself is deterministic: same schedule ⇒ same trajectory
+    // AND the same event log, byte for byte
+    let storm = ChaosSchedule::generate(SEEDS[0], usize::MAX);
+    let a = run(&storm, "storm replay a");
+    let b = run(&storm, "storm replay b");
+    assert_trajectories_equal(&a, &b, SEEDS[0], "replay");
+    assert_eq!(
+        a.trajectory.len(),
+        b.trajectory.len(),
+        "replays committed different step sets"
+    );
+    assert_eq!(a.log, b.log, "replayed event logs differ");
+}
